@@ -1,0 +1,176 @@
+//! Ablations — reproduces Table 10, Figure 4, and the Table 5/9 method
+//! comparison on the training substrate.
+//!
+//!  Table 10: masked decay x MVUE x dense fine-tuning, all 5 paper rows.
+//!  Fig. 4: dense FINE-TUNING (tail) vs dense PRE-TRAINING (head) at the
+//!    same dense-step budget — the §4.4 claim that the tail placement wins.
+//!  Table 5/9 analogue: dense / half / STEP / SR-STE / STE / ours, ranked
+//!    by val loss.
+//!
+//! Run: cargo run --release --example ablation -- [--quick] [--steps N]
+//! Outputs: results/table10_ablation.csv, results/fig4_schedule.csv,
+//!          results/table5_methods.csv
+
+use std::path::Path;
+
+use anyhow::Result;
+use sparse24::config::{DecayPlacementCfg, Method, TrainConfig};
+use sparse24::coordinator::Trainer;
+use sparse24::util::write_csv;
+
+struct Run {
+    name: String,
+    train: f64,
+    val: f64,
+}
+
+fn base(model: &str, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = model.into();
+    cfg.steps = steps;
+    cfg.lr = 2e-3;
+    cfg.warmup = steps / 15 + 1;
+    cfg.lambda_w = 6e-5;
+    cfg.mask_update_interval = 10;
+    cfg.flip_interval = 2;
+    if let Ok(dir) = std::env::var("SPARSE24_ARTIFACTS") {
+        cfg.artifacts_dir = dir;
+    }
+    cfg
+}
+
+fn run(cfg: TrainConfig, name: &str) -> Result<(Run, Trainer)> {
+    let mut tr = Trainer::new(cfg)?;
+    tr.train()?;
+    let val = tr.eval()?;
+    let train = tr.metrics.tail_loss(0.1);
+    println!("  {name:<26} train {train:.4} | val {val:.4}");
+    Ok((Run { name: name.into(), train, val }, tr))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let model = if quick { "test_tiny" } else { "nano" };
+    let steps = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 18 } else { 150 });
+
+    // ---- Table 10: masked decay x MVUE x dense FT -----------------------
+    println!("== Table 10: ablation on {model}, {steps} steps ==");
+    let rows_spec: Vec<(&str, bool, bool, bool)> = vec![
+        // (label, masked_decay, mvue, dense_ft)
+        ("none (plain STE)", false, false, false),
+        ("decay", true, false, false),
+        ("decay+mvue", true, true, false),
+        ("decay+ft", true, false, true),
+        ("decay+mvue+ft (ours)", true, true, true),
+    ];
+    let mut table10: Vec<Vec<f64>> = Vec::new();
+    for (i, (label, decay, mvue, ft)) in rows_spec.iter().enumerate() {
+        let mut cfg = base(model, steps);
+        cfg.method = if *decay { Method::Ours } else { Method::Ste };
+        cfg.decay_placement = if *decay {
+            DecayPlacementCfg::Gradients
+        } else {
+            DecayPlacementCfg::None
+        };
+        cfg.mvue = *mvue;
+        cfg.dense_ft_fraction = if *ft { 1.0 / 6.0 } else { 0.0 };
+        let (r, _) = run(cfg, label)?;
+        table10.push(vec![i as f64, r.train, r.val]);
+    }
+    write_csv(Path::new("results/table10_ablation.csv"),
+              &["row", "train_loss", "val_loss"], &table10)?;
+
+    // ---- Fig. 4: dense tail vs dense head at equal budget ---------------
+    println!("\n== Fig. 4: dense fine-tuning vs dense pre-training ==");
+    let mut fig4: Vec<Vec<f64>> = Vec::new();
+    for (i, (label, head, tail)) in [
+        ("sparse only", 0.0, 0.0),
+        ("dense pre-train 1/6", 1.0 / 6.0, 0.0),
+        ("dense fine-tune 1/6", 0.0, 1.0 / 6.0),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let mut cfg = base(model, steps);
+        cfg.method = Method::Ours;
+        cfg.dense_pre_fraction = *head;
+        cfg.dense_ft_fraction = *tail;
+        let (r, tr) = run(cfg, label)?;
+        for m in &tr.metrics.rows {
+            fig4.push(vec![i as f64, m.step as f64, m.loss]);
+        }
+        let _ = r;
+    }
+    write_csv(Path::new("results/fig4_schedule.csv"),
+              &["series", "step", "loss"], &fig4)?;
+
+    // ---- Table 5/9 analogue: method comparison ---------------------------
+    println!("\n== Table 5/9 analogue: method ranking by val loss ==");
+    let mut methods: Vec<Vec<f64>> = Vec::new();
+    let specs: Vec<(&str, TrainConfig)> = vec![
+        ("dense", {
+            let mut c = base(model, steps);
+            c.method = Method::Dense;
+            c
+        }),
+        ("half", {
+            let mut c = base(model, steps);
+            c.method = Method::Half;
+            c
+        }),
+        ("ste", {
+            let mut c = base(model, steps);
+            c.method = Method::Ste;
+            c.decay_placement = DecayPlacementCfg::None;
+            c.dense_ft_fraction = 0.0;
+            c
+        }),
+        ("sr-ste (decay on w)", {
+            let mut c = base(model, steps);
+            c.method = Method::SrSte;
+            c.decay_placement = DecayPlacementCfg::Weights;
+            c.dense_ft_fraction = 0.0;
+            c
+        }),
+        ("step (dense head)", {
+            let mut c = base(model, steps);
+            c.method = Method::Step;
+            c.dense_pre_fraction = 0.3;
+            c.dense_ft_fraction = 0.0;
+            c.decay_placement = DecayPlacementCfg::Weights;
+            c
+        }),
+        ("ours", {
+            let mut c = base(model, steps);
+            c.method = Method::Ours;
+            c.dense_ft_fraction = 1.0 / 6.0;
+            c
+        }),
+    ];
+    let mut results: Vec<Run> = Vec::new();
+    for (i, (label, cfg)) in specs.into_iter().enumerate() {
+        let (r, _) = run(cfg, label)?;
+        methods.push(vec![i as f64, r.train, r.val]);
+        results.push(r);
+    }
+    write_csv(Path::new("results/table5_methods.csv"),
+              &["method_idx", "train_loss", "val_loss"], &methods)?;
+
+    let ours = results.iter().find(|r| r.name == "ours").unwrap().val;
+    let dense = results.iter().find(|r| r.name == "dense").unwrap().val;
+    let ste = results.iter().find(|r| r.name == "ste").unwrap().val;
+    println!(
+        "\nordering check: ours {ours:.4} vs dense {dense:.4} (gap {:+.4}), \
+         ours beats plain STE by {:+.4}",
+        ours - dense,
+        ste - ours
+    );
+    println!("-> results/table10_ablation.csv, fig4_schedule.csv, table5_methods.csv");
+    Ok(())
+}

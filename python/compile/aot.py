@@ -1,0 +1,215 @@
+"""AOT export: lower the L2 step functions to HLO text + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the runtime's XLA
+(xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly.
+
+Run once at build time (``make artifacts``); the Rust binary is then
+self-contained. Usage:
+
+    python -m compile.aot --config nano --batch 8 --out-dir ../artifacts
+
+Artifacts per config:
+    <cfg>_step_sparse.hlo.txt   FST step: masked fwd, MVUE bwd (Eq. 2-4)
+    <cfg>_step_ste.hlo.txt      ablation: FST without MVUE (plain STE bwd)
+    <cfg>_step_dense.hlo.txt    dense step (also used for dense fine-tune)
+    <cfg>_eval.hlo.txt          loss-only eval (masks applied in fwd)
+    <cfg>_manifest.json         parameter/mask/IO contract for the Rust side
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+
+VARIANTS = ("sparse", "ste", "dense")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract_inputs(cfg: ModelConfig, batch: int):
+    f32, i32 = jnp.float32, jnp.int32
+    params = [jax.ShapeDtypeStruct(s["shape"], f32) for s in model.param_specs(cfg)]
+    masks = [jax.ShapeDtypeStruct(s["shape"], f32) for s in model.mask_specs(cfg)]
+    tokens = jax.ShapeDtypeStruct((batch, cfg.n_ctx), i32)
+    targets = jax.ShapeDtypeStruct((batch, cfg.n_ctx), i32)
+    seed = jax.ShapeDtypeStruct((), i32)
+    return params, masks, tokens, targets, seed
+
+
+def export_config(cfg: ModelConfig, batch: int, out_dir: str,
+                  variants=VARIANTS, verbose: bool = True) -> dict:
+    """Lower all step variants + eval for one config; return manifest dict."""
+    params, masks, tokens, targets, seed = _abstract_inputs(cfg, batch)
+    files = {}
+    for variant in variants:
+        fn = model.make_step_fn(cfg, variant)
+        lowered = jax.jit(fn, keep_unused=True).lower(params, masks, tokens, targets, seed)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}_step_{variant}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[f"step_{variant}"] = fname
+        if verbose:
+            print(f"  wrote {fname} ({len(text) // 1024} KiB)")
+
+    ev = model.make_eval_fn(cfg)
+    lowered = jax.jit(ev, keep_unused=True).lower(params, masks, tokens, targets)
+    fname = f"{cfg.name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    files["eval"] = fname
+    if verbose:
+        print(f"  wrote {fname}")
+
+    pspecs = model.param_specs(cfg)
+    manifest = {
+        "config": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "n_ctx": cfg.n_ctx,
+            "activation": cfg.activation,
+            "param_count": cfg.param_count(),
+        },
+        "batch": batch,
+        # flattened positional input order of every step artifact:
+        # params..., masks..., tokens, targets, seed (eval omits seed)
+        "params": [
+            {
+                "name": s["name"],
+                "shape": list(s["shape"]),
+                "init": s["init"],
+                "sparse": bool(s.get("sparse", False)),
+            }
+            for s in pspecs
+        ],
+        "masks": [
+            {"name": s["name"], "shape": list(s["shape"])}
+            for s in model.mask_specs(cfg)
+        ],
+        "artifacts": files,
+        # step outputs: tuple (loss, grad per param in param order)
+        "outputs": {"loss_index": 0, "n_grads": len(pspecs)},
+    }
+    mpath = os.path.join(out_dir, f"{cfg.name}_manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"  wrote {os.path.basename(mpath)}")
+    return manifest
+
+
+def export_fixture(cfg: ModelConfig, batch: int, out_dir: str,
+                   seed: int = 42) -> None:
+    """Golden-value fixture for the Rust runtime integration test.
+
+    Deterministic params/masks/batch + the loss and per-grad summaries
+    computed by executing the same step functions under jax. The Rust side
+    loads the corresponding HLO artifact, feeds the identical inputs, and
+    must agree within float tolerance — proving the python-exec and
+    rust-exec paths run the same program.
+    """
+    import numpy as np
+
+    from .kernels import ref
+
+    rng = np.random.default_rng(seed)
+    params = []
+    for s in model.param_specs(cfg):
+        if s["init"] == "zeros":
+            a = np.zeros(s["shape"], np.float32)
+        elif s["init"] == "ones":
+            a = np.ones(s["shape"], np.float32)
+        else:
+            std = float(s["init"].split(":")[1])
+            a = rng.normal(0.0, std, s["shape"]).astype(np.float32)
+        params.append(jnp.asarray(a))
+    masks = [
+        ref.transposable_mask(params[i])
+        for i, s in enumerate(model.param_specs(cfg))
+        if s.get("sparse")
+    ]
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (batch, cfg.n_ctx)),
+                         jnp.int32)
+    targets = jnp.asarray(rng.integers(0, cfg.vocab, (batch, cfg.n_ctx)),
+                          jnp.int32)
+    step_seed = jnp.asarray(7, jnp.int32)
+
+    fixture = {
+        "config": cfg.name,
+        "batch": batch,
+        "step_seed": 7,
+        "params": [np.asarray(p).reshape(-1).tolist() for p in params],
+        "masks": [np.asarray(m).reshape(-1).tolist() for m in masks],
+        "tokens": np.asarray(tokens).reshape(-1).tolist(),
+        "targets": np.asarray(targets).reshape(-1).tolist(),
+        "expected": {},
+    }
+    for variant in VARIANTS:
+        out = jax.jit(model.make_step_fn(cfg, variant))(
+            params, masks, tokens, targets, step_seed
+        )
+        loss = float(out[0])
+        grads = out[1:]
+        fixture["expected"][f"step_{variant}"] = {
+            "loss": loss,
+            "grad_abs_mean": [float(jnp.abs(g).mean()) for g in grads],
+            "grad_sum": [float(g.sum()) for g in grads],
+        }
+    ev = jax.jit(model.make_eval_fn(cfg))(params, masks, tokens, targets)
+    fixture["expected"]["eval"] = {"loss": float(ev[0])}
+    path = os.path.join(out_dir, f"{cfg.name}_fixture.json")
+    with open(path, "w") as f:
+        json.dump(fixture, f)
+    print(f"  wrote {os.path.basename(path)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", action="append", default=None,
+                    help="config name(s); default: test_tiny nano e2e e2e_half")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="microbatch size (default: per-config)")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fixture", action="store_true",
+                    help="also write golden-value fixtures (test configs)")
+    args = ap.parse_args()
+
+    names = args.config or ["test_tiny", "test_tiny_half", "nano",
+                            "nano_half", "e2e", "e2e_half"]
+    default_batch = {"test_tiny": 2, "test_tiny_half": 2, "nano": 4,
+                     "nano_half": 4, "e2e": 4, "e2e_half": 4,
+                     "small": 4, "small_half": 4}
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in names:
+        cfg = CONFIGS[name]
+        batch = args.batch or default_batch.get(name, 4)
+        print(f"exporting {name} (batch={batch}, "
+              f"{cfg.param_count() / 1e6:.2f}M params)")
+        export_config(cfg, batch, args.out_dir)
+        if args.fixture and name in ("test_tiny", "nano"):
+            export_fixture(cfg, batch, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Model-size presets for the AOT compile path.
+
+Shapes mirror the paper's study objects scaled to this testbed (1-core CPU
+PJRT): ``test_tiny``/``nano`` are the pytest / cargo-test configs, ``e2e``
+is the end-to-end pre-training driver config, and the ``gpt2_*`` entries
+reproduce the paper's FFN shapes for the speedup benches (the Rust CPU
+substrate sweeps those exact shapes; they are not exported as full models).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """GPT-style decoder-only transformer with gated (GEGLU) FFNs.
+
+    ``d_ff`` is the FFN inner width r: the fused up-projection W1 is
+    (2r x d) (U and V concatenated, paper §5.2 step 1) and the
+    down-projection W2 is (d x r). FFN weights are the 2:4-sparse ones.
+    """
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int          # inner width r
+    n_ctx: int         # sequence length (static in the artifact)
+    activation: str = "geglu"  # "geglu" | "swiglu"
+
+    def __post_init__(self):
+        assert self.d_model % self.n_heads == 0
+        assert self.d_model % 4 == 0 and self.d_ff % 4 == 0
+        assert self.activation in ("geglu", "swiglu")
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, r, v = self.d_model, self.d_ff, self.vocab
+        per_block = (
+            2 * d            # ln1
+            + 3 * d * d + 3 * d  # qkv
+            + d * d + d      # attn out
+            + 2 * d          # ln2
+            + 2 * r * d + 2 * r  # ffn w1 (fused) + b1
+            + d * r + d      # ffn w2 + b2
+        )
+        return v * d + self.n_ctx * d + self.n_layers * per_block + 2 * d
+
+
+CONFIGS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        # pytest / cargo-test scale: compiles in seconds, runs in ms
+        ModelConfig("test_tiny", vocab=64, d_model=32, n_layers=1, n_heads=2,
+                    d_ff=32, n_ctx=16),
+        ModelConfig("test_tiny_half", vocab=64, d_model=32, n_layers=1,
+                    n_heads=2, d_ff=16, n_ctx=16),
+        # small-but-real: used by the trainer integration tests
+        ModelConfig("nano", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                    d_ff=128, n_ctx=64),
+        ModelConfig("nano_half", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                    d_ff=64, n_ctx=64),
+        # end-to-end pre-training driver (EXPERIMENTS.md, Fig. 10 repro)
+        ModelConfig("e2e", vocab=512, d_model=256, n_layers=4, n_heads=4,
+                    d_ff=512, n_ctx=128),
+        # a 'half' e2e variant: d_ff halved, the paper's Half baseline
+        ModelConfig("e2e_half", vocab=512, d_model=256, n_layers=4, n_heads=4,
+                    d_ff=256, n_ctx=128),
+        # larger optional config for longer runs
+        ModelConfig("small", vocab=1024, d_model=384, n_layers=6, n_heads=6,
+                    d_ff=768, n_ctx=256),
+        ModelConfig("small_half", vocab=1024, d_model=384, n_layers=6, n_heads=6,
+                    d_ff=384, n_ctx=256),
+    ]
+}
+
+# The paper's GEMM sweep shapes (Table 3 / Fig. 7) used by the Rust benches;
+# recorded here so the python and rust sides agree on the workload.
+PAPER_FFN_SHAPES = [
+    # (d_model, d_ff) pairs from Table 3's weight shapes
+    (768, 3072),
+    (1024, 4096),
+    (1280, 5120),
+    (1600, 6400),
+    (2048, 8192),
+]

@@ -1,0 +1,22 @@
+"""L1 — Pallas kernels for the paper's compute hot-spots.
+
+All kernels run under ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); on a real TPU the same code lowers to Mosaic. Each
+kernel is verified against the pure-jnp oracle of the same name in
+:mod:`compile.kernels.ref` by the pytest suite.
+
+Kernels (paper §5):
+  * :func:`prune24.prune24`            — magnitude 2:4 pruning (S_w / S_wt)
+  * :func:`transposable.transposable_mask` — conv-style transposable-mask
+    search (Algorithm 1, 90-pattern bank)
+  * :func:`mvue.mvue24`                — unbiased 2:4 gradient estimator
+  * :func:`geglu.geglu`                — fused gated activation (§5.2)
+  * :func:`masked_decay.masked_decay`  — masked decay on gradients (Eq. 10)
+"""
+
+from . import ref  # noqa: F401
+from .prune24 import prune24, prune24_mask  # noqa: F401
+from .transposable import transposable_mask  # noqa: F401
+from .mvue import mvue24  # noqa: F401
+from .geglu import geglu, swiglu  # noqa: F401
+from .masked_decay import masked_decay  # noqa: F401

@@ -1,0 +1,34 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): blocks are sized so a
+tile fits comfortably in VMEM (~16 MiB/core; we budget <= 2 MiB per operand
+tile) with the lane dimension a multiple of 128 where the array allows it,
+and ALWAYS a multiple of 4 so 2:4 groups never straddle a tile boundary.
+"""
+
+from __future__ import annotations
+
+
+def divisor_at_most(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (>=1)."""
+    if n <= cap:
+        return n
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def row_block(rows: int, cols: int, elem_bytes: int = 4,
+              budget_bytes: int = 2 << 20) -> int:
+    """Pick a row-tile height: whole rows, <= budget, divisor of ``rows``."""
+    max_rows = max(1, budget_bytes // max(1, cols * elem_bytes))
+    return divisor_at_most(rows, min(max_rows, 256))
+
+
+def group_block(cols: int, cap: int = 512) -> int:
+    """Column tile width: divisor of ``cols``, multiple of 4, <= cap."""
+    if cols % 4 != 0:
+        raise ValueError(f"cols {cols} not a multiple of 4")
+    d = divisor_at_most(cols // 4, cap // 4)
+    return d * 4

@@ -1,0 +1,43 @@
+"""Pallas kernel: masked decay on gradients (paper §4.2, Eq. 10).
+
+g <- g + λ ((1 - m) ⊙ w): the regularization is added to the GRADIENT so
+that Adam's 1/(sqrt(v)+eps) normalization turns it into a per-dimension
+decay intensity — the paper's key fix over SR-STE's decay-on-weights.
+Pure elementwise work; λ is compile-time static (it is fixed for a run).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+from .common import group_block, row_block
+
+
+def _decay_kernel(g_ref, w_ref, m_ref, out_ref, *, lam: float):
+    g = g_ref[...]
+    w = w_ref[...]
+    m = m_ref[...]
+    out_ref[...] = (g + lam * (1.0 - m) * w).astype(g.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "interpret"))
+def masked_decay(g: jax.Array, w: jax.Array, mask: jax.Array,
+                 lam: float, interpret: bool = True) -> jax.Array:
+    """Eq. 10: returns g + λ((1-mask) ⊙ w) for 2-D inputs of equal shape."""
+    if not (g.shape == w.shape == mask.shape) or g.ndim != 2:
+        raise ValueError(f"shape mismatch: {g.shape} {w.shape} {mask.shape}")
+    m, n = g.shape
+    bm = row_block(m, n)
+    bn = group_block(n) if n % 4 == 0 else n
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_decay_kernel, lam=lam),
+        grid=(m // bm, n // bn),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        interpret=interpret,
+    )(g, w, mask)

@@ -1,0 +1,71 @@
+"""Pallas kernel: MVUE 2:4 estimator for neural gradients (paper Eq. 6).
+
+Unbiased 2-of-4 sampling with inclusion probabilities proportional to
+magnitude (capped/redistributed), realized by systematic sampling — one
+uniform per group, passed in as an input so the kernel itself is
+deterministic and the surrounding jax program owns the PRNG. Elementwise
+per group, no control flow: the capping loop is unrolled 3x (enough for
+n=4, k=2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import group_block, row_block
+
+
+def _probs(absa: jax.Array) -> jax.Array:
+    """Capped-and-redistributed inclusion probabilities (unrolled)."""
+    frozen = jnp.zeros_like(absa, dtype=jnp.bool_)
+    p = jnp.zeros_like(absa)
+    for _ in range(3):
+        k_left = 2.0 - frozen.sum(-1, keepdims=True).astype(absa.dtype)
+        rem = jnp.where(frozen, 0.0, absa)
+        denom = jnp.maximum(rem.sum(-1, keepdims=True), 1e-30)
+        raw = jnp.where(rem.sum(-1, keepdims=True) > 0, k_left * rem / denom, 0.0)
+        p = jnp.where(frozen, 1.0, raw)
+        frozen = frozen | ((~frozen) & (raw >= 1.0) & (rem > 0))
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def _mvue_kernel(x_ref, u_ref, out_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    m, n = x.shape
+    g = x.reshape(m, n // 4, 4)
+    p = _probs(jnp.abs(g))
+    cum = jnp.cumsum(p, axis=-1)
+    lo = cum - p
+    uu = u.reshape(m, n // 4)[..., None]
+    sel = ((uu >= lo) & (uu < cum)) | ((uu + 1.0 >= lo) & (uu + 1.0 < cum))
+    out = jnp.where(sel, g / jnp.maximum(p, 1e-30), 0.0)
+    out_ref[...] = out.reshape(m, n).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mvue24(x: jax.Array, u: jax.Array, interpret: bool = True) -> jax.Array:
+    """Unbiased 2:4 sparsification of 2-D ``x`` along the last axis.
+
+    ``u`` ~ U[0,1), shape (x.shape[0], x.shape[1]//4). Matches ref.mvue24.
+    """
+    if x.ndim != 2 or x.shape[1] % 4:
+        raise ValueError(f"mvue24 expects 2-D /4 shape, got {x.shape}")
+    m, n = x.shape
+    bm, bn = row_block(m, n), group_block(n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _mvue_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn // 4), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, u)

@@ -1,0 +1,73 @@
+"""Pallas kernel: row-wise magnitude 2:4 pruning (paper Eq. 2-3 S_w / S_wt).
+
+The rank of every element inside its group of four is computed branch-free
+(16 comparisons per group) instead of with a sort, so the kernel body is
+pure vector work — the same trick the paper's Triton pruning kernel uses to
+avoid divergent control flow, restated for the TPU VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import group_block, row_block
+
+
+def rank_lt2(g: jax.Array) -> jax.Array:
+    """{0,1} mask of the two largest |.| per group; ties -> lower index.
+
+    ``g``: (..., 4) groups on the last axis. rank_i = #{j : |g_j| > |g_i|
+    or (|g_j| == |g_i| and j < i)}; keep iff rank < 2. Branch-free.
+    """
+    a = jnp.abs(g)
+    ai = a[..., :, None]  # (..., 4, 1) — element i
+    aj = a[..., None, :]  # (..., 1, 4) — element j
+    idx = jnp.arange(4)
+    beats = (aj > ai) | ((aj == ai) & (idx[None, :] < idx[:, None]))
+    rank = beats.sum(-1)
+    return (rank < 2).astype(g.dtype)
+
+
+def _prune24_kernel(x_ref, pruned_ref, mask_ref):
+    x = x_ref[...]
+    m, n = x.shape
+    g = x.reshape(m, n // 4, 4)
+    keep = rank_lt2(g).reshape(m, n)
+    pruned_ref[...] = x * keep
+    mask_ref[...] = keep
+
+
+def _call(x: jax.Array, interpret: bool):
+    if x.ndim != 2:
+        raise ValueError(f"prune24 expects 2-D input, got {x.shape}")
+    m, n = x.shape
+    bm, bn = row_block(m, n), group_block(n)
+    grid = (m // bm, n // bn)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _prune24_kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prune24(x: jax.Array, interpret: bool = True) -> jax.Array:
+    """Magnitude 2:4 pruning of ``x`` along the last axis (2-D input)."""
+    return _call(x, interpret)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prune24_mask(x: jax.Array, interpret: bool = True) -> jax.Array:
+    """{0,1} 2:4 mask of ``x`` (same semantics as ref.prune24_mask)."""
+    return _call(x, interpret)[1]

@@ -1,0 +1,247 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These are the CORE correctness signal of the build path: each Pallas kernel
+in this package is pytest-verified against the function of the same name
+here, and the Rust ports in ``rust/src/sparse/`` agree bit-for-bit with
+these definitions on shared inputs (see ``python/tests/test_cross_layer.py``
+and ``rust/tests/integration_sparse.rs``).
+
+Conventions (match the paper, Hu et al. ICML 2024, Appendix A.1):
+  * "row-wise 2:4": every 4 consecutive elements *along the last axis*
+    contain at least 2 zeros after pruning.
+  * magnitude pruning keeps the 2 largest |w| of each group of 4; ties are
+    broken toward the LOWER index (stable argsort of -|w|).
+  * a "transposable" mask is a 4x4 binary block with exactly 2 ones per row
+    AND 2 ones per column (90 such patterns exist).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# 2:4 magnitude pruning (the pruning functions S_wt / S_w of Eq. 2-3)
+# ---------------------------------------------------------------------------
+
+
+def prune24_mask(w: jax.Array) -> jax.Array:
+    """Row-wise 2:4 mask of ``w`` (last axis length must be a multiple of 4).
+
+    Returns a {0,1} mask of the same shape keeping the two largest-magnitude
+    entries of each consecutive group of four, ties broken to lower index.
+    """
+    if w.shape[-1] % 4 != 0:
+        raise ValueError(f"last axis {w.shape[-1]} not a multiple of 4")
+    g = w.reshape(*w.shape[:-1], w.shape[-1] // 4, 4)
+    # stable argsort of -|w|: descending magnitude, ties -> lower index first
+    order = jnp.argsort(-jnp.abs(g), axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)  # rank of each position
+    mask = (ranks < 2).astype(w.dtype)
+    return mask.reshape(w.shape)
+
+
+def prune24(w: jax.Array) -> jax.Array:
+    """Row-wise magnitude 2:4 pruning: ``w * prune24_mask(w)``."""
+    return w * prune24_mask(w)
+
+
+# ---------------------------------------------------------------------------
+# Transposable 2:4 masks (paper §5.1, Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _transposable_patterns_np() -> np.ndarray:
+    """All 4x4 binary matrices with exactly two 1s per row and per column.
+
+    There are exactly 90 of them ("mask diversity n_t = 90" in the paper).
+    Generated offline by exhaustive enumeration, like the paper's step (1).
+    """
+    rows = [r for r in range(16) if bin(r).count("1") == 2]  # 6 row patterns
+    pats = []
+    for a in rows:
+        for b in rows:
+            for c in rows:
+                d_needed = 0
+                ok = True
+                for bit in range(4):
+                    col = ((a >> bit) & 1) + ((b >> bit) & 1) + ((c >> bit) & 1)
+                    if col > 2:
+                        ok = False
+                        break
+                    if col == 1:
+                        d_needed |= 1 << bit
+                if not ok or bin(d_needed).count("1") != 2:
+                    continue
+                m = np.zeros((4, 4), dtype=np.float32)
+                for i, r in enumerate((a, b, c, d_needed)):
+                    for bit in range(4):
+                        m[i, bit] = (r >> bit) & 1
+                pats.append(m)
+    arr = np.stack(pats)
+    assert arr.shape[0] == 90, arr.shape
+    return arr
+
+
+def transposable_patterns() -> jax.Array:
+    """(90, 4, 4) f32 pattern bank."""
+    return jnp.asarray(_transposable_patterns_np())
+
+
+def transposable_mask(w: jax.Array) -> jax.Array:
+    """Optimal transposable 2:4 mask of ``w`` (2-D, dims multiples of 4).
+
+    Exhaustive argmax over the 90 patterns per 4x4 block == the paper's
+    conv2d formulation (Algorithm 1) with a (4,4,90) kernel, stride 4.
+    Maximizes ||M ⊙ W||_1 exactly (the 2-approximation of Hubara et al.
+    does not).
+    """
+    r, q = w.shape
+    if r % 4 or q % 4:
+        raise ValueError(f"shape {w.shape} not a multiple of 4x4")
+    pats = transposable_patterns().reshape(90, 16)  # (90,16)
+    absw = jnp.abs(w).reshape(r // 4, 4, q // 4, 4).transpose(0, 2, 1, 3)
+    blocks = absw.reshape(r // 4, q // 4, 16)
+    scores = jnp.einsum("ijk,pk->ijp", blocks, pats)  # (r/4, q/4, 90)
+    idx = jnp.argmax(scores, axis=-1)  # ties -> lower pattern index
+    chosen = pats[idx].reshape(r // 4, q // 4, 4, 4)
+    mask = chosen.transpose(0, 2, 1, 3).reshape(r, q)
+    return mask.astype(w.dtype)
+
+
+def transposable_mask_2approx(w: jax.Array) -> jax.Array:
+    """Hubara et al. (2021) 2-approximation baseline (sort & pick).
+
+    Greedy: visit entries of each 4x4 block in decreasing |w|; keep an entry
+    if its row and column each still have < 2 kept entries. The pure greedy
+    pass can dead-end with < 8 kept entries (all admissible rows/columns
+    exhausted); the repair pass then completes it with the best valid
+    pattern containing the kept set — mirroring Hubara et al.'s fix-up
+    stage. Yields a valid transposable mask with ||M⊙W||_1 >= 1/2 optimal.
+    """
+    r, q = w.shape
+    absw = jnp.abs(w).reshape(r // 4, 4, q // 4, 4).transpose(0, 2, 1, 3)
+    blocks = absw.reshape(-1, 16)  # (B,16) in row-major 4x4 order
+    pats = transposable_patterns().reshape(90, 16)  # (90,16)
+
+    def per_block(b):
+        order = jnp.argsort(-b, stable=True)
+
+        def body(state, pos):
+            rows, cols, m = state
+            i, j = pos // 4, pos % 4
+            take = (rows[i] < 2) & (cols[j] < 2)
+            rows = rows.at[i].add(jnp.where(take, 1, 0))
+            cols = cols.at[j].add(jnp.where(take, 1, 0))
+            m = m.at[pos].set(jnp.where(take, 1.0, 0.0))
+            return (rows, cols, m), None
+
+        init = (jnp.zeros(4, jnp.int32), jnp.zeros(4, jnp.int32), jnp.zeros(16))
+        (rows, cols, m), _ = jax.lax.scan(body, init, order)
+        # repair: snap to the valid pattern keeping as many greedy picks as
+        # possible (overlap dominates), then by retained |w|
+        big = 1.0 + 16.0 * jnp.max(b)
+        scores = pats @ (b + big * m)
+        return pats[jnp.argmax(scores)]
+
+    masks = jax.vmap(per_block)(blocks).reshape(r // 4, q // 4, 4, 4)
+    return masks.transpose(0, 2, 1, 3).reshape(r, q).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MVUE 2:4 estimator for neural gradients (paper Eq. 6; Chmiel et al. 2023)
+# ---------------------------------------------------------------------------
+
+
+def _mvue24_probs(a: jax.Array) -> jax.Array:
+    """Inclusion probabilities for 2-of-4 sampling proportional to |a|.
+
+    p_i = min(1, 2|a_i|/sum|a|) with iterative redistribution of the capped
+    mass (<=3 rounds suffice for n=4, k=2). sum(p) == min(2, nnz).
+    """
+    absa = jnp.abs(a)
+    frozen = jnp.zeros_like(absa, dtype=bool)
+
+    def round_(state, _):
+        frozen, _ = state
+        k_left = 2.0 - frozen.sum(-1, keepdims=True).astype(absa.dtype)
+        rem = jnp.where(frozen, 0.0, absa)
+        denom = rem.sum(-1, keepdims=True)
+        raw = jnp.where(denom > 0, k_left * rem / jnp.maximum(denom, 1e-30), 0.0)
+        p = jnp.where(frozen, 1.0, raw)
+        newly = (~frozen) & (raw >= 1.0) & (rem > 0)
+        return (frozen | newly, p), None
+
+    (frozen, p), _ = jax.lax.scan(
+        round_, (frozen, jnp.zeros_like(absa)), None, length=4
+    )
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def mvue24(x: jax.Array, u: jax.Array) -> jax.Array:
+    """Unbiased 2:4 sparsification of ``x`` along the last axis.
+
+    ``u`` ~ U[0,1) with shape ``x.shape[:-1] + (x.shape[-1]//4,)`` — one
+    uniform per group of four. Systematic (cumulative-interval) sampling
+    selects exactly the entries whose cumulative-probability interval
+    contains ``u + j`` (j = 0, 1), giving exact per-entry inclusion
+    marginals p_i; kept entries are rescaled by 1/p_i, so E[out] == x.
+    Groups with <= 2 nonzeros are passed through exactly (zero variance).
+    """
+    if x.shape[-1] % 4 != 0:
+        raise ValueError(f"last axis {x.shape[-1]} not a multiple of 4")
+    g = x.reshape(*x.shape[:-1], x.shape[-1] // 4, 4)
+    p = _mvue24_probs(g)
+    cum = jnp.cumsum(p, axis=-1)
+    lo = cum - p
+    uu = u[..., None]  # (.., G, 1)
+    # entry i selected iff some integer offset u+j lies in [lo_i, lo_i + p_i)
+    sel = ((uu >= lo) & (uu < cum)) | ((uu + 1.0 >= lo) & (uu + 1.0 < cum))
+    out = jnp.where(sel, g / jnp.maximum(p, 1e-30), 0.0)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated activations (paper §5.2)
+# ---------------------------------------------------------------------------
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def gelu_tanh(x: jax.Array) -> jax.Array:
+    """tanh-approximated GELU (matches the Rust port exactly)."""
+    return 0.5 * x * (1.0 + jnp.tanh(_SQRT_2_OVER_PI * (x + 0.044715 * x**3)))
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def geglu(z: jax.Array) -> jax.Array:
+    """GEGLU on the fused matmul output: split last axis, GELU(Z1) ⊙ Z2."""
+    z1, z2 = jnp.split(z, 2, axis=-1)
+    return gelu_tanh(z1) * z2
+
+
+def swiglu(z: jax.Array) -> jax.Array:
+    z1, z2 = jnp.split(z, 2, axis=-1)
+    return silu(z1) * z2
+
+
+# ---------------------------------------------------------------------------
+# Masked decay (paper §4.2, Eq. 10) and flip rate (Definition 4.1)
+# ---------------------------------------------------------------------------
+
+
+def masked_decay(g: jax.Array, w: jax.Array, mask: jax.Array, lam: float) -> jax.Array:
+    """g + λ ((1 - m) ⊙ w): decay applied on GRADIENTS (ours, Eq. 10)."""
+    return g + lam * (1.0 - mask) * w
+
+
+def flip_rate(m_prev: jax.Array, m_new: jax.Array) -> jax.Array:
+    """Definition 4.1: ||m_t - m_{t-1}||_1 / D."""
+    return jnp.abs(m_new - m_prev).mean()

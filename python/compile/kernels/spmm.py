@@ -1,0 +1,77 @@
+"""Pallas kernel: masked matmul — the 2:4-spMM stand-in inside the graph.
+
+On sparse tensor cores Z = X (W ⊙ M)^T runs from the compressed (values +
+2-bit metadata) operand at 2x the dense rate. TPUs have no structured-
+sparsity unit, so the numerically identical computation is expressed as a
+masked dense contraction tiled for the MXU: each grid step multiplies a
+(bp x bq) X-tile against a (br x bq) masked-W-tile (the mask multiply fuses
+into the operand load in VMEM) and accumulates into the (bp x br) output
+tile across the q grid axis. This is the kernel the L2 model's
+``sparse_linear`` forward lowers to, so the AOT artifact carries the L1
+code path end-to-end.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import divisor_at_most
+
+
+def _masked_mm_kernel(x_ref, w_ref, m_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    wm = w_ref[...] * m_ref[...]
+    o_ref[...] += jax.lax.dot_general(
+        x, wm,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_matmul_nt(x: jax.Array, w: jax.Array, mask: jax.Array,
+                     interpret: bool = True) -> jax.Array:
+    """Z = X (W ⊙ M)^T. x: (p, q), w/mask: (r, q) -> (p, r).
+
+    Numerically identical to the 2:4-spMM of paper Eq. 2 when ``mask`` is
+    a (transposable) 2:4 mask; tiled (bp, br, bq) with MXU-shaped blocks.
+    """
+    p, q = x.shape
+    r, qw = w.shape
+    if qw != q or mask.shape != w.shape:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} m{mask.shape}")
+    bp = divisor_at_most(p, 128)
+    br = divisor_at_most(r, 128)
+    bq = divisor_at_most(q, 512)
+    grid = (p // bp, r // br, q // bq)
+    return pl.pallas_call(
+        _masked_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, bq), lambda i, j, k: (i, k)),
+            pl.BlockSpec((br, bq), lambda i, j, k: (j, k)),
+            pl.BlockSpec((br, bq), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bp, br), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, r), x.dtype),
+        interpret=interpret,
+    )(x, w, mask)
+
+
+def masked_matmul_nn(g: jax.Array, w: jax.Array, mask: jax.Array,
+                     interpret: bool = True) -> jax.Array:
+    """∇X = ∇Z (W ⊙ M). g: (p, r), w/mask: (r, q) -> (p, q).
+
+    Eq. 3's GEMM: the transposable mask makes (W⊙M)^T itself 2:4, so
+    hardware runs this sparse too. Reuses the NT kernel on transposed
+    operands ((W⊙M) = ((W^T ⊙ M^T))^T).
+    """
+    return masked_matmul_nt(g, w.T, mask.T, interpret=interpret)

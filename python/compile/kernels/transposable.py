@@ -1,0 +1,67 @@
+"""Pallas kernel: conv-style transposable 2:4 mask search (paper Alg. 1).
+
+The paper replaces Hubara et al.'s branchy sort-and-pick with a dense
+convolution over a 90-pattern bank so the search runs as straight-line SIMD
+work. On TPU the natural restatement is a per-tile contraction: each VMEM
+tile of |W| is reshaped to (blocks, 16) and multiplied against the (16, 90)
+pattern bank — an MXU-shaped matmul — followed by an argmax and a gather
+back to 4x4 blocks. BlockSpec carries the HBM->VMEM schedule that the CUDA
+kernel expressed with threadblocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .common import divisor_at_most
+
+
+def _search_kernel(absw_ref, pats_ref, mask_ref):
+    absw = absw_ref[...]
+    pats = pats_ref[...]  # (90, 16)
+    m, n = absw.shape
+    # (m/4, 4, n/4, 4) -> (m/4, n/4, 16) row-major 4x4 blocks
+    blocks = absw.reshape(m // 4, 4, n // 4, 4).transpose(0, 2, 1, 3)
+    blocks = blocks.reshape(m // 4, n // 4, 16)
+    scores = jax.lax.dot_general(
+        blocks, pats,
+        dimension_numbers=(((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (m/4, n/4, 90)
+    idx = jnp.argmax(scores, axis=-1)
+    chosen = jnp.take(pats, idx.reshape(-1), axis=0)  # (B, 16)
+    chosen = chosen.reshape(m // 4, n // 4, 4, 4).transpose(0, 2, 1, 3)
+    mask_ref[...] = chosen.reshape(m, n).astype(absw.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def transposable_mask(w: jax.Array, interpret: bool = True) -> jax.Array:
+    """Optimal transposable 2:4 mask of 2-D ``w`` (dims multiples of 4).
+
+    Exhaustive over the 90 valid 4x4 patterns — exactly the paper's
+    Algorithm 1 (conv2d with a 4x4x90 kernel, stride 4, then argmax).
+    """
+    if w.ndim != 2 or w.shape[0] % 4 or w.shape[1] % 4:
+        raise ValueError(f"transposable_mask expects 2-D /4 shape, got {w.shape}")
+    m, n = w.shape
+    # tiles must be multiples of 4 in both dims so no 4x4 block straddles
+    bm = 4 * divisor_at_most(m // 4, 64)   # <= 256 rows
+    bn = 4 * divisor_at_most(n // 4, 128)  # <= 512 cols
+    pats = ref.transposable_patterns().reshape(90, 16).astype(w.dtype)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _search_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((90, 16), lambda i, j: (0, 0)),  # bank resident
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+    )(jnp.abs(w), pats)

@@ -1,0 +1,316 @@
+"""L2 — the paper's compute graph: a GPT-style transformer with FST FFNs.
+
+Fully-sparse-training (FST) semantics per the paper (Eq. 2-4):
+
+    forward:   Z  = X (W ⊙ M)^T                         (Eq. 2)
+    backward:  ∇X = ∇Z (W ⊙ M)                          (Eq. 3)
+               ∇W = MVUE(∇Z^T) X                        (Eq. 4 + Eq. 6)
+
+``M`` are the *transposable* 2:4 masks — they are INPUTS to the exported
+step function, computed by the Rust coordinator (L3) every ``l`` optimizer
+steps with the conv-based search, exactly as the paper refreshes them
+outside the autograd graph. The MVUE estimator and the fused GEGLU run as
+Pallas kernels (L1) inside this graph, so the AOT artifact genuinely
+contains the kernel code paths.
+
+Only FFN weights are sparsified (the paper sparsifies FFNs; attention
+stays dense). The straight-through estimator is realised by
+``jax.custom_vjp``: the cotangent of the *dense* W is taken from the
+sparse product, Eq. 7.
+
+Everything here is build-time only: ``aot.py`` lowers the step functions
+to HLO text once; Python never runs on the training step path.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.geglu import geglu as geglu_kernel, swiglu as swiglu_kernel
+from .kernels.mvue import mvue24 as mvue24_kernel
+from .kernels.spmm import masked_matmul_nn, masked_matmul_nt
+
+# ---------------------------------------------------------------------------
+# parameter / mask layout (the manifest contract with the Rust side)
+# ---------------------------------------------------------------------------
+
+PER_LAYER_PARAMS = 12
+
+
+def param_specs(cfg: ModelConfig) -> list[dict]:
+    """Ordered parameter list: name, shape, init spec.
+
+    The Rust coordinator initializes and owns the parameters; this list is
+    serialized into the manifest so both sides agree on ordering and init.
+    Init specs: ``normal:<std>``, ``zeros``, ``ones``.
+    """
+    d, r, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    resid_std = 0.02 / (2.0 * cfg.n_layers) ** 0.5  # GPT-2 residual scaling
+    specs = [
+        dict(name="tok_emb", shape=(v, d), init="normal:0.02"),
+        dict(name="pos_emb", shape=(cfg.n_ctx, d), init="normal:0.01"),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"h{i}."
+        specs += [
+            dict(name=p + "ln1_s", shape=(d,), init="ones"),
+            dict(name=p + "ln1_b", shape=(d,), init="zeros"),
+            dict(name=p + "w_qkv", shape=(3 * d, d), init="normal:0.02"),
+            dict(name=p + "b_qkv", shape=(3 * d,), init="zeros"),
+            dict(name=p + "w_o", shape=(d, d), init=f"normal:{resid_std:.6g}"),
+            dict(name=p + "b_o", shape=(d,), init="zeros"),
+            dict(name=p + "ln2_s", shape=(d,), init="ones"),
+            dict(name=p + "ln2_b", shape=(d,), init="zeros"),
+            # fused gated up-projection (U;V) and down-projection — SPARSE
+            dict(name=p + "ffn_w1", shape=(2 * r, d), init="normal:0.02",
+                 sparse=True),
+            dict(name=p + "ffn_b1", shape=(2 * r,), init="zeros"),
+            dict(name=p + "ffn_w2", shape=(d, r), init=f"normal:{resid_std:.6g}",
+                 sparse=True),
+            dict(name=p + "ffn_b2", shape=(d,), init="zeros"),
+        ]
+    specs += [
+        dict(name="lnf_s", shape=(d,), init="ones"),
+        dict(name="lnf_b", shape=(d,), init="zeros"),
+    ]
+    return specs
+
+
+def mask_specs(cfg: ModelConfig) -> list[dict]:
+    """Ordered mask list (one per sparse parameter), same naming."""
+    return [
+        dict(name=s["name"] + ".mask", shape=s["shape"])
+        for s in param_specs(cfg)
+        if s.get("sparse")
+    ]
+
+
+# ---------------------------------------------------------------------------
+# FST sparse linear (Eq. 2-4) as a custom_vjp
+# ---------------------------------------------------------------------------
+
+
+def _sparse_linear_fwd_impl(x, w, mask, u):
+    del u
+    # Eq. 2 via the L1 masked-matmul kernel (the 2:4-spMM stand-in)
+    return masked_matmul_nt(x, w, mask)
+
+
+@jax.custom_vjp
+def sparse_linear(x, w, mask, u):
+    """FST linear: fwd X(W⊙M)^T; bwd per Eq. 3 (masked W) and Eq. 4 (MVUE).
+
+    ``u``: uniforms for the MVUE sampler, shape (w.shape[0], x.shape[0]//4).
+    The mask and u receive zero cotangents (they are not trained).
+    """
+    return _sparse_linear_fwd_impl(x, w, mask, u)
+
+
+def _sparse_linear_fwd(x, w, mask, u):
+    return _sparse_linear_fwd_impl(x, w, mask, u), (x, w, mask, u)
+
+
+def _sparse_linear_bwd(res, gz):
+    x, w, mask, u = res
+    # Eq. 3: ∇X = ∇Z (W ⊙ M) — the transposable mask makes (W⊙M) itself
+    # column-wise 2:4, so this GEMM also runs on sparse tensor cores.
+    dx = masked_matmul_nn(gz, w, mask)
+    # Eq. 4/6: ∇W = MVUE(∇Z^T) X — unbiased 2:4 estimate of the gradient.
+    gzt = mvue24_kernel(gz.T, u)
+    dw = gzt @ x
+    # STE (Eq. 7): the cotangent flows to the DENSE weight unchanged.
+    return dx, dw, jnp.zeros_like(mask), jnp.zeros_like(u)
+
+
+sparse_linear.defvjp(_sparse_linear_fwd, _sparse_linear_bwd)
+
+
+def ste_linear(x, w, mask, u):
+    """Ablation variant: FST without MVUE (exact ∇Z^T X, plain STE)."""
+
+    @jax.custom_vjp
+    def f(x, w, mask, u):
+        return _sparse_linear_fwd_impl(x, w, mask, u)
+
+    def fwd(x, w, mask, u):
+        return _sparse_linear_fwd_impl(x, w, mask, u), (x, w, mask, u)
+
+    def bwd(res, gz):
+        x, w, mask, u = res
+        return gz @ (w * mask), gz.T @ x, jnp.zeros_like(mask), jnp.zeros_like(u)
+
+    f.defvjp(fwd, bwd)
+    return f(x, w, mask, u)
+
+
+# ---------------------------------------------------------------------------
+# fused gated activation with analytic VJP around the Pallas kernel
+# ---------------------------------------------------------------------------
+
+_K = 0.7978845608028654  # sqrt(2/pi)
+_C = 0.044715
+
+
+def _gelu_tanh(x):
+    return 0.5 * x * (1.0 + jnp.tanh(_K * (x + _C * x**3)))
+
+
+def _gelu_tanh_grad(x):
+    t = jnp.tanh(_K * (x + _C * x**3))
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * _K * (1.0 + 3.0 * _C * x * x)
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _silu_grad(x):
+    s = jax.nn.sigmoid(x)
+    return s * (1.0 + x * (1.0 - s))
+
+
+def make_gated_act(kind: str) -> Callable:
+    """GEGLU/SwiGLU with the Pallas kernel on the forward pass and an
+    analytic backward (pallas_call is not auto-differentiated)."""
+    kernel = geglu_kernel if kind == "geglu" else swiglu_kernel
+    act, dact = (_gelu_tanh, _gelu_tanh_grad) if kind == "geglu" else (_silu, _silu_grad)
+
+    @jax.custom_vjp
+    def gated(z):
+        return kernel(z)
+
+    def fwd(z):
+        return kernel(z), z
+
+    def bwd(z, g):
+        r = z.shape[-1] // 2
+        z1, z2 = z[:, :r], z[:, r:]
+        gz1 = dact(z1) * z2 * g
+        gz2 = act(z1) * g
+        return (jnp.concatenate([gz1, gz2], axis=-1),)
+
+    gated.defvjp(fwd, bwd)
+    return gated
+
+
+# ---------------------------------------------------------------------------
+# transformer forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(x, w_qkv, b_qkv, w_o, b_o, cfg: ModelConfig):
+    """Dense causal multi-head attention. x: (B, n, d)."""
+    b, n, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = x.reshape(b * n, d) @ w_qkv.T + b_qkv  # (B*n, 3d)
+    qkv = qkv.reshape(b, n, 3, h, hd).transpose(2, 0, 3, 1, 4)  # (3,B,h,n,hd)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    scores = jnp.einsum("bhid,bhjd->bhij", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((n, n), bool))
+    scores = jnp.where(causal, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhij,bhjd->bhid", probs, v)  # (B,h,n,hd)
+    out = out.transpose(0, 2, 1, 3).reshape(b * n, d)
+    return (out @ w_o.T + b_o).reshape(b, n, d)
+
+
+def _ffn(x2d, w1, b1, w2, b2, m1, m2, u1, u2, linear_fn, gated):
+    """FST feed-forward: sparse fused up-proj, gated act, sparse down-proj."""
+    z = linear_fn(x2d, w1, m1, u1) + b1          # (p, 2r)
+    a = gated(z)                                  # (p, r) — Pallas fused
+    return linear_fn(a, w2, m2, u2) + b2          # (p, d)
+
+
+def _dense_ffn(x2d, w1, b1, w2, b2, gated):
+    z = x2d @ w1.T + b1
+    a = gated(z)
+    return a @ w2.T + b2
+
+
+def forward(params: list, masks: list, tokens, cfg: ModelConfig,
+            mode: str, seed=None):
+    """Logits for (B, n) int32 tokens. mode: 'sparse' | 'ste' | 'dense'."""
+    b, n = tokens.shape
+    d, r = cfg.d_model, cfg.d_ff
+    p = b * n
+    gated = make_gated_act(cfg.activation)
+    linear_fn = {"sparse": sparse_linear, "ste": ste_linear, "dense": None}[mode]
+
+    if mode != "dense":
+        key = jax.random.PRNGKey(seed)
+
+    tok_emb, pos_emb = params[0], params[1]
+    x = tok_emb[tokens] + pos_emb[None, :n, :]
+    for i in range(cfg.n_layers):
+        base = 2 + i * PER_LAYER_PARAMS
+        (ln1_s, ln1_b, w_qkv, b_qkv, w_o, b_o,
+         ln2_s, ln2_b, w1, b1, w2, b2) = params[base:base + PER_LAYER_PARAMS]
+        x = x + _attention(_layer_norm(x, ln1_s, ln1_b), w_qkv, b_qkv, w_o,
+                           b_o, cfg)
+        h = _layer_norm(x, ln2_s, ln2_b).reshape(p, d)
+        if mode == "dense":
+            y = _dense_ffn(h, w1, b1, w2, b2, gated)
+        else:
+            m1, m2 = masks[2 * i], masks[2 * i + 1]
+            k1, k2 = jax.random.fold_in(key, 2 * i), jax.random.fold_in(key, 2 * i + 1)
+            u1 = jax.random.uniform(k1, (2 * r, p // 4), jnp.float32)
+            u2 = jax.random.uniform(k2, (d, p // 4), jnp.float32)
+            y = _ffn(h, w1, b1, w2, b2, m1, m2, u1, u2, linear_fn, gated)
+        x = x + y.reshape(b, n, d)
+    x = _layer_norm(x, params[-2], params[-1])
+    return x.reshape(p, d) @ tok_emb.T  # tied head, (p, V)
+
+
+def loss_fn(params, masks, tokens, targets, cfg: ModelConfig, mode: str,
+            seed=None):
+    """Mean cross-entropy over all positions."""
+    logits = forward(params, masks, tokens, cfg, mode, seed)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = targets.reshape(-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# step functions (the AOT export surface)
+# ---------------------------------------------------------------------------
+
+
+def make_step_fn(cfg: ModelConfig, mode: str):
+    """(params, masks, tokens, targets, seed) -> (loss, *grads).
+
+    Gradients are returned for every parameter, flattened in param order.
+    The optimizer (AdamW + masked decay) lives in Rust.
+    """
+
+    def step(params, masks, tokens, targets, seed):
+        val, grads = jax.value_and_grad(
+            lambda ps: loss_fn(ps, masks, tokens, targets, cfg, mode, seed)
+        )(params)
+        return (val, *grads)
+
+    return step
+
+
+def make_eval_fn(cfg: ModelConfig):
+    """(params, masks, tokens, targets) -> loss, with masks applied in fwd.
+
+    Passing all-ones masks makes this the dense eval: S(W) == W.
+    """
+
+    def evaluate(params, masks, tokens, targets):
+        # sparse fwd semantics, no grad: masked weights, no MVUE involved
+        return (loss_fn(params, masks, tokens, targets, cfg, "sparse", 0),)
+
+    return evaluate

@@ -1,0 +1,16 @@
+"""Shared pytest config.
+
+The hypothesis sweeps compile one XLA executable per unique input shape;
+on the CPU JIT those accumulate mmap'd code regions until LLVM hits
+"Cannot allocate memory". Clearing jax's caches between modules keeps the
+whole suite inside the limit.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    yield
+    jax.clear_caches()

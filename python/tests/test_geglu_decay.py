@@ -1,0 +1,79 @@
+"""Fused gated activations + masked decay: kernels vs oracles."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import geglu, masked_decay, ref
+from compile.kernels.geglu import swiglu
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", [(2, 8), (16, 64), (64, 256), (5, 24)])
+def test_geglu_matches_oracle(shape):
+    z = _rand(shape, seed=shape[1])
+    np.testing.assert_allclose(np.asarray(geglu(z)), np.asarray(ref.geglu(z)), atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(2, 8), (16, 64), (3, 40)])
+def test_swiglu_matches_oracle(shape):
+    z = _rand(shape, seed=shape[0])
+    np.testing.assert_allclose(np.asarray(swiglu(z)), np.asarray(ref.swiglu(z)), atol=1e-6)
+
+
+def test_geglu_matches_jax_nn_gelu():
+    """tanh-approx GELU tracks jax.nn.gelu(approximate=True) exactly."""
+    x = _rand((4, 16), seed=1)
+    np.testing.assert_allclose(
+        np.asarray(ref.gelu_tanh(x)),
+        np.asarray(jax.nn.gelu(x, approximate=True)),
+        atol=1e-6,
+    )
+
+
+def test_geglu_zero_gate_zeroes_output():
+    z1 = _rand((4, 8), seed=2)
+    z = jnp.concatenate([z1, jnp.zeros_like(z1)], axis=1)
+    np.testing.assert_array_equal(np.asarray(geglu(z)), np.zeros((4, 8)))
+
+
+def test_masked_decay_matches_oracle():
+    g, w = _rand((16, 32), 3), _rand((16, 32), 4)
+    m = ref.prune24_mask(w)
+    for lam in (0.0, 1e-6, 2e-4, 0.1):
+        np.testing.assert_allclose(
+            np.asarray(masked_decay(g, w, m, lam)),
+            np.asarray(ref.masked_decay(g, w, m, lam)),
+            atol=1e-7,
+        )
+
+
+def test_masked_decay_only_touches_pruned_weights():
+    """Kept (mask=1) coordinates receive the raw gradient unchanged."""
+    g, w = _rand((8, 16), 5), _rand((8, 16), 6)
+    m = ref.prune24_mask(w)
+    out = np.asarray(masked_decay(g, w, m, 0.5))
+    keep = np.asarray(m) == 1.0
+    np.testing.assert_array_equal(out[keep], np.asarray(g)[keep])
+    pruned = ~keep
+    np.testing.assert_allclose(
+        out[pruned], (np.asarray(g) + 0.5 * np.asarray(w))[pruned], atol=1e-6
+    )
+
+
+def test_masked_decay_zero_lambda_is_identity():
+    g, w = _rand((4, 8), 7), _rand((4, 8), 8)
+    m = ref.prune24_mask(w)
+    np.testing.assert_array_equal(np.asarray(masked_decay(g, w, m, 0.0)), np.asarray(g))
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.integers(1, 32), r=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_geglu_property_sweep(p, r, seed):
+    z = _rand((p, 2 * r), seed=seed)
+    np.testing.assert_allclose(np.asarray(geglu(z)), np.asarray(ref.geglu(z)), atol=1e-5)

@@ -1,0 +1,217 @@
+"""L2 model semantics: FST forward/backward vs the paper's Eq. 2-4."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS
+from compile.kernels import ref
+
+CFG = CONFIGS["test_tiny"]
+
+
+def _init_params(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for s in model.param_specs(cfg):
+        if s["init"] == "zeros":
+            a = np.zeros(s["shape"], np.float32)
+        elif s["init"] == "ones":
+            a = np.ones(s["shape"], np.float32)
+        else:
+            std = float(s["init"].split(":")[1])
+            a = rng.normal(0, std, s["shape"]).astype(np.float32)
+        out.append(jnp.asarray(a))
+    return out
+
+
+def _masks(cfg, params, ones=False):
+    specs = model.param_specs(cfg)
+    ms = []
+    for i, s in enumerate(specs):
+        if s.get("sparse"):
+            m = jnp.ones(s["shape"], jnp.float32) if ones \
+                else ref.transposable_mask(params[i])
+            ms.append(m)
+    return ms
+
+
+def _batch(cfg, seed=1, batch=2):
+    rng = np.random.default_rng(seed)
+    t = jnp.asarray(rng.integers(0, cfg.vocab, (batch, cfg.n_ctx)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, cfg.vocab, (batch, cfg.n_ctx)), jnp.int32)
+    return t, y
+
+
+def test_param_specs_count_matches_param_count():
+    total = sum(int(np.prod(s["shape"])) for s in model.param_specs(CFG))
+    assert total == CFG.param_count()
+
+
+def test_mask_specs_align_with_sparse_params():
+    specs = model.param_specs(CFG)
+    msk = model.mask_specs(CFG)
+    sparse = [s for s in specs if s.get("sparse")]
+    assert len(msk) == len(sparse) == 2 * CFG.n_layers
+    for a, b in zip(sparse, msk):
+        assert b["name"] == a["name"] + ".mask"
+        assert tuple(b["shape"]) == tuple(a["shape"])
+
+
+def test_sparse_with_ones_mask_equals_dense_loss():
+    """S(W) == W when M == 1 ⇒ identical forward loss."""
+    params = _init_params(CFG)
+    tokens, targets = _batch(CFG)
+    ones = _masks(CFG, params, ones=True)
+    l_dense = model.loss_fn(params, ones, tokens, targets, CFG, "dense")
+    l_sparse = model.loss_fn(params, ones, tokens, targets, CFG, "sparse", 0)
+    np.testing.assert_allclose(float(l_dense), float(l_sparse), rtol=1e-6)
+
+
+def test_masked_forward_differs_from_dense():
+    params = _init_params(CFG)
+    tokens, targets = _batch(CFG)
+    masks = _masks(CFG, params)
+    l_dense = model.loss_fn(params, masks, tokens, targets, CFG, "dense")
+    l_sparse = model.loss_fn(params, masks, tokens, targets, CFG, "sparse", 0)
+    assert abs(float(l_dense) - float(l_sparse)) > 1e-7
+
+
+def test_sparse_linear_forward_oracle():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(12, 16)).astype(np.float32))
+    m = ref.transposable_mask(w)
+    u = jnp.asarray(rng.random(size=(12, 2)).astype(np.float32))
+    out = model.sparse_linear(x, w, m, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ (w * m).T),
+                               atol=1e-5)
+
+
+def test_sparse_linear_bwd_eq3_eq4():
+    """∇X uses the masked weight (Eq. 3); ∇W == MVUE(∇Z^T) X (Eq. 4)."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(12, 16)).astype(np.float32))
+    m = ref.transposable_mask(w)
+    u = jnp.asarray(rng.random(size=(12, 2)).astype(np.float32))
+
+    def f(x, w):
+        return (model.sparse_linear(x, w, m, u) ** 2).sum() * 0.5
+
+    dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+    gz = x @ (w * m).T  # cotangent of z for this loss
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(gz @ (w * m)), atol=1e-4)
+    gzt = ref.mvue24(gz.T, u)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(gzt @ x), atol=1e-4)
+
+
+def test_ste_linear_bwd_is_exact():
+    """Ablation path: ∇W == ∇Z^T X exactly (no MVUE noise)."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    m = ref.transposable_mask(w)
+    u = jnp.zeros((8, 1), jnp.float32)
+
+    def f(w):
+        return (model.ste_linear(x, w, m, u) ** 2).sum() * 0.5
+
+    dw = jax.grad(f)(w)
+    gz = x @ (w * m).T
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(gz.T @ x), atol=1e-4)
+
+
+def test_ste_gradient_flows_to_pruned_weights():
+    """The STE property: masked (pruned) weights still receive gradient."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    m = ref.transposable_mask(w)
+    u = jnp.asarray(rng.random(size=(8, 1)).astype(np.float32))
+
+    dw = jax.grad(lambda w: model.sparse_linear(x, w, m, u).sum())(w)
+    pruned = np.asarray(m) == 0.0
+    assert np.abs(np.asarray(dw)[pruned]).sum() > 0.0
+
+
+def test_step_fn_grad_count_and_finiteness():
+    params = _init_params(CFG)
+    masks = _masks(CFG, params)
+    tokens, targets = _batch(CFG)
+    for mode in ("sparse", "ste", "dense"):
+        out = jax.jit(model.make_step_fn(CFG, mode))(
+            params, masks, tokens, targets, jnp.asarray(0, jnp.int32)
+        )
+        assert len(out) == 1 + len(params)
+        assert np.isfinite(float(out[0]))
+        for g, p in zip(out[1:], params):
+            assert g.shape == p.shape
+            assert np.isfinite(np.asarray(g)).all()
+
+
+def test_dense_step_matches_autodiff_reference():
+    """Dense mode == straight jax.grad of a dense transformer."""
+    params = _init_params(CFG)
+    masks = _masks(CFG, params, ones=True)
+    tokens, targets = _batch(CFG)
+    out = jax.jit(model.make_step_fn(CFG, "dense"))(
+        params, masks, tokens, targets, jnp.asarray(0, jnp.int32)
+    )
+    val, grads = jax.value_and_grad(
+        lambda ps: model.loss_fn(ps, masks, tokens, targets, CFG, "dense")
+    )(params)
+    np.testing.assert_allclose(float(out[0]), float(val), rtol=1e-6)
+    for a, b in zip(out[1:], grads):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_mvue_noise_is_seed_dependent():
+    params = _init_params(CFG)
+    masks = _masks(CFG, params)
+    tokens, targets = _batch(CFG)
+    step = jax.jit(model.make_step_fn(CFG, "sparse"))
+    g1 = step(params, masks, tokens, targets, jnp.asarray(1, jnp.int32))
+    g2 = step(params, masks, tokens, targets, jnp.asarray(2, jnp.int32))
+    # loss identical (fwd has no noise), grads differ (MVUE sampling).
+    # only FFN *weight* grads are MVUE-noised (Eq. 4); everything else is
+    # deterministic (Eq. 3 uses the masked weights exactly).
+    np.testing.assert_allclose(float(g1[0]), float(g2[0]), rtol=1e-6)
+    specs = model.param_specs(CFG)
+    ffn_w1_param = next(i for i, s in enumerate(specs) if s["name"] == "h0.ffn_w1")
+    assert not np.allclose(np.asarray(g1[1 + ffn_w1_param]),
+                           np.asarray(g2[1 + ffn_w1_param]))
+    # attention grads stay deterministic across seeds
+    wqkv_param = next(i for i, s in enumerate(specs) if s["name"] == "h0.w_qkv")
+    np.testing.assert_allclose(np.asarray(g1[1 + wqkv_param]),
+                               np.asarray(g2[1 + wqkv_param]), atol=1e-6)
+
+
+def test_eval_fn_matches_loss():
+    params = _init_params(CFG)
+    masks = _masks(CFG, params)
+    tokens, targets = _batch(CFG)
+    ev = jax.jit(model.make_eval_fn(CFG))(params, masks, tokens, targets)
+    direct = model.loss_fn(params, masks, tokens, targets, CFG, "sparse", 0)
+    np.testing.assert_allclose(float(ev[0]), float(direct), rtol=1e-6)
+
+
+def test_swiglu_activation_variant():
+    """The model supports SwiGLU FFNs (LLaMA-style) end to end."""
+    import dataclasses
+
+    cfg = dataclasses.replace(CONFIGS["test_tiny"], name="tiny_swiglu",
+                              activation="swiglu")
+    params = _init_params(cfg)
+    masks = _masks(cfg, params)
+    tokens, targets = _batch(cfg)
+    out = jax.jit(model.make_step_fn(cfg, "sparse"))(
+        params, masks, tokens, targets, jnp.asarray(0, jnp.int32)
+    )
+    assert np.isfinite(float(out[0]))
+    geglu_loss = model.loss_fn(params, masks, tokens, targets,
+                               CONFIGS["test_tiny"], "sparse", 0)
+    # different gate -> different loss
+    assert abs(float(out[0]) - float(geglu_loss)) > 1e-7

@@ -1,0 +1,97 @@
+"""MVUE 2:4 estimator: kernel vs oracle, 2:4 validity, unbiasedness."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mvue24, ref
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+def _unif(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).random(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", [(4, 8), (16, 32), (64, 64), (7, 12)])
+def test_matches_oracle(shape):
+    x = _rand(shape, seed=shape[1])
+    u = _unif((shape[0], shape[1] // 4), seed=shape[0])
+    np.testing.assert_allclose(
+        np.asarray(mvue24(x, u)), np.asarray(ref.mvue24(x, u)), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_24_validity(seed):
+    """Output has <= 2 nonzeros per group of 4 — always loadable by spMM."""
+    x = _rand((32, 64), seed=seed)
+    u = _unif((32, 16), seed=seed + 100)
+    out = np.asarray(mvue24(x, u)).reshape(32, 16, 4)
+    assert ((out != 0).sum(-1) <= 2).all()
+
+
+def test_unbiasedness():
+    """E[mvue24(x)] == x over many uniform draws (statistical test).
+
+    Vectorized: one vmapped call over all draws (a single XLA compile).
+    """
+    import jax
+
+    x = _rand((4, 8), seed=42)
+    n_draws = 4000
+    rng = np.random.default_rng(7)
+    us = jnp.asarray(rng.random(size=(n_draws, 4, 2)).astype(np.float32))
+    outs = jax.jit(jax.vmap(lambda u: ref.mvue24(x, u)))(us)
+    mean = np.asarray(outs, np.float64).mean(0)
+    # standard error of the estimator at this magnitude is ~|x|/sqrt(n)
+    np.testing.assert_allclose(mean, np.asarray(x), atol=0.15)
+
+
+def test_exact_when_already_sparse():
+    """Groups with <= 2 nonzeros pass through exactly (zero variance)."""
+    x = jnp.asarray([[3.0, 0.0, -2.0, 0.0], [0.0, 0.0, 0.0, 5.0]], jnp.float32)
+    for seed in range(10):
+        u = _unif((2, 1), seed=seed)
+        np.testing.assert_allclose(np.asarray(ref.mvue24(x, u)), np.asarray(x), atol=1e-6)
+
+
+def test_all_zero_group():
+    x = jnp.zeros((2, 4), jnp.float32)
+    u = _unif((2, 1), seed=0)
+    np.testing.assert_array_equal(np.asarray(ref.mvue24(x, u)), np.zeros((2, 4)))
+
+
+def test_probs_sum_to_two():
+    a = jnp.abs(_rand((16, 8, 4), seed=3))
+    p = np.asarray(ref._mvue24_probs(a))
+    np.testing.assert_allclose(p.sum(-1), np.full((16, 8), 2.0), atol=1e-5)
+    assert (p >= 0).all() and (p <= 1 + 1e-6).all()
+
+
+def test_dominant_element_always_kept():
+    """p_i == 1 for an element holding >= half the group's L1 mass."""
+    x = jnp.asarray([[100.0, 1.0, 1.0, 1.0]], jnp.float32)
+    for seed in range(10):
+        u = _unif((1, 1), seed=seed)
+        out = np.asarray(ref.mvue24(x, u))
+        assert out[0, 0] == pytest.approx(100.0, rel=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(rows=st.integers(1, 16), groups=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_property_sweep(rows, groups, seed):
+    x = _rand((rows, groups * 4), seed=seed)
+    u = _unif((rows, groups), seed=seed ^ 0xABCD)
+    out_k = np.asarray(mvue24(x, u))
+    out_r = np.asarray(ref.mvue24(x, u))
+    np.testing.assert_allclose(out_k, out_r, atol=1e-5)
+    g = out_r.reshape(rows, groups, 4)
+    assert ((g != 0).sum(-1) <= 2).all()
+    # selected entries are rescaled by >= 1 (1/p >= 1)
+    nz = g[g != 0]
+    orig = np.asarray(x).reshape(rows, groups, 4)[g != 0]
+    assert (np.abs(nz) >= np.abs(orig) - 1e-5).all()

@@ -1,0 +1,80 @@
+"""Pallas prune24 kernel vs pure-jnp oracle, plus 2:4 invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import prune24, prune24_mask, ref
+
+SHAPES = [(4, 4), (8, 16), (16, 32), (128, 64), (96, 256), (3, 8), (1, 4)]
+
+
+def _rand(shape, seed=0, dtype=np.float32):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_matches_oracle(shape):
+    w = _rand(shape, seed=shape[0] * 100 + shape[1])
+    np.testing.assert_array_equal(np.asarray(prune24(w)), np.asarray(ref.prune24(w)))
+    np.testing.assert_array_equal(
+        np.asarray(prune24_mask(w)), np.asarray(ref.prune24_mask(w))
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_24_validity(shape):
+    """Every group of 4 has exactly 2 nonzeros in the mask."""
+    w = _rand(shape, seed=1)
+    m = np.asarray(prune24_mask(w))
+    groups = m.reshape(shape[0], shape[1] // 4, 4)
+    np.testing.assert_array_equal(groups.sum(-1), np.full(groups.shape[:-1], 2.0))
+
+
+def test_keeps_top2_magnitudes():
+    w = jnp.asarray([[1.0, -3.0, 2.0, -0.5], [0.0, 0.0, 5.0, 1.0]], jnp.float32)
+    out = np.asarray(prune24(w))
+    np.testing.assert_array_equal(out, [[0.0, -3.0, 2.0, 0.0], [0.0, 0.0, 5.0, 1.0]])
+
+
+def test_tie_break_lower_index():
+    w = jnp.asarray([[2.0, 2.0, 2.0, 2.0]], jnp.float32)
+    m = np.asarray(prune24_mask(w))
+    np.testing.assert_array_equal(m, [[1.0, 1.0, 0.0, 0.0]])
+
+
+def test_all_zero_group():
+    w = jnp.zeros((2, 8), jnp.float32)
+    m = np.asarray(prune24_mask(w))
+    assert (m.reshape(2, 2, 4).sum(-1) == 2).all()  # still a valid 2:4 pattern
+
+
+def test_negative_dominates_positive():
+    w = jnp.asarray([[-10.0, 1.0, -9.0, 2.0]], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(prune24(w)), [[-10.0, 0.0, -9.0, 0.0]])
+
+
+def test_rejects_bad_width():
+    with pytest.raises(Exception):
+        prune24(jnp.zeros((4, 6), jnp.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 33),
+    groups=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_sweep(rows, groups, seed):
+    """Hypothesis sweep: kernel == oracle and pruning is idempotent."""
+    w = _rand((rows, groups * 4), seed=seed)
+    out = np.asarray(prune24(w))
+    np.testing.assert_array_equal(out, np.asarray(ref.prune24(w)))
+    # idempotence: pruning a pruned matrix changes nothing
+    np.testing.assert_array_equal(np.asarray(prune24(jnp.asarray(out))), out)
+    # magnitude optimality per group: kept L1 >= any other 2-subset
+    g = np.abs(np.asarray(w)).reshape(rows, groups, 4)
+    kept = np.abs(out).reshape(rows, groups, 4).sum(-1)
+    best2 = np.sort(g, axis=-1)[..., 2:].sum(-1)
+    np.testing.assert_allclose(kept, best2, rtol=1e-6)

@@ -1,0 +1,76 @@
+"""Pallas masked-matmul (2:4-spMM stand-in) vs plain jnp contraction."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.spmm import masked_matmul_nn, masked_matmul_nt
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("p,q,r", [(4, 8, 4), (8, 16, 12), (32, 64, 48), (6, 20, 10)])
+def test_nt_matches_reference(p, q, r):
+    x, w = _rand((p, q), seed=p), _rand((r, q), seed=q)
+    # transposable masks need 4x4-aligned dims; fall back to row-wise 2:4
+    m = ref.transposable_mask(w) if r % 4 == 0 and q % 4 == 0 \
+        else ref.prune24_mask(w)
+    np.testing.assert_allclose(
+        np.asarray(masked_matmul_nt(x, w, m)), np.asarray(x @ (w * m).T), atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("p,q,r", [(4, 8, 4), (16, 32, 24)])
+def test_nn_matches_reference(p, q, r):
+    g, w = _rand((p, r), seed=r), _rand((r, q), seed=p)
+    m = ref.prune24_mask(w)
+    np.testing.assert_allclose(
+        np.asarray(masked_matmul_nn(g, w, m)), np.asarray(g @ (w * m)), atol=1e-4
+    )
+
+
+def test_all_ones_mask_is_dense_matmul():
+    x, w = _rand((8, 16), seed=1), _rand((12, 16), seed=2)
+    m = jnp.ones_like(w)
+    np.testing.assert_allclose(
+        np.asarray(masked_matmul_nt(x, w, m)), np.asarray(x @ w.T), atol=1e-4
+    )
+
+
+def test_zero_mask_zeroes_output():
+    x, w = _rand((4, 8), seed=3), _rand((4, 8), seed=4)
+    out = masked_matmul_nt(x, w, jnp.zeros_like(w))
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((4, 4)))
+
+
+def test_sparsity_actually_applied():
+    """Output must depend only on unmasked weights."""
+    x, w = _rand((4, 8), seed=5), _rand((4, 8), seed=6)
+    m = ref.prune24_mask(w)
+    w2 = w + 100.0 * (1.0 - m)  # perturb only masked entries
+    np.testing.assert_allclose(
+        np.asarray(masked_matmul_nt(x, w, m)),
+        np.asarray(masked_matmul_nt(x, w2, m)),
+        atol=1e-4,
+    )
+
+
+def test_shape_mismatch_rejected():
+    with pytest.raises(Exception):
+        masked_matmul_nt(_rand((4, 8)), _rand((4, 12)), jnp.ones((4, 12)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.integers(1, 16), qg=st.integers(1, 8), r=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_sweep(p, qg, r, seed):
+    q = qg * 4
+    x, w = _rand((p, q), seed=seed), _rand((r, q), seed=seed ^ 1)
+    m = ref.prune24_mask(w)
+    np.testing.assert_allclose(
+        np.asarray(masked_matmul_nt(x, w, m)), np.asarray(x @ (w * m).T), atol=1e-3
+    )

@@ -1,0 +1,91 @@
+"""Transposable-mask search: Pallas kernel vs oracle, optimality, validity."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, transposable_mask
+
+SHAPES = [(4, 4), (8, 8), (16, 32), (64, 128), (12, 20)]
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+def _blocks(m):
+    r, q = m.shape
+    return m.reshape(r // 4, 4, q // 4, 4).transpose(0, 2, 1, 3).reshape(-1, 4, 4)
+
+
+def test_pattern_bank_has_90_unique_valid_patterns():
+    pats = np.asarray(ref.transposable_patterns())
+    assert pats.shape == (90, 4, 4)
+    assert len({p.tobytes() for p in pats}) == 90
+    np.testing.assert_array_equal(pats.sum(1), np.full((90, 4), 2))
+    np.testing.assert_array_equal(pats.sum(2), np.full((90, 4), 2))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_matches_oracle(shape):
+    w = _rand(shape, seed=shape[0] + shape[1])
+    np.testing.assert_array_equal(
+        np.asarray(transposable_mask(w)), np.asarray(ref.transposable_mask(w))
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_transposable_validity(shape):
+    """2 ones per row AND per column of every 4x4 block (paper Fig. 8)."""
+    m = np.asarray(transposable_mask(_rand(shape, seed=3)))
+    for b in _blocks(m):
+        np.testing.assert_array_equal(b.sum(0), [2, 2, 2, 2])
+        np.testing.assert_array_equal(b.sum(1), [2, 2, 2, 2])
+
+
+def test_mask_and_its_transpose_are_24():
+    """Eq. 5: M and M^T both satisfy row-wise 2:4."""
+    w = _rand((16, 16), seed=7)
+    m = np.asarray(transposable_mask(w))
+    for mat in (m, m.T):
+        g = mat.reshape(mat.shape[0], mat.shape[1] // 4, 4)
+        np.testing.assert_array_equal(g.sum(-1), np.full(g.shape[:-1], 2.0))
+
+
+def test_exhaustive_optimality_vs_brute_force():
+    """argmax over the bank == brute force over all 90 patterns."""
+    w = _rand((8, 8), seed=11)
+    m = np.asarray(ref.transposable_mask(w))
+    pats = np.asarray(ref.transposable_patterns())
+    for b, mb in zip(_blocks(np.abs(np.asarray(w))), _blocks(m)):
+        best = max((pats[k] * b).sum() for k in range(90))
+        np.testing.assert_allclose((mb * b).sum(), best, rtol=1e-6)
+
+
+def test_dominates_2approx():
+    """Conv search retains >= the 2-approximation's L1 norm (paper Table 3)."""
+    w = _rand((32, 32), seed=13)
+    absw = np.abs(np.asarray(w))
+    ours = (np.asarray(ref.transposable_mask(w)) * absw).sum()
+    approx = (np.asarray(ref.transposable_mask_2approx(w)) * absw).sum()
+    assert ours >= approx - 1e-5
+    # and the 2-approximation guarantee holds
+    assert approx >= 0.5 * ours - 1e-5
+
+
+def test_2approx_is_valid_transposable():
+    m = np.asarray(ref.transposable_mask_2approx(_rand((16, 24), seed=17)))
+    for b in _blocks(m):
+        np.testing.assert_array_equal(b.sum(0), [2, 2, 2, 2])
+        np.testing.assert_array_equal(b.sum(1), [2, 2, 2, 2])
+
+
+@settings(max_examples=10, deadline=None)
+@given(br=st.integers(1, 8), bq=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_property_sweep(br, bq, seed):
+    w = _rand((br * 4, bq * 4), seed=seed)
+    m = np.asarray(transposable_mask(w))
+    np.testing.assert_array_equal(m, np.asarray(ref.transposable_mask(w)))
+    for b in _blocks(m):
+        assert (b.sum(0) == 2).all() and (b.sum(1) == 2).all()

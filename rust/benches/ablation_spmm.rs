@@ -1,0 +1,91 @@
+//! Ablation bench for DESIGN.md's substrate choices: where does the 2:4
+//! speedup come from, and what do the overheads cost?
+//!
+//!  * spMM vs dense GEMM per GEMM variant (nt / nn / tn) — isolates the
+//!    half-MAC effect from the FFN composition;
+//!  * compression (prune+pack) cost vs matrix size — the paper's per-step
+//!    "prune weights" overhead;
+//!  * MVUE estimator cost vs exact ∇Z^T X — the per-step gradient
+//!    sparsification overhead (Table 13's MVUE+PRUNE row).
+//!
+//! Run: cargo bench --bench ablation_spmm
+
+use std::time::Duration;
+
+use sparse24::sparse::gemm::{gemm_nn, gemm_nt, gemm_tn};
+use sparse24::sparse::mvue::mvue24;
+use sparse24::sparse::spmm::{spmm_nn, spmm_nt, spmm_tn, Compressed24};
+use sparse24::sparse::transposable::transposable_mask;
+use sparse24::tensor::Tensor;
+use sparse24::util::bench::bench_val;
+use sparse24::util::rng::Rng;
+use sparse24::util::write_csv;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = Duration::from_millis(if quick { 60 } else { 400 });
+    let sizes: &[(usize, usize, usize)] = if quick {
+        &[(128, 256, 512)]
+    } else {
+        // (p tokens, d, r)
+        &[(512, 256, 1024), (1024, 512, 2048), (2048, 768, 3072)]
+    };
+    let mut rows = Vec::new();
+    println!("{:<24} {:>11} {:>11} {:>8}", "op @ (p,d,r)", "dense ms", "sparse ms", "S");
+    for &(p, d, r) in sizes {
+        let mut rng = Rng::new((p + d) as u64);
+        let x = Tensor::normal(&[p, d], 0.5, &mut rng);
+        let w = Tensor::normal(&[r, d], 0.5, &mut rng);
+        let m = transposable_mask(&w);
+        let wm = m.apply(&w);
+        let wc = Compressed24::from_masked(&w, &m);
+        let g = Tensor::normal(&[p, r], 0.5, &mut rng);
+
+        // forward GEMM: Z = X W^T
+        let dn = bench_val(|| gemm_nt(&x, &wm), budget).median_s();
+        let sp = bench_val(|| spmm_nt(&x, &wc), budget).median_s();
+        println!("{:<24} {:>11.3} {:>11.3} {:>7.2}x",
+                 format!("nt  ({p},{d},{r})"), dn * 1e3, sp * 1e3, dn / sp);
+        rows.push(vec![0.0, p as f64, d as f64, r as f64, dn * 1e3, sp * 1e3, dn / sp]);
+
+        // input-grad GEMM: dX = G W
+        let dn = bench_val(|| gemm_nn(&g, &wm), budget).median_s();
+        let sp = bench_val(|| spmm_nn(&g, &wc), budget).median_s();
+        println!("{:<24} {:>11.3} {:>11.3} {:>7.2}x",
+                 format!("nn  ({p},{d},{r})"), dn * 1e3, sp * 1e3, dn / sp);
+        rows.push(vec![1.0, p as f64, d as f64, r as f64, dn * 1e3, sp * 1e3, dn / sp]);
+
+        // weight-grad GEMM: dW = S(G^T) X — sparse path includes MVUE
+        let gt = g.t();
+        let dn = bench_val(|| gemm_tn(&g, &x), budget).median_s();
+        let mut mrng = Rng::new(7);
+        let sp = bench_val(
+            || {
+                let s = mvue24(&gt, &mut mrng);
+                spmm_tn(&sparse24::sparse::ffn::compress_sparse24(&s), &x)
+            },
+            budget,
+        )
+        .median_s();
+        println!("{:<24} {:>11.3} {:>11.3} {:>7.2}x",
+                 format!("tn+mvue ({p},{d},{r})"), dn * 1e3, sp * 1e3, dn / sp);
+        rows.push(vec![2.0, p as f64, d as f64, r as f64, dn * 1e3, sp * 1e3, dn / sp]);
+
+        // overheads alone
+        let compress = bench_val(|| Compressed24::from_masked(&w, &m), budget).median_s();
+        let mvue_only = bench_val(|| mvue24(&gt, &mut Rng::new(9)), budget).median_s();
+        println!("{:<24} {:>11} {:>11.3}    -", format!("compress ({r},{d})"), "-",
+                 compress * 1e3);
+        println!("{:<24} {:>11} {:>11.3}    -", format!("mvue ({r},{p})"), "-",
+                 mvue_only * 1e3);
+        rows.push(vec![3.0, p as f64, d as f64, r as f64, 0.0, compress * 1e3, 0.0]);
+        rows.push(vec![4.0, p as f64, d as f64, r as f64, 0.0, mvue_only * 1e3, 0.0]);
+    }
+    write_csv(
+        std::path::Path::new("results/ablation_spmm.csv"),
+        &["op", "p", "d", "r", "dense_ms", "sparse_ms", "speedup"],
+        &rows,
+    )
+    .unwrap();
+    println!("-> results/ablation_spmm.csv");
+}

@@ -1,0 +1,52 @@
+//! Figure 7 reproduction: acceleration ratio S = dense/sparse for (a) a
+//! single FFN layer across embedding widths d (n = 2048 tokens), and
+//! (b-d) a transformer block across d for n = 2048 / 1024 / 512.
+//! The paper's claims: FFN up to ~1.7x, block ~1.3x, S growing with d and
+//! with the FFN share of the block. The CPU substrate halves the spMM
+//! MACs like the sparse tensor core does, so those shapes should hold.
+//!
+//! Run: cargo bench --bench fig7_ffn_block
+
+use std::time::Duration;
+
+use sparse24::sparse::workloads::{block_speedup, ffn_speedup};
+use sparse24::util::write_csv;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = Duration::from_millis(if quick { 80 } else { 600 });
+    let mut rows = Vec::new();
+
+    println!("Fig. 7a: FFN layer speedup (tokens n=2048, r=4d, fwd+bwd+overheads)");
+    let ds: &[usize] = if quick { &[128, 256] } else { &[128, 256, 384, 512, 768] };
+    // n=1024 tokens: the 1-core substrate's wall-clock budget; the
+    // speedup-vs-d SHAPE is what reproduces Fig. 7a
+    let n_ffn = if quick { 256 } else { 1024 };
+    for &d in ds {
+        let (dt, st, s) = ffn_speedup(n_ffn, d, budget);
+        println!("  d={d:<5} dense {:>9.2} ms  sparse {:>9.2} ms  S={s:.3}", dt * 1e3, st * 1e3);
+        rows.push(vec![0.0, n_ffn as f64, d as f64, dt * 1e3, st * 1e3, s]);
+    }
+
+    let ns: &[usize] = if quick { &[128] } else { &[1024, 512, 256] };
+    let bds: &[usize] = if quick { &[128] } else { &[256, 384, 512] };
+    for &n in ns {
+        println!("Fig. 7{}: transformer block speedup (n={n})",
+                 match n { 1024 => "b", 512 => "c", _ => "d" });
+        for &d in bds {
+            let heads = (d / 64).max(1);
+            let (dt, st, s) = block_speedup(1, n, d, heads, budget);
+            println!("  d={d:<5} dense {:>9.2} ms  sparse {:>9.2} ms  S={s:.3}",
+                     dt * 1e3, st * 1e3);
+            rows.push(vec![1.0, n as f64, d as f64, dt * 1e3, st * 1e3, s]);
+        }
+    }
+
+    write_csv(
+        std::path::Path::new("results/fig7_speedup.csv"),
+        &["series", "n", "d", "dense_ms", "sparse_ms", "speedup"],
+        &rows,
+    )
+    .unwrap();
+    println!("-> results/fig7_speedup.csv");
+}

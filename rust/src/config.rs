@@ -1,0 +1,498 @@
+//! Config system: a TOML-subset parser + typed training configuration.
+//!
+//! Supports the subset the launcher needs — `[section]` headers,
+//! `key = value` with string/int/float/bool values, `#` comments — parsed
+//! into typed configs with per-field defaults, so runs are fully described
+//! by a checked-in file (see `configs/*.toml`) plus CLI overrides.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::optim::DecayPlacement;
+
+// ---------------------------------------------------------------------------
+// TOML-subset parsing
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// section -> key -> value
+pub type Table = BTreeMap<String, BTreeMap<String, Value>>;
+
+pub fn parse_toml(text: &str) -> Result<Table> {
+    let mut table: Table = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: malformed section {line:?}", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            table.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value, got {line:?}", lineno + 1);
+        };
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim())
+            .with_context(|| format!("line {}", lineno + 1))?;
+        table.entry(section.clone()).or_default().insert(key, val);
+    }
+    Ok(table)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            bail!("unterminated string {s:?}");
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn get<'a>(t: &'a Table, section: &str, key: &str) -> Option<&'a Value> {
+    t.get(section).and_then(|s| s.get(key))
+}
+
+// ---------------------------------------------------------------------------
+// Typed training configuration
+// ---------------------------------------------------------------------------
+
+/// Which 2:4 training method a run uses (the rows of Tables 5/9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// dense baseline
+    Dense,
+    /// the paper's full method: masked decay on gradients + MVUE +
+    /// dense fine-tuning tail
+    Ours,
+    /// plain STE (λ = 0, no MVUE control) — flip-rate explosion baseline
+    Ste,
+    /// SR-STE: masked decay on WEIGHTS (Eq. 8)
+    SrSte,
+    /// STEP-like: dense PRE-training head then sparse (Lu et al. 2023)
+    Step,
+    /// 'Half': dense model with d_ff halved (uses the *_half artifacts)
+    Half,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "dense" => Method::Dense,
+            "ours" => Method::Ours,
+            "ste" => Method::Ste,
+            "srste" | "sr-ste" => Method::SrSte,
+            "step" => Method::Step,
+            "half" => Method::Half,
+            _ => bail!("unknown method {s:?}"),
+        })
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        !matches!(self, Method::Dense | Method::Half)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// manifest/config name (must exist under artifacts/)
+    pub model: String,
+    pub artifacts_dir: String,
+    pub steps: usize,
+    /// gradient-accumulation microbatches per optimizer step (paper's m)
+    pub grad_accum: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub min_lr: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    pub method: Method,
+    /// masked-decay factor λ_W (§4.2/4.3)
+    pub lambda_w: f32,
+    /// decay placement (ours: gradients; SR-STE: weights)
+    pub decay_placement: DecayPlacementCfg,
+    /// transposable-mask refresh interval l (§5.3; paper uses 40)
+    pub mask_update_interval: usize,
+    /// dense fine-tuning tail fraction (§4.4; paper uses 1/6)
+    pub dense_ft_fraction: f64,
+    /// dense pre-training head fraction (STEP baseline; 0 for ours)
+    pub dense_pre_fraction: f64,
+    /// use the MVUE step artifact (vs plain-STE backward)
+    pub mvue: bool,
+    /// data source: "synthetic" or "tiny"
+    pub data: String,
+    /// flip-rate sampling interval (steps)
+    pub flip_interval: usize,
+    /// eval (val-loss) interval in steps; 0 = never
+    pub eval_interval: usize,
+    /// number of eval microbatches to average
+    pub eval_batches: usize,
+    /// simulated data-parallel worker count
+    pub workers: usize,
+    /// LR schedule kind: "cosine" (warmup-cosine), "const", "inv_sqrt"
+    pub lr_schedule: String,
+}
+
+/// Serializable decay placement (λ filled in from `lambda_w`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecayPlacementCfg {
+    None,
+    Gradients,
+    Weights,
+}
+
+impl DecayPlacementCfg {
+    pub fn with_lambda(self, lambda: f32) -> DecayPlacement {
+        match self {
+            DecayPlacementCfg::None => DecayPlacement::None,
+            DecayPlacementCfg::Gradients => DecayPlacement::OnGradients(lambda),
+            DecayPlacementCfg::Weights => DecayPlacement::OnWeights(lambda),
+        }
+    }
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "nano".into(),
+            artifacts_dir: "artifacts".into(),
+            steps: 200,
+            grad_accum: 1,
+            lr: 1e-3,
+            warmup: 20,
+            min_lr: 1e-4,
+            weight_decay: 0.0,
+            seed: 0,
+            method: Method::Ours,
+            lambda_w: 6e-5,
+            decay_placement: DecayPlacementCfg::Gradients,
+            mask_update_interval: 40,
+            dense_ft_fraction: 1.0 / 6.0,
+            dense_pre_fraction: 0.0,
+            mvue: true,
+            data: "synthetic".into(),
+            flip_interval: 1,
+            eval_interval: 0,
+            eval_batches: 4,
+            workers: 1,
+            lr_schedule: "cosine".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_toml(text: &str) -> Result<TrainConfig> {
+        let t = parse_toml(text)?;
+        let mut c = TrainConfig::default();
+        if let Some(v) = get(&t, "model", "config") {
+            c.model = v.as_str()?.to_string();
+        }
+        if let Some(v) = get(&t, "model", "artifacts_dir") {
+            c.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = get(&t, "train", "steps") {
+            c.steps = v.as_usize()?;
+        }
+        if let Some(v) = get(&t, "train", "grad_accum") {
+            c.grad_accum = v.as_usize()?.max(1);
+        }
+        if let Some(v) = get(&t, "train", "lr") {
+            c.lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = get(&t, "train", "warmup") {
+            c.warmup = v.as_usize()?;
+        }
+        if let Some(v) = get(&t, "train", "min_lr") {
+            c.min_lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = get(&t, "train", "weight_decay") {
+            c.weight_decay = v.as_f64()? as f32;
+        }
+        if let Some(v) = get(&t, "train", "seed") {
+            c.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = get(&t, "train", "eval_interval") {
+            c.eval_interval = v.as_usize()?;
+        }
+        if let Some(v) = get(&t, "train", "eval_batches") {
+            c.eval_batches = v.as_usize()?.max(1);
+        }
+        if let Some(v) = get(&t, "train", "workers") {
+            c.workers = v.as_usize()?.max(1);
+        }
+        if let Some(v) = get(&t, "train", "lr_schedule") {
+            c.lr_schedule = v.as_str()?.to_string();
+        }
+        if let Some(v) = get(&t, "sparse", "method") {
+            c.method = Method::parse(v.as_str()?)?;
+        }
+        if let Some(v) = get(&t, "sparse", "lambda") {
+            c.lambda_w = v.as_f64()? as f32;
+        }
+        if let Some(v) = get(&t, "sparse", "decay") {
+            c.decay_placement = match v.as_str()? {
+                "none" => DecayPlacementCfg::None,
+                "gradients" => DecayPlacementCfg::Gradients,
+                "weights" => DecayPlacementCfg::Weights,
+                other => bail!("unknown decay placement {other:?}"),
+            };
+        }
+        if let Some(v) = get(&t, "sparse", "mask_update_interval") {
+            c.mask_update_interval = v.as_usize()?.max(1);
+        }
+        if let Some(v) = get(&t, "sparse", "dense_ft_fraction") {
+            c.dense_ft_fraction = v.as_f64()?;
+        }
+        if let Some(v) = get(&t, "sparse", "dense_pre_fraction") {
+            c.dense_pre_fraction = v.as_f64()?;
+        }
+        if let Some(v) = get(&t, "sparse", "mvue") {
+            c.mvue = v.as_bool()?;
+        }
+        if let Some(v) = get(&t, "sparse", "flip_interval") {
+            c.flip_interval = v.as_usize()?.max(1);
+        }
+        if let Some(v) = get(&t, "data", "kind") {
+            c.data = v.as_str()?.to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn from_file(path: &Path) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Enforce method semantics (the baselines of Tables 5/9): plain STE
+    /// has no masked decay and no MVUE; SR-STE decays on weights. Called
+    /// by the trainer so examples cannot mislabel baselines.
+    pub fn normalize(&mut self) {
+        match self.method {
+            Method::Ste => {
+                self.decay_placement = DecayPlacementCfg::None;
+                self.mvue = false;
+                self.dense_ft_fraction = 0.0;
+                self.dense_pre_fraction = 0.0;
+            }
+            Method::SrSte => {
+                self.decay_placement = DecayPlacementCfg::Weights;
+            }
+            Method::Ours => {
+                if self.decay_placement == DecayPlacementCfg::None {
+                    self.decay_placement = DecayPlacementCfg::Gradients;
+                }
+            }
+            Method::Step => {
+                if self.dense_pre_fraction == 0.0 {
+                    self.dense_pre_fraction = 0.3;
+                }
+                self.dense_ft_fraction = 0.0;
+            }
+            Method::Dense | Method::Half => {}
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=0.9).contains(&self.dense_ft_fraction) {
+            bail!("dense_ft_fraction {} out of [0, 0.9]", self.dense_ft_fraction);
+        }
+        if !(0.0..=0.9).contains(&self.dense_pre_fraction) {
+            bail!("dense_pre_fraction {} out of [0, 0.9]", self.dense_pre_fraction);
+        }
+        if self.dense_ft_fraction + self.dense_pre_fraction > 0.95 {
+            bail!("dense head+tail cover nearly the whole run");
+        }
+        if !matches!(self.data.as_str(), "synthetic" | "tiny") {
+            bail!("unknown data kind {:?}", self.data);
+        }
+        if !matches!(self.lr_schedule.as_str(), "cosine" | "const" | "inv_sqrt") {
+            bail!("unknown lr_schedule {:?}", self.lr_schedule);
+        }
+        if self.lambda_w < 0.0 {
+            bail!("negative lambda");
+        }
+        Ok(())
+    }
+
+    /// Step at which dense fine-tuning starts (t_s; §4.4).
+    pub fn dense_ft_start(&self) -> usize {
+        if !self.method.is_sparse() || self.dense_ft_fraction <= 0.0 {
+            return self.steps;
+        }
+        self.steps - ((self.steps as f64) * self.dense_ft_fraction) as usize
+    }
+
+    /// Steps of dense pre-training at the start (STEP baseline).
+    pub fn dense_pre_end(&self) -> usize {
+        ((self.steps as f64) * self.dense_pre_fraction) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# full run config
+[model]
+config = "e2e"
+
+[train]
+steps = 600
+grad_accum = 2
+lr = 0.001   # peak
+seed = 3
+
+[sparse]
+method = "ours"
+lambda = 6e-5
+decay = "gradients"
+mask_update_interval = 40
+dense_ft_fraction = 0.1667
+
+[data]
+kind = "synthetic"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let c = TrainConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(c.model, "e2e");
+        assert_eq!(c.steps, 600);
+        assert_eq!(c.grad_accum, 2);
+        assert!((c.lr - 1e-3).abs() < 1e-9);
+        assert_eq!(c.method, Method::Ours);
+        assert!((c.lambda_w - 6e-5).abs() < 1e-12);
+        assert_eq!(c.mask_update_interval, 40);
+        assert_eq!(c.dense_ft_start(), 600 - 100);
+    }
+
+    #[test]
+    fn defaults_cover_missing_sections() {
+        let c = TrainConfig::from_toml("[train]\nsteps = 10\n").unwrap();
+        assert_eq!(c.steps, 10);
+        assert_eq!(c.model, "nano");
+        assert_eq!(c.mask_update_interval, 40);
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let t = parse_toml("a = \"x # not a comment\" # real comment\n").unwrap();
+        assert_eq!(t[""]["a"], Value::Str("x # not a comment".into()));
+    }
+
+    #[test]
+    fn value_types() {
+        let t = parse_toml("i = 3\nf = 2.5\nb = true\ns = \"hi\"\n").unwrap();
+        assert_eq!(t[""]["i"], Value::Int(3));
+        assert_eq!(t[""]["f"], Value::Float(2.5));
+        assert_eq!(t[""]["b"], Value::Bool(true));
+        assert_eq!(t[""]["s"], Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("keyonly\n").is_err());
+        assert!(parse_toml("x = @bad\n").is_err());
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("ours").unwrap(), Method::Ours);
+        assert_eq!(Method::parse("sr-ste").unwrap(), Method::SrSte);
+        assert!(Method::parse("magic").is_err());
+        assert!(Method::Ours.is_sparse());
+        assert!(!Method::Half.is_sparse());
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let mut c = TrainConfig::default();
+        c.dense_ft_fraction = 0.95;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.data = "c4".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dense_method_never_switches() {
+        let mut c = TrainConfig::default();
+        c.method = Method::Dense;
+        c.steps = 100;
+        assert_eq!(c.dense_ft_start(), 100);
+    }
+}

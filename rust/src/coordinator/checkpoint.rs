@@ -1,0 +1,292 @@
+//! Checkpointing: full-fidelity save/resume of a training run.
+//!
+//! Format (versioned, single file):
+//!   magic  b"S24CKPT1"
+//!   u64 LE header length, then a JSON header (step, manifest name, mask
+//!     mode, per-monitor flip histories, batcher RNG states, Adam t's,
+//!     tensor layout), then raw little-endian blobs in order:
+//!   params f32 | adam m f32 | adam v f32 | masks u8.
+//!
+//! Resume is bit-exact: the data RNG states are captured, so an
+//! interrupted run continues on exactly the batch stream an uninterrupted
+//! run would have seen (tested in integration_trainer.rs).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sparse::mask::Mask;
+use crate::tensor::Tensor;
+use crate::util::json::{num, obj, Json};
+
+const MAGIC: &[u8; 8] = b"S24CKPT1";
+
+/// Everything needed to resume a run (trainer state minus the compiled
+/// executables, which are rebuilt from the artifacts).
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub manifest_name: String,
+    pub step: usize,
+    pub sparse_steps_since_refresh: usize,
+    pub refresh_count: usize,
+    pub mask_mode_ones: bool,
+    pub params: Vec<Tensor>,
+    pub opt_m: Vec<Vec<f32>>,
+    pub opt_v: Vec<Vec<f32>>,
+    pub opt_t: Vec<u64>,
+    pub masks: Vec<Mask>,
+    pub flip_histories: Vec<Vec<f64>>,
+    pub train_rng: [u64; 4],
+    pub val_rng: [u64; 4],
+}
+
+fn u64s_json(v: &[u64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Str(format!("{x}"))).collect())
+}
+
+fn u64s_from_json(j: &Json) -> Result<Vec<u64>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| Ok(e.as_str()?.parse::<u64>()?))
+        .collect()
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = obj(vec![
+            ("manifest", Json::Str(self.manifest_name.clone())),
+            ("step", num(self.step as f64)),
+            ("since_refresh", num(self.sparse_steps_since_refresh as f64)),
+            ("refresh_count", num(self.refresh_count as f64)),
+            ("mask_mode_ones", Json::Bool(self.mask_mode_ones)),
+            (
+                "param_shapes",
+                Json::Arr(
+                    self.params
+                        .iter()
+                        .map(|t| Json::Arr(t.shape.iter().map(|&d| num(d as f64)).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "mask_shapes",
+                Json::Arr(
+                    self.masks
+                        .iter()
+                        .map(|m| Json::Arr(vec![num(m.rows as f64), num(m.cols as f64)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "opt_t",
+                Json::Arr(self.opt_t.iter().map(|&t| num(t as f64)).collect()),
+            ),
+            (
+                "flip_histories",
+                Json::Arr(
+                    self.flip_histories
+                        .iter()
+                        .map(|h| crate::util::json::arr_f64(h))
+                        .collect(),
+                ),
+            ),
+            ("train_rng", u64s_json(&self.train_rng)),
+            ("val_rng", u64s_json(&self.val_rng)),
+        ]);
+        let header_bytes = header.to_string().into_bytes();
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
+        f.write_all(&header_bytes)?;
+        for t in &self.params {
+            write_f32s(&mut f, &t.data)?;
+        }
+        for m in &self.opt_m {
+            write_f32s(&mut f, m)?;
+        }
+        for v in &self.opt_v {
+            write_f32s(&mut f, v)?;
+        }
+        for m in &self.masks {
+            f.write_all(&m.data)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a sparse24 checkpoint (bad magic)");
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let h = Json::parse(std::str::from_utf8(&hbytes)?)?;
+
+        let param_shapes: Vec<Vec<usize>> = h
+            .get("param_shapes")?
+            .as_arr()?
+            .iter()
+            .map(|s| s.as_usize_vec())
+            .collect::<Result<_>>()?;
+        let mask_shapes: Vec<Vec<usize>> = h
+            .get("mask_shapes")?
+            .as_arr()?
+            .iter()
+            .map(|s| s.as_usize_vec())
+            .collect::<Result<_>>()?;
+
+        let mut params = Vec::with_capacity(param_shapes.len());
+        for shape in &param_shapes {
+            params.push(Tensor::from_vec(shape, read_f32s(&mut f, shape.iter().product())?));
+        }
+        let mut opt_m = Vec::with_capacity(param_shapes.len());
+        for shape in &param_shapes {
+            opt_m.push(read_f32s(&mut f, shape.iter().product())?);
+        }
+        let mut opt_v = Vec::with_capacity(param_shapes.len());
+        for shape in &param_shapes {
+            opt_v.push(read_f32s(&mut f, shape.iter().product())?);
+        }
+        let mut masks = Vec::with_capacity(mask_shapes.len());
+        for shape in &mask_shapes {
+            let mut data = vec![0u8; shape[0] * shape[1]];
+            f.read_exact(&mut data)?;
+            masks.push(Mask { rows: shape[0], cols: shape[1], data });
+        }
+
+        let flip_histories = h
+            .get("flip_histories")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                Ok(a.as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64())
+                    .collect::<Result<Vec<f64>>>()?)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opt_t = h
+            .get("opt_t")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_usize()? as u64))
+            .collect::<Result<Vec<u64>>>()?;
+        let train_rng = u64s_from_json(h.get("train_rng")?)?;
+        let val_rng = u64s_from_json(h.get("val_rng")?)?;
+
+        Ok(Checkpoint {
+            manifest_name: h.get("manifest")?.as_str()?.to_string(),
+            step: h.get("step")?.as_usize()?,
+            sparse_steps_since_refresh: h.get("since_refresh")?.as_usize()?,
+            refresh_count: h.get("refresh_count")?.as_usize()?,
+            mask_mode_ones: h.get("mask_mode_ones")?.as_bool()?,
+            params,
+            opt_m,
+            opt_v,
+            opt_t,
+            masks,
+            flip_histories,
+            train_rng: train_rng.try_into().map_err(|_| anyhow::anyhow!("bad rng state"))?,
+            val_rng: val_rng.try_into().map_err(|_| anyhow::anyhow!("bad rng state"))?,
+        })
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, data: &[f32]) -> Result<()> {
+    // chunked LE encoding (avoids a full second buffer for big tensors)
+    let mut buf = Vec::with_capacity(64 * 1024);
+    for chunk in data.chunks(16 * 1024) {
+        buf.clear();
+        for &v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Rng::new(0);
+        Checkpoint {
+            manifest_name: "test_tiny".into(),
+            step: 17,
+            sparse_steps_since_refresh: 3,
+            refresh_count: 4,
+            mask_mode_ones: false,
+            params: vec![
+                Tensor::normal(&[4, 8], 0.1, &mut rng),
+                Tensor::normal(&[8], 1.0, &mut rng),
+            ],
+            opt_m: vec![vec![0.5; 32], vec![-0.25; 8]],
+            opt_v: vec![vec![0.01; 32], vec![0.02; 8]],
+            opt_t: vec![17, 17],
+            masks: vec![crate::sparse::mask::prune24_mask(&Tensor::normal(
+                &[4, 8],
+                1.0,
+                &mut Rng::new(1),
+            ))],
+            flip_histories: vec![vec![0.0, 0.1, 0.05]],
+            train_rng: [1, 2, 3, 4],
+            val_rng: [5, 6, 7, 8],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let ck = sample();
+        let dir = std::env::temp_dir().join("sparse24_ckpt_test");
+        let path = dir.join("a.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.manifest_name, ck.manifest_name);
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.opt_m, ck.opt_m);
+        assert_eq!(back.opt_v, ck.opt_v);
+        assert_eq!(back.opt_t, ck.opt_t);
+        assert_eq!(back.masks, ck.masks);
+        assert_eq!(back.flip_histories, ck.flip_histories);
+        assert_eq!(back.train_rng, ck.train_rng);
+        assert_eq!(back.val_rng, ck.val_rng);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("sparse24_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.ckpt");
+        std::fs::write(&path, b"NOTACKPT0000").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

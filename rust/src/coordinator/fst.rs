@@ -1,0 +1,136 @@
+//! FST controller: per-layer transposable-mask state + flip instrumentation.
+//!
+//! Owns the 2:4 masks of every sparse parameter, refreshes them with the
+//! conv search every `l` optimizer steps (§5.3), switches them to all-ones
+//! for the dense phases (head of STEP, tail of dense fine-tuning), and
+//! samples flip rates per Definition 4.1 (on the magnitude masks of the
+//! dense master weights — the same monitor works for dense runs, where it
+//! is "virtual": computed but never applied).
+
+use anyhow::Result;
+
+use crate::model::ParamStore;
+use crate::runtime::Manifest;
+use crate::sparse::flip::FlipMonitor;
+use crate::sparse::mask::{prune24_mask, Mask};
+use crate::sparse::transposable::transposable_mask;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaskMode {
+    /// transposable 2:4 masks active (FST phase)
+    Sparse,
+    /// all-ones masks (dense phase / dense model)
+    Ones,
+}
+
+pub struct FstState {
+    /// indices into the param store, aligned with manifest.masks order
+    pub sparse_idx: Vec<usize>,
+    /// current masks fed to the step executable (one per sparse param)
+    pub masks: Vec<Mask>,
+    pub mode: MaskMode,
+    /// flip monitors on the magnitude masks of each sparse param
+    pub monitors: Vec<FlipMonitor>,
+    /// how many mask refreshes have run (diagnostics)
+    pub refresh_count: usize,
+}
+
+impl FstState {
+    pub fn new(manifest: &Manifest, params: &ParamStore, mode: MaskMode) -> Result<Self> {
+        let sparse_idx = manifest.sparse_param_indices();
+        let mut masks = Vec::with_capacity(sparse_idx.len());
+        for (&pi, mspec) in sparse_idx.iter().zip(&manifest.masks) {
+            let t = &params.tensors[pi];
+            anyhow::ensure!(
+                t.shape == mspec.shape,
+                "mask {} shape {:?} != param shape {:?}",
+                mspec.name,
+                mspec.shape,
+                t.shape
+            );
+            masks.push(match mode {
+                MaskMode::Sparse => transposable_mask(t),
+                MaskMode::Ones => Mask::ones(t.shape[0], t.shape[1]),
+            });
+        }
+        let monitors = sparse_idx.iter().map(|_| FlipMonitor::new()).collect();
+        Ok(FstState {
+            sparse_idx,
+            masks,
+            mode,
+            monitors,
+            refresh_count: if mode == MaskMode::Sparse { 1 } else { 0 },
+        })
+    }
+
+    /// Recompute all transposable masks from the current master weights.
+    pub fn refresh(&mut self, params: &ParamStore) {
+        for (k, &pi) in self.sparse_idx.iter().enumerate() {
+            self.masks[k] = transposable_mask(&params.tensors[pi]);
+        }
+        self.mode = MaskMode::Sparse;
+        self.refresh_count += 1;
+    }
+
+    /// Switch to all-ones masks (dense fine-tuning / dense pre-training).
+    pub fn set_ones(&mut self, params: &ParamStore) {
+        for (k, &pi) in self.sparse_idx.iter().enumerate() {
+            let t = &params.tensors[pi];
+            self.masks[k] = Mask::ones(t.shape[0], t.shape[1]);
+        }
+        self.mode = MaskMode::Ones;
+    }
+
+    /// Sample flip rates on the magnitude masks of the master weights;
+    /// returns the mean rate across sparse params.
+    pub fn observe_flips(&mut self, params: &ParamStore) -> f64 {
+        let mut total = 0.0;
+        for (k, &pi) in self.sparse_idx.iter().enumerate() {
+            total += self.monitors[k].observe(&params.tensors[pi]);
+        }
+        if self.sparse_idx.is_empty() {
+            0.0
+        } else {
+            total / self.sparse_idx.len() as f64
+        }
+    }
+
+    /// Mean flip rate over the last `n` observations, across params.
+    pub fn mean_flip_over(&self, n: usize) -> f64 {
+        if self.monitors.is_empty() {
+            return 0.0;
+        }
+        self.monitors.iter().map(|m| m.mean_over(n)).sum::<f64>()
+            / self.monitors.len() as f64
+    }
+
+    /// Masks as f32 tensors in manifest order (executable inputs).
+    pub fn mask_tensors(&self) -> Vec<Tensor> {
+        self.masks.iter().map(|m| m.to_tensor()).collect()
+    }
+
+    /// Mask of the k-th sparse param (by position in the mask list).
+    pub fn mask_for_param(&self, param_idx: usize) -> Option<&Mask> {
+        self.sparse_idx
+            .iter()
+            .position(|&pi| pi == param_idx)
+            .map(|k| &self.masks[k])
+    }
+
+    /// Sparsity check: in Sparse mode all masks are valid transposable.
+    pub fn all_valid(&self) -> bool {
+        match self.mode {
+            MaskMode::Ones => true,
+            MaskMode::Sparse => self.masks.iter().all(|m| m.is_transposable()),
+        }
+    }
+}
+
+/// Magnitude-mask flip observation for an arbitrary tensor (used by the
+/// tuner's dense-baseline stream without any FstState).
+pub fn magnitude_mask(w: &Tensor) -> Mask {
+    prune24_mask(w)
+}
+
+// Tests live in rust/tests/integration_trainer.rs (need a manifest on disk).

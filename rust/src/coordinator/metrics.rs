@@ -1,0 +1,220 @@
+//! Training metrics: per-step log, CSV emitters, and the Table-13-style
+//! component profile.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::write_csv;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    DensePre,
+    Sparse,
+    DenseFt,
+    Dense,
+}
+
+impl Phase {
+    pub fn code(&self) -> f64 {
+        match self {
+            Phase::DensePre => 0.0,
+            Phase::Sparse => 1.0,
+            Phase::DenseFt => 2.0,
+            Phase::Dense => 3.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+    pub flip_rate: f64,
+    pub phase: Phase,
+    pub step_ms: f64,
+    pub val_loss: Option<f64>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    pub rows: Vec<StepMetrics>,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, m: StepMetrics) {
+        self.rows.push(m);
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.rows.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the final `frac` of steps ("avg epoch loss" proxy).
+    pub fn tail_loss(&self, frac: f64) -> f64 {
+        if self.rows.is_empty() {
+            return f64::NAN;
+        }
+        let n = ((self.rows.len() as f64 * frac) as usize).max(1);
+        let tail = &self.rows[self.rows.len() - n..];
+        tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn last_val_loss(&self) -> Option<f64> {
+        self.rows.iter().rev().find_map(|r| r.val_loss)
+    }
+
+    pub fn to_csv(&self, path: &Path) -> Result<()> {
+        let rows: Vec<Vec<f64>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.step as f64,
+                    r.loss,
+                    r.lr,
+                    r.flip_rate,
+                    r.phase.code(),
+                    r.step_ms,
+                    r.val_loss.unwrap_or(f64::NAN),
+                ]
+            })
+            .collect();
+        write_csv(
+            path,
+            &["step", "loss", "lr", "flip_rate", "phase", "step_ms", "val_loss"],
+            &rows,
+        )
+    }
+}
+
+/// Cumulative component timer — reproduces the Appendix-D profile rows
+/// (FWD GEMM, BWD GEMM, MVUE+PRUNE, masked decay, prune weights,
+/// transposable mask search, ...).
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    acc: BTreeMap<String, (Duration, u64)>,
+}
+
+impl Profile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        let e = self.acc.entry(name.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    pub fn total_ms(&self, name: &str) -> f64 {
+        self.acc.get(name).map(|(d, _)| d.as_secs_f64() * 1e3).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.acc.get(name).map(|&(_, c)| c).unwrap_or(0)
+    }
+
+    pub fn mean_ms(&self, name: &str) -> f64 {
+        let c = self.count(name);
+        if c == 0 {
+            0.0
+        } else {
+            self.total_ms(name) / c as f64
+        }
+    }
+
+    /// Pretty table (name, total ms, execs, ms/exec), sorted by total.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.acc.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+        let mut out = format!(
+            "{:<32} {:>12} {:>8} {:>12}\n",
+            "component", "total ms", "execs", "ms/exec"
+        );
+        for (name, (d, c)) in rows {
+            let ms = d.as_secs_f64() * 1e3;
+            out += &format!(
+                "{:<32} {:>12.2} {:>8} {:>12.4}\n",
+                name,
+                ms,
+                c,
+                ms / (*c).max(1) as f64
+            );
+        }
+        out
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.acc.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_tail_loss() {
+        let mut log = MetricsLog::new();
+        for (i, l) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            log.push(StepMetrics {
+                step: i,
+                loss: *l,
+                lr: 0.1,
+                flip_rate: 0.0,
+                phase: Phase::Sparse,
+                step_ms: 1.0,
+                val_loss: None,
+            });
+        }
+        assert_eq!(log.tail_loss(0.5), 1.5);
+        assert_eq!(log.last_loss(), Some(1.0));
+    }
+
+    #[test]
+    fn csv_emission() {
+        let mut log = MetricsLog::new();
+        log.push(StepMetrics {
+            step: 0,
+            loss: 2.0,
+            lr: 0.01,
+            flip_rate: 0.1,
+            phase: Phase::DenseFt,
+            step_ms: 5.0,
+            val_loss: Some(1.9),
+        });
+        let dir = std::env::temp_dir().join("sparse24_metrics_test");
+        let p = dir.join("m.csv");
+        log.to_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("step,loss,lr,"));
+        assert!(text.contains("1.9"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn profile_accumulates() {
+        let mut p = Profile::new();
+        p.time("op", || std::thread::sleep(Duration::from_millis(2)));
+        p.time("op", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(p.count("op"), 2);
+        assert!(p.total_ms("op") >= 4.0);
+        assert!(p.report().contains("op"));
+        assert_eq!(p.count("missing"), 0);
+    }
+}

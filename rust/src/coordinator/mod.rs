@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: FST mask state, the leader/worker execution
+//! engine, the pre-training loop, the decay-factor tuner, and metrics.
+
+pub mod checkpoint;
+pub mod fst;
+pub mod metrics;
+pub mod parallel;
+pub mod trainer;
+pub mod tuner;
+
+pub use checkpoint::Checkpoint;
+pub use fst::{FstState, MaskMode};
+pub use metrics::{MetricsLog, Phase, Profile, StepMetrics};
+pub use parallel::DataParallel;
+pub use trainer::Trainer;
+pub use tuner::{Tuner, TunerReport};

@@ -1,0 +1,276 @@
+//! Leader/worker execution engine (simulated data parallelism).
+//!
+//! The coordinator is structured as a leader plus N workers, each owning
+//! its own PJRT client + compiled executables (PJRT handles are not Send,
+//! so every worker constructs its runtime inside its own thread). The
+//! leader scatters microbatches round-robin, workers run the step
+//! executable on their shard, and the leader reduces (averages) the
+//! returned gradients — the all-reduce of a data-parallel trainer. With
+//! workers = 1 this degenerates to the plain single-process trainer, which
+//! is the honest configuration on this 1-core testbed; the tests run 2
+//! workers to exercise the scatter/reduce paths.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::Batch;
+use crate::runtime::{literal, Runtime};
+use crate::tensor::Tensor;
+
+enum Req {
+    Load { key: String, path: PathBuf },
+    /// run a step executable; returns loss + grads
+    Step {
+        key: String,
+        params: Arc<Vec<Tensor>>,
+        masks: Arc<Vec<Tensor>>,
+        batch: Batch,
+        seed: i32,
+        grad_shapes: Arc<Vec<Vec<usize>>>,
+    },
+    /// run the eval executable; returns loss only
+    Eval {
+        key: String,
+        params: Arc<Vec<Tensor>>,
+        masks: Arc<Vec<Tensor>>,
+        batch: Batch,
+    },
+    Shutdown,
+}
+
+enum Resp {
+    Loaded,
+    StepOut { loss: f32, grads: Vec<Tensor> },
+    EvalOut { loss: f32 },
+    Err(String),
+}
+
+struct Worker {
+    tx: Sender<Req>,
+    rx: Receiver<Resp>,
+    handle: Option<JoinHandle<()>>,
+}
+
+pub struct DataParallel {
+    workers: Vec<Worker>,
+}
+
+fn build_inputs(
+    params: &[Tensor],
+    masks: &[Tensor],
+    batch: &Batch,
+    seed: Option<i32>,
+) -> Result<Vec<xla::Literal>> {
+    let mut inputs = Vec::with_capacity(params.len() + masks.len() + 3);
+    for p in params {
+        inputs.push(literal::tensor_to_literal(p)?);
+    }
+    for m in masks {
+        inputs.push(literal::tensor_to_literal(m)?);
+    }
+    inputs.push(literal::i32_to_literal(&batch.tokens, &[batch.batch, batch.n])?);
+    inputs.push(literal::i32_to_literal(&batch.targets, &[batch.batch, batch.n])?);
+    if let Some(s) = seed {
+        inputs.push(literal::i32_scalar(s));
+    }
+    Ok(inputs)
+}
+
+fn worker_main(rx: Receiver<Req>, tx: Sender<Resp>) {
+    let mut runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = tx.send(Resp::Err(format!("worker client init: {e:#}")));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        let resp = match req {
+            Req::Shutdown => break,
+            Req::Load { key, path } => runtime
+                .load_hlo(&key, &path)
+                .map(|_| Resp::Loaded)
+                .unwrap_or_else(|e| Resp::Err(format!("{e:#}"))),
+            Req::Step { key, params, masks, batch, seed, grad_shapes } => {
+                (|| -> Result<Resp> {
+                    let inputs = build_inputs(&params, &masks, &batch, Some(seed))?;
+                    let outs = runtime.execute(&key, &inputs)?;
+                    anyhow::ensure!(outs.len() == 1 + grad_shapes.len(),
+                                    "step returned {} outputs", outs.len());
+                    let loss = literal::literal_to_f32(&outs[0])?;
+                    let mut grads = Vec::with_capacity(grad_shapes.len());
+                    for (lit, shape) in outs[1..].iter().zip(grad_shapes.iter()) {
+                        grads.push(literal::literal_to_tensor(lit, shape)?);
+                    }
+                    Ok(Resp::StepOut { loss, grads })
+                })()
+                .unwrap_or_else(|e| Resp::Err(format!("{e:#}")))
+            }
+            Req::Eval { key, params, masks, batch } => {
+                (|| -> Result<Resp> {
+                    let inputs = build_inputs(&params, &masks, &batch, None)?;
+                    let outs = runtime.execute(&key, &inputs)?;
+                    let loss = literal::literal_to_f32(&outs[0])?;
+                    Ok(Resp::EvalOut { loss })
+                })()
+                .unwrap_or_else(|e| Resp::Err(format!("{e:#}")))
+            }
+        };
+        if tx.send(resp).is_err() {
+            break;
+        }
+    }
+}
+
+impl DataParallel {
+    pub fn new(n_workers: usize) -> Result<Self> {
+        anyhow::ensure!(n_workers >= 1, "need at least one worker");
+        let mut workers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let (req_tx, req_rx) = channel::<Req>();
+            let (resp_tx, resp_rx) = channel::<Resp>();
+            let handle = std::thread::spawn(move || worker_main(req_rx, resp_tx));
+            workers.push(Worker { tx: req_tx, rx: resp_rx, handle: Some(handle) });
+        }
+        Ok(DataParallel { workers })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Compile an artifact on every worker.
+    pub fn load(&self, key: &str, path: &PathBuf) -> Result<()> {
+        for w in &self.workers {
+            w.tx
+                .send(Req::Load { key: key.to_string(), path: path.clone() })
+                .map_err(|_| anyhow!("worker channel closed"))?;
+        }
+        for w in &self.workers {
+            match w.rx.recv().context("worker died during load")? {
+                Resp::Loaded => {}
+                Resp::Err(e) => bail!("worker load failed: {e}"),
+                _ => bail!("unexpected worker response"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter microbatches across workers, reduce to (mean loss,
+    /// mean grads). `grad_shapes` describe the per-param outputs.
+    pub fn grad_step(
+        &self,
+        key: &str,
+        params: Arc<Vec<Tensor>>,
+        masks: Arc<Vec<Tensor>>,
+        batches: Vec<Batch>,
+        base_seed: i32,
+        grad_shapes: Arc<Vec<Vec<usize>>>,
+    ) -> Result<(f64, Vec<Tensor>)> {
+        anyhow::ensure!(!batches.is_empty(), "no microbatches");
+        let n_batches = batches.len();
+        // scatter round-robin
+        let mut counts = vec![0usize; self.workers.len()];
+        for (i, batch) in batches.into_iter().enumerate() {
+            let w = i % self.workers.len();
+            counts[w] += 1;
+            self.workers[w]
+                .tx
+                .send(Req::Step {
+                    key: key.to_string(),
+                    params: params.clone(),
+                    masks: masks.clone(),
+                    batch,
+                    seed: base_seed.wrapping_add(i as i32),
+                    grad_shapes: grad_shapes.clone(),
+                })
+                .map_err(|_| anyhow!("worker channel closed"))?;
+        }
+        // gather + reduce
+        let mut loss_sum = 0f64;
+        let mut grad_sum: Option<Vec<Tensor>> = None;
+        for (w, &c) in self.workers.iter().zip(&counts) {
+            for _ in 0..c {
+                match w.rx.recv().context("worker died during step")? {
+                    Resp::StepOut { loss, grads } => {
+                        loss_sum += loss as f64;
+                        match &mut grad_sum {
+                            None => grad_sum = Some(grads),
+                            Some(acc) => {
+                                for (a, g) in acc.iter_mut().zip(&grads) {
+                                    for (x, y) in a.data.iter_mut().zip(&g.data) {
+                                        *x += *y;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Resp::Err(e) => bail!("worker step failed: {e}"),
+                    _ => bail!("unexpected worker response"),
+                }
+            }
+        }
+        let mut grads = grad_sum.expect("at least one batch");
+        let scale = 1.0 / n_batches as f32;
+        for g in grads.iter_mut() {
+            for v in g.data.iter_mut() {
+                *v *= scale;
+            }
+        }
+        Ok((loss_sum / n_batches as f64, grads))
+    }
+
+    /// Mean eval loss over the given batches (scattered like grad_step).
+    pub fn eval(
+        &self,
+        key: &str,
+        params: Arc<Vec<Tensor>>,
+        masks: Arc<Vec<Tensor>>,
+        batches: Vec<Batch>,
+    ) -> Result<f64> {
+        anyhow::ensure!(!batches.is_empty(), "no eval batches");
+        let n = batches.len();
+        let mut counts = vec![0usize; self.workers.len()];
+        for (i, batch) in batches.into_iter().enumerate() {
+            let w = i % self.workers.len();
+            counts[w] += 1;
+            self.workers[w]
+                .tx
+                .send(Req::Eval {
+                    key: key.to_string(),
+                    params: params.clone(),
+                    masks: masks.clone(),
+                    batch,
+                })
+                .map_err(|_| anyhow!("worker channel closed"))?;
+        }
+        let mut sum = 0f64;
+        for (w, &c) in self.workers.iter().zip(&counts) {
+            for _ in 0..c {
+                match w.rx.recv().context("worker died during eval")? {
+                    Resp::EvalOut { loss } => sum += loss as f64,
+                    Resp::Err(e) => bail!("worker eval failed: {e}"),
+                    _ => bail!("unexpected worker response"),
+                }
+            }
+        }
+        Ok(sum / n as f64)
+    }
+}
+
+impl Drop for DataParallel {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Req::Shutdown);
+        }
+        for w in self.workers.iter_mut() {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}

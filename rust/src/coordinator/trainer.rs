@@ -1,0 +1,401 @@
+//! The pre-training loop — the Layer-3 coordinator proper.
+//!
+//! One optimizer step =
+//!   1. phase resolution (dense pre-train head | FST | dense fine-tune
+//!      tail, §4.4) and mask maintenance (transposable refresh every `l`
+//!      steps, §5.3);
+//!   2. scatter `grad_accum` microbatches to the leader/worker engine,
+//!      which executes the AOT step artifact (fwd + bwd, Eq. 2-4) and
+//!      reduces gradients;
+//!   3. AdamW update with masked decay (Eq. 10 on gradients — ours; Eq. 8
+//!      on weights — SR-STE baseline) on the sparse parameters;
+//!   4. flip-rate sampling (Definition 4.1) and metrics.
+//!
+//! Python never runs here: the artifacts were compiled once by
+//! `make artifacts`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::fst::{FstState, MaskMode};
+use crate::coordinator::metrics::{MetricsLog, Phase, Profile, StepMetrics};
+use crate::coordinator::parallel::DataParallel;
+use crate::data::{Batch, Batcher, SyntheticLm};
+use crate::model::ParamStore;
+use crate::optim::{AdamW, AdamWConfig, DecayPlacement, Schedule};
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub manifest: Manifest,
+    engine: DataParallel,
+    pub params: ParamStore,
+    opts: Vec<AdamW>,
+    pub fst: FstState,
+    pub batcher: Batcher,
+    schedule: Schedule,
+    pub metrics: MetricsLog,
+    pub profile: Profile,
+    grad_shapes: Arc<Vec<Vec<usize>>>,
+    pub step_idx: usize,
+    sparse_steps_since_refresh: usize,
+    /// cached f32 mask tensors (invalidated on mask refresh/mode change)
+    masks_cache: Option<Arc<Vec<Tensor>>>,
+}
+
+impl Trainer {
+    /// Manifest name a method trains (Half swaps in the *_half artifacts).
+    pub fn manifest_name(cfg: &TrainConfig) -> String {
+        match cfg.method {
+            Method::Half => format!("{}_half", cfg.model),
+            _ => cfg.model.clone(),
+        }
+    }
+
+    pub fn new(mut cfg: TrainConfig) -> Result<Self> {
+        cfg.normalize();
+        cfg.validate()?;
+        let dir = std::path::Path::new(&cfg.artifacts_dir);
+        let name = Self::manifest_name(&cfg);
+        let manifest = Manifest::load_config(dir, &name)
+            .with_context(|| format!("loading manifest for {name:?} — run `make artifacts`"))?;
+
+        let engine = DataParallel::new(cfg.workers)?;
+        for variant in Self::variants_needed(&cfg) {
+            let path = manifest.artifact_path(variant)?;
+            engine.load(variant, &path)?;
+        }
+
+        let params = ParamStore::init(&manifest, cfg.seed);
+        let opts = params
+            .tensors
+            .iter()
+            .zip(&manifest.params)
+            .map(|(t, spec)| {
+                // GPT-2 convention: decoupled weight decay on matrices only
+                let wd = if spec.shape.len() >= 2 { cfg.weight_decay } else { 0.0 };
+                AdamW::new(t.len(), AdamWConfig { weight_decay: wd, ..Default::default() })
+            })
+            .collect();
+
+        let initial_mode = if cfg.method.is_sparse() && cfg.dense_pre_fraction == 0.0 {
+            MaskMode::Sparse
+        } else {
+            MaskMode::Ones
+        };
+        let fst = FstState::new(&manifest, &params, initial_mode)?;
+
+        let batcher = Self::make_batcher(&cfg, &manifest)?;
+        let schedule = match cfg.lr_schedule.as_str() {
+            "const" => Schedule::Const { lr: cfg.lr },
+            "inv_sqrt" => Schedule::InverseSqrt { peak: cfg.lr, warmup: cfg.warmup },
+            _ => Schedule::WarmupCosine {
+                peak: cfg.lr,
+                warmup: cfg.warmup,
+                total: cfg.steps,
+                min_lr: cfg.min_lr,
+            },
+        };
+        let grad_shapes = Arc::new(
+            manifest.params.iter().map(|p| p.shape.clone()).collect::<Vec<_>>(),
+        );
+        Ok(Trainer {
+            cfg,
+            manifest,
+            engine,
+            params,
+            opts,
+            fst,
+            batcher,
+            schedule,
+            metrics: MetricsLog::new(),
+            profile: Profile::new(),
+            grad_shapes,
+            step_idx: 0,
+            sparse_steps_since_refresh: 0,
+            masks_cache: None,
+        })
+    }
+
+    /// Mask tensors for the executables, cached between refreshes (perf:
+    /// rebuilding them every step dominated the non-XLA step time).
+    fn masks_arc(&mut self) -> Arc<Vec<Tensor>> {
+        if self.masks_cache.is_none() {
+            self.masks_cache = Some(Arc::new(self.fst.mask_tensors()));
+        }
+        self.masks_cache.as_ref().unwrap().clone()
+    }
+
+    fn make_batcher(cfg: &TrainConfig, manifest: &Manifest) -> Result<Batcher> {
+        let vocab = manifest.config.vocab;
+        let b = manifest.batch;
+        let n = manifest.config.n_ctx;
+        let tokens = match cfg.data.as_str() {
+            "tiny" => crate::data::corpus::tiny_corpus(vocab, 200_000),
+            _ => {
+                let need = (cfg.steps * cfg.grad_accum * b * n / 2).clamp(100_000, 2_000_000);
+                let lm = SyntheticLm::new(vocab, cfg.seed ^ 0xDA7A);
+                lm.generate(need, &mut Rng::new(cfg.seed ^ 0x9E37))
+            }
+        };
+        Ok(Batcher::new(tokens, b, n, 0.05, cfg.seed))
+    }
+
+    fn variants_needed(cfg: &TrainConfig) -> Vec<&'static str> {
+        let mut v = vec!["eval"];
+        if cfg.method.is_sparse() {
+            v.push(if cfg.mvue { "step_sparse" } else { "step_ste" });
+            if cfg.dense_ft_fraction > 0.0 || cfg.dense_pre_fraction > 0.0 {
+                v.push("step_dense");
+            }
+        } else {
+            v.push("step_dense");
+        }
+        v
+    }
+
+    /// Phase of optimizer step `t` (§4.4 schedule).
+    pub fn phase_of(&self, t: usize) -> Phase {
+        if !self.cfg.method.is_sparse() {
+            return Phase::Dense;
+        }
+        if t < self.cfg.dense_pre_end() {
+            Phase::DensePre
+        } else if t >= self.cfg.dense_ft_start() {
+            Phase::DenseFt
+        } else {
+            Phase::Sparse
+        }
+    }
+
+    fn variant_of(&self, phase: Phase) -> &'static str {
+        match phase {
+            Phase::Sparse => {
+                if self.cfg.mvue {
+                    "step_sparse"
+                } else {
+                    "step_ste"
+                }
+            }
+            _ => "step_dense",
+        }
+    }
+
+    /// Mask maintenance at the start of step `t`.
+    fn maintain_masks(&mut self, phase: Phase) {
+        match phase {
+            Phase::Sparse => {
+                let due = self.fst.mode == MaskMode::Ones
+                    || self.sparse_steps_since_refresh >= self.cfg.mask_update_interval;
+                if due {
+                    let params = &self.params;
+                    let fst = &mut self.fst;
+                    self.profile.time("transposable_mask_search", || fst.refresh(params));
+                    self.sparse_steps_since_refresh = 0;
+                    self.masks_cache = None;
+                }
+                self.sparse_steps_since_refresh += 1;
+            }
+            _ => {
+                if self.fst.mode != MaskMode::Ones {
+                    self.fst.set_ones(&self.params);
+                    self.masks_cache = None;
+                }
+            }
+        }
+    }
+
+    /// One optimizer step; returns the mean microbatch loss.
+    pub fn step(&mut self) -> Result<f64> {
+        let t = self.step_idx;
+        let phase = self.phase_of(t);
+        self.maintain_masks(phase);
+        let variant = self.variant_of(phase);
+
+        // collect microbatches
+        let batches: Vec<Batch> =
+            (0..self.cfg.grad_accum).map(|_| self.batcher.next_train()).collect();
+        let params_arc = Arc::new(self.params.tensors.clone());
+        let masks_arc = self.masks_arc();
+        let base_seed = (t * self.cfg.grad_accum) as i32;
+
+        let t0 = Instant::now();
+        let (loss, grads) = self
+            .engine
+            .grad_step(variant, params_arc, masks_arc, batches, base_seed,
+                       self.grad_shapes.clone())
+            .with_context(|| format!("step {t} ({variant})"))?;
+        self.profile.add("step_execute", t0.elapsed());
+
+        // optimizer update with masked decay on sparse params (Eq. 10/8)
+        let lr = self.schedule.lr(t);
+        let decay_active = phase == Phase::Sparse;
+        let t1 = Instant::now();
+        for (i, (w, g)) in self.params.tensors.iter_mut().zip(&grads).enumerate() {
+            let placement = if decay_active && self.manifest.params[i].sparse {
+                self.cfg.decay_placement.with_lambda(self.cfg.lambda_w)
+            } else {
+                DecayPlacement::None
+            };
+            let mask = if matches!(placement, DecayPlacement::None) {
+                None
+            } else {
+                self.fst.mask_for_param(i)
+            };
+            self.opts[i].step(w, g, lr, placement, mask);
+        }
+        self.profile.add("optimizer_masked_decay", t1.elapsed());
+
+        // flip-rate sampling (Definition 4.1) on the updated weights
+        let flip = if t % self.cfg.flip_interval == 0 {
+            let params = &self.params;
+            let fst = &mut self.fst;
+            self.profile.time("flip_monitor", || fst.observe_flips(params))
+        } else {
+            self.fst.mean_flip_over(1)
+        };
+
+        let val_loss = if self.cfg.eval_interval > 0
+            && t % self.cfg.eval_interval == self.cfg.eval_interval - 1
+        {
+            Some(self.eval()?)
+        } else {
+            None
+        };
+
+        self.metrics.push(StepMetrics {
+            step: t,
+            loss,
+            lr: lr as f64,
+            flip_rate: flip,
+            phase,
+            step_ms: t0.elapsed().as_secs_f64() * 1e3,
+            val_loss,
+        });
+        self.step_idx += 1;
+        Ok(loss)
+    }
+
+    /// Mean validation loss under the CURRENT masks.
+    pub fn eval(&mut self) -> Result<f64> {
+        let batches: Vec<Batch> =
+            (0..self.cfg.eval_batches).map(|_| self.batcher.next_val()).collect();
+        let params_arc = Arc::new(self.params.tensors.clone());
+        let masks_arc = self.masks_arc();
+        self.engine.eval("eval", params_arc, masks_arc, batches)
+    }
+
+    /// Run the full configured schedule. `on_step(trainer, loss)` fires
+    /// after every optimizer step (progress printing, early stopping).
+    pub fn train_with(&mut self, mut on_step: impl FnMut(&Trainer, f64)) -> Result<()> {
+        while self.step_idx < self.cfg.steps {
+            let loss = self.step()?;
+            on_step(self, loss);
+        }
+        Ok(())
+    }
+
+    pub fn train(&mut self) -> Result<()> {
+        self.train_with(|_, _| {})
+    }
+
+    /// Run at most `n` further optimizer steps (checkpoint-interval
+    /// training: the LR/phase schedules still follow cfg.steps).
+    pub fn train_steps(&mut self, n: usize) -> Result<()> {
+        let upto = (self.step_idx + n).min(self.cfg.steps);
+        while self.step_idx < upto {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot the full training state (see `checkpoint.rs` for format).
+    pub fn checkpoint(&self) -> crate::coordinator::Checkpoint {
+        let (train_rng, val_rng) = self.batcher.rng_states();
+        crate::coordinator::Checkpoint {
+            manifest_name: Self::manifest_name(&self.cfg),
+            step: self.step_idx,
+            sparse_steps_since_refresh: self.sparse_steps_since_refresh,
+            refresh_count: self.fst.refresh_count,
+            mask_mode_ones: self.fst.mode == MaskMode::Ones,
+            params: self.params.tensors.clone(),
+            opt_m: self
+                .opts
+                .iter()
+                .map(|o| o.export_state().0.to_vec())
+                .collect(),
+            opt_v: self
+                .opts
+                .iter()
+                .map(|o| o.export_state().1.to_vec())
+                .collect(),
+            opt_t: self.opts.iter().map(|o| o.step_count()).collect(),
+            masks: self.fst.masks.clone(),
+            flip_histories: self.fst.monitors.iter().map(|m| m.history.clone()).collect(),
+            train_rng,
+            val_rng,
+        }
+    }
+
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        self.checkpoint().save(path)
+    }
+
+    /// Build a trainer from `cfg` and restore a checkpoint into it.
+    /// Resume is exact: params, optimizer moments, masks, flip histories
+    /// and the data-RNG streams all continue where they stopped.
+    pub fn resume(cfg: TrainConfig, path: &std::path::Path) -> Result<Trainer> {
+        let ck = crate::coordinator::Checkpoint::load(path)?;
+        let mut tr = Trainer::new(cfg)?;
+        anyhow::ensure!(
+            ck.manifest_name == Self::manifest_name(&tr.cfg),
+            "checkpoint is for {:?}, config wants {:?}",
+            ck.manifest_name,
+            Self::manifest_name(&tr.cfg)
+        );
+        anyhow::ensure!(ck.params.len() == tr.params.tensors.len(), "param count mismatch");
+        tr.params.tensors = ck.params;
+        for ((opt, m), (v, t)) in tr
+            .opts
+            .iter_mut()
+            .zip(&ck.opt_m)
+            .zip(ck.opt_v.iter().zip(&ck.opt_t))
+        {
+            opt.load_state(m, v, *t);
+        }
+        tr.fst.masks = ck.masks;
+        tr.fst.mode = if ck.mask_mode_ones { MaskMode::Ones } else { MaskMode::Sparse };
+        tr.fst.refresh_count = ck.refresh_count;
+        let params = &tr.params;
+        let fst = &mut tr.fst;
+        let sparse_idx = fst.sparse_idx.clone();
+        for ((mon, hist), &pi) in
+            fst.monitors.iter_mut().zip(ck.flip_histories).zip(&sparse_idx)
+        {
+            mon.history = hist;
+            mon.seed_from(&params.tensors[pi]);
+        }
+        tr.batcher.restore_rng(ck.train_rng, ck.val_rng);
+        tr.masks_cache = None;
+        tr.step_idx = ck.step;
+        tr.sparse_steps_since_refresh = ck.sparse_steps_since_refresh;
+        Ok(tr)
+    }
+
+    /// Gradient-only probe used by tests: one microbatch, no update.
+    pub fn probe_grads(&mut self, variant: &str) -> Result<(f64, Vec<Tensor>)> {
+        let batch = self.batcher.next_train();
+        let params_arc = Arc::new(self.params.tensors.clone());
+        let masks_arc = self.masks_arc();
+        self.engine
+            .grad_step(variant, params_arc, masks_arc, vec![batch], 0,
+                       self.grad_shapes.clone())
+    }
+}
+
+// Integration tests (need on-disk artifacts): rust/tests/integration_trainer.rs

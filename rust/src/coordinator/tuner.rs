@@ -1,0 +1,149 @@
+//! Fast decay-factor determination (paper §4.3).
+//!
+//! Grid-searching λ_W by final accuracy is impossibly expensive for
+//! pre-training, so the paper samples flip rates during the WARM-UP stage
+//! only: run the dense baseline for a few steps to get its flip rate
+//! r_{t0}, run each candidate λ for the same steps to get r'_{t0}, and keep
+//! the candidates whose ratio μ = r'/r lands in the feasible band
+//! [0.60, 0.95] (μ >= 1 predicts an accuracy drop). The tuner returns the
+//! full table (the Table-2 reproduction) plus the chosen λ.
+
+use anyhow::Result;
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::trainer::Trainer;
+
+#[derive(Clone, Debug)]
+pub struct TunerReport {
+    pub dense_flip: f64,
+    pub rows: Vec<TunerRow>,
+    pub chosen: Option<f32>,
+    pub band: (f64, f64),
+}
+
+#[derive(Clone, Debug)]
+pub struct TunerRow {
+    pub lambda: f32,
+    pub flip: f64,
+    pub mu: f64,
+    pub feasible: bool,
+}
+
+/// The paper's default candidate grid: {2,6} x 10^-7..10^-3 — the observed
+/// optimal λ_W spans three orders of magnitude across transformers
+/// (Table 2), so the grid must too.
+pub fn default_grid() -> Vec<f32> {
+    let mut v = Vec::new();
+    for exp in (-7i32)..=(-3) {
+        for m in [2.0f32, 6.0] {
+            v.push(m * 10f32.powi(exp));
+        }
+    }
+    v
+}
+
+pub struct Tuner {
+    pub base: TrainConfig,
+    /// warm-up steps to sample over (small by design)
+    pub probe_steps: usize,
+    /// flip-rate averaging window (last n observations)
+    pub window: usize,
+    pub band: (f64, f64),
+}
+
+impl Tuner {
+    pub fn new(base: TrainConfig, probe_steps: usize) -> Self {
+        Tuner { base, probe_steps, window: probe_steps / 2 + 1, band: (0.60, 0.95) }
+    }
+
+    /// Flip rate of one probe run under the given method/λ.
+    fn probe(&self, method: Method, lambda: f32) -> Result<f64> {
+        let mut cfg = self.base.clone();
+        cfg.method = method;
+        cfg.lambda_w = lambda;
+        cfg.steps = self.probe_steps;
+        // probe entirely inside the FST phase: no dense head/tail
+        cfg.dense_ft_fraction = 0.0;
+        cfg.dense_pre_fraction = 0.0;
+        cfg.eval_interval = 0;
+        cfg.flip_interval = 1;
+        let mut trainer = Trainer::new(cfg)?;
+        trainer.train()?;
+        Ok(trainer.fst.mean_flip_over(self.window))
+    }
+
+    /// Run the grid search; `grid` defaults to [`default_grid`].
+    pub fn run(&self, grid: Option<Vec<f32>>) -> Result<TunerReport> {
+        let grid = grid.unwrap_or_else(default_grid);
+        // dense baseline: same steps, dense method, flip monitor is virtual
+        let dense_flip = self.probe(Method::Dense, 0.0)?;
+        let mut rows = Vec::with_capacity(grid.len());
+        for &lambda in &grid {
+            let flip = self.probe(self.base.method, lambda)?;
+            let mu = if dense_flip > 0.0 { flip / dense_flip } else { f64::INFINITY };
+            let feasible = mu >= self.band.0 && mu <= self.band.1;
+            rows.push(TunerRow { lambda, flip, mu, feasible });
+        }
+        // choose the feasible λ with μ closest to the band center
+        let center = 0.5 * (self.band.0 + self.band.1);
+        let chosen = rows
+            .iter()
+            .filter(|r| r.feasible)
+            .min_by(|a, b| {
+                (a.mu - center)
+                    .abs()
+                    .partial_cmp(&(b.mu - center).abs())
+                    .unwrap()
+            })
+            .map(|r| r.lambda);
+        Ok(TunerReport { dense_flip, rows, chosen, band: self.band })
+    }
+}
+
+impl TunerReport {
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "dense baseline flip rate r_t0 = {:.6}\nband: mu in [{:.2}, {:.2}]\n\
+             {:>12} {:>12} {:>8} {:>9}\n",
+            self.dense_flip, self.band.0, self.band.1, "lambda", "flip", "mu", "feasible"
+        );
+        for r in &self.rows {
+            out += &format!(
+                "{:>12.1e} {:>12.6} {:>8.3} {:>9}\n",
+                r.lambda, r.flip, r.mu, if r.feasible { "yes" } else { "no" }
+            );
+        }
+        out += &match self.chosen {
+            Some(l) => format!("chosen lambda_W = {l:.1e}\n"),
+            None => "no feasible lambda in the grid\n".to_string(),
+        };
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_spans_three_orders() {
+        let g = default_grid();
+        assert!(g.len() >= 8);
+        let min = g.iter().cloned().fold(f32::MAX, f32::min);
+        let max = g.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(max / min >= 1e3);
+    }
+
+    #[test]
+    fn report_render_includes_rows() {
+        let rep = TunerReport {
+            dense_flip: 0.01,
+            rows: vec![TunerRow { lambda: 1e-6, flip: 0.008, mu: 0.8, feasible: true }],
+            chosen: Some(1e-6),
+            band: (0.6, 0.95),
+        };
+        let s = rep.render();
+        assert!(s.contains("chosen"));
+        assert!(s.contains("yes"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Sequence packing: token stream -> (tokens, targets) microbatches.
+//!
+//! Deterministic sliding-window batcher with a held-out validation split.
+//! Shapes are static (the AOT artifacts are compiled for a fixed (B, n)),
+//! so the batcher owns the (B, n) contract with the runtime.
+
+use crate::util::rng::Rng;
+
+/// One microbatch: row-major (batch, n) i32 tokens and next-token targets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub batch: usize,
+    pub n: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    data: Vec<u32>,
+    val: Vec<u32>,
+    pub batch: usize,
+    pub n: usize,
+    rng: Rng,
+    val_rng: Rng,
+}
+
+impl Batcher {
+    /// Split `tokens` into train/val (last `val_frac`) and build a sampler.
+    pub fn new(tokens: Vec<u32>, batch: usize, n: usize, val_frac: f64,
+               seed: u64) -> Self {
+        assert!(tokens.len() > (n + 1) * 2, "corpus too small");
+        let val_len = ((tokens.len() as f64 * val_frac) as usize)
+            .clamp(n + 1, tokens.len() / 2);
+        let split = tokens.len() - val_len;
+        let (train, val) = tokens.split_at(split);
+        Batcher {
+            data: train.to_vec(),
+            val: val.to_vec(),
+            batch,
+            n,
+            rng: Rng::new(seed),
+            val_rng: Rng::new(seed ^ 0xdead_beef),
+        }
+    }
+
+    fn sample_from(data: &[u32], batch: usize, n: usize, rng: &mut Rng) -> Batch {
+        let mut tokens = Vec::with_capacity(batch * n);
+        let mut targets = Vec::with_capacity(batch * n);
+        let max_start = data.len() - n - 1;
+        for _ in 0..batch {
+            let s = rng.below(max_start + 1);
+            for k in 0..n {
+                tokens.push(data[s + k] as i32);
+                targets.push(data[s + k + 1] as i32);
+            }
+        }
+        Batch { batch, n, tokens, targets }
+    }
+
+    /// Next training microbatch (random windows).
+    pub fn next_train(&mut self) -> Batch {
+        Self::sample_from(&self.data, self.batch, self.n, &mut self.rng)
+    }
+
+    /// Next validation microbatch (separate stream, held-out data).
+    pub fn next_val(&mut self) -> Batch {
+        Self::sample_from(&self.val, self.batch, self.n, &mut self.val_rng)
+    }
+
+    /// Snapshot both RNG streams (checkpointing).
+    pub fn rng_states(&self) -> ([u64; 4], [u64; 4]) {
+        (self.rng.state(), self.val_rng.state())
+    }
+
+    /// Restore RNG streams from a snapshot.
+    pub fn restore_rng(&mut self, train: [u64; 4], val: [u64; 4]) {
+        self.rng = Rng::from_state(train);
+        self.val_rng = Rng::from_state(val);
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn val_len(&self) -> usize {
+        self.val.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| i % 50).collect()
+    }
+
+    #[test]
+    fn shapes_and_target_shift() {
+        let mut b = Batcher::new(toks(1000), 4, 16, 0.1, 0);
+        let batch = b.next_train();
+        assert_eq!(batch.tokens.len(), 64);
+        assert_eq!(batch.targets.len(), 64);
+        // within each row, target k == token k+1 (consecutive window)
+        for row in 0..4 {
+            for k in 0..15 {
+                assert_eq!(batch.targets[row * 16 + k], batch.tokens[row * 16 + k + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Batcher::new(toks(1000), 2, 8, 0.1, 7);
+        let mut b = Batcher::new(toks(1000), 2, 8, 0.1, 7);
+        assert_eq!(a.next_train(), b.next_train());
+        assert_eq!(a.next_val(), b.next_val());
+    }
+
+    #[test]
+    fn val_and_train_disjoint() {
+        let n = 1000;
+        let mut b = Batcher::new(toks(n), 2, 8, 0.2, 1);
+        assert_eq!(b.train_len() + b.val_len(), n);
+        assert!(b.val_len() >= 9);
+        // val windows draw only from the held-out tail
+        let tail: Vec<u32> = toks(n)[b.train_len()..].to_vec();
+        let vb = b.next_val();
+        for &t in &vb.tokens {
+            assert!(tail.contains(&(t as u32)));
+        }
+    }
+
+    #[test]
+    fn rng_state_roundtrip_resumes_stream() {
+        let mut a = Batcher::new(toks(1000), 2, 8, 0.1, 3);
+        a.next_train();
+        let (tr, vl) = a.rng_states();
+        let mut b = Batcher::new(toks(1000), 2, 8, 0.1, 999);
+        b.restore_rng(tr, vl);
+        assert_eq!(a.next_train(), b.next_train());
+        assert_eq!(a.next_val(), b.next_val());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_tiny_corpus() {
+        Batcher::new(toks(10), 2, 8, 0.1, 0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Data pipeline: synthetic Zipf–Markov corpus, embedded tiny real text,
+//! and the (tokens, targets) microbatcher.
+
+pub mod batcher;
+pub mod corpus;
+pub mod synthetic;
+
+pub use batcher::{Batch, Batcher};
+pub use synthetic::SyntheticLm;

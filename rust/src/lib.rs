@@ -1,0 +1,21 @@
+#![feature(portable_simd)]
+
+//! `sparse24` — 2:4 fully-sparse transformer pre-training.
+//!
+//! Reproduction of *Accelerating Transformer Pre-training with 2:4
+//! Sparsity* (Hu et al., ICML 2024) as a three-layer Rust + JAX + Pallas
+//! stack. This crate is Layer 3: the training coordinator that owns the
+//! pre-training loop, the masked-decay optimizer, 2:4 mask state, flip-rate
+//! instrumentation, the decay-factor tuner, the data pipeline, and the PJRT
+//! runtime that executes the AOT-compiled (HLO-text) model step functions.
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

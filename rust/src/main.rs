@@ -1,0 +1,288 @@
+//! `sparse24` CLI — the launcher for every experiment in the repo.
+//!
+//! Subcommands (clap is unavailable offline; parsing is hand-rolled):
+//!
+//!   train            pre-train per a TOML config (+ --set overrides)
+//!   tune-decay       §4.3 fast λ_W determination (Table 2)
+//!   speedup          Fig. 7 / Table 11 / Table 13 substrate measurements
+//!   inspect          print an artifact manifest + compile sanity check
+//!
+//! Examples:
+//!   sparse24 train --config configs/e2e_ours.toml
+//!   sparse24 train --set model.config=nano --set train.steps=50
+//!   sparse24 tune-decay --config configs/nano_ours.toml --probe-steps 30
+//!   sparse24 speedup --ffn --out results/fig7a.csv
+//!   sparse24 inspect --model nano
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use sparse24::config::TrainConfig;
+use sparse24::coordinator::{Trainer, Tuner};
+use sparse24::runtime::Manifest;
+use sparse24::sparse::workloads;
+use sparse24::util::write_csv;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// --key value / --flag style parser; returns (flags, options, positional).
+fn parse_args(args: &[String]) -> (Vec<String>, BTreeMap<String, Vec<String>>, Vec<String>) {
+    let mut flags = Vec::new();
+    let mut opts: BTreeMap<String, Vec<String>> = BTreeMap::new();
+    let mut pos = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                opts.entry(name.to_string()).or_default().push(args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(name.to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (flags, opts, pos)
+}
+
+fn opt1<'a>(opts: &'a BTreeMap<String, Vec<String>>, key: &str) -> Option<&'a str> {
+    opts.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "tune-decay" => cmd_tune(rest),
+        "speedup" => cmd_speedup(rest),
+        "inspect" => cmd_inspect(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `sparse24 help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "sparse24 — 2:4 fully-sparse transformer pre-training (Hu et al., ICML 2024)\n\n\
+         USAGE: sparse24 <command> [options]\n\n\
+         COMMANDS:\n\
+           train        --config <toml> [--set sec.key=value ...] [--out <csv>]\n\
+                        [--checkpoint <file> [--checkpoint-every N]] [--resume <file>]\n\
+           tune-decay   --config <toml> [--probe-steps N] [--out <csv>]\n\
+           speedup      [--ffn] [--block] [--e2e] [--profile] [--quick] [--out <csv>]\n\
+           inspect      --model <name> [--artifacts-dir <dir>]\n"
+    );
+}
+
+/// Load config file + apply `--set section.key=value` overrides.
+fn load_config(opts: &BTreeMap<String, Vec<String>>) -> Result<TrainConfig> {
+    let mut text = match opt1(opts, "config") {
+        Some(path) => std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?,
+        None => String::new(),
+    };
+    for kv in opts.get("set").map(|v| v.as_slice()).unwrap_or(&[]) {
+        let (key, value) = kv.split_once('=').context("--set wants sec.key=value")?;
+        let (section, k) = key.split_once('.').context("--set key wants sec.key")?;
+        // appended sections override earlier ones key-by-key in our parser?
+        // the parser keeps last-wins per (section,key) because BTreeMap
+        // insert overwrites — so appending a section block suffices.
+        let needs_quotes = value.parse::<f64>().is_err()
+            && value != "true"
+            && value != "false";
+        let vtxt = if needs_quotes { format!("\"{value}\"") } else { value.to_string() };
+        text.push_str(&format!("\n[{section}]\n{k} = {vtxt}\n"));
+    }
+    TrainConfig::from_toml(&text)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let (_flags, opts, _) = parse_args(args);
+    let cfg = load_config(&opts)?;
+    println!(
+        "training {} | method {:?} | {} steps x {} microbatches | lambda {:.1e} | workers {}",
+        Trainer::manifest_name(&cfg), cfg.method, cfg.steps, cfg.grad_accum,
+        cfg.lambda_w, cfg.workers
+    );
+    let mut trainer = match opt1(&opts, "resume") {
+        Some(ckpt) => {
+            let tr = Trainer::resume(cfg, Path::new(ckpt))?;
+            println!("resumed from {ckpt} at step {}", tr.step_idx);
+            tr
+        }
+        None => Trainer::new(cfg)?,
+    };
+    let ckpt_out = opt1(&opts, "checkpoint").map(|s| s.to_string());
+    let ckpt_every = opt1(&opts, "checkpoint-every")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(0);
+    let t0 = std::time::Instant::now();
+    trainer.train_with(|tr, loss| {
+        if ckpt_every > 0 && tr.step_idx % ckpt_every == 0 {
+            if let Some(path) = &ckpt_out {
+                if let Err(e) = tr.save_checkpoint(Path::new(path)) {
+                    eprintln!("checkpoint failed: {e:#}");
+                }
+            }
+        }
+        let t = tr.step_idx - 1;
+        if t % 10 == 0 || t + 1 == tr.cfg.steps {
+            let m = tr.metrics.rows.last().unwrap();
+            println!(
+                "step {t:>5} | loss {loss:.4} | lr {:.2e} | flip {:.4} | {:?} | {:.0} ms",
+                m.lr, m.flip_rate, m.phase, m.step_ms
+            );
+        }
+    })?;
+    let val = trainer.eval()?;
+    println!(
+        "done in {:.1}s | final train loss {:.4} | val loss {val:.4}",
+        t0.elapsed().as_secs_f64(),
+        trainer.metrics.tail_loss(0.05),
+    );
+    if let Some(path) = &ckpt_out {
+        trainer.save_checkpoint(Path::new(path))?;
+        println!("checkpoint -> {path}");
+    }
+    println!("\n{}", trainer.profile.report());
+    if let Some(out) = opt1(&opts, "out") {
+        trainer.metrics.to_csv(Path::new(out))?;
+        println!("metrics -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &[String]) -> Result<()> {
+    let (_, opts, _) = parse_args(args);
+    let base = load_config(&opts)?;
+    let probe_steps = opt1(&opts, "probe-steps")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(30);
+    let tuner = Tuner::new(base, probe_steps);
+    let report = tuner.run(None)?;
+    println!("{}", report.render());
+    if let Some(out) = opt1(&opts, "out") {
+        let rows: Vec<Vec<f64>> = report
+            .rows
+            .iter()
+            .map(|r| vec![r.lambda as f64, r.flip, r.mu, r.feasible as u8 as f64])
+            .collect();
+        write_csv(Path::new(out), &["lambda", "flip", "mu", "feasible"], &rows)?;
+        println!("table -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_speedup(args: &[String]) -> Result<()> {
+    let (flags, opts, _) = parse_args(args);
+    let quick = flags.iter().any(|f| f == "quick");
+    let budget = if quick { Duration::from_millis(100) } else { Duration::from_millis(800) };
+    let all = !flags.iter().any(|f| matches!(f.as_str(), "ffn" | "block" | "e2e" | "profile"));
+    let mut csv_rows: Vec<Vec<f64>> = Vec::new();
+
+    if all || flags.iter().any(|f| f == "ffn") {
+        println!("== Fig. 7a: FFN layer speedup (n=2048 tokens, r=4d) ==");
+        let ds: &[usize] = if quick { &[256, 512] } else { &[256, 512, 768, 1024, 1280] };
+        for &d in ds {
+            let p = if quick { 512 } else { 2048 };
+            let (dt, st, s) = workloads::ffn_speedup(p, d, budget);
+            println!("d={d:<6} dense {:>9.2} ms  sparse {:>9.2} ms  S = {s:.3}",
+                     dt * 1e3, st * 1e3);
+            csv_rows.push(vec![0.0, d as f64, dt * 1e3, st * 1e3, s]);
+        }
+    }
+    if all || flags.iter().any(|f| f == "block") {
+        println!("== Fig. 7b-d: transformer block speedup ==");
+        let ns: &[usize] = if quick { &[128] } else { &[512, 1024, 2048] };
+        let ds: &[usize] = if quick { &[128, 256] } else { &[512, 768, 1024] };
+        for &n in ns {
+            for &d in ds {
+                let heads = (d / 64).max(1);
+                let (dt, st, s) = workloads::block_speedup(1, n, d, heads, budget);
+                println!("n={n:<5} d={d:<5} dense {:>9.2} ms  sparse {:>9.2} ms  S = {s:.3}",
+                         dt * 1e3, st * 1e3);
+                csv_rows.push(vec![1.0, (n * 10000 + d) as f64, dt * 1e3, st * 1e3, s]);
+            }
+        }
+    }
+    if all || flags.iter().any(|f| f == "e2e") {
+        println!("== Table 11: end-to-end model iteration speedup ==");
+        let rows: &[(usize, usize, usize, usize)] = if quick {
+            &[(2, 4, 128, 2)]
+        } else {
+            // (layers, batch, d, heads) scaled GPT-2 stand-ins
+            &[(12, 16, 768, 12), (24, 8, 1024, 16), (36, 4, 1280, 20)]
+        };
+        for &(layers, batch, d, heads) in rows {
+            let n = if quick { 64 } else { 256 };
+            let (dt, st, s) = workloads::e2e_speedup(layers, batch, n, d, heads, budget);
+            println!("L={layers:<3} B={batch:<3} d={d:<5} dense {:>9.1} ms  sparse {:>9.1} ms  S = {s:.3}",
+                     dt * 1e3, st * 1e3);
+            csv_rows.push(vec![2.0, d as f64, dt * 1e3, st * 1e3, s]);
+        }
+    }
+    if all || flags.iter().any(|f| f == "profile") {
+        println!("== Table 13: component breakdown (one block iteration) ==");
+        let (batch, n, d) = if quick { (1, 64, 128) } else { (1, 256, 512) };
+        for (name, dm, sm) in workloads::profile_breakdown(batch, n, d, budget) {
+            let ratio = if sm > 0.0 && dm > 0.0 { format!("{:.3}", dm / sm) } else { "-".into() };
+            println!("{name:<32} dense {dm:>9.3} ms  sparse {sm:>9.3} ms  S = {ratio}");
+        }
+    }
+    if let Some(out) = opt1(&opts, "out") {
+        write_csv(Path::new(out),
+                  &["series", "x", "dense_ms", "sparse_ms", "speedup"], &csv_rows)?;
+        println!("series -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let (_, opts, _) = parse_args(args);
+    let model = opt1(&opts, "model").context("--model <name> required")?;
+    let dir = opt1(&opts, "artifacts-dir").unwrap_or("artifacts");
+    let m = Manifest::load_config(Path::new(dir), model)?;
+    println!(
+        "config {} | vocab {} | d {} | layers {} | heads {} | d_ff {} | n_ctx {} | batch {}",
+        m.config.name, m.config.vocab, m.config.d_model, m.config.n_layers,
+        m.config.n_heads, m.config.d_ff, m.config.n_ctx, m.batch
+    );
+    println!("{} params ({:.3}M elements), {} sparse, {} masks",
+             m.params.len(),
+             m.config.param_count as f64 / 1e6,
+             m.sparse_param_indices().len(),
+             m.masks.len());
+    for (variant, file) in &m.artifacts {
+        let path = m.dir.join(file);
+        let size = std::fs::metadata(&path).map(|s| s.len()).unwrap_or(0);
+        println!("  {variant:<12} {file} ({} KiB)", size / 1024);
+    }
+    let mut rt = sparse24::runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let key = m.artifacts.keys().next().context("no artifacts")?.clone();
+    rt.load_hlo(&key, &m.artifact_path(&key)?)?;
+    println!("compiled {key} OK in {:.2}s", rt.compile_secs[&key]);
+    Ok(())
+}

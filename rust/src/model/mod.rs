@@ -1,0 +1,5 @@
+//! Host-side model state: the named parameter store.
+
+pub mod params;
+
+pub use params::ParamStore;

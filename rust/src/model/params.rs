@@ -1,0 +1,162 @@
+//! Named parameter store, initialized from the artifact manifest.
+//!
+//! The manifest's ordered parameter list IS the positional input order of
+//! every step executable, so this store keeps tensors in a Vec aligned
+//! with it; name lookup is secondary (metrics, tests).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Init, Manifest};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl ParamStore {
+    /// Initialize per the manifest's init specs, deterministically in seed.
+    pub fn init(manifest: &Manifest, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        let mut by_name = BTreeMap::new();
+        for spec in &manifest.params {
+            let t = match spec.init {
+                Init::Zeros => Tensor::zeros(&spec.shape),
+                Init::Ones => Tensor::ones(&spec.shape),
+                Init::Normal(std) => Tensor::normal(&spec.shape, std, &mut rng),
+            };
+            by_name.insert(spec.name.clone(), tensors.len());
+            names.push(spec.name.clone());
+            tensors.push(t);
+        }
+        ParamStore { names, tensors, by_name }
+    }
+
+    /// Build from explicit flat values (fixture loading in tests).
+    pub fn from_flat(manifest: &Manifest, flat: &[Vec<f32>]) -> Result<Self> {
+        anyhow::ensure!(flat.len() == manifest.params.len(), "param count mismatch");
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        let mut by_name = BTreeMap::new();
+        for (spec, values) in manifest.params.iter().zip(flat) {
+            let t = Tensor::from_vec(&spec.shape, values.clone());
+            by_name.insert(spec.name.clone(), tensors.len());
+            names.push(spec.name.clone());
+            tensors.push(t);
+        }
+        Ok(ParamStore { names, tensors, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        let idx = self
+            .by_name
+            .get(name)
+            .with_context(|| format!("no parameter {name:?}"))?;
+        Ok(&self.tensors[*idx])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        let idx = *self
+            .by_name
+            .get(name)
+            .with_context(|| format!("no parameter {name:?}"))?;
+        Ok(&mut self.tensors[idx])
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Global L2 norm (training diagnostics).
+    pub fn global_norm(&self) -> f64 {
+        self.tensors.iter().map(|t| t.sq_norm()).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let j = Json::parse(
+            r#"{
+          "config": {"name": "t", "vocab": 8, "d_model": 4, "n_layers": 1,
+                     "n_heads": 1, "d_ff": 4, "n_ctx": 4, "activation": "geglu",
+                     "param_count": 24},
+          "batch": 2,
+          "params": [
+            {"name": "emb", "shape": [2, 4], "init": "normal:0.02", "sparse": false},
+            {"name": "ln", "shape": [4], "init": "ones", "sparse": false},
+            {"name": "b", "shape": [4], "init": "zeros", "sparse": false},
+            {"name": "w", "shape": [2, 4], "init": "normal:0.02", "sparse": true}
+          ],
+          "masks": [{"name": "w.mask", "shape": [2, 4]}],
+          "artifacts": {},
+          "outputs": {"loss_index": 0, "n_grads": 4}
+        }"#,
+        )
+        .unwrap();
+        // from_json is private; go through a temp file
+        let dir = std::env::temp_dir().join("sparse24_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t_manifest.json");
+        std::fs::write(&p, j.to_string()).unwrap();
+        Manifest::load(Path::new(&p)).unwrap()
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let m = manifest();
+        let ps = ParamStore::init(&m, 0);
+        assert_eq!(ps.tensors.len(), 4);
+        assert_eq!(ps.get("ln").unwrap().data, vec![1.0; 4]);
+        assert_eq!(ps.get("b").unwrap().data, vec![0.0; 4]);
+        assert!(ps.get("emb").unwrap().data.iter().any(|&v| v != 0.0));
+        assert_eq!(ps.total_elements(), 24);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let m = manifest();
+        let a = ParamStore::init(&m, 7);
+        let b = ParamStore::init(&m, 7);
+        let c = ParamStore::init(&m, 8);
+        assert_eq!(a.get("emb").unwrap(), b.get("emb").unwrap());
+        assert_ne!(a.get("emb").unwrap(), c.get("emb").unwrap());
+    }
+
+    #[test]
+    fn from_flat_roundtrip() {
+        let m = manifest();
+        let flat = vec![
+            vec![0.5; 8],
+            vec![1.0; 4],
+            vec![0.0; 4],
+            vec![-0.5; 8],
+        ];
+        let ps = ParamStore::from_flat(&m, &flat).unwrap();
+        assert_eq!(ps.get("w").unwrap().data, vec![-0.5; 8]);
+        assert!(ps.global_norm() > 0.0);
+    }
+
+    #[test]
+    fn missing_param_errors() {
+        let m = manifest();
+        let ps = ParamStore::init(&m, 0);
+        assert!(ps.get("nope").is_err());
+        assert_eq!(ps.index_of("w"), Some(3));
+    }
+}

@@ -1,0 +1,96 @@
+//! Learning-rate schedules (warmup + cosine / inverse-sqrt decay).
+//!
+//! The paper's training recipes: nanoGPT-style warmup-cosine for GPT-2,
+//! inverse-sqrt for Transformer-base (fairseq), one-cycle for Cramming
+//! BERT. The warmup window doubles as the §4.3 tuner's sampling window.
+
+/// Schedule kinds; all produce a multiplier-ready absolute LR per step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    /// linear warmup to `peak`, then cosine decay to `min_lr` at `total`
+    WarmupCosine { peak: f32, warmup: usize, total: usize, min_lr: f32 },
+    /// linear warmup then peak * sqrt(warmup/t)
+    InverseSqrt { peak: f32, warmup: usize },
+    /// constant
+    Const { lr: f32 },
+}
+
+impl Schedule {
+    pub fn lr(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Const { lr } => lr,
+            Schedule::InverseSqrt { peak, warmup } => {
+                let w = warmup.max(1);
+                if step < w {
+                    peak * (step + 1) as f32 / w as f32
+                } else {
+                    peak * ((w as f32) / (step + 1) as f32).sqrt()
+                }
+            }
+            Schedule::WarmupCosine { peak, warmup, total, min_lr } => {
+                let w = warmup.max(1);
+                if step < w {
+                    return peak * (step + 1) as f32 / w as f32;
+                }
+                let t = (step - w) as f32 / (total.saturating_sub(w)).max(1) as f32;
+                let t = t.clamp(0.0, 1.0);
+                min_lr + 0.5 * (peak - min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+
+    pub fn warmup_steps(&self) -> usize {
+        match *self {
+            Schedule::WarmupCosine { warmup, .. } => warmup,
+            Schedule::InverseSqrt { warmup, .. } => warmup,
+            Schedule::Const { .. } => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = Schedule::WarmupCosine { peak: 1.0, warmup: 10, total: 100, min_lr: 0.0 };
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(4) - 0.5).abs() < 1e-6);
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = Schedule::WarmupCosine { peak: 1.0, warmup: 10, total: 100, min_lr: 0.1 };
+        assert!((s.lr(100) - 0.1).abs() < 1e-4);
+        assert!(s.lr(50) < 1.0 && s.lr(50) > 0.1);
+        // monotone decreasing after warmup
+        let mut prev = s.lr(10);
+        for t in 11..100 {
+            let cur = s.lr(t);
+            assert!(cur <= prev + 1e-6);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn inverse_sqrt_decays() {
+        let s = Schedule::InverseSqrt { peak: 2.0, warmup: 4 };
+        assert!((s.lr(3) - 2.0).abs() < 1e-6);
+        assert!((s.lr(15) - 2.0 * (4.0f32 / 16.0).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn const_is_const() {
+        let s = Schedule::Const { lr: 0.3 };
+        assert_eq!(s.lr(0), 0.3);
+        assert_eq!(s.lr(1_000_000), 0.3);
+    }
+
+    #[test]
+    fn past_total_clamps() {
+        let s = Schedule::WarmupCosine { peak: 1.0, warmup: 1, total: 10, min_lr: 0.05 };
+        assert!((s.lr(500) - 0.05).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,7 @@
+//! Optimizers: AdamW with the paper's masked decay (§4.2) + LR schedules.
+
+pub mod adamw;
+pub mod lr;
+
+pub use adamw::{AdamW, AdamWConfig, DecayPlacement, Sgd};
+pub use lr::Schedule;

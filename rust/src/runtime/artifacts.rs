@@ -1,0 +1,240 @@
+//! Artifact manifest: the I/O contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! `aot.py` writes `<config>_manifest.json` describing the flattened
+//! positional inputs of every HLO artifact (params..., masks..., tokens,
+//! targets, seed) plus per-parameter init specs, so the coordinator can
+//! initialize and order buffers without any Python at runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_ctx: usize,
+    pub activation: String,
+    pub param_count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub enum Init {
+    Normal(f32),
+    Zeros,
+    Ones,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+    pub sparse: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct MaskSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub batch: usize,
+    pub params: Vec<ParamSpec>,
+    pub masks: Vec<MaskSpec>,
+    /// variant name ("step_sparse", "step_ste", "step_dense", "eval") ->
+    /// HLO text filename
+    pub artifacts: BTreeMap<String, String>,
+    pub n_grads: usize,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest JSON")?;
+        Self::from_json(&j, path.parent().unwrap_or(Path::new(".")))
+    }
+
+    /// Load `artifacts/<config>_manifest.json`.
+    pub fn load_config(dir: &Path, config: &str) -> Result<Manifest> {
+        Self::load(&dir.join(format!("{config}_manifest.json")))
+    }
+
+    fn from_json(j: &Json, dir: &Path) -> Result<Manifest> {
+        let c = j.get("config")?;
+        let config = ModelConfig {
+            name: c.get("name")?.as_str()?.to_string(),
+            vocab: c.get("vocab")?.as_usize()?,
+            d_model: c.get("d_model")?.as_usize()?,
+            n_layers: c.get("n_layers")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            d_ff: c.get("d_ff")?.as_usize()?,
+            n_ctx: c.get("n_ctx")?.as_usize()?,
+            activation: c.get("activation")?.as_str()?.to_string(),
+            param_count: c.get("param_count")?.as_usize()?,
+        };
+        let mut params = Vec::new();
+        for p in j.get("params")?.as_arr()? {
+            params.push(ParamSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p.get("shape")?.as_usize_vec()?,
+                init: parse_init(p.get("init")?.as_str()?)?,
+                sparse: p.get("sparse")?.as_bool()?,
+            });
+        }
+        let mut masks = Vec::new();
+        for m in j.get("masks")?.as_arr()? {
+            masks.push(MaskSpec {
+                name: m.get("name")?.as_str()?.to_string(),
+                shape: m.get("shape")?.as_usize_vec()?,
+            });
+        }
+        let mut artifacts = BTreeMap::new();
+        if let Json::Obj(map) = j.get("artifacts")? {
+            for (k, v) in map {
+                artifacts.insert(k.clone(), v.as_str()?.to_string());
+            }
+        } else {
+            bail!("artifacts is not an object");
+        }
+        let n_grads = j.get("outputs")?.get("n_grads")?.as_usize()?;
+        if n_grads != params.len() {
+            bail!("n_grads {} != params {}", n_grads, params.len());
+        }
+        // every sparse param must have a mask, in order
+        let sparse_names: Vec<&str> = params
+            .iter()
+            .filter(|p| p.sparse)
+            .map(|p| p.name.as_str())
+            .collect();
+        if masks.len() != sparse_names.len() {
+            bail!("mask count {} != sparse param count {}", masks.len(), sparse_names.len());
+        }
+        for (m, s) in masks.iter().zip(&sparse_names) {
+            if m.name != format!("{s}.mask") {
+                bail!("mask {} does not match sparse param {s}", m.name);
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config,
+            batch: j.get("batch")?.as_usize()?,
+            params,
+            masks,
+            artifacts,
+            n_grads,
+        })
+    }
+
+    /// Absolute path of the HLO text for a variant.
+    pub fn artifact_path(&self, variant: &str) -> Result<PathBuf> {
+        let fname = self
+            .artifacts
+            .get(variant)
+            .with_context(|| format!("no artifact variant {variant:?}"))?;
+        Ok(self.dir.join(fname))
+    }
+
+    /// Total number of positional inputs of a step artifact.
+    pub fn step_input_count(&self) -> usize {
+        self.params.len() + self.masks.len() + 3 // tokens, targets, seed
+    }
+
+    /// Indices (into the param list) of the sparse parameters, aligned
+    /// with the mask list order.
+    pub fn sparse_param_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.sparse)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+fn parse_init(s: &str) -> Result<Init> {
+    if s == "zeros" {
+        return Ok(Init::Zeros);
+    }
+    if s == "ones" {
+        return Ok(Init::Ones);
+    }
+    if let Some(std) = s.strip_prefix("normal:") {
+        return Ok(Init::Normal(std.parse::<f32>()?));
+    }
+    bail!("unknown init spec {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"name": "t", "vocab": 8, "d_model": 4, "n_layers": 1,
+                 "n_heads": 1, "d_ff": 4, "n_ctx": 4, "activation": "geglu",
+                 "param_count": 20},
+      "batch": 2,
+      "params": [
+        {"name": "a", "shape": [2, 2], "init": "normal:0.02", "sparse": false},
+        {"name": "w", "shape": [4, 4], "init": "normal:0.02", "sparse": true}
+      ],
+      "masks": [{"name": "w.mask", "shape": [4, 4]}],
+      "artifacts": {"step_sparse": "t_step_sparse.hlo.txt"},
+      "outputs": {"loss_index": 0, "n_grads": 2}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.config.vocab, 8);
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.params.len(), 2);
+        assert!(m.params[1].sparse);
+        assert_eq!(m.step_input_count(), 2 + 1 + 3);
+        assert_eq!(m.sparse_param_indices(), vec![1]);
+        assert_eq!(
+            m.artifact_path("step_sparse").unwrap(),
+            PathBuf::from("/tmp/a/t_step_sparse.hlo.txt")
+        );
+        assert!(m.artifact_path("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_masks() {
+        let bad = SAMPLE.replace("w.mask", "x.mask");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_ngrads() {
+        let bad = SAMPLE.replace("\"n_grads\": 2", "\"n_grads\": 3");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn init_spec_parsing() {
+        assert!(matches!(parse_init("zeros").unwrap(), Init::Zeros));
+        assert!(matches!(parse_init("ones").unwrap(), Init::Ones));
+        match parse_init("normal:0.004082").unwrap() {
+            Init::Normal(s) => assert!((s - 0.004082).abs() < 1e-9),
+            _ => panic!(),
+        }
+        assert!(parse_init("xavier").is_err());
+    }
+}

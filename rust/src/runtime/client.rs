@@ -1,0 +1,85 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API, xla_extension 0.5.1 CPU): HLO text
+//! (written by `python/compile/aot.py`) -> `HloModuleProto::from_text_file`
+//! -> `XlaComputation` -> `client.compile` -> cached `PjRtLoadedExecutable`.
+//! Text is the interchange format because jax >= 0.5 serialized protos use
+//! 64-bit instruction ids this XLA rejects (see aot.py docstring).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// A compiled-executable cache over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// compile wall-times per key (introspection / EXPERIMENTS.md)
+    pub compile_secs: BTreeMap<String, f64>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            executables: BTreeMap::new(),
+            compile_secs: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file under `key` (no-op if present).
+    pub fn load_hlo(&mut self, key: &str, path: &Path) -> Result<()> {
+        if self.executables.contains_key(key) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.compile_secs
+            .insert(key.to_string(), t0.elapsed().as_secs_f64());
+        self.executables.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, key: &str) -> bool {
+        self.executables.contains_key(key)
+    }
+
+    /// Execute the cached executable; returns the flattened output tuple.
+    /// (aot.py lowers with return_tuple=True, so the root is always a
+    /// tuple, even for single outputs.)
+    pub fn execute(&self, key: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(key)
+            .with_context(|| format!("executable {key:?} not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {key:?}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(root.to_tuple()?)
+    }
+
+    pub fn loaded_keys(&self) -> Vec<String> {
+        self.executables.keys().cloned().collect()
+    }
+}
+
+// NOTE: integration coverage for this module lives in
+// rust/tests/integration_runtime.rs (it needs artifacts on disk).

@@ -1,0 +1,74 @@
+//! Host tensor ⇄ `xla::Literal` conversion helpers.
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// f32 tensor -> literal with the tensor's shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// i32 slice -> literal with an explicit shape.
+pub fn i32_to_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 scalar literal (the MVUE seed input).
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// literal -> f32 tensor with the given shape (length-checked).
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>()?;
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "literal has {} elements, shape {:?} wants {}",
+        data.len(),
+        shape,
+        shape.iter().product::<usize>()
+    );
+    Ok(Tensor::from_vec(shape, data))
+}
+
+/// literal -> f32 scalar.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = i32_scalar(42);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn i32_shape() {
+        let lit = i32_to_literal(&[1, 2, 3, 4], &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let t = Tensor::from_vec(&[4], vec![0.0; 4]);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert!(literal_to_tensor(&lit, &[5]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime layer: PJRT client wrapper, literal conversion, and the
+//! artifact manifest contract with the python compile path.
+
+pub mod artifacts;
+pub mod client;
+pub mod literal;
+
+pub use artifacts::{Init, Manifest, MaskSpec, ModelConfig, ParamSpec};
+pub use client::Runtime;

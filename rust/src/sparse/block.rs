@@ -1,0 +1,456 @@
+//! Full transformer block on the CPU substrate (Fig. 7b-d, Table 13).
+//!
+//! Attention (dense — the paper only sparsifies FFNs) + FST/dense FFN +
+//! layer norms, forward AND backward, so the block-speedup benches measure
+//! the same op mix as the paper's profile (Appendix D): the FFN GEMMs are
+//! the accelerated part, everything else ("Others") is shared.
+
+use super::ffn::{add_bias, col_sum, DenseFfn, FfnCache, FfnGrads, SparseFfn};
+use super::gemm::{gemm_nn, gemm_nt, gemm_tn};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// LayerNorm over the last axis; returns (y, mean, rstd) cache.
+pub fn layer_norm(x: &Tensor, scale: &Tensor, bias: &Tensor)
+                  -> (Tensor, Vec<f32>, Vec<f32>) {
+    let (p, c) = x.dims2();
+    let mut y = Tensor::zeros(&x.shape);
+    let mut means = vec![0f32; p];
+    let mut rstds = vec![0f32; p];
+    for i in 0..p {
+        let row = &x.data[i * c..(i + 1) * c];
+        let mu: f32 = row.iter().sum::<f32>() / c as f32;
+        let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / c as f32;
+        let rstd = 1.0 / (var + 1e-5).sqrt();
+        means[i] = mu;
+        rstds[i] = rstd;
+        let out = &mut y.data[i * c..(i + 1) * c];
+        for j in 0..c {
+            out[j] = (row[j] - mu) * rstd * scale.data[j] + bias.data[j];
+        }
+    }
+    (y, means, rstds)
+}
+
+/// Backward of layer_norm. Returns (dx, dscale, dbias).
+pub fn layer_norm_grad(x: &Tensor, scale: &Tensor, means: &[f32], rstds: &[f32],
+                       dy: &Tensor) -> (Tensor, Tensor, Tensor) {
+    let (p, c) = x.dims2();
+    let mut dx = Tensor::zeros(&x.shape);
+    let mut dscale = Tensor::zeros(&scale.shape);
+    let mut dbias = Tensor::zeros(&scale.shape);
+    for i in 0..p {
+        let row = &x.data[i * c..(i + 1) * c];
+        let dyr = &dy.data[i * c..(i + 1) * c];
+        let (mu, rstd) = (means[i], rstds[i]);
+        // xhat = (x - mu) * rstd; dy/dxhat = dy * scale
+        let mut sum_dxh = 0f32;
+        let mut sum_dxh_xh = 0f32;
+        for j in 0..c {
+            let xh = (row[j] - mu) * rstd;
+            let dxh = dyr[j] * scale.data[j];
+            sum_dxh += dxh;
+            sum_dxh_xh += dxh * xh;
+            dscale.data[j] += dyr[j] * xh;
+            dbias.data[j] += dyr[j];
+        }
+        let inv_c = 1.0 / c as f32;
+        let dxr = &mut dx.data[i * c..(i + 1) * c];
+        for j in 0..c {
+            let xh = (row[j] - mu) * rstd;
+            let dxh = dyr[j] * scale.data[j];
+            dxr[j] = rstd * (dxh - inv_c * sum_dxh - xh * inv_c * sum_dxh_xh);
+        }
+    }
+    (dx, dscale, dbias)
+}
+
+/// Dense causal multi-head attention parameters.
+#[derive(Clone, Debug)]
+pub struct Attention {
+    pub n_heads: usize,
+    pub w_qkv: Tensor, // (3d, d)
+    pub b_qkv: Tensor, // (3d,)
+    pub w_o: Tensor,   // (d, d)
+    pub b_o: Tensor,   // (d,)
+}
+
+pub struct AttnCache {
+    qkv: Tensor,        // (p, 3d)
+    probs: Vec<Tensor>, // per (batch, head): (n, n)
+    ctx: Tensor,        // (p, d) pre-out-proj
+}
+
+impl Attention {
+    pub fn new(d: usize, n_heads: usize, rng: &mut Rng) -> Self {
+        Attention {
+            n_heads,
+            w_qkv: Tensor::normal(&[3 * d, d], 0.02, rng),
+            b_qkv: Tensor::zeros(&[3 * d]),
+            w_o: Tensor::normal(&[d, d], 0.02, rng),
+            b_o: Tensor::zeros(&[d]),
+        }
+    }
+
+    /// x: (batch*n, d) with each consecutive n rows one sequence.
+    pub fn forward(&self, x: &Tensor, batch: usize, n: usize) -> (Tensor, AttnCache) {
+        let (p, d) = x.dims2();
+        assert_eq!(p, batch * n);
+        let h = self.n_heads;
+        let hd = d / h;
+        let mut qkv = gemm_nt(x, &self.w_qkv);
+        add_bias(&mut qkv, &self.b_qkv);
+        let mut ctx = Tensor::zeros(&[p, d]);
+        let mut probs = Vec::with_capacity(batch * h);
+        let scale = 1.0 / (hd as f32).sqrt();
+        for b in 0..batch {
+            for head in 0..h {
+                // scores (n, n), causal
+                let mut s = Tensor::zeros(&[n, n]);
+                for i in 0..n {
+                    let qi = &qkv.data[(b * n + i) * 3 * d + head * hd
+                        ..(b * n + i) * 3 * d + head * hd + hd];
+                    for j in 0..=i {
+                        let kj = &qkv.data[(b * n + j) * 3 * d + d + head * hd
+                            ..(b * n + j) * 3 * d + d + head * hd + hd];
+                        s.data[i * n + j] = super::gemm::dot(qi, kj) * scale;
+                    }
+                }
+                // causal softmax row-wise
+                for i in 0..n {
+                    let row = &mut s.data[i * n..i * n + n];
+                    let m = row[..=i].iter().cloned().fold(f32::MIN, f32::max);
+                    let mut z = 0f32;
+                    for j in 0..=i {
+                        row[j] = (row[j] - m).exp();
+                        z += row[j];
+                    }
+                    for j in 0..=i {
+                        row[j] /= z;
+                    }
+                    for j in i + 1..n {
+                        row[j] = 0.0;
+                    }
+                }
+                // ctx = P V
+                for i in 0..n {
+                    let out = &mut ctx.data[(b * n + i) * d + head * hd
+                        ..(b * n + i) * d + head * hd + hd];
+                    for j in 0..=i {
+                        let pij = s.data[i * n + j];
+                        if pij == 0.0 {
+                            continue;
+                        }
+                        let vj = &qkv.data[(b * n + j) * 3 * d + 2 * d + head * hd
+                            ..(b * n + j) * 3 * d + 2 * d + head * hd + hd];
+                        for k in 0..hd {
+                            out[k] += pij * vj[k];
+                        }
+                    }
+                }
+                probs.push(s);
+            }
+        }
+        let mut y = gemm_nt(&ctx, &self.w_o);
+        add_bias(&mut y, &self.b_o);
+        (y, AttnCache { qkv, probs, ctx })
+    }
+
+    /// Backward. Returns (dx, dw_qkv, db_qkv, dw_o, db_o).
+    pub fn backward(&self, x: &Tensor, cache: &AttnCache, dy: &Tensor,
+                    batch: usize, n: usize)
+                    -> (Tensor, Tensor, Tensor, Tensor, Tensor) {
+        let (p, d) = x.dims2();
+        let h = self.n_heads;
+        let hd = d / h;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let dw_o = gemm_tn(dy, &cache.ctx);
+        let db_o = col_sum(dy);
+        let dctx = gemm_nn(dy, &self.w_o);
+        let mut dqkv = Tensor::zeros(&[p, 3 * d]);
+        for b in 0..batch {
+            for head in 0..h {
+                let probs = &cache.probs[b * h + head];
+                // dP = dctx V^T ; dV = P^T dctx
+                let mut dp = Tensor::zeros(&[n, n]);
+                for i in 0..n {
+                    let dci = &dctx.data[(b * n + i) * d + head * hd
+                        ..(b * n + i) * d + head * hd + hd];
+                    for j in 0..=i {
+                        let vj = &cache.qkv.data[(b * n + j) * 3 * d + 2 * d + head * hd
+                            ..(b * n + j) * 3 * d + 2 * d + head * hd + hd];
+                        dp.data[i * n + j] = super::gemm::dot(dci, vj);
+                        // dV_j += P_ij * dctx_i
+                        let pij = probs.data[i * n + j];
+                        if pij != 0.0 {
+                            let dvj = &mut dqkv.data[(b * n + j) * 3 * d + 2 * d + head * hd
+                                ..(b * n + j) * 3 * d + 2 * d + head * hd + hd];
+                            for k in 0..hd {
+                                dvj[k] += pij * dci[k];
+                            }
+                        }
+                    }
+                }
+                // softmax backward: dS = P ⊙ (dP - rowsum(dP ⊙ P))
+                for i in 0..n {
+                    let mut dot = 0f32;
+                    for j in 0..=i {
+                        dot += dp.data[i * n + j] * probs.data[i * n + j];
+                    }
+                    for j in 0..=i {
+                        let ds = probs.data[i * n + j] * (dp.data[i * n + j] - dot) * scale;
+                        // dQ_i += dS_ij K_j ; dK_j += dS_ij Q_i
+                        if ds == 0.0 {
+                            continue;
+                        }
+                        let (qi_base, kj_base) = ((b * n + i) * 3 * d + head * hd,
+                                                  (b * n + j) * 3 * d + d + head * hd);
+                        for k in 0..hd {
+                            let qv = cache.qkv.data[qi_base + k];
+                            let kv = cache.qkv.data[kj_base + k];
+                            dqkv.data[qi_base + k] += ds * kv;
+                            dqkv.data[kj_base + k] += ds * qv;
+                        }
+                    }
+                }
+            }
+        }
+        let dw_qkv = gemm_tn(&dqkv, x);
+        let db_qkv = col_sum(&dqkv);
+        let dx = gemm_nn(&dqkv, &self.w_qkv);
+        (dx, dw_qkv, db_qkv, dw_o, db_o)
+    }
+}
+
+/// Which FFN variant a block runs.
+#[derive(Clone, Debug)]
+pub enum FfnKind {
+    Dense(DenseFfn),
+    Sparse(SparseFfn),
+}
+
+/// Pre-LN transformer block: x + Attn(LN(x)); x + FFN(LN(x)).
+#[derive(Clone, Debug)]
+pub struct TransformerBlock {
+    pub d: usize,
+    pub ln1_s: Tensor,
+    pub ln1_b: Tensor,
+    pub attn: Attention,
+    pub ln2_s: Tensor,
+    pub ln2_b: Tensor,
+    pub ffn: FfnKind,
+}
+
+pub struct BlockCache {
+    h1: Tensor,
+    ln1: (Tensor, Vec<f32>, Vec<f32>),
+    attn: AttnCache,
+    x_mid: Tensor,
+    ln2: (Tensor, Vec<f32>, Vec<f32>),
+    ffn: FfnCache,
+}
+
+impl TransformerBlock {
+    pub fn new(d: usize, r: usize, n_heads: usize, sparse: bool, rng: &mut Rng) -> Self {
+        TransformerBlock {
+            d,
+            ln1_s: Tensor::ones(&[d]),
+            ln1_b: Tensor::zeros(&[d]),
+            attn: Attention::new(d, n_heads, rng),
+            ln2_s: Tensor::ones(&[d]),
+            ln2_b: Tensor::zeros(&[d]),
+            ffn: if sparse {
+                FfnKind::Sparse(SparseFfn::new(d, r, rng))
+            } else {
+                FfnKind::Dense(DenseFfn::new(d, r, rng))
+            },
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor, batch: usize, n: usize) -> (Tensor, BlockCache) {
+        let ln1 = layer_norm(x, &self.ln1_s, &self.ln1_b);
+        let (a, attn_cache) = self.attn.forward(&ln1.0, batch, n);
+        let mut x_mid = x.clone();
+        for (o, v) in x_mid.data.iter_mut().zip(&a.data) {
+            *o += v;
+        }
+        let ln2 = layer_norm(&x_mid, &self.ln2_s, &self.ln2_b);
+        let (f, ffn_cache) = match &self.ffn {
+            FfnKind::Dense(ffn) => ffn.forward(&ln2.0),
+            FfnKind::Sparse(ffn) => ffn.forward(&ln2.0),
+        };
+        let mut y = x_mid.clone();
+        for (o, v) in y.data.iter_mut().zip(&f.data) {
+            *o += v;
+        }
+        (y, BlockCache { h1: x.clone(), ln1, attn: attn_cache, x_mid, ln2, ffn: ffn_cache })
+    }
+
+    /// Full backward; returns dx and discards parameter grads not needed by
+    /// the speed benches (FFN grads returned for inspection).
+    pub fn backward(&self, cache: &BlockCache, dy: &Tensor, batch: usize,
+                    n: usize, rng: &mut Rng) -> (Tensor, FfnGrads) {
+        // FFN branch
+        let ffn_grads = match &self.ffn {
+            FfnKind::Dense(ffn) => ffn.backward(&cache.ln2.0, &cache.ffn, dy),
+            FfnKind::Sparse(ffn) => ffn.backward(&cache.ln2.0, &cache.ffn, dy, rng),
+        };
+        let (dln2, _, _) = layer_norm_grad(&cache.x_mid, &self.ln2_s,
+                                           &cache.ln2.1, &cache.ln2.2,
+                                           &ffn_grads.dx);
+        // d x_mid = dy (residual) + dln2
+        let mut dxm = dy.clone();
+        for (o, v) in dxm.data.iter_mut().zip(&dln2.data) {
+            *o += v;
+        }
+        // attention branch
+        let (da, _, _, _, _) = self.attn.backward(&cache.ln1.0, &cache.attn,
+                                                  &dxm, batch, n);
+        let (dln1, _, _) = layer_norm_grad(&cache.h1, &self.ln1_s,
+                                           &cache.ln1.1, &cache.ln1.2, &da);
+        let mut dx = dxm;
+        for (o, v) in dx.data.iter_mut().zip(&dln1.data) {
+            *o += v;
+        }
+        (dx, ffn_grads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand(shape: &[usize], seed: u64) -> Tensor {
+        Tensor::normal(shape, 0.5, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let x = rand(&[4, 16], 0);
+        let (y, _, _) = layer_norm(&x, &Tensor::ones(&[16]), &Tensor::zeros(&[16]));
+        for i in 0..4 {
+            let row = &y.data[i * 16..(i + 1) * 16];
+            let mu: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / 16.0;
+            assert!(mu.abs() < 1e-5 && (var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn layer_norm_grad_finite_difference() {
+        let x = rand(&[2, 8], 1);
+        let s = rand(&[8], 2);
+        let b = rand(&[8], 3);
+        let (_, means, rstds) = layer_norm(&x, &s, &b);
+        let dy = Tensor::ones(&[2, 8]);
+        let (dx, _, _) = layer_norm_grad(&x, &s, &means, &rstds, &dy);
+        let h = 1e-3f32;
+        for k in 0..x.len() {
+            let mut xp = x.clone();
+            xp.data[k] += h;
+            let mut xm = x.clone();
+            xm.data[k] -= h;
+            let fd = ((layer_norm(&xp, &s, &b).0.sum()
+                - layer_norm(&xm, &s, &b).0.sum()) / (2.0 * h as f64)) as f32;
+            assert!((dx.data[k] - fd).abs() < 1e-2, "k={k}");
+        }
+    }
+
+    #[test]
+    fn attention_causality() {
+        // output at position i must not depend on inputs at positions > i
+        let mut rng = Rng::new(4);
+        let attn = Attention::new(8, 2, &mut rng);
+        let x1 = rand(&[4, 8], 5);
+        let mut x2 = x1.clone();
+        // perturb the LAST position only
+        for j in 0..8 {
+            x2.data[3 * 8 + j] += 1.0;
+        }
+        let (y1, _) = attn.forward(&x1, 1, 4);
+        let (y2, _) = attn.forward(&x2, 1, 4);
+        for i in 0..3 {
+            for j in 0..8 {
+                assert!((y1.data[i * 8 + j] - y2.data[i * 8 + j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn attention_probs_rows_sum_to_one() {
+        let mut rng = Rng::new(6);
+        let attn = Attention::new(8, 2, &mut rng);
+        let x = rand(&[6, 8], 7);
+        let (_, cache) = attn.forward(&x, 1, 6);
+        for p in &cache.probs {
+            for i in 0..6 {
+                let s: f32 = p.data[i * 6..(i + 1) * 6].iter().sum();
+                assert!((s - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn attention_backward_finite_difference() {
+        let mut rng = Rng::new(8);
+        let attn = Attention::new(4, 1, &mut rng);
+        let x = rand(&[3, 4], 9);
+        let (_, cache) = attn.forward(&x, 1, 3);
+        let dy = Tensor::ones(&[3, 4]);
+        let (dx, dwqkv, _, _, _) = attn.backward(&x, &cache, &dy, 1, 3);
+        let h = 1e-3f32;
+        for k in 0..x.len() {
+            let mut xp = x.clone();
+            xp.data[k] += h;
+            let mut xm = x.clone();
+            xm.data[k] -= h;
+            let fd = ((attn.forward(&xp, 1, 3).0.sum()
+                - attn.forward(&xm, 1, 3).0.sum()) / (2.0 * h as f64)) as f32;
+            assert!((dx.data[k] - fd).abs() < 2e-2, "dx k={k}: {} vs {fd}", dx.data[k]);
+        }
+        for &k in &[0usize, 7, 20] {
+            let mut ap = attn.clone();
+            ap.w_qkv.data[k] += h;
+            let mut am = attn.clone();
+            am.w_qkv.data[k] -= h;
+            let fd = ((ap.forward(&x, 1, 3).0.sum()
+                - am.forward(&x, 1, 3).0.sum()) / (2.0 * h as f64)) as f32;
+            assert!((dwqkv.data[k] - fd).abs() < 2e-2, "dwqkv k={k}");
+        }
+    }
+
+    #[test]
+    fn block_forward_backward_shapes() {
+        let mut rng = Rng::new(10);
+        for sparse in [false, true] {
+            let blk = TransformerBlock::new(16, 8, 2, sparse, &mut rng);
+            let x = rand(&[8, 16], 11);
+            let (y, cache) = blk.forward(&x, 2, 4);
+            assert_eq!(y.shape, vec![8, 16]);
+            let dy = Tensor::ones(&[8, 16]);
+            let (dx, g) = blk.backward(&cache, &dy, 2, 4, &mut rng);
+            assert_eq!(dx.shape, vec![8, 16]);
+            assert_eq!(g.dw1.shape, vec![16, 16]);
+        }
+    }
+
+    #[test]
+    fn block_backward_finite_difference_dense() {
+        let mut rng = Rng::new(12);
+        let blk = TransformerBlock::new(8, 4, 2, false, &mut rng);
+        let x = rand(&[4, 8], 13);
+        let (_, cache) = blk.forward(&x, 1, 4);
+        let dy = Tensor::ones(&[4, 8]);
+        let (dx, _) = blk.backward(&cache, &dy, 1, 4, &mut rng);
+        let h = 1e-3f32;
+        for &k in &[0usize, 5, 17, 31] {
+            let mut xp = x.clone();
+            xp.data[k] += h;
+            let mut xm = x.clone();
+            xm.data[k] -= h;
+            let fd = ((blk.forward(&xp, 1, 4).0.sum()
+                - blk.forward(&xm, 1, 4).0.sum()) / (2.0 * h as f64)) as f32;
+            assert!((dx.data[k] - fd).abs() < 3e-2, "k={k}: {} vs {fd}", dx.data[k]);
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Flip rate (Definition 4.1) and per-block flip statistics (Fig. 1-3).
+//!
+//! The flip rate r_t = ||m(w_t) - m(w_{t-1})||_1 / D monitors how fast the
+//! sparse connectivity is changing. The paper's health criterion: r_t
+//! should RISE early (explore connection modes) then FADE to ~0 (converge);
+//! sustained r_t above the dense baseline ("flip-rate explosion") predicts
+//! an accuracy loss (Table 1). `FlipMonitor` tracks the global rate;
+//! `BlockFlipStats` reproduces the per-4x4-block scatter of Fig. 2
+//! (cumulative flips vs. L1-norm gap between the two best masks).
+
+use super::mask::{prune24_mask, Mask};
+use super::transposable::{best_pattern, PATTERNS};
+use crate::tensor::Tensor;
+
+/// Definition 4.1 on explicit masks.
+pub fn flip_rate(prev: &Mask, new: &Mask) -> f64 {
+    prev.hamming(new) as f64 / prev.len() as f64
+}
+
+/// Running flip-rate monitor over one weight matrix.
+///
+/// Mirrors the paper's dense-baseline trick: for dense training the monitor
+/// prunes a *copy* of the weights each step (the pruned weights are never
+/// used), giving the "virtual" flip-rate curve dense training would have.
+#[derive(Clone, Debug)]
+pub struct FlipMonitor {
+    prev: Option<Mask>,
+    pub history: Vec<f64>,
+}
+
+impl FlipMonitor {
+    pub fn new() -> Self {
+        FlipMonitor { prev: None, history: Vec::new() }
+    }
+
+    /// Observe the current dense weights; returns r_t (0.0 on first call).
+    pub fn observe(&mut self, w: &Tensor) -> f64 {
+        let m = prune24_mask(w);
+        let r = match &self.prev {
+            Some(p) => flip_rate(p, &m),
+            None => 0.0,
+        };
+        self.prev = Some(m);
+        self.history.push(r);
+        r
+    }
+
+    /// Set the differencing baseline WITHOUT recording a history entry
+    /// (checkpoint resume: re-seed from the restored weights).
+    pub fn seed_from(&mut self, w: &Tensor) {
+        self.prev = Some(prune24_mask(w));
+    }
+
+    /// Observe an externally computed mask (e.g. the transposable one).
+    pub fn observe_mask(&mut self, m: Mask) -> f64 {
+        let r = match &self.prev {
+            Some(p) => flip_rate(p, &m),
+            None => 0.0,
+        };
+        self.prev = Some(m);
+        self.history.push(r);
+        r
+    }
+
+    pub fn last(&self) -> f64 {
+        *self.history.last().unwrap_or(&0.0)
+    }
+
+    /// Mean flip rate over a window (the tuner's sampled statistic, §4.3).
+    pub fn mean_over(&self, last_n: usize) -> f64 {
+        if self.history.is_empty() {
+            return 0.0;
+        }
+        let n = last_n.min(self.history.len());
+        let s: f64 = self.history[self.history.len() - n..].iter().sum();
+        s / n as f64
+    }
+
+    /// Paper's health criterion: peak early, tail low.
+    /// Returns (peak, tail_mean, healthy).
+    pub fn health(&self, tail_frac: f64) -> (f64, f64, bool) {
+        if self.history.len() < 4 {
+            return (0.0, 0.0, true);
+        }
+        let peak = self.history.iter().cloned().fold(0.0, f64::max);
+        let tail_n = ((self.history.len() as f64) * tail_frac).max(1.0) as usize;
+        let tail = self.mean_over(tail_n);
+        (peak, tail, tail < 0.5 * peak + 1e-12)
+    }
+}
+
+impl Default for FlipMonitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-4x4-block statistics for the Fig. 2 scatter: cumulative flip count
+/// and the "L1 norm gap" g_i = ||m1 ⊙ w||_1 - ||m2 ⊙ w||_1 between the
+/// best and second-best transposable patterns of each block.
+#[derive(Clone, Debug)]
+pub struct BlockFlipStats {
+    pub block_rows: usize,
+    pub block_cols: usize,
+    /// cumulative number of mask flips per block (any bit change counts 1)
+    pub flips: Vec<u64>,
+    prev_pattern: Vec<usize>,
+    initialized: bool,
+}
+
+impl BlockFlipStats {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows % 4 == 0 && cols % 4 == 0);
+        let n = (rows / 4) * (cols / 4);
+        BlockFlipStats {
+            block_rows: rows / 4,
+            block_cols: cols / 4,
+            flips: vec![0; n],
+            prev_pattern: vec![usize::MAX; n],
+            initialized: false,
+        }
+    }
+
+    /// Observe current weights; count a flip for every block whose optimal
+    /// transposable pattern changed since the last observation.
+    pub fn observe(&mut self, w: &Tensor) {
+        let (r, c) = w.dims2();
+        assert_eq!((r / 4, c / 4), (self.block_rows, self.block_cols));
+        let mut block = [0f32; 16];
+        for bi in 0..self.block_rows {
+            for bj in 0..self.block_cols {
+                for k in 0..4 {
+                    for l in 0..4 {
+                        block[k * 4 + l] = w.data[(bi * 4 + k) * c + bj * 4 + l].abs();
+                    }
+                }
+                let pat = best_pattern(&block);
+                let idx = bi * self.block_cols + bj;
+                if self.initialized && self.prev_pattern[idx] != pat {
+                    self.flips[idx] += 1;
+                }
+                self.prev_pattern[idx] = pat;
+            }
+        }
+        self.initialized = true;
+    }
+
+    /// L1-norm gap per block: best minus second-best pattern score.
+    /// Small gap + high flip count = the paper's "dilemma point".
+    pub fn l1_gaps(&self, w: &Tensor) -> Vec<f64> {
+        let (_, c) = w.dims2();
+        let mut out = Vec::with_capacity(self.flips.len());
+        let mut block = [0f32; 16];
+        for bi in 0..self.block_rows {
+            for bj in 0..self.block_cols {
+                for k in 0..4 {
+                    for l in 0..4 {
+                        block[k * 4 + l] = w.data[(bi * 4 + k) * c + bj * 4 + l].abs();
+                    }
+                }
+                let (mut s1, mut s2) = (f32::MIN, f32::MIN);
+                for pat in PATTERNS.iter() {
+                    let mut s = 0f32;
+                    for k in 0..16 {
+                        s += pat[k] * block[k];
+                    }
+                    if s > s1 {
+                        s2 = s1;
+                        s1 = s;
+                    } else if s > s2 {
+                        s2 = s;
+                    }
+                }
+                out.push((s1 - s2) as f64);
+            }
+        }
+        out
+    }
+
+    /// (cumulative flips, current L1 gap) rows for the Fig. 2 scatter.
+    pub fn scatter(&self, w: &Tensor) -> Vec<(u64, f64)> {
+        self.flips.iter().cloned().zip(self.l1_gaps(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn flip_rate_zero_for_identical_masks() {
+        let m = Mask::ones(4, 8);
+        assert_eq!(flip_rate(&m, &m.clone()), 0.0);
+    }
+
+    #[test]
+    fn flip_rate_range_and_symmetry() {
+        let a = Mask { rows: 1, cols: 4, data: vec![1, 1, 0, 0] };
+        let b = Mask { rows: 1, cols: 4, data: vec![0, 0, 1, 1] };
+        assert_eq!(flip_rate(&a, &b), 1.0);
+        assert_eq!(flip_rate(&b, &a), 1.0);
+    }
+
+    #[test]
+    fn monitor_first_observation_is_zero() {
+        let mut mon = FlipMonitor::new();
+        let mut rng = Rng::new(0);
+        let w = Tensor::normal(&[8, 16], 1.0, &mut rng);
+        assert_eq!(mon.observe(&w), 0.0);
+        // same weights -> no flips
+        assert_eq!(mon.observe(&w), 0.0);
+    }
+
+    #[test]
+    fn monitor_detects_changes() {
+        let mut mon = FlipMonitor::new();
+        let mut rng = Rng::new(1);
+        let w1 = Tensor::normal(&[8, 16], 1.0, &mut rng);
+        let w2 = Tensor::normal(&[8, 16], 1.0, &mut rng);
+        mon.observe(&w1);
+        let r = mon.observe(&w2);
+        assert!(r > 0.0 && r <= 1.0);
+        assert_eq!(mon.history.len(), 2);
+    }
+
+    #[test]
+    fn health_passes_for_decaying_curve() {
+        let mut mon = FlipMonitor::new();
+        mon.history = vec![0.0, 0.2, 0.4, 0.3, 0.1, 0.02, 0.01, 0.01];
+        let (peak, tail, healthy) = mon.health(0.25);
+        assert_eq!(peak, 0.4);
+        assert!(tail < 0.05);
+        assert!(healthy);
+    }
+
+    #[test]
+    fn health_fails_for_exploding_curve() {
+        let mut mon = FlipMonitor::new();
+        mon.history = vec![0.1, 0.2, 0.3, 0.35, 0.4, 0.42, 0.45, 0.5];
+        let (_, _, healthy) = mon.health(0.25);
+        assert!(!healthy);
+    }
+
+    #[test]
+    fn block_stats_count_pattern_changes() {
+        let mut rng = Rng::new(2);
+        let w1 = Tensor::normal(&[8, 8], 1.0, &mut rng);
+        let mut stats = BlockFlipStats::new(8, 8);
+        stats.observe(&w1);
+        stats.observe(&w1); // unchanged -> no flips
+        assert!(stats.flips.iter().all(|&f| f == 0));
+        let w2 = Tensor::normal(&[8, 8], 1.0, &mut rng);
+        stats.observe(&w2);
+        assert!(stats.flips.iter().any(|&f| f > 0));
+    }
+
+    #[test]
+    fn l1_gap_nonnegative() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::normal(&[8, 12], 1.0, &mut rng);
+        let stats = BlockFlipStats::new(8, 12);
+        assert!(stats.l1_gaps(&w).iter().all(|&g| g >= 0.0));
+    }
+
+    #[test]
+    fn scatter_dimensions() {
+        let mut rng = Rng::new(4);
+        let w = Tensor::normal(&[8, 8], 1.0, &mut rng);
+        let mut stats = BlockFlipStats::new(8, 8);
+        stats.observe(&w);
+        assert_eq!(stats.scatter(&w).len(), 4);
+    }
+}

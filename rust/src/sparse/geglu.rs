@@ -1,0 +1,259 @@
+//! Gated activations on column-major buffers (paper §5.2, Table 4).
+//!
+//! After a 2:4-spMM the fused output Z ∈ R^{p×2r} is COLUMN-major
+//! (Appendix A.2, Table 12). Computing GELU(Z1) ⊙ Z2 by traversing rows
+//! ("intuitive") therefore strides by p between consecutive accesses and
+//! thrashes the cache; traversing columns ("ours") is contiguous. Both
+//! variants are implemented faithfully so the Table-4 bench measures the
+//! real cache effect on this substrate, and the column-order kernel is the
+//! one the FFN substrate uses.
+
+use crate::tensor::Tensor;
+
+const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+const GELU_C: f32 = 0.044_715;
+
+/// tanh-approximated GELU — matches `kernels/ref.gelu_tanh` bit-for-bit
+/// at f32 (same constants, same operation order).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + GELU_C * x * x * x)).tanh())
+}
+
+/// Derivative of the tanh-approximated GELU.
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    let inner = SQRT_2_OVER_PI * (x + GELU_C * x * x * x);
+    let t = inner.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * x * x)
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// A column-major (p, c) matrix: element (i, j) lives at data[j * p + i].
+/// This is exactly the layout a 2:4-spMM epilogue leaves behind.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColMajor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl ColMajor {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        ColMajor { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_row_major(t: &Tensor) -> Self {
+        let (r, c) = t.dims2();
+        let mut out = ColMajor::zeros(r, c);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = t.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    pub fn to_row_major(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[i * self.cols + j] = self.data[j * self.rows + i];
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[j * self.rows + i]
+    }
+}
+
+/// "Ours" (paper §5.2): traverse along COLUMNS — contiguous in the
+/// column-major layout, cache-friendly. Z: (p, 2r) -> out: (p, r).
+pub fn geglu_col_order(z: &ColMajor) -> ColMajor {
+    let p = z.rows;
+    let r = z.cols / 2;
+    let mut out = ColMajor::zeros(p, r);
+    for j in 0..r {
+        let z1 = &z.data[j * p..(j + 1) * p];
+        let z2 = &z.data[(r + j) * p..(r + j + 1) * p];
+        let o = &mut out.data[j * p..(j + 1) * p];
+        for i in 0..p {
+            o[i] = gelu(z1[i]) * z2[i];
+        }
+    }
+    out
+}
+
+/// "Intuitive" baseline: traverse along ROWS — strided by p in the
+/// column-major layout; every access is a potential cache miss. Kept
+/// deliberately row-ordered (this is the baseline under test in Table 4).
+pub fn geglu_row_order(z: &ColMajor) -> ColMajor {
+    let p = z.rows;
+    let r = z.cols / 2;
+    let mut out = ColMajor::zeros(p, r);
+    for i in 0..p {
+        for j in 0..r {
+            let a = z.data[j * p + i];
+            let b = z.data[(r + j) * p + i];
+            out.data[j * p + i] = gelu(a) * b;
+        }
+    }
+    out
+}
+
+/// SwiGLU, column-order (used by the FFN substrate when configured).
+pub fn swiglu_col_order(z: &ColMajor) -> ColMajor {
+    let p = z.rows;
+    let r = z.cols / 2;
+    let mut out = ColMajor::zeros(p, r);
+    for j in 0..r {
+        let z1 = &z.data[j * p..(j + 1) * p];
+        let z2 = &z.data[(r + j) * p..(r + j + 1) * p];
+        let o = &mut out.data[j * p..(j + 1) * p];
+        for i in 0..p {
+            o[i] = silu(z1[i]) * z2[i];
+        }
+    }
+    out
+}
+
+/// Row-major fused GEGLU for the substrate paths that keep row-major
+/// activations (FFN forward on the dense baseline). z: (p, 2r) row-major.
+pub fn geglu_row_major(z: &Tensor) -> Tensor {
+    let (p, c2) = z.dims2();
+    let r = c2 / 2;
+    let mut out = Tensor::zeros(&[p, r]);
+    for i in 0..p {
+        let zrow = &z.data[i * c2..(i + 1) * c2];
+        let orow = &mut out.data[i * r..(i + 1) * r];
+        for j in 0..r {
+            orow[j] = gelu(zrow[j]) * zrow[r + j];
+        }
+    }
+    out
+}
+
+/// Backward of row-major GEGLU: given z and upstream g (p, r), return
+/// gradient wrt z (p, 2r).
+pub fn geglu_row_major_grad(z: &Tensor, g: &Tensor) -> Tensor {
+    let (p, c2) = z.dims2();
+    let r = c2 / 2;
+    assert_eq!(g.dims2(), (p, r));
+    let mut out = Tensor::zeros(&[p, c2]);
+    for i in 0..p {
+        let zrow = &z.data[i * c2..(i + 1) * c2];
+        let grow = &g.data[i * r..(i + 1) * r];
+        let orow = &mut out.data[i * c2..(i + 1) * c2];
+        for j in 0..r {
+            let (z1, z2) = (zrow[j], zrow[r + j]);
+            orow[j] = gelu_grad(z1) * z2 * grow[j];
+            orow[r + j] = gelu(z1) * grow[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gelu_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(100.0) - 100.0).abs() < 1e-3);
+        assert!(gelu(-100.0).abs() < 1e-3);
+        // antisymmetric identity: gelu(x) - gelu(-x) == x (holds exactly
+        // for the tanh approximation too)
+        for &x in &[0.5f32, 1.0, 2.0, 3.0] {
+            assert!((gelu(x) - gelu(-x) - x).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3f32;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn silu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, 0.0, 1.3] {
+            let h = 1e-3f32;
+            let fd = (silu(x + h) - silu(x - h)) / (2.0 * h);
+            assert!((silu_grad(x) - fd).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn col_major_roundtrip() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::normal(&[5, 7], 1.0, &mut rng);
+        assert_eq!(ColMajor::from_row_major(&t).to_row_major(), t);
+    }
+
+    #[test]
+    fn row_and_col_order_agree() {
+        let mut rng = Rng::new(1);
+        let z = ColMajor::from_row_major(&Tensor::normal(&[16, 32], 1.0, &mut rng));
+        let a = geglu_col_order(&z);
+        let b = geglu_row_order(&z);
+        assert_eq!(a.rows, 16);
+        assert_eq!(a.cols, 16);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn col_order_matches_row_major_kernel() {
+        let mut rng = Rng::new(2);
+        let z_rm = Tensor::normal(&[8, 12], 1.0, &mut rng);
+        let via_cm = geglu_col_order(&ColMajor::from_row_major(&z_rm)).to_row_major();
+        let direct = geglu_row_major(&z_rm);
+        assert!(via_cm.max_abs_diff(&direct) < 1e-6);
+    }
+
+    #[test]
+    fn geglu_grad_finite_difference() {
+        let mut rng = Rng::new(3);
+        let z = Tensor::normal(&[2, 8], 1.0, &mut rng);
+        let g = Tensor::ones(&[2, 4]);
+        let grad = geglu_row_major_grad(&z, &g);
+        let h = 1e-3f32;
+        for k in 0..z.len() {
+            let mut zp = z.clone();
+            zp.data[k] += h;
+            let mut zm = z.clone();
+            zm.data[k] -= h;
+            let fd: f32 = (geglu_row_major(&zp).sum() - geglu_row_major(&zm).sum()) as f32
+                / (2.0 * h);
+            assert!((grad.data[k] - fd).abs() < 2e-2, "k={k} {} vs {fd}", grad.data[k]);
+        }
+    }
+
+    #[test]
+    fn zero_gate_zeroes_output() {
+        let mut z = Tensor::zeros(&[2, 8]);
+        for j in 0..4 {
+            z.data[j] = 1.0; // z1 nonzero, z2 (gate) zero
+        }
+        assert_eq!(geglu_row_major(&z).data, vec![0.0; 8]);
+    }
+}

@@ -1,0 +1,205 @@
+//! Dense f32 GEMM baselines for the CPU training substrate.
+//!
+//! These are the "dense tensor core" stand-ins that the 2:4 spMM
+//! (`spmm.rs`) is benchmarked against (Fig. 7, Tables 11/13). Loop orders
+//! are chosen so the innermost loop is a contiguous dot product or a
+//! contiguous AXPY — the scalar-CPU equivalent of a well-tiled GEMM. The
+//! three variants mirror the three GEMMs of a linear layer (paper Eq. 1):
+//!
+//!   `gemm_nt`: Z  = X  W^T   (p,q)x(r,q)->(p,r)   output activations
+//!   `gemm_nn`: ∇X = ∇Z W     (p,r)x(r,q)->(p,q)   input gradients
+//!   `gemm_tn`: ∇W = ∇Z^T X   (p,r)x(p,q)->(r,q)   weight gradients
+
+use crate::tensor::Tensor;
+
+/// C = A B^T. A: (p,q), B: (r,q) row-major -> C: (p,r).
+/// Inner loop: contiguous dot of A-row and B-row.
+pub fn gemm_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (p, q) = a.dims2();
+    let (r, qb) = b.dims2();
+    assert_eq!(q, qb, "gemm_nt: inner dims {q} vs {qb}");
+    let mut c = Tensor::zeros(&[p, r]);
+    gemm_nt_into(a, b, &mut c);
+    c
+}
+
+pub fn gemm_nt_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, q) = a.dims2();
+    let (r, _) = b.dims2();
+    for i in 0..p {
+        let arow = &a.data[i * q..(i + 1) * q];
+        let crow = &mut c.data[i * r..(i + 1) * r];
+        for j in 0..r {
+            let brow = &b.data[j * q..(j + 1) * q];
+            crow[j] = dot(arow, brow);
+        }
+    }
+}
+
+/// C = A B. A: (p,r), B: (r,q) row-major -> C: (p,q).
+/// Inner loop: contiguous AXPY over C-row (B accessed row-wise).
+pub fn gemm_nn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (p, r) = a.dims2();
+    let (rb, q) = b.dims2();
+    assert_eq!(r, rb, "gemm_nn: inner dims {r} vs {rb}");
+    let mut c = Tensor::zeros(&[p, q]);
+    gemm_nn_into(a, b, &mut c);
+    c
+}
+
+pub fn gemm_nn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, r) = a.dims2();
+    let (_, q) = b.dims2();
+    c.data.fill(0.0);
+    for i in 0..p {
+        let crow = &mut c.data[i * q..(i + 1) * q];
+        for k in 0..r {
+            let aik = a.data[i * r + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[k * q..(k + 1) * q];
+            axpy(aik, brow, crow);
+        }
+    }
+}
+
+/// C = A^T B. A: (p,r), B: (p,q) row-major -> C: (r,q).
+/// Inner loop: contiguous AXPY over C-row (both operands row-wise).
+pub fn gemm_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (p, r) = a.dims2();
+    let (pb, q) = b.dims2();
+    assert_eq!(p, pb, "gemm_tn: outer dims {p} vs {pb}");
+    let mut c = Tensor::zeros(&[r, q]);
+    gemm_tn_into(a, b, &mut c);
+    c
+}
+
+pub fn gemm_tn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, r) = a.dims2();
+    let (_, q) = b.dims2();
+    c.data.fill(0.0);
+    for i in 0..p {
+        let brow = &b.data[i * q..(i + 1) * q];
+        for k in 0..r {
+            let aik = a.data[i * r + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[k * q..(k + 1) * q];
+            axpy(aik, brow, crow);
+        }
+    }
+}
+
+/// Contiguous dot product, 4-way unrolled for ILP.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for k in 0..chunks {
+        let i = k * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x over contiguous slices.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Reference (naive triple loop) used only by tests.
+#[cfg(test)]
+pub fn gemm_nt_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (p, q) = a.dims2();
+    let (r, _) = b.dims2();
+    let mut c = Tensor::zeros(&[p, r]);
+    for i in 0..p {
+        for j in 0..r {
+            let mut s = 0f32;
+            for k in 0..q {
+                s += a.data[i * q + k] * b.data[j * q + k];
+            }
+            c.data[i * r + j] = s;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand(shape: &[usize], seed: u64) -> Tensor {
+        Tensor::normal(shape, 1.0, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn nt_matches_naive() {
+        let a = rand(&[7, 13], 0);
+        let b = rand(&[5, 13], 1);
+        let c = gemm_nt(&a, &b);
+        assert!(c.max_abs_diff(&gemm_nt_naive(&a, &b)) < 1e-4);
+    }
+
+    #[test]
+    fn nn_consistent_with_nt() {
+        // A B == A (B^T)^T: gemm_nn(a, b) == gemm_nt(a, b.t())
+        let a = rand(&[6, 8], 2);
+        let b = rand(&[8, 10], 3);
+        let via_nt = gemm_nt(&a, &b.t());
+        assert!(gemm_nn(&a, &b).max_abs_diff(&via_nt) < 1e-4);
+    }
+
+    #[test]
+    fn tn_consistent_with_nn() {
+        // A^T B == gemm_nn(A^T, B)
+        let a = rand(&[9, 4], 4);
+        let b = rand(&[9, 6], 5);
+        let direct = gemm_tn(&a, &b);
+        assert_eq!(direct.shape, vec![4, 6]);
+        assert!(direct.max_abs_diff(&gemm_nn(&a.t(), &b)) < 1e-4);
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let mut eye = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        let x = rand(&[3, 4], 6);
+        assert!(gemm_nn(&x, &eye).max_abs_diff(&x) < 1e-6);
+        assert!(gemm_nt(&x, &eye).max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn dot_unroll_matches_scalar() {
+        let a: Vec<f32> = (0..17).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..17).map(|i| 1.0 - i as f32 * 0.1).collect();
+        let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - scalar).abs() < 1e-4);
+    }
+
+    #[test]
+    fn shapes_checked() {
+        let a = rand(&[2, 4], 7);
+        let b = rand(&[3, 5], 8);
+        let result = std::panic::catch_unwind(|| gemm_nt(&a, &b));
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,267 @@
+//! 2:4 sparsity masks and magnitude pruning (paper Eq. 2-3, Appendix A.1).
+//!
+//! A [`Mask`] is a {0,1} byte matrix aligned with a weight tensor. The
+//! magnitude pruners match the python oracle (`kernels/ref.py`) exactly:
+//! keep the two largest |w| of each consecutive group of four, ties broken
+//! toward the LOWER index.
+
+use crate::tensor::Tensor;
+
+/// {0,1} mask with the same (row-major) layout as its weight tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u8>,
+}
+
+impl Mask {
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Mask { rows, cols, data: vec![1; rows * cols] }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mask { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> u8 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.data.iter().map(|&b| b as usize).sum()
+    }
+
+    /// Number of positions where the two masks differ (Definition 4.1's
+    /// numerator ||m_t - m_{t-1}||_1).
+    pub fn hamming(&self, other: &Mask) -> usize {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+
+    /// Apply to a weight tensor: W ⊙ M.
+    pub fn apply(&self, w: &Tensor) -> Tensor {
+        let (r, c) = w.dims2();
+        assert_eq!((r, c), (self.rows, self.cols));
+        let data = w
+            .data
+            .iter()
+            .zip(&self.data)
+            .map(|(&x, &m)| if m != 0 { x } else { 0.0 })
+            .collect();
+        Tensor { shape: w.shape.clone(), data }
+    }
+
+    /// Apply in place (hot path in the trainer: no allocation).
+    pub fn apply_into(&self, w: &Tensor, out: &mut Tensor) {
+        assert_eq!(w.shape, out.shape);
+        for ((o, &x), &m) in out.data.iter_mut().zip(&w.data).zip(&self.data) {
+            *o = if m != 0 { x } else { 0.0 };
+        }
+    }
+
+    pub fn transpose(&self) -> Mask {
+        let mut out = Mask::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Is every consecutive group of 4 along rows exactly 2-sparse?
+    pub fn is_24_row_wise(&self) -> bool {
+        if self.cols % 4 != 0 {
+            return false;
+        }
+        self.data
+            .chunks_exact(4)
+            .all(|g| g.iter().map(|&b| b as usize).sum::<usize>() == 2)
+    }
+
+    /// Transposable validity: every 4x4 block has 2 ones per row AND column.
+    pub fn is_transposable(&self) -> bool {
+        if self.rows % 4 != 0 || self.cols % 4 != 0 {
+            return false;
+        }
+        for bi in (0..self.rows).step_by(4) {
+            for bj in (0..self.cols).step_by(4) {
+                for k in 0..4 {
+                    let row_sum: u8 = (0..4).map(|l| self.at(bi + k, bj + l)).sum();
+                    let col_sum: u8 = (0..4).map(|l| self.at(bi + l, bj + k)).sum();
+                    if row_sum != 2 || col_sum != 2 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// As f32 tensor (for feeding the XLA executables).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor {
+            shape: vec![self.rows, self.cols],
+            data: self.data.iter().map(|&b| b as f32).collect(),
+        }
+    }
+}
+
+/// Index pair of the two kept elements of a group of four: the two largest
+/// |w|, ties toward the lower index. Branch-light and allocation-free.
+#[inline]
+pub fn top2_of4(g: &[f32]) -> (usize, usize) {
+    debug_assert_eq!(g.len(), 4);
+    let mut best = 0usize;
+    for k in 1..4 {
+        if g[k].abs() > g[best].abs() {
+            best = k;
+        }
+    }
+    let mut second = usize::MAX;
+    for k in 0..4 {
+        if k == best {
+            continue;
+        }
+        if second == usize::MAX || g[k].abs() > g[second].abs() {
+            second = k;
+        }
+    }
+    if best < second {
+        (best, second)
+    } else {
+        (second, best)
+    }
+}
+
+/// Row-wise magnitude 2:4 mask of a 2-D tensor (cols % 4 == 0).
+pub fn prune24_mask(w: &Tensor) -> Mask {
+    let (r, c) = w.dims2();
+    assert_eq!(c % 4, 0, "cols {c} not a multiple of 4");
+    let mut mask = Mask::zeros(r, c);
+    for (g, m) in w.data.chunks_exact(4).zip(mask.data.chunks_exact_mut(4)) {
+        let (a, b) = top2_of4(g);
+        m[a] = 1;
+        m[b] = 1;
+    }
+    mask
+}
+
+/// Row-wise magnitude 2:4 pruning: W ⊙ prune24_mask(W).
+pub fn prune24(w: &Tensor) -> Tensor {
+    prune24_mask(w).apply(w)
+}
+
+/// Column-wise 2:4 mask: groups of four run down each column
+/// (equals prune24 of the transpose, transposed back).
+pub fn prune24_mask_colwise(w: &Tensor) -> Mask {
+    let (r, c) = w.dims2();
+    assert_eq!(r % 4, 0, "rows {r} not a multiple of 4");
+    let mut mask = Mask::zeros(r, c);
+    let mut g = [0f32; 4];
+    for j in 0..c {
+        for bi in (0..r).step_by(4) {
+            for k in 0..4 {
+                g[k] = w.data[(bi + k) * c + j];
+            }
+            let (a, b) = top2_of4(&g);
+            mask.data[(bi + a) * c + j] = 1;
+            mask.data[(bi + b) * c + j] = 1;
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top2_basics() {
+        assert_eq!(top2_of4(&[1.0, -3.0, 2.0, -0.5]), (1, 2));
+        assert_eq!(top2_of4(&[0.0, 0.0, 5.0, 1.0]), (2, 3));
+        // ties -> lower indices
+        assert_eq!(top2_of4(&[2.0, 2.0, 2.0, 2.0]), (0, 1));
+        assert_eq!(top2_of4(&[0.0, 0.0, 0.0, 0.0]), (0, 1));
+    }
+
+    #[test]
+    fn prune_keeps_top2() {
+        let w = Tensor::from_vec(&[2, 4], vec![1., -3., 2., -0.5, 0., 0., 5., 1.]);
+        let p = prune24(&w);
+        assert_eq!(p.data, vec![0., -3., 2., 0., 0., 0., 5., 1.]);
+    }
+
+    #[test]
+    fn mask_is_24_valid() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let w = Tensor::normal(&[16, 32], 1.0, &mut rng);
+        let m = prune24_mask(&w);
+        assert!(m.is_24_row_wise());
+        assert_eq!(m.count_ones(), 16 * 32 / 2);
+    }
+
+    #[test]
+    fn colwise_equals_transposed_rowwise() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let w = Tensor::normal(&[8, 12], 1.0, &mut rng);
+        let a = prune24_mask_colwise(&w);
+        let b = prune24_mask(&w.t()).transpose();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hamming_and_apply() {
+        let a = Mask { rows: 1, cols: 4, data: vec![1, 1, 0, 0] };
+        let b = Mask { rows: 1, cols: 4, data: vec![1, 0, 1, 0] };
+        assert_eq!(a.hamming(&b), 2);
+        let w = Tensor::from_vec(&[1, 4], vec![5., 6., 7., 8.]);
+        assert_eq!(a.apply(&w).data, vec![5., 6., 0., 0.]);
+    }
+
+    #[test]
+    fn apply_into_matches_apply() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let w = Tensor::normal(&[4, 8], 1.0, &mut rng);
+        let m = prune24_mask(&w);
+        let mut out = Tensor::zeros(&[4, 8]);
+        m.apply_into(&w, &mut out);
+        assert_eq!(out, m.apply(&w));
+    }
+
+    #[test]
+    fn transposable_check() {
+        // the identity-pair pattern: rows 1100/1100/0011/0011 is transposable
+        let m = Mask {
+            rows: 4,
+            cols: 4,
+            data: vec![1, 1, 0, 0, 1, 1, 0, 0, 0, 0, 1, 1, 0, 0, 1, 1],
+        };
+        assert!(m.is_transposable());
+        let bad = Mask { rows: 4, cols: 4, data: vec![1; 16] };
+        assert!(!bad.is_transposable());
+    }
+
+    #[test]
+    fn prune_idempotent() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let w = Tensor::normal(&[8, 16], 1.0, &mut rng);
+        let once = prune24(&w);
+        let twice = prune24(&once);
+        assert_eq!(once, twice);
+    }
+}

@@ -1,0 +1,26 @@
+//! 2:4 semi-structured sparsity substrate.
+//!
+//! Everything the paper's FST (fully sparse training) scheme needs, in
+//! dependency order: masks and magnitude pruning ([`mask`]), the
+//! transposable-mask search of §5.1 ([`transposable`]) and its
+//! 2-approximation baseline ([`two_approx`]), the MVUE gradient estimator
+//! ([`mvue`]), flip-rate instrumentation of §4.1 ([`flip`]), and the CPU
+//! compute substrate standing in for sparse tensor cores: dense GEMMs
+//! ([`gemm`]), compressed 2:4 spMM ([`spmm`]), gated activations
+//! ([`geglu`]), and full FFN / transformer-block workloads ([`ffn`],
+//! [`block`]) for the Fig. 7 / Table 11/13 reproductions.
+
+pub mod block;
+pub mod ffn;
+pub mod flip;
+pub mod geglu;
+pub mod gemm;
+pub mod mask;
+pub mod mvue;
+pub mod spmm;
+pub mod transposable;
+pub mod two_approx;
+pub mod workloads;
+
+pub use mask::{prune24, prune24_mask, Mask};
+pub use transposable::transposable_mask;

@@ -1,0 +1,185 @@
+//! MVUE 2:4 estimator (paper Eq. 6; Chmiel et al. 2023) — Rust port.
+//!
+//! Bit-compatible with the python oracle `kernels/ref.mvue24`: inclusion
+//! probabilities p_i = min(1, 2|a_i|/Σ|a|) with capped-mass redistribution,
+//! realized by systematic sampling (one uniform per group of four), kept
+//! entries rescaled by 1/p_i. Unbiased: E[out] == input.
+//!
+//! The hot-path MVUE runs inside the AOT executables (L1 Pallas kernel in
+//! the backward pass); this port exists for the CPU training substrate
+//! (Fig. 7 / Table 11 benches) and for cross-layer agreement tests.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Inclusion probabilities for one group of four. Up to 3 redistribution
+/// rounds (enough for n=4, k=2), mirroring `ref._mvue24_probs`.
+#[inline]
+pub fn mvue_probs(a: &[f32; 4]) -> [f32; 4] {
+    let absa = [a[0].abs(), a[1].abs(), a[2].abs(), a[3].abs()];
+    let mut frozen = [false; 4];
+    let mut p = [0f32; 4];
+    for _ in 0..3 {
+        let k_left = 2.0 - frozen.iter().filter(|&&f| f).count() as f32;
+        let mut denom = 0f32;
+        for k in 0..4 {
+            if !frozen[k] {
+                denom += absa[k];
+            }
+        }
+        let mut newly = [false; 4];
+        for k in 0..4 {
+            if frozen[k] {
+                p[k] = 1.0;
+            } else if denom > 0.0 {
+                let raw = k_left * absa[k] / denom.max(1e-30);
+                p[k] = raw;
+                if raw >= 1.0 && absa[k] > 0.0 {
+                    newly[k] = true;
+                }
+            } else {
+                p[k] = 0.0;
+            }
+        }
+        for k in 0..4 {
+            frozen[k] |= newly[k];
+        }
+    }
+    for v in p.iter_mut() {
+        *v = v.clamp(0.0, 1.0);
+    }
+    p
+}
+
+/// Systematic 2-of-4 sample for one group given uniform u in [0,1).
+/// Entry i is selected iff u+j falls in its cumulative interval for some
+/// integer offset j in {0, 1}. Exactly matches `ref.mvue24`.
+#[inline]
+pub fn mvue_group(g: &[f32; 4], u: f32) -> [f32; 4] {
+    let p = mvue_probs(g);
+    let mut out = [0f32; 4];
+    let mut lo = 0f32;
+    for k in 0..4 {
+        let hi = lo + p[k];
+        let sel = (u >= lo && u < hi) || (u + 1.0 >= lo && u + 1.0 < hi);
+        if sel {
+            out[k] = g[k] / p[k].max(1e-30);
+        }
+        lo = hi;
+    }
+    out
+}
+
+/// MVUE 2:4 sparsification along rows with externally supplied uniforms
+/// (one per group, row-major) — the deterministic core used by tests.
+pub fn mvue24_with_uniforms(x: &Tensor, u: &[f32]) -> Tensor {
+    let (r, c) = x.dims2();
+    assert_eq!(c % 4, 0);
+    assert_eq!(u.len(), r * c / 4);
+    let mut out = Tensor::zeros(&x.shape);
+    let mut g = [0f32; 4];
+    for (gi, (chunk, dst)) in x
+        .data
+        .chunks_exact(4)
+        .zip(out.data.chunks_exact_mut(4))
+        .enumerate()
+    {
+        g.copy_from_slice(chunk);
+        let o = mvue_group(&g, u[gi]);
+        dst.copy_from_slice(&o);
+    }
+    out
+}
+
+/// MVUE 2:4 sparsification drawing uniforms from `rng`.
+pub fn mvue24(x: &Tensor, rng: &mut Rng) -> Tensor {
+    let (r, c) = x.dims2();
+    let mut u = vec![0f32; r * c / 4];
+    rng.fill_uniform(&mut u);
+    mvue24_with_uniforms(x, &u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probs_sum_to_two_and_bounded() {
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let g = [rng.normal(), rng.normal(), rng.normal(), rng.normal()];
+            let p = mvue_probs(&g);
+            let sum: f32 = p.iter().sum();
+            assert!((sum - 2.0).abs() < 1e-5, "sum={sum} g={g:?}");
+            assert!(p.iter().all(|&v| (0.0..=1.0 + 1e-6).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn output_is_24_sparse() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::normal(&[16, 32], 1.0, &mut rng);
+        let y = mvue24(&x, &mut rng);
+        for g in y.data.chunks_exact(4) {
+            assert!(g.iter().filter(|&&v| v != 0.0).count() <= 2);
+        }
+    }
+
+    #[test]
+    fn unbiased_over_many_draws() {
+        let x = Tensor::from_vec(&[1, 4], vec![3.0, -1.0, 0.5, 2.0]);
+        let mut rng = Rng::new(2);
+        let n = 40_000;
+        let mut acc = [0f64; 4];
+        for _ in 0..n {
+            let y = mvue24(&x, &mut rng);
+            for k in 0..4 {
+                acc[k] += y.data[k] as f64;
+            }
+        }
+        for k in 0..4 {
+            let mean = acc[k] / n as f64;
+            assert!(
+                (mean - x.data[k] as f64).abs() < 0.05,
+                "k={k} mean={mean} true={}",
+                x.data[k]
+            );
+        }
+    }
+
+    #[test]
+    fn exact_when_two_or_fewer_nonzeros() {
+        let x = Tensor::from_vec(&[2, 4], vec![3.0, 0.0, -2.0, 0.0, 0.0, 0.0, 0.0, 5.0]);
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let y = mvue24(&x, &mut rng);
+            assert_eq!(y.data, x.data);
+        }
+    }
+
+    #[test]
+    fn dominant_element_always_kept() {
+        let x = Tensor::from_vec(&[1, 4], vec![100.0, 1.0, 1.0, 1.0]);
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let y = mvue24(&x, &mut rng);
+            assert!((y.data[0] - 100.0).abs() < 1e-3, "{:?}", y.data);
+        }
+    }
+
+    #[test]
+    fn all_zero_group_stays_zero() {
+        let x = Tensor::zeros(&[1, 4]);
+        let mut rng = Rng::new(5);
+        assert_eq!(mvue24(&x, &mut rng).data, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn deterministic_with_fixed_uniforms() {
+        let x = Tensor::from_vec(&[1, 8], vec![1., 2., 3., 4., -4., -3., -2., -1.]);
+        let u = vec![0.3, 0.7];
+        let a = mvue24_with_uniforms(&x, &u);
+        let b = mvue24_with_uniforms(&x, &u);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,199 @@
+//! Transposable 2:4 mask search (paper §5.1, Algorithm 1).
+//!
+//! The paper's key implementation insight: instead of Hubara et al.'s
+//! branchy sort-and-pick per 4x4 block, enumerate the full bank of 90
+//! valid patterns OFFLINE (a 4x4 binary matrix with exactly two 1s per row
+//! and per column) and pick, per block, the pattern maximizing the retained
+//! L1 norm — expressed on GPU as conv2d(|W|, bank, stride=4) + argmax.
+//!
+//! On CPU the same search is a dense dot of each block's 16 |w| values
+//! against the 90x16 bank. We precompute the bank once (`once_cell`) and
+//! keep the inner loop branch-free; see `two_approx.rs` for the baseline
+//! this beats (Table 3) and `rust/benches/table3_mask_search.rs` for the
+//! reproduction bench.
+
+use once_cell::sync::Lazy;
+
+use super::mask::Mask;
+use crate::tensor::Tensor;
+
+/// The 90 valid patterns, each as 16 f32s in row-major 4x4 order.
+pub static PATTERNS: Lazy<Vec<[f32; 16]>> = Lazy::new(generate_patterns);
+
+/// Same bank with each pattern as a u16 bitmask (bit k = entry k).
+pub static PATTERN_BITS: Lazy<Vec<u16>> = Lazy::new(|| {
+    PATTERNS
+        .iter()
+        .map(|p| {
+            p.iter()
+                .enumerate()
+                .fold(0u16, |acc, (k, &v)| if v != 0.0 { acc | (1 << k) } else { acc })
+        })
+        .collect()
+});
+
+fn generate_patterns() -> Vec<[f32; 16]> {
+    // all 4-bit values with exactly two bits set — the 6 valid row patterns
+    let rows: Vec<u8> = (0u8..16).filter(|r| r.count_ones() == 2).collect();
+    let mut out = Vec::new();
+    for &a in &rows {
+        for &b in &rows {
+            for &c in &rows {
+                // column sums so far must not exceed 2; the last row is
+                // uniquely determined by the deficit
+                let mut d: u8 = 0;
+                let mut ok = true;
+                for bit in 0..4 {
+                    let col = ((a >> bit) & 1) + ((b >> bit) & 1) + ((c >> bit) & 1);
+                    if col > 2 {
+                        ok = false;
+                        break;
+                    }
+                    if col == 1 {
+                        d |= 1 << bit;
+                    }
+                }
+                if !ok || d.count_ones() != 2 {
+                    continue;
+                }
+                let mut pat = [0f32; 16];
+                for (i, r) in [a, b, c, d].into_iter().enumerate() {
+                    for bit in 0..4 {
+                        pat[i * 4 + bit] = ((r >> bit) & 1) as f32;
+                    }
+                }
+                out.push(pat);
+            }
+        }
+    }
+    assert_eq!(out.len(), 90, "mask diversity must be 90");
+    out
+}
+
+/// Optimal transposable mask of a 2-D tensor (dims multiples of 4).
+///
+/// Exhaustive over the bank => exactly maximizes ||M ⊙ W||_1 per block
+/// (the conv-search of Algorithm 1). O(90·16) MACs per 4x4 block.
+pub fn transposable_mask(w: &Tensor) -> Mask {
+    let (r, c) = w.dims2();
+    assert!(r % 4 == 0 && c % 4 == 0, "shape ({r},{c}) not 4x4-aligned");
+    let mut mask = Mask::zeros(r, c);
+    let mut block = [0f32; 16];
+    for bi in (0..r).step_by(4) {
+        for bj in (0..c).step_by(4) {
+            load_abs_block(w, bi, bj, &mut block);
+            let best = best_pattern(&block);
+            let pat = &PATTERNS[best];
+            for k in 0..4 {
+                for l in 0..4 {
+                    mask.data[(bi + k) * c + (bj + l)] = pat[k * 4 + l] as u8;
+                }
+            }
+        }
+    }
+    mask
+}
+
+#[inline]
+fn load_abs_block(w: &Tensor, bi: usize, bj: usize, out: &mut [f32; 16]) {
+    let c = w.shape[1];
+    for k in 0..4 {
+        let row = &w.data[(bi + k) * c + bj..(bi + k) * c + bj + 4];
+        out[k * 4] = row[0].abs();
+        out[k * 4 + 1] = row[1].abs();
+        out[k * 4 + 2] = row[2].abs();
+        out[k * 4 + 3] = row[3].abs();
+    }
+}
+
+/// argmax over the 90 patterns of dot(pattern, |block|); ties -> lower idx.
+#[inline]
+pub fn best_pattern(abs_block: &[f32; 16]) -> usize {
+    let mut best = 0usize;
+    let mut best_score = f32::MIN;
+    for (p, pat) in PATTERNS.iter().enumerate() {
+        let mut s = 0f32;
+        for k in 0..16 {
+            s += pat[k] * abs_block[k];
+        }
+        if s > best_score {
+            best_score = s;
+            best = p;
+        }
+    }
+    best
+}
+
+/// Retained L1 norm of a mask applied to |w| — the search objective.
+pub fn retained_l1(w: &Tensor, m: &Mask) -> f64 {
+    w.data
+        .iter()
+        .zip(&m.data)
+        .map(|(&x, &b)| if b != 0 { x.abs() as f64 } else { 0.0 })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bank_has_90_unique_valid_patterns() {
+        assert_eq!(PATTERNS.len(), 90);
+        let mut seen = std::collections::HashSet::new();
+        for pat in PATTERNS.iter() {
+            assert!(seen.insert(pat.iter().map(|&v| v as u8).collect::<Vec<_>>()));
+            for i in 0..4 {
+                let row: f32 = (0..4).map(|j| pat[i * 4 + j]).sum();
+                let col: f32 = (0..4).map(|j| pat[j * 4 + i]).sum();
+                assert_eq!(row, 2.0);
+                assert_eq!(col, 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_is_transposable_and_24_both_ways() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::normal(&[16, 32], 1.0, &mut rng);
+        let m = transposable_mask(&w);
+        assert!(m.is_transposable());
+        assert!(m.is_24_row_wise());
+        assert!(m.transpose().is_24_row_wise()); // Eq. 5
+    }
+
+    #[test]
+    fn beats_or_ties_every_single_pattern() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::normal(&[4, 4], 1.0, &mut rng);
+        let m = transposable_mask(&w);
+        let ours = retained_l1(&w, &m);
+        for pat in PATTERNS.iter() {
+            let score: f64 = (0..16)
+                .map(|k| pat[k] as f64 * w.data[k].abs() as f64)
+                .sum();
+            assert!(ours >= score - 1e-9);
+        }
+    }
+
+    #[test]
+    fn identity_structure_recovered() {
+        // weight with an obviously optimal transposable support
+        let mut w = Tensor::zeros(&[4, 4]);
+        for (i, j) in [(0, 0), (0, 1), (1, 0), (1, 1), (2, 2), (2, 3), (3, 2), (3, 3)] {
+            *w.at_mut(i, j) = 10.0;
+        }
+        let m = transposable_mask(&w);
+        assert_eq!(retained_l1(&w, &m), 80.0);
+    }
+
+    #[test]
+    fn pattern_bits_agree_with_patterns() {
+        for (pat, &bits) in PATTERNS.iter().zip(PATTERN_BITS.iter()) {
+            for k in 0..16 {
+                assert_eq!(pat[k] != 0.0, bits & (1 << k) != 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! 2-approximation transposable-mask baseline (Hubara et al. 2021).
+//!
+//! The sort-and-pick algorithm the paper's conv search replaces: per 4x4
+//! block, visit entries in decreasing |w| and keep one iff its row and
+//! column each still have < 2 kept entries; a dead-ended greedy pass (< 8
+//! kept) is repaired by snapping to the valid pattern that preserves the
+//! most greedy picks (Hubara et al.'s fix-up stage). Its control flow is
+//! branch-heavy — the property the paper blames for its poor GPU
+//! throughput (Table 3). We keep the branchy structure faithfully (this is
+//! the baseline under test, not something to optimize away).
+
+use super::mask::Mask;
+use super::transposable::PATTERNS;
+use crate::tensor::Tensor;
+
+/// Greedy 2-approximation per 4x4 block.
+pub fn transposable_mask_2approx(w: &Tensor) -> Mask {
+    let (r, c) = w.dims2();
+    assert!(r % 4 == 0 && c % 4 == 0, "shape ({r},{c}) not 4x4-aligned");
+    let mut mask = Mask::zeros(r, c);
+    // (|w|, position) scratch reused across blocks
+    let mut entries: Vec<(f32, usize)> = Vec::with_capacity(16);
+    for bi in (0..r).step_by(4) {
+        for bj in (0..c).step_by(4) {
+            entries.clear();
+            for k in 0..4 {
+                for l in 0..4 {
+                    let v = w.data[(bi + k) * c + (bj + l)].abs();
+                    entries.push((v, k * 4 + l));
+                }
+            }
+            // sort descending by magnitude; ties -> lower position (stable)
+            entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            let mut row_cnt = [0u8; 4];
+            let mut col_cnt = [0u8; 4];
+            let mut kept_bits = [0f32; 16];
+            let mut kept = 0;
+            for &(_, pos) in entries.iter() {
+                let (k, l) = (pos / 4, pos % 4);
+                if row_cnt[k] < 2 && col_cnt[l] < 2 {
+                    row_cnt[k] += 1;
+                    col_cnt[l] += 1;
+                    kept_bits[pos] = 1.0;
+                    kept += 1;
+                    if kept == 8 {
+                        break;
+                    }
+                }
+            }
+            // repair: the greedy pass can dead-end (< 8 kept, remaining
+            // rows/cols mutually saturated); snap to the valid pattern
+            // preserving the most greedy picks, then by retained |w|
+            let mut absb = [0f32; 16];
+            let mut maxv = 0f32;
+            for k in 0..4 {
+                for l in 0..4 {
+                    let v = w.data[(bi + k) * c + (bj + l)].abs();
+                    absb[k * 4 + l] = v;
+                    maxv = maxv.max(v);
+                }
+            }
+            let big = 1.0 + 16.0 * maxv;
+            let mut best = 0usize;
+            let mut best_score = f32::MIN;
+            for (p, pat) in PATTERNS.iter().enumerate() {
+                let mut s = 0f32;
+                for k in 0..16 {
+                    s += pat[k] * (absb[k] + big * kept_bits[k]);
+                }
+                if s > best_score {
+                    best_score = s;
+                    best = p;
+                }
+            }
+            let pat = &PATTERNS[best];
+            for k in 0..4 {
+                for l in 0..4 {
+                    mask.data[(bi + k) * c + (bj + l)] = pat[k * 4 + l] as u8;
+                }
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::transposable::{retained_l1, transposable_mask};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn produces_valid_transposable_masks() {
+        let mut rng = Rng::new(0);
+        for seed in 0..5u64 {
+            let mut r2 = rng.fork(seed);
+            let w = Tensor::normal(&[16, 24], 1.0, &mut r2);
+            let m = transposable_mask_2approx(&w);
+            assert!(m.is_transposable());
+        }
+    }
+
+    #[test]
+    fn within_factor_two_of_optimal() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::normal(&[32, 32], 1.0, &mut rng);
+        let approx = retained_l1(&w, &transposable_mask_2approx(&w));
+        let opt = retained_l1(&w, &transposable_mask(&w));
+        assert!(approx <= opt + 1e-9, "approx cannot beat optimal");
+        assert!(approx >= 0.5 * opt, "2-approximation bound violated");
+    }
+
+    #[test]
+    fn often_strictly_suboptimal() {
+        // the conv search must win on at least some random inputs — that
+        // gap is the accuracy argument for Algorithm 1
+        let mut rng = Rng::new(2);
+        let mut strictly_worse = 0;
+        for _ in 0..20 {
+            let w = Tensor::normal(&[8, 8], 1.0, &mut rng);
+            let a = retained_l1(&w, &transposable_mask_2approx(&w));
+            let o = retained_l1(&w, &transposable_mask(&w));
+            if a < o - 1e-9 {
+                strictly_worse += 1;
+            }
+        }
+        assert!(strictly_worse > 0);
+    }
+
+    #[test]
+    fn greedy_keeps_exactly_eight_per_block() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::normal(&[4, 8], 1.0, &mut rng);
+        let m = transposable_mask_2approx(&w);
+        assert_eq!(m.count_ones(), 16);
+    }
+}

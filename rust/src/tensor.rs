@@ -1,0 +1,158 @@
+//! Minimal row-major f32 host tensor.
+//!
+//! The coordinator only needs 1-D/2-D dense math on the host side
+//! (optimizer updates, mask computation, metrics); all heavy model compute
+//! runs inside the AOT-compiled XLA executables. Keeping this type tiny
+//! and alloc-predictable matters more than generality.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} != data len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn normal(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rows/cols of a 2-D tensor (1-D is treated as a single row).
+    pub fn dims2(&self) -> (usize, usize) {
+        match self.shape.len() {
+            1 => (1, self.shape[0]),
+            2 => (self.shape[0], self.shape[1]),
+            _ => panic!("dims2 on shape {:?}", self.shape),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        let (_, c) = self.dims2();
+        self.data[i * c + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        let (_, c) = self.dims2();
+        &mut self.data[i * c + j]
+    }
+
+    pub fn t(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn abs_sum(&self) -> f64 {
+        self.data.iter().map(|&x| x.abs() as f64).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.dims2(), (2, 3));
+        assert_eq!(t.at(1, 2), 6.0);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn transpose() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.t();
+        assert_eq!(tt.shape, vec![3, 2]);
+        assert_eq!(tt.at(2, 0), 3.0);
+        assert_eq!(tt.at(0, 1), 4.0);
+        assert_eq!(tt.t(), t);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(&[1, 4], vec![1., -2., 3., -4.]);
+        assert_eq!(t.abs_sum(), 10.0);
+        assert_eq!(t.sum(), -2.0);
+        assert_eq!(t.sq_norm(), 30.0);
+    }
+
+    #[test]
+    fn normal_init_has_roughly_right_std() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::normal(&[100, 100], 0.02, &mut rng);
+        let var = t.sq_norm() / t.len() as f64;
+        assert!((var.sqrt() - 0.02).abs() < 0.002, "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.5, 1.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

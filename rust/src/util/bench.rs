@@ -1,0 +1,117 @@
+//! Tiny benchmark harness (criterion is not available offline).
+//!
+//! Warmup + timed iterations with median/mean/p10/p90 reporting and a
+//! stable text output format that the bench binaries share. Measurements
+//! use `std::time::Instant` (monotonic).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    pub fn median_s(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to roughly `budget`.
+pub fn bench<F: FnMut()>(mut f: F, budget: Duration) -> Stats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let target = budget.as_nanos() as u64;
+    let iters = ((target / once.as_nanos().max(1) as u64).clamp(3, 1000)) as usize;
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    Stats {
+        iters,
+        mean_ns: mean,
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+    }
+}
+
+/// Convenience: benchmark a closure returning a value (black-boxed).
+pub fn bench_val<T, F: FnMut() -> T>(mut f: F, budget: Duration) -> Stats {
+    bench(|| {
+        black_box(f());
+    }, budget)
+}
+
+/// GB/s given bytes touched per iteration.
+pub fn throughput_gbs(stats: &Stats, bytes: usize) -> f64 {
+    bytes as f64 / stats.median_s() / 1e9
+}
+
+/// GFLOP/s given flops per iteration.
+pub fn gflops(stats: &Stats, flops: usize) -> f64 {
+    flops as f64 / stats.median_s() / 1e9
+}
+
+/// Uniform row printer for the bench binaries.
+pub fn report_row(name: &str, stats: &Stats, extra: &str) {
+    println!(
+        "{name:<40} median {:>10.3} ms  mean {:>10.3} ms  (n={:>4})  {extra}",
+        stats.median_ns / 1e6,
+        stats.mean_ns / 1e6,
+        stats.iters,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut acc = 0u64;
+        let st = bench(
+            || {
+                for i in 0..1000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+            },
+            Duration::from_millis(20),
+        );
+        assert!(st.median_ns > 0.0);
+        assert!(st.iters >= 3);
+        black_box(acc);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let st = bench(|| std::thread::sleep(Duration::from_micros(100)),
+                       Duration::from_millis(10));
+        assert!(st.p10_ns <= st.median_ns && st.median_ns <= st.p90_ns);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let st = Stats { iters: 1, mean_ns: 1e6, median_ns: 1e6, p10_ns: 1e6, p90_ns: 1e6 };
+        // 1 MB in 1 ms = 1 GB/s
+        assert!((throughput_gbs(&st, 1_000_000) - 1.0).abs() < 1e-9);
+        assert!((gflops(&st, 1_000_000) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,40 @@
+//! Dependency-free utilities: PRNG, JSON, bench harness, CSV writing.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Write rows of f64 columns as CSV with a header (results/ emitters).
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("sparse24_csv_test");
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a", "b"], &[vec![1.0, 2.0], vec![3.5, -1.0]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3.5,-1\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

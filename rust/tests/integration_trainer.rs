@@ -1,0 +1,282 @@
+//! Coordinator integration: full training loops on the test_tiny config.
+//! Skips (with a notice) until `make artifacts` has produced the HLO.
+
+use std::path::{Path, PathBuf};
+
+use sparse24::config::{DecayPlacementCfg, Method, TrainConfig};
+use sparse24::coordinator::{MaskMode, Phase, Trainer};
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("SPARSE24_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("test_tiny_manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn base_cfg() -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.model = "test_tiny".into();
+    c.artifacts_dir = artifacts_dir().to_str().unwrap().to_string();
+    c.steps = 12;
+    c.grad_accum = 1;
+    c.lr = 3e-3;
+    c.warmup = 2;
+    c.lambda_w = 1e-4;
+    c.mask_update_interval = 4;
+    c.dense_ft_fraction = 0.25;
+    c.seed = 0;
+    c
+}
+
+#[test]
+fn sparse_training_runs_and_loss_decreases() {
+    require_artifacts!();
+    let mut cfg = base_cfg();
+    cfg.steps = 30;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.train().unwrap();
+    assert_eq!(t.metrics.rows.len(), 30);
+    let first5: f64 = t.metrics.rows[..5].iter().map(|r| r.loss).sum::<f64>() / 5.0;
+    let last5: f64 = t.metrics.rows[25..].iter().map(|r| r.loss).sum::<f64>() / 5.0;
+    assert!(last5 < first5, "loss did not decrease: {first5} -> {last5}");
+}
+
+#[test]
+fn phases_follow_schedule() {
+    require_artifacts!();
+    let mut cfg = base_cfg();
+    cfg.steps = 12;
+    cfg.dense_ft_fraction = 0.25; // last 3 steps dense
+    let mut t = Trainer::new(cfg).unwrap();
+    t.train().unwrap();
+    for r in &t.metrics.rows {
+        let expect = if r.step >= 9 { Phase::DenseFt } else { Phase::Sparse };
+        assert_eq!(r.phase, expect, "step {}", r.step);
+    }
+    // after the switch the masks are all-ones
+    assert_eq!(t.fst.mode, MaskMode::Ones);
+}
+
+#[test]
+fn step_baseline_uses_dense_head() {
+    require_artifacts!();
+    let mut cfg = base_cfg();
+    cfg.method = Method::Step;
+    cfg.dense_pre_fraction = 0.25;
+    cfg.dense_ft_fraction = 0.0;
+    cfg.decay_placement = DecayPlacementCfg::Weights;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.train().unwrap();
+    assert_eq!(t.metrics.rows[0].phase, Phase::DensePre);
+    assert_eq!(t.metrics.rows[11].phase, Phase::Sparse);
+    assert!(t.fst.all_valid());
+}
+
+#[test]
+fn dense_method_never_sparsifies() {
+    require_artifacts!();
+    let mut cfg = base_cfg();
+    cfg.method = Method::Dense;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.train().unwrap();
+    assert!(t.metrics.rows.iter().all(|r| r.phase == Phase::Dense));
+    assert_eq!(t.fst.mode, MaskMode::Ones);
+    assert_eq!(t.fst.refresh_count, 0);
+}
+
+#[test]
+fn mask_refresh_interval_respected() {
+    require_artifacts!();
+    let mut cfg = base_cfg();
+    cfg.steps = 9;
+    cfg.mask_update_interval = 4;
+    cfg.dense_ft_fraction = 0.0;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.train().unwrap();
+    // initial masks at construction + refreshes at steps 4 and 8
+    assert_eq!(t.fst.refresh_count, 3, "refreshes: {}", t.fst.refresh_count);
+    assert!(t.fst.all_valid());
+}
+
+#[test]
+fn masked_decay_targets_only_sparse_params() {
+    require_artifacts!();
+    // With lr ~ 0 gradients barely move weights; masked decay still pulls
+    // pruned coordinates toward zero only for FFN weights.
+    let mut cfg = base_cfg();
+    cfg.steps = 8;
+    cfg.lr = 1e-7;
+    cfg.lambda_w = 5e-1;
+    cfg.dense_ft_fraction = 0.0;
+    let mut t = Trainer::new(cfg).unwrap();
+    let w1_idx = t.params.index_of("h0.ffn_w1").unwrap();
+    let before = t.params.tensors[w1_idx].clone();
+    let mask_before = t.fst.mask_for_param(w1_idx).unwrap().clone();
+    t.train().unwrap();
+    let after = &t.params.tensors[w1_idx];
+    let mut pruned_shrunk = 0;
+    let mut pruned_total = 0;
+    for i in 0..before.len() {
+        if mask_before.data[i] == 0 && before.data[i].abs() > 1e-4 {
+            pruned_total += 1;
+            if after.data[i].abs() < before.data[i].abs() {
+                pruned_shrunk += 1;
+            }
+        }
+    }
+    assert!(pruned_total > 0);
+    assert!(
+        pruned_shrunk as f64 > 0.9 * pruned_total as f64,
+        "only {pruned_shrunk}/{pruned_total} pruned coords shrank"
+    );
+}
+
+#[test]
+fn grad_accumulation_changes_effective_batch_not_shape() {
+    require_artifacts!();
+    let mut cfg = base_cfg();
+    cfg.steps = 3;
+    cfg.grad_accum = 3;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.train().unwrap();
+    assert_eq!(t.metrics.rows.len(), 3);
+    assert!(t.metrics.rows.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn eval_returns_finite_loss_and_uses_current_masks() {
+    require_artifacts!();
+    let mut t = Trainer::new(base_cfg()).unwrap();
+    let v0 = t.eval().unwrap();
+    assert!(v0.is_finite() && v0 > 0.0);
+    t.train().unwrap();
+    let v1 = t.eval().unwrap();
+    assert!(v1.is_finite());
+    assert!(v1 < v0 + 0.5, "val loss exploded: {v0} -> {v1}");
+}
+
+#[test]
+fn two_workers_match_one_worker_dense() {
+    require_artifacts!();
+    // dense method has no MVUE sampling; identical data order => identical
+    // training trajectories regardless of worker count
+    let mut cfg1 = base_cfg();
+    cfg1.method = Method::Dense;
+    cfg1.grad_accum = 2;
+    cfg1.steps = 4;
+    let mut cfg2 = cfg1.clone();
+    cfg2.workers = 2;
+    let mut t1 = Trainer::new(cfg1).unwrap();
+    let mut t2 = Trainer::new(cfg2).unwrap();
+    t1.train().unwrap();
+    t2.train().unwrap();
+    for (a, b) in t1.metrics.rows.iter().zip(&t2.metrics.rows) {
+        assert!((a.loss - b.loss).abs() < 1e-5, "{} vs {}", a.loss, b.loss);
+    }
+    let w1 = t1.params.get("h0.ffn_w1").unwrap();
+    let w2 = t2.params.get("h0.ffn_w1").unwrap();
+    assert!(w1.max_abs_diff(w2) < 1e-5);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    require_artifacts!();
+    let mut t1 = Trainer::new(base_cfg()).unwrap();
+    let mut t2 = Trainer::new(base_cfg()).unwrap();
+    t1.train().unwrap();
+    t2.train().unwrap();
+    for (a, b) in t1.metrics.rows.iter().zip(&t2.metrics.rows) {
+        assert_eq!(a.loss, b.loss);
+    }
+}
+
+#[test]
+fn flip_rate_recorded_and_bounded() {
+    require_artifacts!();
+    let mut t = Trainer::new(base_cfg()).unwrap();
+    t.train().unwrap();
+    for r in &t.metrics.rows {
+        assert!((0.0..=1.0).contains(&r.flip_rate), "flip {}", r.flip_rate);
+    }
+}
+
+#[test]
+fn probe_grads_shapes_align() {
+    require_artifacts!();
+    let mut t = Trainer::new(base_cfg()).unwrap();
+    let (loss, grads) = t.probe_grads("step_sparse").unwrap();
+    assert!(loss.is_finite());
+    assert_eq!(grads.len(), t.params.tensors.len());
+    for (g, p) in grads.iter().zip(&t.params.tensors) {
+        assert_eq!(g.shape, p.shape);
+    }
+}
+
+#[test]
+fn checkpoint_resume_is_exact() {
+    require_artifacts!();
+    // uninterrupted 10 steps vs 5 steps -> checkpoint -> resume -> 5 steps:
+    // losses and final weights must match exactly (bit-for-bit state)
+    let mut cfg = base_cfg();
+    cfg.steps = 10;
+    cfg.mask_update_interval = 3;
+    // phase schedule depends on cfg.steps; keep the probe run's phases
+    // identical to the full run's by disabling the dense tail
+    cfg.dense_ft_fraction = 0.0;
+    let mut full = Trainer::new(cfg.clone()).unwrap();
+    full.train().unwrap();
+
+    // probe uses the SAME config (schedules depend on cfg.steps) and
+    // stops halfway via train_steps
+    let mut first = Trainer::new(cfg.clone()).unwrap();
+    first.train_steps(5).unwrap();
+    let dir = std::env::temp_dir().join("sparse24_resume_test");
+    let path = dir.join("mid.ckpt");
+    first.save_checkpoint(&path).unwrap();
+
+    let mut resumed = Trainer::resume(cfg, &path).unwrap();
+    assert_eq!(resumed.step_idx, 5);
+    resumed.train().unwrap();
+
+    for (a, b) in full.metrics.rows[5..].iter().zip(&resumed.metrics.rows) {
+        assert!(
+            (a.loss - b.loss).abs() < 1e-6,
+            "step {}: {} vs {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    let wa = full.params.get("h0.ffn_w1").unwrap();
+    let wb = resumed.params.get("h0.ffn_w1").unwrap();
+    assert!(wa.max_abs_diff(wb) < 1e-6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_rejects_wrong_model() {
+    require_artifacts!();
+    let mut cfg = base_cfg();
+    cfg.steps = 2;
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    t.train().unwrap();
+    let dir = std::env::temp_dir().join("sparse24_resume_test2");
+    let path = dir.join("t.ckpt");
+    t.save_checkpoint(&path).unwrap();
+    let mut other = cfg;
+    other.model = "nano".into();
+    assert!(Trainer::resume(other, &path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,211 @@
+//! Property-based tests over the coordinator's sparse/optimizer/data
+//! invariants. The `proptest` crate is unavailable offline, so properties
+//! are driven by a seeded generator sweep (shapes AND values random per
+//! case) — same discipline: each property runs across ~10^2 randomized
+//! cases and shrinks are replaced by printing the failing seed.
+
+use sparse24::data::Batcher;
+use sparse24::optim::{AdamW, AdamWConfig, DecayPlacement, Sgd};
+use sparse24::sparse::mask::{prune24, prune24_mask};
+use sparse24::sparse::mvue::{mvue24_with_uniforms, mvue_probs};
+use sparse24::sparse::spmm::Compressed24;
+use sparse24::sparse::transposable::{retained_l1, transposable_mask};
+use sparse24::sparse::two_approx::transposable_mask_2approx;
+use sparse24::tensor::Tensor;
+use sparse24::util::json::Json;
+use sparse24::util::rng::Rng;
+
+fn cases(n: usize) -> impl Iterator<Item = (u64, Rng)> {
+    (0..n as u64).map(|seed| (seed, Rng::new(0xBEEF ^ seed.wrapping_mul(0x9E3779B9))))
+}
+
+fn rand_dims(rng: &mut Rng, max_blocks: usize) -> (usize, usize) {
+    (4 * (1 + rng.below(max_blocks)), 4 * (1 + rng.below(max_blocks)))
+}
+
+#[test]
+fn prop_prune_keeps_exactly_half_and_is_idempotent() {
+    for (seed, mut rng) in cases(100) {
+        let (r, c) = rand_dims(&mut rng, 8);
+        let w = Tensor::normal(&[r, c], 1.0, &mut rng);
+        let m = prune24_mask(&w);
+        assert!(m.is_24_row_wise(), "seed {seed}");
+        assert_eq!(m.count_ones(), r * c / 2, "seed {seed}");
+        let p = prune24(&w);
+        assert_eq!(prune24(&p), p, "seed {seed}: prune not idempotent");
+        // optimality: kept L1 per group is maximal
+        for (wg, pg) in w.data.chunks_exact(4).zip(p.data.chunks_exact(4)) {
+            let mut sorted: Vec<f32> = wg.iter().map(|v| v.abs()).collect();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let kept: f32 = pg.iter().map(|v| v.abs()).sum();
+            assert!(kept >= sorted[0] + sorted[1] - 1e-4, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_transposable_valid_and_optimal_vs_2approx() {
+    for (seed, mut rng) in cases(60) {
+        let (r, c) = rand_dims(&mut rng, 6);
+        let w = Tensor::normal(&[r, c], 1.0, &mut rng);
+        let opt = transposable_mask(&w);
+        let approx = transposable_mask_2approx(&w);
+        assert!(opt.is_transposable(), "seed {seed}");
+        assert!(approx.is_transposable(), "seed {seed}");
+        let lo = retained_l1(&w, &opt);
+        let la = retained_l1(&w, &approx);
+        assert!(lo + 1e-9 >= la, "seed {seed}: 2approx beat optimal");
+        assert!(la >= 0.5 * lo - 1e-9, "seed {seed}: approximation bound");
+        // both directions 2:4
+        assert!(opt.is_24_row_wise() && opt.transpose().is_24_row_wise());
+    }
+}
+
+#[test]
+fn prop_mvue_probs_sum_to_min2_nnz_and_sparse_output() {
+    for (seed, mut rng) in cases(200) {
+        let mut g = [0f32; 4];
+        for v in g.iter_mut() {
+            // mix in exact zeros to hit the degenerate branches
+            *v = if rng.below(4) == 0 { 0.0 } else { rng.normal() };
+        }
+        let p = mvue_probs(&g);
+        let nnz = g.iter().filter(|&&v| v != 0.0).count();
+        let sum: f32 = p.iter().sum();
+        let expect = (nnz as f32).min(2.0);
+        assert!((sum - expect).abs() < 1e-4, "seed {seed}: sum {sum} nnz {nnz}");
+        // sampled output per group has <= 2 nonzeros, and zero inputs
+        // never produce nonzero outputs
+        let x = Tensor::from_vec(&[1, 4], g.to_vec());
+        let out = mvue24_with_uniforms(&x, &[rng.uniform()]);
+        assert!(out.data.iter().filter(|&&v| v != 0.0).count() <= 2);
+        for k in 0..4 {
+            if g[k] == 0.0 {
+                assert_eq!(out.data[k], 0.0, "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_compress_roundtrip_any_shape() {
+    for (seed, mut rng) in cases(60) {
+        let (r, c) = rand_dims(&mut rng, 8);
+        let w = Tensor::normal(&[r, c], 1.0, &mut rng);
+        let comp = Compressed24::prune_from(&w);
+        assert_eq!(comp.to_dense(), prune24(&w), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_spmm_equals_masked_gemm() {
+    for (seed, mut rng) in cases(30) {
+        let (r, q) = rand_dims(&mut rng, 5);
+        let p = 1 + rng.below(16);
+        let w = Tensor::normal(&[r, q], 1.0, &mut rng);
+        let x = Tensor::normal(&[p, q], 1.0, &mut rng);
+        let m = transposable_mask(&w);
+        let wc = Compressed24::from_masked(&w, &m);
+        let a = sparse24::sparse::spmm::spmm_nt(&x, &wc);
+        let b = sparse24::sparse::gemm::gemm_nt(&x, &m.apply(&w));
+        assert!(a.max_abs_diff(&b) < 1e-3, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_sgd_decay_placements_equivalent() {
+    // Eq. 8 == Eq. 10 under SGD for ANY weights/grads/λ (paper §4.2)
+    for (seed, mut rng) in cases(100) {
+        let (r, c) = rand_dims(&mut rng, 4);
+        let w0 = Tensor::normal(&[r, c], 0.5, &mut rng);
+        let g = Tensor::normal(&[r, c], 0.1, &mut rng);
+        let m = prune24_mask(&w0);
+        let lambda = rng.uniform() * 0.1;
+        let lr = rng.uniform() * 0.01 + 1e-4;
+        let mut wa = w0.clone();
+        let mut wb = w0.clone();
+        Sgd::step(&mut wa, &g, lr, DecayPlacement::OnGradients(lambda), Some(&m));
+        Sgd::step(&mut wb, &g, lr, DecayPlacement::OnWeights(lambda), Some(&m));
+        assert!(wa.max_abs_diff(&wb) < 1e-6, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_adam_update_bounded_by_lr() {
+    // |Δw| <= lr * (1 + wd·|w| + small) per step — Adam's trust-region
+    for (seed, mut rng) in cases(50) {
+        let (r, c) = rand_dims(&mut rng, 4);
+        let mut w = Tensor::normal(&[r, c], 0.5, &mut rng);
+        let g = Tensor::normal(&[r, c], 1.0, &mut rng);
+        let w0 = w.clone();
+        let lr = 1e-3;
+        let mut opt = AdamW::new(w.len(), AdamWConfig::default());
+        opt.step(&mut w, &g, lr, DecayPlacement::None, None);
+        for i in 0..w.len() {
+            assert!(
+                (w.data[i] - w0.data[i]).abs() <= lr * 1.01 + 1e-9,
+                "seed {seed} i={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_targets_are_shifted_tokens() {
+    for (seed, mut rng) in cases(30) {
+        let len = 500 + rng.below(1000);
+        let toks: Vec<u32> = (0..len).map(|_| rng.below(97) as u32).collect();
+        let b = 1 + rng.below(4);
+        let n = 4 + rng.below(12);
+        let mut batcher = Batcher::new(toks.clone(), b, n, 0.1, seed);
+        for _ in 0..5 {
+            let batch = batcher.next_train();
+            assert_eq!(batch.tokens.len(), b * n);
+            for row in 0..b {
+                for k in 0..n - 1 {
+                    assert_eq!(
+                        batch.targets[row * n + k],
+                        batch.tokens[row * n + k + 1],
+                        "seed {seed}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    for (seed, mut rng) in cases(60) {
+        let vals: Vec<f32> = (0..rng.below(40)).map(|_| rng.normal()).collect();
+        let j = sparse24::util::json::obj(vec![
+            ("v", sparse24::util::json::arr_f32(&vals)),
+            ("n", sparse24::util::json::num(seed as f64)),
+            ("s", sparse24::util::json::s("x\"y\\z")),
+        ]);
+        let back = Json::parse(&j.to_string()).unwrap();
+        let got = back.get("v").unwrap().as_f32_vec().unwrap();
+        assert_eq!(got.len(), vals.len(), "seed {seed}");
+        for (a, b) in got.iter().zip(&vals) {
+            assert!((a - b).abs() <= b.abs() * 1e-6 + 1e-30, "seed {seed}");
+        }
+        assert_eq!(back.get("s").unwrap().as_str().unwrap(), "x\"y\\z");
+    }
+}
+
+#[test]
+fn prop_flip_rate_triangle_bounds() {
+    // r(a,c) <= r(a,b) + r(b,c): hamming distance is a metric
+    for (seed, mut rng) in cases(50) {
+        let (r, c) = rand_dims(&mut rng, 4);
+        let wa = Tensor::normal(&[r, c], 1.0, &mut rng);
+        let wb = Tensor::normal(&[r, c], 1.0, &mut rng);
+        let wc = Tensor::normal(&[r, c], 1.0, &mut rng);
+        let (ma, mb, mc) =
+            (prune24_mask(&wa), prune24_mask(&wb), prune24_mask(&wc));
+        let ab = sparse24::sparse::flip::flip_rate(&ma, &mb);
+        let bc = sparse24::sparse::flip::flip_rate(&mb, &mc);
+        let ac = sparse24::sparse::flip::flip_rate(&ma, &mc);
+        assert!(ac <= ab + bc + 1e-12, "seed {seed}");
+    }
+}
