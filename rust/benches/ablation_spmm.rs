@@ -13,11 +13,12 @@
 use std::time::Duration;
 
 use sparse24::sparse::gemm::{gemm_nn, gemm_nt, gemm_tn};
+use sparse24::sparse::kernels::{self, KernelBackend};
 use sparse24::sparse::mvue::mvue24;
 use sparse24::sparse::spmm::{spmm_nn, spmm_nt, spmm_tn, Compressed24};
 use sparse24::sparse::transposable::transposable_mask;
 use sparse24::tensor::Tensor;
-use sparse24::util::bench::bench_val;
+use sparse24::util::bench::{bench_val, write_kernel_bench, KernelBench};
 use sparse24::util::rng::Rng;
 use sparse24::util::write_csv;
 
@@ -88,4 +89,98 @@ fn main() {
     )
     .unwrap();
     println!("-> results/ablation_spmm.csv");
+
+    kernel_acceptance(quick, budget);
+}
+
+/// The kernel-backend acceptance measurements -> BENCH_kernels.json:
+///  * tiled dense gemm_nt vs the naive reference on a cubic problem;
+///  * tiled spmm_nt vs tiled gemm_nt on the Fig. 7a FFN weight shape
+///    (d=1024, r=4096) at equal thread count.
+fn kernel_acceptance(quick: bool, budget: Duration) {
+    let threads = kernels::num_threads();
+    let mut recs = Vec::new();
+
+    // (1) tiled vs naive dense GEMM, cubic shape
+    let n = if quick { 256 } else { 512 };
+    let mut rng = Rng::new(0xACCE);
+    let a = Tensor::normal(&[n, n], 0.5, &mut rng);
+    let b = Tensor::normal(&[n, n], 0.5, &mut rng);
+    let macs = n * n * n;
+    kernels::set_backend(KernelBackend::Naive);
+    let naive_s = bench_val(|| gemm_nt(&a, &b), budget).median_s();
+    kernels::set_backend(KernelBackend::Tiled);
+    let tiled_s = bench_val(|| gemm_nt(&a, &b), budget).median_s();
+    println!(
+        "\nkernels: gemm_nt {n}^3  naive {:.2} ms  tiled {:.2} ms  ({:.2}x, {} threads)",
+        naive_s * 1e3,
+        tiled_s * 1e3,
+        naive_s / tiled_s,
+        threads,
+    );
+    recs.push(KernelBench {
+        kernel: "gemm_nt_naive".into(),
+        backend: "naive".into(),
+        p: n,
+        q: n,
+        r: n,
+        threads: 1,
+        median_ms: naive_s * 1e3,
+        gflops: 2.0 * macs as f64 / naive_s / 1e9,
+        effective_macs: macs,
+    });
+    recs.push(KernelBench {
+        kernel: "gemm_nt_tiled".into(),
+        backend: "tiled".into(),
+        p: n,
+        q: n,
+        r: n,
+        threads,
+        median_ms: tiled_s * 1e3,
+        gflops: 2.0 * macs as f64 / tiled_s / 1e9,
+        effective_macs: macs,
+    });
+
+    // (2) Fig. 7a FFN weight shape: W (r=4096, d=1024), 2:4-compressed
+    let (p, d, r) = (if quick { 128 } else { 512 }, 1024, 4096);
+    let x = Tensor::normal(&[p, d], 0.5, &mut rng);
+    let w = Tensor::normal(&[r, d], 0.5, &mut rng);
+    let m = transposable_mask(&w);
+    let wm = m.apply(&w);
+    let wc = Compressed24::from_masked(&w, &m);
+    let dense_s = bench_val(|| gemm_nt(&x, &wm), budget).median_s();
+    let sparse_s = bench_val(|| spmm_nt(&x, &wc), budget).median_s();
+    println!(
+        "kernels: ffn shape p={p} d={d} r={r}  dense {:.2} ms  2:4 spMM {:.2} ms  (S={:.2}, {} threads)",
+        dense_s * 1e3,
+        sparse_s * 1e3,
+        dense_s / sparse_s,
+        threads,
+    );
+    recs.push(KernelBench {
+        kernel: "gemm_nt".into(),
+        backend: "tiled".into(),
+        p,
+        q: d,
+        r,
+        threads,
+        median_ms: dense_s * 1e3,
+        gflops: 2.0 * (p * d * r) as f64 / dense_s / 1e9,
+        effective_macs: p * d * r,
+    });
+    recs.push(KernelBench {
+        kernel: "spmm_nt".into(),
+        backend: "tiled".into(),
+        p,
+        q: d,
+        r,
+        threads,
+        median_ms: sparse_s * 1e3,
+        // effective GFLOP/s: the spMM executes q/2 MACs per output
+        gflops: 2.0 * (p * (d / 2) * r) as f64 / sparse_s / 1e9,
+        effective_macs: p * (d / 2) * r,
+    });
+
+    write_kernel_bench("ablation_spmm", &recs).unwrap();
+    println!("-> BENCH_kernels.json (section ablation_spmm)");
 }

@@ -9,24 +9,62 @@
 
 use std::time::Duration;
 
+use sparse24::sparse::kernels;
 use sparse24::sparse::workloads::{block_speedup, ffn_speedup};
+use sparse24::util::bench::{write_kernel_bench, KernelBench};
 use sparse24::util::write_csv;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let budget = Duration::from_millis(if quick { 80 } else { 600 });
+    let threads = kernels::num_threads();
     let mut rows = Vec::new();
+    let mut recs = Vec::new();
 
-    println!("Fig. 7a: FFN layer speedup (tokens n=2048, r=4d, fwd+bwd+overheads)");
     let ds: &[usize] = if quick { &[128, 256] } else { &[128, 256, 384, 512, 768] };
-    // n=1024 tokens: the 1-core substrate's wall-clock budget; the
-    // speedup-vs-d SHAPE is what reproduces Fig. 7a
+    // n=1024 tokens (vs the paper's 2048) keeps the substrate's
+    // wall-clock budget sane; the speedup-vs-d SHAPE reproduces Fig. 7a
     let n_ffn = if quick { 256 } else { 1024 };
+    println!("Fig. 7a: FFN layer speedup (tokens n={n_ffn}, r=4d, fwd+bwd+overheads, {threads} threads)");
     for &d in ds {
         let (dt, st, s) = ffn_speedup(n_ffn, d, budget);
-        println!("  d={d:<5} dense {:>9.2} ms  sparse {:>9.2} ms  S={s:.3}", dt * 1e3, st * 1e3);
+        // one FFN training iteration: fwd (3*p*d*r MACs) + bwd (6*p*d*r)
+        // dense; the FST iteration executes half of every GEMM
+        let r = 4 * d;
+        let dense_macs = 9 * n_ffn * d * r;
+        let sparse_macs = dense_macs / 2;
+        println!(
+            "  d={d:<5} dense {:>9.2} ms ({:>6.1} GFLOP/s)  sparse {:>9.2} ms ({:>6.1} eff GFLOP/s)  S={s:.3}",
+            dt * 1e3,
+            2.0 * dense_macs as f64 / dt / 1e9,
+            st * 1e3,
+            2.0 * sparse_macs as f64 / st / 1e9,
+        );
         rows.push(vec![0.0, n_ffn as f64, d as f64, dt * 1e3, st * 1e3, s]);
+        recs.push(KernelBench {
+            kernel: "ffn_iter_dense".into(),
+            backend: kernels::backend_name().into(),
+            p: n_ffn,
+            q: d,
+            r,
+            threads,
+            median_ms: dt * 1e3,
+            gflops: 2.0 * dense_macs as f64 / dt / 1e9,
+            effective_macs: dense_macs,
+        });
+        recs.push(KernelBench {
+            kernel: "ffn_iter_sparse24".into(),
+            backend: kernels::backend_name().into(),
+            p: n_ffn,
+            q: d,
+            r,
+            threads,
+            median_ms: st * 1e3,
+            gflops: 2.0 * sparse_macs as f64 / st / 1e9,
+            effective_macs: sparse_macs,
+        });
     }
+    write_kernel_bench("fig7_ffn", &recs).unwrap();
 
     let ns: &[usize] = if quick { &[128] } else { &[1024, 512, 256] };
     let bds: &[usize] = if quick { &[128] } else { &[256, 384, 512] };
@@ -48,5 +86,5 @@ fn main() {
         &rows,
     )
     .unwrap();
-    println!("-> results/fig7_speedup.csv");
+    println!("-> results/fig7_speedup.csv, BENCH_kernels.json (section fig7_ffn)");
 }

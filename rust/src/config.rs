@@ -201,6 +201,11 @@ pub struct TrainConfig {
     pub workers: usize,
     /// LR schedule kind: "cosine" (warmup-cosine), "const", "inv_sqrt"
     pub lr_schedule: String,
+    /// kernel-backend thread count; 0 = auto (PALLAS_NUM_THREADS env or
+    /// hardware parallelism)
+    pub kernel_threads: usize,
+    /// kernel backend: "auto" (env or tiled), "tiled", "naive"
+    pub kernel_backend: String,
 }
 
 /// Serializable decay placement (λ filled in from `lambda_w`).
@@ -246,6 +251,8 @@ impl Default for TrainConfig {
             eval_batches: 4,
             workers: 1,
             lr_schedule: "cosine".into(),
+            kernel_threads: 0,
+            kernel_backend: "auto".into(),
         }
     }
 }
@@ -325,6 +332,12 @@ impl TrainConfig {
         if let Some(v) = get(&t, "data", "kind") {
             c.data = v.as_str()?.to_string();
         }
+        if let Some(v) = get(&t, "kernels", "threads") {
+            c.kernel_threads = v.as_usize()?;
+        }
+        if let Some(v) = get(&t, "kernels", "backend") {
+            c.kernel_backend = v.as_str()?.to_string();
+        }
         c.validate()?;
         Ok(c)
     }
@@ -383,7 +396,20 @@ impl TrainConfig {
         if self.lambda_w < 0.0 {
             bail!("negative lambda");
         }
+        if !matches!(self.kernel_backend.as_str(), "auto" | "tiled" | "naive") {
+            bail!("unknown kernel backend {:?}", self.kernel_backend);
+        }
         Ok(())
+    }
+
+    /// Apply the kernel-backend settings (thread count, backend choice)
+    /// to the process-wide kernel dispatch. Called by the trainer and the
+    /// CLI before any hot-loop work.
+    pub fn apply_kernel_settings(&self) {
+        if self.kernel_threads > 0 {
+            crate::sparse::kernels::set_num_threads(self.kernel_threads);
+        }
+        crate::sparse::kernels::set_backend_by_name(&self.kernel_backend);
     }
 
     /// Step at which dense fine-tuning starts (t_s; §4.4).
@@ -486,6 +512,19 @@ kind = "synthetic"
         let mut c = TrainConfig::default();
         c.data = "c4".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn kernels_section_parses_and_validates() {
+        let c = TrainConfig::from_toml("[kernels]\nthreads = 2\nbackend = \"tiled\"\n")
+            .unwrap();
+        assert_eq!(c.kernel_threads, 2);
+        assert_eq!(c.kernel_backend, "tiled");
+        assert!(TrainConfig::from_toml("[kernels]\nbackend = \"gpu\"\n").is_err());
+        // defaults
+        let d = TrainConfig::default();
+        assert_eq!(d.kernel_threads, 0);
+        assert_eq!(d.kernel_backend, "auto");
     }
 
     #[test]

@@ -46,6 +46,10 @@ pub struct Trainer {
     sparse_steps_since_refresh: usize,
     /// cached f32 mask tensors (invalidated on mask refresh/mode change)
     masks_cache: Option<Arc<Vec<Tensor>>>,
+    /// reusable parameter snapshot shipped to the engine each step; the
+    /// backing storage is recycled via `Arc::make_mut` so the hot loop
+    /// stops allocating a full model copy per optimizer step
+    params_snapshot: Option<Arc<Vec<Tensor>>>,
 }
 
 impl Trainer {
@@ -60,6 +64,7 @@ impl Trainer {
     pub fn new(mut cfg: TrainConfig) -> Result<Self> {
         cfg.normalize();
         cfg.validate()?;
+        cfg.apply_kernel_settings();
         let dir = std::path::Path::new(&cfg.artifacts_dir);
         let name = Self::manifest_name(&cfg);
         let manifest = Manifest::load_config(dir, &name)
@@ -119,7 +124,32 @@ impl Trainer {
             step_idx: 0,
             sparse_steps_since_refresh: 0,
             masks_cache: None,
+            params_snapshot: None,
         })
+    }
+
+    /// Snapshot of the current parameters for the engine. Steady state:
+    /// once the workers have dropped their Arc (every step completes
+    /// synchronously), `Arc::make_mut` reuses the previous snapshot's
+    /// storage and this is a pure copy, no allocation.
+    fn snapshot_params(&mut self) -> Arc<Vec<Tensor>> {
+        let params = &self.params.tensors;
+        match &mut self.params_snapshot {
+            Some(arc) => {
+                let snap = Arc::make_mut(arc);
+                for (dst, src) in snap.iter_mut().zip(params) {
+                    dst.shape.clone_from(&src.shape);
+                    dst.data.clear();
+                    dst.data.extend_from_slice(&src.data);
+                }
+                arc.clone()
+            }
+            None => {
+                let arc = Arc::new(params.clone());
+                self.params_snapshot = Some(arc.clone());
+                arc
+            }
+        }
     }
 
     /// Mask tensors for the executables, cached between refreshes (perf:
@@ -220,7 +250,7 @@ impl Trainer {
         // collect microbatches
         let batches: Vec<Batch> =
             (0..self.cfg.grad_accum).map(|_| self.batcher.next_train()).collect();
-        let params_arc = Arc::new(self.params.tensors.clone());
+        let params_arc = self.snapshot_params();
         let masks_arc = self.masks_arc();
         let base_seed = (t * self.cfg.grad_accum) as i32;
 
@@ -285,7 +315,7 @@ impl Trainer {
     pub fn eval(&mut self) -> Result<f64> {
         let batches: Vec<Batch> =
             (0..self.cfg.eval_batches).map(|_| self.batcher.next_val()).collect();
-        let params_arc = Arc::new(self.params.tensors.clone());
+        let params_arc = self.snapshot_params();
         let masks_arc = self.masks_arc();
         self.engine.eval("eval", params_arc, masks_arc, batches)
     }
@@ -390,7 +420,7 @@ impl Trainer {
     /// Gradient-only probe used by tests: one microbatch, no update.
     pub fn probe_grads(&mut self, variant: &str) -> Result<(f64, Vec<Tensor>)> {
         let batch = self.batcher.next_train();
-        let params_arc = Arc::new(self.params.tensors.clone());
+        let params_arc = self.snapshot_params();
         let masks_arc = self.masks_arc();
         self.engine
             .grad_step(variant, params_arc, masks_arc, vec![batch], 0,

@@ -4,22 +4,27 @@
 //!
 //!   forward:   Z = X (W1 ⊙ M1)^T + b1;  A = GEGLU(Z);  Y = A (W2 ⊙ M2)^T + b2
 //!   backward:  ∇W2 = MVUE(∇Y^T) A        (spmm_tn, Eq. 4+6)
-//!              ∇A  = ∇Y (W2 ⊙ M2)        (spmm_nn, Eq. 3)
+//!              ∇A  = ∇Y (W2 ⊙ M2)        (spmm_nn via compressed W^T, Eq. 3)
 //!              ∇Z  = GEGLU'(Z) ∘ ∇A
 //!              ∇W1 = MVUE(∇Z^T) X
 //!              ∇X  = ∇Z (W1 ⊙ M1)
 //!
 //! plus the per-step weight (re)compression and the every-l-steps
 //! transposable-mask search. The dense twin runs the same shapes through
-//! dense GEMMs. Numerical equivalence between the two forwards under an
-//! all-kept comparison is tested below; the speed comparison is the
-//! Fig. 7a bench.
+//! dense GEMMs.
+//!
+//! The `_scratch` variants are the hot path: every output/temporary is a
+//! caller-owned buffer recycled through a [`Scratch`] arena, so the
+//! steady state performs zero heap allocations — the Fig. 7 benches
+//! measure kernel arithmetic, not the allocator. The plain
+//! `forward`/`backward` wrappers allocate and delegate.
 
-use super::gemm::{gemm_nn, gemm_nt, gemm_tn};
-use super::geglu::{geglu_row_major, geglu_row_major_grad};
+use super::gemm::{gemm_nn_into, gemm_nt_into, gemm_tn_into};
+use super::geglu::{geglu_row_major_grad_into, geglu_row_major_into};
+use super::kernels::{self, with_thread_scratch, Scratch};
 use super::mask::Mask;
-use super::mvue::mvue24;
-use super::spmm::{spmm_nt, spmm_tn, Compressed24};
+use super::mvue::mvue24_into;
+use super::spmm::{spmm_nt_into, spmm_tn_into, Compressed24};
 use super::transposable::transposable_mask;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -34,6 +39,19 @@ pub struct FfnGrads {
     pub db2: Tensor,
 }
 
+impl FfnGrads {
+    /// Empty gradient buffers, shaped on first use by the `_scratch` paths.
+    pub fn empty() -> FfnGrads {
+        FfnGrads {
+            dx: Tensor::zeros(&[0]),
+            dw1: Tensor::zeros(&[0]),
+            db1: Tensor::zeros(&[0]),
+            dw2: Tensor::zeros(&[0]),
+            db2: Tensor::zeros(&[0]),
+        }
+    }
+}
+
 /// Dense FFN layer: W1 (2r, d), W2 (d, r), gated activation.
 #[derive(Clone, Debug)]
 pub struct DenseFfn {
@@ -43,10 +61,17 @@ pub struct DenseFfn {
     pub b2: Tensor,
 }
 
-/// Forward cache reused by the backward pass.
+/// Forward cache reused by the backward pass (recycled across steps by
+/// the `_scratch` paths).
 pub struct FfnCache {
     pub z: Tensor,
     pub a: Tensor,
+}
+
+impl FfnCache {
+    pub fn empty() -> FfnCache {
+        FfnCache { z: Tensor::zeros(&[0]), a: Tensor::zeros(&[0]) }
+    }
 }
 
 impl DenseFfn {
@@ -60,23 +85,60 @@ impl DenseFfn {
     }
 
     pub fn forward(&self, x: &Tensor) -> (Tensor, FfnCache) {
-        let mut z = gemm_nt(x, &self.w1);
-        add_bias(&mut z, &self.b1);
-        let a = geglu_row_major(&z);
-        let mut y = gemm_nt(&a, &self.w2);
-        add_bias(&mut y, &self.b2);
-        (y, FfnCache { z, a })
+        let mut cache = FfnCache::empty();
+        let mut y = Tensor::zeros(&[0]);
+        self.forward_scratch(x, &mut cache, &mut y);
+        (y, cache)
+    }
+
+    /// Zero-allocation forward: `cache` and `y` are reshaped in place.
+    pub fn forward_scratch(&self, x: &Tensor, cache: &mut FfnCache, y: &mut Tensor) {
+        let (p, _) = x.dims2();
+        let (two_r, _) = self.w1.dims2();
+        let (d, _) = self.w2.dims2();
+        cache.z.resize_to(&[p, two_r]);
+        gemm_nt_into(x, &self.w1, &mut cache.z);
+        add_bias(&mut cache.z, &self.b1);
+        geglu_row_major_into(&cache.z, &mut cache.a);
+        y.resize_to(&[p, d]);
+        gemm_nt_into(&cache.a, &self.w2, y);
+        add_bias(y, &self.b2);
     }
 
     pub fn backward(&self, x: &Tensor, cache: &FfnCache, dy: &Tensor) -> FfnGrads {
-        let dw2 = gemm_tn(dy, &cache.a);
-        let db2 = col_sum(dy);
-        let da = gemm_nn(dy, &self.w2);
-        let dz = geglu_row_major_grad(&cache.z, &da);
-        let dw1 = gemm_tn(&dz, x);
-        let db1 = col_sum(&dz);
-        let dx = gemm_nn(&dz, &self.w1);
-        FfnGrads { dx, dw1, db1, dw2, db2 }
+        let mut g = FfnGrads::empty();
+        let mut s = Scratch::new();
+        self.backward_scratch(x, cache, dy, &mut g, &mut s);
+        g
+    }
+
+    /// Zero-allocation backward: gradients land in `g`, temporaries come
+    /// from `scratch`.
+    pub fn backward_scratch(
+        &self,
+        x: &Tensor,
+        cache: &FfnCache,
+        dy: &Tensor,
+        g: &mut FfnGrads,
+        scratch: &mut Scratch,
+    ) {
+        let (p, _) = x.dims2();
+        let (_, r) = self.w2.dims2();
+        let (two_r, _) = self.w1.dims2();
+        g.dw2.resize_to(&self.w2.shape);
+        gemm_tn_into(dy, &cache.a, &mut g.dw2);
+        col_sum_into(dy, &mut g.db2);
+        let mut da = scratch.take(&[p, r]);
+        gemm_nn_into(dy, &self.w2, &mut da);
+        let mut dz = scratch.take(&[p, two_r]);
+        geglu_row_major_grad_into(&cache.z, &da, &mut dz);
+        g.dw1.resize_to(&self.w1.shape);
+        gemm_tn_into(&dz, x, &mut g.dw1);
+        col_sum_into(&dz, &mut g.db1);
+        g.dx.resize_to(&x.shape);
+        gemm_nn_into(&dz, &self.w1, &mut g.dx);
+        scratch.give(da);
+        scratch.give(dz);
     }
 }
 
@@ -87,6 +149,9 @@ pub struct SparseFfn {
     pub dense: DenseFfn,
     pub m1: Mask,
     pub m2: Mask,
+    /// transposed masks, cached so per-step recompression allocates nothing
+    pub m1t: Mask,
+    pub m2t: Mask,
     pub w1c: Compressed24,
     pub w2c: Compressed24,
     /// compressed TRANSPOSES — the transposable masks (Eq. 5) guarantee
@@ -102,68 +167,152 @@ impl SparseFfn {
         let dense = DenseFfn::new(d, r, rng);
         let m1 = transposable_mask(&dense.w1);
         let m2 = transposable_mask(&dense.w2);
+        let m1t = m1.transpose();
+        let m2t = m2.transpose();
         let w1c = Compressed24::from_masked(&dense.w1, &m1);
         let w2c = Compressed24::from_masked(&dense.w2, &m2);
-        let w1ct = Compressed24::from_masked(&dense.w1.t(), &m1.transpose());
-        let w2ct = Compressed24::from_masked(&dense.w2.t(), &m2.transpose());
-        SparseFfn { dense, m1, m2, w1c, w2c, w1ct, w2ct }
+        let w1ct = Compressed24::from_masked(&dense.w1.t(), &m1t);
+        let w2ct = Compressed24::from_masked(&dense.w2.t(), &m2t);
+        SparseFfn { dense, m1, m2, m1t, m2t, w1c, w2c, w1ct, w2ct }
     }
 
     /// Per-step "prune weights": recompress values under the CURRENT masks
-    /// (cheap; Table 13's `Prune weights` row).
+    /// (cheap; Table 13's `Prune weights` row). Zero-allocation: the
+    /// compressed buffers and the transpose temporary are reused.
     pub fn recompress(&mut self) {
-        self.w1c = Compressed24::from_masked(&self.dense.w1, &self.m1);
-        self.w2c = Compressed24::from_masked(&self.dense.w2, &self.m2);
-        self.w1ct = Compressed24::from_masked(&self.dense.w1.t(), &self.m1.transpose());
-        self.w2ct = Compressed24::from_masked(&self.dense.w2.t(), &self.m2.transpose());
+        self.w1c.from_masked_into(&self.dense.w1, &self.m1);
+        self.w2c.from_masked_into(&self.dense.w2, &self.m2);
+        let (r1, c1) = self.dense.w1.dims2();
+        let (r2, c2) = self.dense.w2.dims2();
+        let dense = &self.dense;
+        let (w1ct, w2ct) = (&mut self.w1ct, &mut self.w2ct);
+        let (m1t, m2t) = (&self.m1t, &self.m2t);
+        with_thread_scratch(|s| {
+            // one buffer per shape, both held until the end: steady-state
+            // lengths never change, so the transpose targets are never
+            // redundantly zeroed and best-fit reuse stays shape-stable
+            let mut w1t = s.take(&[c1, r1]);
+            let mut w2t = s.take(&[c2, r2]);
+            kernels::transpose(&dense.w1, &mut w1t);
+            w1ct.from_masked_into(&w1t, m1t);
+            kernels::transpose(&dense.w2, &mut w2t);
+            w2ct.from_masked_into(&w2t, m2t);
+            s.give(w1t);
+            s.give(w2t);
+        });
     }
 
     /// Every-l-steps transposable mask search (Table 13's bottom row).
     pub fn refresh_masks(&mut self) {
         self.m1 = transposable_mask(&self.dense.w1);
         self.m2 = transposable_mask(&self.dense.w2);
+        self.m1t = self.m1.transpose();
+        self.m2t = self.m2.transpose();
         self.recompress();
     }
 
     pub fn forward(&self, x: &Tensor) -> (Tensor, FfnCache) {
-        let mut z = spmm_nt(x, &self.w1c);
-        add_bias(&mut z, &self.dense.b1);
-        let a = geglu_row_major(&z);
-        let mut y = spmm_nt(&a, &self.w2c);
-        add_bias(&mut y, &self.dense.b2);
-        (y, FfnCache { z, a })
+        let mut cache = FfnCache::empty();
+        let mut y = Tensor::zeros(&[0]);
+        self.forward_scratch(x, &mut cache, &mut y);
+        (y, cache)
+    }
+
+    /// Zero-allocation forward through the compressed operands.
+    pub fn forward_scratch(&self, x: &Tensor, cache: &mut FfnCache, y: &mut Tensor) {
+        let (p, _) = x.dims2();
+        cache.z.resize_to(&[p, self.w1c.rows]);
+        spmm_nt_into(x, &self.w1c, &mut cache.z);
+        add_bias(&mut cache.z, &self.dense.b1);
+        geglu_row_major_into(&cache.z, &mut cache.a);
+        y.resize_to(&[p, self.w2c.rows]);
+        spmm_nt_into(&cache.a, &self.w2c, y);
+        add_bias(y, &self.dense.b2);
     }
 
     /// FST backward: MVUE-compressed gradient spMMs (Eq. 4+6) and
     /// masked-weight input-grad spMMs (Eq. 3).
     pub fn backward(&self, x: &Tensor, cache: &FfnCache, dy: &Tensor,
                     rng: &mut Rng) -> FfnGrads {
+        let mut g = FfnGrads::empty();
+        let mut s = Scratch::new();
+        self.backward_scratch(x, cache, dy, rng, &mut g, &mut s);
+        g
+    }
+
+    /// Zero-allocation FST backward. Draws the same MVUE uniform stream
+    /// as [`SparseFfn::backward`] for a given rng state.
+    pub fn backward_scratch(
+        &self,
+        x: &Tensor,
+        cache: &FfnCache,
+        dy: &Tensor,
+        rng: &mut Rng,
+        g: &mut FfnGrads,
+        scratch: &mut Scratch,
+    ) {
+        let (p, d) = dy.dims2();
+        let (_, r) = self.dense.w2.dims2();
+        let (two_r, _) = self.dense.w1.dims2();
+        let mut uni = scratch.take_vec(0);
+        let mut gcomp = scratch.take_comp();
+        // Distinct transpose/MVUE buffers per shape so their lengths
+        // never change across steps (resize_to's zero-fill only triggers
+        // on a length change — reusing one buffer for both shapes would
+        // memset 2*(2r*p) dead floats per step).
         // ∇W2 = MVUE(∇Y^T) A
-        let dyt_s = mvue24(&dy.t(), rng);
-        let dw2 = spmm_tn(&compress_sparse24(&dyt_s), &cache.a);
-        let db2 = col_sum(dy);
+        let mut gt_dy = scratch.take(&[d, p]);
+        let mut mv_dy = scratch.take(&[d, p]);
+        kernels::transpose(dy, &mut gt_dy);
+        mvue24_into(&gt_dy, rng, &mut uni, &mut mv_dy);
+        compress_sparse24_into(&mv_dy, &mut gcomp);
+        g.dw2.resize_to(&self.dense.w2.shape);
+        spmm_tn_into(&gcomp, &cache.a, &mut g.dw2);
+        col_sum_into(dy, &mut g.db2);
         // ∇A = ∇Y (W2 ⊙ M2) — via the compressed transpose (Eq. 5)
-        let da = spmm_nt(dy, &self.w2ct);
-        let dz = geglu_row_major_grad(&cache.z, &da);
+        let mut da = scratch.take(&[p, r]);
+        spmm_nt_into(dy, &self.w2ct, &mut da);
+        let mut dz = scratch.take(&[p, two_r]);
+        geglu_row_major_grad_into(&cache.z, &da, &mut dz);
         // ∇W1 = MVUE(∇Z^T) X
-        let dzt_s = mvue24(&dz.t(), rng);
-        let dw1 = spmm_tn(&compress_sparse24(&dzt_s), x);
-        let db1 = col_sum(&dz);
+        let mut gt_dz = scratch.take(&[two_r, p]);
+        let mut mv_dz = scratch.take(&[two_r, p]);
+        kernels::transpose(&dz, &mut gt_dz);
+        mvue24_into(&gt_dz, rng, &mut uni, &mut mv_dz);
+        compress_sparse24_into(&mv_dz, &mut gcomp);
+        g.dw1.resize_to(&self.dense.w1.shape);
+        spmm_tn_into(&gcomp, x, &mut g.dw1);
+        col_sum_into(&dz, &mut g.db1);
         // ∇X = ∇Z (W1 ⊙ M1) — via the compressed transpose
-        let dx = spmm_nt(&dz, &self.w1ct);
-        FfnGrads { dx, dw1, db1, dw2, db2 }
+        g.dx.resize_to(&x.shape);
+        spmm_nt_into(&dz, &self.w1ct, &mut g.dx);
+        scratch.give(gt_dy);
+        scratch.give(mv_dy);
+        scratch.give(gt_dz);
+        scratch.give(mv_dz);
+        scratch.give(da);
+        scratch.give(dz);
+        scratch.give_vec(uni);
+        scratch.give_comp(gcomp);
     }
 }
 
 /// Compress a tensor that is ALREADY <=2-nonzero per group of four (e.g.
 /// an MVUE output) without re-ranking magnitudes.
 pub fn compress_sparse24(t: &Tensor) -> Compressed24 {
+    let mut out = Compressed24::default();
+    compress_sparse24_into(t, &mut out);
+    out
+}
+
+/// In-place variant reusing `out`'s buffers (zero-allocation hot path).
+pub fn compress_sparse24_into(t: &Tensor, out: &mut Compressed24) {
     let (r, c) = t.dims2();
     assert_eq!(c % 4, 0);
     let half = c / 2;
-    let mut values = vec![0f32; r * half];
-    let mut indices = vec![0u8; r * half];
-    let mut abs_indices = vec![0u32; r * half];
+    out.reset(r, c);
+    let (values, indices, abs_indices) =
+        (&mut out.values, &mut out.indices, &mut out.abs_indices);
     for i in 0..r {
         let mut o = i * half;
         for g in 0..c / 4 {
@@ -193,7 +342,6 @@ pub fn compress_sparse24(t: &Tensor) -> Compressed24 {
             }
         }
     }
-    Compressed24 { rows: r, cols: c, values, indices, abs_indices }
 }
 
 pub fn add_bias(x: &mut Tensor, b: &Tensor) {
@@ -207,19 +355,26 @@ pub fn add_bias(x: &mut Tensor, b: &Tensor) {
 }
 
 pub fn col_sum(x: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(&[0]);
+    col_sum_into(x, &mut out);
+    out
+}
+
+pub fn col_sum_into(x: &Tensor, out: &mut Tensor) {
     let (p, c) = x.dims2();
-    let mut out = Tensor::zeros(&[c]);
+    out.resize_to(&[c]);
+    out.data.fill(0.0);
     for i in 0..p {
         for j in 0..c {
             out.data[j] += x.data[i * c + j];
         }
     }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::mvue::mvue24;
 
     fn rand(shape: &[usize], seed: u64) -> Tensor {
         Tensor::normal(shape, 0.5, &mut Rng::new(seed))
@@ -329,6 +484,8 @@ mod tests {
         assert_ne!(before, sf.w1c.values);
         // masks unchanged by recompress
         assert!(sf.m1.is_transposable());
+        // compressed transposes track the update too
+        assert_eq!(sf.w1ct.to_dense(), sf.m1t.apply(&sf.dense.w1.t()));
     }
 
     #[test]
@@ -338,5 +495,37 @@ mod tests {
         let s = mvue24(&x, &mut rng);
         let c = compress_sparse24(&s);
         assert!(c.to_dense().max_abs_diff(&s) < 1e-6);
+    }
+
+    #[test]
+    fn scratch_paths_match_allocating_paths() {
+        let mut rng = Rng::new(14);
+        let sf = SparseFfn::new(16, 8, &mut rng);
+        let x = rand(&[8, 16], 15);
+        let dy = rand(&[8, 16], 16);
+        // allocating reference
+        let (y_ref, cache_ref) = sf.forward(&x);
+        let g_ref = sf.backward(&x, &cache_ref, &dy, &mut Rng::new(17));
+        // scratch path, run twice to exercise buffer reuse
+        let mut cache = FfnCache::empty();
+        let mut y = Tensor::zeros(&[0]);
+        let mut g = FfnGrads::empty();
+        let mut s = Scratch::new();
+        for _ in 0..2 {
+            sf.forward_scratch(&x, &mut cache, &mut y);
+            sf.backward_scratch(&x, &cache, &dy, &mut Rng::new(17), &mut g, &mut s);
+        }
+        assert_eq!(y, y_ref);
+        assert_eq!(g.dx, g_ref.dx);
+        assert_eq!(g.dw1, g_ref.dw1);
+        assert_eq!(g.dw2, g_ref.dw2);
+        assert_eq!(g.db1, g_ref.db1);
+        assert_eq!(g.db2, g_ref.db2);
+        // steady state: the arena stops growing after the first iteration
+        let pooled = s.pooled();
+        sf.forward_scratch(&x, &mut cache, &mut y);
+        let mut g2 = FfnGrads::empty();
+        sf.backward_scratch(&x, &cache, &dy, &mut Rng::new(17), &mut g2, &mut s);
+        assert_eq!(s.pooled(), pooled);
     }
 }

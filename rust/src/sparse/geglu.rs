@@ -133,9 +133,16 @@ pub fn swiglu_col_order(z: &ColMajor) -> ColMajor {
 /// Row-major fused GEGLU for the substrate paths that keep row-major
 /// activations (FFN forward on the dense baseline). z: (p, 2r) row-major.
 pub fn geglu_row_major(z: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(&[0]);
+    geglu_row_major_into(z, &mut out);
+    out
+}
+
+/// Allocation-free variant: `out` is reshaped to (p, r) and overwritten.
+pub fn geglu_row_major_into(z: &Tensor, out: &mut Tensor) {
     let (p, c2) = z.dims2();
     let r = c2 / 2;
-    let mut out = Tensor::zeros(&[p, r]);
+    out.resize_to(&[p, r]);
     for i in 0..p {
         let zrow = &z.data[i * c2..(i + 1) * c2];
         let orow = &mut out.data[i * r..(i + 1) * r];
@@ -143,16 +150,22 @@ pub fn geglu_row_major(z: &Tensor) -> Tensor {
             orow[j] = gelu(zrow[j]) * zrow[r + j];
         }
     }
-    out
 }
 
 /// Backward of row-major GEGLU: given z and upstream g (p, r), return
 /// gradient wrt z (p, 2r).
 pub fn geglu_row_major_grad(z: &Tensor, g: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(&[0]);
+    geglu_row_major_grad_into(z, g, &mut out);
+    out
+}
+
+/// Allocation-free variant: `out` is reshaped to (p, 2r) and overwritten.
+pub fn geglu_row_major_grad_into(z: &Tensor, g: &Tensor, out: &mut Tensor) {
     let (p, c2) = z.dims2();
     let r = c2 / 2;
     assert_eq!(g.dims2(), (p, r));
-    let mut out = Tensor::zeros(&[p, c2]);
+    out.resize_to(&[p, c2]);
     for i in 0..p {
         let zrow = &z.data[i * c2..(i + 1) * c2];
         let grow = &g.data[i * r..(i + 1) * r];
@@ -163,7 +176,6 @@ pub fn geglu_row_major_grad(z: &Tensor, g: &Tensor) -> Tensor {
             orow[r + j] = gelu(z1) * grow[j];
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -1,19 +1,29 @@
-//! Dense f32 GEMM baselines for the CPU training substrate.
+//! Dense f32 GEMM entry points for the CPU training substrate.
 //!
 //! These are the "dense tensor core" stand-ins that the 2:4 spMM
-//! (`spmm.rs`) is benchmarked against (Fig. 7, Tables 11/13). Loop orders
-//! are chosen so the innermost loop is a contiguous dot product or a
-//! contiguous AXPY — the scalar-CPU equivalent of a well-tiled GEMM. The
-//! three variants mirror the three GEMMs of a linear layer (paper Eq. 1):
+//! (`spmm.rs`) is benchmarked against (Fig. 7, Tables 11/13). The three
+//! variants mirror the three GEMMs of a linear layer (paper Eq. 1):
 //!
 //!   `gemm_nt`: Z  = X  W^T   (p,q)x(r,q)->(p,r)   output activations
 //!   `gemm_nn`: ∇X = ∇Z W     (p,r)x(r,q)->(p,q)   input gradients
 //!   `gemm_tn`: ∇W = ∇Z^T X   (p,r)x(p,q)->(r,q)   weight gradients
+//!
+//! All entry points dispatch through [`crate::sparse::kernels`]: the
+//! tiled + threaded backend for real problem sizes, the seed's naive
+//! reference for tiny ones (and when `KernelBackend::Naive` is forced).
+//! The shared SIMD primitives [`dot`] and [`axpy`] below are used by
+//! both backends.
 
+use std::simd::prelude::*;
+use std::simd::StdFloat;
+
+use super::kernels;
 use crate::tensor::Tensor;
 
+/// SIMD lane width shared by the kernel primitives (AVX2: 8 x f32).
+const LANES: usize = 8;
+
 /// C = A B^T. A: (p,q), B: (r,q) row-major -> C: (p,r).
-/// Inner loop: contiguous dot of A-row and B-row.
 pub fn gemm_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (p, q) = a.dims2();
     let (r, qb) = b.dims2();
@@ -24,20 +34,13 @@ pub fn gemm_nt(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 pub fn gemm_nt_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
-    let (p, q) = a.dims2();
-    let (r, _) = b.dims2();
-    for i in 0..p {
-        let arow = &a.data[i * q..(i + 1) * q];
-        let crow = &mut c.data[i * r..(i + 1) * r];
-        for j in 0..r {
-            let brow = &b.data[j * q..(j + 1) * q];
-            crow[j] = dot(arow, brow);
-        }
-    }
+    let (_, q) = a.dims2();
+    let (_, qb) = b.dims2();
+    assert_eq!(q, qb, "gemm_nt: inner dims {q} vs {qb}");
+    kernels::gemm_nt_into(a, b, c)
 }
 
 /// C = A B. A: (p,r), B: (r,q) row-major -> C: (p,q).
-/// Inner loop: contiguous AXPY over C-row (B accessed row-wise).
 pub fn gemm_nn(a: &Tensor, b: &Tensor) -> Tensor {
     let (p, r) = a.dims2();
     let (rb, q) = b.dims2();
@@ -48,24 +51,13 @@ pub fn gemm_nn(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 pub fn gemm_nn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
-    let (p, r) = a.dims2();
-    let (_, q) = b.dims2();
-    c.data.fill(0.0);
-    for i in 0..p {
-        let crow = &mut c.data[i * q..(i + 1) * q];
-        for k in 0..r {
-            let aik = a.data[i * r + k];
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b.data[k * q..(k + 1) * q];
-            axpy(aik, brow, crow);
-        }
-    }
+    let (_, r) = a.dims2();
+    let (rb, _) = b.dims2();
+    assert_eq!(r, rb, "gemm_nn: inner dims {r} vs {rb}");
+    kernels::gemm_nn_into(a, b, c)
 }
 
 /// C = A^T B. A: (p,r), B: (p,q) row-major -> C: (r,q).
-/// Inner loop: contiguous AXPY over C-row (both operands row-wise).
 pub fn gemm_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (p, r) = a.dims2();
     let (pb, q) = b.dims2();
@@ -76,49 +68,57 @@ pub fn gemm_tn(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 pub fn gemm_tn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
-    let (p, r) = a.dims2();
-    let (_, q) = b.dims2();
-    c.data.fill(0.0);
-    for i in 0..p {
-        let brow = &b.data[i * q..(i + 1) * q];
-        for k in 0..r {
-            let aik = a.data[i * r + k];
-            if aik == 0.0 {
-                continue;
-            }
-            let crow = &mut c.data[k * q..(k + 1) * q];
-            axpy(aik, brow, crow);
-        }
-    }
+    let (p, _) = a.dims2();
+    let (pb, _) = b.dims2();
+    assert_eq!(p, pb, "gemm_tn: outer dims {p} vs {pb}");
+    kernels::gemm_tn_into(a, b, c)
 }
 
-/// Contiguous dot product, 4-way unrolled for ILP.
+/// Contiguous SIMD dot product: four 8-lane FMA chains, one tail loop.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    for k in 0..chunks {
-        let i = k * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
+    let mut acc = [Simd::<f32, LANES>::splat(0.0); 4];
+    let blocks = n / (4 * LANES);
+    for t in 0..blocks {
+        let o = t * 4 * LANES;
+        for (m, accm) in acc.iter_mut().enumerate() {
+            let s = o + m * LANES;
+            let av = Simd::<f32, LANES>::from_slice(&a[s..s + LANES]);
+            let bv = Simd::<f32, LANES>::from_slice(&b[s..s + LANES]);
+            *accm = av.mul_add(bv, *accm);
+        }
     }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
+    let mut o = blocks * 4 * LANES;
+    while o + LANES <= n {
+        let av = Simd::<f32, LANES>::from_slice(&a[o..o + LANES]);
+        let bv = Simd::<f32, LANES>::from_slice(&b[o..o + LANES]);
+        acc[0] = av.mul_add(bv, acc[0]);
+        o += LANES;
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])).reduce_sum();
+    for k in o..n {
+        s += a[k] * b[k];
     }
     s
 }
 
-/// y += alpha * x over contiguous slices.
+/// y += alpha * x over contiguous slices (SIMD FMA + scalar tail).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+    let n = x.len();
+    let av = Simd::<f32, LANES>::splat(alpha);
+    let mut o = 0;
+    while o + LANES <= n {
+        let xv = Simd::<f32, LANES>::from_slice(&x[o..o + LANES]);
+        let yv = Simd::<f32, LANES>::from_slice(&y[o..o + LANES]);
+        av.mul_add(xv, yv).copy_to_slice(&mut y[o..o + LANES]);
+        o += LANES;
+    }
+    for k in o..n {
+        y[k] += alpha * x[k];
     }
 }
 
@@ -188,11 +188,30 @@ mod tests {
     }
 
     #[test]
-    fn dot_unroll_matches_scalar() {
-        let a: Vec<f32> = (0..17).map(|i| i as f32 * 0.5).collect();
-        let b: Vec<f32> = (0..17).map(|i| 1.0 - i as f32 * 0.1).collect();
-        let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-        assert!((dot(&a, &b) - scalar).abs() < 1e-4);
+    fn dot_simd_matches_scalar() {
+        for n in [0usize, 1, 7, 8, 17, 31, 32, 33, 100] {
+            // bounded values so ordering differences stay tiny in f32
+            let a: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * 0.25).collect();
+            let b: Vec<f32> = (0..n).map(|i| ((i % 5) as f32 - 2.0) * 0.5).collect();
+            let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - scalar).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_simd_matches_scalar() {
+        for n in [0usize, 1, 5, 8, 13, 24, 40] {
+            let x: Vec<f32> = (0..n).map(|i| i as f32 - 3.0).collect();
+            let mut y: Vec<f32> = (0..n).map(|i| 0.25 * i as f32).collect();
+            let mut yref = y.clone();
+            axpy(0.5, &x, &mut y);
+            for (yi, &xi) in yref.iter_mut().zip(&x) {
+                *yi += 0.5 * xi;
+            }
+            for (a, b) in y.iter().zip(&yref) {
+                assert!((a - b).abs() < 1e-6, "n={n}");
+            }
+        }
     }
 
     #[test]

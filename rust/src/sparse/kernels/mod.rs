@@ -1,0 +1,233 @@
+//! Kernel backend: tiled, multi-threaded GEMM/spMM with a scratch arena.
+//!
+//! This module is the CPU substrate's answer to the paper's sparse
+//! tensor cores. The paper's speedup claim (Fig. 7, Tables 11/13) is
+//! that the three FFN GEMMs of Eq. 2-4 run at ~2x when one operand is
+//! 2:4-compressed, because the hardware performs q/2 MACs per output
+//! element instead of q. For that claim to be measurable here, both the
+//! dense baseline and the spMM must run at machine speed — otherwise the
+//! benches measure allocator traffic and cache thrash instead of the
+//! q/2-MAC structure. The backend therefore provides:
+//!
+//! * [`threading`] — a persistent, work-stealing-free thread pool that
+//!   partitions *output rows* in microkernel-aligned blocks
+//!   (`PALLAS_NUM_THREADS` env, `[kernels] threads` config,
+//!   [`set_num_threads`]). Row ownership + fixed per-row instruction
+//!   sequences make results bitwise identical across thread counts.
+//! * [`tiled`] — cache-blocked, register-tiled `std::simd` kernels. The
+//!   dense GEMMs use 4x2 (dot-form, `gemm_nt`) and 4x16 (AXPY-form,
+//!   `gemm_nn`/`gemm_tn`) register tiles: the microkernel is the CPU
+//!   analogue of the tensor-core MMA tile, with the k-loop playing the
+//!   role of the MMA's depth dimension. The spMMs make the compressed
+//!   operand stationary and stream the dense operand along the token
+//!   dimension so the 2-bit metadata turns into a row offset — exactly
+//!   how the sparse tensor core's operand muxing consumes (values,
+//!   metadata) without ever materializing the dense matrix. The sparse
+//!   kernels execute half the FMA work of their dense twins at equal
+//!   tiling and thread count, which is the paper's Eq. 2-4 arithmetic.
+//! * [`naive`] — the seed's single-threaded reference kernels, kept as
+//!   the differential-test oracle ([`KernelBackend::Naive`]) and used
+//!   for problems too small to amortize threading/tiling overhead.
+//! * [`scratch`] — a checkout/checkin buffer arena so steady-state
+//!   forward/backward/recompress paths allocate nothing.
+//!
+//! Backend selection: `PALLAS_KERNEL_BACKEND=naive|tiled` env (default
+//! tiled), [`set_backend`] at runtime, `[kernels] backend` in configs.
+
+pub mod naive;
+pub mod scratch;
+pub mod threading;
+pub mod tiled;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub use scratch::{with_thread_scratch, Scratch};
+pub use threading::{num_threads, parallel_chunks, set_num_threads};
+
+use crate::sparse::spmm::Compressed24;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Seed reference kernels: single-threaded, no tiling.
+    Naive,
+    /// Tiled + threaded `std::simd` kernels (default).
+    Tiled,
+}
+
+/// 0 = unresolved, 1 = naive, 2 = tiled.
+static BACKEND: AtomicU8 = AtomicU8::new(0);
+
+/// Currently selected backend (resolves `PALLAS_KERNEL_BACKEND` once).
+pub fn backend() -> KernelBackend {
+    match BACKEND.load(Ordering::Relaxed) {
+        1 => KernelBackend::Naive,
+        2 => KernelBackend::Tiled,
+        _ => {
+            let b = match std::env::var("PALLAS_KERNEL_BACKEND").ok().as_deref() {
+                Some("naive") => KernelBackend::Naive,
+                _ => KernelBackend::Tiled,
+            };
+            set_backend(b);
+            b
+        }
+    }
+}
+
+pub fn set_backend(b: KernelBackend) {
+    let v = match b {
+        KernelBackend::Naive => 1,
+        KernelBackend::Tiled => 2,
+    };
+    BACKEND.store(v, Ordering::Relaxed);
+}
+
+/// Label for reports/bench records.
+pub fn backend_name() -> &'static str {
+    match backend() {
+        KernelBackend::Naive => "naive",
+        KernelBackend::Tiled => "tiled",
+    }
+}
+
+/// Parse a config/CLI backend name; `"auto"` keeps the current choice.
+pub fn set_backend_by_name(name: &str) -> bool {
+    match name {
+        "naive" => set_backend(KernelBackend::Naive),
+        "tiled" => set_backend(KernelBackend::Tiled),
+        "auto" | "" => {}
+        _ => return false,
+    }
+    true
+}
+
+/// Below this many FLOPs the tiled path cannot amortize pool wakeup and
+/// operand staging; dispatch falls back to the naive kernels.
+const TILED_MIN_FLOPS: usize = 1 << 18;
+
+#[inline]
+fn tiled_pays_off(flops: usize) -> bool {
+    backend() == KernelBackend::Tiled && flops >= TILED_MIN_FLOPS
+}
+
+// --- dispatched entry points (the public gemm/spmm functions call these) ---
+//
+// The output-length asserts are load-bearing: the tiled backend writes
+// through raw pointers with only debug-level bounds checks, so an
+// undersized output must be rejected here, in release builds too.
+
+pub fn gemm_nt_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, q) = a.dims2();
+    let (r, _) = b.dims2();
+    assert_eq!(c.data.len(), p * r, "gemm_nt_into: output len");
+    if tiled_pays_off(2 * p * q * r) {
+        tiled::gemm_nt_into(a, b, c)
+    } else {
+        naive::gemm_nt_into(a, b, c)
+    }
+}
+
+pub fn gemm_nn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, r) = a.dims2();
+    let (_, q) = b.dims2();
+    assert_eq!(c.data.len(), p * q, "gemm_nn_into: output len");
+    if tiled_pays_off(2 * p * q * r) {
+        tiled::gemm_nn_into(a, b, c)
+    } else {
+        naive::gemm_nn_into(a, b, c)
+    }
+}
+
+pub fn gemm_tn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, r) = a.dims2();
+    let (_, q) = b.dims2();
+    assert_eq!(c.data.len(), r * q, "gemm_tn_into: output len");
+    if tiled_pays_off(2 * p * q * r) {
+        tiled::gemm_tn_into(a, b, c)
+    } else {
+        naive::gemm_tn_into(a, b, c)
+    }
+}
+
+pub fn spmm_nt_into(x: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let (p, q) = x.dims2();
+    assert_eq!(c.data.len(), p * wc.rows, "spmm_nt_into: output len");
+    if tiled_pays_off(p * q * wc.rows) {
+        tiled::spmm_nt_into(x, wc, c)
+    } else {
+        naive::spmm_nt_into(x, wc, c)
+    }
+}
+
+pub fn spmm_nn_into(g: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let (p, r) = g.dims2();
+    assert_eq!(c.data.len(), p * wc.cols, "spmm_nn_into: output len");
+    if tiled_pays_off(p * r * wc.cols) {
+        tiled::spmm_nn_into(g, wc, c)
+    } else {
+        naive::spmm_nn_into(g, wc, c)
+    }
+}
+
+pub fn spmm_tn_into(gc: &Compressed24, x: &Tensor, c: &mut Tensor) {
+    let (p, q) = x.dims2();
+    assert_eq!(c.data.len(), gc.rows * q, "spmm_tn_into: output len");
+    if tiled_pays_off(gc.rows * p * q) {
+        tiled::spmm_tn_into(gc, x, c)
+    } else {
+        naive::spmm_tn_into(gc, x, c)
+    }
+}
+
+/// Parallel transpose through the kernel pool — the hot-path variant of
+/// [`Tensor::transpose_into`] (which stays sequential for cold paths).
+pub fn transpose(src: &Tensor, out: &mut Tensor) {
+    let (r, c) = src.dims2();
+    out.resize_to(&[c, r]);
+    tiled::transpose_into_buf(&src.data, r, c, &mut out.data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand(shape: &[usize], seed: u64) -> Tensor {
+        Tensor::normal(shape, 0.5, &mut Rng::new(seed))
+    }
+
+    // Differential tests across backends live in
+    // rust/tests/kernels_differential.rs; here we only pin dispatch
+    // plumbing (global-state mutation kept inside a single #[test] so
+    // parallel test threads don't race on the backend selector).
+    #[test]
+    fn backend_selection_and_dispatch() {
+        let prev = backend();
+        set_backend(KernelBackend::Naive);
+        assert_eq!(backend(), KernelBackend::Naive);
+        let a = rand(&[5, 12], 0);
+        let b = rand(&[7, 12], 1);
+        let mut c1 = Tensor::zeros(&[5, 7]);
+        gemm_nt_into(&a, &b, &mut c1);
+        set_backend(KernelBackend::Tiled);
+        assert_eq!(backend(), KernelBackend::Tiled);
+        let mut c2 = Tensor::zeros(&[5, 7]);
+        gemm_nt_into(&a, &b, &mut c2);
+        assert!(c1.max_abs_diff(&c2) < 1e-5);
+        assert!(set_backend_by_name("auto"));
+        assert!(!set_backend_by_name("gpu"));
+        set_backend(prev);
+    }
+
+    #[test]
+    fn tiled_direct_matches_naive_on_unaligned_shape() {
+        // (13, 20, 9): not multiples of any tile size
+        let a = rand(&[13, 20], 2);
+        let b = rand(&[9, 20], 3);
+        let mut cn = Tensor::zeros(&[13, 9]);
+        naive::gemm_nt_into(&a, &b, &mut cn);
+        let mut ct = Tensor::zeros(&[13, 9]);
+        tiled::gemm_nt_into(&a, &b, &mut ct);
+        assert!(cn.max_abs_diff(&ct) < 1e-4);
+    }
+}

@@ -1,0 +1,148 @@
+//! Reference kernels — the seed's single-threaded implementations.
+//!
+//! Kept verbatim (modulo the shared SIMD `dot`/`axpy` primitives) as the
+//! differential-test oracle for the tiled backend and as the dispatch
+//! target for problems too small to amortize tiling/threading overhead.
+//! Loop orders make the innermost loop a contiguous dot or AXPY; the
+//! spMM inner loops exploit the 2:4 group structure (q/2 MACs per output
+//! element instead of q — the sparse-tensor-core arithmetic the paper's
+//! speedups come from).
+
+use std::simd::prelude::*;
+
+use crate::sparse::gemm::{axpy, dot};
+use crate::sparse::spmm::Compressed24;
+use crate::tensor::Tensor;
+
+/// SIMD lane width for the gather kernel (AVX2: 8 x f32).
+const LANES: usize = 8;
+
+/// C = A B^T. A: (p,q), B: (r,q) row-major -> C: (p,r).
+pub fn gemm_nt_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, q) = a.dims2();
+    let (r, _) = b.dims2();
+    for i in 0..p {
+        let arow = &a.data[i * q..(i + 1) * q];
+        let crow = &mut c.data[i * r..(i + 1) * r];
+        for j in 0..r {
+            let brow = &b.data[j * q..(j + 1) * q];
+            crow[j] = dot(arow, brow);
+        }
+    }
+}
+
+/// C = A B. A: (p,r), B: (r,q) row-major -> C: (p,q).
+pub fn gemm_nn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, r) = a.dims2();
+    let (_, q) = b.dims2();
+    c.data.fill(0.0);
+    for i in 0..p {
+        let crow = &mut c.data[i * q..(i + 1) * q];
+        for k in 0..r {
+            let aik = a.data[i * r + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[k * q..(k + 1) * q];
+            axpy(aik, brow, crow);
+        }
+    }
+}
+
+/// C = A^T B. A: (p,r), B: (p,q) row-major -> C: (r,q).
+pub fn gemm_tn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, r) = a.dims2();
+    let (_, q) = b.dims2();
+    c.data.fill(0.0);
+    for i in 0..p {
+        let brow = &b.data[i * q..(i + 1) * q];
+        for k in 0..r {
+            let aik = a.data[i * r + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[k * q..(k + 1) * q];
+            axpy(aik, brow, crow);
+        }
+    }
+}
+
+/// C = X Wc^T, Wc row-wise 2:4 compressed. X: (p,q), Wc: (r,q) -> (p,r).
+/// q/2 MACs per output element via an 8-lane gather+FMA.
+pub fn spmm_nt_into(x: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let (p, q) = x.dims2();
+    let r = wc.rows;
+    let half = q / 2;
+    let blocks = half / LANES;
+    for i in 0..p {
+        let xrow = &x.data[i * q..(i + 1) * q];
+        let crow = &mut c.data[i * r..(i + 1) * r];
+        for j in 0..r {
+            let vals = &wc.values[j * half..(j + 1) * half];
+            let aidx = &wc.abs_indices[j * half..(j + 1) * half];
+            let mut acc = Simd::<f32, LANES>::splat(0.0);
+            for b in 0..blocks {
+                let o = b * LANES;
+                let idx: Simd<usize, LANES> =
+                    Simd::<u32, LANES>::from_slice(&aidx[o..o + LANES]).cast();
+                let xs = Simd::<f32, LANES>::gather_or_default(xrow, idx);
+                let vs = Simd::<f32, LANES>::from_slice(&vals[o..o + LANES]);
+                acc += xs * vs;
+            }
+            let mut s = acc.reduce_sum();
+            for o in blocks * LANES..half {
+                s += vals[o] * xrow[aidx[o] as usize];
+            }
+            crow[j] = s;
+        }
+    }
+}
+
+/// C = G Wc (dense-equivalent W: (r,q)). G: (p,r) -> C: (p,q).
+/// Scatter form: q/2 scattered MACs per (row of G, row of W).
+pub fn spmm_nn_into(g: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let (p, r) = g.dims2();
+    let q = wc.cols;
+    let half = q / 2;
+    c.data.fill(0.0);
+    for i in 0..p {
+        let grow = &g.data[i * r..(i + 1) * r];
+        let crow = &mut c.data[i * q..(i + 1) * q];
+        for k in 0..r {
+            let gik = grow[k];
+            if gik == 0.0 {
+                continue;
+            }
+            let vals = &wc.values[k * half..(k + 1) * half];
+            let idxs = &wc.indices[k * half..(k + 1) * half];
+            for g4 in 0..q / 4 {
+                let dst = &mut crow[g4 * 4..g4 * 4 + 4];
+                dst[idxs[g4 * 2] as usize] += gik * vals[g4 * 2];
+                dst[idxs[g4 * 2 + 1] as usize] += gik * vals[g4 * 2 + 1];
+            }
+        }
+    }
+}
+
+/// C = Gc^T X with Gc 2:4-compressed along p. Gc: (r,p), X: (p,q) ->
+/// C: (r,q). p/2 contiguous AXPYs per output row instead of p.
+pub fn spmm_tn_into(gc: &Compressed24, x: &Tensor, c: &mut Tensor) {
+    let (_, q) = x.dims2();
+    let r = gc.rows;
+    let half = gc.cols / 2;
+    c.data.fill(0.0);
+    for j in 0..r {
+        let vals = &gc.values[j * half..(j + 1) * half];
+        let aidx = &gc.abs_indices[j * half..(j + 1) * half];
+        let crow = &mut c.data[j * q..(j + 1) * q];
+        for h in 0..half {
+            let v = vals[h];
+            if v == 0.0 {
+                continue;
+            }
+            let row = aidx[h] as usize;
+            let xrow = &x.data[row * q..(row + 1) * q];
+            axpy(v, xrow, crow);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Zero-allocation scratch arena for kernel and layer temporaries.
+//!
+//! The seed substrate allocated a fresh `Tensor::zeros` for every GEMM
+//! output, every transpose, and every MVUE draw — so the Fig. 7/Table 11
+//! benches measured the allocator as much as the arithmetic. [`Scratch`]
+//! is a checkout/checkin free-list of `Vec<f32>` buffers (and recycled
+//! shape vectors): after one warmup iteration every `take` is served from
+//! the free list and the steady state performs no heap allocation.
+//!
+//! Two usage patterns:
+//! * layer code (`DenseFfn::forward_scratch`, …) threads an explicit
+//!   `&mut Scratch` through the hot loop;
+//! * the tiled kernels need internal temporaries (operand transposes)
+//!   even when called through the allocating public API, so they use a
+//!   per-thread arena via [`with_thread_scratch`].
+
+use std::cell::RefCell;
+
+use crate::sparse::spmm::Compressed24;
+use crate::tensor::Tensor;
+
+#[derive(Default)]
+pub struct Scratch {
+    /// Free f32 buffers, unordered; best-fit by capacity on `take`.
+    bufs: Vec<Vec<f32>>,
+    /// Recycled shape vectors (so `take` doesn't allocate a `Vec<usize>`).
+    shapes: Vec<Vec<usize>>,
+    /// Recycled compressed-operand buffers (MVUE'd gradients).
+    comps: Vec<Compressed24>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Number of free buffers currently pooled (tests use this to assert
+    /// the steady state stops growing).
+    pub fn pooled(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Check out a buffer of length `n` with UNSPECIFIED contents (zero
+    /// on a fresh allocation, stale on reuse) — takers fully overwrite
+    /// or zero it themselves. Best-fit reuse: the smallest pooled buffer
+    /// whose capacity covers `n`.
+    pub fn take_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.bufs.iter().enumerate() {
+            if b.capacity() >= n
+                && best.map_or(true, |j| b.capacity() < self.bufs[j].capacity())
+            {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut v = self.bufs.swap_remove(i);
+                // truncate/extend without touching retained elements:
+                // the zero-fill here would be pure memset waste
+                if v.len() > n {
+                    v.truncate(n);
+                } else {
+                    v.resize(n, 0.0);
+                }
+                v
+            }
+            None => vec![0.0; n],
+        }
+    }
+
+    /// Return a buffer to the pool.
+    pub fn give_vec(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.bufs.push(v);
+        }
+    }
+
+    /// Check out a tensor of the given shape; contents UNSPECIFIED (see
+    /// [`Scratch::take_vec`]).
+    pub fn take(&mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = self.take_vec(n);
+        let mut s = self.shapes.pop().unwrap_or_default();
+        s.clear();
+        s.extend_from_slice(shape);
+        Tensor { shape: s, data }
+    }
+
+    /// Return a tensor's storage to the pool.
+    pub fn give(&mut self, t: Tensor) {
+        self.give_vec(t.data);
+        if t.shape.capacity() > 0 {
+            self.shapes.push(t.shape);
+        }
+    }
+
+    /// Check out a compressed-operand buffer (refill it with
+    /// `from_masked_into` / `compress_sparse24_into` before use).
+    pub fn take_comp(&mut self) -> Compressed24 {
+        self.comps.pop().unwrap_or_default()
+    }
+
+    /// Return a compressed-operand buffer to the pool.
+    pub fn give_comp(&mut self, c: Compressed24) {
+        self.comps.push(c);
+    }
+}
+
+thread_local! {
+    static THREAD_SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Run `f` with this thread's kernel-internal arena. Do not call
+/// recursively from inside `f` (the kernels never do: temporaries are
+/// checked out before any parallel region).
+pub fn with_thread_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    THREAD_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_sized_and_fresh_alloc_zeroed() {
+        let mut s = Scratch::new();
+        let mut v = s.take_vec(16);
+        assert_eq!(v.len(), 16);
+        assert!(v.iter().all(|&x| x == 0.0));
+        v[3] = 5.0;
+        s.give_vec(v);
+        // reuse keeps length contract; contents are unspecified
+        let v2 = s.take_vec(8);
+        assert_eq!(v2.len(), 8);
+        s.give_vec(v2);
+        let v3 = s.take_vec(12);
+        assert_eq!(v3.len(), 12);
+    }
+
+    #[test]
+    fn reuses_the_same_allocation() {
+        let mut s = Scratch::new();
+        let v = s.take_vec(1024);
+        let p = v.as_ptr();
+        s.give_vec(v);
+        let v2 = s.take_vec(1000);
+        assert_eq!(v2.as_ptr(), p, "smaller request should reuse the pooled buffer");
+        s.give_vec(v2);
+        assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate() {
+        let mut s = Scratch::new();
+        let big = s.take_vec(4096);
+        let small = s.take_vec(64);
+        let (pb, ps) = (big.as_ptr(), small.as_ptr());
+        s.give_vec(big);
+        s.give_vec(small);
+        assert_eq!(s.take_vec(32).as_ptr(), ps);
+        assert_eq!(s.take_vec(2000).as_ptr(), pb);
+    }
+
+    #[test]
+    fn tensor_roundtrip_recycles_shape() {
+        let mut s = Scratch::new();
+        let t = s.take(&[3, 5]);
+        assert_eq!(t.dims2(), (3, 5));
+        assert_eq!(t.len(), 15);
+        s.give(t);
+        let t2 = s.take(&[5, 3]);
+        assert_eq!(t2.shape, vec![5, 3]);
+        s.give(t2);
+        assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn thread_scratch_is_usable() {
+        let n = with_thread_scratch(|s| {
+            let v = s.take_vec(10);
+            let n = v.len();
+            s.give_vec(v);
+            n
+        });
+        assert_eq!(n, 10);
+    }
+}

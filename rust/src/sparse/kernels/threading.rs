@@ -1,0 +1,423 @@
+//! Persistent, work-stealing-free thread pool for the kernel backend.
+//!
+//! Design goals, in order:
+//!
+//! 1. **Determinism across thread counts.** Work is partitioned into
+//!    contiguous, *block-aligned* row ranges (the block unit is the
+//!    kernel's microkernel height). Every output row is computed by
+//!    exactly one thread with exactly the same instruction sequence
+//!    whatever the thread count, so results are bitwise identical for
+//!    1..=N threads. This is why there is no work stealing: stealing
+//!    would reassign rows dynamically, which is harmless numerically for
+//!    our row-owned kernels but makes perf runs non-reproducible.
+//! 2. **Zero steady-state allocation.** Workers are spawned once
+//!    (lazily, on first parallel call) and parked on a condvar between
+//!    jobs; a job submission allocates nothing — the closure is passed
+//!    by reference through a type-erased pointer.
+//! 3. **No dependencies.** `std::sync` only.
+//!
+//! Thread count resolution: `PALLAS_NUM_THREADS` env var, overridable at
+//! runtime via [`set_num_threads`] (the `[kernels] threads` config key),
+//! default `std::thread::available_parallelism()`. The pool is sized at
+//! first use to cover the largest of these (at least [`MIN_POOL_WIDTH`],
+//! so thread-scaling tests exercise real parallelism even on small CI
+//! hosts); later `set_num_threads` calls clamp to the pool width.
+//!
+//! Safety: the submitting thread participates as worker 0 and does not
+//! return from [`parallel_chunks`] until every worker has finished the
+//! job, so the lifetime-erased closure pointer never outlives the
+//! closure. Nested parallel calls from inside a job run sequentially on
+//! the calling worker (guarded by a thread-local flag) instead of
+//! deadlocking on the pool.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Hard cap on pool width (worker threads incl. the caller).
+pub const MAX_THREADS: usize = 64;
+
+/// Pool is sized at least this wide so `set_num_threads(2..4)` means
+/// something even on single/dual-core hosts.
+const MIN_POOL_WIDTH: usize = 4;
+
+/// Effective thread setting; 0 = not yet resolved.
+static SETTING: AtomicUsize = AtomicUsize::new(0);
+
+static POOL: OnceLock<ThreadPool> = OnceLock::new();
+
+thread_local! {
+    /// True while this thread is executing a pool job (nested parallel
+    /// sections must not resubmit to the pool).
+    static IN_JOB: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// RAII for the IN_JOB flag so it resets even when the job panics.
+struct JobFlag;
+
+impl JobFlag {
+    fn set() -> JobFlag {
+        IN_JOB.with(|g| g.set(true));
+        JobFlag
+    }
+}
+
+impl Drop for JobFlag {
+    fn drop(&mut self) {
+        IN_JOB.with(|g| g.set(false));
+    }
+}
+
+/// Type-erased `&(dyn Fn(worker_idx) + Sync)` with the lifetime erased.
+/// Sound because the submitter blocks until all calls complete.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync + 'static));
+
+unsafe impl Send for TaskPtr {}
+
+impl TaskPtr {
+    fn new(f: &(dyn Fn(usize) + Sync)) -> TaskPtr {
+        // Erase the closure's lifetime; see module docs for the
+        // blocking contract that makes this sound.
+        let ptr = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(f)
+        };
+        TaskPtr(ptr)
+    }
+
+    unsafe fn call(self, worker: usize) {
+        unsafe { (&*self.0)(worker) }
+    }
+}
+
+struct State {
+    /// Incremented once per submitted job.
+    epoch: u64,
+    /// Workers still running the current job.
+    active: usize,
+    /// Worker slots participating in the current job; workers with
+    /// `idx >= parts` skip it without touching `active`.
+    parts: usize,
+    /// A worker panicked during the current job (re-raised by the
+    /// submitter after the join, so a panic never deadlocks the pool).
+    poisoned: bool,
+    task: Option<TaskPtr>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch.
+    work_cv: Condvar,
+    /// The submitter waits here for `active == 0`.
+    done_cv: Condvar,
+    /// Serializes whole jobs: concurrent callers (e.g. parallel test
+    /// threads) take turns rather than corrupting the single job slot.
+    submit: Mutex<()>,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    /// Spawned workers (excludes the submitting thread).
+    n_workers: usize,
+}
+
+impl ThreadPool {
+    fn with_width(width: usize) -> ThreadPool {
+        let n_workers = width.saturating_sub(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                active: 0,
+                parts: 0,
+                poisoned: false,
+                task: None,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+        });
+        for idx in 1..=n_workers {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("pallas-kernel-{idx}"))
+                .spawn(move || worker_loop(sh, idx))
+                .expect("spawning kernel pool worker");
+        }
+        ThreadPool { shared, n_workers }
+    }
+
+    /// Total worker slots including the submitting thread.
+    pub fn width(&self) -> usize {
+        self.n_workers + 1
+    }
+
+    /// Run `f(worker_idx)` on slots `0..parts`, blocking until all calls
+    /// return. The caller runs slot 0; workers with `idx >= parts` skip
+    /// the job without the completion-bookkeeping round trip.
+    fn run(&self, f: &(dyn Fn(usize) + Sync), parts: usize) {
+        let parts = parts.clamp(1, self.width());
+        if self.n_workers == 0 || parts == 1 {
+            let _flag = JobFlag::set();
+            f(0);
+            return;
+        }
+        let _job_turn = self.shared.submit.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert_eq!(st.active, 0, "pool job submitted while one is running");
+            st.task = Some(TaskPtr::new(f));
+            st.active = parts - 1;
+            st.parts = parts;
+            st.poisoned = false;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.shared.work_cv.notify_all();
+        }
+        // Run slot 0 on the caller, catching a panic so we still join the
+        // workers first — they hold a reference to `f`, so unwinding past
+        // them would leave live threads with a dangling closure.
+        let caller = catch_unwind(AssertUnwindSafe(|| {
+            let _flag = JobFlag::set();
+            f(0);
+        }));
+        let poisoned;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.active > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            poisoned = st.poisoned;
+            st.poisoned = false;
+            st.task = None;
+        }
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if poisoned {
+            panic!("kernel pool worker panicked during a parallel job");
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            while st.epoch == seen {
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            seen = st.epoch;
+            if idx >= st.parts {
+                // not a participant in this job
+                continue;
+            }
+            st.task.expect("epoch bumped without a task")
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let _flag = JobFlag::set();
+            unsafe { task.call(idx) }
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if result.is_err() {
+            st.poisoned = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+fn env_threads() -> Option<usize> {
+    std::env::var("PALLAS_NUM_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+}
+
+fn default_threads() -> usize {
+    env_threads()
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .min(MAX_THREADS)
+}
+
+fn pool() -> &'static ThreadPool {
+    POOL.get_or_init(|| {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let width = num_threads().max(hw).max(MIN_POOL_WIDTH).min(MAX_THREADS);
+        ThreadPool::with_width(width)
+    })
+}
+
+/// Current effective kernel thread count.
+pub fn num_threads() -> usize {
+    let n = SETTING.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    let n = default_threads();
+    // Racing first calls resolve to the same value; store is idempotent.
+    SETTING.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Override the kernel thread count (clamped to `1..=pool width` once
+/// the pool exists). Returns the value that took effect.
+pub fn set_num_threads(n: usize) -> usize {
+    let cap = POOL.get().map(|p| p.width()).unwrap_or(MAX_THREADS);
+    let n = n.clamp(1, cap);
+    SETTING.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Balanced contiguous split of `units` work units into `parts`:
+/// part `t` gets `[start, end)`.
+fn split_units(units: usize, t: usize, parts: usize) -> (usize, usize) {
+    let base = units / parts;
+    let rem = units % parts;
+    let start = t * base + t.min(rem);
+    (start, start + base + usize::from(t < rem))
+}
+
+/// Run `f(row_start, row_end)` over a partition of `0..n` rows.
+///
+/// Ranges are aligned to `unit` rows (the microkernel height) except the
+/// final range, which absorbs the `n % unit` tail — so block
+/// decomposition, and therefore floating-point results, do not depend on
+/// the thread count. `min_units_per_thread` keeps tiny problems
+/// sequential (pool wakeup costs ~µs).
+pub fn parallel_chunks(
+    n: usize,
+    unit: usize,
+    min_units_per_thread: usize,
+    f: &(dyn Fn(usize, usize) + Sync),
+) {
+    if n == 0 {
+        return;
+    }
+    let unit = unit.max(1);
+    let units = n.div_ceil(unit);
+    let want = num_threads()
+        .min(units / min_units_per_thread.max(1))
+        .max(1);
+    let nested = IN_JOB.with(|g| g.get());
+    if want <= 1 || nested {
+        f(0, n);
+        return;
+    }
+    let p = pool();
+    let parts = want.min(p.width());
+    if parts <= 1 {
+        f(0, n);
+        return;
+    }
+    p.run(
+        &|worker| {
+            let (us, ue) = split_units(units, worker, parts);
+            let start = us * unit;
+            let end = (ue * unit).min(n);
+            if start < end {
+                f(start, end);
+            }
+        },
+        parts,
+    );
+}
+
+/// Shareable `*mut f32` for handing disjoint output ranges to workers.
+/// Callers must guarantee ranges do not overlap across threads.
+pub(crate) struct MutPtr {
+    ptr: *mut f32,
+    len: usize,
+}
+
+unsafe impl Send for MutPtr {}
+unsafe impl Sync for MutPtr {}
+
+impl MutPtr {
+    pub(crate) fn new(s: &mut [f32]) -> MutPtr {
+        MutPtr { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// # Safety
+    /// `[start, end)` must be in bounds and disjoint from every range
+    /// handed to any other live thread.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn range(&self, start: usize, end: usize) -> &mut [f32] {
+        debug_assert!(start <= end && end <= self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), end - start) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_rows_once() {
+        let n = 103;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(n, 4, 1, &|s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn block_alignment_independent_of_threads() {
+        // All non-final range starts must be multiples of the unit.
+        for unit in [1usize, 4, 8] {
+            let starts = Mutex::new(Vec::new());
+            parallel_chunks(57, unit, 1, &|s, _e| {
+                starts.lock().unwrap().push(s);
+            });
+            for s in starts.into_inner().unwrap() {
+                assert_eq!(s % unit, 0, "unit {unit}");
+            }
+        }
+    }
+
+    #[test]
+    fn nested_parallel_runs_sequentially() {
+        let total = AtomicU64::new(0);
+        parallel_chunks(8, 1, 1, &|s, e| {
+            // nested call must not deadlock
+            parallel_chunks(4, 1, 1, &|s2, e2| {
+                total.fetch_add(((e - s) * (e2 - s2)) as u64, Ordering::Relaxed);
+            });
+        });
+        assert!(total.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn split_units_is_balanced_and_complete() {
+        for units in [1usize, 5, 16, 97] {
+            for parts in [1usize, 2, 3, 8] {
+                let mut next = 0;
+                for t in 0..parts {
+                    let (s, e) = split_units(units, t, parts);
+                    assert_eq!(s, next);
+                    assert!(e >= s);
+                    next = e;
+                }
+                assert_eq!(next, units);
+            }
+        }
+    }
+
+    #[test]
+    fn set_num_threads_clamps() {
+        let prev = num_threads();
+        assert_eq!(set_num_threads(1), 1);
+        assert!(set_num_threads(1_000_000) <= MAX_THREADS);
+        set_num_threads(prev);
+    }
+}

@@ -1,0 +1,515 @@
+//! Cache-blocked, register-tiled, multi-threaded kernels (`std::simd`).
+//!
+//! Dense GEMMs use classic register-tiled microkernels:
+//! * `gemm_nt` — both operands are k-contiguous, so the microkernel is a
+//!   4x2 block of SIMD dot products sharing A-row loads (14 vector ops
+//!   per 64 MACs vs ~3.5 per 8 for a per-element dot).
+//! * `gemm_nn` / `gemm_tn` — AXPY-structured: a 4x16 register tile
+//!   accumulates broadcast(A) * vector(B) over the reduction dimension.
+//!
+//! The 2:4 spMMs avoid gathers entirely by making the *compressed*
+//! operand stationary and streaming the dense operand along the token
+//! dimension: with X transposed (one O(pq) pass, amortized over O(pqr/2)
+//! MACs), the kept value's absolute column index becomes a row offset
+//! into X^T and every load is contiguous — the CPU analogue of the
+//! sparse tensor core consuming (values, 2-bit metadata) directly. An
+//! in-register select over the 4-candidate group was evaluated and
+//! rejected: on CPU the 2-level select tree costs more shuffle uops than
+//! the q/2 MACs it saves, while the transposed streaming form does q/2
+//! FMAs with zero shuffles and wins against the tiled dense kernel
+//! (see BENCH_kernels.json).
+//!
+//! Determinism: work is partitioned over *output rows* in microkernel-
+//! aligned blocks ([`threading::parallel_chunks`]), and every output
+//! element's accumulation sequence is independent of both the thread
+//! count and the block a row lands in — results are bitwise identical
+//! for any `PALLAS_NUM_THREADS` (asserted by the differential tests).
+
+use std::simd::prelude::*;
+use std::simd::StdFloat;
+
+use super::scratch::with_thread_scratch;
+use super::threading::{parallel_chunks, MutPtr};
+use crate::sparse::gemm::{axpy, dot};
+use crate::sparse::spmm::Compressed24;
+use crate::tensor::Tensor;
+
+const L: usize = 8;
+type F = Simd<f32, L>;
+
+/// Microkernel height (rows per register tile); also the row-partition
+/// unit for the dense kernels.
+const MR: usize = 4;
+/// Column pair for the `gemm_nt` dot microkernel.
+const NR: usize = 2;
+/// Column panel (two vectors) for the AXPY microkernels.
+const NC: usize = 2 * L;
+
+// ---------------------------------------------------------------------------
+// dense GEMM
+// ---------------------------------------------------------------------------
+
+/// C = A B^T. A: (p,q), B: (r,q) -> C: (p,r).
+pub fn gemm_nt_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, q) = a.dims2();
+    let (r, qb) = b.dims2();
+    debug_assert_eq!(q, qb);
+    debug_assert_eq!(c.data.len(), p * r);
+    let ad = &a.data[..];
+    let bd = &b.data[..];
+    let out = MutPtr::new(&mut c.data);
+    parallel_chunks(p, MR, 4, &|i0, i1| {
+        let cs = unsafe { out.range(i0 * r, i1 * r) };
+        nt_rows(&ad[i0 * q..i1 * q], bd, cs, i1 - i0, q, r);
+    });
+}
+
+fn nt_rows(a: &[f32], b: &[f32], c: &mut [f32], rows: usize, q: usize, r: usize) {
+    let full_j = r - r % NR;
+    let full_i = rows - rows % MR;
+    let mut j = 0;
+    while j < full_j {
+        let b0 = &b[j * q..j * q + q];
+        let b1 = &b[(j + 1) * q..(j + 1) * q + q];
+        let mut i = 0;
+        while i < full_i {
+            micro_nt(a, i, q, b0, b1, c, j, r);
+            i += MR;
+        }
+        for it in full_i..rows {
+            let arow = &a[it * q..it * q + q];
+            c[it * r + j] = dot(arow, b0);
+            c[it * r + j + 1] = dot(arow, b1);
+        }
+        j += NR;
+    }
+    if full_j < r {
+        let b0 = &b[full_j * q..full_j * q + q];
+        for it in 0..rows {
+            c[it * r + full_j] = dot(&a[it * q..it * q + q], b0);
+        }
+    }
+}
+
+/// 4 rows x 2 cols of dot products; A-row loads shared across the pair.
+#[inline(always)]
+fn micro_nt(
+    a: &[f32],
+    i: usize,
+    q: usize,
+    b0: &[f32],
+    b1: &[f32],
+    c: &mut [f32],
+    j: usize,
+    r: usize,
+) {
+    let mut acc = [[F::splat(0.0); NR]; MR];
+    let kb = q / L;
+    for t in 0..kb {
+        let o = t * L;
+        let bv0 = F::from_slice(&b0[o..o + L]);
+        let bv1 = F::from_slice(&b1[o..o + L]);
+        for m in 0..MR {
+            let av = F::from_slice(&a[(i + m) * q + o..(i + m) * q + o + L]);
+            acc[m][0] = av.mul_add(bv0, acc[m][0]);
+            acc[m][1] = av.mul_add(bv1, acc[m][1]);
+        }
+    }
+    let mut tail = [[0f32; NR]; MR];
+    for k in kb * L..q {
+        for m in 0..MR {
+            let av = a[(i + m) * q + k];
+            tail[m][0] += av * b0[k];
+            tail[m][1] += av * b1[k];
+        }
+    }
+    for m in 0..MR {
+        c[(i + m) * r + j] = acc[m][0].reduce_sum() + tail[m][0];
+        c[(i + m) * r + j + 1] = acc[m][1].reduce_sum() + tail[m][1];
+    }
+}
+
+/// C = A B. A: (p,r), B: (r,q) -> C: (p,q).
+pub fn gemm_nn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, r) = a.dims2();
+    let (rb, q) = b.dims2();
+    debug_assert_eq!(r, rb);
+    debug_assert_eq!(c.data.len(), p * q);
+    let ad = &a.data[..];
+    let bd = &b.data[..];
+    let out = MutPtr::new(&mut c.data);
+    parallel_chunks(p, MR, 4, &|i0, i1| {
+        let cs = unsafe { out.range(i0 * q, i1 * q) };
+        nn_rows(&ad[i0 * r..i1 * r], bd, cs, i1 - i0, r, q);
+    });
+}
+
+fn nn_rows(a: &[f32], b: &[f32], c: &mut [f32], rows: usize, r: usize, q: usize) {
+    c.fill(0.0);
+    let full_i = rows - rows % MR;
+    let full_j = q - q % NC;
+    let mut i = 0;
+    while i < full_i {
+        let mut j = 0;
+        while j < full_j {
+            // reduction over k: alpha(m, s) = a[(i+m)*r + s]
+            micro_axpy(a, i * r, r, 1, r, b, j, q, c, i, q);
+            j += NC;
+        }
+        i += MR;
+    }
+    if full_j < q {
+        for i in 0..full_i {
+            let crow = &mut c[i * q + full_j..i * q + q];
+            for k in 0..r {
+                axpy(a[i * r + k], &b[k * q + full_j..k * q + q], crow);
+            }
+        }
+    }
+    for i in full_i..rows {
+        let crow = &mut c[i * q..(i + 1) * q];
+        for k in 0..r {
+            axpy(a[i * r + k], &b[k * q..(k + 1) * q], crow);
+        }
+    }
+}
+
+/// C = A^T B. A: (p,r), B: (p,q) -> C: (r,q). Partitioned over C rows.
+pub fn gemm_tn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (p, r) = a.dims2();
+    let (pb, q) = b.dims2();
+    debug_assert_eq!(p, pb);
+    debug_assert_eq!(c.data.len(), r * q);
+    let ad = &a.data[..];
+    let bd = &b.data[..];
+    let out = MutPtr::new(&mut c.data);
+    parallel_chunks(r, MR, 4, &|k0, k1| {
+        let cs = unsafe { out.range(k0 * q, k1 * q) };
+        tn_rows(ad, bd, cs, k0, k1 - k0, p, r, q);
+    });
+}
+
+fn tn_rows(a: &[f32], b: &[f32], c: &mut [f32], k0: usize, rows: usize, p: usize, r: usize, q: usize) {
+    c.fill(0.0);
+    let full_k = rows - rows % MR;
+    let full_j = q - q % NC;
+    let mut kk = 0;
+    while kk < full_k {
+        let mut j = 0;
+        while j < full_j {
+            // reduction over i: alpha(m, s) = a[s*r + k0 + kk + m]
+            micro_axpy(a, k0 + kk, 1, r, p, b, j, q, c, kk, q);
+            j += NC;
+        }
+        kk += MR;
+    }
+    if full_j < q {
+        for kk in 0..full_k {
+            let crow = &mut c[kk * q + full_j..kk * q + q];
+            for i in 0..p {
+                axpy(a[i * r + k0 + kk], &b[i * q + full_j..i * q + q], crow);
+            }
+        }
+    }
+    for kk in full_k..rows {
+        let crow = &mut c[kk * q..(kk + 1) * q];
+        for i in 0..p {
+            axpy(a[i * r + k0 + kk], &b[i * q..(i + 1) * q], crow);
+        }
+    }
+}
+
+/// Shared 4x16 AXPY-structured register tile.
+///
+/// Computes `C[crow0+m][j..j+16] = sum_s alpha(m, s) * B[s][j..j+16]` for
+/// m in 0..4, where `alpha(m, s) = a[a_base + m*a_row_stride + s*a_step]`
+/// and the reduction runs `s in 0..steps` over rows of `b` (row stride
+/// `q`). `gemm_nn` instantiates it with A walked along a row
+/// (`a_row_stride = r`, `a_step = 1`, `steps = r`); `gemm_tn` with A
+/// walked down a column (`a_row_stride = 1`, `a_step = r`, `steps = p`).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_axpy(
+    a: &[f32],
+    a_base: usize,
+    a_row_stride: usize,
+    a_step: usize,
+    steps: usize,
+    b: &[f32],
+    j: usize,
+    q: usize,
+    c: &mut [f32],
+    crow0: usize,
+    c_stride: usize,
+) {
+    let mut acc = [[F::splat(0.0); 2]; MR];
+    for s in 0..steps {
+        let bo = s * q + j;
+        let bv0 = F::from_slice(&b[bo..bo + L]);
+        let bv1 = F::from_slice(&b[bo + L..bo + 2 * L]);
+        for m in 0..MR {
+            let av = F::splat(a[a_base + m * a_row_stride + s * a_step]);
+            acc[m][0] = av.mul_add(bv0, acc[m][0]);
+            acc[m][1] = av.mul_add(bv1, acc[m][1]);
+        }
+    }
+    for m in 0..MR {
+        let o = (crow0 + m) * c_stride + j;
+        acc[m][0].copy_to_slice(&mut c[o..o + L]);
+        acc[m][1].copy_to_slice(&mut c[o + L..o + 2 * L]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2:4 spMM
+// ---------------------------------------------------------------------------
+
+/// Row-partition unit for the spMM kernels (one SIMD vector of outputs).
+const IB: usize = L;
+
+/// C = X Wc^T. X: (p,q), Wc: (r,q) 2:4-compressed -> C: (p,r).
+///
+/// Compressed-stationary form: stream X^T along the token dimension so
+/// the metadata index selects a *row* of X^T and every load is
+/// contiguous — q/2 FMAs per 8..16 outputs, no gathers, no selects.
+pub fn spmm_nt_into(x: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let (p, q) = x.dims2();
+    debug_assert_eq!(q, wc.cols);
+    let r = wc.rows;
+    let half = q / 2;
+    debug_assert_eq!(c.data.len(), p * r);
+    let mut xt = with_thread_scratch(|s| s.take_vec(q * p));
+    transpose_into_buf(&x.data, p, q, &mut xt);
+    {
+        let xt_ref = &xt[..];
+        let vals = &wc.values[..];
+        let aidx = &wc.abs_indices[..];
+        let out = MutPtr::new(&mut c.data);
+        parallel_chunks(p, IB, 4, &|i0, i1| {
+            let cs = unsafe { out.range(i0 * r, i1 * r) };
+            spmm_nt_range(xt_ref, vals, aidx, cs, i0, i1, p, r, half);
+        });
+    }
+    with_thread_scratch(|s| s.give_vec(xt));
+}
+
+fn spmm_nt_range(
+    xt: &[f32],
+    vals: &[f32],
+    aidx: &[u32],
+    cs: &mut [f32],
+    i0: usize,
+    i1: usize,
+    p: usize,
+    r: usize,
+    half: usize,
+) {
+    let n = i1 - i0;
+    let full16 = n - n % (2 * L);
+    let full8 = n - n % L;
+    for j in 0..r {
+        let v = &vals[j * half..(j + 1) * half];
+        let ix = &aidx[j * half..(j + 1) * half];
+        let mut ib = 0;
+        // 16 outputs per pass: two vectors sharing the value broadcasts,
+        // even/odd-h accumulator chains for ILP.
+        while ib < full16 {
+            let base = i0 + ib;
+            let (mut e0, mut o0) = (F::splat(0.0), F::splat(0.0));
+            let (mut e1, mut o1) = (F::splat(0.0), F::splat(0.0));
+            let mut h = 0;
+            while h + 2 <= half {
+                let ce = ix[h] as usize * p + base;
+                let co = ix[h + 1] as usize * p + base;
+                let ve = F::splat(v[h]);
+                let vo = F::splat(v[h + 1]);
+                e0 = ve.mul_add(F::from_slice(&xt[ce..ce + L]), e0);
+                e1 = ve.mul_add(F::from_slice(&xt[ce + L..ce + 2 * L]), e1);
+                o0 = vo.mul_add(F::from_slice(&xt[co..co + L]), o0);
+                o1 = vo.mul_add(F::from_slice(&xt[co + L..co + 2 * L]), o1);
+                h += 2;
+            }
+            if h < half {
+                let ce = ix[h] as usize * p + base;
+                let ve = F::splat(v[h]);
+                e0 = ve.mul_add(F::from_slice(&xt[ce..ce + L]), e0);
+                e1 = ve.mul_add(F::from_slice(&xt[ce + L..ce + 2 * L]), e1);
+            }
+            scatter_col(e0 + o0, cs, ib * r + j, r);
+            scatter_col(e1 + o1, cs, (ib + L) * r + j, r);
+            ib += 2 * L;
+        }
+        // one 8-wide block (identical per-lane arithmetic)
+        while ib < full8 {
+            let base = i0 + ib;
+            let (mut e0, mut o0) = (F::splat(0.0), F::splat(0.0));
+            let mut h = 0;
+            while h + 2 <= half {
+                let ce = ix[h] as usize * p + base;
+                let co = ix[h + 1] as usize * p + base;
+                e0 = F::splat(v[h]).mul_add(F::from_slice(&xt[ce..ce + L]), e0);
+                o0 = F::splat(v[h + 1]).mul_add(F::from_slice(&xt[co..co + L]), o0);
+                h += 2;
+            }
+            if h < half {
+                let ce = ix[h] as usize * p + base;
+                e0 = F::splat(v[h]).mul_add(F::from_slice(&xt[ce..ce + L]), e0);
+            }
+            scatter_col(e0 + o0, cs, ib * r + j, r);
+            ib += L;
+        }
+        // scalar tail rows (globally fixed: partition unit is 8)
+        for it in full8..n {
+            let i = i0 + it;
+            let (mut se, mut so) = (0f32, 0f32);
+            let mut h = 0;
+            while h + 2 <= half {
+                se = v[h].mul_add(xt[ix[h] as usize * p + i], se);
+                so = v[h + 1].mul_add(xt[ix[h + 1] as usize * p + i], so);
+                h += 2;
+            }
+            if h < half {
+                se = v[h].mul_add(xt[ix[h] as usize * p + i], se);
+            }
+            cs[it * r + j] = se + so;
+        }
+    }
+}
+
+/// Write one 8-lane accumulator down a column of a row-major block.
+#[inline(always)]
+fn scatter_col(v: F, c: &mut [f32], start: usize, stride: usize) {
+    let arr = v.to_array();
+    for (l, &val) in arr.iter().enumerate() {
+        c[start + l * stride] = val;
+    }
+}
+
+/// C = G Wc (dense-equivalent (r,q)). G: (p,r) -> C: (p,q).
+///
+/// Same compressed-stationary idea as `spmm_nt`, on the output side: the
+/// scatter index selects a row of C^T, so the update is a contiguous
+/// broadcast-AXPY along the token dimension. G^T and C^T live in the
+/// per-thread scratch arena; the final transpose-out is O(pq).
+pub fn spmm_nn_into(g: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let (p, r) = g.dims2();
+    debug_assert_eq!(r, wc.rows);
+    let q = wc.cols;
+    let half = q / 2;
+    debug_assert_eq!(c.data.len(), p * q);
+    let (mut gt, mut ct) = with_thread_scratch(|s| {
+        let gt = s.take_vec(r * p);
+        let ct = s.take_vec(q * p);
+        (gt, ct)
+    });
+    transpose_into_buf(&g.data, p, r, &mut gt);
+    {
+        let gt_ref = &gt[..];
+        let vals = &wc.values[..];
+        let aidx = &wc.abs_indices[..];
+        let ctp = MutPtr::new(&mut ct);
+        let out = MutPtr::new(&mut c.data);
+        parallel_chunks(p, IB, 4, &|i0, i1| {
+            let n = i1 - i0;
+            // zero this thread's C^T columns
+            for cq in 0..q {
+                unsafe { ctp.range(cq * p + i0, cq * p + i1) }.fill(0.0);
+            }
+            let full8 = n - n % L;
+            for k in 0..r {
+                let v = &vals[k * half..(k + 1) * half];
+                let ix = &aidx[k * half..(k + 1) * half];
+                let mut ib = 0;
+                while ib < full8 {
+                    let base = i0 + ib;
+                    let gv = F::from_slice(&gt_ref[k * p + base..k * p + base + L]);
+                    for h in 0..half {
+                        let cq = ix[h] as usize;
+                        let crow = unsafe { ctp.range(cq * p + base, cq * p + base + L) };
+                        let cv = F::from_slice(crow);
+                        F::splat(v[h]).mul_add(gv, cv).copy_to_slice(crow);
+                    }
+                    ib += L;
+                }
+                for it in full8..n {
+                    let i = i0 + it;
+                    let gi = gt_ref[k * p + i];
+                    for h in 0..half {
+                        let cq = ix[h] as usize;
+                        let cell = unsafe { ctp.range(cq * p + i, cq * p + i + 1) };
+                        cell[0] = v[h].mul_add(gi, cell[0]);
+                    }
+                }
+            }
+            // transpose out into C rows i0..i1
+            let cs = unsafe { out.range(i0 * q, i1 * q) };
+            for cq in 0..q {
+                let col = unsafe { ctp.range(cq * p + i0, cq * p + i1) };
+                for (it, &val) in col.iter().enumerate() {
+                    cs[it * q + cq] = val;
+                }
+            }
+        });
+    }
+    with_thread_scratch(|s| {
+        s.give_vec(gt);
+        s.give_vec(ct);
+    });
+}
+
+/// C = Gc^T X. Gc: (r,p) 2:4-compressed along p, X: (p,q) -> C: (r,q).
+///
+/// Already AXPY-structured in the naive form; here the AXPYs are SIMD,
+/// the reduction is blocked so a window of X rows stays cache-hot across
+/// a row block of C, and C rows are partitioned across threads.
+pub fn spmm_tn_into(gc: &Compressed24, x: &Tensor, c: &mut Tensor) {
+    let (p, q) = x.dims2();
+    debug_assert_eq!(p, gc.cols);
+    let r = gc.rows;
+    let half = gc.cols / 2;
+    debug_assert_eq!(c.data.len(), r * q);
+    // h-block: keeps ~2*HB x-rows (2*HB*q floats) hot across the j block
+    const HB: usize = 64;
+    let xd = &x.data[..];
+    let vals = &gc.values[..];
+    let aidx = &gc.abs_indices[..];
+    let out = MutPtr::new(&mut c.data);
+    parallel_chunks(r, MR, 2, &|j0, j1| {
+        let cs = unsafe { out.range(j0 * q, j1 * q) };
+        cs.fill(0.0);
+        let mut hb = 0;
+        while hb < half {
+            let he = (hb + HB).min(half);
+            for j in j0..j1 {
+                let v = &vals[j * half..(j + 1) * half];
+                let ix = &aidx[j * half..(j + 1) * half];
+                let crow = &mut cs[(j - j0) * q..(j - j0 + 1) * q];
+                for h in hb..he {
+                    let val = v[h];
+                    if val == 0.0 {
+                        continue;
+                    }
+                    let row = ix[h] as usize;
+                    axpy(val, &xd[row * q..(row + 1) * q], crow);
+                }
+            }
+            hb += HB;
+        }
+    });
+}
+
+/// Parallel out-of-place transpose: `src` (rows, cols) -> `dst` (cols, rows).
+pub(crate) fn transpose_into_buf(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    let dp = MutPtr::new(dst);
+    parallel_chunks(cols, L, 16, &|c0, c1| {
+        let d = unsafe { dp.range(c0 * rows, c1 * rows) };
+        for c in c0..c1 {
+            let drow = &mut d[(c - c0) * rows..(c - c0 + 1) * rows];
+            for (i, slot) in drow.iter_mut().enumerate() {
+                *slot = src[i * cols + c];
+            }
+        }
+    });
+}

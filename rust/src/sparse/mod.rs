@@ -5,8 +5,9 @@
 //! transposable-mask search of §5.1 ([`transposable`]) and its
 //! 2-approximation baseline ([`two_approx`]), the MVUE gradient estimator
 //! ([`mvue`]), flip-rate instrumentation of §4.1 ([`flip`]), and the CPU
-//! compute substrate standing in for sparse tensor cores: dense GEMMs
-//! ([`gemm`]), compressed 2:4 spMM ([`spmm`]), gated activations
+//! compute substrate standing in for sparse tensor cores: the tiled +
+//! threaded kernel backend ([`kernels`]) behind the dense GEMM entry
+//! points ([`gemm`]) and the compressed 2:4 spMM ([`spmm`]), gated activations
 //! ([`geglu`]), and full FFN / transformer-block workloads ([`ffn`],
 //! [`block`]) for the Fig. 7 / Table 11/13 reproductions.
 
@@ -15,6 +16,7 @@ pub mod ffn;
 pub mod flip;
 pub mod geglu;
 pub mod gemm;
+pub mod kernels;
 pub mod mask;
 pub mod mvue;
 pub mod spmm;
@@ -22,5 +24,6 @@ pub mod transposable;
 pub mod two_approx;
 pub mod workloads;
 
+pub use kernels::{KernelBackend, Scratch};
 pub use mask::{prune24, prune24_mask, Mask};
 pub use transposable::transposable_mask;

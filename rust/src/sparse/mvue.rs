@@ -73,10 +73,17 @@ pub fn mvue_group(g: &[f32; 4], u: f32) -> [f32; 4] {
 /// MVUE 2:4 sparsification along rows with externally supplied uniforms
 /// (one per group, row-major) — the deterministic core used by tests.
 pub fn mvue24_with_uniforms(x: &Tensor, u: &[f32]) -> Tensor {
+    let mut out = Tensor::zeros(&[0]);
+    mvue24_with_uniforms_into(x, u, &mut out);
+    out
+}
+
+/// Allocation-free core: `out` is reshaped to `x`'s shape and overwritten.
+pub fn mvue24_with_uniforms_into(x: &Tensor, u: &[f32], out: &mut Tensor) {
     let (r, c) = x.dims2();
     assert_eq!(c % 4, 0);
     assert_eq!(u.len(), r * c / 4);
-    let mut out = Tensor::zeros(&x.shape);
+    out.resize_to(&x.shape);
     let mut g = [0f32; 4];
     for (gi, (chunk, dst)) in x
         .data
@@ -88,7 +95,6 @@ pub fn mvue24_with_uniforms(x: &Tensor, u: &[f32]) -> Tensor {
         let o = mvue_group(&g, u[gi]);
         dst.copy_from_slice(&o);
     }
-    out
 }
 
 /// MVUE 2:4 sparsification drawing uniforms from `rng`.
@@ -97,6 +103,17 @@ pub fn mvue24(x: &Tensor, rng: &mut Rng) -> Tensor {
     let mut u = vec![0f32; r * c / 4];
     rng.fill_uniform(&mut u);
     mvue24_with_uniforms(x, &u)
+}
+
+/// Allocation-free draw: `u` is a caller-owned uniforms buffer (resized
+/// in place), `out` is reshaped and overwritten. Draws exactly the same
+/// uniform stream as [`mvue24`] for a given rng state.
+pub fn mvue24_into(x: &Tensor, rng: &mut Rng, u: &mut Vec<f32>, out: &mut Tensor) {
+    let (r, c) = x.dims2();
+    u.clear();
+    u.resize(r * c / 4, 0.0);
+    rng.fill_uniform(u);
+    mvue24_with_uniforms_into(x, u, out);
 }
 
 #[cfg(test)]

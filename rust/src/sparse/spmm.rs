@@ -10,22 +10,17 @@
 //! *cause* as the paper's (half the inner-loop work, plus compression
 //! overheads), even though absolute numbers are testbed-specific.
 //!
-//! The inner loops exploit the group structure instead of doing random
-//! gathers: for each group of 4 input columns, the two kept values select
-//! from 4 contiguous just-loaded inputs — the CPU analogue of the sparse
-//! tensor core's operand muxing.
+//! The actual inner loops live in [`crate::sparse::kernels`] (tiled +
+//! threaded backend with a naive reference); this module owns the
+//! compressed format and the public entry points.
 
-use std::simd::prelude::*;
-
+use super::kernels;
 use super::mask::{prune24_mask, Mask};
 use crate::tensor::Tensor;
 
-/// SIMD lane width for the gather kernels (AVX2: 8 x f32).
-const LANES: usize = 8;
-
 /// Row-wise 2:4 compressed matrix: per row, q/2 values and q/2 2-bit
 /// in-group indices (unpacked to u8 for cheap addressing).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Compressed24 {
     pub rows: usize,
     /// original (uncompressed) number of columns
@@ -35,36 +30,56 @@ pub struct Compressed24 {
     /// in-group column index (0..4) of each kept value, same layout
     pub indices: Vec<u8>,
     /// absolute column index (g*4 + k) per kept value — precomputed at
-    /// compress time so the spMM inner loop is a pure SIMD gather
+    /// compress time so the spMM inner loops never decode metadata
     pub abs_indices: Vec<u32>,
 }
 
 impl Compressed24 {
     /// Compress a dense matrix under a row-wise 2:4 mask.
     pub fn from_masked(w: &Tensor, mask: &Mask) -> Self {
+        let mut out = Compressed24::default();
+        out.from_masked_into(w, mask);
+        out
+    }
+
+    /// Reset to a (rows, cols) layout, reusing the buffers. Shared by
+    /// every in-place compressor so the buffer set stays in lockstep
+    /// with the struct's fields.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        let n = rows * (cols / 2);
+        self.rows = rows;
+        self.cols = cols;
+        self.values.clear();
+        self.values.resize(n, 0.0);
+        self.indices.clear();
+        self.indices.resize(n, 0);
+        self.abs_indices.clear();
+        self.abs_indices.resize(n, 0);
+    }
+
+    /// Recompress in place, reusing this struct's buffers — the
+    /// zero-allocation path for the per-step "prune weights" refresh.
+    pub fn from_masked_into(&mut self, w: &Tensor, mask: &Mask) {
         let (r, c) = w.dims2();
         assert_eq!((r, c), (mask.rows, mask.cols));
         assert!(mask.is_24_row_wise(), "mask is not row-wise 2:4");
         let half = c / 2;
-        let mut values = vec![0f32; r * half];
-        let mut indices = vec![0u8; r * half];
-        let mut abs_indices = vec![0u32; r * half];
+        self.reset(r, c);
         for i in 0..r {
             let mut o = i * half;
             for g in 0..c / 4 {
                 let base = i * c + g * 4;
                 for k in 0..4 {
                     if mask.data[base + k] != 0 {
-                        values[o] = w.data[base + k];
-                        indices[o] = k as u8;
-                        abs_indices[o] = (g * 4 + k) as u32;
+                        self.values[o] = w.data[base + k];
+                        self.indices[o] = k as u8;
+                        self.abs_indices[o] = (g * 4 + k) as u32;
                         o += 1;
                     }
                 }
             }
             debug_assert_eq!(o, (i + 1) * half);
         }
-        Compressed24 { rows: r, cols: c, values, indices, abs_indices }
     }
 
     /// Compress by magnitude pruning (mask computed on the fly).
@@ -106,65 +121,27 @@ pub fn spmm_nt(x: &Tensor, wc: &Compressed24) -> Tensor {
 }
 
 pub fn spmm_nt_into(x: &Tensor, wc: &Compressed24, c: &mut Tensor) {
-    let (p, q) = x.dims2();
-    let r = wc.rows;
-    let half = q / 2;
-    let blocks = half / LANES;
-    for i in 0..p {
-        let xrow = &x.data[i * q..(i + 1) * q];
-        let crow = &mut c.data[i * r..(i + 1) * r];
-        for j in 0..r {
-            let vals = &wc.values[j * half..(j + 1) * half];
-            let aidx = &wc.abs_indices[j * half..(j + 1) * half];
-            // SIMD: q/2 MACs as 8-lane gather+FMA (AVX2); the dense
-            // baseline does q contiguous MACs — same lane width, so the
-            // half-MAC structure of the sparse tensor core carries over
-            let mut acc = Simd::<f32, LANES>::splat(0.0);
-            for b in 0..blocks {
-                let o = b * LANES;
-                let idx: Simd<usize, LANES> =
-                    Simd::<u32, LANES>::from_slice(&aidx[o..o + LANES]).cast();
-                let xs = Simd::<f32, LANES>::gather_or_default(xrow, idx);
-                let vs = Simd::<f32, LANES>::from_slice(&vals[o..o + LANES]);
-                acc += xs * vs;
-            }
-            let mut s = acc.reduce_sum();
-            for o in blocks * LANES..half {
-                s += vals[o] * xrow[aidx[o] as usize];
-            }
-            crow[j] = s;
-        }
-    }
+    let (_, q) = x.dims2();
+    assert_eq!(q, wc.cols);
+    kernels::spmm_nt_into(x, wc, c)
 }
 
 /// C = G Wc with Wc row-wise 2:4 compressed (as stored). G: (p,r),
 /// Wc dense-equivalent (r,q) -> C: (p,q). Backward input-grad GEMM of
 /// Eq. 3: the transposable mask guarantees Wc^T is also 2:4, so hardware
-/// runs this sparse; here we scatter q/2 AXPYs per row of G.
+/// runs this sparse; here q/2 scattered MACs per (G row, W row).
 pub fn spmm_nn(g: &Tensor, wc: &Compressed24) -> Tensor {
     let (p, r) = g.dims2();
     assert_eq!(r, wc.rows);
-    let q = wc.cols;
-    let half = q / 2;
-    let mut c = Tensor::zeros(&[p, q]);
-    for i in 0..p {
-        let grow = &g.data[i * r..(i + 1) * r];
-        let crow = &mut c.data[i * q..(i + 1) * q];
-        for k in 0..r {
-            let gik = grow[k];
-            if gik == 0.0 {
-                continue;
-            }
-            let vals = &wc.values[k * half..(k + 1) * half];
-            let idxs = &wc.indices[k * half..(k + 1) * half];
-            for g4 in 0..q / 4 {
-                let dst = &mut crow[g4 * 4..g4 * 4 + 4];
-                dst[idxs[g4 * 2] as usize] += gik * vals[g4 * 2];
-                dst[idxs[g4 * 2 + 1] as usize] += gik * vals[g4 * 2 + 1];
-            }
-        }
-    }
+    let mut c = Tensor::zeros(&[p, wc.cols]);
+    spmm_nn_into(g, wc, &mut c);
     c
+}
+
+pub fn spmm_nn_into(g: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let (_, r) = g.dims2();
+    assert_eq!(r, wc.rows);
+    kernels::spmm_nn_into(g, wc, c)
 }
 
 /// C = Gc^T X with Gc = 2:4-compressed ∇Z^T. Gc: (r,p) compressed, X:
@@ -173,26 +150,15 @@ pub fn spmm_nn(g: &Tensor, wc: &Compressed24) -> Tensor {
 pub fn spmm_tn(gc: &Compressed24, x: &Tensor) -> Tensor {
     let (p, q) = x.dims2();
     assert_eq!(p, gc.cols, "gc is (r, p) over the batch dim");
-    let r = gc.rows;
-    let half = p / 2;
-    let mut c = Tensor::zeros(&[r, q]);
-    for j in 0..r {
-        let vals = &gc.values[j * half..(j + 1) * half];
-        let idxs = &gc.indices[j * half..(j + 1) * half];
-        let crow = &mut c.data[j * q..(j + 1) * q];
-        for g4 in 0..p / 4 {
-            for t in 0..2 {
-                let v = vals[g4 * 2 + t];
-                if v == 0.0 {
-                    continue;
-                }
-                let row = g4 * 4 + idxs[g4 * 2 + t] as usize;
-                let xrow = &x.data[row * q..(row + 1) * q];
-                super::gemm::axpy(v, xrow, crow);
-            }
-        }
-    }
+    let mut c = Tensor::zeros(&[gc.rows, q]);
+    spmm_tn_into(gc, x, &mut c);
     c
+}
+
+pub fn spmm_tn_into(gc: &Compressed24, x: &Tensor, c: &mut Tensor) {
+    let (p, _) = x.dims2();
+    assert_eq!(p, gc.cols, "gc is (r, p) over the batch dim");
+    kernels::spmm_tn_into(gc, x, c)
 }
 
 #[cfg(test)]
@@ -212,6 +178,21 @@ mod tests {
         let w = rand(&[8, 16], 0);
         let c = Compressed24::prune_from(&w);
         assert_eq!(c.to_dense(), prune24(&w));
+    }
+
+    #[test]
+    fn from_masked_into_reuses_buffers() {
+        let w = rand(&[8, 16], 10);
+        let mask = transposable_mask(&w);
+        let mut c = Compressed24::from_masked(&w, &mask);
+        let cap = c.values.capacity();
+        let ptr = c.values.as_ptr();
+        let w2 = rand(&[8, 16], 11);
+        let mask2 = transposable_mask(&w2);
+        c.from_masked_into(&w2, &mask2);
+        assert_eq!(c.values.capacity(), cap);
+        assert_eq!(c.values.as_ptr(), ptr);
+        assert_eq!(c.to_dense(), mask2.apply(&w2));
     }
 
     #[test]

@@ -10,7 +10,8 @@
 use std::time::{Duration, Instant};
 
 use crate::sparse::block::TransformerBlock;
-use crate::sparse::ffn::{DenseFfn, SparseFfn};
+use crate::sparse::ffn::{DenseFfn, FfnCache, FfnGrads, SparseFfn};
+use crate::sparse::kernels::Scratch;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -45,23 +46,39 @@ fn calibrate(mut f: impl FnMut(), budget: Duration) -> usize {
     ((budget.as_secs_f64() / once.as_secs_f64()) as usize).clamp(2, 200)
 }
 
-/// Dense FFN iteration time: p tokens, width d, inner r.
+/// Dense FFN iteration time: p tokens, width d, inner r. Timed through
+/// the `_scratch` paths: all buffers are preallocated/recycled, so the
+/// measurement is kernel arithmetic, not allocator traffic.
 pub fn time_dense_ffn(p: usize, d: usize, r: usize, budget: Duration) -> FfnTiming {
     let mut rng = Rng::new(0xD15E);
     let ffn = DenseFfn::new(d, r, &mut rng);
     let x = Tensor::normal(&[p, d], 0.5, &mut rng);
     let dy = Tensor::normal(&[p, d], 0.5, &mut rng);
+    let mut cache = FfnCache::empty();
+    let mut y = Tensor::zeros(&[0]);
+    let mut grads = FfnGrads::empty();
+    let mut scratch = Scratch::new();
     let reps = calibrate(
         || {
-            let (_, c) = ffn.forward(&x);
-            std::hint::black_box(ffn.backward(&x, &c, &dy));
+            ffn.forward_scratch(&x, &mut cache, &mut y);
+            ffn.backward_scratch(&x, &cache, &dy, &mut grads, &mut scratch);
+            std::hint::black_box(grads.dw1.data[0]);
         },
         budget,
     );
-    let fwd_s = time_reps(|| { std::hint::black_box(ffn.forward(&x).0.data[0]); }, reps);
-    let (_, cache) = ffn.forward(&x);
+    let fwd_s = time_reps(
+        || {
+            ffn.forward_scratch(&x, &mut cache, &mut y);
+            std::hint::black_box(y.data[0]);
+        },
+        reps,
+    );
+    ffn.forward_scratch(&x, &mut cache, &mut y);
     let bwd_s = time_reps(
-        || { std::hint::black_box(ffn.backward(&x, &cache, &dy).dw1.data[0]); },
+        || {
+            ffn.backward_scratch(&x, &cache, &dy, &mut grads, &mut scratch);
+            std::hint::black_box(grads.dw1.data[0]);
+        },
         reps,
     );
     FfnTiming { fwd_s, bwd_s, overhead_s: 0.0 }
@@ -75,18 +92,33 @@ pub fn time_sparse_ffn(p: usize, d: usize, r: usize, mask_interval: usize,
     let mut ffn = SparseFfn::new(d, r, &mut rng);
     let x = Tensor::normal(&[p, d], 0.5, &mut rng);
     let dy = Tensor::normal(&[p, d], 0.5, &mut rng);
+    let mut cache = FfnCache::empty();
+    let mut y = Tensor::zeros(&[0]);
+    let mut grads = FfnGrads::empty();
+    let mut scratch = Scratch::new();
+    let mut crng = Rng::new(1);
     let reps = calibrate(
         || {
-            let (_, c) = ffn.forward(&x);
-            std::hint::black_box(ffn.backward(&x, &c, &dy, &mut Rng::new(1)));
+            ffn.forward_scratch(&x, &mut cache, &mut y);
+            ffn.backward_scratch(&x, &cache, &dy, &mut crng, &mut grads, &mut scratch);
+            std::hint::black_box(grads.dw1.data[0]);
         },
         budget,
     );
-    let fwd_s = time_reps(|| { std::hint::black_box(ffn.forward(&x).0.data[0]); }, reps);
-    let (_, cache) = ffn.forward(&x);
+    let fwd_s = time_reps(
+        || {
+            ffn.forward_scratch(&x, &mut cache, &mut y);
+            std::hint::black_box(y.data[0]);
+        },
+        reps,
+    );
+    ffn.forward_scratch(&x, &mut cache, &mut y);
     let mut brng = Rng::new(2);
     let bwd_s = time_reps(
-        || { std::hint::black_box(ffn.backward(&x, &cache, &dy, &mut brng).dw1.data[0]); },
+        || {
+            ffn.backward_scratch(&x, &cache, &dy, &mut brng, &mut grads, &mut scratch);
+            std::hint::black_box(grads.dw1.data[0]);
+        },
         reps,
     );
     // per-step prune (recompress) + amortized transposable search

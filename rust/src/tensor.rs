@@ -65,15 +65,39 @@ impl Tensor {
         &mut self.data[i * c + j]
     }
 
+    /// Reshape in place, reusing storage where capacity allows. Contents
+    /// are UNSPECIFIED afterwards (stale when the element count is
+    /// unchanged, zero otherwise) — every `_into` kernel either fully
+    /// overwrites its output or zeroes it itself; callers that
+    /// accumulate must clear explicitly.
+    pub fn resize_to(&mut self, shape: &[usize]) {
+        let n: usize = shape.iter().product();
+        if self.shape != shape {
+            self.shape.clear();
+            self.shape.extend_from_slice(shape);
+        }
+        if self.data.len() != n {
+            self.data.clear();
+            self.data.resize(n, 0.0);
+        }
+    }
+
     pub fn t(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[0]);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transposed copy into `out` (reshaped as needed, no allocation in
+    /// the steady state).
+    pub fn transpose_into(&self, out: &mut Tensor) {
         let (r, c) = self.dims2();
-        let mut out = Tensor::zeros(&[c, r]);
+        out.resize_to(&[c, r]);
         for i in 0..r {
             for j in 0..c {
                 out.data[j * r + i] = self.data[i * c + j];
             }
         }
-        out
     }
 
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
@@ -147,6 +171,21 @@ mod tests {
         let t = Tensor::normal(&[100, 100], 0.02, &mut rng);
         let var = t.sq_norm() / t.len() as f64;
         assert!((var.sqrt() - 0.02).abs() < 0.002, "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn resize_and_transpose_into_reuse_storage() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut out = Tensor::zeros(&[3, 2]);
+        let cap = out.data.capacity();
+        let ptr = out.data.as_ptr();
+        t.transpose_into(&mut out);
+        assert_eq!(out, t.t());
+        assert_eq!(out.data.capacity(), cap);
+        assert_eq!(out.data.as_ptr(), ptr);
+        out.resize_to(&[2, 2]);
+        assert_eq!(out.len(), 4);
+        assert!(out.data.iter().all(|&x| x == 0.0));
     }
 
     #[test]

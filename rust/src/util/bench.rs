@@ -4,8 +4,14 @@
 //! stable text output format that the bench binaries share. Measurements
 //! use `std::time::Instant` (monotonic).
 
+use std::collections::BTreeMap;
 use std::hint::black_box;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
 pub struct Stats {
@@ -70,6 +76,97 @@ pub fn gflops(stats: &Stats, flops: usize) -> f64 {
     flops as f64 / stats.median_s() / 1e9
 }
 
+/// One machine-readable kernel measurement (BENCH_kernels.json row).
+#[derive(Clone, Debug)]
+pub struct KernelBench {
+    /// kernel + variant, e.g. "gemm_nt_tiled", "spmm_nt"
+    pub kernel: String,
+    /// "naive" | "tiled"
+    pub backend: String,
+    /// problem shape (tokens, inner dim, output rows)
+    pub p: usize,
+    pub q: usize,
+    pub r: usize,
+    pub threads: usize,
+    pub median_ms: f64,
+    pub gflops: f64,
+    /// MACs actually executed (spMM counts q/2 per output element)
+    pub effective_macs: usize,
+}
+
+impl KernelBench {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("kernel".to_string(), Json::Str(self.kernel.clone()));
+        m.insert("backend".to_string(), Json::Str(self.backend.clone()));
+        m.insert("p".to_string(), Json::Num(self.p as f64));
+        m.insert("q".to_string(), Json::Num(self.q as f64));
+        m.insert("r".to_string(), Json::Num(self.r as f64));
+        m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        m.insert("median_ms".to_string(), Json::Num(self.median_ms));
+        m.insert("gflops".to_string(), Json::Num(self.gflops));
+        m.insert(
+            "effective_macs".to_string(),
+            Json::Num(self.effective_macs as f64),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Resolve `name` at the repo root (the directory holding ROADMAP.md):
+/// cargo runs bench binaries from the package dir, humans from the root.
+pub fn repo_root_file(name: &str) -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..4 {
+        if dir.join("ROADMAP.md").exists() {
+            return dir.join(name);
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    PathBuf::from(name)
+}
+
+/// Merge `records` under `section` in BENCH_kernels.json at the repo
+/// root, preserving other sections — the cross-PR perf trajectory file.
+pub fn write_kernel_bench(section: &str, records: &[KernelBench]) -> Result<()> {
+    write_kernel_bench_at(&repo_root_file("BENCH_kernels.json"), section, records)
+}
+
+/// Same, at an explicit path (tests and ad-hoc tooling).
+pub fn write_kernel_bench_at(
+    path: &std::path::Path,
+    section: &str,
+    records: &[KernelBench],
+) -> Result<()> {
+    // A missing file starts a fresh record, but an unreadable or
+    // unparseable one is an error: silently rewriting it would wipe the
+    // accumulated cross-PR perf history.
+    let mut map = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text)
+            .with_context(|| format!("corrupt bench record {}", path.display()))?
+        {
+            Json::Obj(m) => m,
+            other => anyhow::bail!(
+                "bench record {} is not a JSON object: {other:?}",
+                path.display()
+            ),
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => BTreeMap::new(),
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("reading bench record {}", path.display()))
+        }
+    };
+    map.insert(
+        section.to_string(),
+        Json::Arr(records.iter().map(KernelBench::to_json).collect()),
+    );
+    std::fs::write(path, Json::Obj(map).to_string())?;
+    Ok(())
+}
+
 /// Uniform row printer for the bench binaries.
 pub fn report_row(name: &str, stats: &Stats, extra: &str) {
     println!(
@@ -105,6 +202,34 @@ mod tests {
         let st = bench(|| std::thread::sleep(Duration::from_micros(100)),
                        Duration::from_millis(10));
         assert!(st.p10_ns <= st.median_ns && st.median_ns <= st.p90_ns);
+    }
+
+    #[test]
+    fn kernel_bench_json_merges_sections() {
+        let dir = std::env::temp_dir().join("sparse24_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_kernels.json");
+        std::fs::remove_file(&path).ok();
+        let rec = |k: &str| KernelBench {
+            kernel: k.to_string(),
+            backend: "tiled".to_string(),
+            p: 512,
+            q: 512,
+            r: 512,
+            threads: 2,
+            median_ms: 1.5,
+            gflops: 100.0,
+            effective_macs: 512 * 512 * 512,
+        };
+        write_kernel_bench_at(&path, "a", &[rec("gemm_nt_tiled")]).unwrap();
+        write_kernel_bench_at(&path, "b", &[rec("spmm_nt"), rec("gemm_nt")]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("b").unwrap().as_arr().unwrap().len(), 2);
+        let first = &j.get("a").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("kernel").unwrap().as_str().unwrap(), "gemm_nt_tiled");
+        assert_eq!(first.get("threads").unwrap().as_f64().unwrap(), 2.0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Differential tests for the kernel backend: the tiled + threaded
+//! kernels must match the naive reference on every GEMM/spMM variant,
+//! including shapes that are not multiples of any tile size, and must be
+//! bitwise thread-count-invariant (row-owned partitioning).
+
+use sparse24::sparse::kernels::{naive, set_num_threads, tiled};
+use sparse24::sparse::spmm::Compressed24;
+use sparse24::sparse::transposable::transposable_mask;
+use sparse24::tensor::Tensor;
+use sparse24::util::rng::Rng;
+
+fn rand(shape: &[usize], seed: u64) -> Tensor {
+    Tensor::normal(shape, 0.5, &mut Rng::new(seed))
+}
+
+/// Shapes chosen to hit every edge: single row/col, below one tile,
+/// exact tiles, tile+1, and odd sizes on each dimension. q is kept a
+/// multiple of 4 only where the 2:4 format requires it.
+const GEMM_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 8, 1),
+    (3, 5, 2),
+    (4, 16, 8),
+    (5, 17, 9),
+    (7, 12, 10),
+    (8, 32, 16),
+    (13, 20, 9),
+    (16, 33, 17),
+    (33, 64, 31),
+    (64, 48, 96),
+    (65, 100, 70),
+];
+
+#[test]
+fn gemm_nt_tiled_matches_naive() {
+    for (i, &(p, q, r)) in GEMM_SHAPES.iter().enumerate() {
+        let a = rand(&[p, q], 100 + i as u64);
+        let b = rand(&[r, q], 200 + i as u64);
+        let mut cn = Tensor::zeros(&[p, r]);
+        let mut ct = Tensor::zeros(&[p, r]);
+        naive::gemm_nt_into(&a, &b, &mut cn);
+        tiled::gemm_nt_into(&a, &b, &mut ct);
+        let d = cn.max_abs_diff(&ct);
+        assert!(d < 1e-4, "nt ({p},{q},{r}): diff {d}");
+    }
+}
+
+#[test]
+fn gemm_nn_tiled_matches_naive() {
+    for (i, &(p, r, q)) in GEMM_SHAPES.iter().enumerate() {
+        let a = rand(&[p, r], 300 + i as u64);
+        let b = rand(&[r, q], 400 + i as u64);
+        let mut cn = Tensor::zeros(&[p, q]);
+        let mut ct = Tensor::zeros(&[p, q]);
+        naive::gemm_nn_into(&a, &b, &mut cn);
+        tiled::gemm_nn_into(&a, &b, &mut ct);
+        let d = cn.max_abs_diff(&ct);
+        assert!(d < 1e-4, "nn ({p},{r},{q}): diff {d}");
+    }
+}
+
+#[test]
+fn gemm_tn_tiled_matches_naive() {
+    for (i, &(p, r, q)) in GEMM_SHAPES.iter().enumerate() {
+        let a = rand(&[p, r], 500 + i as u64);
+        let b = rand(&[p, q], 600 + i as u64);
+        let mut cn = Tensor::zeros(&[r, q]);
+        let mut ct = Tensor::zeros(&[r, q]);
+        naive::gemm_tn_into(&a, &b, &mut cn);
+        tiled::gemm_tn_into(&a, &b, &mut ct);
+        let d = cn.max_abs_diff(&ct);
+        assert!(d < 1e-4, "tn ({p},{r},{q}): diff {d}");
+    }
+}
+
+/// (p tokens, q compressed-cols, r rows); q must be a multiple of 4.
+const SPMM_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 8, 1),
+    (3, 12, 5),
+    (7, 24, 10),
+    (8, 16, 8),
+    (13, 40, 9),
+    (16, 32, 33),
+    (33, 64, 17),
+    (40, 48, 96),
+    (65, 104, 31),
+];
+
+#[test]
+fn spmm_nt_tiled_matches_naive() {
+    for (i, &(p, q, r)) in SPMM_SHAPES.iter().enumerate() {
+        let x = rand(&[p, q], 700 + i as u64);
+        let w = rand(&[r, q], 800 + i as u64);
+        let wc = Compressed24::from_masked(&w, &transposable_mask(&w));
+        let mut cn = Tensor::zeros(&[p, r]);
+        let mut ct = Tensor::zeros(&[p, r]);
+        naive::spmm_nt_into(&x, &wc, &mut cn);
+        tiled::spmm_nt_into(&x, &wc, &mut ct);
+        let d = cn.max_abs_diff(&ct);
+        assert!(d < 1e-4, "spmm_nt ({p},{q},{r}): diff {d}");
+    }
+}
+
+#[test]
+fn spmm_nn_tiled_matches_naive() {
+    for (i, &(p, q, r)) in SPMM_SHAPES.iter().enumerate() {
+        let g = rand(&[p, r], 900 + i as u64);
+        let w = rand(&[r, q], 1000 + i as u64);
+        let wc = Compressed24::from_masked(&w, &transposable_mask(&w));
+        let mut cn = Tensor::zeros(&[p, q]);
+        let mut ct = Tensor::zeros(&[p, q]);
+        naive::spmm_nn_into(&g, &wc, &mut cn);
+        tiled::spmm_nn_into(&g, &wc, &mut ct);
+        let d = cn.max_abs_diff(&ct);
+        assert!(d < 1e-4, "spmm_nn ({p},{q},{r}): diff {d}");
+    }
+}
+
+#[test]
+fn spmm_tn_tiled_matches_naive() {
+    for (i, &(pp, _, r)) in SPMM_SHAPES.iter().enumerate() {
+        // gc is (r, p4) compressed along the batch dim (multiple of 4)
+        let p4 = (pp + 3) / 4 * 4;
+        let q = 24;
+        let gt = rand(&[r, p4], 1100 + i as u64);
+        let gc = Compressed24::prune_from(&gt);
+        let x = rand(&[p4, q], 1200 + i as u64);
+        let mut cn = Tensor::zeros(&[r, q]);
+        let mut ct = Tensor::zeros(&[r, q]);
+        naive::spmm_tn_into(&gc, &x, &mut cn);
+        tiled::spmm_tn_into(&gc, &x, &mut ct);
+        let d = cn.max_abs_diff(&ct);
+        assert!(d < 1e-4, "spmm_tn ({p4},{r},{q}): diff {d}");
+    }
+}
+
+/// Thread-count invariance: the row-owned, block-aligned partitioning
+/// must make results BITWISE identical for 1 vs N threads. Kept as a
+/// single #[test] because it mutates the process-wide thread setting.
+#[test]
+fn tiled_kernels_bitwise_thread_invariant() {
+    // deliberately non-tile-aligned shapes
+    let (p, q, r) = (67, 92, 53);
+    let a = rand(&[p, q], 1);
+    let b = rand(&[r, q], 2);
+    let g = rand(&[p, r], 3);
+    let bn = rand(&[r, q], 4);
+    let bt = rand(&[p, q], 5);
+    let w = rand(&[r, q], 6);
+    let wc = Compressed24::from_masked(&w, &transposable_mask(&w));
+    let gt = rand(&[r, 68], 7);
+    let gc = Compressed24::prune_from(&gt);
+    let xg = rand(&[68, q], 8);
+
+    let run_all = || {
+        let mut nt = Tensor::zeros(&[p, r]);
+        tiled::gemm_nt_into(&a, &b, &mut nt);
+        let mut nn = Tensor::zeros(&[p, q]);
+        tiled::gemm_nn_into(&g, &bn, &mut nn);
+        let mut tn = Tensor::zeros(&[r, q]);
+        tiled::gemm_tn_into(&a, &bt, &mut tn);
+        let mut snt = Tensor::zeros(&[p, r]);
+        tiled::spmm_nt_into(&a, &wc, &mut snt);
+        let mut snn = Tensor::zeros(&[p, q]);
+        tiled::spmm_nn_into(&g, &wc, &mut snn);
+        let mut stn = Tensor::zeros(&[r, q]);
+        tiled::spmm_tn_into(&gc, &xg, &mut stn);
+        [nt, nn, tn, snt, snn, stn]
+    };
+
+    let prev = sparse24::sparse::kernels::num_threads();
+    set_num_threads(1);
+    let single = run_all();
+    for threads in [2usize, 3, 4] {
+        let got = set_num_threads(threads);
+        let multi = run_all();
+        for (k, (s, m)) in single.iter().zip(&multi).enumerate() {
+            assert!(
+                s.data.iter().zip(&m.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "kernel #{k} not bitwise identical at {got} threads"
+            );
+        }
+    }
+    set_num_threads(prev);
+}

@@ -1,0 +1,188 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build environment is offline, so the real crate cannot be fetched
+//! from a registry. This vendored version implements exactly the API
+//! subset the workspace uses: [`Error`], [`Result`], the [`Context`]
+//! extension trait (`.context(..)` / `.with_context(..)` on `Result` and
+//! `Option`), and the `anyhow!` / `bail!` / `ensure!` macros. Errors are
+//! stored as a flattened message chain; `{e}` prints the outermost
+//! message, `{e:#}` the full `a: b: c` chain (matching anyhow's Display).
+
+use std::fmt;
+
+/// A flattened error: `chain[0]` is the outermost context message,
+/// `chain.last()` the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (what `.context(..)` does).
+    pub fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost in the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Iterate the chain from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow: any std error converts into `Error` (this is what
+// makes `?` work on io/fmt/parse errors). `Error` itself deliberately
+// does NOT implement `std::error::Error`, so this blanket impl does not
+// overlap with the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "missing file"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e = io_err().context("loading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(4).unwrap(), 4);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative: -1");
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too big");
+        let e: Error = anyhow!("code {}", 7);
+        assert_eq!(e.root_cause(), "code 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+    }
+
+    #[test]
+    fn with_context_chains() {
+        let e = io_err()
+            .with_context(|| format!("step {}", 3))
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 3: missing file");
+        assert_eq!(e.chain().count(), 2);
+    }
+}

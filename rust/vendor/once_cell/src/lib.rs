@@ -1,0 +1,23 @@
+//! Minimal, dependency-free stand-in for the `once_cell` crate.
+//!
+//! The build environment is offline; `once_cell::sync::Lazy` is the only
+//! item the workspace uses and `std::sync::LazyLock` is a drop-in
+//! replacement for it (const-constructible, `Deref<Target = T>`).
+
+pub mod sync {
+    /// Drop-in for `once_cell::sync::Lazy`.
+    pub type Lazy<T, F = fn() -> T> = std::sync::LazyLock<T, F>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static N: Lazy<Vec<u32>> = Lazy::new(|| (0..4).collect());
+
+    #[test]
+    fn lazy_static_derefs() {
+        assert_eq!(N.len(), 4);
+        assert_eq!(N[3], 3);
+    }
+}

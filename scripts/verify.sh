@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verification entry point: build + full test suite + a quick
+# bench smoke on 2 kernel threads (exercises the thread pool, the tiled
+# backend, and the BENCH_kernels.json emitters end to end).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "== bench smoke (PALLAS_NUM_THREADS=2, --quick)"
+PALLAS_NUM_THREADS=2 cargo bench --bench ablation_spmm -- --quick
+PALLAS_NUM_THREADS=2 cargo bench --bench fig7_ffn_block -- --quick
+
+echo "== verify OK"
