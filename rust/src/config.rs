@@ -426,6 +426,111 @@ impl TrainConfig {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Serving configuration ([serve] table)
+// ---------------------------------------------------------------------------
+
+/// Configuration of the inference subsystem (`generate` / `serve-bench`).
+///
+/// TOML keys, all under `[serve]`:
+/// * `max_seqs` — concurrent sequences in the running batch (KV slots
+///   are preallocated for exactly this many);
+/// * `max_batch_tokens` — admission budget: summed peak context
+///   (prompt + max_new, clamped to n_ctx) of the admitted batch;
+/// * `max_new_tokens` — generation length per request;
+/// * `temperature` — 0 = greedy, > 0 = softmax sampling;
+/// * `top_k` — restrict sampling to the k most likely tokens (0 = all);
+/// * `seed` — sampling + synthetic-load RNG seed;
+/// * `bench_steps` — scheduler steps the open-loop bench runs;
+/// * `arrival_per_step` — mean requests arriving per step (Poisson);
+/// * `prompt_len` — synthetic prompt length for the bench load.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub max_seqs: usize,
+    pub max_batch_tokens: usize,
+    pub max_new_tokens: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    pub seed: u64,
+    pub bench_steps: usize,
+    pub arrival_per_step: f64,
+    pub prompt_len: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_seqs: 4,
+            max_batch_tokens: 4096,
+            max_new_tokens: 16,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            bench_steps: 256,
+            arrival_per_step: 0.5,
+            prompt_len: 12,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_toml(text: &str) -> Result<ServeConfig> {
+        Self::from_table(&parse_toml(text)?)
+    }
+
+    pub fn from_table(t: &Table) -> Result<ServeConfig> {
+        let mut c = ServeConfig::default();
+        if let Some(v) = get(t, "serve", "max_seqs") {
+            c.max_seqs = v.as_usize()?;
+        }
+        if let Some(v) = get(t, "serve", "max_batch_tokens") {
+            c.max_batch_tokens = v.as_usize()?;
+        }
+        if let Some(v) = get(t, "serve", "max_new_tokens") {
+            c.max_new_tokens = v.as_usize()?;
+        }
+        if let Some(v) = get(t, "serve", "temperature") {
+            c.temperature = v.as_f64()?;
+        }
+        if let Some(v) = get(t, "serve", "top_k") {
+            c.top_k = v.as_usize()?;
+        }
+        if let Some(v) = get(t, "serve", "seed") {
+            c.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = get(t, "serve", "bench_steps") {
+            c.bench_steps = v.as_usize()?;
+        }
+        if let Some(v) = get(t, "serve", "arrival_per_step") {
+            c.arrival_per_step = v.as_f64()?;
+        }
+        if let Some(v) = get(t, "serve", "prompt_len") {
+            c.prompt_len = v.as_usize()?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_seqs == 0 {
+            bail!("serve.max_seqs must be >= 1");
+        }
+        if self.max_new_tokens == 0 {
+            bail!("serve.max_new_tokens must be >= 1");
+        }
+        if self.prompt_len == 0 {
+            bail!("serve.prompt_len must be >= 1");
+        }
+        if self.temperature < 0.0 {
+            bail!("serve.temperature must be >= 0");
+        }
+        if self.arrival_per_step < 0.0 {
+            bail!("serve.arrival_per_step must be >= 0");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -525,6 +630,29 @@ kind = "synthetic"
         let d = TrainConfig::default();
         assert_eq!(d.kernel_threads, 0);
         assert_eq!(d.kernel_backend, "auto");
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let c = ServeConfig::from_toml(
+            "[serve]\nmax_seqs = 8\nmax_batch_tokens = 1024\n\
+             max_new_tokens = 32\ntemperature = 0.7\ntop_k = 20\n\
+             bench_steps = 64\narrival_per_step = 0.25\nprompt_len = 9\n",
+        )
+        .unwrap();
+        assert_eq!(c.max_seqs, 8);
+        assert_eq!(c.max_batch_tokens, 1024);
+        assert_eq!(c.max_new_tokens, 32);
+        assert!((c.temperature - 0.7).abs() < 1e-9);
+        assert_eq!(c.top_k, 20);
+        assert_eq!(c.bench_steps, 64);
+        assert!((c.arrival_per_step - 0.25).abs() < 1e-9);
+        assert_eq!(c.prompt_len, 9);
+        // defaults cover a missing section entirely
+        let d = ServeConfig::from_toml("[train]\nsteps = 3\n").unwrap();
+        assert_eq!(d.max_seqs, 4);
+        assert!(ServeConfig::from_toml("[serve]\nmax_seqs = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\ntemperature = -0.5\n").is_err());
     }
 
     #[test]

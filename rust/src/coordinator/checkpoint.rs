@@ -16,6 +16,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::model::ModelDims;
 use crate::sparse::mask::Mask;
 use crate::tensor::Tensor;
 use crate::util::json::{num, obj, Json};
@@ -24,6 +25,12 @@ const MAGIC: &[u8; 8] = b"S24CKPT1";
 
 /// Everything needed to resume a run (trainer state minus the compiled
 /// executables, which are rebuilt from the artifacts).
+///
+/// `param_names` + `dims` make a checkpoint self-describing to the serve
+/// engine: a frozen [`crate::serve::InferModel`] can be built from the
+/// file alone, without the artifacts directory. Both are optional in the
+/// header so pre-existing checkpoints still load (for training resume;
+/// serving requires them).
 #[derive(Clone, Debug)]
 pub struct Checkpoint {
     pub manifest_name: String,
@@ -39,6 +46,10 @@ pub struct Checkpoint {
     pub flip_histories: Vec<Vec<f64>>,
     pub train_rng: [u64; 4],
     pub val_rng: [u64; 4],
+    /// Parameter names aligned with `params` (empty on legacy files).
+    pub param_names: Vec<String>,
+    /// Architecture of the saved model (None on legacy files).
+    pub dims: Option<ModelDims>,
 }
 
 fn u64s_json(v: &[u64]) -> Json {
@@ -96,6 +107,24 @@ impl Checkpoint {
             ),
             ("train_rng", u64s_json(&self.train_rng)),
             ("val_rng", u64s_json(&self.val_rng)),
+            (
+                "param_names",
+                Json::Arr(self.param_names.iter().map(|n| Json::Str(n.clone())).collect()),
+            ),
+            (
+                "dims",
+                match &self.dims {
+                    Some(d) => obj(vec![
+                        ("vocab", num(d.vocab as f64)),
+                        ("d_model", num(d.d_model as f64)),
+                        ("n_layers", num(d.n_layers as f64)),
+                        ("n_heads", num(d.n_heads as f64)),
+                        ("d_ff", num(d.d_ff as f64)),
+                        ("n_ctx", num(d.n_ctx as f64)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
         ]);
         let header_bytes = header.to_string().into_bytes();
         let mut f = std::io::BufWriter::new(
@@ -188,6 +217,28 @@ impl Checkpoint {
             .collect::<Result<Vec<u64>>>()?;
         let train_rng = u64s_from_json(h.get("train_rng")?)?;
         let val_rng = u64s_from_json(h.get("val_rng")?)?;
+        let param_names = match h.opt("param_names") {
+            Some(j) => j
+                .as_arr()?
+                .iter()
+                .map(|n| Ok(n.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        let dims = match h.opt("dims") {
+            Some(Json::Null) | None => None,
+            Some(d) => Some(ModelDims {
+                vocab: d.get("vocab")?.as_usize()?,
+                d_model: d.get("d_model")?.as_usize()?,
+                n_layers: d.get("n_layers")?.as_usize()?,
+                n_heads: d.get("n_heads")?.as_usize()?,
+                d_ff: d.get("d_ff")?.as_usize()?,
+                n_ctx: d.get("n_ctx")?.as_usize()?,
+            }),
+        };
+        if !param_names.is_empty() && param_names.len() != param_shapes.len() {
+            bail!("{} param names vs {} params", param_names.len(), param_shapes.len());
+        }
 
         Ok(Checkpoint {
             manifest_name: h.get("manifest")?.as_str()?.to_string(),
@@ -203,6 +254,8 @@ impl Checkpoint {
             flip_histories,
             train_rng: train_rng.try_into().map_err(|_| anyhow::anyhow!("bad rng state"))?,
             val_rng: val_rng.try_into().map_err(|_| anyhow::anyhow!("bad rng state"))?,
+            param_names,
+            dims,
         })
     }
 }
@@ -257,6 +310,10 @@ mod tests {
             flip_histories: vec![vec![0.0, 0.1, 0.05]],
             train_rng: [1, 2, 3, 4],
             val_rng: [5, 6, 7, 8],
+            param_names: vec!["w".into(), "b".into()],
+            dims: Some(ModelDims {
+                vocab: 8, d_model: 4, n_layers: 1, n_heads: 1, d_ff: 4, n_ctx: 4,
+            }),
         }
     }
 
@@ -277,6 +334,8 @@ mod tests {
         assert_eq!(back.flip_histories, ck.flip_histories);
         assert_eq!(back.train_rng, ck.train_rng);
         assert_eq!(back.val_rng, ck.val_rng);
+        assert_eq!(back.param_names, ck.param_names);
+        assert_eq!(back.dims, ck.dims);
         std::fs::remove_dir_all(&dir).ok();
     }
 

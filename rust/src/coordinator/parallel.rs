@@ -44,8 +44,10 @@ enum Req {
 
 enum Resp {
     Loaded,
-    StepOut { loss: f32, grads: Vec<Tensor> },
-    EvalOut { loss: f32 },
+    /// `batch` rides back with the result so the leader can recycle its
+    /// buffers into the batcher pool (zero per-microbatch allocation).
+    StepOut { loss: f32, grads: Vec<Tensor>, batch: Batch },
+    EvalOut { loss: f32, batch: Batch },
     Err(String),
 }
 
@@ -106,7 +108,7 @@ fn worker_main(rx: Receiver<Req>, tx: Sender<Resp>) {
                     for (lit, shape) in outs[1..].iter().zip(grad_shapes.iter()) {
                         grads.push(literal::literal_to_tensor(lit, shape)?);
                     }
-                    Ok(Resp::StepOut { loss, grads })
+                    Ok(Resp::StepOut { loss, grads, batch })
                 })()
                 .unwrap_or_else(|e| Resp::Err(format!("{e:#}")))
             }
@@ -115,7 +117,7 @@ fn worker_main(rx: Receiver<Req>, tx: Sender<Resp>) {
                     let inputs = build_inputs(&params, &masks, &batch, None)?;
                     let outs = runtime.execute(&key, &inputs)?;
                     let loss = literal::literal_to_f32(&outs[0])?;
-                    Ok(Resp::EvalOut { loss })
+                    Ok(Resp::EvalOut { loss, batch })
                 })()
                 .unwrap_or_else(|e| Resp::Err(format!("{e:#}")))
             }
@@ -162,6 +164,8 @@ impl DataParallel {
 
     /// Scatter microbatches across workers, reduce to (mean loss,
     /// mean grads). `grad_shapes` describe the per-param outputs.
+    /// `recycle`, when given, receives the batches back from the workers
+    /// so the trainer can refill them next step without allocating.
     pub fn grad_step(
         &self,
         key: &str,
@@ -170,6 +174,7 @@ impl DataParallel {
         batches: Vec<Batch>,
         base_seed: i32,
         grad_shapes: Arc<Vec<Vec<usize>>>,
+        mut recycle: Option<&mut Vec<Batch>>,
     ) -> Result<(f64, Vec<Tensor>)> {
         anyhow::ensure!(!batches.is_empty(), "no microbatches");
         let n_batches = batches.len();
@@ -196,8 +201,11 @@ impl DataParallel {
         for (w, &c) in self.workers.iter().zip(&counts) {
             for _ in 0..c {
                 match w.rx.recv().context("worker died during step")? {
-                    Resp::StepOut { loss, grads } => {
+                    Resp::StepOut { loss, grads, batch } => {
                         loss_sum += loss as f64;
+                        if let Some(pool) = recycle.as_mut() {
+                            pool.push(batch);
+                        }
                         match &mut grad_sum {
                             None => grad_sum = Some(grads),
                             Some(acc) => {
@@ -231,6 +239,7 @@ impl DataParallel {
         params: Arc<Vec<Tensor>>,
         masks: Arc<Vec<Tensor>>,
         batches: Vec<Batch>,
+        mut recycle: Option<&mut Vec<Batch>>,
     ) -> Result<f64> {
         anyhow::ensure!(!batches.is_empty(), "no eval batches");
         let n = batches.len();
@@ -252,7 +261,12 @@ impl DataParallel {
         for (w, &c) in self.workers.iter().zip(&counts) {
             for _ in 0..c {
                 match w.rx.recv().context("worker died during eval")? {
-                    Resp::EvalOut { loss } => sum += loss as f64,
+                    Resp::EvalOut { loss, batch } => {
+                        sum += loss as f64;
+                        if let Some(pool) = recycle.as_mut() {
+                            pool.push(batch);
+                        }
+                    }
                     Resp::Err(e) => bail!("worker eval failed: {e}"),
                     _ => bail!("unexpected worker response"),
                 }

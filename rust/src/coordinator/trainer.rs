@@ -50,6 +50,10 @@ pub struct Trainer {
     /// backing storage is recycled via `Arc::make_mut` so the hot loop
     /// stops allocating a full model copy per optimizer step
     params_snapshot: Option<Arc<Vec<Tensor>>>,
+    /// microbatch shells recycled through the engine round-trip — after
+    /// one warmup step, `Batcher::next_train_into` refills these without
+    /// allocating (the ROADMAP per-microbatch allocation fix)
+    batch_pool: Vec<Batch>,
 }
 
 impl Trainer {
@@ -125,7 +129,24 @@ impl Trainer {
             sparse_steps_since_refresh: 0,
             masks_cache: None,
             params_snapshot: None,
+            batch_pool: Vec::new(),
         })
+    }
+
+    /// Build `count` microbatches via `fill`, reusing recycled shells
+    /// from the pool (token-buffer-allocation-free once warm).
+    fn fill_batches(
+        pool: &mut Vec<Batch>,
+        count: usize,
+        mut fill: impl FnMut(&mut Batch),
+    ) -> Vec<Batch> {
+        let mut batches = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut b = pool.pop().unwrap_or_else(Batch::empty);
+            fill(&mut b);
+            batches.push(b);
+        }
+        batches
     }
 
     /// Snapshot of the current parameters for the engine. Steady state:
@@ -247,9 +268,10 @@ impl Trainer {
         self.maintain_masks(phase);
         let variant = self.variant_of(phase);
 
-        // collect microbatches
-        let batches: Vec<Batch> =
-            (0..self.cfg.grad_accum).map(|_| self.batcher.next_train()).collect();
+        // collect microbatches into recycled shells
+        let batcher = &mut self.batcher;
+        let batches = Self::fill_batches(&mut self.batch_pool, self.cfg.grad_accum,
+                                         |b| batcher.next_train_into(b));
         let params_arc = self.snapshot_params();
         let masks_arc = self.masks_arc();
         let base_seed = (t * self.cfg.grad_accum) as i32;
@@ -258,7 +280,7 @@ impl Trainer {
         let (loss, grads) = self
             .engine
             .grad_step(variant, params_arc, masks_arc, batches, base_seed,
-                       self.grad_shapes.clone())
+                       self.grad_shapes.clone(), Some(&mut self.batch_pool))
             .with_context(|| format!("step {t} ({variant})"))?;
         self.profile.add("step_execute", t0.elapsed());
 
@@ -313,11 +335,13 @@ impl Trainer {
 
     /// Mean validation loss under the CURRENT masks.
     pub fn eval(&mut self) -> Result<f64> {
-        let batches: Vec<Batch> =
-            (0..self.cfg.eval_batches).map(|_| self.batcher.next_val()).collect();
+        let batcher = &mut self.batcher;
+        let batches = Self::fill_batches(&mut self.batch_pool, self.cfg.eval_batches,
+                                         |b| batcher.next_val_into(b));
         let params_arc = self.snapshot_params();
         let masks_arc = self.masks_arc();
-        self.engine.eval("eval", params_arc, masks_arc, batches)
+        self.engine.eval("eval", params_arc, masks_arc, batches,
+                         Some(&mut self.batch_pool))
     }
 
     /// Run the full configured schedule. `on_step(trainer, loss)` fires
@@ -369,6 +393,8 @@ impl Trainer {
             flip_histories: self.fst.monitors.iter().map(|m| m.history.clone()).collect(),
             train_rng,
             val_rng,
+            param_names: self.params.names.clone(),
+            dims: Some(crate::model::ModelDims::from_config(&self.manifest.config)),
         }
     }
 
@@ -424,7 +450,7 @@ impl Trainer {
         let masks_arc = self.masks_arc();
         self.engine
             .grad_step(variant, params_arc, masks_arc, vec![batch], 0,
-                       self.grad_shapes.clone())
+                       self.grad_shapes.clone(), Some(&mut self.batch_pool))
     }
 }
 

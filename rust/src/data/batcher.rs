@@ -15,6 +15,14 @@ pub struct Batch {
     pub targets: Vec<i32>,
 }
 
+impl Batch {
+    /// An empty shell to be filled by [`Batcher::next_train_into`] —
+    /// the recycled-buffer protocol's starting state.
+    pub fn empty() -> Batch {
+        Batch { batch: 0, n: 0, tokens: Vec::new(), targets: Vec::new() }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Batcher {
     data: Vec<u32>,
@@ -44,28 +52,50 @@ impl Batcher {
         }
     }
 
-    fn sample_from(data: &[u32], batch: usize, n: usize, rng: &mut Rng) -> Batch {
-        let mut tokens = Vec::with_capacity(batch * n);
-        let mut targets = Vec::with_capacity(batch * n);
+    /// Fill `out` in place, reusing its token/target storage — after one
+    /// warmup round a recycled [`Batch`] makes this allocation-free (the
+    /// ROADMAP's per-microbatch allocation fix). Draws the same RNG
+    /// stream as the allocating variants.
+    fn sample_into(data: &[u32], batch: usize, n: usize, rng: &mut Rng,
+                   out: &mut Batch) {
+        out.batch = batch;
+        out.n = n;
+        out.tokens.clear();
+        out.targets.clear();
+        out.tokens.reserve(batch * n);
+        out.targets.reserve(batch * n);
         let max_start = data.len() - n - 1;
         for _ in 0..batch {
             let s = rng.below(max_start + 1);
             for k in 0..n {
-                tokens.push(data[s + k] as i32);
-                targets.push(data[s + k + 1] as i32);
+                out.tokens.push(data[s + k] as i32);
+                out.targets.push(data[s + k + 1] as i32);
             }
         }
-        Batch { batch, n, tokens, targets }
     }
 
     /// Next training microbatch (random windows).
     pub fn next_train(&mut self) -> Batch {
-        Self::sample_from(&self.data, self.batch, self.n, &mut self.rng)
+        let mut b = Batch::empty();
+        self.next_train_into(&mut b);
+        b
+    }
+
+    /// Zero-allocation variant of [`Batcher::next_train`].
+    pub fn next_train_into(&mut self, out: &mut Batch) {
+        Self::sample_into(&self.data, self.batch, self.n, &mut self.rng, out);
     }
 
     /// Next validation microbatch (separate stream, held-out data).
     pub fn next_val(&mut self) -> Batch {
-        Self::sample_from(&self.val, self.batch, self.n, &mut self.val_rng)
+        let mut b = Batch::empty();
+        self.next_val_into(&mut b);
+        b
+    }
+
+    /// Zero-allocation variant of [`Batcher::next_val`].
+    pub fn next_val_into(&mut self, out: &mut Batch) {
+        Self::sample_into(&self.val, self.batch, self.n, &mut self.val_rng, out);
     }
 
     /// Snapshot both RNG streams (checkpointing).
@@ -147,5 +177,21 @@ mod tests {
     #[should_panic]
     fn rejects_tiny_corpus() {
         Batcher::new(toks(10), 2, 8, 0.1, 0);
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_and_reuses_storage() {
+        let mut a = Batcher::new(toks(1000), 2, 8, 0.1, 5);
+        let mut b = Batcher::new(toks(1000), 2, 8, 0.1, 5);
+        let mut buf = Batch::empty();
+        b.next_train_into(&mut buf);
+        assert_eq!(a.next_train(), buf);
+        let (cap, ptr) = (buf.tokens.capacity(), buf.tokens.as_ptr());
+        b.next_train_into(&mut buf);
+        assert_eq!(a.next_train(), buf);
+        assert_eq!(buf.tokens.capacity(), cap);
+        assert_eq!(buf.tokens.as_ptr(), ptr, "refill must reuse the allocation");
+        b.next_val_into(&mut buf);
+        assert_eq!(a.next_val(), buf);
     }
 }

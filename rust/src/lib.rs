@@ -1,6 +1,6 @@
 #![feature(portable_simd)]
 
-//! `sparse24` — 2:4 fully-sparse transformer pre-training.
+//! `sparse24` — 2:4 fully-sparse transformer pre-training AND serving.
 //!
 //! Reproduction of *Accelerating Transformer Pre-training with 2:4
 //! Sparsity* (Hu et al., ICML 2024) as a three-layer Rust + JAX + Pallas
@@ -9,6 +9,35 @@
 //! instrumentation, the decay-factor tuner, the data pipeline, and the PJRT
 //! runtime that executes the AOT-compiled (HLO-text) model step functions.
 //! See DESIGN.md for the system inventory and experiment index.
+//!
+//! # Serving (`serve`)
+//!
+//! The [`serve`] subsystem turns a trained checkpoint into a batched
+//! autoregressive inference engine: FFN weights are converted ONCE to
+//! compressed 2:4 form (half the dense footprint) so every decode step's
+//! FFN forward runs through the tiled `spmm_nt` kernels; per-sequence
+//! K/V caches live in preallocated slots carved from the kernel scratch
+//! arena (the steady-state decode path performs zero scratch-arena
+//! allocation, asserted by the arena's checkout counters); and a
+//! continuous-batching scheduler admits/retires requests at step
+//! granularity, fanning per-sequence attention onto the persistent
+//! kernel thread pool.
+//!
+//! CLI subcommands (see `sparse24 help`):
+//!
+//! * `generate` — decode one prompt from a checkpoint (or a synthetic
+//!   model with `--synthetic`), printing the sampled token ids;
+//! * `serve-bench` — synthetic open-loop request load through the
+//!   scheduler at two or more batch sizes; reports tokens/sec, p50/p99
+//!   per-token latency, and the batch-occupancy histogram, appends a
+//!   `serve_bench` section to `BENCH_serve.json`, and fails if the
+//!   steady-state decode path checked out a single fresh scratch-arena
+//!   buffer (request-level bookkeeping like output token vectors is
+//!   outside that contract).
+//!
+//! Both read the `[serve]` config table ([`config::ServeConfig`]):
+//! `max_seqs`, `max_batch_tokens`, `max_new_tokens`, `temperature`,
+//! `top_k`, `seed`, `bench_steps`, `arrival_per_step`, `prompt_len`.
 
 pub mod config;
 pub mod coordinator;
@@ -16,6 +45,7 @@ pub mod data;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod tensor;
 pub mod util;

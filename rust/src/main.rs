@@ -6,6 +6,9 @@
 //!   tune-decay       §4.3 fast λ_W determination (Table 2)
 //!   speedup          Fig. 7 / Table 11 / Table 13 substrate measurements
 //!   inspect          print an artifact manifest + compile sanity check
+//!   generate         decode one prompt on the sparse inference engine
+//!   serve-bench      open-loop serving load -> BENCH_serve.json
+//!   bench-diff       warn on GFLOP/s regressions vs the previous run
 //!
 //! Examples:
 //!   sparse24 train --config configs/e2e_ours.toml
@@ -13,17 +16,29 @@
 //!   sparse24 tune-decay --config configs/nano_ours.toml --probe-steps 30
 //!   sparse24 speedup --ffn --out results/fig7a.csv
 //!   sparse24 inspect --model nano
+//!   sparse24 generate --checkpoint run.ckpt --prompt 3,17,5 --max-new 32
+//!   sparse24 serve-bench --synthetic --steps 256 --batch-sizes 2,4,8
+//!   sparse24 bench-diff
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use sparse24::config::TrainConfig;
-use sparse24::coordinator::{Trainer, Tuner};
+use sparse24::config::{ServeConfig, TrainConfig};
+use sparse24::coordinator::{Checkpoint, Trainer, Tuner};
+use sparse24::model::ModelDims;
 use sparse24::runtime::Manifest;
-use sparse24::sparse::workloads;
+use sparse24::serve::{
+    run_open_loop, synthetic_checkpoint, InferEngine, InferModel, Request, Sampling,
+    Scheduler,
+};
+use sparse24::sparse::{kernels, workloads};
+use sparse24::util::bench::{
+    kernel_bench_regressions, repo_root_file, write_json_section_at,
+};
+use sparse24::util::json::{num, obj, Json};
 use sparse24::util::write_csv;
 
 fn main() {
@@ -73,6 +88,9 @@ fn run() -> Result<()> {
         "tune-decay" => cmd_tune(rest),
         "speedup" => cmd_speedup(rest),
         "inspect" => cmd_inspect(rest),
+        "generate" => cmd_generate(rest),
+        "serve-bench" => cmd_serve_bench(rest),
+        "bench-diff" => cmd_bench_diff(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -90,8 +108,234 @@ fn print_usage() {
                         [--checkpoint <file> [--checkpoint-every N]] [--resume <file>]\n\
            tune-decay   --config <toml> [--probe-steps N] [--out <csv>]\n\
            speedup      [--ffn] [--block] [--e2e] [--profile] [--quick] [--out <csv>]\n\
-           inspect      --model <name> [--artifacts-dir <dir>]\n"
+           inspect      --model <name> [--artifacts-dir <dir>]\n\
+           generate     [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
+                        [--prompt t0,t1,...] [--max-new N] [--temperature T]\n\
+                        [--top-k K] [--seed S]\n\
+           serve-bench  [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
+                        [--steps N] [--batch-sizes a,b,...] [--quick]\n\
+           bench-diff   [--file <json>] [--threshold PCT]\n"
     );
+}
+
+// ---------------------------------------------------------------------------
+// serving
+// ---------------------------------------------------------------------------
+
+/// `[serve]` table from --config (if given) with defaults otherwise.
+fn load_serve_config(opts: &BTreeMap<String, Vec<String>>) -> Result<ServeConfig> {
+    match opt1(opts, "config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            // honor a [kernels] table in the same file — and fail loudly
+            // on a malformed one rather than silently serving on defaults
+            TrainConfig::from_toml(&text)
+                .with_context(|| format!("parsing {path} (kernels/train tables)"))?
+                .apply_kernel_settings();
+            ServeConfig::from_toml(&text)
+        }
+        None => Ok(ServeConfig::default()),
+    }
+}
+
+/// Frozen model from --checkpoint, or a synthetic one (--synthetic /
+/// no checkpoint) with dims overridable via --vocab/--d-model/--layers/
+/// --heads/--d-ff/--n-ctx.
+fn load_infer_model(
+    flags: &[String],
+    opts: &BTreeMap<String, Vec<String>>,
+    quick: bool,
+) -> Result<InferModel> {
+    if let Some(path) = opt1(opts, "checkpoint") {
+        let ck = Checkpoint::load(Path::new(path))?;
+        let model = InferModel::from_checkpoint(&ck)
+            .with_context(|| format!("freezing checkpoint {path}"))?;
+        println!(
+            "loaded {} (step {}): {} layers, d={}, {:.2}M dense-equivalent params",
+            path, ck.step, model.dims.n_layers, model.dims.d_model,
+            model.dense_param_elements() as f64 / 1e6
+        );
+        return Ok(model);
+    }
+    if !flags.iter().any(|f| f == "synthetic") {
+        println!("no --checkpoint given; using a synthetic model (--synthetic)");
+    }
+    let geti = |key: &str, default: usize| -> Result<usize> {
+        Ok(match opt1(opts, key) {
+            Some(s) => s.parse::<usize>().with_context(|| format!("--{key}"))?,
+            None => default,
+        })
+    };
+    let dims = if quick {
+        ModelDims {
+            vocab: geti("vocab", 128)?,
+            d_model: geti("d-model", 64)?,
+            n_layers: geti("layers", 2)?,
+            n_heads: geti("heads", 4)?,
+            d_ff: geti("d-ff", 128)?,
+            n_ctx: geti("n-ctx", 64)?,
+        }
+    } else {
+        ModelDims {
+            vocab: geti("vocab", 512)?,
+            d_model: geti("d-model", 128)?,
+            n_layers: geti("layers", 4)?,
+            n_heads: geti("heads", 4)?,
+            d_ff: geti("d-ff", 256)?,
+            n_ctx: geti("n-ctx", 256)?,
+        }
+    };
+    let seed = opt1(opts, "seed").map(|s| s.parse::<u64>()).transpose()?.unwrap_or(0);
+    let ck = synthetic_checkpoint(&dims, seed ^ 0x5EED);
+    InferModel::from_checkpoint(&ck)
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let (flags, opts, _) = parse_args(args);
+    let cfg = load_serve_config(&opts)?;
+    let model = load_infer_model(&flags, &opts, false)?;
+    let vocab = model.dims.vocab;
+    let max_new = opt1(&opts, "max-new")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(cfg.max_new_tokens);
+    let temperature = opt1(&opts, "temperature")
+        .map(|s| s.parse::<f64>())
+        .transpose()?
+        .unwrap_or(cfg.temperature);
+    let top_k = opt1(&opts, "top-k")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(cfg.top_k);
+    let seed = opt1(&opts, "seed")
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .unwrap_or(cfg.seed);
+    let prompt: Vec<u32> = match opt1(&opts, "prompt") {
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim().parse::<u32>().context("bad --prompt token"))
+            .collect::<Result<_>>()?,
+        None => vec![1],
+    };
+    for &t in &prompt {
+        if t as usize >= vocab {
+            bail!("prompt token {t} out of vocab {vocab}");
+        }
+    }
+    let sampling = Sampling::from_params(temperature, top_k);
+    let mut sch = Scheduler::new(InferEngine::new(model), 1, usize::MAX / 2,
+                                 sampling, seed);
+    sch.submit(Request { id: 0, prompt: prompt.clone(), max_new });
+    let t0 = std::time::Instant::now();
+    let done = sch.run_until_idle(2 * max_new + 16);
+    let dt = t0.elapsed().as_secs_f64();
+    let c = done.first().context("generation did not finish")?;
+    let toks: Vec<String> = c.tokens.iter().map(|t| t.to_string()).collect();
+    println!("prompt  ({} tokens): {:?}", c.prompt_len, prompt);
+    println!("decoded ({} tokens): {}", c.tokens.len(), toks.join(","));
+    println!(
+        "{} tokens in {:.3}s ({:.1} tok/s, {:?} sampling)",
+        c.tokens.len(), dt, c.tokens.len() as f64 / dt.max(1e-9), sampling
+    );
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &[String]) -> Result<()> {
+    let (flags, opts, _) = parse_args(args);
+    let quick = flags.iter().any(|f| f == "quick");
+    let mut cfg = load_serve_config(&opts)?;
+    if let Some(s) = opt1(&opts, "steps") {
+        cfg.bench_steps = s.parse::<usize>().context("--steps")?;
+    } else if quick {
+        cfg.bench_steps = cfg.bench_steps.min(48);
+    }
+    let batch_sizes: Vec<usize> = match opt1(&opts, "batch-sizes") {
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().context("bad --batch-sizes"))
+            .collect::<Result<_>>()?,
+        None => {
+            let hi = cfg.max_seqs.max(2);
+            vec![(hi / 2).max(1), hi]
+        }
+    };
+    if batch_sizes.is_empty() {
+        bail!("no batch sizes");
+    }
+    let model = load_infer_model(&flags, &opts, quick)?;
+    let dims = model.dims;
+    let threads = kernels::num_threads();
+    println!(
+        "serve-bench: {} layers, d={}, n_ctx={}, vocab={} | {} steps, \
+         arrival {:.2}/step, prompt {} + {} new | {} threads",
+        dims.n_layers, dims.d_model, dims.n_ctx, dims.vocab, cfg.bench_steps,
+        cfg.arrival_per_step, cfg.prompt_len, cfg.max_new_tokens, threads
+    );
+    let mut engine = InferEngine::new(model);
+    let mut runs = Vec::new();
+    for &ms in &batch_sizes {
+        let (res, back) = run_open_loop(engine, &cfg, ms, cfg.bench_steps)?;
+        println!("  {}", res.render());
+        let occ: Vec<String> = res
+            .occupancy_hist
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| format!("{k}:{c}"))
+            .collect();
+        println!("    occupancy {}", occ.join(" "));
+        runs.push(res.to_json(threads));
+        engine = back;
+    }
+    let section = obj(vec![
+        (
+            "model",
+            obj(vec![
+                ("vocab", num(dims.vocab as f64)),
+                ("d_model", num(dims.d_model as f64)),
+                ("n_layers", num(dims.n_layers as f64)),
+                ("n_heads", num(dims.n_heads as f64)),
+                ("d_ff", num(dims.d_ff as f64)),
+                ("n_ctx", num(dims.n_ctx as f64)),
+            ]),
+        ),
+        ("runs", Json::Arr(runs)),
+    ]);
+    let path = repo_root_file("BENCH_serve.json");
+    write_json_section_at(&path, "serve_bench", section)?;
+    println!("-> {} (section serve_bench)", path.display());
+    Ok(())
+}
+
+fn cmd_bench_diff(args: &[String]) -> Result<()> {
+    let (_, opts, _) = parse_args(args);
+    let threshold = opt1(&opts, "threshold")
+        .map(|s| s.parse::<f64>())
+        .transpose()?
+        .unwrap_or(15.0)
+        / 100.0;
+    let path = opt1(&opts, "file")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| repo_root_file("BENCH_kernels.json"));
+    let warnings = kernel_bench_regressions(&path, threshold)?;
+    if warnings.is_empty() {
+        println!(
+            "bench-diff: no GFLOP/s regressions > {:.0}% in {}",
+            threshold * 100.0,
+            path.display()
+        );
+    } else {
+        for w in &warnings {
+            println!("WARNING: perf regression: {w}");
+        }
+        println!(
+            "bench-diff: {} kernel(s) regressed > {:.0}% vs the previous run",
+            warnings.len(),
+            threshold * 100.0
+        );
+    }
+    Ok(())
 }
 
 /// Load config file + apply `--set section.key=value` overrides.

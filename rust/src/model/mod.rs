@@ -1,5 +1,6 @@
-//! Host-side model state: the named parameter store.
+//! Host-side model state: the named parameter store and the canonical
+//! transformer parameter layout shared with checkpoints and serving.
 
 pub mod params;
 
-pub use params::ParamStore;
+pub use params::{param_specs, ModelDims, ParamLayout, ParamStore};

@@ -1,4 +1,6 @@
-//! Named parameter store, initialized from the artifact manifest.
+//! Named parameter store, initialized from the artifact manifest, plus
+//! the canonical parameter layout ([`param_specs`]) shared by the
+//! exporter, the checkpoint format, and the serve engine.
 //!
 //! The manifest's ordered parameter list IS the positional input order of
 //! every step executable, so this store keeps tensors in a Vec aligned
@@ -6,11 +8,92 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::runtime::{Init, Manifest};
+use crate::runtime::{Init, Manifest, ModelConfig};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// The architectural dimensions a frozen model needs at inference time —
+/// the manifest's [`ModelConfig`] minus artifact bookkeeping. Serialized
+/// into checkpoints so a trained model is self-describing to the serve
+/// engine without the artifacts directory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_ctx: usize,
+}
+
+impl ModelDims {
+    pub fn from_config(c: &ModelConfig) -> ModelDims {
+        ModelDims {
+            vocab: c.vocab,
+            d_model: c.d_model,
+            n_layers: c.n_layers,
+            n_heads: c.n_heads,
+            d_ff: c.d_ff,
+            n_ctx: c.n_ctx,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.vocab == 0 || self.d_model == 0 || self.n_layers == 0
+            || self.n_heads == 0 || self.d_ff == 0 || self.n_ctx == 0
+        {
+            bail!("degenerate model dims {self:?}");
+        }
+        if self.d_model % self.n_heads != 0 {
+            bail!("d_model {} not divisible by n_heads {}", self.d_model, self.n_heads);
+        }
+        Ok(())
+    }
+}
+
+/// One entry of the canonical parameter layout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamLayout {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub sparse: bool,
+}
+
+/// The ordered parameter layout of the transformer LM, mirroring
+/// `python/compile/model.py::param_specs`: `tok_emb`, `pos_emb`, then per
+/// layer `h{i}.{ln1_s, ln1_b, w_qkv, b_qkv, w_o, b_o, ln2_s, ln2_b,
+/// ffn_w1, ffn_b1, ffn_w2, ffn_b2}` (the two `ffn_w*` are 2:4-sparse),
+/// then `lnf_s`, `lnf_b`. The LM head is tied to `tok_emb`.
+pub fn param_specs(dims: &ModelDims) -> Vec<ParamLayout> {
+    let (d, r, v) = (dims.d_model, dims.d_ff, dims.vocab);
+    let mut specs = vec![
+        ParamLayout { name: "tok_emb".into(), shape: vec![v, d], sparse: false },
+        ParamLayout { name: "pos_emb".into(), shape: vec![dims.n_ctx, d], sparse: false },
+    ];
+    for i in 0..dims.n_layers {
+        let p = format!("h{i}.");
+        let mut push = |suffix: &str, shape: Vec<usize>, sparse: bool| {
+            specs.push(ParamLayout { name: format!("{p}{suffix}"), shape, sparse });
+        };
+        push("ln1_s", vec![d], false);
+        push("ln1_b", vec![d], false);
+        push("w_qkv", vec![3 * d, d], false);
+        push("b_qkv", vec![3 * d], false);
+        push("w_o", vec![d, d], false);
+        push("b_o", vec![d], false);
+        push("ln2_s", vec![d], false);
+        push("ln2_b", vec![d], false);
+        push("ffn_w1", vec![2 * r, d], true);
+        push("ffn_b1", vec![2 * r], false);
+        push("ffn_w2", vec![d, r], true);
+        push("ffn_b2", vec![d], false);
+    }
+    specs.push(ParamLayout { name: "lnf_s".into(), shape: vec![d], sparse: false });
+    specs.push(ParamLayout { name: "lnf_b".into(), shape: vec![d], sparse: false });
+    specs
+}
 
 #[derive(Clone, Debug)]
 pub struct ParamStore {
@@ -150,6 +233,26 @@ mod tests {
         let ps = ParamStore::from_flat(&m, &flat).unwrap();
         assert_eq!(ps.get("w").unwrap().data, vec![-0.5; 8]);
         assert!(ps.global_norm() > 0.0);
+    }
+
+    #[test]
+    fn param_specs_layout() {
+        let dims = ModelDims {
+            vocab: 16, d_model: 8, n_layers: 2, n_heads: 2, d_ff: 4, n_ctx: 8,
+        };
+        dims.validate().unwrap();
+        let specs = param_specs(&dims);
+        // 2 embeddings + 12 per layer + 2 final LN
+        assert_eq!(specs.len(), 2 + 2 * 12 + 2);
+        assert_eq!(specs[0].name, "tok_emb");
+        assert_eq!(specs[0].shape, vec![16, 8]);
+        assert_eq!(specs[2].name, "h0.ln1_s");
+        let sparse: Vec<&str> = specs.iter().filter(|s| s.sparse)
+            .map(|s| s.name.as_str()).collect();
+        assert_eq!(sparse, vec!["h0.ffn_w1", "h0.ffn_w2", "h1.ffn_w1", "h1.ffn_w2"]);
+        assert_eq!(specs.last().unwrap().name, "lnf_b");
+        let bad = ModelDims { n_heads: 3, ..dims };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

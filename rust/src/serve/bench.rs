@@ -1,0 +1,268 @@
+//! Open-loop serving benchmark (`serve-bench`).
+//!
+//! Drives the continuous-batching scheduler with a synthetic Poisson
+//! request load (open loop: arrivals don't wait for completions, like
+//! real user traffic) and reports decode throughput, per-token latency
+//! percentiles, and the batch-occupancy histogram — the numbers that
+//! tell you whether continuous batching is actually filling the batch.
+//! Results append to `BENCH_serve.json` (previous run rotated to
+//! `serve_bench.prev`), one record per batch-size configuration.
+//!
+//! The run doubles as the zero-allocation proof: the engine arena is
+//! pre-warmed, so the whole measured phase must not heap-allocate a
+//! single scratch buffer ([`BenchResult::fresh_allocs`] must be 0 —
+//! `run_open_loop` fails otherwise).
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::ServeConfig;
+use crate::util::json::{num, obj, Json};
+use crate::util::rng::Rng;
+
+use super::engine::InferEngine;
+use super::generate::Sampling;
+use super::scheduler::{Request, Scheduler};
+
+/// One open-loop run's measurements.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub max_seqs: usize,
+    pub max_batch_tokens: usize,
+    pub steps: usize,
+    pub tokens: usize,
+    pub completions: usize,
+    pub elapsed_s: f64,
+    pub tokens_per_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_occupancy: f64,
+    /// hist[k] = scheduler steps that decoded k sequences
+    pub occupancy_hist: Vec<u64>,
+    /// scratch-arena heap allocations during the measured phase (MUST
+    /// be 0 — steady-state decode is allocation-free)
+    pub fresh_allocs: u64,
+    /// requests still queued/active when the drain cap hit (0 on a
+    /// fully served run; nonzero means throughput/latency describe a
+    /// truncated load — never silently)
+    pub abandoned: usize,
+}
+
+impl BenchResult {
+    pub fn to_json(&self, threads: usize) -> Json {
+        obj(vec![
+            ("max_seqs", num(self.max_seqs as f64)),
+            ("max_batch_tokens", num(self.max_batch_tokens as f64)),
+            ("steps", num(self.steps as f64)),
+            ("tokens", num(self.tokens as f64)),
+            ("completions", num(self.completions as f64)),
+            ("elapsed_s", num(self.elapsed_s)),
+            ("tokens_per_s", num(self.tokens_per_s)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p99_ms", num(self.p99_ms)),
+            ("mean_occupancy", num(self.mean_occupancy)),
+            (
+                "occupancy_hist",
+                Json::Arr(self.occupancy_hist.iter().map(|&c| num(c as f64)).collect()),
+            ),
+            ("threads", num(threads as f64)),
+            ("fresh_allocs", num(self.fresh_allocs as f64)),
+            ("abandoned", num(self.abandoned as f64)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        let drop_note = if self.abandoned > 0 {
+            format!("  [{} ABANDONED]", self.abandoned)
+        } else {
+            String::new()
+        };
+        format!(
+            "max_seqs={:<3} {:>8.1} tok/s  p50 {:>7.3} ms  p99 {:>7.3} ms  \
+             occ {:>4.2}  {} tokens / {} reqs in {:.2}s{drop_note}",
+            self.max_seqs, self.tokens_per_s, self.p50_ms, self.p99_ms,
+            self.mean_occupancy, self.tokens, self.completions, self.elapsed_s,
+        )
+    }
+}
+
+/// Deterministic Poisson draw (Knuth's product method; fine for the
+/// small rates an open-loop bench uses).
+fn poisson(rng: &mut Rng, lambda: f64) -> usize {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    let l = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.uniform() as f64;
+        if p <= l || k > 64 {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run `steps` scheduler steps under a Poisson(cfg.arrival_per_step)
+/// request load with `max_seqs` batch capacity, then drain. Returns the
+/// measurements and hands the engine back for the next configuration.
+pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
+                     steps: usize) -> Result<(BenchResult, InferEngine)> {
+    let sampling = Sampling::from_params(cfg.temperature, cfg.top_k);
+    let vocab = engine.model.dims.vocab;
+    let n_ctx = engine.model.dims.n_ctx;
+    let prompt_len = cfg.prompt_len.min(n_ctx.saturating_sub(1)).max(1);
+    let mut sch = Scheduler::new(engine, max_seqs, cfg.max_batch_tokens,
+                                 sampling, cfg.seed);
+    // Scheduler::new warmed the arena; from here on, zero allocation.
+    let fresh0 = sch.engine.scratch_counters().1;
+
+    let mut arrivals = Rng::new(cfg.seed ^ 0x0af2_11ae_5e1f_0123);
+    let mut hist = vec![0u64; max_seqs + 1];
+    let mut per_token_ms: Vec<f64> = Vec::with_capacity(steps * max_seqs);
+    let mut next_id = 0u64;
+    let mut tokens = 0usize;
+    let mut completions = 0usize;
+
+    let t0 = Instant::now();
+    let mut measured_steps = 0usize;
+    // loaded phase + drain (no new arrivals past `steps`)
+    let max_total_steps = steps.saturating_mul(20).max(steps + 1000);
+    for step in 0..max_total_steps {
+        if step < steps {
+            for _ in 0..poisson(&mut arrivals, cfg.arrival_per_step) {
+                let prompt: Vec<u32> =
+                    (0..prompt_len).map(|_| arrivals.below(vocab) as u32).collect();
+                sch.submit(Request {
+                    id: next_id,
+                    prompt,
+                    max_new: cfg.max_new_tokens,
+                });
+                next_id += 1;
+            }
+        } else if sch.is_idle() {
+            break;
+        }
+        if sch.is_idle() {
+            // idle tick under load: nothing arrived yet
+            hist[0] += 1;
+            measured_steps += 1;
+            continue;
+        }
+        let ts = Instant::now();
+        let r = sch.step();
+        let dt_ms = ts.elapsed().as_secs_f64() * 1e3;
+        hist[r.occupancy.min(max_seqs)] += 1;
+        if r.decoded > 0 {
+            let per = dt_ms / r.decoded as f64;
+            for _ in 0..r.decoded {
+                per_token_ms.push(per);
+            }
+            tokens += r.decoded;
+        }
+        completions += r.finished.len();
+        measured_steps += 1;
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+
+    let abandoned = sch.pending() + sch.n_active();
+    if abandoned > 0 {
+        eprintln!(
+            "warning: serve-bench drain cap hit with {abandoned} request(s) \
+             unfinished — reported throughput/latency describe a truncated run"
+        );
+    }
+
+    let fresh_allocs = sch.engine.scratch_counters().1 - fresh0;
+    ensure!(
+        fresh_allocs == 0,
+        "steady-state decode heap-allocated {fresh_allocs} scratch buffers \
+         (zero-allocation contract violated)"
+    );
+
+    per_token_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let occ_steps: u64 = hist.iter().sum();
+    let occ_weighted: f64 = hist
+        .iter()
+        .enumerate()
+        .map(|(k, &c)| k as f64 * c as f64)
+        .sum();
+    let result = BenchResult {
+        max_seqs,
+        max_batch_tokens: cfg.max_batch_tokens,
+        steps: measured_steps,
+        tokens,
+        completions,
+        elapsed_s,
+        tokens_per_s: if elapsed_s > 0.0 { tokens as f64 / elapsed_s } else { 0.0 },
+        p50_ms: percentile(&per_token_ms, 0.5),
+        p99_ms: percentile(&per_token_ms, 0.99),
+        mean_occupancy: if occ_steps > 0 { occ_weighted / occ_steps as f64 } else { 0.0 },
+        occupancy_hist: hist,
+        fresh_allocs,
+        abandoned,
+    };
+    Ok((result, sch.shutdown()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDims;
+    use crate::serve::engine::{synthetic_checkpoint, InferModel};
+
+    #[test]
+    fn poisson_mean_tracks_lambda() {
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| poisson(&mut rng, 0.7) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.7).abs() < 0.05, "mean={mean}");
+        assert_eq!(poisson(&mut rng, 0.0), 0);
+    }
+
+    #[test]
+    fn percentiles_of_known_data() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.5), 51.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn open_loop_smoke_is_allocation_free_and_counts_tokens() {
+        let dims = ModelDims {
+            vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 8, n_ctx: 16,
+        };
+        let engine = InferEngine::new(
+            InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 11)).unwrap(),
+        );
+        let cfg = ServeConfig {
+            max_new_tokens: 3,
+            prompt_len: 4,
+            arrival_per_step: 1.0,
+            ..ServeConfig::default()
+        };
+        let (res, _engine) = run_open_loop(engine, &cfg, 2, 24).unwrap();
+        assert_eq!(res.fresh_allocs, 0);
+        assert_eq!(res.abandoned, 0);
+        assert!(res.tokens > 0);
+        assert!(res.completions > 0);
+        assert_eq!(res.occupancy_hist.len(), 3);
+        assert!(res.tokens_per_s > 0.0);
+        assert!(res.p50_ms <= res.p99_ms);
+        assert!(!res.render().is_empty());
+        let j = res.to_json(2);
+        assert_eq!(j.get("fresh_allocs").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,553 @@
+//! Frozen inference model + batched decode engine.
+//!
+//! [`InferModel`] is the serving half of the system: a trainer
+//! checkpoint's transformer, frozen, with every FFN weight converted
+//! ONCE to compressed 2:4 form ([`FrozenFfn`]) — so each decode step's
+//! FFN forward is a `spmm_nt` on the tiled kernel backend doing q/2 MACs
+//! per output element, exactly the deployment story the paper trains
+//! toward (and the one Haziza et al. 2025 measure at inference time).
+//! No masks, no STE, no gradients, no dense master weights.
+//!
+//! [`InferEngine`] drives batched autoregressive decode over it: one
+//! [`DecodeLane`] per active sequence, per-sequence KV regions from a
+//! [`KvPool`], every temporary from the engine's [`Scratch`] arena. After
+//! [`InferEngine::warm`], a steady-state decode step performs zero heap
+//! allocation (asserted by `serve-bench` via the arena's checkout
+//! counters). The per-sequence attention runs on the kernel thread pool
+//! with the same determinism contract as the GEMM kernels: each lane's
+//! arithmetic is independent of thread count and batch composition.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Checkpoint;
+use crate::model::{param_specs, ModelDims, ParamStore};
+use crate::sparse::block::{layer_norm_into, Attention};
+use crate::sparse::ffn::FrozenFfn;
+use crate::sparse::gemm::gemm_nt_into;
+use crate::sparse::kernels::threading::MutPtr;
+use crate::sparse::kernels::{parallel_rows, Scratch};
+use crate::sparse::mask::Mask;
+use crate::sparse::transposable::transposable_mask;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::kv_cache::KvPool;
+
+/// One frozen transformer block: dense attention + compressed 2:4 FFN.
+#[derive(Clone, Debug)]
+pub struct InferBlock {
+    pub ln1_s: Tensor,
+    pub ln1_b: Tensor,
+    pub attn: Attention,
+    pub ln2_s: Tensor,
+    pub ln2_b: Tensor,
+    pub ffn: FrozenFfn,
+}
+
+/// A frozen, serve-ready model. LM head is tied to `tok_emb`.
+#[derive(Clone, Debug)]
+pub struct InferModel {
+    pub dims: ModelDims,
+    pub tok_emb: Tensor,
+    pub pos_emb: Tensor,
+    pub blocks: Vec<InferBlock>,
+    pub lnf_s: Tensor,
+    pub lnf_b: Tensor,
+}
+
+impl InferModel {
+    /// Build from a self-describing checkpoint (one saved by this
+    /// version: `param_names` + `dims` present). FFN weights are
+    /// compressed under the checkpoint's masks; if a mask is not 2:4
+    /// (e.g. the run was checkpointed in a dense phase), a transposable
+    /// 2:4 mask is re-derived from the weights by magnitude.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<InferModel> {
+        let dims = ck.dims.context(
+            "checkpoint predates serve support (no model dims in header); \
+             re-save it with this version",
+        )?;
+        if ck.param_names.is_empty() {
+            bail!("checkpoint has no parameter names; cannot map roles");
+        }
+        Self::from_named_params(dims, &ck.param_names, &ck.params, &ck.masks)
+    }
+
+    /// Build from a named parameter store + the sparse-parameter masks
+    /// (ordered like the sparse entries of [`param_specs`]).
+    pub fn from_store(dims: ModelDims, store: &ParamStore, masks: &[Mask])
+                      -> Result<InferModel> {
+        Self::from_named_params(dims, &store.names, &store.tensors, masks)
+    }
+
+    /// Core builder over borrowed (names, params) — clones each tensor
+    /// exactly once, into its place in the model.
+    fn from_named_params(dims: ModelDims, names: &[String], params: &[Tensor],
+                         masks: &[Mask]) -> Result<InferModel> {
+        dims.validate()?;
+        if names.len() != params.len() {
+            bail!("{} names vs {} params", names.len(), params.len());
+        }
+        let mut by_name: BTreeMap<&str, &Tensor> = BTreeMap::new();
+        for (n, t) in names.iter().zip(params) {
+            if by_name.insert(n.as_str(), t).is_some() {
+                bail!("duplicate parameter name {n:?}");
+            }
+        }
+        let lookup = |name: &str| -> Result<&Tensor> {
+            by_name
+                .get(name)
+                .copied()
+                .with_context(|| format!("checkpoint missing {name:?}"))
+        };
+        let specs = param_specs(&dims);
+        // shape-check everything we are about to consume
+        for spec in &specs {
+            let t = lookup(&spec.name)?;
+            if t.shape != spec.shape {
+                bail!("param {:?}: shape {:?} != expected {:?}",
+                      spec.name, t.shape, spec.shape);
+            }
+        }
+        let n_sparse = specs.iter().filter(|s| s.sparse).count();
+        if !masks.is_empty() && masks.len() != n_sparse {
+            bail!("{} masks vs {} sparse params", masks.len(), n_sparse);
+        }
+        // mask for the i-th sparse param; a provided-but-unusable mask
+        // (e.g. all-ones from a dense-phase checkpoint) falls back to
+        // magnitude re-pruning, LOUDLY — the served logits then differ
+        // from the dense model the trainer last evaluated
+        let mask_for = |idx: usize, name: &str, w: &Tensor| -> Mask {
+            match masks.get(idx) {
+                Some(m)
+                    if (m.rows, m.cols) == (w.shape[0], w.shape[1])
+                        && m.is_24_row_wise() =>
+                {
+                    m.clone()
+                }
+                Some(_) => {
+                    eprintln!(
+                        "warning: {name}: checkpoint mask is not row-wise 2:4 \
+                         (dense-phase checkpoint?); re-pruning by transposable \
+                         magnitude — served outputs will differ from the \
+                         unpruned dense model"
+                    );
+                    transposable_mask(w)
+                }
+                None => transposable_mask(w),
+            }
+        };
+        let mut blocks = Vec::with_capacity(dims.n_layers);
+        let mut sparse_idx = 0;
+        for i in 0..dims.n_layers {
+            let p = format!("h{i}.");
+            let get = |s: &str| -> Result<Tensor> {
+                Ok(lookup(&format!("{p}{s}"))?.clone())
+            };
+            let w1 = lookup(&format!("{p}ffn_w1"))?;
+            let m1 = mask_for(sparse_idx, &format!("{p}ffn_w1"), w1);
+            let w2 = lookup(&format!("{p}ffn_w2"))?;
+            let m2 = mask_for(sparse_idx + 1, &format!("{p}ffn_w2"), w2);
+            sparse_idx += 2;
+            blocks.push(InferBlock {
+                ln1_s: get("ln1_s")?,
+                ln1_b: get("ln1_b")?,
+                attn: Attention {
+                    n_heads: dims.n_heads,
+                    w_qkv: get("w_qkv")?,
+                    b_qkv: get("b_qkv")?,
+                    w_o: get("w_o")?,
+                    b_o: get("b_o")?,
+                },
+                ln2_s: get("ln2_s")?,
+                ln2_b: get("ln2_b")?,
+                ffn: FrozenFfn::from_masked(w1, &m1, get("ffn_b1")?,
+                                            w2, &m2, get("ffn_b2")?),
+            });
+        }
+        Ok(InferModel {
+            dims,
+            tok_emb: lookup("tok_emb")?.clone(),
+            pos_emb: lookup("pos_emb")?.clone(),
+            blocks,
+            lnf_s: lookup("lnf_s")?.clone(),
+            lnf_b: lookup("lnf_b")?.clone(),
+        })
+    }
+
+    /// Dense-equivalent parameter element count (reporting).
+    pub fn dense_param_elements(&self) -> usize {
+        let specs = param_specs(&self.dims);
+        specs.iter().map(|s| s.shape.iter().product::<usize>()).sum()
+    }
+
+    /// Reference path: full-context causal forward of one sequence,
+    /// returning (T, vocab) logits. The correctness tests pin the
+    /// KV-cache decode against this. Allocates freely — not a serving
+    /// path.
+    pub fn forward_full(&self, tokens: &[u32]) -> Tensor {
+        let d = self.dims.d_model;
+        let t = tokens.len();
+        assert!(t >= 1 && t <= self.dims.n_ctx, "context length {t}");
+        let mut x = Tensor::zeros(&[t, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            assert!(tok < self.dims.vocab, "token {tok} out of vocab");
+            for j in 0..d {
+                x.data[i * d + j] =
+                    self.tok_emb.data[tok * d + j] + self.pos_emb.data[i * d + j];
+            }
+        }
+        let mut scratch = Scratch::new();
+        let mut h = Tensor::zeros(&[0]);
+        let mut f = Tensor::zeros(&[0]);
+        for blk in &self.blocks {
+            layer_norm_into(&x, &blk.ln1_s, &blk.ln1_b, &mut h);
+            let (a, _) = blk.attn.forward(&h, 1, t);
+            for (o, v) in x.data.iter_mut().zip(&a.data) {
+                *o += v;
+            }
+            layer_norm_into(&x, &blk.ln2_s, &blk.ln2_b, &mut h);
+            blk.ffn.forward_into(&h, &mut f, &mut scratch);
+            for (o, v) in x.data.iter_mut().zip(&f.data) {
+                *o += v;
+            }
+        }
+        layer_norm_into(&x, &self.lnf_s, &self.lnf_b, &mut h);
+        let mut logits = Tensor::zeros(&[t, self.dims.vocab]);
+        gemm_nt_into(&h, &self.tok_emb, &mut logits);
+        logits
+    }
+}
+
+/// A synthetic "trained" checkpoint: properly named and shaped params
+/// with transposable 2:4 masks on the FFN weights. Stands in for a real
+/// training run in benches, tests, and the tier-1 serve smoke.
+pub fn synthetic_checkpoint(dims: &ModelDims, seed: u64) -> Checkpoint {
+    let specs = param_specs(dims);
+    let mut rng = Rng::new(seed);
+    let mut params = Vec::with_capacity(specs.len());
+    let mut names = Vec::with_capacity(specs.len());
+    let mut masks = Vec::new();
+    for spec in &specs {
+        let t = if spec.name.ends_with("ln1_s")
+            || spec.name.ends_with("ln2_s")
+            || spec.name.ends_with("lnf_s")
+        {
+            Tensor::ones(&spec.shape)
+        } else if spec.name.ends_with("_b")
+            || spec.name.contains(".b_")
+            || spec.name.contains("ffn_b")
+        {
+            Tensor::zeros(&spec.shape)
+        } else {
+            Tensor::normal(&spec.shape, 0.02, &mut rng)
+        };
+        if spec.sparse {
+            masks.push(transposable_mask(&t));
+        }
+        names.push(spec.name.clone());
+        params.push(t);
+    }
+    let n_params = params.len();
+    let sizes: Vec<usize> = params.iter().map(|t| t.len()).collect();
+    Checkpoint {
+        manifest_name: format!("synthetic_d{}_l{}", dims.d_model, dims.n_layers),
+        step: 0,
+        sparse_steps_since_refresh: 0,
+        refresh_count: 0,
+        mask_mode_ones: false,
+        params,
+        opt_m: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+        opt_v: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+        opt_t: vec![0; n_params],
+        masks,
+        flip_histories: Vec::new(),
+        train_rng: Rng::new(seed).state(),
+        val_rng: Rng::new(seed ^ 1).state(),
+        param_names: names,
+        dims: Some(*dims),
+    }
+}
+
+/// One active decode lane: which KV slot it owns, the token it feeds
+/// this step, and the KV offset (tokens already cached).
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeLane {
+    pub slot: usize,
+    pub token: u32,
+    pub pos: usize,
+}
+
+/// Batched decode engine: frozen model + scratch arena.
+pub struct InferEngine {
+    pub model: InferModel,
+    scratch: Scratch,
+}
+
+impl InferEngine {
+    pub fn new(model: InferModel) -> InferEngine {
+        InferEngine { model, scratch: Scratch::new() }
+    }
+
+    /// (checkouts, fresh heap allocations) of the engine arena — the
+    /// zero-allocation assertion reads these.
+    pub fn scratch_counters(&self) -> (u64, u64) {
+        (self.scratch.checkouts(), self.scratch.fresh_allocs())
+    }
+
+    /// Carve a KV pool for `slots` concurrent sequences out of the
+    /// engine arena.
+    pub fn alloc_kv(&mut self, slots: usize) -> KvPool {
+        let d = self.model.dims.d_model;
+        KvPool::new(&mut self.scratch, self.model.dims.n_layers,
+                    self.model.dims.n_ctx, d, slots)
+    }
+
+    /// Return a KV pool's storage to the engine arena.
+    pub fn release_kv(&mut self, kv: KvPool) {
+        kv.release_storage(&mut self.scratch);
+    }
+
+    /// Pre-size the arena for decode batches up to `max_lanes` so the
+    /// first full batch doesn't allocate mid-flight: checks out the
+    /// exact buffer set a decode step uses, then returns it.
+    pub fn warm(&mut self, max_lanes: usize) {
+        let dims = self.model.dims;
+        let (m, d) = (max_lanes.max(1), dims.d_model);
+        let two_r = 2 * dims.d_ff;
+        let s = &mut self.scratch;
+        let bufs = [
+            s.take(&[m, d]),               // x
+            s.take(&[m, d]),               // h
+            s.take(&[m, 3 * d]),           // qkv
+            s.take(&[m, d]),               // ctx
+            s.take(&[m, d]),               // attn_y
+            s.take(&[m, d]),               // ffn_y
+            s.take(&[m, dims.n_ctx]),      // scores
+            s.take(&[m, two_r]),           // ffn z
+            s.take(&[m, two_r / 2]),       // ffn a
+        ];
+        for b in bufs {
+            s.give(b);
+        }
+    }
+
+    /// One decode step: feed each lane's token at its KV offset and
+    /// return next-token logits, row i for lane i, in `logits` (m,
+    /// vocab). Lanes must hold distinct KV slots. Zero steady-state
+    /// allocation; per-lane results are independent of batch composition
+    /// (each lane attends only over its own KV region).
+    pub fn decode_step(&mut self, lanes: &[DecodeLane], kv: &mut KvPool,
+                       logits: &mut Tensor) {
+        assert!(!lanes.is_empty(), "decode_step with no lanes");
+        let model = &self.model;
+        let scratch = &mut self.scratch;
+        let dims = model.dims;
+        let (m, d) = (lanes.len(), dims.d_model);
+        let cap = kv.cap();
+        debug_assert_eq!(cap, dims.n_ctx);
+        for (i, lane) in lanes.iter().enumerate() {
+            assert!(lane.pos < cap, "lane at KV offset {} >= cap {cap}", lane.pos);
+            assert!((lane.token as usize) < dims.vocab, "token out of vocab");
+            assert!(lane.slot < kv.total_slots(), "lane slot out of range");
+            // distinct slots are a SAFETY requirement, not just a logic
+            // one: the parallel attention hands each lane its slot's KV
+            // region as &mut — duplicates would alias across threads
+            for other in &lanes[..i] {
+                assert_ne!(lane.slot, other.slot, "duplicate KV slot in decode batch");
+            }
+        }
+
+        // embeddings of this step's tokens at their positions
+        let mut x = scratch.take(&[m, d]);
+        for (i, lane) in lanes.iter().enumerate() {
+            let tok = lane.token as usize;
+            let te = &model.tok_emb.data[tok * d..(tok + 1) * d];
+            let pe = &model.pos_emb.data[lane.pos * d..(lane.pos + 1) * d];
+            let out = &mut x.data[i * d..(i + 1) * d];
+            for j in 0..d {
+                out[j] = te[j] + pe[j];
+            }
+        }
+
+        let mut h = scratch.take(&[m, d]);
+        let mut qkv = scratch.take(&[m, 3 * d]);
+        let mut ctx = scratch.take(&[m, d]);
+        let mut attn_y = scratch.take(&[m, d]);
+        let mut ffn_y = scratch.take(&[m, d]);
+        let mut scores = scratch.take(&[m, cap]);
+        let (layers, region) = (kv.layers(), kv.region_len());
+
+        for (layer, blk) in model.blocks.iter().enumerate() {
+            layer_norm_into(&x, &blk.ln1_s, &blk.ln1_b, &mut h);
+            blk.attn.qkv_into(&h, &mut qkv);
+            {
+                // one lane per work unit: a lane owns its KV slot region,
+                // its scores row, and its ctx row — all disjoint
+                let (k_store, v_store) = kv.storage_mut();
+                let kp = MutPtr::new(k_store);
+                let vp = MutPtr::new(v_store);
+                let ctx_ptr = MutPtr::new(&mut ctx.data);
+                let scores_ptr = MutPtr::new(&mut scores.data);
+                let qkv_ref = &qkv;
+                let attn = &blk.attn;
+                parallel_rows(m, 1, &|u0, u1| {
+                    for i in u0..u1 {
+                        let lane = lanes[i];
+                        let base = (lane.slot * layers + layer) * region;
+                        let kc = unsafe { kp.range(base, base + region) };
+                        let vc = unsafe { vp.range(base, base + region) };
+                        let srow = unsafe { scores_ptr.range(i * cap, (i + 1) * cap) };
+                        let crow = unsafe { ctx_ptr.range(i * d, (i + 1) * d) };
+                        let qrow = &qkv_ref.data[i * 3 * d..(i + 1) * 3 * d];
+                        attn.attend_cached(qrow, kc, vc, lane.pos, srow, crow);
+                    }
+                });
+            }
+            blk.attn.out_proj_into(&ctx, &mut attn_y);
+            for (o, v) in x.data.iter_mut().zip(&attn_y.data) {
+                *o += v;
+            }
+            layer_norm_into(&x, &blk.ln2_s, &blk.ln2_b, &mut h);
+            blk.ffn.forward_into(&h, &mut ffn_y, scratch);
+            for (o, v) in x.data.iter_mut().zip(&ffn_y.data) {
+                *o += v;
+            }
+        }
+
+        layer_norm_into(&x, &model.lnf_s, &model.lnf_b, &mut h);
+        logits.resize_to(&[m, dims.vocab]);
+        gemm_nt_into(&h, &model.tok_emb, logits);
+
+        scratch.give(x);
+        scratch.give(h);
+        scratch.give(qkv);
+        scratch.give(ctx);
+        scratch.give(attn_y);
+        scratch.give(ffn_y);
+        scratch.give(scores);
+    }
+
+    /// Feed a whole prompt through one sequence's KV cache (one token
+    /// per step — prefill reuses the decode path exactly, which is what
+    /// the KV-correctness tests pin). Leaves `logits` holding the
+    /// next-token distribution after the last prompt token.
+    pub fn prefill(&mut self, prompt: &[u32], slot: usize, kv: &mut KvPool,
+                   logits: &mut Tensor) {
+        assert!(!prompt.is_empty(), "empty prompt");
+        for (t, &token) in prompt.iter().enumerate() {
+            let lane = [DecodeLane { slot, token, pos: t }];
+            self.decode_step(&lane, kv, logits);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dims() -> ModelDims {
+        ModelDims { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 8, n_ctx: 12 }
+    }
+
+    #[test]
+    fn synthetic_checkpoint_roundtrips_to_model() {
+        let dims = tiny_dims();
+        let ck = synthetic_checkpoint(&dims, 7);
+        assert_eq!(ck.masks.len(), 2 * dims.n_layers);
+        let model = InferModel::from_checkpoint(&ck).unwrap();
+        assert_eq!(model.blocks.len(), 2);
+        assert_eq!(model.tok_emb.shape, vec![32, 16]);
+        // compressed FFN halves the kept values
+        let ffn = &model.blocks[0].ffn;
+        assert_eq!(ffn.w1c.values.len(), 2 * dims.d_ff * dims.d_model / 2);
+    }
+
+    #[test]
+    fn forward_full_shapes_and_determinism() {
+        let dims = tiny_dims();
+        let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 1)).unwrap();
+        let tokens = [1u32, 5, 9, 3];
+        let a = model.forward_full(&tokens);
+        let b = model.forward_full(&tokens);
+        assert_eq!(a.shape, vec![4, 32]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn decode_matches_full_context_logits() {
+        let dims = tiny_dims();
+        let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 3)).unwrap();
+        let full = model.forward_full(&[2u32, 7, 11, 4, 29]);
+        let mut engine = InferEngine::new(model);
+        let mut kv = engine.alloc_kv(1);
+        let slot = kv.acquire().unwrap();
+        let mut logits = Tensor::zeros(&[0]);
+        engine.prefill(&[2u32, 7, 11, 4, 29], slot, &mut kv, &mut logits);
+        let last = &full.data[4 * 32..5 * 32];
+        for (j, (&a, &b)) in logits.data.iter().zip(last).enumerate() {
+            assert!((a - b).abs() < 1e-5, "logit {j}: {a} vs {b}");
+        }
+        kv.release(slot);
+        engine.release_kv(kv);
+    }
+
+    #[test]
+    fn warmed_decode_is_allocation_free() {
+        let dims = tiny_dims();
+        let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 5)).unwrap();
+        let mut engine = InferEngine::new(model);
+        let mut kv = engine.alloc_kv(2);
+        engine.warm(2);
+        let (s0, s1) = (kv.acquire().unwrap(), kv.acquire().unwrap());
+        let mut logits = Tensor::zeros(&[0]);
+        // one shakedown step (logits buffer itself grows once)
+        engine.decode_step(&[DecodeLane { slot: s0, token: 1, pos: 0 }],
+                           &mut kv, &mut logits);
+        let (_, fresh) = engine.scratch_counters();
+        for t in 1..8 {
+            let lanes = [
+                DecodeLane { slot: s0, token: (t % 31) as u32, pos: t },
+                DecodeLane { slot: s1, token: (t % 13) as u32, pos: t - 1 },
+            ];
+            engine.decode_step(&lanes, &mut kv, &mut logits);
+        }
+        let (_, fresh_after) = engine.scratch_counters();
+        assert_eq!(fresh, fresh_after, "steady-state decode allocated");
+    }
+
+    #[test]
+    fn lane_results_independent_of_batch_composition() {
+        // the same (slot, token, pos) lane produces identical logits
+        // whether it decodes alone or alongside another sequence
+        let dims = tiny_dims();
+        let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 9)).unwrap();
+        let mut e1 = InferEngine::new(model.clone());
+        let mut kv1 = e1.alloc_kv(1);
+        let a1 = kv1.acquire().unwrap();
+        let mut solo = Tensor::zeros(&[0]);
+        e1.prefill(&[3u32, 8, 2], a1, &mut kv1, &mut solo);
+
+        let mut e2 = InferEngine::new(model);
+        let mut kv2 = e2.alloc_kv(2);
+        let a2 = kv2.acquire().unwrap();
+        let b2 = kv2.acquire().unwrap();
+        let mut logits = Tensor::zeros(&[0]);
+        // interleave: feed the same prompt on a2 while b2 decodes junk
+        e2.prefill(&[6u32], b2, &mut kv2, &mut logits);
+        for (t, &tok) in [3u32, 8, 2].iter().enumerate() {
+            let lanes = [
+                DecodeLane { slot: a2, token: tok, pos: t },
+                DecodeLane { slot: b2, token: (t as u32) + 1, pos: t + 1 },
+            ];
+            e2.decode_step(&lanes, &mut kv2, &mut logits);
+        }
+        let vocab = 32;
+        for j in 0..vocab {
+            let (x, y) = (solo.data[j], logits.data[j]);
+            assert!((x - y).abs() < 1e-5, "logit {j}: {x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Token sampling for autoregressive decoding.
+//!
+//! Greedy argmax (deterministic, ties broken toward the lowest token id)
+//! plus temperature/top-k sampling driven by the repo's deterministic
+//! [`Rng`] — a sequence's sample stream depends only on its own RNG
+//! state, never on batch composition, which is what makes scheduler
+//! output independent of request interleaving.
+
+use crate::util::rng::Rng;
+
+/// Decoding policy. `TopK { k: 0, .. }` samples from the full softmax.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampling {
+    /// Config-style constructor: temperature <= 0 means greedy.
+    pub fn from_params(temperature: f64, top_k: usize) -> Sampling {
+        if temperature <= 0.0 {
+            Sampling::Greedy
+        } else {
+            Sampling::TopK { k: top_k, temperature: temperature as f32 }
+        }
+    }
+}
+
+/// Argmax with ties broken toward the lowest index.
+pub fn argmax(logits: &[f32]) -> u32 {
+    debug_assert!(!logits.is_empty());
+    let mut best = 0usize;
+    let mut best_v = logits[0];
+    for (i, &v) in logits.iter().enumerate().skip(1) {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best as u32
+}
+
+/// Draw the next token from one logits row. `work` is a caller-recycled
+/// buffer (only touched on the sampling path; greedy allocates nothing).
+pub fn sample(logits: &[f32], sampling: &Sampling, rng: &mut Rng,
+              work: &mut Vec<(f32, u32)>) -> u32 {
+    match *sampling {
+        Sampling::Greedy => argmax(logits),
+        Sampling::TopK { k, temperature } => {
+            work.clear();
+            work.extend(logits.iter().enumerate().map(|(i, &l)| (l, i as u32)));
+            // descending by logit, ties toward the lower id — total order,
+            // so the candidate set is deterministic
+            work.sort_unstable_by(|a, b| {
+                b.0.partial_cmp(&a.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.cmp(&b.1))
+            });
+            let k = if k == 0 { work.len() } else { k.min(work.len()) };
+            let inv_t = 1.0 / temperature.max(1e-6);
+            let m = work[0].0;
+            let mut z = 0f64;
+            for c in work[..k].iter_mut() {
+                c.0 = ((c.0 - m) * inv_t).exp();
+                z += c.0 as f64;
+            }
+            let u = rng.uniform() as f64 * z;
+            let mut acc = 0f64;
+            for c in work[..k].iter() {
+                acc += c.0 as f64;
+                if u < acc {
+                    return c.1;
+                }
+            }
+            work[k - 1].1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_breaks_ties_low() {
+        assert_eq!(argmax(&[0.0, 2.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn greedy_ignores_rng() {
+        let logits = [0.1, 0.9, -0.5];
+        let mut rng = Rng::new(0);
+        let mut work = Vec::new();
+        let a = sample(&logits, &Sampling::Greedy, &mut rng, &mut work);
+        let b = sample(&logits, &Sampling::Greedy, &mut rng, &mut work);
+        assert_eq!((a, b), (1, 1));
+        assert!(work.is_empty());
+    }
+
+    #[test]
+    fn topk_restricts_support_and_is_deterministic_in_rng() {
+        let logits = [0.0, 5.0, 4.0, -3.0, 1.0];
+        let s = Sampling::TopK { k: 2, temperature: 1.0 };
+        let mut work = Vec::new();
+        let mut counts = [0usize; 5];
+        let mut rng = Rng::new(7);
+        for _ in 0..500 {
+            counts[sample(&logits, &s, &mut rng, &mut work) as usize] += 1;
+        }
+        assert_eq!(counts[0] + counts[3] + counts[4], 0, "{counts:?}");
+        assert!(counts[1] > counts[2], "{counts:?}");
+        // same seed -> same stream
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        for _ in 0..32 {
+            assert_eq!(sample(&logits, &s, &mut r1, &mut work),
+                       sample(&logits, &s, &mut r2, &mut work));
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let logits = [0.0, 2.0, 1.0];
+        let s = Sampling::TopK { k: 0, temperature: 1e-3 };
+        let mut work = Vec::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..64 {
+            assert_eq!(sample(&logits, &s, &mut rng, &mut work), 1);
+        }
+    }
+
+    #[test]
+    fn from_params_maps_temperature() {
+        assert_eq!(Sampling::from_params(0.0, 5), Sampling::Greedy);
+        assert_eq!(Sampling::from_params(-1.0, 0), Sampling::Greedy);
+        assert_eq!(Sampling::from_params(0.8, 40),
+                   Sampling::TopK { k: 40, temperature: 0.8 });
+    }
+}

@@ -1,0 +1,181 @@
+//! Slot-based K/V cache pool for batched autoregressive decode.
+//!
+//! All K/V storage for `slots` concurrent sequences is preallocated as
+//! two flat buffers carved from the engine's [`Scratch`] arena, so
+//! sequences joining and leaving the batch never touch the heap: a
+//! sequence *acquires* a slot index on admission and *releases* it on
+//! completion (free-list recycling, like the arena itself). Layout is
+//! slot-major:
+//!
+//! ```text
+//!   k[((slot * layers + layer) * cap + t) * d + j]
+//! ```
+//!
+//! so one (slot, layer) pair owns a contiguous `cap * d` region — the
+//! unit the decode loop hands to `Attention::attend_cached`, and the
+//! disjointness unit for the parallel per-sequence attention.
+
+use crate::sparse::kernels::Scratch;
+
+pub struct KvPool {
+    layers: usize,
+    /// rows per (slot, layer) region — the model's n_ctx
+    cap: usize,
+    d: usize,
+    slots: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    free: Vec<usize>,
+    /// lifetime counters: (acquires, releases)
+    acquires: u64,
+    releases: u64,
+}
+
+impl KvPool {
+    /// Carve a pool for `slots` sequences out of `scratch`. Return the
+    /// storage with [`KvPool::release_storage`] when serving stops.
+    pub fn new(scratch: &mut Scratch, layers: usize, cap: usize, d: usize,
+               slots: usize) -> KvPool {
+        let n = slots * layers * cap * d;
+        let k = scratch.take_vec(n);
+        let v = scratch.take_vec(n);
+        KvPool {
+            layers,
+            cap,
+            d,
+            slots,
+            k,
+            v,
+            free: (0..slots).rev().collect(),
+            acquires: 0,
+            releases: 0,
+        }
+    }
+
+    /// Hand the K/V storage back to the arena it came from.
+    pub fn release_storage(self, scratch: &mut Scratch) {
+        scratch.give_vec(self.k);
+        scratch.give_vec(self.v);
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// KV rows per (slot, layer) region.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn slots_in_use(&self) -> usize {
+        self.slots - self.free.len()
+    }
+
+    /// (acquires, releases) since construction.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.acquires, self.releases)
+    }
+
+    /// Claim a free slot, or None when the pool is fully occupied.
+    pub fn acquire(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.acquires += 1;
+        Some(slot)
+    }
+
+    /// Return a slot to the free list. The region's stale contents are
+    /// harmless: decode positions grow from 0, overwriting before reading.
+    pub fn release(&mut self, slot: usize) {
+        debug_assert!(slot < self.slots);
+        debug_assert!(!self.free.contains(&slot), "double release of slot {slot}");
+        self.releases += 1;
+        self.free.push(slot);
+    }
+
+    /// Flat offset of a (slot, layer) region's first element.
+    pub fn region_base(&self, slot: usize, layer: usize) -> usize {
+        debug_assert!(slot < self.slots && layer < self.layers);
+        (slot * self.layers + layer) * self.cap * self.d
+    }
+
+    /// Length of one (slot, layer) region.
+    pub fn region_len(&self) -> usize {
+        self.cap * self.d
+    }
+
+    /// Both storage buffers at once (the decode loop wraps these in
+    /// `MutPtr`s and hands disjoint regions to the pool workers).
+    pub fn storage_mut(&mut self) -> (&mut [f32], &mut [f32]) {
+        (&mut self.k, &mut self.v)
+    }
+
+    /// K/V region of one (slot, layer) pair (single-sequence paths).
+    pub fn region_mut(&mut self, slot: usize, layer: usize)
+                      -> (&mut [f32], &mut [f32]) {
+        let base = self.region_base(slot, layer);
+        let len = self.region_len();
+        (&mut self.k[base..base + len], &mut self.v[base..base + len])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_recycles_slots() {
+        let mut s = Scratch::new();
+        let mut kv = KvPool::new(&mut s, 2, 8, 4, 3);
+        assert_eq!(kv.total_slots(), 3);
+        let a = kv.acquire().unwrap();
+        let b = kv.acquire().unwrap();
+        let c = kv.acquire().unwrap();
+        assert_eq!(kv.acquire(), None);
+        assert_eq!(kv.slots_in_use(), 3);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        kv.release(b);
+        assert_eq!(kv.acquire(), Some(b));
+        assert_eq!(kv.counters(), (4, 1));
+        kv.release_storage(&mut s);
+        assert_eq!(s.pooled(), 2);
+    }
+
+    #[test]
+    fn regions_are_disjoint_and_cover_storage() {
+        let mut s = Scratch::new();
+        let (layers, cap, d, slots) = (3, 4, 2, 2);
+        let mut kv = KvPool::new(&mut s, layers, cap, d, slots);
+        let len = kv.region_len();
+        let mut seen = vec![false; slots * layers * cap * d];
+        for slot in 0..slots {
+            for layer in 0..layers {
+                let base = kv.region_base(slot, layer);
+                for o in base..base + len {
+                    assert!(!seen[o], "overlap at {o}");
+                    seen[o] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+        // region_mut round-trips a write
+        {
+            let (k, v) = kv.region_mut(1, 2);
+            k[0] = 7.0;
+            v[len - 1] = -7.0;
+        }
+        let (k, v) = kv.storage_mut();
+        let base = (1 * layers + 2) * cap * d;
+        assert_eq!(k[base], 7.0);
+        assert_eq!(v[base + cap * d - 1], -7.0);
+        kv.release_storage(&mut s);
+    }
+}

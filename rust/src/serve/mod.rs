@@ -1,0 +1,27 @@
+//! Sparse inference engine: compressed-weight serving.
+//!
+//! The serving half of the system (the trainer being the other): a
+//! frozen [`InferModel`] keeps every FFN weight permanently in
+//! compressed 2:4 form so decode-time FFN forwards run through the tiled
+//! `spmm_nt` kernels, a slot-based [`KvPool`] holds per-sequence K/V in
+//! arena-carved storage, and a continuous-batching [`Scheduler`] admits,
+//! decodes, and retires requests at step granularity on the persistent
+//! kernel thread pool. See the crate docs for the `[serve]` config table
+//! and the `generate` / `serve-bench` CLI subcommands.
+//!
+//! Module map: [`engine`] (frozen model + batched decode), [`kv_cache`]
+//! (KV slot pool), [`scheduler`] (continuous batching), [`generate`]
+//! (greedy / temperature / top-k sampling), [`bench`] (open-loop load
+//! harness behind `serve-bench`).
+
+pub mod bench;
+pub mod engine;
+pub mod generate;
+pub mod kv_cache;
+pub mod scheduler;
+
+pub use bench::{run_open_loop, BenchResult};
+pub use engine::{synthetic_checkpoint, DecodeLane, InferEngine, InferModel};
+pub use generate::{argmax, sample, Sampling};
+pub use kv_cache::KvPool;
+pub use scheduler::{Completion, Request, Scheduler, StepReport};

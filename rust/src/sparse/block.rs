@@ -6,7 +6,9 @@
 //! the accelerated part, everything else ("Others") is shared.
 
 use super::ffn::{add_bias, col_sum, DenseFfn, FfnCache, FfnGrads, SparseFfn};
-use super::gemm::{gemm_nn, gemm_nt, gemm_tn};
+use super::gemm::{gemm_nn, gemm_nt, gemm_nt_into, gemm_tn};
+use super::kernels::threading::MutPtr;
+use super::kernels::{parallel_rows, with_thread_scratch};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -30,6 +32,23 @@ pub fn layer_norm(x: &Tensor, scale: &Tensor, bias: &Tensor)
         }
     }
     (y, means, rstds)
+}
+
+/// Inference-only LayerNorm: no (mean, rstd) cache, output into a
+/// caller-owned buffer. Same arithmetic order as [`layer_norm`].
+pub fn layer_norm_into(x: &Tensor, scale: &Tensor, bias: &Tensor, y: &mut Tensor) {
+    let (p, c) = x.dims2();
+    y.resize_to(&[p, c]);
+    for i in 0..p {
+        let row = &x.data[i * c..(i + 1) * c];
+        let mu: f32 = row.iter().sum::<f32>() / c as f32;
+        let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / c as f32;
+        let rstd = 1.0 / (var + 1e-5).sqrt();
+        let out = &mut y.data[i * c..(i + 1) * c];
+        for j in 0..c {
+            out[j] = (row[j] - mu) * rstd * scale.data[j] + bias.data[j];
+        }
+    }
 }
 
 /// Backward of layer_norm. Returns (dx, dscale, dbias).
@@ -76,9 +95,26 @@ pub struct Attention {
 }
 
 pub struct AttnCache {
-    qkv: Tensor,        // (p, 3d)
-    probs: Vec<Tensor>, // per (batch, head): (n, n)
-    ctx: Tensor,        // (p, d) pre-out-proj
+    qkv: Tensor,  // (p, 3d)
+    /// causal softmax probabilities, row bh = flattened (n, n) score
+    /// matrix of (batch, head) pair bh — one tensor so the (batch, head)
+    /// work units own disjoint row blocks in the parallel loops
+    probs: Tensor, // (batch*heads, n*n)
+    ctx: Tensor,  // (p, d) pre-out-proj
+}
+
+impl AttnCache {
+    /// Probability block of (batch, head) pair `bh` as an (n, n) row-major
+    /// slice (tests and diagnostics).
+    pub fn probs_of(&self, bh: usize) -> &[f32] {
+        let (_, nn) = self.probs.dims2();
+        &self.probs.data[bh * nn..(bh + 1) * nn]
+    }
+
+    /// Number of (batch, head) probability blocks.
+    pub fn n_prob_blocks(&self) -> usize {
+        self.probs.dims2().0
+    }
 }
 
 impl Attention {
@@ -93,6 +129,12 @@ impl Attention {
     }
 
     /// x: (batch*n, d) with each consecutive n rows one sequence.
+    ///
+    /// The score/softmax/context loops run on the kernel thread pool, one
+    /// (batch, head) pair per work unit: a unit owns probability rows
+    /// `bh*n..` and the `head*hd..` column slice of `ctx`, so all writes
+    /// are disjoint and per-unit arithmetic is identical whatever the
+    /// thread count (same determinism contract as the GEMM kernels).
     pub fn forward(&self, x: &Tensor, batch: usize, n: usize) -> (Tensor, AttnCache) {
         let (p, d) = x.dims2();
         assert_eq!(p, batch * n);
@@ -101,55 +143,60 @@ impl Attention {
         let mut qkv = gemm_nt(x, &self.w_qkv);
         add_bias(&mut qkv, &self.b_qkv);
         let mut ctx = Tensor::zeros(&[p, d]);
-        let mut probs = Vec::with_capacity(batch * h);
+        let mut probs = Tensor::zeros(&[batch * h, n * n]);
         let scale = 1.0 / (hd as f32).sqrt();
-        for b in 0..batch {
-            for head in 0..h {
-                // scores (n, n), causal
-                let mut s = Tensor::zeros(&[n, n]);
-                for i in 0..n {
-                    let qi = &qkv.data[(b * n + i) * 3 * d + head * hd
-                        ..(b * n + i) * 3 * d + head * hd + hd];
-                    for j in 0..=i {
-                        let kj = &qkv.data[(b * n + j) * 3 * d + d + head * hd
-                            ..(b * n + j) * 3 * d + d + head * hd + hd];
-                        s.data[i * n + j] = super::gemm::dot(qi, kj) * scale;
-                    }
-                }
-                // causal softmax row-wise
-                for i in 0..n {
-                    let row = &mut s.data[i * n..i * n + n];
-                    let m = row[..=i].iter().cloned().fold(f32::MIN, f32::max);
-                    let mut z = 0f32;
-                    for j in 0..=i {
-                        row[j] = (row[j] - m).exp();
-                        z += row[j];
-                    }
-                    for j in 0..=i {
-                        row[j] /= z;
-                    }
-                    for j in i + 1..n {
-                        row[j] = 0.0;
-                    }
-                }
-                // ctx = P V
-                for i in 0..n {
-                    let out = &mut ctx.data[(b * n + i) * d + head * hd
-                        ..(b * n + i) * d + head * hd + hd];
-                    for j in 0..=i {
-                        let pij = s.data[i * n + j];
-                        if pij == 0.0 {
-                            continue;
-                        }
-                        let vj = &qkv.data[(b * n + j) * 3 * d + 2 * d + head * hd
-                            ..(b * n + j) * 3 * d + 2 * d + head * hd + hd];
-                        for k in 0..hd {
-                            out[k] += pij * vj[k];
+        {
+            let ctx_ptr = MutPtr::new(&mut ctx.data);
+            let probs_ptr = MutPtr::new(&mut probs.data);
+            let qkv_ref = &qkv;
+            parallel_rows(batch * h, 1, &|u0, u1| {
+                for bh in u0..u1 {
+                    let (b, head) = (bh / h, bh % h);
+                    let s = unsafe { probs_ptr.range(bh * n * n, (bh + 1) * n * n) };
+                    // scores (n, n), causal
+                    for i in 0..n {
+                        let qi = &qkv_ref.data[(b * n + i) * 3 * d + head * hd
+                            ..(b * n + i) * 3 * d + head * hd + hd];
+                        for j in 0..=i {
+                            let kj = &qkv_ref.data[(b * n + j) * 3 * d + d + head * hd
+                                ..(b * n + j) * 3 * d + d + head * hd + hd];
+                            s[i * n + j] = super::gemm::dot(qi, kj) * scale;
                         }
                     }
+                    // causal softmax row-wise
+                    for i in 0..n {
+                        let row = &mut s[i * n..i * n + n];
+                        let m = row[..=i].iter().cloned().fold(f32::MIN, f32::max);
+                        let mut z = 0f32;
+                        for j in 0..=i {
+                            row[j] = (row[j] - m).exp();
+                            z += row[j];
+                        }
+                        for j in 0..=i {
+                            row[j] /= z;
+                        }
+                        for j in i + 1..n {
+                            row[j] = 0.0;
+                        }
+                    }
+                    // ctx = P V (head's column slice of row b*n+i)
+                    for i in 0..n {
+                        let base = (b * n + i) * d + head * hd;
+                        let out = unsafe { ctx_ptr.range(base, base + hd) };
+                        for j in 0..=i {
+                            let pij = s[i * n + j];
+                            if pij == 0.0 {
+                                continue;
+                            }
+                            let vj = &qkv_ref.data[(b * n + j) * 3 * d + 2 * d + head * hd
+                                ..(b * n + j) * 3 * d + 2 * d + head * hd + hd];
+                            for k in 0..hd {
+                                out[k] += pij * vj[k];
+                            }
+                        }
+                    }
                 }
-                probs.push(s);
-            }
+            });
         }
         let mut y = gemm_nt(&ctx, &self.w_o);
         add_bias(&mut y, &self.b_o);
@@ -168,57 +215,147 @@ impl Attention {
         let db_o = col_sum(dy);
         let dctx = gemm_nn(dy, &self.w_o);
         let mut dqkv = Tensor::zeros(&[p, 3 * d]);
-        for b in 0..batch {
-            for head in 0..h {
-                let probs = &cache.probs[b * h + head];
-                // dP = dctx V^T ; dV = P^T dctx
-                let mut dp = Tensor::zeros(&[n, n]);
-                for i in 0..n {
-                    let dci = &dctx.data[(b * n + i) * d + head * hd
-                        ..(b * n + i) * d + head * hd + hd];
-                    for j in 0..=i {
-                        let vj = &cache.qkv.data[(b * n + j) * 3 * d + 2 * d + head * hd
-                            ..(b * n + j) * 3 * d + 2 * d + head * hd + hd];
-                        dp.data[i * n + j] = super::gemm::dot(dci, vj);
-                        // dV_j += P_ij * dctx_i
-                        let pij = probs.data[i * n + j];
-                        if pij != 0.0 {
-                            let dvj = &mut dqkv.data[(b * n + j) * 3 * d + 2 * d + head * hd
-                                ..(b * n + j) * 3 * d + 2 * d + head * hd + hd];
-                            for k in 0..hd {
-                                dvj[k] += pij * dci[k];
+        {
+            // Same (batch, head) ownership as forward: every dqkv write of
+            // unit bh targets rows b*n.. columns head*hd.. of one of the
+            // q/k/v thirds — disjoint across units, deterministic across
+            // thread counts. dp comes from the worker's thread-local
+            // arena, so repeated backwards allocate nothing.
+            let dqkv_ptr = MutPtr::new(&mut dqkv.data);
+            let (qkv_ref, probs_ref, dctx_ref) = (&cache.qkv, &cache.probs, &dctx);
+            parallel_rows(batch * h, 1, &|u0, u1| {
+                with_thread_scratch(|ts| {
+                    let mut dp = ts.take(&[n, n]);
+                    for bh in u0..u1 {
+                        let (b, head) = (bh / h, bh % h);
+                        let probs = &probs_ref.data[bh * n * n..(bh + 1) * n * n];
+                        // dP = dctx V^T ; dV = P^T dctx
+                        for i in 0..n {
+                            let dci = &dctx_ref.data[(b * n + i) * d + head * hd
+                                ..(b * n + i) * d + head * hd + hd];
+                            for j in 0..=i {
+                                let vj = &qkv_ref.data[(b * n + j) * 3 * d + 2 * d + head * hd
+                                    ..(b * n + j) * 3 * d + 2 * d + head * hd + hd];
+                                dp.data[i * n + j] = super::gemm::dot(dci, vj);
+                                // dV_j += P_ij * dctx_i
+                                let pij = probs[i * n + j];
+                                if pij != 0.0 {
+                                    let vbase = (b * n + j) * 3 * d + 2 * d + head * hd;
+                                    let dvj = unsafe { dqkv_ptr.range(vbase, vbase + hd) };
+                                    for k in 0..hd {
+                                        dvj[k] += pij * dci[k];
+                                    }
+                                }
+                            }
+                        }
+                        // softmax backward: dS = P ⊙ (dP - rowsum(dP ⊙ P))
+                        for i in 0..n {
+                            let mut dot = 0f32;
+                            for j in 0..=i {
+                                dot += dp.data[i * n + j] * probs[i * n + j];
+                            }
+                            for j in 0..=i {
+                                let ds = probs[i * n + j] * (dp.data[i * n + j] - dot) * scale;
+                                // dQ_i += dS_ij K_j ; dK_j += dS_ij Q_i
+                                if ds == 0.0 {
+                                    continue;
+                                }
+                                let (qi_base, kj_base) = ((b * n + i) * 3 * d + head * hd,
+                                                          (b * n + j) * 3 * d + d + head * hd);
+                                // q and k thirds never overlap, so the two
+                                // ranges are disjoint even when i == j
+                                let dqi = unsafe { dqkv_ptr.range(qi_base, qi_base + hd) };
+                                let dkj = unsafe { dqkv_ptr.range(kj_base, kj_base + hd) };
+                                for k in 0..hd {
+                                    let qv = qkv_ref.data[qi_base + k];
+                                    let kv = qkv_ref.data[kj_base + k];
+                                    dqi[k] += ds * kv;
+                                    dkj[k] += ds * qv;
+                                }
                             }
                         }
                     }
-                }
-                // softmax backward: dS = P ⊙ (dP - rowsum(dP ⊙ P))
-                for i in 0..n {
-                    let mut dot = 0f32;
-                    for j in 0..=i {
-                        dot += dp.data[i * n + j] * probs.data[i * n + j];
-                    }
-                    for j in 0..=i {
-                        let ds = probs.data[i * n + j] * (dp.data[i * n + j] - dot) * scale;
-                        // dQ_i += dS_ij K_j ; dK_j += dS_ij Q_i
-                        if ds == 0.0 {
-                            continue;
-                        }
-                        let (qi_base, kj_base) = ((b * n + i) * 3 * d + head * hd,
-                                                  (b * n + j) * 3 * d + d + head * hd);
-                        for k in 0..hd {
-                            let qv = cache.qkv.data[qi_base + k];
-                            let kv = cache.qkv.data[kj_base + k];
-                            dqkv.data[qi_base + k] += ds * kv;
-                            dqkv.data[kj_base + k] += ds * qv;
-                        }
-                    }
-                }
-            }
+                    ts.give(dp);
+                });
+            });
         }
         let dw_qkv = gemm_tn(&dqkv, x);
         let db_qkv = col_sum(&dqkv);
         let dx = gemm_nn(&dqkv, &self.w_qkv);
         (dx, dw_qkv, db_qkv, dw_o, db_o)
+    }
+
+    // --- inference-only entry points (serve engine) ----------------------
+    //
+    // Decode splits the attention forward into three pieces so the engine
+    // can batch the GEMMs across sequences while each sequence attends
+    // against its own KV cache: qkv_into (batched), attend_cached (per
+    // sequence, KV offset), out_proj_into (batched). None of them touch
+    // training caches or gradients.
+
+    /// Batched QKV projection: `x` (m, d) -> `qkv` (m, 3d). Row i belongs
+    /// to sequence i of the decode batch.
+    pub fn qkv_into(&self, x: &Tensor, qkv: &mut Tensor) {
+        let (m, _) = x.dims2();
+        let (three_d, _) = self.w_qkv.dims2();
+        qkv.resize_to(&[m, three_d]);
+        gemm_nt_into(x, &self.w_qkv, qkv);
+        add_bias(qkv, &self.b_qkv);
+    }
+
+    /// One sequence's decode step at KV offset `pos`: append this token's
+    /// K/V at row `pos` of the (cap, d) row-major caches and attend
+    /// causally over rows `0..=pos`. `qkv_row` is one row of
+    /// [`Attention::qkv_into`]'s output; `scores` needs >= pos+1 slots;
+    /// `ctx_row` (d) receives the pre-out-projection context. Softmax
+    /// arithmetic matches [`Attention::forward`] operation for operation.
+    pub fn attend_cached(&self, qkv_row: &[f32], k_cache: &mut [f32],
+                         v_cache: &mut [f32], pos: usize,
+                         scores: &mut [f32], ctx_row: &mut [f32]) {
+        let (d, _) = self.w_o.dims2();
+        let h = self.n_heads;
+        let hd = d / h;
+        debug_assert_eq!(qkv_row.len(), 3 * d);
+        debug_assert!((pos + 1) * d <= k_cache.len(), "KV cache overflow");
+        debug_assert_eq!(ctx_row.len(), d);
+        k_cache[pos * d..(pos + 1) * d].copy_from_slice(&qkv_row[d..2 * d]);
+        v_cache[pos * d..(pos + 1) * d].copy_from_slice(&qkv_row[2 * d..3 * d]);
+        let scale = 1.0 / (hd as f32).sqrt();
+        for head in 0..h {
+            let q = &qkv_row[head * hd..head * hd + hd];
+            let s = &mut scores[..pos + 1];
+            for (t, st) in s.iter_mut().enumerate() {
+                let kt = &k_cache[t * d + head * hd..t * d + head * hd + hd];
+                *st = super::gemm::dot(q, kt) * scale;
+            }
+            let m = s.iter().cloned().fold(f32::MIN, f32::max);
+            let mut z = 0f32;
+            for st in s.iter_mut() {
+                *st = (*st - m).exp();
+                z += *st;
+            }
+            for st in s.iter_mut() {
+                *st /= z;
+            }
+            let out = &mut ctx_row[head * hd..head * hd + hd];
+            out.fill(0.0);
+            for (t, &pt) in s.iter().enumerate() {
+                let vt = &v_cache[t * d + head * hd..t * d + head * hd + hd];
+                for k in 0..hd {
+                    out[k] += pt * vt[k];
+                }
+            }
+        }
+    }
+
+    /// Batched output projection of the decode contexts:
+    /// `y = ctx W_o^T + b_o`, shapes (m, d) -> (m, d).
+    pub fn out_proj_into(&self, ctx: &Tensor, y: &mut Tensor) {
+        let (m, _) = ctx.dims2();
+        let (d, _) = self.w_o.dims2();
+        y.resize_to(&[m, d]);
+        gemm_nt_into(ctx, &self.w_o, y);
+        add_bias(y, &self.b_o);
     }
 }
 
@@ -382,10 +519,55 @@ mod tests {
         let attn = Attention::new(8, 2, &mut rng);
         let x = rand(&[6, 8], 7);
         let (_, cache) = attn.forward(&x, 1, 6);
-        for p in &cache.probs {
+        assert_eq!(cache.n_prob_blocks(), 2);
+        for bh in 0..cache.n_prob_blocks() {
+            let p = cache.probs_of(bh);
             for i in 0..6 {
-                let s: f32 = p.data[i * 6..(i + 1) * 6].iter().sum();
+                let s: f32 = p[i * 6..(i + 1) * 6].iter().sum();
                 assert!((s - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_bitwise_invariant_in_thread_count() {
+        use crate::sparse::kernels::set_num_threads;
+        let mut rng = Rng::new(20);
+        let attn = Attention::new(32, 4, &mut rng);
+        let x = rand(&[2 * 16, 32], 21);
+        let prev = crate::sparse::kernels::num_threads();
+        set_num_threads(1);
+        let (y1, _) = attn.forward(&x, 2, 16);
+        set_num_threads(4);
+        let (y4, _) = attn.forward(&x, 2, 16);
+        set_num_threads(prev);
+        assert_eq!(y1, y4, "attention must be bitwise thread-count invariant");
+    }
+
+    #[test]
+    fn attend_cached_matches_full_forward() {
+        // incremental decode through the KV cache reproduces the full
+        // causal forward's last-row output
+        let (d, h, n) = (16, 2, 5);
+        let mut rng = Rng::new(30);
+        let attn = Attention::new(d, h, &mut rng);
+        let x = rand(&[n, d], 31);
+        let (y_full, _) = attn.forward(&x, 1, n);
+        let mut k_cache = vec![0f32; n * d];
+        let mut v_cache = vec![0f32; n * d];
+        let mut scores = vec![0f32; n];
+        let mut ctx = Tensor::zeros(&[1, d]);
+        let mut qkv = Tensor::zeros(&[0]);
+        let mut y = Tensor::zeros(&[0]);
+        for t in 0..n {
+            let xt = Tensor::from_vec(&[1, d], x.data[t * d..(t + 1) * d].to_vec());
+            attn.qkv_into(&xt, &mut qkv);
+            attn.attend_cached(&qkv.data, &mut k_cache, &mut v_cache, t,
+                               &mut scores, &mut ctx.data);
+            attn.out_proj_into(&ctx, &mut y);
+            for j in 0..d {
+                assert!((y.data[j] - y_full.data[t * d + j]).abs() < 1e-5,
+                        "t={t} j={j}: {} vs {}", y.data[j], y_full.data[t * d + j]);
             }
         }
     }

@@ -297,6 +297,68 @@ impl SparseFfn {
     }
 }
 
+/// Inference-only FFN: weights live EXCLUSIVELY in compressed 2:4 form.
+///
+/// This is the serving counterpart of [`SparseFfn`]: no dense master
+/// weights, no masks, no transposed copies for the backward pass — just
+/// the two compressed operands the forward spMMs consume, at half the
+/// dense footprint (plus 2-bit metadata). Built once from a trained
+/// checkpoint (or a live [`SparseFfn`]) and then immutable.
+#[derive(Clone, Debug)]
+pub struct FrozenFfn {
+    pub w1c: Compressed24,
+    pub b1: Tensor,
+    pub w2c: Compressed24,
+    pub b2: Tensor,
+}
+
+impl FrozenFfn {
+    /// Compress dense weights under their 2:4 masks (checkpoint loading).
+    pub fn from_masked(w1: &Tensor, m1: &Mask, b1: Tensor,
+                       w2: &Tensor, m2: &Mask, b2: Tensor) -> FrozenFfn {
+        FrozenFfn {
+            w1c: Compressed24::from_masked(w1, m1),
+            b1,
+            w2c: Compressed24::from_masked(w2, m2),
+            b2,
+        }
+    }
+
+    /// Freeze a training-time [`SparseFfn`] (drops everything backward
+    /// needs, keeps the forward operands).
+    pub fn from_sparse(sf: &SparseFfn) -> FrozenFfn {
+        FrozenFfn {
+            w1c: sf.w1c.clone(),
+            b1: sf.dense.b1.clone(),
+            w2c: sf.w2c.clone(),
+            b2: sf.dense.b2.clone(),
+        }
+    }
+
+    /// (d_model, d_ff) this FFN was built for.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.w1c.cols, self.w2c.cols)
+    }
+
+    /// Inference forward through the compressed operands. Identical
+    /// arithmetic to [`SparseFfn::forward_scratch`], but every temporary
+    /// comes from `scratch` and nothing is cached — decode steps in the
+    /// steady state allocate nothing.
+    pub fn forward_into(&self, x: &Tensor, y: &mut Tensor, scratch: &mut Scratch) {
+        let (p, _) = x.dims2();
+        let mut z = scratch.take(&[p, self.w1c.rows]);
+        spmm_nt_into(x, &self.w1c, &mut z);
+        add_bias(&mut z, &self.b1);
+        let mut a = scratch.take(&[p, self.w1c.rows / 2]);
+        geglu_row_major_into(&z, &mut a);
+        y.resize_to(&[p, self.w2c.rows]);
+        spmm_nt_into(&a, &self.w2c, y);
+        add_bias(y, &self.b2);
+        scratch.give(z);
+        scratch.give(a);
+    }
+}
+
 /// Compress a tensor that is ALREADY <=2-nonzero per group of four (e.g.
 /// an MVUE output) without re-ranking magnitudes.
 pub fn compress_sparse24(t: &Tensor) -> Compressed24 {
@@ -486,6 +548,30 @@ mod tests {
         assert!(sf.m1.is_transposable());
         // compressed transposes track the update too
         assert_eq!(sf.w1ct.to_dense(), sf.m1t.apply(&sf.dense.w1.t()));
+    }
+
+    #[test]
+    fn frozen_ffn_matches_sparse_forward_and_stops_allocating() {
+        let mut rng = Rng::new(20);
+        let sf = SparseFfn::new(16, 8, &mut rng);
+        let ff = FrozenFfn::from_sparse(&sf);
+        assert_eq!(ff.dims(), (16, 8));
+        let x = rand(&[8, 16], 21);
+        let (y_ref, _) = sf.forward(&x);
+        let mut y = Tensor::zeros(&[0]);
+        let mut s = Scratch::new();
+        ff.forward_into(&x, &mut y, &mut s);
+        assert_eq!(y, y_ref);
+        let fresh = s.fresh_allocs();
+        ff.forward_into(&x, &mut y, &mut s);
+        assert_eq!(y, y_ref);
+        assert_eq!(s.fresh_allocs(), fresh, "steady-state forward allocated");
+        // from_masked agrees with the training-side compression
+        let ff2 = FrozenFfn::from_masked(&sf.dense.w1, &sf.m1, sf.dense.b1.clone(),
+                                         &sf.dense.w2, &sf.m2, sf.dense.b2.clone());
+        let mut y2 = Tensor::zeros(&[0]);
+        ff2.forward_into(&x, &mut y2, &mut s);
+        assert_eq!(y2, y_ref);
     }
 
     #[test]

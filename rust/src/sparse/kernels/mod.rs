@@ -42,7 +42,7 @@ pub mod tiled;
 use std::sync::atomic::{AtomicU8, Ordering};
 
 pub use scratch::{with_thread_scratch, Scratch};
-pub use threading::{num_threads, parallel_chunks, set_num_threads};
+pub use threading::{num_threads, parallel_chunks, parallel_rows, set_num_threads};
 
 use crate::sparse::spmm::Compressed24;
 use crate::tensor::Tensor;

@@ -27,6 +27,12 @@ pub struct Scratch {
     shapes: Vec<Vec<usize>>,
     /// Recycled compressed-operand buffers (MVUE'd gradients).
     comps: Vec<Compressed24>,
+    /// Total checkouts served (take_vec/take/take_comp).
+    checkouts: u64,
+    /// Checkouts that had to heap-allocate because no pooled buffer was
+    /// big enough. The serve engine asserts this stays flat across
+    /// steady-state decode steps — the "zero allocation" contract.
+    fresh: u64,
 }
 
 impl Scratch {
@@ -40,11 +46,23 @@ impl Scratch {
         self.bufs.len()
     }
 
+    /// Checkouts served so far.
+    pub fn checkouts(&self) -> u64 {
+        self.checkouts
+    }
+
+    /// Checkouts that heap-allocated (no pooled buffer fit). A steady
+    /// state is allocation-free iff this counter stops moving.
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh
+    }
+
     /// Check out a buffer of length `n` with UNSPECIFIED contents (zero
     /// on a fresh allocation, stale on reuse) — takers fully overwrite
     /// or zero it themselves. Best-fit reuse: the smallest pooled buffer
     /// whose capacity covers `n`.
     pub fn take_vec(&mut self, n: usize) -> Vec<f32> {
+        self.checkouts += 1;
         let mut best: Option<usize> = None;
         for (i, b) in self.bufs.iter().enumerate() {
             if b.capacity() >= n
@@ -65,7 +83,10 @@ impl Scratch {
                 }
                 v
             }
-            None => vec![0.0; n],
+            None => {
+                self.fresh += 1;
+                vec![0.0; n]
+            }
         }
     }
 
@@ -98,7 +119,14 @@ impl Scratch {
     /// Check out a compressed-operand buffer (refill it with
     /// `from_masked_into` / `compress_sparse24_into` before use).
     pub fn take_comp(&mut self) -> Compressed24 {
-        self.comps.pop().unwrap_or_default()
+        self.checkouts += 1;
+        match self.comps.pop() {
+            Some(c) => c,
+            None => {
+                self.fresh += 1;
+                Compressed24::default()
+            }
+        }
     }
 
     /// Return a compressed-operand buffer to the pool.
@@ -173,6 +201,20 @@ mod tests {
         assert_eq!(t2.shape, vec![5, 3]);
         s.give(t2);
         assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn counters_track_fresh_allocations() {
+        let mut s = Scratch::new();
+        let v = s.take_vec(64);
+        assert_eq!((s.checkouts(), s.fresh_allocs()), (1, 1));
+        s.give_vec(v);
+        let v = s.take_vec(32); // served from pool
+        assert_eq!((s.checkouts(), s.fresh_allocs()), (2, 1));
+        s.give_vec(v);
+        let v = s.take_vec(1024); // pooled buffer too small
+        assert_eq!((s.checkouts(), s.fresh_allocs()), (3, 2));
+        s.give_vec(v);
     }
 
     #[test]

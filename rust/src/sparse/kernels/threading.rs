@@ -329,6 +329,18 @@ pub fn parallel_chunks(
     );
 }
 
+/// Run `f(row_start, row_end)` over a partition of `0..n` independent
+/// rows (unit = 1): the row-granular convenience wrapper the attention
+/// loops and the serve decode path use. `min_rows_per_thread` keeps tiny
+/// problems sequential, like [`parallel_chunks`].
+pub fn parallel_rows(
+    n: usize,
+    min_rows_per_thread: usize,
+    f: &(dyn Fn(usize, usize) + Sync),
+) {
+    parallel_chunks(n, 1, min_rows_per_thread, f)
+}
+
 /// Shareable `*mut f32` for handing disjoint output ranges to workers.
 /// Callers must guarantee ranges do not overlap across threads.
 pub(crate) struct MutPtr {

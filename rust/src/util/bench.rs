@@ -140,6 +140,22 @@ pub fn write_kernel_bench_at(
     section: &str,
     records: &[KernelBench],
 ) -> Result<()> {
+    write_json_section_at(
+        path,
+        section,
+        Json::Arr(records.iter().map(KernelBench::to_json).collect()),
+    )
+}
+
+/// Merge `value` under `section` in a JSON bench record, preserving
+/// other sections. A run APPENDS rather than overwrites: the section's
+/// previous contents rotate to `"<section>.prev"`, so the record always
+/// holds the last two runs and CI can diff them (ROADMAP open item).
+pub fn write_json_section_at(
+    path: &std::path::Path,
+    section: &str,
+    value: Json,
+) -> Result<()> {
     // A missing file starts a fresh record, but an unreadable or
     // unparseable one is an error: silently rewriting it would wipe the
     // accumulated cross-PR perf history.
@@ -159,12 +175,76 @@ pub fn write_kernel_bench_at(
                 .with_context(|| format!("reading bench record {}", path.display()))
         }
     };
-    map.insert(
-        section.to_string(),
-        Json::Arr(records.iter().map(KernelBench::to_json).collect()),
-    );
+    if let Some(old) = map.remove(section) {
+        map.insert(format!("{section}.prev"), old);
+    }
+    map.insert(section.to_string(), value);
     std::fs::write(path, Json::Obj(map).to_string())?;
     Ok(())
+}
+
+/// Compare every section of a bench record against its `.prev` twin,
+/// kernel by kernel (matched on kernel/backend/shape/threads), and
+/// return a warning line per kernel whose GFLOP/s dropped by more than
+/// `threshold` (a fraction, e.g. 0.15 for 15%). Missing file or missing
+/// `.prev` sections yield no warnings — the first run has no baseline.
+pub fn kernel_bench_regressions(
+    path: &std::path::Path,
+    threshold: f64,
+) -> Result<Vec<String>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("reading bench record {}", path.display()))
+        }
+    };
+    let j = Json::parse(&text)
+        .with_context(|| format!("corrupt bench record {}", path.display()))?;
+    let Json::Obj(map) = &j else {
+        anyhow::bail!("bench record {} is not a JSON object", path.display());
+    };
+    let rec_key = |r: &Json| -> Result<String> {
+        Ok(format!(
+            "{} [{} {}x{}x{} t{}]",
+            r.get("kernel")?.as_str()?,
+            r.get("backend")?.as_str()?,
+            r.get("p")?.as_usize()?,
+            r.get("q")?.as_usize()?,
+            r.get("r")?.as_usize()?,
+            r.get("threads")?.as_usize()?,
+        ))
+    };
+    let mut warnings = Vec::new();
+    for (name, value) in map {
+        if name.ends_with(".prev") {
+            continue;
+        }
+        let Some(prev) = map.get(&format!("{name}.prev")) else { continue };
+        let (Json::Arr(cur), Json::Arr(old)) = (value, prev) else { continue };
+        let mut baseline: BTreeMap<String, f64> = BTreeMap::new();
+        for r in old {
+            if let (Ok(k), Ok(g)) = (rec_key(r), r.get("gflops").and_then(|g| g.as_f64())) {
+                baseline.insert(k, g);
+            }
+        }
+        for r in cur {
+            let (Ok(k), Ok(g)) = (rec_key(r), r.get("gflops").and_then(|g| g.as_f64()))
+            else {
+                continue;
+            };
+            if let Some(&pg) = baseline.get(&k) {
+                if pg > 0.0 && g < pg * (1.0 - threshold) {
+                    warnings.push(format!(
+                        "{name}: {k}: {g:.1} GFLOP/s, was {pg:.1} ({:+.1}%)",
+                        (g / pg - 1.0) * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    Ok(warnings)
 }
 
 /// Uniform row printer for the bench binaries.
@@ -229,6 +309,50 @@ mod tests {
         let first = &j.get("a").unwrap().as_arr().unwrap()[0];
         assert_eq!(first.get("kernel").unwrap().as_str().unwrap(), "gemm_nt_tiled");
         assert_eq!(first.get("threads").unwrap().as_f64().unwrap(), 2.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rewriting_a_section_rotates_previous_run() {
+        let dir = std::env::temp_dir().join("sparse24_bench_rotate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_kernels.json");
+        std::fs::remove_file(&path).ok();
+        let rec = |g: f64| KernelBench {
+            kernel: "gemm_nt".to_string(),
+            backend: "tiled".to_string(),
+            p: 64,
+            q: 64,
+            r: 64,
+            threads: 2,
+            median_ms: 1.0,
+            gflops: g,
+            effective_macs: 64 * 64 * 64,
+        };
+        write_kernel_bench_at(&path, "s", &[rec(100.0)]).unwrap();
+        write_kernel_bench_at(&path, "s", &[rec(50.0)]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            j.get("s").unwrap().as_arr().unwrap()[0].get("gflops").unwrap()
+                .as_f64().unwrap(),
+            50.0
+        );
+        assert_eq!(
+            j.get("s.prev").unwrap().as_arr().unwrap()[0].get("gflops").unwrap()
+                .as_f64().unwrap(),
+            100.0
+        );
+        // 50% drop trips the 15% regression gate; 10% threshold too
+        let w = kernel_bench_regressions(&path, 0.15).unwrap();
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("gemm_nt"), "{}", w[0]);
+        // an improvement produces no warning
+        write_kernel_bench_at(&path, "s", &[rec(60.0)]).unwrap();
+        assert!(kernel_bench_regressions(&path, 0.15).unwrap().is_empty());
+        // missing file: no baseline, no warnings
+        assert!(kernel_bench_regressions(&dir.join("nope.json"), 0.15)
+            .unwrap()
+            .is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

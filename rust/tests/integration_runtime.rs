@@ -199,6 +199,7 @@ fn parallel_engine_matches_direct_execution() {
             vec![fx.batch.clone(), fx.batch.clone()],
             fx.step_seed,
             Arc::new(shapes),
+            None,
         )
         .unwrap();
     // two identical microbatches (dense => no seed dependence) average to

@@ -1,0 +1,186 @@
+//! Integration tests for the sparse inference engine (serve subsystem):
+//! checkpoint -> frozen-model roundtrip through an actual file, KV-cache
+//! incremental decode vs full-context recompute, and the scheduler's
+//! continuous-batching properties (everything admitted finishes; greedy
+//! outputs are independent of arrival interleaving and batch size).
+
+use std::path::PathBuf;
+
+use sparse24::coordinator::Checkpoint;
+use sparse24::model::ModelDims;
+use sparse24::serve::{
+    synthetic_checkpoint, InferEngine, InferModel, Request, Sampling, Scheduler,
+};
+use sparse24::sparse::ffn::DenseFfn;
+use sparse24::sparse::Scratch;
+use sparse24::tensor::Tensor;
+use sparse24::util::rng::Rng;
+
+fn dims() -> ModelDims {
+    ModelDims { vocab: 40, d_model: 24, n_layers: 2, n_heads: 3, d_ff: 12, n_ctx: 20 }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join("sparse24_serve_tests").join(name)
+}
+
+fn param<'a>(ck: &'a Checkpoint, name: &str) -> &'a Tensor {
+    let i = ck
+        .param_names
+        .iter()
+        .position(|n| n == name)
+        .unwrap_or_else(|| panic!("no param {name}"));
+    &ck.params[i]
+}
+
+/// (a) Save a checkpoint to disk, load it, freeze it, and check that
+/// every compressed FFN forward matches the masked dense forward of the
+/// checkpoint's weights within 1e-5.
+#[test]
+fn checkpoint_roundtrip_compressed_ffn_matches_masked_dense() {
+    let dims = dims();
+    let ck = synthetic_checkpoint(&dims, 42);
+    let path = tmp("roundtrip.ckpt");
+    ck.save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(back.param_names, ck.param_names);
+    assert_eq!(back.dims, Some(dims));
+    let model = InferModel::from_checkpoint(&back).unwrap();
+    assert_eq!(model.blocks.len(), dims.n_layers);
+
+    let mut rng = Rng::new(7);
+    for (layer, blk) in model.blocks.iter().enumerate() {
+        let m1 = &back.masks[2 * layer];
+        let m2 = &back.masks[2 * layer + 1];
+        let dense = DenseFfn {
+            w1: m1.apply(param(&back, &format!("h{layer}.ffn_w1"))),
+            b1: param(&back, &format!("h{layer}.ffn_b1")).clone(),
+            w2: m2.apply(param(&back, &format!("h{layer}.ffn_w2"))),
+            b2: param(&back, &format!("h{layer}.ffn_b2")).clone(),
+        };
+        let x = Tensor::normal(&[9, dims.d_model], 0.5, &mut rng);
+        let (y_ref, _) = dense.forward(&x);
+        let mut y = Tensor::zeros(&[0]);
+        let mut scratch = Scratch::new();
+        blk.ffn.forward_into(&x, &mut y, &mut scratch);
+        assert!(
+            y.max_abs_diff(&y_ref) < 1e-5,
+            "layer {layer}: compressed FFN diverges from masked dense by {}",
+            y.max_abs_diff(&y_ref)
+        );
+    }
+    std::fs::remove_dir_all(tmp("")).ok();
+}
+
+/// (b) Incremental KV-cache decode over T steps reproduces the full-
+/// context forward's last-token logits.
+#[test]
+fn kv_incremental_decode_equals_full_context_recompute() {
+    let dims = dims();
+    let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 3)).unwrap();
+    let mut rng = Rng::new(11);
+    for trial in 0..3u64 {
+        let t = 3 + 4 * trial as usize; // 3, 7, 11 tokens
+        let prompt: Vec<u32> = (0..t).map(|_| rng.below(dims.vocab) as u32).collect();
+        let full = model.forward_full(&prompt);
+        let mut engine = InferEngine::new(model.clone());
+        let mut kv = engine.alloc_kv(1);
+        let slot = kv.acquire().unwrap();
+        let mut logits = Tensor::zeros(&[0]);
+        engine.prefill(&prompt, slot, &mut kv, &mut logits);
+        let last = &full.data[(t - 1) * dims.vocab..t * dims.vocab];
+        let mut worst = 0f32;
+        for (&a, &b) in logits.data.iter().zip(last) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst < 1e-5, "trial {trial} (T={t}): max logit diff {worst}");
+        kv.release(slot);
+        engine.release_kv(kv);
+    }
+}
+
+/// (c) Scheduler property test: under varied arrival interleavings and
+/// batch capacities, every admitted request finishes, and greedy
+/// outputs equal the request's solo (batch-of-one) decode.
+#[test]
+fn scheduler_all_finish_and_greedy_outputs_are_interleaving_invariant() {
+    let dims = dims();
+    let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 21)).unwrap();
+    let mut rng = Rng::new(99);
+    let n_req = 6;
+    let requests: Vec<Request> = (0..n_req)
+        .map(|id| {
+            let len = 1 + rng.below(6);
+            Request {
+                id,
+                prompt: (0..len).map(|_| rng.below(dims.vocab) as u32).collect(),
+                max_new: 1 + rng.below(5),
+            }
+        })
+        .collect();
+
+    // ground truth: each request decoded alone
+    let mut solo = Vec::new();
+    for req in &requests {
+        let mut sch = Scheduler::new(InferEngine::new(model.clone()), 1, 10_000,
+                                     Sampling::Greedy, 0);
+        sch.submit(req.clone());
+        let done = sch.run_until_idle(500);
+        assert_eq!(done.len(), 1);
+        solo.push(done.into_iter().next().unwrap());
+    }
+
+    // arrival patterns: burst, one-per-step, pairs — across capacities
+    let patterns: [&[usize]; 3] = [&[6], &[1, 1, 1, 1, 1, 1], &[2, 2, 2]];
+    for (pi, pattern) in patterns.iter().enumerate() {
+        for max_seqs in [2usize, 4] {
+            let mut sch = Scheduler::new(InferEngine::new(model.clone()), max_seqs,
+                                         10_000, Sampling::Greedy, 0);
+            let mut submitted = 0usize;
+            let mut done = Vec::new();
+            for &burst in pattern.iter() {
+                for _ in 0..burst {
+                    sch.submit(requests[submitted].clone());
+                    submitted += 1;
+                }
+                done.extend(sch.step().finished);
+            }
+            done.extend(sch.run_until_idle(1000));
+            assert_eq!(done.len(), n_req as usize,
+                       "pattern {pi} max_seqs {max_seqs}: lost requests");
+            done.sort_by_key(|c| c.id);
+            for (c, s) in done.iter().zip(&solo) {
+                assert_eq!(c.id, s.id);
+                assert_eq!(
+                    c.tokens, s.tokens,
+                    "request {} output changed under pattern {pi}, max_seqs {max_seqs}",
+                    c.id
+                );
+            }
+        }
+    }
+}
+
+/// Sampling with temperature is reproducible from the scheduler seed and
+/// independent of batch capacity (per-sequence RNG streams).
+#[test]
+fn sampled_outputs_reproducible_across_batch_sizes() {
+    let dims = dims();
+    let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 33)).unwrap();
+    let sampling = Sampling::TopK { k: 8, temperature: 0.9 };
+    let mut outs = Vec::new();
+    for max_seqs in [1usize, 3] {
+        let mut sch = Scheduler::new(InferEngine::new(model.clone()), max_seqs,
+                                     10_000, sampling, 1234);
+        for id in 0..3u64 {
+            sch.submit(Request { id, prompt: vec![2 + id as u32, 5], max_new: 4 });
+        }
+        let mut done = sch.run_until_idle(500);
+        assert_eq!(done.len(), 3);
+        done.sort_by_key(|c| c.id);
+        outs.push(done);
+    }
+    for (a, b) in outs[0].iter().zip(&outs[1]) {
+        assert_eq!(a.tokens, b.tokens, "request {} sampling depends on batching", a.id);
+    }
+}

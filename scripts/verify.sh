@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verification entry point: build + full test suite + a quick
 # bench smoke on 2 kernel threads (exercises the thread pool, the tiled
-# backend, and the BENCH_kernels.json emitters end to end).
+# backend, and the BENCH_kernels.json emitters end to end), a serving
+# smoke on a tiny synthetic checkpoint (compressed-weight decode, KV
+# cache, continuous batching, zero-allocation assertion), and a GFLOP/s
+# diff against the previous bench run (warn-only, >15% regression).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,5 +17,12 @@ cargo test -q
 echo "== bench smoke (PALLAS_NUM_THREADS=2, --quick)"
 PALLAS_NUM_THREADS=2 cargo bench --bench ablation_spmm -- --quick
 PALLAS_NUM_THREADS=2 cargo bench --bench fig7_ffn_block -- --quick
+
+echo "== serve smoke (synthetic checkpoint, 64 steps, 2 threads)"
+PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --synthetic --quick \
+  --steps 64 --batch-sizes 2,4
+
+echo "== bench-diff (GFLOP/s vs previous run, warn-only)"
+./target/release/sparse24 bench-diff || true
 
 echo "== verify OK"
