@@ -436,7 +436,12 @@ impl TrainConfig {
 /// * `max_seqs` — concurrent sequences in the running batch (KV slots
 ///   are preallocated for exactly this many);
 /// * `max_batch_tokens` — admission budget: summed peak context
-///   (prompt + max_new, clamped to n_ctx) of the admitted batch;
+///   (prompt + max_new, clamped to n_ctx) of the admitted batch; ALSO
+///   the per-step processed-token budget shared by decode lanes and
+///   prefill chunks;
+/// * `prefill_chunk` — prompt tokens a sequence feeds per scheduler
+///   step as one matrix-form activation block (chunked prefill; long
+///   prompts span steps);
 /// * `max_new_tokens` — generation length per request;
 /// * `temperature` — 0 = greedy, > 0 = softmax sampling;
 /// * `top_k` — restrict sampling to the k most likely tokens (0 = all);
@@ -448,6 +453,7 @@ impl TrainConfig {
 pub struct ServeConfig {
     pub max_seqs: usize,
     pub max_batch_tokens: usize,
+    pub prefill_chunk: usize,
     pub max_new_tokens: usize,
     pub temperature: f64,
     pub top_k: usize,
@@ -462,6 +468,7 @@ impl Default for ServeConfig {
         ServeConfig {
             max_seqs: 4,
             max_batch_tokens: 4096,
+            prefill_chunk: 8,
             max_new_tokens: 16,
             temperature: 0.0,
             top_k: 0,
@@ -485,6 +492,9 @@ impl ServeConfig {
         }
         if let Some(v) = get(t, "serve", "max_batch_tokens") {
             c.max_batch_tokens = v.as_usize()?;
+        }
+        if let Some(v) = get(t, "serve", "prefill_chunk") {
+            c.prefill_chunk = v.as_usize()?;
         }
         if let Some(v) = get(t, "serve", "max_new_tokens") {
             c.max_new_tokens = v.as_usize()?;
@@ -514,6 +524,9 @@ impl ServeConfig {
     pub fn validate(&self) -> Result<()> {
         if self.max_seqs == 0 {
             bail!("serve.max_seqs must be >= 1");
+        }
+        if self.prefill_chunk == 0 {
+            bail!("serve.prefill_chunk must be >= 1");
         }
         if self.max_new_tokens == 0 {
             bail!("serve.max_new_tokens must be >= 1");
@@ -636,12 +649,14 @@ kind = "synthetic"
     fn serve_section_parses_and_validates() {
         let c = ServeConfig::from_toml(
             "[serve]\nmax_seqs = 8\nmax_batch_tokens = 1024\n\
-             max_new_tokens = 32\ntemperature = 0.7\ntop_k = 20\n\
-             bench_steps = 64\narrival_per_step = 0.25\nprompt_len = 9\n",
+             prefill_chunk = 24\nmax_new_tokens = 32\ntemperature = 0.7\n\
+             top_k = 20\nbench_steps = 64\narrival_per_step = 0.25\n\
+             prompt_len = 9\n",
         )
         .unwrap();
         assert_eq!(c.max_seqs, 8);
         assert_eq!(c.max_batch_tokens, 1024);
+        assert_eq!(c.prefill_chunk, 24);
         assert_eq!(c.max_new_tokens, 32);
         assert!((c.temperature - 0.7).abs() < 1e-9);
         assert_eq!(c.top_k, 20);
@@ -651,7 +666,9 @@ kind = "synthetic"
         // defaults cover a missing section entirely
         let d = ServeConfig::from_toml("[train]\nsteps = 3\n").unwrap();
         assert_eq!(d.max_seqs, 4);
+        assert_eq!(d.prefill_chunk, 8);
         assert!(ServeConfig::from_toml("[serve]\nmax_seqs = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\nprefill_chunk = 0\n").is_err());
         assert!(ServeConfig::from_toml("[serve]\ntemperature = -0.5\n").is_err());
     }
 

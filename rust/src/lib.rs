@@ -14,30 +14,35 @@
 //!
 //! The [`serve`] subsystem turns a trained checkpoint into a batched
 //! autoregressive inference engine: FFN weights are converted ONCE to
-//! compressed 2:4 form (half the dense footprint) so every decode step's
-//! FFN forward runs through the tiled `spmm_nt` kernels; per-sequence
-//! K/V caches live in preallocated slots carved from the kernel scratch
-//! arena (the steady-state decode path performs zero scratch-arena
-//! allocation, asserted by the arena's checkout counters); and a
-//! continuous-batching scheduler admits/retires requests at step
-//! granularity, fanning per-sequence attention onto the persistent
-//! kernel thread pool.
+//! compressed 2:4 form (half the dense footprint) so every FFN forward
+//! runs through the tiled `spmm_nt` kernels; prompts are ingested by
+//! CHUNKED PREFILL (up to `prefill_chunk` tokens per step as one
+//! matrix-form activation block — the shapes where 2:4 spMM amortizes);
+//! per-sequence K/V caches live in preallocated slots carved from the
+//! kernel scratch arena (the steady-state decode AND prefill paths
+//! perform zero scratch-arena allocation, asserted by the arena's
+//! checkout counters); and a continuous-batching scheduler
+//! admits/prefills/retires requests at step granularity, fanning
+//! per-sequence attention onto the persistent kernel thread pool.
 //!
 //! CLI subcommands (see `sparse24 help`):
 //!
 //! * `generate` — decode one prompt from a checkpoint (or a synthetic
 //!   model with `--synthetic`), printing the sampled token ids;
 //! * `serve-bench` — synthetic open-loop request load through the
-//!   scheduler at two or more batch sizes; reports tokens/sec, p50/p99
-//!   per-token latency, and the batch-occupancy histogram, appends a
-//!   `serve_bench` section to `BENCH_serve.json`, and fails if the
-//!   steady-state decode path checked out a single fresh scratch-arena
+//!   scheduler at two or more batch sizes; reports tokens/sec, per-lane
+//!   decode p50/p99 latency, TTFT, prefill tokens/sec, and the
+//!   batch-occupancy histogram, appends `serve_bench` and
+//!   `prefill_tokens_per_s` sections to `BENCH_serve.json` (the latter
+//!   diffed warn-only by `bench-diff`), and fails if the steady-state
+//!   decode/prefill paths checked out a single fresh scratch-arena
 //!   buffer (request-level bookkeeping like output token vectors is
 //!   outside that contract).
 //!
 //! Both read the `[serve]` config table ([`config::ServeConfig`]):
-//! `max_seqs`, `max_batch_tokens`, `max_new_tokens`, `temperature`,
-//! `top_k`, `seed`, `bench_steps`, `arrival_per_step`, `prompt_len`.
+//! `max_seqs`, `max_batch_tokens`, `prefill_chunk`, `max_new_tokens`,
+//! `temperature`, `top_k`, `seed`, `bench_steps`, `arrival_per_step`,
+//! `prompt_len`.
 
 pub mod config;
 pub mod coordinator;

@@ -36,7 +36,8 @@ use sparse24::serve::{
 };
 use sparse24::sparse::{kernels, workloads};
 use sparse24::util::bench::{
-    kernel_bench_regressions, repo_root_file, write_json_section_at,
+    kernel_bench_regressions, repo_root_file, serve_bench_regressions,
+    write_json_section_at,
 };
 use sparse24::util::json::{num, obj, Json};
 use sparse24::util::write_csv;
@@ -113,8 +114,9 @@ fn print_usage() {
                         [--prompt t0,t1,...] [--max-new N] [--temperature T]\n\
                         [--top-k K] [--seed S]\n\
            serve-bench  [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
-                        [--steps N] [--batch-sizes a,b,...] [--quick]\n\
-           bench-diff   [--file <json>] [--threshold PCT]\n"
+                        [--steps N] [--batch-sizes a,b,...] [--prefill-chunk N]\n\
+                        [--quick]\n\
+           bench-diff   [--file <json>] [--serve-file <json>] [--threshold PCT]\n"
     );
 }
 
@@ -225,11 +227,14 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         }
     }
     let sampling = Sampling::from_params(temperature, top_k);
-    let mut sch = Scheduler::new(InferEngine::new(model), 1, usize::MAX / 2,
-                                 sampling, seed);
+    let mut sch = Scheduler::with_prefill_chunk(InferEngine::new(model), 1,
+                                                usize::MAX / 2, cfg.prefill_chunk,
+                                                sampling, seed);
     sch.submit(Request { id: 0, prompt: prompt.clone(), max_new });
     let t0 = std::time::Instant::now();
-    let done = sch.run_until_idle(2 * max_new + 16);
+    // chunked prefill spans ceil(prompt/chunk) extra steps
+    let step_cap = 2 * max_new + prompt.len() + 16;
+    let done = sch.run_until_idle(step_cap);
     let dt = t0.elapsed().as_secs_f64();
     let c = done.first().context("generation did not finish")?;
     let toks: Vec<String> = c.tokens.iter().map(|t| t.to_string()).collect();
@@ -251,6 +256,9 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     } else if quick {
         cfg.bench_steps = cfg.bench_steps.min(48);
     }
+    if let Some(s) = opt1(&opts, "prefill-chunk") {
+        cfg.prefill_chunk = s.parse::<usize>().context("--prefill-chunk")?.max(1);
+    }
     let batch_sizes: Vec<usize> = match opt1(&opts, "batch-sizes") {
         Some(s) => s
             .split(',')
@@ -269,12 +277,14 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     let threads = kernels::num_threads();
     println!(
         "serve-bench: {} layers, d={}, n_ctx={}, vocab={} | {} steps, \
-         arrival {:.2}/step, prompt {} + {} new | {} threads",
+         arrival {:.2}/step, prompt {} + {} new, prefill chunk {} | {} threads",
         dims.n_layers, dims.d_model, dims.n_ctx, dims.vocab, cfg.bench_steps,
-        cfg.arrival_per_step, cfg.prompt_len, cfg.max_new_tokens, threads
+        cfg.arrival_per_step, cfg.prompt_len, cfg.max_new_tokens,
+        cfg.prefill_chunk, threads
     );
     let mut engine = InferEngine::new(model);
     let mut runs = Vec::new();
+    let mut prefill_runs = Vec::new();
     for &ms in &batch_sizes {
         let (res, back) = run_open_loop(engine, &cfg, ms, cfg.bench_steps)?;
         println!("  {}", res.render());
@@ -286,6 +296,7 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
             .collect();
         println!("    occupancy {}", occ.join(" "));
         runs.push(res.to_json(threads));
+        prefill_runs.push(res.to_prefill_json(threads));
         engine = back;
     }
     let section = obj(vec![
@@ -304,7 +315,11 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     ]);
     let path = repo_root_file("BENCH_serve.json");
     write_json_section_at(&path, "serve_bench", section)?;
-    println!("-> {} (section serve_bench)", path.display());
+    write_json_section_at(&path, "prefill_tokens_per_s", Json::Arr(prefill_runs))?;
+    println!(
+        "-> {} (sections serve_bench, prefill_tokens_per_s)",
+        path.display()
+    );
     Ok(())
 }
 
@@ -332,6 +347,26 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
         println!(
             "bench-diff: {} kernel(s) regressed > {:.0}% vs the previous run",
             warnings.len(),
+            threshold * 100.0
+        );
+    }
+    let serve_path = opt1(&opts, "serve-file")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| repo_root_file("BENCH_serve.json"));
+    let serve_warnings = serve_bench_regressions(&serve_path, threshold)?;
+    if serve_warnings.is_empty() {
+        println!(
+            "bench-diff: no prefill tok/s regressions > {:.0}% in {}",
+            threshold * 100.0,
+            serve_path.display()
+        );
+    } else {
+        for w in &serve_warnings {
+            println!("WARNING: perf regression: {w}");
+        }
+        println!(
+            "bench-diff: {} serve config(s) regressed > {:.0}% vs the previous run",
+            serve_warnings.len(),
             threshold * 100.0
         );
     }

@@ -2,17 +2,30 @@
 //!
 //! Drives the continuous-batching scheduler with a synthetic Poisson
 //! request load (open loop: arrivals don't wait for completions, like
-//! real user traffic) and reports decode throughput, per-token latency
-//! percentiles, and the batch-occupancy histogram — the numbers that
-//! tell you whether continuous batching is actually filling the batch.
-//! Results append to `BENCH_serve.json` (previous run rotated to
-//! `serve_bench.prev`), one record per batch-size configuration.
+//! real user traffic) and reports decode throughput, per-token decode
+//! latency percentiles, time-to-first-token (TTFT), chunked-prefill
+//! throughput, and the batch-occupancy histogram — the numbers that
+//! tell you whether continuous batching is actually filling the batch
+//! and whether matrix-form prefill is paying off. Results append to
+//! `BENCH_serve.json` (previous run rotated to `<section>.prev`), one
+//! record per batch-size configuration, with a separate
+//! `prefill_tokens_per_s` section that `bench-diff` tracks.
+//!
+//! Latency attribution: a decode token is charged its step's processing
+//! wall time (prefill phase + decode phase), PER LANE — the real
+//! inter-token gap a decoding user sees, including the interference
+//! from co-scheduled prefill chunks (which the step token budget
+//! bounds). It is no longer divided across the step's token count, and
+//! whole-prompt admission stalls are gone: prompt ingestion surfaces as
+//! TTFT (submit → first token) and `prefill_tokens_per_s`.
 //!
 //! The run doubles as the zero-allocation proof: the engine arena is
-//! pre-warmed, so the whole measured phase must not heap-allocate a
-//! single scratch buffer ([`BenchResult::fresh_allocs`] must be 0 —
-//! `run_open_loop` fails otherwise).
+//! pre-warmed (decode AND prefill buffer sets), so the whole measured
+//! phase must not heap-allocate a single scratch buffer
+//! ([`BenchResult::fresh_allocs`] must be 0 — `run_open_loop` fails
+//! otherwise).
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
@@ -30,18 +43,34 @@ use super::scheduler::{Request, Scheduler};
 pub struct BenchResult {
     pub max_seqs: usize,
     pub max_batch_tokens: usize,
+    pub prefill_chunk: usize,
     pub steps: usize,
     pub tokens: usize,
     pub completions: usize,
     pub elapsed_s: f64,
     pub tokens_per_s: f64,
+    /// per-token decode latency percentiles: each decode-lane token is
+    /// charged its step's prefill+decode wall time (per-lane
+    /// attribution — the inter-token gap its user saw, with prefill
+    /// interference bounded by the step token budget, not a whole-step
+    /// average smeared across every token)
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// time-to-first-token percentiles (submit → first sampled token,
+    /// through queueing + chunked prefill)
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// prompt tokens ingested via chunked prefill
+    pub prefill_tokens: usize,
+    /// summed prefill-phase wall time
+    pub prefill_s: f64,
+    /// prefill_tokens / prefill_s — the matrix-form ingestion rate
+    pub prefill_tokens_per_s: f64,
     pub mean_occupancy: f64,
     /// hist[k] = scheduler steps that decoded k sequences
     pub occupancy_hist: Vec<u64>,
     /// scratch-arena heap allocations during the measured phase (MUST
-    /// be 0 — steady-state decode is allocation-free)
+    /// be 0 — steady-state decode AND prefill are allocation-free)
     pub fresh_allocs: u64,
     /// requests still queued/active when the drain cap hit (0 on a
     /// fully served run; nonzero means throughput/latency describe a
@@ -54,6 +83,7 @@ impl BenchResult {
         obj(vec![
             ("max_seqs", num(self.max_seqs as f64)),
             ("max_batch_tokens", num(self.max_batch_tokens as f64)),
+            ("prefill_chunk", num(self.prefill_chunk as f64)),
             ("steps", num(self.steps as f64)),
             ("tokens", num(self.tokens as f64)),
             ("completions", num(self.completions as f64)),
@@ -61,6 +91,11 @@ impl BenchResult {
             ("tokens_per_s", num(self.tokens_per_s)),
             ("p50_ms", num(self.p50_ms)),
             ("p99_ms", num(self.p99_ms)),
+            ("ttft_p50_ms", num(self.ttft_p50_ms)),
+            ("ttft_p99_ms", num(self.ttft_p99_ms)),
+            ("prefill_tokens", num(self.prefill_tokens as f64)),
+            ("prefill_s", num(self.prefill_s)),
+            ("prefill_tokens_per_s", num(self.prefill_tokens_per_s)),
             ("mean_occupancy", num(self.mean_occupancy)),
             (
                 "occupancy_hist",
@@ -72,6 +107,21 @@ impl BenchResult {
         ])
     }
 
+    /// Entry for the `prefill_tokens_per_s` section of BENCH_serve.json
+    /// (the record `bench-diff` matches against its `.prev` twin).
+    pub fn to_prefill_json(&self, threads: usize) -> Json {
+        obj(vec![
+            ("max_seqs", num(self.max_seqs as f64)),
+            ("max_batch_tokens", num(self.max_batch_tokens as f64)),
+            ("prefill_chunk", num(self.prefill_chunk as f64)),
+            ("threads", num(threads as f64)),
+            ("prefill_tokens", num(self.prefill_tokens as f64)),
+            ("prefill_tokens_per_s", num(self.prefill_tokens_per_s)),
+            ("ttft_p50_ms", num(self.ttft_p50_ms)),
+            ("ttft_p99_ms", num(self.ttft_p99_ms)),
+        ])
+    }
+
     pub fn render(&self) -> String {
         let drop_note = if self.abandoned > 0 {
             format!("  [{} ABANDONED]", self.abandoned)
@@ -79,10 +129,12 @@ impl BenchResult {
             String::new()
         };
         format!(
-            "max_seqs={:<3} {:>8.1} tok/s  p50 {:>7.3} ms  p99 {:>7.3} ms  \
-             occ {:>4.2}  {} tokens / {} reqs in {:.2}s{drop_note}",
+            "max_seqs={:<3} {:>8.1} tok/s  decode p50 {:>7.3} ms  p99 {:>7.3} ms  \
+             ttft p50 {:>7.3} ms  prefill {:>8.1} tok/s  occ {:>4.2}  \
+             {} tokens / {} reqs in {:.2}s{drop_note}",
             self.max_seqs, self.tokens_per_s, self.p50_ms, self.p99_ms,
-            self.mean_occupancy, self.tokens, self.completions, self.elapsed_s,
+            self.ttft_p50_ms, self.prefill_tokens_per_s, self.mean_occupancy,
+            self.tokens, self.completions, self.elapsed_s,
         )
     }
 }
@@ -122,22 +174,29 @@ pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
     let vocab = engine.model.dims.vocab;
     let n_ctx = engine.model.dims.n_ctx;
     let prompt_len = cfg.prompt_len.min(n_ctx.saturating_sub(1)).max(1);
-    let mut sch = Scheduler::new(engine, max_seqs, cfg.max_batch_tokens,
-                                 sampling, cfg.seed);
-    // Scheduler::new warmed the arena; from here on, zero allocation.
+    let mut sch = Scheduler::with_prefill_chunk(engine, max_seqs,
+                                                cfg.max_batch_tokens,
+                                                cfg.prefill_chunk, sampling,
+                                                cfg.seed);
+    // the constructor warmed the arena (decode + prefill buffer sets);
+    // from here on, zero allocation
     let fresh0 = sch.engine.scratch_counters().1;
 
     let mut arrivals = Rng::new(cfg.seed ^ 0x0af2_11ae_5e1f_0123);
     let mut hist = vec![0u64; max_seqs + 1];
-    let mut per_token_ms: Vec<f64> = Vec::with_capacity(steps * max_seqs);
+    let mut decode_token_ms: Vec<f64> = Vec::with_capacity(steps * max_seqs);
+    let mut ttft_ms: Vec<f64> = Vec::new();
+    let mut submit_at: BTreeMap<u64, Instant> = BTreeMap::new();
     let mut next_id = 0u64;
     let mut tokens = 0usize;
     let mut completions = 0usize;
+    let mut prefill_tokens = 0usize;
+    let mut prefill_s = 0f64;
 
     let t0 = Instant::now();
     let mut measured_steps = 0usize;
     // loaded phase + drain (no new arrivals past `steps`)
-    let max_total_steps = steps.saturating_mul(20).max(steps + 1000);
+    let max_total_steps = steps.saturating_mul(40).max(steps + 1000);
     for step in 0..max_total_steps {
         if step < steps {
             for _ in 0..poisson(&mut arrivals, cfg.arrival_per_step) {
@@ -148,6 +207,7 @@ pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
                     prompt,
                     max_new: cfg.max_new_tokens,
                 });
+                submit_at.insert(next_id, Instant::now());
                 next_id += 1;
             }
         } else if sch.is_idle() {
@@ -159,17 +219,23 @@ pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
             measured_steps += 1;
             continue;
         }
-        let ts = Instant::now();
         let r = sch.step();
-        let dt_ms = ts.elapsed().as_secs_f64() * 1e3;
         hist[r.occupancy.min(max_seqs)] += 1;
-        if r.decoded > 0 {
-            let per = dt_ms / r.decoded as f64;
-            for _ in 0..r.decoded {
-                per_token_ms.push(per);
-            }
-            tokens += r.decoded;
+        // per-lane attribution: every decode-lane token waited for its
+        // step's prefill + decode phases (the lane's inter-token gap)
+        let lane_ms = r.prefill_ms + r.decode_ms;
+        for _ in 0..r.occupancy {
+            decode_token_ms.push(lane_ms);
         }
+        // TTFT: submit → the step that sampled the request's first token
+        for id in &r.first_token_ids {
+            if let Some(at) = submit_at.remove(id) {
+                ttft_ms.push(at.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+        prefill_tokens += r.prefilled;
+        prefill_s += r.prefill_ms / 1e3;
+        tokens += r.decoded;
         completions += r.finished.len();
         measured_steps += 1;
     }
@@ -186,11 +252,12 @@ pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
     let fresh_allocs = sch.engine.scratch_counters().1 - fresh0;
     ensure!(
         fresh_allocs == 0,
-        "steady-state decode heap-allocated {fresh_allocs} scratch buffers \
-         (zero-allocation contract violated)"
+        "steady-state decode/prefill heap-allocated {fresh_allocs} scratch \
+         buffers (zero-allocation contract violated)"
     );
 
-    per_token_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    decode_token_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ttft_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let occ_steps: u64 = hist.iter().sum();
     let occ_weighted: f64 = hist
         .iter()
@@ -200,13 +267,23 @@ pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
     let result = BenchResult {
         max_seqs,
         max_batch_tokens: cfg.max_batch_tokens,
+        prefill_chunk: cfg.prefill_chunk,
         steps: measured_steps,
         tokens,
         completions,
         elapsed_s,
         tokens_per_s: if elapsed_s > 0.0 { tokens as f64 / elapsed_s } else { 0.0 },
-        p50_ms: percentile(&per_token_ms, 0.5),
-        p99_ms: percentile(&per_token_ms, 0.99),
+        p50_ms: percentile(&decode_token_ms, 0.5),
+        p99_ms: percentile(&decode_token_ms, 0.99),
+        ttft_p50_ms: percentile(&ttft_ms, 0.5),
+        ttft_p99_ms: percentile(&ttft_ms, 0.99),
+        prefill_tokens,
+        prefill_s,
+        prefill_tokens_per_s: if prefill_s > 0.0 {
+            prefill_tokens as f64 / prefill_s
+        } else {
+            0.0
+        },
         mean_occupancy: if occ_steps > 0 { occ_weighted / occ_steps as f64 } else { 0.0 },
         occupancy_hist: hist,
         fresh_allocs,
@@ -250,6 +327,8 @@ mod tests {
         let cfg = ServeConfig {
             max_new_tokens: 3,
             prompt_len: 4,
+            // chunk smaller than the prompt: prefill spans steps
+            prefill_chunk: 3,
             arrival_per_step: 1.0,
             ..ServeConfig::default()
         };
@@ -261,8 +340,16 @@ mod tests {
         assert_eq!(res.occupancy_hist.len(), 3);
         assert!(res.tokens_per_s > 0.0);
         assert!(res.p50_ms <= res.p99_ms);
+        // every completion ingested a 4-token prompt through prefill
+        assert!(res.prefill_tokens >= 4 * res.completions);
+        assert!(res.prefill_tokens_per_s > 0.0);
+        assert!(res.ttft_p50_ms > 0.0 && res.ttft_p50_ms <= res.ttft_p99_ms);
         assert!(!res.render().is_empty());
         let j = res.to_json(2);
         assert_eq!(j.get("fresh_allocs").unwrap().as_f64().unwrap(), 0.0);
+        assert!(j.get("prefill_tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+        let pj = res.to_prefill_json(2);
+        assert_eq!(pj.get("prefill_chunk").unwrap().as_f64().unwrap(), 3.0);
+        assert!(pj.get("ttft_p50_ms").unwrap().as_f64().unwrap() > 0.0);
     }
 }

@@ -430,16 +430,147 @@ impl InferEngine {
         scratch.give(scores);
     }
 
-    /// Feed a whole prompt through one sequence's KV cache (one token
-    /// per step — prefill reuses the decode path exactly, which is what
-    /// the KV-correctness tests pin). Leaves `logits` holding the
-    /// next-token distribution after the last prompt token.
-    pub fn prefill(&mut self, prompt: &[u32], slot: usize, kv: &mut KvPool,
-                   logits: &mut Tensor) {
+    /// Reference prefill: feed a whole prompt through one sequence's KV
+    /// cache ONE TOKEN PER STEP via the decode path. Every prompt token
+    /// is a GEMV that never reaches the matrix-matrix kernels — kept
+    /// exactly for that reason: it is the differential oracle the
+    /// chunked-prefill tests pin [`InferEngine::prefill_chunk`] against
+    /// (and what the KV-correctness tests pin against `forward_full`).
+    /// Leaves `logits` holding the next-token distribution after the
+    /// last prompt token.
+    pub fn prefill_reference(&mut self, prompt: &[u32], slot: usize,
+                             kv: &mut KvPool, logits: &mut Tensor) {
         assert!(!prompt.is_empty(), "empty prompt");
         for (t, &token) in prompt.iter().enumerate() {
             let lane = [DecodeLane { slot, token, pos: t }];
             self.decode_step(&lane, kv, logits);
+        }
+    }
+
+    /// Pre-size the arena for chunked prefill up to `chunk` tokens: the
+    /// exact buffer set [`InferEngine::prefill_chunk`] checks out
+    /// (including the FFN temporaries and the last-row head input), so
+    /// steady-state prefill performs zero heap allocation.
+    pub fn warm_prefill(&mut self, chunk: usize) {
+        let dims = self.model.dims;
+        let (c, d) = (chunk.clamp(1, dims.n_ctx), dims.d_model);
+        let two_r = 2 * dims.d_ff;
+        let s = &mut self.scratch;
+        let bufs = [
+            s.take(&[c, d]),          // x
+            s.take(&[c, d]),          // h
+            s.take(&[c, 3 * d]),      // qkv
+            s.take(&[c, d]),          // ctx
+            s.take(&[c, d]),          // attn_y
+            s.take(&[c, d]),          // ffn_y
+            s.take(&[c, dims.n_ctx]), // scores
+            s.take(&[c, two_r]),      // ffn z
+            s.take(&[c, two_r / 2]),  // ffn a
+            s.take(&[1, d]),          // last-row head input
+        ];
+        for b in bufs {
+            s.give(b);
+        }
+    }
+
+    /// Matrix-form prefill of one prompt chunk: run `chunk` tokens of
+    /// the sequence in `slot` (whose KV cache already holds `pos0`
+    /// tokens) through the model as ONE `[chunk, d]` activation block —
+    /// the compressed-weight FFNs see matrix-matrix `spmm_nt` shapes
+    /// instead of per-token GEMVs, which is where the 2:4 speedup
+    /// amortizes (Hu et al. Table 12; Haziza et al. 2025 at inference).
+    /// Attention attends both within the chunk and against the cached
+    /// prefix via [`Attention::attend_prefill`], writing the chunk's K/V
+    /// rows contiguously at `pos0..pos0+chunk`. Leaves `logits` (1,
+    /// vocab) holding the next-token distribution after the chunk's last
+    /// token. Zero steady-state allocation after
+    /// [`InferEngine::warm_prefill`].
+    pub fn prefill_chunk(&mut self, chunk: &[u32], slot: usize, pos0: usize,
+                         kv: &mut KvPool, logits: &mut Tensor) {
+        assert!(!chunk.is_empty(), "empty prefill chunk");
+        let model = &self.model;
+        let scratch = &mut self.scratch;
+        let dims = model.dims;
+        let (c, d) = (chunk.len(), dims.d_model);
+        let cap = kv.cap();
+        debug_assert_eq!(cap, dims.n_ctx);
+        assert!(pos0 + c <= cap, "prefill chunk {pos0}+{c} overflows n_ctx {cap}");
+        assert!(slot < kv.total_slots(), "prefill slot out of range");
+        for &tok in chunk {
+            assert!((tok as usize) < dims.vocab, "token out of vocab");
+        }
+
+        // embeddings of the chunk at positions pos0..pos0+c
+        let mut x = scratch.take(&[c, d]);
+        for (i, &tok) in chunk.iter().enumerate() {
+            let tok = tok as usize;
+            let te = &model.tok_emb.data[tok * d..(tok + 1) * d];
+            let pe = &model.pos_emb.data[(pos0 + i) * d..(pos0 + i + 1) * d];
+            let out = &mut x.data[i * d..(i + 1) * d];
+            for j in 0..d {
+                out[j] = te[j] + pe[j];
+            }
+        }
+
+        let mut h = scratch.take(&[c, d]);
+        let mut qkv = scratch.take(&[c, 3 * d]);
+        let mut ctx = scratch.take(&[c, d]);
+        let mut attn_y = scratch.take(&[c, d]);
+        let mut ffn_y = scratch.take(&[c, d]);
+        let mut scores = scratch.take(&[c, cap]);
+
+        for (layer, blk) in model.blocks.iter().enumerate() {
+            layer_norm_into(&x, &blk.ln1_s, &blk.ln1_b, &mut h);
+            blk.attn.qkv_into(&h, &mut qkv);
+            {
+                let (kc, vc) = kv.region_mut(slot, layer);
+                blk.attn.attend_prefill(&qkv, kc, vc, pos0, cap,
+                                        &mut scores, &mut ctx);
+            }
+            blk.attn.out_proj_into(&ctx, &mut attn_y);
+            for (o, v) in x.data.iter_mut().zip(&attn_y.data) {
+                *o += v;
+            }
+            layer_norm_into(&x, &blk.ln2_s, &blk.ln2_b, &mut h);
+            blk.ffn.forward_into(&h, &mut ffn_y, scratch);
+            for (o, v) in x.data.iter_mut().zip(&ffn_y.data) {
+                *o += v;
+            }
+        }
+
+        // next-token logits from the chunk's LAST row only (the lm-head
+        // gemm over the whole chunk would be p*vocab wasted work)
+        let mut last = scratch.take(&[1, d]);
+        last.data.copy_from_slice(&x.data[(c - 1) * d..c * d]);
+        layer_norm_into(&last, &model.lnf_s, &model.lnf_b, &mut h);
+        logits.resize_to(&[1, dims.vocab]);
+        gemm_nt_into(&h, &model.tok_emb, logits);
+
+        scratch.give(x);
+        scratch.give(h);
+        scratch.give(qkv);
+        scratch.give(ctx);
+        scratch.give(attn_y);
+        scratch.give(ffn_y);
+        scratch.give(scores);
+        scratch.give(last);
+    }
+
+    /// Convenience: prefill a whole prompt in chunks of at most
+    /// `chunk_tokens`, leaving `logits` as after the final chunk. The
+    /// scheduler drives [`InferEngine::prefill_chunk`] directly instead
+    /// (its chunks share a per-step token budget with decode lanes);
+    /// tests and one-shot paths use this.
+    pub fn prefill_chunked(&mut self, prompt: &[u32], slot: usize,
+                           chunk_tokens: usize, kv: &mut KvPool,
+                           logits: &mut Tensor) {
+        assert!(!prompt.is_empty(), "empty prompt");
+        let chunk_tokens = chunk_tokens.max(1);
+        let mut pos = 0;
+        while pos < prompt.len() {
+            let c = chunk_tokens.min(prompt.len() - pos);
+            self.prefill_chunk(&prompt[pos..pos + c], slot, pos, kv, logits);
+            pos += c;
         }
     }
 }
@@ -485,7 +616,7 @@ mod tests {
         let mut kv = engine.alloc_kv(1);
         let slot = kv.acquire().unwrap();
         let mut logits = Tensor::zeros(&[0]);
-        engine.prefill(&[2u32, 7, 11, 4, 29], slot, &mut kv, &mut logits);
+        engine.prefill_reference(&[2u32, 7, 11, 4, 29], slot, &mut kv, &mut logits);
         let last = &full.data[4 * 32..5 * 32];
         for (j, (&a, &b)) in logits.data.iter().zip(last).enumerate() {
             assert!((a - b).abs() < 1e-5, "logit {j}: {a} vs {b}");
@@ -519,6 +650,69 @@ mod tests {
     }
 
     #[test]
+    fn chunked_prefill_matches_reference_and_decode_continues() {
+        let dims = tiny_dims();
+        let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 13)).unwrap();
+        let prompt = [2u32, 7, 11, 4, 29, 1, 30];
+        // oracle: one token per step through the decode path
+        let mut er = InferEngine::new(model.clone());
+        let mut kvr = er.alloc_kv(1);
+        let sr = kvr.acquire().unwrap();
+        let mut ref_logits = Tensor::zeros(&[0]);
+        er.prefill_reference(&prompt, sr, &mut kvr, &mut ref_logits);
+        for chunk in [1usize, 2, prompt.len(), prompt.len() + 3] {
+            let mut ec = InferEngine::new(model.clone());
+            let mut kvc = ec.alloc_kv(1);
+            let sc = kvc.acquire().unwrap();
+            let mut logits = Tensor::zeros(&[0]);
+            ec.prefill_chunked(&prompt, sc, chunk, &mut kvc, &mut logits);
+            assert_eq!(logits.shape, vec![1, dims.vocab]);
+            for (j, (&a, &b)) in logits.data.iter().zip(&ref_logits.data).enumerate() {
+                assert!((a - b).abs() < 1e-5, "chunk {chunk} logit {j}: {a} vs {b}");
+            }
+            // the chunk-filled KV cache supports further decode steps
+            let mut dr = Tensor::zeros(&[0]);
+            let mut dc = Tensor::zeros(&[0]);
+            for (t, tok) in [3u32, 9].into_iter().enumerate() {
+                let pos = prompt.len() + t;
+                er.decode_step(&[DecodeLane { slot: sr, token: tok, pos }],
+                               &mut kvr, &mut dr);
+                ec.decode_step(&[DecodeLane { slot: sc, token: tok, pos }],
+                               &mut kvc, &mut dc);
+                for (j, (&a, &b)) in dc.data.iter().zip(&dr.data).enumerate() {
+                    assert!((a - b).abs() < 1e-5,
+                            "chunk {chunk} decode {t} logit {j}: {a} vs {b}");
+                }
+            }
+            // reset the reference KV for the next chunk size
+            er.prefill_reference(&prompt, sr, &mut kvr, &mut ref_logits);
+        }
+    }
+
+    #[test]
+    fn warmed_chunked_prefill_is_allocation_free() {
+        let dims = tiny_dims();
+        let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 17)).unwrap();
+        let mut engine = InferEngine::new(model);
+        let mut kv = engine.alloc_kv(2);
+        engine.warm_prefill(4);
+        let (s0, s1) = (kv.acquire().unwrap(), kv.acquire().unwrap());
+        let mut logits = Tensor::zeros(&[0]);
+        // one shakedown chunk (the caller-owned logits buffer grows once)
+        engine.prefill_chunk(&[1u32, 2, 3, 4], s0, 0, &mut kv, &mut logits);
+        let (_, fresh) = engine.scratch_counters();
+        // steady state: varied chunk sizes <= warm size, both slots
+        for round in 0..4u32 {
+            engine.prefill_chunk(&[5u32, 6, 7], s1, 0, &mut kv, &mut logits);
+            engine.prefill_chunk(&[8u32], s1, 3, &mut kv, &mut logits);
+            engine.prefill_chunk(&[(round % 31) as u32, 9, 10, 11], s0, 0,
+                                 &mut kv, &mut logits);
+        }
+        let (_, fresh_after) = engine.scratch_counters();
+        assert_eq!(fresh, fresh_after, "steady-state chunked prefill allocated");
+    }
+
+    #[test]
     fn lane_results_independent_of_batch_composition() {
         // the same (slot, token, pos) lane produces identical logits
         // whether it decodes alone or alongside another sequence
@@ -528,7 +722,7 @@ mod tests {
         let mut kv1 = e1.alloc_kv(1);
         let a1 = kv1.acquire().unwrap();
         let mut solo = Tensor::zeros(&[0]);
-        e1.prefill(&[3u32, 8, 2], a1, &mut kv1, &mut solo);
+        e1.prefill_reference(&[3u32, 8, 2], a1, &mut kv1, &mut solo);
 
         let mut e2 = InferEngine::new(model);
         let mut kv2 = e2.alloc_kv(2);
@@ -536,7 +730,7 @@ mod tests {
         let b2 = kv2.acquire().unwrap();
         let mut logits = Tensor::zeros(&[0]);
         // interleave: feed the same prompt on a2 while b2 decodes junk
-        e2.prefill(&[6u32], b2, &mut kv2, &mut logits);
+        e2.prefill_reference(&[6u32], b2, &mut kv2, &mut logits);
         for (t, &tok) in [3u32, 8, 2].iter().enumerate() {
             let lanes = [
                 DecodeLane { slot: a2, token: tok, pos: t },

@@ -2,17 +2,47 @@
 //!
 //! The serving half of the system (the trainer being the other): a
 //! frozen [`InferModel`] keeps every FFN weight permanently in
-//! compressed 2:4 form so decode-time FFN forwards run through the tiled
-//! `spmm_nt` kernels, a slot-based [`KvPool`] holds per-sequence K/V in
-//! arena-carved storage, and a continuous-batching [`Scheduler`] admits,
-//! decodes, and retires requests at step granularity on the persistent
-//! kernel thread pool. See the crate docs for the `[serve]` config table
-//! and the `generate` / `serve-bench` CLI subcommands.
+//! compressed 2:4 form so serving-time FFN forwards run through the
+//! tiled `spmm_nt` kernels, a slot-based [`KvPool`] holds per-sequence
+//! K/V in arena-carved storage, and a continuous-batching [`Scheduler`]
+//! admits, prefills, decodes, and retires requests at step granularity
+//! on the persistent kernel thread pool. See the crate docs for the
+//! `[serve]` config table and the `generate` / `serve-bench` CLI
+//! subcommands.
 //!
-//! Module map: [`engine`] (frozen model + batched decode), [`kv_cache`]
-//! (KV slot pool), [`scheduler`] (continuous batching), [`generate`]
-//! (greedy / temperature / top-k sampling), [`bench`] (open-loop load
-//! harness behind `serve-bench`).
+//! ## Chunked-prefill data flow
+//!
+//! Prompt ingestion is MATRIX-FORM: a prompt enters the model in chunks
+//! of up to `[serve] prefill_chunk` tokens, each chunk one `[chunk, d]`
+//! activation block, so the compressed FFNs see the matrix-matrix
+//! `spmm_nt` shapes where the paper's 2:4 speedup amortizes — instead
+//! of a per-token GEMV stream. Per chunk
+//! ([`InferEngine::prefill_chunk`]):
+//!
+//! 1. chunk token+position embeddings land in one (chunk, d) scratch
+//!    block;
+//! 2. per layer: batched `qkv_into` over the chunk, then
+//!    `Attention::attend_prefill` writes the chunk's K/V rows
+//!    CONTIGUOUSLY into the sequence's [`KvPool`] region at
+//!    `pos0..pos0+chunk` and attends each row causally over the cached
+//!    prefix plus the preceding chunk rows (rows fan out across the
+//!    kernel pool once the K/V writes are done); batched `out_proj_into`
+//!    and the compressed-FFN `forward_into` run over the whole block;
+//! 3. next-token logits come from the chunk's last row only.
+//!
+//! The scheduler interleaves these chunks with decode: every step,
+//! decode lanes reserve the `max_batch_tokens` step budget first, then
+//! still-prefilling sequences spend the remainder in chunks (long
+//! prompts span steps). The retained one-token-per-step
+//! [`InferEngine::prefill_reference`] is the differential oracle the
+//! `serve_prefill` test suite pins chunked prefill against (1e-5).
+//!
+//! Module map: [`engine`] (frozen model + batched decode + chunked
+//! prefill), [`kv_cache`] (KV slot pool), [`scheduler`] (continuous
+//! batching + chunking admission), [`generate`] (greedy / temperature /
+//! top-k sampling), [`bench`] (open-loop load harness behind
+//! `serve-bench`: decode p50/p99 charged per lane, TTFT and
+//! `prefill_tokens_per_s` reported from the prefill path).
 
 pub mod bench;
 pub mod engine;
@@ -24,4 +54,6 @@ pub use bench::{run_open_loop, BenchResult};
 pub use engine::{synthetic_checkpoint, DecodeLane, InferEngine, InferModel};
 pub use generate::{argmax, sample, Sampling};
 pub use kv_cache::KvPool;
-pub use scheduler::{Completion, Request, Scheduler, StepReport};
+pub use scheduler::{
+    Completion, Request, Scheduler, StepReport, DEFAULT_PREFILL_CHUNK,
+};

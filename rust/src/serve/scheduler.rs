@@ -1,23 +1,41 @@
-//! Continuous-batching scheduler: request queue → decode lanes.
+//! Continuous-batching scheduler: request queue → prefill chunks +
+//! decode lanes.
 //!
 //! Sequences join and leave the running batch at *step* granularity
-//! (vLLM-style continuous batching, scaled to this substrate): each
-//! [`Scheduler::step`] first admits queued requests while capacity
-//! allows — a free KV slot AND the committed-token budget
-//! (`max_batch_tokens`, the peak KV footprint a sequence may reach) —
-//! then decodes one token for every active sequence in a single batched
-//! [`InferEngine::decode_step`], then retires finished sequences,
-//! releasing their KV slots for the next admission. The decode itself
-//! fans out per-sequence attention onto the persistent kernel thread
-//! pool.
+//! (vLLM-style continuous batching, scaled to this substrate). Each
+//! [`Scheduler::step`] runs four phases:
+//!
+//! 1. **admission** — queued requests become active while capacity
+//!    allows: a free KV slot AND the committed-token budget
+//!    (`max_batch_tokens` also bounds the summed peak KV footprint,
+//!    prompt + max_new, of the admitted batch). Admission claims the
+//!    slot only; no prompt work happens here.
+//! 2. **lane reservation** — sequences past prefill reserve one token
+//!    each of the per-step token budget (`max_batch_tokens`), decode
+//!    before prefill so in-flight sequences are never starved.
+//! 3. **chunked prefill** — each still-prefilling sequence feeds up to
+//!    `prefill_chunk` prompt tokens (capped by the remaining step
+//!    budget) through [`InferEngine::prefill_chunk`] as one matrix-form
+//!    activation block; long prompts span steps. A sequence whose
+//!    prompt completes samples its first token off the prefill logits.
+//! 4. **batched decode + retirement** — one [`InferEngine::decode_step`]
+//!    over the reserved lanes, then finished sequences release their KV
+//!    slots for the next admission.
+//!
+//! A step therefore processes at most `max_batch_tokens` tokens (decode
+//! lanes + prefill chunk tokens — the property tests pin this), and the
+//! [`StepReport`] splits wall time into `prefill_ms` / `decode_ms` so
+//! the bench can report TTFT separately from per-token decode latency.
 //!
 //! Determinism: greedy decoding of a given prompt yields the same tokens
-//! whatever the arrival interleaving, because each lane's arithmetic is
-//! independent of batch composition and each sequence's sampling RNG is
-//! derived from (scheduler seed, request id) alone. The scheduler
-//! property test pins this.
+//! whatever the arrival interleaving or chunk size, because each lane's
+//! arithmetic is independent of batch composition, chunked prefill
+//! reproduces the one-token reference path, and each sequence's sampling
+//! RNG is derived from (scheduler seed, request id) alone. The scheduler
+//! property tests pin this.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -25,6 +43,11 @@ use crate::util::rng::Rng;
 use super::engine::{DecodeLane, InferEngine};
 use super::generate::{sample, Sampling};
 use super::kv_cache::KvPool;
+
+/// Default prompt-chunk token budget ([`ServeConfig`] mirrors this).
+///
+/// [`ServeConfig`]: crate::config::ServeConfig
+pub const DEFAULT_PREFILL_CHUNK: usize = 8;
 
 /// An inference request. `id` must be unique per scheduler (it seeds the
 /// sequence's sampling RNG).
@@ -47,24 +70,39 @@ pub struct Completion {
 /// What one scheduler step did (bench bookkeeping).
 #[derive(Clone, Debug, Default)]
 pub struct StepReport {
-    /// sequences that decoded a token this step (batch occupancy)
+    /// sequences that decoded a token this step (batch occupancy); also
+    /// the decode-lane share of the per-step token budget
     pub occupancy: usize,
     /// tokens emitted this step (decode lanes + prefill first-tokens)
     pub decoded: usize,
-    /// requests admitted (prefilled) this step
+    /// requests admitted (slot claimed) this step
     pub admitted: usize,
-    /// prompt tokens prefilled this step
+    /// prompt tokens prefilled this step (chunked; `occupancy +
+    /// prefilled <= max_batch_tokens` — the step token budget)
     pub prefilled: usize,
+    /// requests whose FIRST output token was sampled this step (off the
+    /// final prefill chunk's logits) — the bench's TTFT hook
+    pub first_token_ids: Vec<u64>,
+    /// wall time of the chunked-prefill phase
+    pub prefill_ms: f64,
+    /// wall time of the batched-decode phase (the bench charges each
+    /// decode-lane token `prefill_ms + decode_ms` — the lane's real
+    /// inter-token gap — instead of a whole-step per-token average)
+    pub decode_ms: f64,
     pub finished: Vec<Completion>,
 }
 
 struct ActiveSeq {
     id: u64,
     slot: usize,
-    prompt_len: usize,
+    prompt: Vec<u32>,
+    /// prompt tokens already written into the KV cache (chunked-prefill
+    /// progress; `filled < prompt.len()` means still prefilling)
+    filled: usize,
     /// tokens currently in the KV cache (the next decode's offset)
     pos: usize,
-    /// most recent token (fed at the next decode step)
+    /// most recent token (fed at the next decode step; valid once
+    /// prefill completed)
     last: u32,
     /// generated tokens so far
     out: Vec<u32>,
@@ -74,8 +112,13 @@ struct ActiveSeq {
 }
 
 impl ActiveSeq {
+    fn prefilling(&self) -> bool {
+        self.filled < self.prompt.len()
+    }
+
     fn done(&self) -> bool {
-        self.out.len() >= self.max_new || self.pos >= self.max_total
+        !self.prefilling()
+            && (self.out.len() >= self.max_new || self.pos >= self.max_total)
     }
 }
 
@@ -87,23 +130,37 @@ pub struct Scheduler {
     sampling: Sampling,
     max_seqs: usize,
     max_batch_tokens: usize,
+    prefill_chunk: usize,
     seed: u64,
     /// reused per-step buffers
     lanes: Vec<DecodeLane>,
+    lane_seq: Vec<usize>,
     logits: Tensor,
     sample_work: Vec<(f32, u32)>,
     pub steps: u64,
 }
 
 impl Scheduler {
-    /// `max_seqs` bounds concurrent sequences (KV slots are preallocated
-    /// for exactly that many); `max_batch_tokens` bounds the summed peak
-    /// context (prompt + max_new) of the admitted batch.
-    pub fn new(mut engine: InferEngine, max_seqs: usize, max_batch_tokens: usize,
+    /// [`Scheduler::with_prefill_chunk`] at [`DEFAULT_PREFILL_CHUNK`].
+    pub fn new(engine: InferEngine, max_seqs: usize, max_batch_tokens: usize,
                sampling: Sampling, seed: u64) -> Scheduler {
+        Self::with_prefill_chunk(engine, max_seqs, max_batch_tokens,
+                                 DEFAULT_PREFILL_CHUNK, sampling, seed)
+    }
+
+    /// `max_seqs` bounds concurrent sequences (KV slots are preallocated
+    /// for exactly that many); `max_batch_tokens` bounds both the summed
+    /// peak context (prompt + max_new) of the admitted batch and the
+    /// tokens processed per step (decode lanes + prefill chunks);
+    /// `prefill_chunk` is the per-sequence, per-step prompt-chunk size.
+    pub fn with_prefill_chunk(mut engine: InferEngine, max_seqs: usize,
+                              max_batch_tokens: usize, prefill_chunk: usize,
+                              sampling: Sampling, seed: u64) -> Scheduler {
         let max_seqs = max_seqs.max(1);
+        let prefill_chunk = prefill_chunk.max(1);
         let kv = engine.alloc_kv(max_seqs);
         engine.warm(max_seqs);
+        engine.warm_prefill(prefill_chunk);
         Scheduler {
             engine,
             kv: Some(kv),
@@ -112,8 +169,10 @@ impl Scheduler {
             sampling,
             max_seqs,
             max_batch_tokens: max_batch_tokens.max(1),
+            prefill_chunk,
             seed,
             lanes: Vec::with_capacity(max_seqs),
+            lane_seq: Vec::with_capacity(max_seqs),
             logits: Tensor::zeros(&[0]),
             sample_work: Vec::new(),
             steps: 0,
@@ -147,14 +206,17 @@ impl Scheduler {
         self.active.iter().map(|s| s.max_total).sum()
     }
 
-    /// One scheduler step: admit → decode one token per active sequence
-    /// → retire. Returns what happened (occupancy, completions).
+    /// One scheduler step: admit → reserve decode lanes → chunked
+    /// prefill → batched decode → retire. Returns what happened
+    /// (occupancy, prefill/decode timing split, completions). Processes
+    /// at most `max_batch_tokens` tokens (decode lanes + prefill
+    /// chunks).
     pub fn step(&mut self) -> StepReport {
         let mut report = StepReport::default();
         let n_ctx = self.engine.model.dims.n_ctx;
         let mut kv = self.kv.take().expect("scheduler already shut down");
 
-        // --- admission (step granularity) ---------------------------------
+        // --- admission (slot + committed-KV budget; no prompt work) ------
         while self.active.len() < self.max_seqs {
             let Some(front) = self.queue.front() else { break };
             let max_total = (front.prompt.len() + front.max_new).min(n_ctx);
@@ -165,43 +227,79 @@ impl Scheduler {
             }
             let Some(slot) = kv.acquire() else { break };
             let req = self.queue.pop_front().unwrap();
-            let prompt_len = req.prompt.len();
-            self.engine.prefill(&req.prompt, slot, &mut kv, &mut self.logits);
-            let mut rng = Rng::new(self.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
-            let first = sample(&self.logits.data, &self.sampling, &mut rng,
-                               &mut self.sample_work);
-            let mut out = Vec::with_capacity(req.max_new.max(1));
-            out.push(first);
+            let rng = Rng::new(self.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
             self.active.push(ActiveSeq {
                 id: req.id,
                 slot,
-                prompt_len,
-                pos: prompt_len,
-                last: first,
-                out,
+                prompt: req.prompt,
+                filled: 0,
+                pos: 0,
+                last: 0,
+                out: Vec::with_capacity(req.max_new.max(1)),
                 max_new: req.max_new.max(1),
                 max_total,
                 rng,
             });
             report.admitted += 1;
-            report.prefilled += prompt_len;
-            report.decoded += 1; // the first token sampled off the prefill
         }
 
-        // --- batched decode ----------------------------------------------
+        // --- lane reservation: decode before prefill in the step budget --
+        let mut step_tokens = 0usize;
         self.lanes.clear();
-        for seq in self.active.iter().filter(|s| !s.done()) {
+        self.lane_seq.clear();
+        for (idx, seq) in self.active.iter().enumerate() {
+            if seq.prefilling() || seq.done() || step_tokens >= self.max_batch_tokens {
+                continue;
+            }
+            step_tokens += 1;
             self.lanes.push(DecodeLane { slot: seq.slot, token: seq.last, pos: seq.pos });
+            self.lane_seq.push(idx);
         }
         report.occupancy = self.lanes.len();
+
+        // --- chunked prefill with the remaining budget -------------------
+        let t_prefill = Instant::now();
+        {
+            let engine = &mut self.engine;
+            let logits = &mut self.logits;
+            let sampling = &self.sampling;
+            let work = &mut self.sample_work;
+            for seq in self.active.iter_mut() {
+                if !seq.prefilling() {
+                    continue;
+                }
+                if step_tokens >= self.max_batch_tokens {
+                    break;
+                }
+                let c = self
+                    .prefill_chunk
+                    .min(seq.prompt.len() - seq.filled)
+                    .min(self.max_batch_tokens - step_tokens);
+                engine.prefill_chunk(&seq.prompt[seq.filled..seq.filled + c],
+                                     seq.slot, seq.filled, &mut kv, logits);
+                seq.filled += c;
+                step_tokens += c;
+                report.prefilled += c;
+                if !seq.prefilling() {
+                    // prompt complete: first token off the prefill logits
+                    let first = sample(&logits.data, sampling, &mut seq.rng, work);
+                    seq.pos = seq.prompt.len();
+                    seq.last = first;
+                    seq.out.push(first);
+                    report.decoded += 1;
+                    report.first_token_ids.push(seq.id);
+                }
+            }
+        }
+        report.prefill_ms = t_prefill.elapsed().as_secs_f64() * 1e3;
+
+        // --- batched decode over the reserved lanes ----------------------
+        let t_decode = Instant::now();
         if !self.lanes.is_empty() {
             self.engine.decode_step(&self.lanes, &mut kv, &mut self.logits);
             let vocab = self.engine.model.dims.vocab;
-            let mut row = 0usize;
-            for seq in self.active.iter_mut() {
-                if seq.done() {
-                    continue;
-                }
+            for (row, &idx) in self.lane_seq.iter().enumerate() {
+                let seq = &mut self.active[idx];
                 let logits_row = &self.logits.data[row * vocab..(row + 1) * vocab];
                 let tok = sample(logits_row, &self.sampling, &mut seq.rng,
                                  &mut self.sample_work);
@@ -209,8 +307,8 @@ impl Scheduler {
                 seq.last = tok;
                 seq.out.push(tok);
                 report.decoded += 1;
-                row += 1;
             }
+            report.decode_ms = t_decode.elapsed().as_secs_f64() * 1e3;
         }
 
         // --- retirement ---------------------------------------------------
@@ -221,7 +319,7 @@ impl Scheduler {
                 kv.release(seq.slot);
                 report.finished.push(Completion {
                     id: seq.id,
-                    prompt_len: seq.prompt_len,
+                    prompt_len: seq.prompt.len(),
                     tokens: seq.out,
                 });
             } else {
@@ -358,6 +456,73 @@ mod tests {
             assert_eq!(x.tokens, y.tokens,
                        "request {} output depends on interleaving", x.id);
         }
+    }
+
+    #[test]
+    fn outputs_invariant_to_chunk_size_and_step_budget_never_exceeded() {
+        // greedy outputs must not depend on the prefill chunk size, the
+        // per-step token budget, or arrival staggering — and no step may
+        // process more than max_batch_tokens (decode lanes + prefill)
+        let prompts: [&[u32]; 3] = [&[1, 2, 3, 4, 5, 6, 7], &[9, 8, 7], &[4, 4, 4, 4, 4]];
+        let mut base: Option<Vec<Completion>> = None;
+        for (max_seqs, budget) in [(3usize, 1000usize), (2, 5)] {
+            for chunk in [1usize, 2, 5, 64] {
+                let mut sch = Scheduler::with_prefill_chunk(
+                    engine(11), max_seqs, budget, chunk, Sampling::Greedy, 3);
+                sch.submit(req(0, prompts[0], 3));
+                let mut done = Vec::new();
+                let mut first = sch.step();
+                assert!(first.occupancy + first.prefilled <= budget);
+                done.append(&mut first.finished);
+                sch.submit(req(1, prompts[1], 3));
+                sch.submit(req(2, prompts[2], 3));
+                let mut guard = 0;
+                while !sch.is_idle() && guard < 500 {
+                    let r = sch.step();
+                    assert!(
+                        r.occupancy + r.prefilled <= budget,
+                        "budget {budget} chunk {chunk}: step processed {} + {} tokens",
+                        r.occupancy, r.prefilled
+                    );
+                    done.extend(r.finished);
+                    guard += 1;
+                }
+                assert_eq!(done.len(), 3, "budget {budget} chunk {chunk}: lost requests");
+                done.sort_by_key(|c| c.id);
+                match &base {
+                    None => base = Some(done),
+                    Some(b) => {
+                        for (x, y) in b.iter().zip(&done) {
+                            assert_eq!(
+                                x.tokens, y.tokens,
+                                "request {} output depends on chunk {chunk} / budget {budget}",
+                                x.id
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn long_prompt_spans_steps_and_reports_first_token() {
+        // prompt 7, chunk 3 -> prefill spans 3 steps; the first-token id
+        // shows up exactly once, on the step the prompt completes
+        let mut sch = Scheduler::with_prefill_chunk(engine(5), 1, 1000, 3,
+                                                    Sampling::Greedy, 0);
+        sch.submit(req(42, &[1, 2, 3, 4, 5, 6, 7], 2));
+        let r1 = sch.step();
+        assert_eq!((r1.prefilled, r1.decoded), (3, 0));
+        assert!(r1.first_token_ids.is_empty());
+        let r2 = sch.step();
+        assert_eq!((r2.prefilled, r2.decoded), (3, 0));
+        let r3 = sch.step();
+        assert_eq!((r3.prefilled, r3.decoded), (1, 1));
+        assert_eq!(r3.first_token_ids, vec![42]);
+        let done = sch.run_until_idle(50);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 2);
     }
 
     #[test]

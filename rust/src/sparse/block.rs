@@ -348,6 +348,84 @@ impl Attention {
         }
     }
 
+    /// Batched prefill attention for ONE sequence: append a whole chunk
+    /// of `c` tokens' K/V at rows `pos0..pos0+c` of the (cap, d)
+    /// row-major caches in one contiguous pass, then attend each chunk
+    /// row causally over cache rows `0..=pos0+i` — within-chunk and
+    /// against already-cached context at once. `qkv` is the chunk's
+    /// (c, 3d) projection from [`Attention::qkv_into`]; `scores`
+    /// provides `c` rows of `cap` slots; `ctx` (c, d) receives the
+    /// pre-out-projection contexts.
+    ///
+    /// The K/V writes complete before any row attends, so rows run on
+    /// the kernel pool in parallel (each owns its scores/ctx row, the
+    /// caches are read-only by then). Per-row arithmetic matches
+    /// [`Attention::attend_cached`] operation for operation, which is
+    /// what lets chunked prefill reproduce the one-token reference path
+    /// (`InferEngine::prefill_reference`) to float precision.
+    pub fn attend_prefill(&self, qkv: &Tensor, k_cache: &mut [f32],
+                          v_cache: &mut [f32], pos0: usize, cap: usize,
+                          scores: &mut Tensor, ctx: &mut Tensor) {
+        let (c, three_d) = qkv.dims2();
+        let d = three_d / 3;
+        let h = self.n_heads;
+        let hd = d / h;
+        debug_assert!(c >= 1);
+        debug_assert!(pos0 + c <= cap, "prefill chunk overflows KV cap");
+        debug_assert!(cap * d <= k_cache.len() && cap * d <= v_cache.len());
+        // contiguous chunk write: rows pos0..pos0+c of both caches
+        for i in 0..c {
+            let row = &qkv.data[i * 3 * d..(i + 1) * 3 * d];
+            k_cache[(pos0 + i) * d..(pos0 + i + 1) * d]
+                .copy_from_slice(&row[d..2 * d]);
+            v_cache[(pos0 + i) * d..(pos0 + i + 1) * d]
+                .copy_from_slice(&row[2 * d..3 * d]);
+        }
+        ctx.resize_to(&[c, d]);
+        scores.resize_to(&[c, cap]);
+        let scale = 1.0 / (hd as f32).sqrt();
+        // caches are read-only from here; one chunk row per work unit,
+        // each owning its scores row and ctx row
+        let kc: &[f32] = k_cache;
+        let vc: &[f32] = v_cache;
+        let ctx_ptr = MutPtr::new(&mut ctx.data);
+        let scores_ptr = MutPtr::new(&mut scores.data);
+        let qkv_ref = &qkv.data;
+        parallel_rows(c, 1, &|u0, u1| {
+            for i in u0..u1 {
+                let pos = pos0 + i;
+                let srow = unsafe { scores_ptr.range(i * cap, (i + 1) * cap) };
+                let crow = unsafe { ctx_ptr.range(i * d, (i + 1) * d) };
+                let qrow = &qkv_ref[i * 3 * d..(i + 1) * 3 * d];
+                for head in 0..h {
+                    let q = &qrow[head * hd..head * hd + hd];
+                    let s = &mut srow[..pos + 1];
+                    for (t, st) in s.iter_mut().enumerate() {
+                        let kt = &kc[t * d + head * hd..t * d + head * hd + hd];
+                        *st = super::gemm::dot(q, kt) * scale;
+                    }
+                    let m = s.iter().cloned().fold(f32::MIN, f32::max);
+                    let mut z = 0f32;
+                    for st in s.iter_mut() {
+                        *st = (*st - m).exp();
+                        z += *st;
+                    }
+                    for st in s.iter_mut() {
+                        *st /= z;
+                    }
+                    let out = &mut crow[head * hd..head * hd + hd];
+                    out.fill(0.0);
+                    for (t, &pt) in s.iter().enumerate() {
+                        let vt = &vc[t * d + head * hd..t * d + head * hd + hd];
+                        for k in 0..hd {
+                            out[k] += pt * vt[k];
+                        }
+                    }
+                }
+            }
+        });
+    }
+
     /// Batched output projection of the decode contexts:
     /// `y = ctx W_o^T + b_o`, shapes (m, d) -> (m, d).
     pub fn out_proj_into(&self, ctx: &Tensor, y: &mut Tensor) {
@@ -568,6 +646,70 @@ mod tests {
             for j in 0..d {
                 assert!((y.data[j] - y_full.data[t * d + j]).abs() < 1e-5,
                         "t={t} j={j}: {} vs {}", y.data[j], y_full.data[t * d + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn attend_prefill_matches_attend_cached_and_full_forward() {
+        // a chunked prefill over [cached prefix | chunk] reproduces both
+        // the token-at-a-time attend_cached path and the full forward
+        let (d, h, n, cap) = (16, 2, 6, 8);
+        let mut rng = Rng::new(40);
+        let attn = Attention::new(d, h, &mut rng);
+        let x = rand(&[n, d], 41);
+        let (y_full, _) = attn.forward(&x, 1, n);
+
+        for prefix in [0usize, 2] {
+            // reference caches via attend_cached, one token at a time
+            let mut k_ref = vec![0f32; cap * d];
+            let mut v_ref = vec![0f32; cap * d];
+            let mut srow = vec![0f32; cap];
+            let mut ctx1 = Tensor::zeros(&[1, d]);
+            let mut qkv = Tensor::zeros(&[0]);
+            let mut ref_ctx = Tensor::zeros(&[n, d]);
+            for t in 0..n {
+                let xt = Tensor::from_vec(&[1, d], x.data[t * d..(t + 1) * d].to_vec());
+                attn.qkv_into(&xt, &mut qkv);
+                attn.attend_cached(&qkv.data, &mut k_ref, &mut v_ref, t,
+                                   &mut srow, &mut ctx1.data);
+                ref_ctx.data[t * d..(t + 1) * d].copy_from_slice(&ctx1.data);
+            }
+            // chunked: prefix tokens one at a time, the rest in one chunk
+            let mut k = vec![0f32; cap * d];
+            let mut v = vec![0f32; cap * d];
+            for t in 0..prefix {
+                let xt = Tensor::from_vec(&[1, d], x.data[t * d..(t + 1) * d].to_vec());
+                attn.qkv_into(&xt, &mut qkv);
+                attn.attend_cached(&qkv.data, &mut k, &mut v, t,
+                                   &mut srow, &mut ctx1.data);
+            }
+            let c = n - prefix;
+            let xc = Tensor::from_vec(&[c, d], x.data[prefix * d..n * d].to_vec());
+            attn.qkv_into(&xc, &mut qkv);
+            let mut scores = Tensor::zeros(&[0]);
+            let mut ctx = Tensor::zeros(&[0]);
+            attn.attend_prefill(&qkv, &mut k, &mut v, prefix, cap,
+                                &mut scores, &mut ctx);
+            // cache rows identical; contexts match the reference path
+            assert_eq!(&k[..n * d], &k_ref[..n * d], "prefix {prefix}: K rows");
+            assert_eq!(&v[..n * d], &v_ref[..n * d], "prefix {prefix}: V rows");
+            for i in 0..c {
+                for j in 0..d {
+                    let (a, b) = (ctx.data[i * d + j], ref_ctx.data[(prefix + i) * d + j]);
+                    assert!((a - b).abs() < 1e-6,
+                            "prefix {prefix} row {i} col {j}: {a} vs {b}");
+                }
+            }
+            // and the projected outputs match the full causal forward
+            let mut y = Tensor::zeros(&[0]);
+            attn.out_proj_into(&ctx, &mut y);
+            for i in 0..c {
+                for j in 0..d {
+                    let (a, b) = (y.data[i * d + j], y_full.data[(prefix + i) * d + j]);
+                    assert!((a - b).abs() < 1e-5,
+                            "prefix {prefix} out row {i} col {j}: {a} vs {b}");
+                }
             }
         }
     }

@@ -192,16 +192,7 @@ pub fn kernel_bench_regressions(
     path: &std::path::Path,
     threshold: f64,
 ) -> Result<Vec<String>> {
-    let text = match std::fs::read_to_string(path) {
-        Ok(t) => t,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
-        Err(e) => {
-            return Err(e)
-                .with_context(|| format!("reading bench record {}", path.display()))
-        }
-    };
-    let j = Json::parse(&text)
-        .with_context(|| format!("corrupt bench record {}", path.display()))?;
+    let Some(j) = read_bench_record(path)? else { return Ok(Vec::new()) };
     let Json::Obj(map) = &j else {
         anyhow::bail!("bench record {} is not a JSON object", path.display());
     };
@@ -223,28 +214,92 @@ pub fn kernel_bench_regressions(
         }
         let Some(prev) = map.get(&format!("{name}.prev")) else { continue };
         let (Json::Arr(cur), Json::Arr(old)) = (value, prev) else { continue };
-        let mut baseline: BTreeMap<String, f64> = BTreeMap::new();
-        for r in old {
-            if let (Ok(k), Ok(g)) = (rec_key(r), r.get("gflops").and_then(|g| g.as_f64())) {
-                baseline.insert(k, g);
-            }
+        warnings.extend(metric_regressions(
+            cur, old, &rec_key, "gflops", threshold, name, "GFLOP/s",
+        ));
+    }
+    Ok(warnings)
+}
+
+/// Compare the serve bench's `prefill_tokens_per_s` section against its
+/// `.prev` twin in BENCH_serve.json (entries matched on max_seqs /
+/// max_batch_tokens / prefill_chunk / threads) and return a warning per
+/// configuration whose prefill throughput dropped by more than
+/// `threshold` (a fraction). Warn-only analogue of
+/// [`kernel_bench_regressions`] for the serving trajectory; missing
+/// file or missing `.prev` yields no warnings.
+pub fn serve_bench_regressions(
+    path: &std::path::Path,
+    threshold: f64,
+) -> Result<Vec<String>> {
+    let Some(j) = read_bench_record(path)? else { return Ok(Vec::new()) };
+    let section = "prefill_tokens_per_s";
+    let (Some(Json::Arr(cur)), Some(Json::Arr(old))) =
+        (j.opt(section), j.opt(&format!("{section}.prev")))
+    else {
+        return Ok(Vec::new());
+    };
+    let rec_key = |r: &Json| -> Result<String> {
+        Ok(format!(
+            "max_seqs={} bt={} chunk={} t{}",
+            r.get("max_seqs")?.as_usize()?,
+            r.get("max_batch_tokens")?.as_usize()?,
+            r.get("prefill_chunk")?.as_usize()?,
+            r.get("threads")?.as_usize()?,
+        ))
+    };
+    Ok(metric_regressions(cur, old, &rec_key, section, threshold, section, "tok/s"))
+}
+
+/// Parse a bench record; a missing file is `None` (first run — no
+/// baseline), anything unreadable or unparseable is an error.
+fn read_bench_record(path: &std::path::Path) -> Result<Option<Json>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("reading bench record {}", path.display()))
         }
-        for r in cur {
-            let (Ok(k), Ok(g)) = (rec_key(r), r.get("gflops").and_then(|g| g.as_f64()))
-            else {
-                continue;
-            };
-            if let Some(&pg) = baseline.get(&k) {
-                if pg > 0.0 && g < pg * (1.0 - threshold) {
-                    warnings.push(format!(
-                        "{name}: {k}: {g:.1} GFLOP/s, was {pg:.1} ({:+.1}%)",
-                        (g / pg - 1.0) * 100.0
-                    ));
-                }
+    };
+    Ok(Some(Json::parse(&text).with_context(|| {
+        format!("corrupt bench record {}", path.display())
+    })?))
+}
+
+/// One warning line per `cur` entry whose `metric` value dropped by more
+/// than `threshold` versus the same-keyed entry of `old` (entries whose
+/// key or metric fields are malformed are skipped).
+fn metric_regressions(
+    cur: &[Json],
+    old: &[Json],
+    key: &dyn Fn(&Json) -> Result<String>,
+    metric: &str,
+    threshold: f64,
+    label: &str,
+    unit: &str,
+) -> Vec<String> {
+    let mut baseline: BTreeMap<String, f64> = BTreeMap::new();
+    for r in old {
+        if let (Ok(k), Ok(v)) = (key(r), r.get(metric).and_then(|v| v.as_f64())) {
+            baseline.insert(k, v);
+        }
+    }
+    let mut warnings = Vec::new();
+    for r in cur {
+        let (Ok(k), Ok(v)) = (key(r), r.get(metric).and_then(|v| v.as_f64())) else {
+            continue;
+        };
+        if let Some(&pv) = baseline.get(&k) {
+            if pv > 0.0 && v < pv * (1.0 - threshold) {
+                warnings.push(format!(
+                    "{label}: {k}: {v:.1} {unit}, was {pv:.1} ({:+.1}%)",
+                    (v / pv - 1.0) * 100.0
+                ));
             }
         }
     }
-    Ok(warnings)
+    warnings
 }
 
 /// Uniform row printer for the bench binaries.
@@ -351,6 +406,43 @@ mod tests {
         assert!(kernel_bench_regressions(&path, 0.15).unwrap().is_empty());
         // missing file: no baseline, no warnings
         assert!(kernel_bench_regressions(&dir.join("nope.json"), 0.15)
+            .unwrap()
+            .is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_bench_regression_gate() {
+        use crate::util::json::{num, obj};
+        let dir = std::env::temp_dir().join("sparse24_serve_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        std::fs::remove_file(&path).ok();
+        let entry = |rate: f64| {
+            Json::Arr(vec![obj(vec![
+                ("max_seqs", num(4.0)),
+                ("max_batch_tokens", num(4096.0)),
+                ("prefill_chunk", num(8.0)),
+                ("threads", num(2.0)),
+                ("prefill_tokens", num(100.0)),
+                ("prefill_tokens_per_s", num(rate)),
+                ("ttft_p50_ms", num(1.0)),
+                ("ttft_p99_ms", num(2.0)),
+            ])])
+        };
+        // first run: no baseline, no warnings
+        write_json_section_at(&path, "prefill_tokens_per_s", entry(1000.0)).unwrap();
+        assert!(serve_bench_regressions(&path, 0.15).unwrap().is_empty());
+        // 50% drop trips the gate
+        write_json_section_at(&path, "prefill_tokens_per_s", entry(500.0)).unwrap();
+        let w = serve_bench_regressions(&path, 0.15).unwrap();
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("max_seqs=4"), "{}", w[0]);
+        // an improvement produces no warning
+        write_json_section_at(&path, "prefill_tokens_per_s", entry(600.0)).unwrap();
+        assert!(serve_bench_regressions(&path, 0.15).unwrap().is_empty());
+        // missing file: no warnings
+        assert!(serve_bench_regressions(&dir.join("nope.json"), 0.15)
             .unwrap()
             .is_empty());
         std::fs::remove_dir_all(&dir).ok();

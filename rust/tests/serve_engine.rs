@@ -3,6 +3,7 @@
 //! incremental decode vs full-context recompute, and the scheduler's
 //! continuous-batching properties (everything admitted finishes; greedy
 //! outputs are independent of arrival interleaving and batch size).
+//! Chunked-prefill differentials live in `serve_prefill.rs`.
 
 use std::path::PathBuf;
 
@@ -87,7 +88,7 @@ fn kv_incremental_decode_equals_full_context_recompute() {
         let mut kv = engine.alloc_kv(1);
         let slot = kv.acquire().unwrap();
         let mut logits = Tensor::zeros(&[0]);
-        engine.prefill(&prompt, slot, &mut kv, &mut logits);
+        engine.prefill_reference(&prompt, slot, &mut kv, &mut logits);
         let last = &full.data[(t - 1) * dims.vocab..t * dims.vocab];
         let mut worst = 0f32;
         for (&a, &b) in logits.data.iter().zip(last) {
@@ -158,6 +159,54 @@ fn scheduler_all_finish_and_greedy_outputs_are_interleaving_invariant() {
                 );
             }
         }
+    }
+}
+
+/// Property sweep (proptest discipline: seeded random cases, failing
+/// seed printed): under random request loads, chunk sizes, and step
+/// budgets, the scheduler never processes more than `max_batch_tokens`
+/// tokens in a step (decode lanes + prefill chunks), never loses a
+/// request, and total prefilled tokens equal the summed prompt lengths.
+#[test]
+fn prop_scheduler_step_budget_and_conservation_under_random_load() {
+    let dims = dims();
+    let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 8)).unwrap();
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B9));
+        let chunk = 1 + rng.below(7);
+        let budget = 3 + rng.below(30);
+        let max_seqs = 1 + rng.below(3);
+        let n_req = 3 + rng.below(4);
+        let mut sch = Scheduler::with_prefill_chunk(
+            InferEngine::new(model.clone()), max_seqs, budget, chunk,
+            Sampling::Greedy, seed);
+        let mut prompt_total = 0usize;
+        for id in 0..n_req as u64 {
+            let len = 1 + rng.below(10);
+            prompt_total += len;
+            sch.submit(Request {
+                id,
+                prompt: (0..len).map(|_| rng.below(dims.vocab) as u32).collect(),
+                max_new: 1 + rng.below(4),
+            });
+        }
+        let mut prefilled_total = 0usize;
+        let mut finished = 0usize;
+        let mut guard = 0;
+        while !sch.is_idle() && guard < 3000 {
+            let r = sch.step();
+            assert!(
+                r.occupancy + r.prefilled <= budget,
+                "seed {seed}: step exceeded budget {budget}: {} lanes + {} prefill",
+                r.occupancy, r.prefilled
+            );
+            prefilled_total += r.prefilled;
+            finished += r.finished.len();
+            guard += 1;
+        }
+        assert_eq!(finished, n_req, "seed {seed}: lost requests");
+        assert_eq!(prefilled_total, prompt_total,
+                   "seed {seed}: prefilled token conservation");
     }
 }
 

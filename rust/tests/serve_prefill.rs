@@ -1,0 +1,206 @@
+//! Differential tests for batched multi-token prefill: the chunked
+//! matrix-form path (`InferEngine::prefill_chunk`) is pinned against the
+//! retained one-token-per-step oracle (`InferEngine::prefill_reference`)
+//! within 1e-5 — across chunk sizes (including chunks larger than the
+//! prompt), prompts spanning several chunks, multiple model shapes, and
+//! the decode steps that continue from the chunk-filled KV cache. Plus
+//! the zero-allocation contract for steady-state chunked prefill and the
+//! scheduler-level budget/invariance properties.
+
+use sparse24::model::ModelDims;
+use sparse24::serve::{
+    synthetic_checkpoint, DecodeLane, InferEngine, InferModel, Request, Sampling,
+    Scheduler,
+};
+use sparse24::tensor::Tensor;
+use sparse24::util::rng::Rng;
+
+fn shapes() -> Vec<ModelDims> {
+    vec![
+        // d_model indivisible shapes kept 2:4-compatible (d_ff % 4 == 0)
+        ModelDims { vocab: 40, d_model: 24, n_layers: 2, n_heads: 3, d_ff: 12, n_ctx: 24 },
+        ModelDims { vocab: 64, d_model: 16, n_layers: 3, n_heads: 2, d_ff: 8, n_ctx: 32 },
+    ]
+}
+
+fn model(dims: &ModelDims, seed: u64) -> InferModel {
+    InferModel::from_checkpoint(&synthetic_checkpoint(dims, seed)).unwrap()
+}
+
+/// Chunked prefill logits == one-token oracle logits, for chunk sizes
+/// {1, 3, prompt_len, prompt_len + 7}, on every model shape.
+#[test]
+fn chunked_prefill_matches_one_token_oracle_across_chunk_sizes() {
+    for (si, dims) in shapes().iter().enumerate() {
+        let model = model(dims, 100 + si as u64);
+        let mut rng = Rng::new(7 ^ si as u64);
+        let prompt_len = 11usize; // spans several chunks for small sizes
+        let prompt: Vec<u32> =
+            (0..prompt_len).map(|_| rng.below(dims.vocab) as u32).collect();
+
+        let mut oracle = InferEngine::new(model.clone());
+        let mut kv_o = oracle.alloc_kv(1);
+        let slot_o = kv_o.acquire().unwrap();
+        let mut ref_logits = Tensor::zeros(&[0]);
+        oracle.prefill_reference(&prompt, slot_o, &mut kv_o, &mut ref_logits);
+
+        for chunk in [1usize, 3, prompt_len, prompt_len + 7] {
+            let mut engine = InferEngine::new(model.clone());
+            let mut kv = engine.alloc_kv(1);
+            let slot = kv.acquire().unwrap();
+            let mut logits = Tensor::zeros(&[0]);
+            engine.prefill_chunked(&prompt, slot, chunk, &mut kv, &mut logits);
+            assert_eq!(logits.shape, vec![1, dims.vocab]);
+            let mut worst = 0f32;
+            for (&a, &b) in logits.data.iter().zip(&ref_logits.data) {
+                worst = worst.max((a - b).abs());
+            }
+            assert!(
+                worst < 1e-5,
+                "shape {si} chunk {chunk}: max logit diff {worst} vs oracle"
+            );
+        }
+    }
+}
+
+/// The KV cache a chunked prefill leaves behind is equivalent to the
+/// oracle's: greedy decode continuations from both stay within 1e-5.
+#[test]
+fn decode_after_chunked_prefill_matches_decode_after_oracle() {
+    let dims = shapes()[0];
+    let model = model(&dims, 55);
+    let prompt = [5u32, 1, 17, 9, 2, 33, 8];
+
+    for chunk in [2usize, 5] {
+        let mut eo = InferEngine::new(model.clone());
+        let mut kv_o = eo.alloc_kv(1);
+        let so = kv_o.acquire().unwrap();
+        let mut lo = Tensor::zeros(&[0]);
+        eo.prefill_reference(&prompt, so, &mut kv_o, &mut lo);
+
+        let mut ec = InferEngine::new(model.clone());
+        let mut kv_c = ec.alloc_kv(1);
+        let sc = kv_c.acquire().unwrap();
+        let mut lc = Tensor::zeros(&[0]);
+        ec.prefill_chunked(&prompt, sc, chunk, &mut kv_c, &mut lc);
+
+        // greedy continuation: both paths must pick the same tokens and
+        // produce matching logits at every step
+        for t in 0..6 {
+            let tok = sparse24::serve::argmax(&lo.data);
+            assert_eq!(tok, sparse24::serve::argmax(&lc.data),
+                       "chunk {chunk} step {t}: greedy continuation diverged");
+            let pos = prompt.len() + t;
+            eo.decode_step(&[DecodeLane { slot: so, token: tok, pos }], &mut kv_o, &mut lo);
+            ec.decode_step(&[DecodeLane { slot: sc, token: tok, pos }], &mut kv_c, &mut lc);
+            let mut worst = 0f32;
+            for (&a, &b) in lc.data.iter().zip(&lo.data) {
+                worst = worst.max((a - b).abs());
+            }
+            assert!(worst < 1e-5, "chunk {chunk} decode step {t}: diff {worst}");
+        }
+    }
+}
+
+/// Steady-state chunked prefill performs no fresh scratch allocations
+/// after warm-up (decode-path zero-alloc test's prefill mirror).
+#[test]
+fn steady_state_chunked_prefill_is_allocation_free() {
+    let dims = shapes()[1];
+    let model = model(&dims, 77);
+    let mut engine = InferEngine::new(model);
+    let mut kv = engine.alloc_kv(2);
+    engine.warm(2);
+    engine.warm_prefill(5);
+    let (s0, s1) = (kv.acquire().unwrap(), kv.acquire().unwrap());
+    let mut logits = Tensor::zeros(&[0]);
+    // shakedown: the caller-owned logits buffer sizes itself once
+    engine.prefill_chunked(&[1u32, 2, 3, 4, 5, 6, 7], s0, 5, &mut kv, &mut logits);
+    let (_, fresh) = engine.scratch_counters();
+    let mut rng = Rng::new(3);
+    for round in 0..6 {
+        // varied prompt lengths and chunk sizes, both slots, plus
+        // interleaved decode steps — the full serving mix
+        let plen = 3 + (round % 5) as usize;
+        let prompt: Vec<u32> =
+            (0..plen).map(|_| rng.below(dims.vocab) as u32).collect();
+        engine.prefill_chunked(&prompt, s1, 1 + round % 5, &mut kv, &mut logits);
+        engine.prefill_chunked(&prompt, s0, 5, &mut kv, &mut logits);
+        engine.decode_step(
+            &[DecodeLane { slot: s0, token: 1, pos: plen },
+              DecodeLane { slot: s1, token: 2, pos: plen }],
+            &mut kv, &mut logits,
+        );
+    }
+    let (_, fresh_after) = engine.scratch_counters();
+    assert_eq!(fresh, fresh_after,
+               "steady-state chunked prefill allocated scratch buffers");
+}
+
+/// Scheduler end-to-end: chunked prefill admission keeps greedy outputs
+/// invariant to arrival interleaving AND chunk size, never exceeds the
+/// per-step token budget, and loses no requests.
+#[test]
+fn scheduler_chunked_admission_invariant_and_budgeted() {
+    let dims = shapes()[0];
+    let mut rng = Rng::new(99);
+    let n_req = 5u64;
+    let requests: Vec<Request> = (0..n_req)
+        .map(|id| {
+            let len = 1 + rng.below(9); // up to 9 tokens: spans chunks
+            Request {
+                id,
+                prompt: (0..len).map(|_| rng.below(dims.vocab) as u32).collect(),
+                max_new: 1 + rng.below(4),
+            }
+        })
+        .collect();
+
+    let mut base: Option<Vec<(u64, Vec<u32>)>> = None;
+    // arrival patterns x chunk sizes x step budgets
+    let patterns: [&[usize]; 2] = [&[5], &[1, 2, 0, 2]];
+    for (pi, pattern) in patterns.iter().enumerate() {
+        for chunk in [1usize, 4, 16] {
+            for budget in [6usize, 10_000] {
+                let engine = InferEngine::new(
+                    InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 21))
+                        .unwrap(),
+                );
+                let mut sch = Scheduler::with_prefill_chunk(
+                    engine, 2, budget, chunk, Sampling::Greedy, 0);
+                let mut submitted = 0usize;
+                let mut done = Vec::new();
+                for &burst in pattern.iter() {
+                    for _ in 0..burst {
+                        sch.submit(requests[submitted].clone());
+                        submitted += 1;
+                    }
+                    let r = sch.step();
+                    assert!(r.occupancy + r.prefilled <= budget,
+                            "pattern {pi} chunk {chunk} budget {budget}: exceeded");
+                    done.extend(r.finished);
+                }
+                let mut guard = 0;
+                while !sch.is_idle() && guard < 2000 {
+                    let r = sch.step();
+                    assert!(r.occupancy + r.prefilled <= budget,
+                            "pattern {pi} chunk {chunk} budget {budget}: exceeded");
+                    done.extend(r.finished);
+                    guard += 1;
+                }
+                assert_eq!(done.len(), n_req as usize,
+                           "pattern {pi} chunk {chunk} budget {budget}: lost requests");
+                done.sort_by_key(|c| c.id);
+                let outs: Vec<(u64, Vec<u32>)> =
+                    done.into_iter().map(|c| (c.id, c.tokens)).collect();
+                match &base {
+                    None => base = Some(outs),
+                    Some(b) => assert_eq!(
+                        b, &outs,
+                        "outputs depend on pattern {pi} / chunk {chunk} / budget {budget}"
+                    ),
+                }
+            }
+        }
+    }
+}

@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verification entry point: build + full test suite + a quick
 # bench smoke on 2 kernel threads (exercises the thread pool, the tiled
-# backend, and the BENCH_kernels.json emitters end to end), a serving
+# backend, and the BENCH_kernels.json emitters end to end), the chunked-
+# prefill differential suite against the one-token oracle, a serving
 # smoke on a tiny synthetic checkpoint (compressed-weight decode, KV
-# cache, continuous batching, zero-allocation assertion), and a GFLOP/s
-# diff against the previous bench run (warn-only, >15% regression).
+# cache, chunked prefill with prefill_chunk > 1, continuous batching,
+# zero-allocation assertion, TTFT + prefill_tokens_per_s reporting), and
+# a perf diff against the previous bench run (warn-only, >15%
+# regression; covers GFLOP/s and prefill tok/s).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,15 +17,18 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
+echo "== chunked-prefill differential tests (vs one-token oracle)"
+PALLAS_NUM_THREADS=2 cargo test -q --test serve_prefill
+
 echo "== bench smoke (PALLAS_NUM_THREADS=2, --quick)"
 PALLAS_NUM_THREADS=2 cargo bench --bench ablation_spmm -- --quick
 PALLAS_NUM_THREADS=2 cargo bench --bench fig7_ffn_block -- --quick
 
-echo "== serve smoke (synthetic checkpoint, 64 steps, 2 threads)"
+echo "== serve smoke (synthetic checkpoint, 64 steps, chunked prefill, 2 threads)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --synthetic --quick \
-  --steps 64 --batch-sizes 2,4
+  --steps 64 --batch-sizes 2,4 --prefill-chunk 4
 
-echo "== bench-diff (GFLOP/s vs previous run, warn-only)"
+echo "== bench-diff (GFLOP/s + prefill tok/s vs previous run, warn-only)"
 ./target/release/sparse24 bench-diff || true
 
 echo "== verify OK"
