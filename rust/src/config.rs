@@ -430,6 +430,9 @@ impl TrainConfig {
 // Serving configuration ([serve] table)
 // ---------------------------------------------------------------------------
 
+/// Default KV page size (token rows per page) for the paged layout.
+pub const DEFAULT_KV_PAGE: usize = 16;
+
 /// Configuration of the inference subsystem (`generate` / `serve-bench`).
 ///
 /// TOML keys, all under `[serve]`:
@@ -442,6 +445,13 @@ impl TrainConfig {
 /// * `prefill_chunk` — prompt tokens a sequence feeds per scheduler
 ///   step as one matrix-form activation block (chunked prefill; long
 ///   prompts span steps);
+/// * `kv_layout` — `"paged"` (default: fixed-size KV pages allocated on
+///   demand, admission gated on free pages against each request's peak
+///   need) or `"contiguous"` (one max-length slot per sequence — the
+///   original pool, kept as the differential oracle);
+/// * `kv_page` — token rows per KV page (paged layout only);
+/// * `kv_pages` — total pages in the KV pool; 0 = auto, the same
+///   memory a contiguous pool of `max_seqs` slots would use;
 /// * `max_new_tokens` — generation length per request;
 /// * `temperature` — 0 = greedy, > 0 = softmax sampling;
 /// * `top_k` — restrict sampling to the k most likely tokens (0 = all);
@@ -454,6 +464,9 @@ pub struct ServeConfig {
     pub max_seqs: usize,
     pub max_batch_tokens: usize,
     pub prefill_chunk: usize,
+    pub kv_layout: String,
+    pub kv_page: usize,
+    pub kv_pages: usize,
     pub max_new_tokens: usize,
     pub temperature: f64,
     pub top_k: usize,
@@ -469,6 +482,9 @@ impl Default for ServeConfig {
             max_seqs: 4,
             max_batch_tokens: 4096,
             prefill_chunk: 8,
+            kv_layout: "paged".into(),
+            kv_page: DEFAULT_KV_PAGE,
+            kv_pages: 0,
             max_new_tokens: 16,
             temperature: 0.0,
             top_k: 0,
@@ -495,6 +511,15 @@ impl ServeConfig {
         }
         if let Some(v) = get(t, "serve", "prefill_chunk") {
             c.prefill_chunk = v.as_usize()?;
+        }
+        if let Some(v) = get(t, "serve", "kv_layout") {
+            c.kv_layout = v.as_str()?.to_string();
+        }
+        if let Some(v) = get(t, "serve", "kv_page") {
+            c.kv_page = v.as_usize()?;
+        }
+        if let Some(v) = get(t, "serve", "kv_pages") {
+            c.kv_pages = v.as_usize()?;
         }
         if let Some(v) = get(t, "serve", "max_new_tokens") {
             c.max_new_tokens = v.as_usize()?;
@@ -528,6 +553,12 @@ impl ServeConfig {
         if self.prefill_chunk == 0 {
             bail!("serve.prefill_chunk must be >= 1");
         }
+        if !matches!(self.kv_layout.as_str(), "paged" | "contiguous") {
+            bail!("unknown serve.kv_layout {:?}", self.kv_layout);
+        }
+        if self.kv_page == 0 {
+            bail!("serve.kv_page must be >= 1");
+        }
         if self.max_new_tokens == 0 {
             bail!("serve.max_new_tokens must be >= 1");
         }
@@ -541,6 +572,21 @@ impl ServeConfig {
             bail!("serve.arrival_per_step must be >= 0");
         }
         Ok(())
+    }
+
+    /// The configured KV layout as the serve subsystem's enum
+    /// (`kv_layout` + `kv_page` combined). Panics on a string
+    /// [`validate`] would reject, so a programmatically-built config
+    /// with a typo'd layout fails loudly instead of silently serving
+    /// the wrong pool.
+    ///
+    /// [`validate`]: ServeConfig::validate
+    pub fn kv(&self) -> crate::serve::KvLayout {
+        match self.kv_layout.as_str() {
+            "contiguous" => crate::serve::KvLayout::Contiguous,
+            "paged" => crate::serve::KvLayout::Paged { page: self.kv_page.max(1) },
+            other => panic!("unvalidated serve.kv_layout {other:?}"),
+        }
     }
 }
 
@@ -670,6 +716,26 @@ kind = "synthetic"
         assert!(ServeConfig::from_toml("[serve]\nmax_seqs = 0\n").is_err());
         assert!(ServeConfig::from_toml("[serve]\nprefill_chunk = 0\n").is_err());
         assert!(ServeConfig::from_toml("[serve]\ntemperature = -0.5\n").is_err());
+    }
+
+    #[test]
+    fn kv_layout_parses_and_validates() {
+        use crate::serve::KvLayout;
+        // the default is paged at DEFAULT_KV_PAGE
+        let d = ServeConfig::default();
+        assert_eq!(d.kv_layout, "paged");
+        assert_eq!(d.kv(), KvLayout::Paged { page: DEFAULT_KV_PAGE });
+        assert_eq!(d.kv_pages, 0);
+        let c = ServeConfig::from_toml(
+            "[serve]\nkv_layout = \"contiguous\"\nkv_page = 4\nkv_pages = 32\n",
+        )
+        .unwrap();
+        assert_eq!(c.kv(), KvLayout::Contiguous);
+        assert_eq!(c.kv_pages, 32);
+        let p = ServeConfig::from_toml("[serve]\nkv_page = 4\n").unwrap();
+        assert_eq!(p.kv(), KvLayout::Paged { page: 4 });
+        assert!(ServeConfig::from_toml("[serve]\nkv_layout = \"slab\"\n").is_err());
+        assert!(ServeConfig::from_toml("[serve]\nkv_page = 0\n").is_err());
     }
 
     #[test]

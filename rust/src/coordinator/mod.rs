@@ -1,5 +1,12 @@
 //! Layer-3 coordinator: FST mask state, the leader/worker execution
 //! engine, the pre-training loop, the decay-factor tuner, and metrics.
+//!
+//! [`Trainer`] owns one run end to end (phases, masks, optimizer,
+//! metrics, checkpoints); [`DataParallel`] scatters microbatches to
+//! PJRT workers and reduces gradients through recycled shell buffers;
+//! [`Tuner`] reproduces the §4.3 fast λ_W determination;
+//! [`Checkpoint`] is the self-describing hand-off format the serve
+//! subsystem freezes from.
 
 pub mod checkpoint;
 pub mod fst;

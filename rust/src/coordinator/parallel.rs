@@ -31,6 +31,12 @@ enum Req {
         batch: Batch,
         seed: i32,
         grad_shapes: Arc<Vec<Vec<usize>>>,
+        /// recycled gradient-output shells: the worker fills these in
+        /// place (`literal_to_tensor_into`) instead of allocating a
+        /// fresh tensor per parameter per step; they ride back in
+        /// `StepOut.grads`. May arrive short/empty (first steps): the
+        /// worker grows the set once and the leader recycles it after.
+        shells: Vec<Tensor>,
     },
     /// run the eval executable; returns loss only
     Eval {
@@ -97,16 +103,24 @@ fn worker_main(rx: Receiver<Req>, tx: Sender<Resp>) {
                 .load_hlo(&key, &path)
                 .map(|_| Resp::Loaded)
                 .unwrap_or_else(|e| Resp::Err(format!("{e:#}"))),
-            Req::Step { key, params, masks, batch, seed, grad_shapes } => {
+            Req::Step { key, params, masks, batch, seed, grad_shapes, shells } => {
                 (|| -> Result<Resp> {
                     let inputs = build_inputs(&params, &masks, &batch, Some(seed))?;
                     let outs = runtime.execute(&key, &inputs)?;
                     anyhow::ensure!(outs.len() == 1 + grad_shapes.len(),
                                     "step returned {} outputs", outs.len());
                     let loss = literal::literal_to_f32(&outs[0])?;
-                    let mut grads = Vec::with_capacity(grad_shapes.len());
-                    for (lit, shape) in outs[1..].iter().zip(grad_shapes.iter()) {
-                        grads.push(literal::literal_to_tensor(lit, shape)?);
+                    // fill the recycled shells in place; grow the set
+                    // only on the first (short) round-trips
+                    let mut grads = shells;
+                    grads.truncate(grad_shapes.len());
+                    while grads.len() < grad_shapes.len() {
+                        grads.push(Tensor::zeros(&[0]));
+                    }
+                    for ((lit, shape), g) in
+                        outs[1..].iter().zip(grad_shapes.iter()).zip(grads.iter_mut())
+                    {
+                        literal::literal_to_tensor_into(lit, shape, g)?;
                     }
                     Ok(Resp::StepOut { loss, grads, batch })
                 })()
@@ -166,6 +180,14 @@ impl DataParallel {
     /// mean grads). `grad_shapes` describe the per-param outputs.
     /// `recycle`, when given, receives the batches back from the workers
     /// so the trainer can refill them next step without allocating.
+    /// `grad_pool`, when given, supplies recycled gradient shell sets
+    /// (one per microbatch) that the workers fill IN PLACE and the
+    /// reduction returns after summing — with it, a steady-state step
+    /// allocates no gradient storage at all (the returned reduced set is
+    /// the caller's to give back to the pool after the optimizer
+    /// update). Without it, shells start empty and the workers size them
+    /// (the old per-step allocation behavior, kept for one-shot probes).
+    #[allow(clippy::too_many_arguments)]
     pub fn grad_step(
         &self,
         key: &str,
@@ -175,6 +197,7 @@ impl DataParallel {
         base_seed: i32,
         grad_shapes: Arc<Vec<Vec<usize>>>,
         mut recycle: Option<&mut Vec<Batch>>,
+        mut grad_pool: Option<&mut Vec<Vec<Tensor>>>,
     ) -> Result<(f64, Vec<Tensor>)> {
         anyhow::ensure!(!batches.is_empty(), "no microbatches");
         let n_batches = batches.len();
@@ -183,6 +206,10 @@ impl DataParallel {
         for (i, batch) in batches.into_iter().enumerate() {
             let w = i % self.workers.len();
             counts[w] += 1;
+            let shells = grad_pool
+                .as_mut()
+                .and_then(|p| p.pop())
+                .unwrap_or_default();
             self.workers[w]
                 .tx
                 .send(Req::Step {
@@ -192,6 +219,7 @@ impl DataParallel {
                     batch,
                     seed: base_seed.wrapping_add(i as i32),
                     grad_shapes: grad_shapes.clone(),
+                    shells,
                 })
                 .map_err(|_| anyhow!("worker channel closed"))?;
         }
@@ -213,6 +241,11 @@ impl DataParallel {
                                     for (x, y) in a.data.iter_mut().zip(&g.data) {
                                         *x += *y;
                                     }
+                                }
+                                // summed: the shell set goes back to
+                                // the pool for next step's scatter
+                                if let Some(pool) = grad_pool.as_mut() {
+                                    pool.push(grads);
                                 }
                             }
                         }

@@ -54,6 +54,13 @@ pub struct Trainer {
     /// one warmup step, `Batcher::next_train_into` refills these without
     /// allocating (the ROADMAP per-microbatch allocation fix)
     batch_pool: Vec<Batch>,
+    /// gradient shell sets recycled the same way (the scratch-arena
+    /// discipline extended across the literal conversion layer): the
+    /// workers fill them via `literal_to_tensor_into`, the reduction
+    /// returns spent sets, and the reduced set itself comes back after
+    /// the optimizer update — so a steady-state step allocates no
+    /// gradient buffers (the remaining ROADMAP allocation fix)
+    grad_pool: Vec<Vec<Tensor>>,
 }
 
 impl Trainer {
@@ -130,6 +137,7 @@ impl Trainer {
             masks_cache: None,
             params_snapshot: None,
             batch_pool: Vec::new(),
+            grad_pool: Vec::new(),
         })
     }
 
@@ -280,7 +288,8 @@ impl Trainer {
         let (loss, grads) = self
             .engine
             .grad_step(variant, params_arc, masks_arc, batches, base_seed,
-                       self.grad_shapes.clone(), Some(&mut self.batch_pool))
+                       self.grad_shapes.clone(), Some(&mut self.batch_pool),
+                       Some(&mut self.grad_pool))
             .with_context(|| format!("step {t} ({variant})"))?;
         self.profile.add("step_execute", t0.elapsed());
 
@@ -302,6 +311,9 @@ impl Trainer {
             self.opts[i].step(w, g, lr, placement, mask);
         }
         self.profile.add("optimizer_masked_decay", t1.elapsed());
+        // the reduced gradient set is spent: back to the shell pool so
+        // next step's workers fill it in place instead of allocating
+        self.grad_pool.push(grads);
 
         // flip-rate sampling (Definition 4.1) on the updated weights
         let flip = if t % self.cfg.flip_interval == 0 {
@@ -450,7 +462,8 @@ impl Trainer {
         let masks_arc = self.masks_arc();
         self.engine
             .grad_step(variant, params_arc, masks_arc, vec![batch], 0,
-                       self.grad_shapes.clone(), Some(&mut self.batch_pool))
+                       self.grad_shapes.clone(), Some(&mut self.batch_pool),
+                       None)
     }
 }
 

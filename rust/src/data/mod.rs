@@ -1,5 +1,11 @@
 //! Data pipeline: synthetic Zipf–Markov corpus, embedded tiny real text,
 //! and the (tokens, targets) microbatcher.
+//!
+//! [`Batcher`] cuts next-token-prediction microbatches from either
+//! source with a checkpointable RNG; `next_train_into` refills recycled
+//! [`Batch`] shells so the training hot loop never allocates token
+//! buffers (the shells ride the worker round-trip and come back via
+//! `StepOut`).
 
 pub mod batcher;
 pub mod corpus;

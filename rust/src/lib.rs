@@ -4,45 +4,43 @@
 //!
 //! Reproduction of *Accelerating Transformer Pre-training with 2:4
 //! Sparsity* (Hu et al., ICML 2024) as a three-layer Rust + JAX + Pallas
-//! stack. This crate is Layer 3: the training coordinator that owns the
-//! pre-training loop, the masked-decay optimizer, 2:4 mask state, flip-rate
-//! instrumentation, the decay-factor tuner, the data pipeline, and the PJRT
-//! runtime that executes the AOT-compiled (HLO-text) model step functions.
-//! See DESIGN.md for the system inventory and experiment index.
+//! stack, grown into a train-and-serve system. The narrative tour lives
+//! in `docs/ARCHITECTURE.md` (subsystem map, checkpoint→decode data
+//! flow, and a paper-section → module index); the benchmark-record
+//! schemas live in `docs/BENCH.md`. This page is the API-level map.
 //!
-//! # Serving (`serve`)
+//! Three subsystems, in dependency order:
 //!
-//! The [`serve`] subsystem turns a trained checkpoint into a batched
-//! autoregressive inference engine: FFN weights are converted ONCE to
-//! compressed 2:4 form (half the dense footprint) so every FFN forward
-//! runs through the tiled `spmm_nt` kernels; prompts are ingested by
-//! CHUNKED PREFILL (up to `prefill_chunk` tokens per step as one
-//! matrix-form activation block — the shapes where 2:4 spMM amortizes);
-//! per-sequence K/V caches live in preallocated slots carved from the
-//! kernel scratch arena (the steady-state decode AND prefill paths
-//! perform zero scratch-arena allocation, asserted by the arena's
-//! checkout counters); and a continuous-batching scheduler
-//! admits/prefills/retires requests at step granularity, fanning
-//! per-sequence attention onto the persistent kernel thread pool.
+//! * **Kernel backend** ([`sparse`]) — the CPU stand-in for sparse
+//!   tensor cores: a persistent thread pool with bitwise
+//!   thread-count-invariant results, register-tiled `std::simd` GEMMs,
+//!   compressed 2:4 spMM doing q/2 MACs per output element, the
+//!   zero-allocation `Scratch` arena, and the paper's algorithmic
+//!   pieces (transposable mask search, MVUE estimator, flip-rate
+//!   instrumentation, gated activations).
+//! * **Trainer** ([`coordinator`], with [`runtime`], [`optim`],
+//!   [`data`], [`model`]) — the pre-training loop: leader/worker
+//!   execution of AOT-compiled (HLO-text) step functions over PJRT,
+//!   AdamW with the paper's masked decay, FST mask state and refresh,
+//!   the decay-factor tuner, and self-describing checkpoints.
+//! * **Serve engine** ([`serve`]) — a trained checkpoint becomes a
+//!   batched autoregressive inference service: FFN weights frozen ONCE
+//!   into compressed 2:4 form (every serving FFN forward is an
+//!   `spmm_nt`), chunked matrix-form prefill, a **paged KV cache**
+//!   (fixed-size pages, per-sequence page tables, admission by free
+//!   pages against each request's peak need — the contiguous
+//!   slot-per-sequence pool survives as the bitwise differential
+//!   oracle), and a continuous-batching scheduler, all zero-allocation
+//!   at steady state.
 //!
-//! CLI subcommands (see `sparse24 help`):
+//! Shared plumbing: [`config`] (TOML-subset parser + typed
+//! `[train]`/`[sparse]`/`[kernels]`/`[serve]` tables), [`tensor`] (the
+//! host tensor), [`util`] (PRNG, JSON, bench harness + the
+//! `BENCH_*.json` emit/diff machinery).
 //!
-//! * `generate` — decode one prompt from a checkpoint (or a synthetic
-//!   model with `--synthetic`), printing the sampled token ids;
-//! * `serve-bench` — synthetic open-loop request load through the
-//!   scheduler at two or more batch sizes; reports tokens/sec, per-lane
-//!   decode p50/p99 latency, TTFT, prefill tokens/sec, and the
-//!   batch-occupancy histogram, appends `serve_bench` and
-//!   `prefill_tokens_per_s` sections to `BENCH_serve.json` (the latter
-//!   diffed warn-only by `bench-diff`), and fails if the steady-state
-//!   decode/prefill paths checked out a single fresh scratch-arena
-//!   buffer (request-level bookkeeping like output token vectors is
-//!   outside that contract).
-//!
-//! Both read the `[serve]` config table ([`config::ServeConfig`]):
-//! `max_seqs`, `max_batch_tokens`, `prefill_chunk`, `max_new_tokens`,
-//! `temperature`, `top_k`, `seed`, `bench_steps`, `arrival_per_step`,
-//! `prompt_len`.
+//! The `sparse24` CLI (`src/main.rs`) fronts everything: `train`,
+//! `tune-decay`, `speedup`, `inspect`, `generate`, `serve-bench`,
+//! `bench-diff`. See `sparse24 help`.
 
 pub mod config;
 pub mod coordinator;

@@ -31,8 +31,8 @@ use sparse24::coordinator::{Checkpoint, Trainer, Tuner};
 use sparse24::model::ModelDims;
 use sparse24::runtime::Manifest;
 use sparse24::serve::{
-    run_open_loop, synthetic_checkpoint, InferEngine, InferModel, Request, Sampling,
-    Scheduler,
+    run_mixed_kv_bench, run_open_loop, synthetic_checkpoint, InferEngine,
+    InferModel, Request, Sampling, Scheduler,
 };
 use sparse24::sparse::{kernels, workloads};
 use sparse24::util::bench::{
@@ -115,7 +115,8 @@ fn print_usage() {
                         [--top-k K] [--seed S]\n\
            serve-bench  [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--steps N] [--batch-sizes a,b,...] [--prefill-chunk N]\n\
-                        [--quick]\n\
+                        [--kv-layout paged|contiguous] [--kv-page N]\n\
+                        [--kv-pages N] [--quick]\n\
            bench-diff   [--file <json>] [--serve-file <json>] [--threshold PCT]\n"
     );
 }
@@ -227,9 +228,9 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         }
     }
     let sampling = Sampling::from_params(temperature, top_k);
-    let mut sch = Scheduler::with_prefill_chunk(InferEngine::new(model), 1,
-                                                usize::MAX / 2, cfg.prefill_chunk,
-                                                sampling, seed);
+    let mut sch = Scheduler::with_kv(InferEngine::new(model), 1,
+                                     usize::MAX / 2, cfg.prefill_chunk,
+                                     cfg.kv(), cfg.kv_pages, sampling, seed);
     sch.submit(Request { id: 0, prompt: prompt.clone(), max_new });
     let t0 = std::time::Instant::now();
     // chunked prefill spans ceil(prompt/chunk) extra steps
@@ -259,6 +260,16 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     if let Some(s) = opt1(&opts, "prefill-chunk") {
         cfg.prefill_chunk = s.parse::<usize>().context("--prefill-chunk")?.max(1);
     }
+    if let Some(s) = opt1(&opts, "kv-layout") {
+        cfg.kv_layout = s.to_string();
+    }
+    if let Some(s) = opt1(&opts, "kv-page") {
+        cfg.kv_page = s.parse::<usize>().context("--kv-page")?;
+    }
+    if let Some(s) = opt1(&opts, "kv-pages") {
+        cfg.kv_pages = s.parse::<usize>().context("--kv-pages")?;
+    }
+    cfg.validate()?;
     let batch_sizes: Vec<usize> = match opt1(&opts, "batch-sizes") {
         Some(s) => s
             .split(',')
@@ -277,10 +288,11 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     let threads = kernels::num_threads();
     println!(
         "serve-bench: {} layers, d={}, n_ctx={}, vocab={} | {} steps, \
-         arrival {:.2}/step, prompt {} + {} new, prefill chunk {} | {} threads",
+         arrival {:.2}/step, prompt {} + {} new, prefill chunk {} | \
+         kv {} (page {}) | {} threads",
         dims.n_layers, dims.d_model, dims.n_ctx, dims.vocab, cfg.bench_steps,
         cfg.arrival_per_step, cfg.prompt_len, cfg.max_new_tokens,
-        cfg.prefill_chunk, threads
+        cfg.prefill_chunk, cfg.kv_layout, cfg.kv_page, threads
     );
     let mut engine = InferEngine::new(model);
     let mut runs = Vec::new();
@@ -299,6 +311,14 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
         prefill_runs.push(res.to_prefill_json(threads));
         engine = back;
     }
+    // mixed long/short scenario: contiguous vs paged in the same memory
+    println!("  -- mixed long/short KV scenario (equal memory) --");
+    let (mixed, _engine) = run_mixed_kv_bench(engine, &cfg, cfg.bench_steps)?;
+    for m in &mixed {
+        println!("  {}", m.render());
+    }
+    let kv_paging =
+        Json::Arr(mixed.iter().map(|m| m.to_json(threads)).collect());
     let section = obj(vec![
         (
             "model",
@@ -316,8 +336,9 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     let path = repo_root_file("BENCH_serve.json");
     write_json_section_at(&path, "serve_bench", section)?;
     write_json_section_at(&path, "prefill_tokens_per_s", Json::Arr(prefill_runs))?;
+    write_json_section_at(&path, "kv_paging", kv_paging)?;
     println!(
-        "-> {} (sections serve_bench, prefill_tokens_per_s)",
+        "-> {} (sections serve_bench, prefill_tokens_per_s, kv_paging)",
         path.display()
     );
     Ok(())

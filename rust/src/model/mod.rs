@@ -1,5 +1,12 @@
 //! Host-side model state: the named parameter store and the canonical
 //! transformer parameter layout shared with checkpoints and serving.
+//!
+//! [`param_specs`] is the single source of truth for parameter names,
+//! shapes, and sparsity flags, mirroring the python compile layer's
+//! layout — the trainer initializes from it, checkpoints carry the
+//! names, and the serve engine maps them back to roles
+//! (`InferModel::from_checkpoint`). [`ModelDims`] is the validated
+//! shape header those three agree on.
 
 pub mod params;
 

@@ -1,4 +1,10 @@
 //! Optimizers: AdamW with the paper's masked decay (§4.2) + LR schedules.
+//!
+//! [`DecayPlacement`] is the paper's central optimizer knob: the SR-STE
+//! regularizer λ(~m ⊙ w) lands on the GRADIENT before Adam's moment
+//! updates (Eq. 10, ours) or on the weight update after them (Eq. 8,
+//! the SR-STE baseline) — see `adamw` for why the placement matters.
+//! [`Schedule`] covers warmup-cosine / constant / inverse-sqrt LR.
 
 pub mod adamw;
 pub mod lr;

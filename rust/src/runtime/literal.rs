@@ -34,6 +34,26 @@ pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> 
     Ok(Tensor::from_vec(shape, data))
 }
 
+/// literal -> f32 tensor INTO a caller-provided buffer: `out` is
+/// reshaped and overwritten in place, so a recycled tensor shell makes
+/// the conversion allocation-free once its capacity covers the shape.
+/// This is the scratch-arena discipline extended across the literal
+/// boundary — the engine's per-step gradient outputs ride through
+/// recycled shells instead of a fresh `Vec` per parameter per step.
+pub fn literal_to_tensor_into(lit: &xla::Literal, shape: &[usize],
+                              out: &mut Tensor) -> Result<()> {
+    anyhow::ensure!(
+        lit.element_count() == shape.iter().product::<usize>(),
+        "literal has {} elements, shape {:?} wants {}",
+        lit.element_count(),
+        shape,
+        shape.iter().product::<usize>()
+    );
+    out.resize_to(shape);
+    lit.copy_to::<f32>(&mut out.data)?;
+    Ok(())
+}
+
 /// literal -> f32 scalar.
 pub fn literal_to_f32(lit: &xla::Literal) -> Result<f32> {
     let v = lit.to_vec::<f32>()?;
@@ -70,5 +90,19 @@ mod tests {
         let t = Tensor::from_vec(&[4], vec![0.0; 4]);
         let lit = tensor_to_literal(&t).unwrap();
         assert!(literal_to_tensor(&lit, &[5]).is_err());
+    }
+
+    #[test]
+    fn into_variant_reuses_the_shell_storage() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = tensor_to_literal(&t).unwrap();
+        // shell with adequate capacity: conversion must not reallocate
+        let mut shell = Tensor::from_vec(&[6], vec![0.0; 6]);
+        let p = shell.data.as_ptr();
+        literal_to_tensor_into(&lit, &[2, 3], &mut shell).unwrap();
+        assert_eq!(shell, t);
+        assert_eq!(shell.data.as_ptr(), p, "shell storage was reallocated");
+        // shape mismatch still rejected
+        assert!(literal_to_tensor_into(&lit, &[7], &mut shell).is_err());
     }
 }

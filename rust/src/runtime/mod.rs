@@ -1,5 +1,14 @@
 //! Runtime layer: PJRT client wrapper, literal conversion, and the
 //! artifact manifest contract with the python compile path.
+//!
+//! [`Manifest`] describes what `make artifacts` compiled (model config,
+//! parameter specs, HLO-text files per method variant); [`Runtime`]
+//! loads and executes them over PJRT with a compile cache; `literal`
+//! moves tensors across the host⇄XLA boundary — including the
+//! allocation-free `literal_to_tensor_into` that fills recycled
+//! gradient shells in place. The vendored offline `xla` stub keeps all
+//! of this compiling without the real bindings (execution then errors
+//! gracefully; see `rust/vendor/xla`).
 
 pub mod artifacts;
 pub mod client;

@@ -69,6 +69,20 @@ pub struct BenchResult {
     pub mean_occupancy: f64,
     /// hist[k] = scheduler steps that decoded k sequences
     pub occupancy_hist: Vec<u64>,
+    /// KV layout this run served from ("paged" / "contiguous")
+    pub kv_layout: String,
+    /// token rows per KV page (n_ctx for the contiguous layout)
+    pub kv_page: usize,
+    /// pages in the KV pool
+    pub kv_total_pages: usize,
+    /// mean pages mapped into sequences per step (occupancy of the
+    /// pool itself, not the batch)
+    pub kv_mean_mapped_pages: f64,
+    pub kv_peak_mapped_pages: usize,
+    /// mean over steps of (fragmented active seqs / active seqs) — the
+    /// share of sequences paying the page-walk attention path instead
+    /// of the contiguous-span fast path
+    pub kv_frag_share: f64,
     /// scratch-arena heap allocations during the measured phase (MUST
     /// be 0 — steady-state decode AND prefill are allocation-free)
     pub fresh_allocs: u64,
@@ -101,6 +115,12 @@ impl BenchResult {
                 "occupancy_hist",
                 Json::Arr(self.occupancy_hist.iter().map(|&c| num(c as f64)).collect()),
             ),
+            ("kv_layout", Json::Str(self.kv_layout.clone())),
+            ("kv_page", num(self.kv_page as f64)),
+            ("kv_total_pages", num(self.kv_total_pages as f64)),
+            ("kv_mean_mapped_pages", num(self.kv_mean_mapped_pages)),
+            ("kv_peak_mapped_pages", num(self.kv_peak_mapped_pages as f64)),
+            ("kv_frag_share", num(self.kv_frag_share)),
             ("threads", num(threads as f64)),
             ("fresh_allocs", num(self.fresh_allocs as f64)),
             ("abandoned", num(self.abandoned as f64)),
@@ -174,10 +194,9 @@ pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
     let vocab = engine.model.dims.vocab;
     let n_ctx = engine.model.dims.n_ctx;
     let prompt_len = cfg.prompt_len.min(n_ctx.saturating_sub(1)).max(1);
-    let mut sch = Scheduler::with_prefill_chunk(engine, max_seqs,
-                                                cfg.max_batch_tokens,
-                                                cfg.prefill_chunk, sampling,
-                                                cfg.seed);
+    let mut sch = Scheduler::with_kv(engine, max_seqs, cfg.max_batch_tokens,
+                                     cfg.prefill_chunk, cfg.kv(),
+                                     cfg.kv_pages, sampling, cfg.seed);
     // the constructor warmed the arena (decode + prefill buffer sets);
     // from here on, zero allocation
     let fresh0 = sch.engine.scratch_counters().1;
@@ -192,6 +211,11 @@ pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
     let mut completions = 0usize;
     let mut prefill_tokens = 0usize;
     let mut prefill_s = 0f64;
+    let kv0 = sch.kv_stats();
+    let mut kv_mapped_sum = 0f64;
+    let mut kv_mapped_peak = 0usize;
+    let mut kv_frag_sum = 0f64;
+    let mut kv_samples = 0usize;
 
     let t0 = Instant::now();
     let mut measured_steps = 0usize;
@@ -237,6 +261,13 @@ pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
         prefill_s += r.prefill_ms / 1e3;
         tokens += r.decoded;
         completions += r.finished.len();
+        let ks = sch.kv_stats();
+        kv_mapped_sum += ks.mapped_pages as f64;
+        kv_mapped_peak = kv_mapped_peak.max(ks.mapped_pages);
+        if ks.active_seqs > 0 {
+            kv_frag_sum += ks.noncontig_seqs as f64 / ks.active_seqs as f64;
+        }
+        kv_samples += 1;
         measured_steps += 1;
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
@@ -286,10 +317,206 @@ pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
         },
         mean_occupancy: if occ_steps > 0 { occ_weighted / occ_steps as f64 } else { 0.0 },
         occupancy_hist: hist,
+        kv_layout: cfg.kv_layout.clone(),
+        kv_page: match cfg.kv() {
+            crate::serve::KvLayout::Paged { page } => page,
+            crate::serve::KvLayout::Contiguous => n_ctx,
+        },
+        kv_total_pages: kv0.total_pages,
+        kv_mean_mapped_pages: if kv_samples > 0 {
+            kv_mapped_sum / kv_samples as f64
+        } else {
+            0.0
+        },
+        kv_peak_mapped_pages: kv_mapped_peak,
+        kv_frag_share: if kv_samples > 0 { kv_frag_sum / kv_samples as f64 } else { 0.0 },
         fresh_allocs,
         abandoned,
     };
     Ok((result, sch.shutdown()))
+}
+
+/// One layout's numbers from the mixed long/short KV scenario (the
+/// `kv_paging` section of `BENCH_serve.json`).
+#[derive(Clone, Debug)]
+pub struct MixedKvResult {
+    /// "paged" or "contiguous"
+    pub layout: String,
+    /// concurrent-sequence bound the scheduler ran with
+    pub max_seqs: usize,
+    /// token rows per page (n_ctx for contiguous)
+    pub kv_page: usize,
+    pub total_pages: usize,
+    /// total KV rows THIS pool really holds. The paged pool is sized by
+    /// flooring the contiguous pool's rows to whole pages, so it is
+    /// never the larger of the two — the occupancy gap can't be bought
+    /// with extra memory (equal when `kv_page` divides n_ctx).
+    pub mem_rows: usize,
+    pub steps: usize,
+    pub tokens: usize,
+    pub completions: usize,
+    pub mean_occupancy: f64,
+    pub peak_occupancy: usize,
+    pub mean_mapped_pages: f64,
+    pub frag_share: f64,
+    pub elapsed_s: f64,
+    pub tokens_per_s: f64,
+    pub abandoned: usize,
+}
+
+impl MixedKvResult {
+    pub fn to_json(&self, threads: usize) -> Json {
+        obj(vec![
+            ("layout", Json::Str(self.layout.clone())),
+            ("max_seqs", num(self.max_seqs as f64)),
+            ("kv_page", num(self.kv_page as f64)),
+            ("total_pages", num(self.total_pages as f64)),
+            ("mem_rows", num(self.mem_rows as f64)),
+            ("steps", num(self.steps as f64)),
+            ("tokens", num(self.tokens as f64)),
+            ("completions", num(self.completions as f64)),
+            ("mean_occupancy", num(self.mean_occupancy)),
+            ("peak_occupancy", num(self.peak_occupancy as f64)),
+            ("mean_mapped_pages", num(self.mean_mapped_pages)),
+            ("frag_share", num(self.frag_share)),
+            ("elapsed_s", num(self.elapsed_s)),
+            ("tokens_per_s", num(self.tokens_per_s)),
+            ("threads", num(threads as f64)),
+            ("abandoned", num(self.abandoned as f64)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{:<10} max_seqs={:<3} occ {:>5.2} (peak {:>2})  frag {:>4.2}  \
+             {:>8.1} tok/s  {} tokens / {} reqs in {:.2}s",
+            self.layout, self.max_seqs, self.mean_occupancy, self.peak_occupancy,
+            self.frag_share, self.tokens_per_s, self.tokens, self.completions,
+            self.elapsed_s,
+        )
+    }
+}
+
+/// The paging payoff scenario: ONE long prompt stream interleaved with
+/// many short requests, served twice in the SAME KV memory — once from
+/// the contiguous pool (admission needs a whole max-length slot, so the
+/// memory only ever fits `mem_rows / n_ctx` sequences regardless of
+/// their real length) and once paged (admission needs free pages for
+/// each request's peak rows). The paged run admits several short
+/// sequences into the rows a contiguous slot would strand behind one
+/// long prompt, which is exactly what the mean-occupancy gap reports.
+/// Deterministic load (no Poisson): submissions depend only on
+/// `cfg.seed`, so the two layouts see identical request streams.
+pub fn run_mixed_kv_bench(engine: InferEngine, cfg: &ServeConfig,
+                          steps: usize) -> Result<(Vec<MixedKvResult>, InferEngine)> {
+    let n_ctx = engine.model.dims.n_ctx;
+    let vocab = engine.model.dims.vocab;
+    let page = cfg.kv_page.clamp(1, n_ctx);
+    // equal memory: what a 4-slot contiguous pool holds. The paged pool
+    // gets FLOOR(mem / page) pages so page rounding can only ever make
+    // it SMALLER than the contiguous pool, never larger — an occupancy
+    // gain can't be bought with extra memory (the liveness clamp to one
+    // full-context sequence is the sole exception, for page >> n_ctx/4;
+    // per-entry mem_rows reports whatever each pool really holds).
+    let contig_seqs = 4usize;
+    let contig_rows = contig_seqs * n_ctx;
+    let total_pages = (contig_rows / page).max(n_ctx.div_ceil(page));
+    let paged_rows = total_pages * page;
+    // lane bound for the paged run: admission, not the slot count,
+    // should be the limiter
+    let paged_seqs = contig_seqs * 4;
+
+    let long_prompt = (n_ctx / 2).max(2);
+    let short_prompt = (n_ctx / 8).clamp(1, 4);
+    let short_new = (n_ctx / 8).clamp(1, 8);
+
+    let mut engine = engine;
+    let mut out = Vec::with_capacity(2);
+    for (layout, layout_name, max_seqs, kv_pages) in [
+        (crate::serve::KvLayout::Contiguous, "contiguous", contig_seqs, 0usize),
+        (crate::serve::KvLayout::Paged { page }, "paged", paged_seqs, total_pages),
+    ] {
+        let mut sch = Scheduler::with_kv(engine, max_seqs, cfg.max_batch_tokens,
+                                         cfg.prefill_chunk, layout, kv_pages,
+                                         Sampling::Greedy, cfg.seed);
+        let fresh0 = sch.engine.scratch_counters().1;
+        let mut load = Rng::new(cfg.seed ^ 0x517e_0bad_cafe_f00d);
+        let mut next_id = 0u64;
+        let submit = |sch: &mut Scheduler, rng: &mut Rng, plen: usize,
+                      max_new: usize, id: &mut u64| {
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.below(vocab) as u32).collect();
+            sch.submit(Request { id: *id, prompt, max_new });
+            *id += 1;
+        };
+        let mut occ_sum = 0f64;
+        let mut occ_peak = 0usize;
+        let mut mapped_sum = 0f64;
+        let mut frag_sum = 0f64;
+        let mut tokens = 0usize;
+        let mut completions = 0usize;
+        let mut measured = 0usize;
+        let t0 = Instant::now();
+        let max_total_steps = steps.saturating_mul(40).max(steps + 1000);
+        for step in 0..max_total_steps {
+            if step < steps {
+                // a long prompt every 8 steps, two shorts every step
+                if step % 8 == 0 {
+                    submit(&mut sch, &mut load, long_prompt, short_new, &mut next_id);
+                }
+                submit(&mut sch, &mut load, short_prompt, short_new, &mut next_id);
+                submit(&mut sch, &mut load, short_prompt, short_new, &mut next_id);
+            } else if sch.is_idle() {
+                break;
+            }
+            // never idle here: the loaded phase just submitted, and the
+            // drain phase exits on idle above
+            let r = sch.step();
+            occ_sum += r.occupancy as f64;
+            occ_peak = occ_peak.max(r.occupancy);
+            let ks = sch.kv_stats();
+            mapped_sum += ks.mapped_pages as f64;
+            if ks.active_seqs > 0 {
+                frag_sum += ks.noncontig_seqs as f64 / ks.active_seqs as f64;
+            }
+            tokens += r.decoded;
+            completions += r.finished.len();
+            measured += 1;
+        }
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        let abandoned = sch.pending() + sch.n_active();
+        if abandoned > 0 {
+            eprintln!(
+                "warning: mixed KV bench ({layout_name}) drain cap hit with \
+                 {abandoned} request(s) unfinished"
+            );
+        }
+        let fresh = sch.engine.scratch_counters().1 - fresh0;
+        ensure!(
+            fresh == 0,
+            "mixed KV bench ({layout_name}): steady state heap-allocated \
+             {fresh} scratch buffers"
+        );
+        let denom = measured.max(1) as f64;
+        out.push(MixedKvResult {
+            layout: layout_name.to_string(),
+            max_seqs,
+            kv_page: if layout_name == "paged" { page } else { n_ctx },
+            total_pages: if layout_name == "paged" { total_pages } else { contig_seqs },
+            mem_rows: if layout_name == "paged" { paged_rows } else { contig_rows },
+            steps: measured,
+            tokens,
+            completions,
+            mean_occupancy: occ_sum / denom,
+            peak_occupancy: occ_peak,
+            mean_mapped_pages: mapped_sum / denom,
+            frag_share: frag_sum / denom,
+            elapsed_s,
+            tokens_per_s: if elapsed_s > 0.0 { tokens as f64 / elapsed_s } else { 0.0 },
+            abandoned,
+        });
+        engine = sch.shutdown();
+    }
+    Ok((out, engine))
 }
 
 #[cfg(test)]
@@ -335,6 +562,10 @@ mod tests {
         let (res, _engine) = run_open_loop(engine, &cfg, 2, 24).unwrap();
         assert_eq!(res.fresh_allocs, 0);
         assert_eq!(res.abandoned, 0);
+        // the default layout is paged; the run reports pool occupancy
+        assert_eq!(res.kv_layout, "paged");
+        assert!(res.kv_total_pages > 0);
+        assert!(res.kv_peak_mapped_pages > 0);
         assert!(res.tokens > 0);
         assert!(res.completions > 0);
         assert_eq!(res.occupancy_hist.len(), 3);
@@ -351,5 +582,43 @@ mod tests {
         let pj = res.to_prefill_json(2);
         assert_eq!(pj.get("prefill_chunk").unwrap().as_f64().unwrap(), 3.0);
         assert!(pj.get("ttft_p50_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn mixed_kv_bench_compares_layouts_in_equal_memory() {
+        let dims = ModelDims {
+            vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 8, n_ctx: 32,
+        };
+        let engine = InferEngine::new(
+            InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 19)).unwrap(),
+        );
+        let cfg = ServeConfig { kv_page: 4, ..ServeConfig::default() };
+        let (runs, _engine) = run_mixed_kv_bench(engine, &cfg, 24).unwrap();
+        assert_eq!(runs.len(), 2);
+        let contig = &runs[0];
+        let paged = &runs[1];
+        assert_eq!(contig.layout, "contiguous");
+        assert_eq!(paged.layout, "paged");
+        // the comparison is only meaningful when paged memory does not
+        // exceed contiguous memory (equal here: 4 divides n_ctx = 32)
+        assert_eq!(contig.mem_rows, paged.mem_rows);
+        assert!(paged.mem_rows <= contig.mem_rows);
+        assert_eq!(paged.total_pages * paged.kv_page, paged.mem_rows);
+        assert_eq!(contig.abandoned, 0);
+        assert_eq!(paged.abandoned, 0);
+        assert!(contig.tokens > 0 && paged.tokens > 0);
+        // page-level admission must not LOWER occupancy, and under this
+        // persistent short-request load it should raise it
+        assert!(
+            paged.mean_occupancy >= contig.mean_occupancy,
+            "paged {} < contiguous {}",
+            paged.mean_occupancy, contig.mean_occupancy
+        );
+        assert!(paged.peak_occupancy > contig.peak_occupancy,
+                "paged admission never exceeded the contiguous slot bound");
+        let j = paged.to_json(2);
+        assert_eq!(j.get("layout").unwrap().as_str().unwrap(), "paged");
+        assert!(j.get("mean_occupancy").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!paged.render().is_empty());
     }
 }

@@ -9,8 +9,11 @@
 //! No masks, no STE, no gradients, no dense master weights.
 //!
 //! [`InferEngine`] drives batched autoregressive decode over it: one
-//! [`DecodeLane`] per active sequence, per-sequence KV regions from a
-//! [`KvPool`], every temporary from the engine's [`Scratch`] arena. After
+//! [`DecodeLane`] per active sequence, per-sequence KV pages from a
+//! [`KvPool`] (paged or contiguous — attention takes a flat-slice fast
+//! path whenever a sequence's pages form one run, and walks the page
+//! table otherwise, with bitwise-identical arithmetic), every temporary
+//! from the engine's [`Scratch`] arena. After
 //! [`InferEngine::warm`], a steady-state decode step performs zero heap
 //! allocation (asserted by `serve-bench` via the arena's checkout
 //! counters). The per-sequence attention runs on the kernel thread pool
@@ -33,7 +36,7 @@ use crate::sparse::transposable::transposable_mask;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-use super::kv_cache::KvPool;
+use super::kv_cache::{KvLayout, KvPool};
 
 /// One frozen transformer block: dense attention + compressed 2:4 FFN.
 #[derive(Clone, Debug)]
@@ -297,12 +300,23 @@ impl InferEngine {
         (self.scratch.checkouts(), self.scratch.fresh_allocs())
     }
 
-    /// Carve a KV pool for `slots` concurrent sequences out of the
-    /// engine arena.
+    /// Carve a contiguous (slot-based) KV pool for `slots` concurrent
+    /// sequences out of the engine arena — the differential oracle for
+    /// the paged layout.
     pub fn alloc_kv(&mut self, slots: usize) -> KvPool {
+        self.alloc_kv_with(slots, KvLayout::Contiguous, 0)
+    }
+
+    /// Carve a KV pool with an explicit [`KvLayout`] out of the engine
+    /// arena. For [`KvLayout::Paged`], `total_pages` bounds the pool
+    /// memory (0 = the footprint a contiguous pool of `slots` would
+    /// use); `slots` stays the concurrent-sequence bound either way.
+    pub fn alloc_kv_with(&mut self, slots: usize, layout: KvLayout,
+                         total_pages: usize) -> KvPool {
         let d = self.model.dims.d_model;
-        KvPool::new(&mut self.scratch, self.model.dims.n_layers,
-                    self.model.dims.n_ctx, d, slots)
+        KvPool::with_layout(&mut self.scratch, self.model.dims.n_layers,
+                            self.model.dims.n_ctx, d, slots, layout,
+                            total_pages)
     }
 
     /// Return a KV pool's storage to the engine arena.
@@ -354,10 +368,13 @@ impl InferEngine {
             assert!(lane.slot < kv.total_slots(), "lane slot out of range");
             // distinct slots are a SAFETY requirement, not just a logic
             // one: the parallel attention hands each lane its slot's KV
-            // region as &mut — duplicates would alias across threads
+            // pages as &mut — duplicates would alias across threads
             for other in &lanes[..i] {
                 assert_ne!(lane.slot, other.slot, "duplicate KV slot in decode batch");
             }
+            // map pages for this step's row BEFORE the parallel region
+            // (infallible within the slot's admission reservation)
+            kv.ensure(lane.slot, lane.pos + 1);
         }
 
         // embeddings of this step's tokens at their positions
@@ -378,17 +395,16 @@ impl InferEngine {
         let mut attn_y = scratch.take(&[m, d]);
         let mut ffn_y = scratch.take(&[m, d]);
         let mut scores = scratch.take(&[m, cap]);
-        let (layers, region) = (kv.layers(), kv.region_len());
+        let (k_store, v_store, map) = kv.storage_and_map();
+        let kp = MutPtr::new(k_store);
+        let vp = MutPtr::new(v_store);
 
         for (layer, blk) in model.blocks.iter().enumerate() {
             layer_norm_into(&x, &blk.ln1_s, &blk.ln1_b, &mut h);
             blk.attn.qkv_into(&h, &mut qkv);
             {
-                // one lane per work unit: a lane owns its KV slot region,
-                // its scores row, and its ctx row — all disjoint
-                let (k_store, v_store) = kv.storage_mut();
-                let kp = MutPtr::new(k_store);
-                let vp = MutPtr::new(v_store);
+                // one lane per work unit: a lane owns its KV pages, its
+                // scores row, and its ctx row — all disjoint
                 let ctx_ptr = MutPtr::new(&mut ctx.data);
                 let scores_ptr = MutPtr::new(&mut scores.data);
                 let qkv_ref = &qkv;
@@ -396,13 +412,24 @@ impl InferEngine {
                 parallel_rows(m, 1, &|u0, u1| {
                     for i in u0..u1 {
                         let lane = lanes[i];
-                        let base = (lane.slot * layers + layer) * region;
-                        let kc = unsafe { kp.range(base, base + region) };
-                        let vc = unsafe { vp.range(base, base + region) };
+                        let rows = lane.pos + 1;
                         let srow = unsafe { scores_ptr.range(i * cap, (i + 1) * cap) };
                         let crow = unsafe { ctx_ptr.range(i * d, (i + 1) * d) };
                         let qrow = &qkv_ref.data[i * 3 * d..(i + 1) * 3 * d];
-                        attn.attend_cached(qrow, kc, vc, lane.pos, srow, crow);
+                        // fast path: this sequence's pages form one run
+                        // (always true for the contiguous oracle), so the
+                        // original flat-slice attention applies verbatim
+                        if let Some((s0, s1)) = map.span(lane.slot, layer, rows) {
+                            let kc = unsafe { kp.range(s0, s1) };
+                            let vc = unsafe { vp.range(s0, s1) };
+                            attn.attend_cached(qrow, kc, vc, lane.pos, srow, crow);
+                        } else {
+                            let base = |t: usize| map.row_base(lane.slot, layer, t);
+                            unsafe {
+                                attn.attend_cached_paged(qrow, &kp, &vp, &base,
+                                                         lane.pos, srow, crow);
+                            }
+                        }
                     }
                 });
             }
@@ -480,8 +507,9 @@ impl InferEngine {
     /// instead of per-token GEMVs, which is where the 2:4 speedup
     /// amortizes (Hu et al. Table 12; Haziza et al. 2025 at inference).
     /// Attention attends both within the chunk and against the cached
-    /// prefix via [`Attention::attend_prefill`], writing the chunk's K/V
-    /// rows contiguously at `pos0..pos0+chunk`. Leaves `logits` (1,
+    /// prefix via [`Attention::attend_prefill`] (or its page-walking
+    /// twin when the sequence's KV pages are fragmented), writing the
+    /// chunk's K/V rows at `pos0..pos0+chunk`. Leaves `logits` (1,
     /// vocab) holding the next-token distribution after the chunk's last
     /// token. Zero steady-state allocation after
     /// [`InferEngine::warm_prefill`].
@@ -499,6 +527,9 @@ impl InferEngine {
         for &tok in chunk {
             assert!((tok as usize) < dims.vocab, "token out of vocab");
         }
+        // map pages for the whole chunk up front (infallible within the
+        // slot's admission reservation)
+        kv.ensure(slot, pos0 + c);
 
         // embeddings of the chunk at positions pos0..pos0+c
         let mut x = scratch.take(&[c, d]);
@@ -518,14 +549,30 @@ impl InferEngine {
         let mut attn_y = scratch.take(&[c, d]);
         let mut ffn_y = scratch.take(&[c, d]);
         let mut scores = scratch.take(&[c, cap]);
+        let (k_store, v_store, map) = kv.storage_and_map();
+        let kp = MutPtr::new(k_store);
+        let vp = MutPtr::new(v_store);
 
         for (layer, blk) in model.blocks.iter().enumerate() {
             layer_norm_into(&x, &blk.ln1_s, &blk.ln1_b, &mut h);
             blk.attn.qkv_into(&h, &mut qkv);
-            {
-                let (kc, vc) = kv.region_mut(slot, layer);
-                blk.attn.attend_prefill(&qkv, kc, vc, pos0, cap,
+            // fast path when the mapped pages form one run (always true
+            // for the contiguous oracle): the span is a flat (rows, d)
+            // region and the original chunked-prefill attention applies
+            // verbatim. The scores stride never exceeds cap, so the
+            // warm_prefill buffer set still covers it.
+            if let Some((s0, s1)) = map.span(slot, layer, pos0 + c) {
+                let span_rows = ((s1 - s0) / d).min(cap);
+                let kc = unsafe { kp.range(s0, s1) };
+                let vc = unsafe { vp.range(s0, s1) };
+                blk.attn.attend_prefill(&qkv, kc, vc, pos0, span_rows,
                                         &mut scores, &mut ctx);
+            } else {
+                let base = |t: usize| map.row_base(slot, layer, t);
+                unsafe {
+                    blk.attn.attend_prefill_paged(&qkv, &kp, &vp, &base, pos0,
+                                                  cap, &mut scores, &mut ctx);
+                }
             }
             blk.attn.out_proj_into(&ctx, &mut attn_y);
             for (o, v) in x.data.iter_mut().zip(&attn_y.data) {
@@ -614,7 +661,7 @@ mod tests {
         let full = model.forward_full(&[2u32, 7, 11, 4, 29]);
         let mut engine = InferEngine::new(model);
         let mut kv = engine.alloc_kv(1);
-        let slot = kv.acquire().unwrap();
+        let slot = kv.acquire(dims.n_ctx).unwrap();
         let mut logits = Tensor::zeros(&[0]);
         engine.prefill_reference(&[2u32, 7, 11, 4, 29], slot, &mut kv, &mut logits);
         let last = &full.data[4 * 32..5 * 32];
@@ -632,7 +679,7 @@ mod tests {
         let mut engine = InferEngine::new(model);
         let mut kv = engine.alloc_kv(2);
         engine.warm(2);
-        let (s0, s1) = (kv.acquire().unwrap(), kv.acquire().unwrap());
+        let (s0, s1) = (kv.acquire(dims.n_ctx).unwrap(), kv.acquire(dims.n_ctx).unwrap());
         let mut logits = Tensor::zeros(&[0]);
         // one shakedown step (logits buffer itself grows once)
         engine.decode_step(&[DecodeLane { slot: s0, token: 1, pos: 0 }],
@@ -657,13 +704,13 @@ mod tests {
         // oracle: one token per step through the decode path
         let mut er = InferEngine::new(model.clone());
         let mut kvr = er.alloc_kv(1);
-        let sr = kvr.acquire().unwrap();
+        let sr = kvr.acquire(dims.n_ctx).unwrap();
         let mut ref_logits = Tensor::zeros(&[0]);
         er.prefill_reference(&prompt, sr, &mut kvr, &mut ref_logits);
         for chunk in [1usize, 2, prompt.len(), prompt.len() + 3] {
             let mut ec = InferEngine::new(model.clone());
             let mut kvc = ec.alloc_kv(1);
-            let sc = kvc.acquire().unwrap();
+            let sc = kvc.acquire(dims.n_ctx).unwrap();
             let mut logits = Tensor::zeros(&[0]);
             ec.prefill_chunked(&prompt, sc, chunk, &mut kvc, &mut logits);
             assert_eq!(logits.shape, vec![1, dims.vocab]);
@@ -696,7 +743,7 @@ mod tests {
         let mut engine = InferEngine::new(model);
         let mut kv = engine.alloc_kv(2);
         engine.warm_prefill(4);
-        let (s0, s1) = (kv.acquire().unwrap(), kv.acquire().unwrap());
+        let (s0, s1) = (kv.acquire(dims.n_ctx).unwrap(), kv.acquire(dims.n_ctx).unwrap());
         let mut logits = Tensor::zeros(&[0]);
         // one shakedown chunk (the caller-owned logits buffer grows once)
         engine.prefill_chunk(&[1u32, 2, 3, 4], s0, 0, &mut kv, &mut logits);
@@ -720,14 +767,14 @@ mod tests {
         let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 9)).unwrap();
         let mut e1 = InferEngine::new(model.clone());
         let mut kv1 = e1.alloc_kv(1);
-        let a1 = kv1.acquire().unwrap();
+        let a1 = kv1.acquire(dims.n_ctx).unwrap();
         let mut solo = Tensor::zeros(&[0]);
         e1.prefill_reference(&[3u32, 8, 2], a1, &mut kv1, &mut solo);
 
         let mut e2 = InferEngine::new(model);
         let mut kv2 = e2.alloc_kv(2);
-        let a2 = kv2.acquire().unwrap();
-        let b2 = kv2.acquire().unwrap();
+        let a2 = kv2.acquire(dims.n_ctx).unwrap();
+        let b2 = kv2.acquire(dims.n_ctx).unwrap();
         let mut logits = Tensor::zeros(&[0]);
         // interleave: feed the same prompt on a2 while b2 decodes junk
         e2.prefill_reference(&[6u32], b2, &mut kv2, &mut logits);

@@ -1,54 +1,195 @@
-//! Slot-based K/V cache pool for batched autoregressive decode.
+//! K/V cache pool for batched autoregressive decode: paged (default)
+//! or contiguous (the differential oracle).
 //!
-//! All K/V storage for `slots` concurrent sequences is preallocated as
-//! two flat buffers carved from the engine's [`Scratch`] arena, so
-//! sequences joining and leaving the batch never touch the heap: a
-//! sequence *acquires* a slot index on admission and *releases* it on
-//! completion (free-list recycling, like the arena itself). Layout is
-//! slot-major:
+//! All K/V storage is preallocated as two flat buffers carved from the
+//! engine's [`Scratch`] arena, organised as one *bank* per layer so a
+//! run of adjacent pages is a run of adjacent token rows:
 //!
 //! ```text
-//!   k[((slot * layers + layer) * cap + t) * d + j]
+//!   k[layer * bank + page * page_rows * d + (t % page_rows) * d + j]
+//!   bank = n_pages * page_rows * d        // one layer's span
 //! ```
 //!
-//! so one (slot, layer) pair owns a contiguous `cap * d` region — the
-//! unit the decode loop hands to `Attention::attend_cached`, and the
-//! disjointness unit for the parallel per-sequence attention.
+//! A *page* holds `page_rows` token rows in every layer bank at once, so
+//! growing a sequence by one page maps storage for all layers together.
+//! Sequences are identified by *slot* ids (lane identity for the decode
+//! batch); each slot owns a page table — the ordered list of pages
+//! holding its token rows 0, 1, 2, …
+//!
+//! Two layouts share this addressing ([`KvLayout`]):
+//!
+//! * **Contiguous** — `page_rows = cap` (the model's n_ctx) and exactly
+//!   one page per slot, claimed whole at [`KvPool::acquire`]. This is
+//!   the original slot-based pool: admission needs a free max-length
+//!   region, a long prompt and a short one cost the same. Kept as the
+//!   bitwise differential oracle for the paged path.
+//! * **Paged** — small fixed-size pages, a free-page list, and page
+//!   tables that grow on demand ([`KvPool::ensure`]). Admission is
+//!   gated on *free pages against the request's peak need* (prompt +
+//!   max_new rows), not whole max-length slots, so many short sequences
+//!   and one long prompt coexist in the memory a contiguous pool would
+//!   strand. Admission *reserves* the peak page count, which makes
+//!   mid-stream growth infallible: `ensure` can always map the next
+//!   page, so the scheduler never deadlocks while free pages suffice.
+//!
+//! Page allocation prefers the page adjacent to a table's last page, so
+//! a lightly-loaded pool serves mostly contiguous tables and the
+//! attention fast path (one flat slice, exactly the contiguous-pool
+//! code) keeps applying; under fragmentation the engine walks the page
+//! table per token row instead (the crate-internal `KvMap`). Both paths
+//! perform identical float operations in identical order, so paged and
+//! contiguous logits match bitwise on identical schedules.
+//!
+//! Steady-state decode stays zero-allocation: page tables and the free
+//! bitmap are sized for their maxima at construction, so `acquire`,
+//! `ensure`, and `release` never touch the heap.
 
 use crate::sparse::kernels::Scratch;
 
+/// How K/V storage is organised and admitted. See the module docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvLayout {
+    /// One max-length region per sequence (the original pool; the
+    /// differential oracle for the paged path).
+    Contiguous,
+    /// Fixed-size pages of `page` token rows, allocated on demand.
+    Paged {
+        /// token rows per page
+        page: usize,
+    },
+}
+
+/// Point-in-time pool occupancy/fragmentation numbers (`serve-bench`
+/// samples these per step for the `kv_paging` metrics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvStats {
+    /// pages in the pool (contiguous: one per slot)
+    pub total_pages: usize,
+    /// pages on the free list
+    pub free_pages: usize,
+    /// pages mapped into some sequence's table
+    pub mapped_pages: usize,
+    /// free pages promised to admitted sequences but not yet mapped
+    pub reserved_unmapped: usize,
+    /// sequences currently holding a slot
+    pub active_seqs: usize,
+    /// active sequences whose page table is NOT one consecutive run
+    /// (these pay the page-walk attention path)
+    pub noncontig_seqs: usize,
+}
+
+/// Arena-carved K/V pool: layer-bank storage + per-slot page tables.
 pub struct KvPool {
+    layout: KvLayout,
     layers: usize,
-    /// rows per (slot, layer) region — the model's n_ctx
+    /// max token rows per sequence — the model's n_ctx
     cap: usize,
     d: usize,
+    /// concurrent-sequence bound (lane identity space)
     slots: usize,
+    /// token rows per page (== cap in contiguous layout)
+    page: usize,
+    /// pages per layer bank
+    n_pages: usize,
     k: Vec<f32>,
     v: Vec<f32>,
-    free: Vec<usize>,
-    /// lifetime counters: (acquires, releases)
+    free_slots: Vec<usize>,
+    /// page -> free? (paged layout; contiguous tracks slots only)
+    page_free: Vec<bool>,
+    free_count: usize,
+    /// slot -> ordered mapped pages (capacity preallocated: growth
+    /// never reallocates)
+    tables: Vec<Vec<u32>>,
+    /// slot -> pages reserved at admission (peak need)
+    reserved: Vec<usize>,
+    /// scan cursor: every page below this index is occupied (paged
+    /// layout), so the fallback free-page scan starts here instead of
+    /// rescanning the packed low pages on every map
+    low_hint: usize,
+    /// sum over active slots of (reserved - mapped): free pages that
+    /// are spoken for and must not back new admissions
+    reserved_unmapped: usize,
+    /// lifetime counters: slot (acquires, releases)
     acquires: u64,
     releases: u64,
+    /// lifetime counters: page (maps, unmaps)
+    page_maps: u64,
+    page_unmaps: u64,
 }
 
 impl KvPool {
-    /// Carve a pool for `slots` sequences out of `scratch`. Return the
-    /// storage with [`KvPool::release_storage`] when serving stops.
+    /// The original slot-based pool: `slots` max-length regions. Return
+    /// the storage with [`KvPool::release_storage`] when serving stops.
     pub fn new(scratch: &mut Scratch, layers: usize, cap: usize, d: usize,
                slots: usize) -> KvPool {
-        let n = slots * layers * cap * d;
+        Self::with_layout(scratch, layers, cap, d, slots,
+                          KvLayout::Contiguous, 0)
+    }
+
+    /// A pool with an explicit layout. For [`KvLayout::Paged`],
+    /// `total_pages` bounds the pool's memory (0 = auto: the same
+    /// footprint a contiguous pool of `slots` sequences would use, i.e.
+    /// `slots * ceil(cap / page)` pages); for contiguous it is ignored.
+    pub fn with_layout(scratch: &mut Scratch, layers: usize, cap: usize,
+                       d: usize, slots: usize, layout: KvLayout,
+                       total_pages: usize) -> KvPool {
+        assert!(layers >= 1 && cap >= 1 && d >= 1 && slots >= 1);
+        let (page, n_pages) = match layout {
+            KvLayout::Contiguous => (cap, slots),
+            KvLayout::Paged { page } => {
+                // a page larger than cap would just strand rows cap..page
+                // of every page (and silently inflate the auto-sized
+                // pool past its contiguous-equivalent-memory contract)
+                let page = page.clamp(1, cap);
+                let auto = slots * cap.div_ceil(page);
+                let n = if total_pages == 0 { auto } else { total_pages };
+                // a single sequence must be able to reach cap rows,
+                // else admission of any full-context prompt deadlocks
+                (page, n.max(cap.div_ceil(page)))
+            }
+        };
+        let n = layers * n_pages * page * d;
         let k = scratch.take_vec(n);
         let v = scratch.take_vec(n);
+        let pages_per_seq = cap.div_ceil(page);
+        let (tables, page_free) = match layout {
+            KvLayout::Contiguous => {
+                // slot s owns page s permanently; tables are filled at
+                // acquire so mapped_rows distinguishes free from held
+                ((0..slots).map(|_| Vec::with_capacity(1)).collect(),
+                 Vec::new())
+            }
+            KvLayout::Paged { .. } => {
+                ((0..slots).map(|_| Vec::with_capacity(pages_per_seq)).collect(),
+                 vec![true; n_pages])
+            }
+        };
+        let free_count = if matches!(layout, KvLayout::Paged { .. }) {
+            n_pages
+        } else {
+            0
+        };
         KvPool {
+            layout,
             layers,
             cap,
             d,
             slots,
+            page,
+            n_pages,
             k,
             v,
-            free: (0..slots).rev().collect(),
+            free_slots: (0..slots).rev().collect(),
+            page_free,
+            free_count,
+            tables,
+            reserved: vec![0; slots],
+            low_hint: 0,
+            reserved_unmapped: 0,
             acquires: 0,
             releases: 0,
+            page_maps: 0,
+            page_unmaps: 0,
         }
     }
 
@@ -58,11 +199,15 @@ impl KvPool {
         scratch.give_vec(self.v);
     }
 
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
     pub fn layers(&self) -> usize {
         self.layers
     }
 
-    /// KV rows per (slot, layer) region.
+    /// Max KV rows per sequence (the model's n_ctx).
     pub fn cap(&self) -> usize {
         self.cap
     }
@@ -71,58 +216,249 @@ impl KvPool {
         self.d
     }
 
+    /// Token rows per page (`cap` in the contiguous layout).
+    pub fn page_rows(&self) -> usize {
+        self.page
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Pages a sequence of `rows` token rows needs.
+    pub fn pages_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.page)
+    }
+
     pub fn total_slots(&self) -> usize {
         self.slots
     }
 
     pub fn slots_in_use(&self) -> usize {
-        self.slots - self.free.len()
+        self.slots - self.free_slots.len()
     }
 
-    /// (acquires, releases) since construction.
+    /// (slot acquires, slot releases) since construction.
     pub fn counters(&self) -> (u64, u64) {
         (self.acquires, self.releases)
     }
 
-    /// Claim a free slot, or None when the pool is fully occupied.
-    pub fn acquire(&mut self) -> Option<usize> {
-        let slot = self.free.pop()?;
+    /// (page maps, page unmaps) since construction.
+    pub fn page_counters(&self) -> (u64, u64) {
+        (self.page_maps, self.page_unmaps)
+    }
+
+    /// Token rows currently mapped for `slot` (page-granular).
+    pub fn mapped_rows(&self, slot: usize) -> usize {
+        (self.tables[slot].len() * self.page).min(self.cap)
+    }
+
+    /// Can a sequence with `peak_rows` peak context be admitted right
+    /// now? Contiguous: needs a free slot. Paged: needs a free slot AND
+    /// enough free pages after honoring existing reservations.
+    pub fn can_admit(&self, peak_rows: usize) -> bool {
+        if self.free_slots.is_empty() || peak_rows > self.cap {
+            return false;
+        }
+        match self.layout {
+            KvLayout::Contiguous => true,
+            KvLayout::Paged { .. } => {
+                self.pages_for(peak_rows.max(1)) + self.reserved_unmapped
+                    <= self.free_count
+            }
+        }
+    }
+
+    /// Admit a sequence with `peak_rows` peak context (prompt + max new
+    /// tokens, clamped to cap by the caller): claim a slot id and, in
+    /// the paged layout, reserve its peak page count so later
+    /// [`KvPool::ensure`] calls cannot fail. Returns None when the pool
+    /// cannot take it ([`KvPool::can_admit`]).
+    pub fn acquire(&mut self, peak_rows: usize) -> Option<usize> {
+        if !self.can_admit(peak_rows) {
+            return None;
+        }
+        let slot = self.free_slots.pop()?;
         self.acquires += 1;
+        debug_assert!(self.tables[slot].is_empty(), "dirty table on acquire");
+        match self.layout {
+            KvLayout::Contiguous => {
+                // the region was the admission unit all along
+                self.tables[slot].push(slot as u32);
+                self.reserved[slot] = 1;
+                self.page_maps += 1;
+            }
+            KvLayout::Paged { .. } => {
+                self.reserved[slot] = self.pages_for(peak_rows.max(1));
+                self.reserved_unmapped += self.reserved[slot];
+            }
+        }
         Some(slot)
     }
 
-    /// Return a slot to the free list. The region's stale contents are
-    /// harmless: decode positions grow from 0, overwriting before reading.
+    /// Grow `slot`'s page table until `rows` token rows are mapped.
+    /// Infallible within the reservation made at [`KvPool::acquire`]
+    /// (and a no-op in the contiguous layout); asking beyond the
+    /// reservation is a scheduler bug and panics.
+    pub fn ensure(&mut self, slot: usize, rows: usize) {
+        assert!(rows <= self.cap, "ensure {rows} rows > cap {}", self.cap);
+        let need = self.pages_for(rows);
+        assert!(
+            need <= self.reserved[slot],
+            "slot {slot}: {need} pages needed > {} reserved",
+            self.reserved[slot]
+        );
+        while self.tables[slot].len() < need {
+            let p = self.pick_page(self.tables[slot].last().copied());
+            self.page_free[p as usize] = false;
+            self.free_count -= 1;
+            self.reserved_unmapped -= 1;
+            self.tables[slot].push(p);
+            self.page_maps += 1;
+        }
+    }
+
+    /// Next page to map: the one adjacent to `last` when free (keeps
+    /// tables contiguous, so the flat-slice attention fast path keeps
+    /// applying), else the lowest-indexed free page (keeps the pool
+    /// packed toward low pages, which preserves future adjacency). The
+    /// fallback scan starts at `low_hint` — the invariant "every page
+    /// below `low_hint` is occupied" makes it O(1) amortized instead of
+    /// rescanning the packed low pages on every map.
+    fn pick_page(&mut self, last: Option<u32>) -> u32 {
+        if let Some(l) = last {
+            let next = l as usize + 1;
+            if next < self.n_pages && self.page_free[next] {
+                return next as u32;
+            }
+        }
+        for p in self.low_hint..self.n_pages {
+            if self.page_free[p] {
+                // pages low_hint..p were just verified occupied, and p
+                // is about to be: the invariant advances past it
+                self.low_hint = p + 1;
+                return p as u32;
+            }
+        }
+        // reservation accounting guarantees a free page whenever ensure
+        // is within the admitted peak
+        unreachable!("ensure called with no free page despite reservation");
+    }
+
+    /// Return a slot — and every page it mapped or reserved — to the
+    /// pool. Safe at ANY point of a sequence's life (mid-prefill, mid-
+    /// decode): partial tables and unspent reservations are both
+    /// unwound, which is what makes scheduler preemption or shutdown
+    /// release safe. Stale page contents are harmless: rows are
+    /// rewritten before they are read.
     pub fn release(&mut self, slot: usize) {
         debug_assert!(slot < self.slots);
-        debug_assert!(!self.free.contains(&slot), "double release of slot {slot}");
+        debug_assert!(!self.free_slots.contains(&slot), "double release of slot {slot}");
         self.releases += 1;
-        self.free.push(slot);
+        match self.layout {
+            KvLayout::Contiguous => {
+                self.page_unmaps += self.tables[slot].len() as u64;
+                self.tables[slot].clear();
+            }
+            KvLayout::Paged { .. } => {
+                for &p in &self.tables[slot] {
+                    debug_assert!(!self.page_free[p as usize], "double page free");
+                    self.page_free[p as usize] = true;
+                    self.low_hint = self.low_hint.min(p as usize);
+                }
+                self.free_count += self.tables[slot].len();
+                self.page_unmaps += self.tables[slot].len() as u64;
+                self.reserved_unmapped -= self.reserved[slot] - self.tables[slot].len();
+                self.tables[slot].clear();
+            }
+        }
+        self.reserved[slot] = 0;
+        self.free_slots.push(slot);
     }
 
-    /// Flat offset of a (slot, layer) region's first element.
-    pub fn region_base(&self, slot: usize, layer: usize) -> usize {
-        debug_assert!(slot < self.slots && layer < self.layers);
-        (slot * self.layers + layer) * self.cap * self.d
+    /// Occupancy/fragmentation snapshot for the bench.
+    pub fn stats(&self) -> KvStats {
+        let mapped: usize = self.tables.iter().map(|t| t.len()).sum();
+        let mut active = 0;
+        let mut noncontig = 0;
+        for (slot, t) in self.tables.iter().enumerate() {
+            let held = !t.is_empty() || self.reserved[slot] > 0;
+            if held && !self.free_slots.contains(&slot) {
+                active += 1;
+                if !is_consecutive(t) {
+                    noncontig += 1;
+                }
+            }
+        }
+        KvStats {
+            total_pages: self.n_pages,
+            free_pages: match self.layout {
+                KvLayout::Contiguous => self.free_slots.len(),
+                KvLayout::Paged { .. } => self.free_count,
+            },
+            mapped_pages: mapped,
+            reserved_unmapped: self.reserved_unmapped,
+            active_seqs: active,
+            noncontig_seqs: noncontig,
+        }
     }
 
-    /// Length of one (slot, layer) region.
-    pub fn region_len(&self) -> usize {
-        self.cap * self.d
+    /// Both storage buffers plus the page-table map — everything the
+    /// engine needs to hand disjoint per-sequence regions to the pool
+    /// workers ([`KvMap`] resolves token rows to flat offsets).
+    pub(crate) fn storage_and_map(&mut self) -> (&mut [f32], &mut [f32], KvMap<'_>) {
+        let map = KvMap {
+            tables: &self.tables,
+            page: self.page,
+            d: self.d,
+            bank: self.n_pages * self.page * self.d,
+        };
+        // field-level split: k/v are disjoint from the table metadata
+        (&mut self.k, &mut self.v, map)
+    }
+}
+
+/// `true` when `t` is one consecutive ascending run (single pages and
+/// empty tables count as consecutive).
+fn is_consecutive(t: &[u32]) -> bool {
+    t.windows(2).all(|w| w[1] == w[0] + 1)
+}
+
+/// Read-only page-table view resolving (slot, layer, token row) to flat
+/// offsets in the pool storage. Shared across the decode workers: the
+/// engine pairs it with raw storage pointers, and disjoint slots own
+/// disjoint pages, so per-lane writes never alias.
+#[derive(Clone, Copy)]
+pub(crate) struct KvMap<'a> {
+    tables: &'a [Vec<u32>],
+    page: usize,
+    d: usize,
+    /// one layer bank's element count (n_pages * page * d)
+    bank: usize,
+}
+
+impl KvMap<'_> {
+    /// Flat offset of token row `t` of (slot, layer).
+    #[inline]
+    pub(crate) fn row_base(&self, slot: usize, layer: usize, t: usize) -> usize {
+        let p = self.tables[slot][t / self.page] as usize;
+        layer * self.bank + p * self.page * self.d + (t % self.page) * self.d
     }
 
-    /// Both storage buffers at once (the decode loop wraps these in
-    /// `MutPtr`s and hands disjoint regions to the pool workers).
-    pub fn storage_mut(&mut self) -> (&mut [f32], &mut [f32]) {
-        (&mut self.k, &mut self.v)
-    }
-
-    /// K/V region of one (slot, layer) pair (single-sequence paths).
-    pub fn region_mut(&mut self, slot: usize, layer: usize)
-                      -> (&mut [f32], &mut [f32]) {
-        let base = self.region_base(slot, layer);
-        let len = self.region_len();
-        (&mut self.k[base..base + len], &mut self.v[base..base + len])
+    /// The flat range holding token rows `0..rows` of (slot, layer)
+    /// when the covering pages are one consecutive run — the fast path
+    /// that lets the contiguous-pool attention code run unchanged on a
+    /// paged pool. None when the table is fragmented across the run.
+    pub(crate) fn span(&self, slot: usize, layer: usize, rows: usize)
+                       -> Option<(usize, usize)> {
+        let np = rows.div_ceil(self.page);
+        let t = &self.tables[slot];
+        debug_assert!(np <= t.len(), "span over unmapped rows");
+        if !is_consecutive(&t[..np]) {
+            return None;
+        }
+        let start = layer * self.bank + t[0] as usize * self.page * self.d;
+        Some((start, start + np * self.page * self.d))
     }
 }
 
@@ -131,51 +467,172 @@ mod tests {
     use super::*;
 
     #[test]
-    fn acquire_release_recycles_slots() {
+    fn contiguous_acquire_release_recycles_slots() {
         let mut s = Scratch::new();
         let mut kv = KvPool::new(&mut s, 2, 8, 4, 3);
         assert_eq!(kv.total_slots(), 3);
-        let a = kv.acquire().unwrap();
-        let b = kv.acquire().unwrap();
-        let c = kv.acquire().unwrap();
-        assert_eq!(kv.acquire(), None);
+        assert_eq!(kv.page_rows(), 8);
+        let a = kv.acquire(8).unwrap();
+        let b = kv.acquire(1).unwrap();
+        let c = kv.acquire(5).unwrap();
+        assert_eq!(kv.acquire(1), None);
         assert_eq!(kv.slots_in_use(), 3);
         assert_ne!(a, b);
         assert_ne!(b, c);
+        // a contiguous slot is fully mapped on acquire
+        assert_eq!(kv.mapped_rows(b), 8);
         kv.release(b);
-        assert_eq!(kv.acquire(), Some(b));
+        assert_eq!(kv.acquire(8), Some(b));
         assert_eq!(kv.counters(), (4, 1));
+        // over-cap requests are rejected, not clamped
+        assert_eq!(kv.acquire(9), None);
         kv.release_storage(&mut s);
         assert_eq!(s.pooled(), 2);
     }
 
     #[test]
-    fn regions_are_disjoint_and_cover_storage() {
+    fn rows_are_disjoint_and_cover_storage() {
+        // paged pool, every row of every (slot, layer) resolves to a
+        // distinct d-sized region and together they tile the storage
         let mut s = Scratch::new();
-        let (layers, cap, d, slots) = (3, 4, 2, 2);
-        let mut kv = KvPool::new(&mut s, layers, cap, d, slots);
-        let len = kv.region_len();
-        let mut seen = vec![false; slots * layers * cap * d];
-        for slot in 0..slots {
+        let (layers, cap, d, slots, page) = (3, 4, 2, 2, 2);
+        let mut kv = KvPool::with_layout(&mut s, layers, cap, d, slots,
+                                         KvLayout::Paged { page }, 0);
+        assert_eq!(kv.total_pages(), slots * cap.div_ceil(page));
+        let s0 = kv.acquire(cap).unwrap();
+        let s1 = kv.acquire(cap).unwrap();
+        kv.ensure(s0, cap);
+        kv.ensure(s1, cap);
+        let n = kv.k.len();
+        let mut seen = vec![false; n];
+        let (_, _, map) = kv.storage_and_map();
+        for slot in [s0, s1] {
             for layer in 0..layers {
-                let base = kv.region_base(slot, layer);
-                for o in base..base + len {
-                    assert!(!seen[o], "overlap at {o}");
-                    seen[o] = true;
+                for t in 0..cap {
+                    let base = map.row_base(slot, layer, t);
+                    for o in base..base + d {
+                        assert!(!seen[o], "overlap at {o}");
+                        seen[o] = true;
+                    }
                 }
             }
         }
         assert!(seen.iter().all(|&x| x));
-        // region_mut round-trips a write
+        kv.release_storage(&mut s);
+    }
+
+    #[test]
+    fn paged_admission_reserves_peak_pages() {
+        let mut s = Scratch::new();
+        // 4 pages of 4 rows, cap 16, 4 slots
+        let mut kv = KvPool::with_layout(&mut s, 1, 16, 2, 4,
+                                         KvLayout::Paged { page: 4 }, 4);
+        // peak 9 rows -> 3 pages reserved, 1 page left unpromised
+        let a = kv.acquire(9).unwrap();
+        assert!(kv.can_admit(4));
+        assert!(!kv.can_admit(5), "only one unreserved page remains");
+        let b = kv.acquire(3).unwrap();
+        assert_eq!(kv.acquire(1), None, "every page is reserved");
+        // growth within the reservation is infallible
+        kv.ensure(a, 9);
+        assert_eq!(kv.mapped_rows(a), 12);
+        kv.ensure(b, 3);
+        assert_eq!(kv.stats().free_pages, 0);
+        // release returns mapped AND unspent-reserved pages
+        kv.release(a);
+        assert_eq!(kv.stats().free_pages, 3);
+        assert!(kv.can_admit(12));
+        kv.release(b);
+        assert_eq!(kv.stats().free_pages, 4);
+        assert_eq!(kv.page_counters(), (4, 4));
+        kv.release_storage(&mut s);
+    }
+
+    #[test]
+    fn adjacent_pages_preferred_and_span_detects_runs() {
+        let mut s = Scratch::new();
+        let (layers, cap, d, page) = (2, 8, 2, 2);
+        let mut kv = KvPool::with_layout(&mut s, layers, cap, d, 3,
+                                         KvLayout::Paged { page }, 12);
+        let a = kv.acquire(8).unwrap();
+        kv.ensure(a, 2);
+        kv.ensure(a, 8); // grows 3 more pages, each adjacent
         {
-            let (k, v) = kv.region_mut(1, 2);
-            k[0] = 7.0;
-            v[len - 1] = -7.0;
+            let (_, _, map) = kv.storage_and_map();
+            let (s0, e0) = map.span(a, 0, 8).expect("adjacent run");
+            assert_eq!(e0 - s0, 8 * d);
+            let (s1, _) = map.span(a, 1, 8).expect("every layer bank has the run");
+            assert_eq!(s1, map.row_base(a, 1, 0));
+            // row addressing walks pages
+            assert_eq!(map.row_base(a, 0, 3), s0 + 3 * d);
         }
-        let (k, v) = kv.storage_mut();
-        let base = (1 * layers + 2) * cap * d;
-        assert_eq!(k[base], 7.0);
-        assert_eq!(v[base + cap * d - 1], -7.0);
+        // fragment: b takes the page right after a's run, then a
+        // releases and c's table interleaves with b's
+        let b = kv.acquire(2).unwrap();
+        kv.ensure(b, 2);
+        kv.release(a);
+        let c = kv.acquire(8).unwrap();
+        kv.ensure(c, 8);
+        let stats = kv.stats();
+        assert_eq!(stats.active_seqs, 2);
+        {
+            let (_, _, map) = kv.storage_and_map();
+            // c got pages 0..4 (freed by a) — all adjacent again
+            assert!(map.span(c, 0, 8).is_some());
+        }
+        // holes + interleaving produce a genuinely fragmented table
+        kv.release(b);
+        let d1 = kv.acquire(2).unwrap();
+        kv.ensure(d1, 2); // takes b's old page 4 (lowest free)
+        kv.release(c);
+        let e1 = kv.acquire(6).unwrap();
+        kv.ensure(e1, 6); // pages 0, 1, 2 — consecutive again
+        let f = kv.acquire(4).unwrap();
+        kv.ensure(f, 2); // page 3
+        kv.ensure(f, 4); // prefers 4 (held by d1) -> falls to 5: [3, 5]
+        {
+            let (_, _, map) = kv.storage_and_map();
+            assert!(map.span(e1, 0, 6).is_some());
+            assert!(map.span(f, 0, 2).is_some(), "single-page run is a span");
+            assert!(map.span(f, 1, 4).is_none(),
+                    "fragmented table must force the page-walk path");
+            // the walk still resolves every row of the fragmented table
+            let bank = 12 * page * d; // n_pages * page * d
+            assert_eq!(map.row_base(f, 0, 1), 3 * page * d + d);
+            assert_eq!(map.row_base(f, 1, 2), bank + 5 * page * d);
+        }
+        assert_eq!(kv.stats().noncontig_seqs, 1);
+        kv.release_storage(&mut s);
+    }
+
+    #[test]
+    #[should_panic(expected = "reserved")]
+    fn ensure_beyond_reservation_panics() {
+        let mut s = Scratch::new();
+        let mut kv = KvPool::with_layout(&mut s, 1, 8, 2, 2,
+                                         KvLayout::Paged { page: 2 }, 8);
+        let a = kv.acquire(4).unwrap();
+        kv.ensure(a, 6); // reserved only ceil(4/2) = 2 pages
+    }
+
+    #[test]
+    fn pool_always_fits_one_full_context_sequence() {
+        let mut s = Scratch::new();
+        // requested 1 page, but cap 8 / page 2 needs 4: auto-raised
+        let mut kv = KvPool::with_layout(&mut s, 1, 8, 2, 2,
+                                         KvLayout::Paged { page: 2 }, 1);
+        assert_eq!(kv.total_pages(), 4);
+        let a = kv.acquire(8).unwrap();
+        kv.ensure(a, 8);
+        assert_eq!(kv.mapped_rows(a), 8);
+        kv.release(a);
+        kv.release_storage(&mut s);
+        // a page larger than cap clamps to cap: same layout and memory
+        // as the contiguous pool, not an inflated one
+        let kv = KvPool::with_layout(&mut s, 1, 8, 2, 2,
+                                     KvLayout::Paged { page: 99 }, 0);
+        assert_eq!(kv.page_rows(), 8);
+        assert_eq!(kv.total_pages(), 2);
         kv.release_storage(&mut s);
     }
 }

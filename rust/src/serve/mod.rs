@@ -3,12 +3,26 @@
 //! The serving half of the system (the trainer being the other): a
 //! frozen [`InferModel`] keeps every FFN weight permanently in
 //! compressed 2:4 form so serving-time FFN forwards run through the
-//! tiled `spmm_nt` kernels, a slot-based [`KvPool`] holds per-sequence
-//! K/V in arena-carved storage, and a continuous-batching [`Scheduler`]
-//! admits, prefills, decodes, and retires requests at step granularity
-//! on the persistent kernel thread pool. See the crate docs for the
-//! `[serve]` config table and the `generate` / `serve-bench` CLI
-//! subcommands.
+//! tiled `spmm_nt` kernels, a paged [`KvPool`] holds per-sequence K/V
+//! in arena-carved fixed-size pages (per-sequence page tables grown on
+//! demand; the original contiguous slot-per-sequence layout survives as
+//! [`KvLayout::Contiguous`], the bitwise differential oracle), and a
+//! continuous-batching [`Scheduler`] admits, prefills, decodes, and
+//! retires requests at step granularity on the persistent kernel
+//! thread pool. See the crate docs for the `[serve]` config table and
+//! the `generate` / `serve-bench` CLI subcommands.
+//!
+//! ## Paged KV admission
+//!
+//! With [`KvLayout::Paged`] (the default), admission is gated on free
+//! pages against each request's PEAK need (prompt + max_new rows) —
+//! not on whole max-length slots — and the acquire *reserves* that
+//! peak, so page-table growth mid-stream is infallible and admitted
+//! sequences never deadlock on each other. Many short sequences and
+//! one long prompt coexist in memory where the contiguous pool would
+//! strand a full `n_ctx` region per sequence; `serve-bench`'s
+//! `kv_paging` section measures exactly that occupancy gap at equal
+//! memory (see `docs/BENCH.md`).
 //!
 //! ## Chunked-prefill data flow
 //!
@@ -38,11 +52,12 @@
 //! `serve_prefill` test suite pins chunked prefill against (1e-5).
 //!
 //! Module map: [`engine`] (frozen model + batched decode + chunked
-//! prefill), [`kv_cache`] (KV slot pool), [`scheduler`] (continuous
-//! batching + chunking admission), [`generate`] (greedy / temperature /
-//! top-k sampling), [`bench`] (open-loop load harness behind
-//! `serve-bench`: decode p50/p99 charged per lane, TTFT and
-//! `prefill_tokens_per_s` reported from the prefill path).
+//! prefill), [`kv_cache`] (paged/contiguous KV pool), [`scheduler`]
+//! (continuous batching + page-aware admission), [`generate`] (greedy /
+//! temperature / top-k sampling), [`bench`] (open-loop load harness
+//! behind `serve-bench`: decode p50/p99 charged per lane, TTFT,
+//! `prefill_tokens_per_s`, and the mixed long/short `kv_paging`
+//! occupancy comparison).
 
 pub mod bench;
 pub mod engine;
@@ -50,10 +65,10 @@ pub mod generate;
 pub mod kv_cache;
 pub mod scheduler;
 
-pub use bench::{run_open_loop, BenchResult};
+pub use bench::{run_mixed_kv_bench, run_open_loop, BenchResult, MixedKvResult};
 pub use engine::{synthetic_checkpoint, DecodeLane, InferEngine, InferModel};
 pub use generate::{argmax, sample, Sampling};
-pub use kv_cache::KvPool;
+pub use kv_cache::{KvLayout, KvPool, KvStats};
 pub use scheduler::{
     Completion, Request, Scheduler, StepReport, DEFAULT_PREFILL_CHUNK,
 };

@@ -42,7 +42,7 @@ use crate::util::rng::Rng;
 
 use super::engine::{DecodeLane, InferEngine};
 use super::generate::{sample, Sampling};
-use super::kv_cache::KvPool;
+use super::kv_cache::{KvLayout, KvPool, KvStats};
 
 /// Default prompt-chunk token budget ([`ServeConfig`] mirrors this).
 ///
@@ -153,12 +153,30 @@ impl Scheduler {
     /// peak context (prompt + max_new) of the admitted batch and the
     /// tokens processed per step (decode lanes + prefill chunks);
     /// `prefill_chunk` is the per-sequence, per-step prompt-chunk size.
-    pub fn with_prefill_chunk(mut engine: InferEngine, max_seqs: usize,
+    /// The KV pool is the contiguous (slot-based) oracle layout; serving
+    /// paths use [`Scheduler::with_kv`] for the paged default.
+    pub fn with_prefill_chunk(engine: InferEngine, max_seqs: usize,
                               max_batch_tokens: usize, prefill_chunk: usize,
                               sampling: Sampling, seed: u64) -> Scheduler {
+        Self::with_kv(engine, max_seqs, max_batch_tokens, prefill_chunk,
+                      KvLayout::Contiguous, 0, sampling, seed)
+    }
+
+    /// [`Scheduler::with_prefill_chunk`] with an explicit KV layout. In
+    /// [`KvLayout::Paged`], admission is gated on *free pages against
+    /// the request's peak need* (prompt + max_new) instead of whole
+    /// max-length slots — short sequences stop paying for n_ctx they
+    /// never touch, so a mixed long/short load runs at higher batch
+    /// occupancy in the same KV memory. `kv_pages` bounds the pool
+    /// memory (0 = the footprint the contiguous layout would use for
+    /// `max_seqs` slots).
+    pub fn with_kv(mut engine: InferEngine, max_seqs: usize,
+                   max_batch_tokens: usize, prefill_chunk: usize,
+                   layout: KvLayout, kv_pages: usize, sampling: Sampling,
+                   seed: u64) -> Scheduler {
         let max_seqs = max_seqs.max(1);
         let prefill_chunk = prefill_chunk.max(1);
-        let kv = engine.alloc_kv(max_seqs);
+        let kv = engine.alloc_kv_with(max_seqs, layout, kv_pages);
         engine.warm(max_seqs);
         engine.warm_prefill(prefill_chunk);
         Scheduler {
@@ -206,6 +224,12 @@ impl Scheduler {
         self.active.iter().map(|s| s.max_total).sum()
     }
 
+    /// KV pool occupancy/fragmentation snapshot (`serve-bench` samples
+    /// this per step for the `kv_paging` metrics).
+    pub fn kv_stats(&self) -> KvStats {
+        self.kv.as_ref().map(|kv| kv.stats()).unwrap_or_default()
+    }
+
     /// One scheduler step: admit → reserve decode lanes → chunked
     /// prefill → batched decode → retire. Returns what happened
     /// (occupancy, prefill/decode timing split, completions). Processes
@@ -216,16 +240,21 @@ impl Scheduler {
         let n_ctx = self.engine.model.dims.n_ctx;
         let mut kv = self.kv.take().expect("scheduler already shut down");
 
-        // --- admission (slot + committed-KV budget; no prompt work) ------
+        // --- admission (KV capacity + committed-KV budget; no prompt ----
+        // work). The KV gate is layout-dependent: a contiguous pool needs
+        // a whole free max-length slot, a paged pool needs free pages
+        // covering the request's PEAK rows (prompt + max_new) — which the
+        // acquire also reserves, so later page growth cannot fail and
+        // admitted sequences never deadlock on each other.
         while self.active.len() < self.max_seqs {
             let Some(front) = self.queue.front() else { break };
-            let max_total = (front.prompt.len() + front.max_new).min(n_ctx);
+            let max_total = (front.prompt.len() + front.max_new.max(1)).min(n_ctx);
             if !self.active.is_empty()
                 && self.committed_tokens() + max_total > self.max_batch_tokens
             {
                 break;
             }
-            let Some(slot) = kv.acquire() else { break };
+            let Some(slot) = kv.acquire(max_total) else { break };
             let req = self.queue.pop_front().unwrap();
             let rng = Rng::new(self.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
             self.active.push(ActiveSeq {

@@ -426,6 +426,141 @@ impl Attention {
         });
     }
 
+    /// [`Attention::attend_cached`] over page-table-resolved K/V rows:
+    /// token row `t` lives at flat offset `row_base(t)` of the pool
+    /// storage behind `kp`/`vp` instead of at `t * d` of one flat
+    /// slice. Float operations are identical in identical order, so a
+    /// paged sequence's logits match the contiguous pool bitwise — the
+    /// serve paged-vs-contiguous differential tests pin this.
+    ///
+    /// # Safety
+    /// Every row `row_base(t)..row_base(t) + d` for `t <= pos` must be
+    /// in bounds of both storages and disjoint from every range any
+    /// other live thread mutates (the pool guarantees this: distinct
+    /// slots own distinct pages).
+    pub(crate) unsafe fn attend_cached_paged(
+        &self, qkv_row: &[f32], kp: &MutPtr, vp: &MutPtr,
+        row_base: &dyn Fn(usize) -> usize, pos: usize,
+        scores: &mut [f32], ctx_row: &mut [f32],
+    ) {
+        let (d, _) = self.w_o.dims2();
+        let h = self.n_heads;
+        let hd = d / h;
+        debug_assert_eq!(qkv_row.len(), 3 * d);
+        debug_assert_eq!(ctx_row.len(), d);
+        {
+            let base = row_base(pos);
+            let krow = unsafe { kp.range(base, base + d) };
+            krow.copy_from_slice(&qkv_row[d..2 * d]);
+            let vrow = unsafe { vp.range(base, base + d) };
+            vrow.copy_from_slice(&qkv_row[2 * d..3 * d]);
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        for head in 0..h {
+            let q = &qkv_row[head * hd..head * hd + hd];
+            let s = &mut scores[..pos + 1];
+            for (t, st) in s.iter_mut().enumerate() {
+                let base = row_base(t) + head * hd;
+                let kt: &[f32] = unsafe { kp.range(base, base + hd) };
+                *st = super::gemm::dot(q, kt) * scale;
+            }
+            let m = s.iter().cloned().fold(f32::MIN, f32::max);
+            let mut z = 0f32;
+            for st in s.iter_mut() {
+                *st = (*st - m).exp();
+                z += *st;
+            }
+            for st in s.iter_mut() {
+                *st /= z;
+            }
+            let out = &mut ctx_row[head * hd..head * hd + hd];
+            out.fill(0.0);
+            for (t, &pt) in s.iter().enumerate() {
+                let base = row_base(t) + head * hd;
+                let vt: &[f32] = unsafe { vp.range(base, base + hd) };
+                for k in 0..hd {
+                    out[k] += pt * vt[k];
+                }
+            }
+        }
+    }
+
+    /// [`Attention::attend_prefill`] over page-table-resolved K/V rows
+    /// (see [`Attention::attend_cached_paged`] for the addressing
+    /// contract). The chunk's K/V rows are written serially through the
+    /// page table before any row attends, then chunk rows fan out on
+    /// the kernel pool exactly like the contiguous path.
+    /// `score_stride` is the scores-row width (>= pos0 + chunk; the
+    /// engine passes the same stride the contiguous path uses so the
+    /// scratch buffers are shared).
+    ///
+    /// # Safety
+    /// As [`Attention::attend_cached_paged`]: all resolved rows in
+    /// bounds, and this sequence's pages touched by no other thread.
+    pub(crate) unsafe fn attend_prefill_paged(
+        &self, qkv: &Tensor, kp: &MutPtr, vp: &MutPtr,
+        row_base: &(dyn Fn(usize) -> usize + Sync), pos0: usize,
+        score_stride: usize, scores: &mut Tensor, ctx: &mut Tensor,
+    ) {
+        let (c, three_d) = qkv.dims2();
+        let d = three_d / 3;
+        let h = self.n_heads;
+        let hd = d / h;
+        debug_assert!(c >= 1);
+        debug_assert!(pos0 + c <= score_stride, "scores row too narrow");
+        for i in 0..c {
+            let row = &qkv.data[i * 3 * d..(i + 1) * 3 * d];
+            let base = row_base(pos0 + i);
+            let krow = unsafe { kp.range(base, base + d) };
+            krow.copy_from_slice(&row[d..2 * d]);
+            let vrow = unsafe { vp.range(base, base + d) };
+            vrow.copy_from_slice(&row[2 * d..3 * d]);
+        }
+        ctx.resize_to(&[c, d]);
+        scores.resize_to(&[c, score_stride]);
+        let scale = 1.0 / (hd as f32).sqrt();
+        // caches are read-only from here; one chunk row per work unit
+        let ctx_ptr = MutPtr::new(&mut ctx.data);
+        let scores_ptr = MutPtr::new(&mut scores.data);
+        let qkv_ref = &qkv.data;
+        parallel_rows(c, 1, &|u0, u1| {
+            for i in u0..u1 {
+                let pos = pos0 + i;
+                let srow =
+                    unsafe { scores_ptr.range(i * score_stride, (i + 1) * score_stride) };
+                let crow = unsafe { ctx_ptr.range(i * d, (i + 1) * d) };
+                let qrow = &qkv_ref[i * 3 * d..(i + 1) * 3 * d];
+                for head in 0..h {
+                    let q = &qrow[head * hd..head * hd + hd];
+                    let s = &mut srow[..pos + 1];
+                    for (t, st) in s.iter_mut().enumerate() {
+                        let base = row_base(t) + head * hd;
+                        let kt: &[f32] = unsafe { kp.range(base, base + hd) };
+                        *st = super::gemm::dot(q, kt) * scale;
+                    }
+                    let m = s.iter().cloned().fold(f32::MIN, f32::max);
+                    let mut z = 0f32;
+                    for st in s.iter_mut() {
+                        *st = (*st - m).exp();
+                        z += *st;
+                    }
+                    for st in s.iter_mut() {
+                        *st /= z;
+                    }
+                    let out = &mut crow[head * hd..head * hd + hd];
+                    out.fill(0.0);
+                    for (t, &pt) in s.iter().enumerate() {
+                        let base = row_base(t) + head * hd;
+                        let vt: &[f32] = unsafe { vp.range(base, base + hd) };
+                        for k in 0..hd {
+                            out[k] += pt * vt[k];
+                        }
+                    }
+                }
+            }
+        });
+    }
+
     /// Batched output projection of the decode contexts:
     /// `y = ctx W_o^T + b_o`, shapes (m, d) -> (m, d).
     pub fn out_proj_into(&self, ctx: &Tensor, y: &mut Tensor) {

@@ -221,34 +221,58 @@ pub fn kernel_bench_regressions(
     Ok(warnings)
 }
 
-/// Compare the serve bench's `prefill_tokens_per_s` section against its
-/// `.prev` twin in BENCH_serve.json (entries matched on max_seqs /
-/// max_batch_tokens / prefill_chunk / threads) and return a warning per
-/// configuration whose prefill throughput dropped by more than
-/// `threshold` (a fraction). Warn-only analogue of
-/// [`kernel_bench_regressions`] for the serving trajectory; missing
-/// file or missing `.prev` yields no warnings.
+/// Compare the serve bench's tracked sections against their `.prev`
+/// twins in BENCH_serve.json and return a warning per configuration
+/// whose metric dropped by more than `threshold` (a fraction):
+///
+/// * `prefill_tokens_per_s` — chunked-prefill ingestion rate, matched
+///   on max_seqs / max_batch_tokens / prefill_chunk / threads;
+/// * `kv_paging` — mean batch occupancy of the mixed long/short KV
+///   scenario, matched on layout / max_seqs / kv_page (a drop means
+///   page-level admission stopped filling the batch).
+///
+/// Warn-only analogue of [`kernel_bench_regressions`] for the serving
+/// trajectory; a missing file or missing `.prev` yields no warnings.
 pub fn serve_bench_regressions(
     path: &std::path::Path,
     threshold: f64,
 ) -> Result<Vec<String>> {
     let Some(j) = read_bench_record(path)? else { return Ok(Vec::new()) };
+    let mut warnings = Vec::new();
     let section = "prefill_tokens_per_s";
-    let (Some(Json::Arr(cur)), Some(Json::Arr(old))) =
+    if let (Some(Json::Arr(cur)), Some(Json::Arr(old))) =
         (j.opt(section), j.opt(&format!("{section}.prev")))
-    else {
-        return Ok(Vec::new());
-    };
-    let rec_key = |r: &Json| -> Result<String> {
-        Ok(format!(
-            "max_seqs={} bt={} chunk={} t{}",
-            r.get("max_seqs")?.as_usize()?,
-            r.get("max_batch_tokens")?.as_usize()?,
-            r.get("prefill_chunk")?.as_usize()?,
-            r.get("threads")?.as_usize()?,
-        ))
-    };
-    Ok(metric_regressions(cur, old, &rec_key, section, threshold, section, "tok/s"))
+    {
+        let rec_key = |r: &Json| -> Result<String> {
+            Ok(format!(
+                "max_seqs={} bt={} chunk={} t{}",
+                r.get("max_seqs")?.as_usize()?,
+                r.get("max_batch_tokens")?.as_usize()?,
+                r.get("prefill_chunk")?.as_usize()?,
+                r.get("threads")?.as_usize()?,
+            ))
+        };
+        warnings.extend(metric_regressions(
+            cur, old, &rec_key, section, threshold, section, "tok/s",
+        ));
+    }
+    let section = "kv_paging";
+    if let (Some(Json::Arr(cur)), Some(Json::Arr(old))) =
+        (j.opt(section), j.opt(&format!("{section}.prev")))
+    {
+        let rec_key = |r: &Json| -> Result<String> {
+            Ok(format!(
+                "{} max_seqs={} page={}",
+                r.get("layout")?.as_str()?,
+                r.get("max_seqs")?.as_usize()?,
+                r.get("kv_page")?.as_usize()?,
+            ))
+        };
+        warnings.extend(metric_regressions(
+            cur, old, &rec_key, "mean_occupancy", threshold, section, "occ",
+        ));
+    }
+    Ok(warnings)
 }
 
 /// Parse a bench record; a missing file is `None` (first run — no
@@ -441,6 +465,21 @@ mod tests {
         // an improvement produces no warning
         write_json_section_at(&path, "prefill_tokens_per_s", entry(600.0)).unwrap();
         assert!(serve_bench_regressions(&path, 0.15).unwrap().is_empty());
+        // kv_paging occupancy is tracked the same way, keyed by layout
+        let kv_entry = |occ: f64| {
+            Json::Arr(vec![obj(vec![
+                ("layout", Json::Str("paged".into())),
+                ("max_seqs", num(16.0)),
+                ("kv_page", num(16.0)),
+                ("mean_occupancy", num(occ)),
+            ])])
+        };
+        write_json_section_at(&path, "kv_paging", kv_entry(8.0)).unwrap();
+        assert!(serve_bench_regressions(&path, 0.15).unwrap().is_empty());
+        write_json_section_at(&path, "kv_paging", kv_entry(4.0)).unwrap();
+        let w = serve_bench_regressions(&path, 0.15).unwrap();
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("paged"), "{}", w[0]);
         // missing file: no warnings
         assert!(serve_bench_regressions(&dir.join("nope.json"), 0.15)
             .unwrap()

@@ -1,4 +1,11 @@
 //! Dependency-free utilities: PRNG, JSON, bench harness, CSV writing.
+//!
+//! [`rng`] is the repo-wide splitmix/xoshiro-style PRNG with
+//! checkpointable state; [`json`] a minimal parser/printer for the
+//! bench records; [`bench`] the timing harness plus the
+//! `BENCH_kernels.json` / `BENCH_serve.json` section writer (`.prev`
+//! rotation) and the `bench-diff` regression scanners documented in
+//! `docs/BENCH.md`.
 
 pub mod bench;
 pub mod json;

@@ -200,6 +200,7 @@ fn parallel_engine_matches_direct_execution() {
             fx.step_seed,
             Arc::new(shapes),
             None,
+            None,
         )
         .unwrap();
     // two identical microbatches (dense => no seed dependence) average to

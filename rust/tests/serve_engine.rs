@@ -86,7 +86,7 @@ fn kv_incremental_decode_equals_full_context_recompute() {
         let full = model.forward_full(&prompt);
         let mut engine = InferEngine::new(model.clone());
         let mut kv = engine.alloc_kv(1);
-        let slot = kv.acquire().unwrap();
+        let slot = kv.acquire(dims.n_ctx).unwrap();
         let mut logits = Tensor::zeros(&[0]);
         engine.prefill_reference(&prompt, slot, &mut kv, &mut logits);
         let last = &full.data[(t - 1) * dims.vocab..t * dims.vocab];

@@ -40,14 +40,14 @@ fn chunked_prefill_matches_one_token_oracle_across_chunk_sizes() {
 
         let mut oracle = InferEngine::new(model.clone());
         let mut kv_o = oracle.alloc_kv(1);
-        let slot_o = kv_o.acquire().unwrap();
+        let slot_o = kv_o.acquire(dims.n_ctx).unwrap();
         let mut ref_logits = Tensor::zeros(&[0]);
         oracle.prefill_reference(&prompt, slot_o, &mut kv_o, &mut ref_logits);
 
         for chunk in [1usize, 3, prompt_len, prompt_len + 7] {
             let mut engine = InferEngine::new(model.clone());
             let mut kv = engine.alloc_kv(1);
-            let slot = kv.acquire().unwrap();
+            let slot = kv.acquire(dims.n_ctx).unwrap();
             let mut logits = Tensor::zeros(&[0]);
             engine.prefill_chunked(&prompt, slot, chunk, &mut kv, &mut logits);
             assert_eq!(logits.shape, vec![1, dims.vocab]);
@@ -74,13 +74,13 @@ fn decode_after_chunked_prefill_matches_decode_after_oracle() {
     for chunk in [2usize, 5] {
         let mut eo = InferEngine::new(model.clone());
         let mut kv_o = eo.alloc_kv(1);
-        let so = kv_o.acquire().unwrap();
+        let so = kv_o.acquire(dims.n_ctx).unwrap();
         let mut lo = Tensor::zeros(&[0]);
         eo.prefill_reference(&prompt, so, &mut kv_o, &mut lo);
 
         let mut ec = InferEngine::new(model.clone());
         let mut kv_c = ec.alloc_kv(1);
-        let sc = kv_c.acquire().unwrap();
+        let sc = kv_c.acquire(dims.n_ctx).unwrap();
         let mut lc = Tensor::zeros(&[0]);
         ec.prefill_chunked(&prompt, sc, chunk, &mut kv_c, &mut lc);
 
@@ -112,7 +112,7 @@ fn steady_state_chunked_prefill_is_allocation_free() {
     let mut kv = engine.alloc_kv(2);
     engine.warm(2);
     engine.warm_prefill(5);
-    let (s0, s1) = (kv.acquire().unwrap(), kv.acquire().unwrap());
+    let (s0, s1) = (kv.acquire(dims.n_ctx).unwrap(), kv.acquire(dims.n_ctx).unwrap());
     let mut logits = Tensor::zeros(&[0]);
     // shakedown: the caller-owned logits buffer sizes itself once
     engine.prefill_chunked(&[1u32, 2, 3, 4, 5, 6, 7], s0, 5, &mut kv, &mut logits);

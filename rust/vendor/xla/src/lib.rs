@@ -54,6 +54,8 @@ pub trait NativeType: Copy + Sized {
     fn wrap(v: Vec<Self>) -> Data;
     #[doc(hidden)]
     fn extract(d: &Data) -> Option<Vec<Self>>;
+    #[doc(hidden)]
+    fn copy_from(d: &Data, dst: &mut [Self]) -> Option<()>;
 }
 
 impl NativeType for f32 {
@@ -66,6 +68,15 @@ impl NativeType for f32 {
             _ => None,
         }
     }
+    fn copy_from(d: &Data, dst: &mut [Self]) -> Option<()> {
+        match d {
+            Data::F32(v) => {
+                dst.copy_from_slice(v);
+                Some(())
+            }
+            _ => None,
+        }
+    }
 }
 
 impl NativeType for i32 {
@@ -75,6 +86,15 @@ impl NativeType for i32 {
     fn extract(d: &Data) -> Option<Vec<Self>> {
         match d {
             Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn copy_from(d: &Data, dst: &mut [Self]) -> Option<()> {
+        match d {
+            Data::I32(v) => {
+                dst.copy_from_slice(v);
+                Some(())
+            }
             _ => None,
         }
     }
@@ -120,6 +140,21 @@ impl Literal {
 
     pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
         T::extract(&self.data).ok_or_else(|| Error::new("literal element type mismatch"))
+    }
+
+    /// Copy the elements into `dst` WITHOUT allocating (length- and
+    /// type-checked) — the recycled-buffer analogue of
+    /// [`Literal::to_vec`], mirroring the real crate's `copy_raw_to`.
+    pub fn copy_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        if dst.len() != self.element_count() {
+            return Err(Error::new(format!(
+                "copy_to: destination holds {} elements, literal has {}",
+                dst.len(),
+                self.element_count()
+            )));
+        }
+        T::copy_from(&self.data, dst)
+            .ok_or_else(|| Error::new("literal element type mismatch"))
     }
 
     /// Flatten a tuple literal. Only executable outputs are tuples, and
@@ -191,6 +226,18 @@ mod tests {
         let s = Literal::scalar(7i32);
         assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
         assert_eq!(s.element_count(), 1);
+    }
+
+    #[test]
+    fn copy_to_reuses_buffers_and_checks() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        let mut buf = vec![0.0f32; 3];
+        lit.copy_to(&mut buf).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+        let mut short = vec![0.0f32; 2];
+        assert!(lit.copy_to(&mut short).is_err());
+        let mut wrong = vec![0i32; 3];
+        assert!(lit.copy_to(&mut wrong).is_err());
     }
 
     #[test]

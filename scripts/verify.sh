@@ -1,13 +1,16 @@
 #!/usr/bin/env bash
-# Tier-1 verification entry point: build + full test suite + a quick
-# bench smoke on 2 kernel threads (exercises the thread pool, the tiled
+# Tier-1 verification entry point: build + full test suite + rustdoc
+# gate (broken intra-doc links / doc warnings fail fast) + a quick bench
+# smoke on 2 kernel threads (exercises the thread pool, the tiled
 # backend, and the BENCH_kernels.json emitters end to end), the chunked-
-# prefill differential suite against the one-token oracle, a serving
-# smoke on a tiny synthetic checkpoint (compressed-weight decode, KV
-# cache, chunked prefill with prefill_chunk > 1, continuous batching,
-# zero-allocation assertion, TTFT + prefill_tokens_per_s reporting), and
-# a perf diff against the previous bench run (warn-only, >15%
-# regression; covers GFLOP/s and prefill tok/s).
+# prefill differential suite against the one-token oracle, the paged-KV
+# differential suite against the contiguous oracle (bitwise logits,
+# fragmentation liveness, zero-alloc), a serving smoke on a tiny
+# synthetic checkpoint (compressed-weight decode, paged KV cache,
+# chunked prefill, continuous batching, zero-allocation assertion, TTFT
+# + prefill_tokens_per_s + kv_paging occupancy reporting), and a perf
+# diff against the previous bench run (warn-only, >15% regression;
+# covers GFLOP/s, prefill tok/s, and paged-KV occupancy).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,18 +20,24 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
+echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== chunked-prefill differential tests (vs one-token oracle)"
 PALLAS_NUM_THREADS=2 cargo test -q --test serve_prefill
+
+echo "== paged-KV differential tests (vs contiguous oracle, bitwise)"
+PALLAS_NUM_THREADS=2 cargo test -q --test serve_paged
 
 echo "== bench smoke (PALLAS_NUM_THREADS=2, --quick)"
 PALLAS_NUM_THREADS=2 cargo bench --bench ablation_spmm -- --quick
 PALLAS_NUM_THREADS=2 cargo bench --bench fig7_ffn_block -- --quick
 
-echo "== serve smoke (synthetic checkpoint, 64 steps, chunked prefill, 2 threads)"
+echo "== serve smoke (synthetic checkpoint, 64 steps, paged KV, 2 threads)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --synthetic --quick \
-  --steps 64 --batch-sizes 2,4 --prefill-chunk 4
+  --steps 64 --batch-sizes 2,4 --prefill-chunk 4 --kv-page 8
 
-echo "== bench-diff (GFLOP/s + prefill tok/s vs previous run, warn-only)"
+echo "== bench-diff (GFLOP/s + prefill tok/s + kv occupancy, warn-only)"
 ./target/release/sparse24 bench-diff || true
 
 echo "== verify OK"
