@@ -1,0 +1,163 @@
+//! Table 12 reproduction: the fused column-major spMM epilogue vs the
+//! transpose-staged path, on the Fig. 7a FFN shapes (d=1024, r=4096).
+//!
+//! The paper keeps the spMM output Z column-major so the gated
+//! activation streams contiguously (Appendix A.2, Table 12). This bench
+//! records what that layout fusion buys on the CPU substrate:
+//!
+//!  * `spmm_nt`: scatter-epilogue row-major kernel vs the fused
+//!    column-major epilogue (contiguous 8-lane stores);
+//!  * `spmm_nn`: the G^T/C^T transpose-staged row-major kernel vs the
+//!    fused all-column-major kernel (zero staging);
+//!  * the whole sparse FFN forward: the column-major pipeline
+//!    (`SparseFfn::forward_scratch`) vs the pre-PR-5 row-major
+//!    composition (row-major spMMs + row-order-in-memory GEGLU);
+//!  * the Table-4 GEGLU row-vs-column traversal numbers at the same
+//!    FFN shape, so the activation side of the layout story sits next
+//!    to the spMM side in one record.
+//!
+//! Results land in BENCH_kernels.json section `table12_epilogue`
+//! (rotated to `.prev` per run; `sparse24 bench-diff` warns on >15%
+//! GFLOP/s drops like every other section).
+//!
+//! Run: cargo bench --bench table12_epilogue [-- --quick]
+
+use std::time::Duration;
+
+use sparse24::sparse::ffn::{add_bias, FfnCache, SparseFfn};
+use sparse24::sparse::geglu::{geglu_col_order, geglu_row_major_into, geglu_row_order, ColMajor};
+use sparse24::sparse::kernels::{self, tiled};
+use sparse24::sparse::spmm::Compressed24;
+use sparse24::sparse::transposable::transposable_mask;
+use sparse24::tensor::Tensor;
+use sparse24::util::bench::{bench, bench_val, write_kernel_bench, KernelBench};
+use sparse24::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = Duration::from_millis(if quick { 60 } else { 400 });
+    // Fig. 7a FFN weight shapes: W1 (2r, d) with d=1024, r=4096; token
+    // count matches the ablation bench so sections are comparable.
+    let (p, d, r) = if quick { (128, 256, 1024) } else { (512, 1024, 4096) };
+    let threads = kernels::num_threads();
+    let mut recs = Vec::new();
+    let mut rng = Rng::new(0x7A12);
+
+    println!("Table 12: fused column-major epilogue vs transpose-staged (p={p} d={d} r={r}, {threads} threads)");
+
+    // --- spmm_nt: scatter epilogue vs fused cm stores (W1 shape) ---
+    let x = Tensor::normal(&[p, d], 0.5, &mut rng);
+    let w1 = Tensor::normal(&[2 * r, d], 0.5, &mut rng);
+    let w1c = Compressed24::from_masked(&w1, &transposable_mask(&w1));
+    let nt_macs = p * (d / 2) * 2 * r;
+    let mut c_rm = Tensor::zeros(&[p, 2 * r]);
+    let rm = bench(|| tiled::spmm_nt_into(&x, &w1c, &mut c_rm), budget);
+    let mut c_cm = Tensor::zeros(&[2 * r, p]);
+    let cm = bench(|| tiled::spmm_nt_cm_into(&x, &w1c, &mut c_cm), budget);
+    report_pair("spmm_nt scatter vs cm", &rm, &cm, nt_macs);
+    recs.push(rec("spmm_nt_scatter_rm", p, d, 2 * r, threads, &rm, nt_macs));
+    recs.push(rec("spmm_nt_fused_cm", p, d, 2 * r, threads, &cm, nt_macs));
+
+    // --- spmm_nn: two staged transposes vs zero (input-grad shape) ---
+    let w2 = Tensor::normal(&[d, r], 0.5, &mut rng);
+    let w2c = Compressed24::from_masked(&w2, &transposable_mask(&w2));
+    let g = Tensor::normal(&[p, d], 0.5, &mut rng);
+    let gt = g.t();
+    let nn_macs = p * d * (r / 2);
+    let mut cn_rm = Tensor::zeros(&[p, r]);
+    let rm = bench(|| tiled::spmm_nn_into(&g, &w2c, &mut cn_rm), budget);
+    let mut cn_cm = Tensor::zeros(&[r, p]);
+    let cm = bench(|| tiled::spmm_nn_cm_into(&gt, &w2c, &mut cn_cm), budget);
+    report_pair("spmm_nn staged vs cm", &rm, &cm, nn_macs);
+    recs.push(rec("spmm_nn_staged_rm", p, d, r, threads, &rm, nn_macs));
+    recs.push(rec("spmm_nn_fused_cm", p, d, r, threads, &cm, nn_macs));
+
+    // --- whole sparse FFN forward: cm pipeline vs row-major staging ---
+    let mut frng = Rng::new(0x7A13);
+    let sf = SparseFfn::new(d, r, &mut frng);
+    let xf = Tensor::normal(&[p, d], 0.5, &mut frng);
+    // one FFN forward executes both spMMs at half MACs
+    let ffn_macs = p * (d / 2) * 2 * r + p * (r / 2) * d;
+    let mut cache = FfnCache::empty();
+    let mut y = Tensor::zeros(&[0]);
+    let fused = bench(
+        || {
+            sf.forward_scratch(&xf, &mut cache, &mut y);
+            std::hint::black_box(y.data[0]);
+        },
+        budget,
+    );
+    // the pre-PR-5 composition: row-major spMMs (scatter epilogues +
+    // internal stagings) and the GEGLU forced to traverse the spMM's
+    // natural column-major output row by row
+    let mut z_rm = Tensor::zeros(&[p, 2 * r]);
+    let mut a_rm = Tensor::zeros(&[0]);
+    let mut y_rm = Tensor::zeros(&[p, d]);
+    let staged = bench(
+        || {
+            tiled::spmm_nt_into(&xf, &sf.w1c, &mut z_rm);
+            add_bias(&mut z_rm, &sf.dense.b1);
+            geglu_row_major_into(&z_rm, &mut a_rm);
+            tiled::spmm_nt_into(&a_rm, &sf.w2c, &mut y_rm);
+            add_bias(&mut y_rm, &sf.dense.b2);
+            std::hint::black_box(y_rm.data[0]);
+        },
+        budget,
+    );
+    report_pair("ffn fwd staged vs cm", &staged, &fused, ffn_macs);
+    recs.push(rec("ffn_fwd_staged_rm", p, d, r, threads, &staged, ffn_macs));
+    recs.push(rec("ffn_fwd_fused_cm", p, d, r, threads, &fused, ffn_macs));
+
+    // --- Table 4 on the same shape: GEGLU traversal order ---
+    let z_cm = ColMajor::from_row_major(&Tensor::normal(&[p, 2 * r], 1.0, &mut rng));
+    // count gelu+mul as 2 flops per output element, consistently across
+    // runs (bench-diff only needs comparability, not an exact model)
+    let geglu_ops = p * r;
+    let row = bench_val(|| geglu_row_order(&z_cm), budget);
+    let col = bench_val(|| geglu_col_order(&z_cm), budget);
+    report_pair("geglu row vs col order", &row, &col, geglu_ops);
+    recs.push(rec("geglu_row_order", p, 2 * r, r, threads, &row, geglu_ops));
+    recs.push(rec("geglu_col_order", p, 2 * r, r, threads, &col, geglu_ops));
+
+    write_kernel_bench("table12_epilogue", &recs).unwrap();
+    println!("-> BENCH_kernels.json (section table12_epilogue)");
+}
+
+fn rec(
+    kernel: &str,
+    p: usize,
+    q: usize,
+    r: usize,
+    threads: usize,
+    st: &sparse24::util::bench::Stats,
+    macs: usize,
+) -> KernelBench {
+    KernelBench {
+        kernel: kernel.into(),
+        backend: kernels::backend_name().into(),
+        p,
+        q,
+        r,
+        threads,
+        median_ms: st.median_s() * 1e3,
+        gflops: 2.0 * macs as f64 / st.median_s() / 1e9,
+        effective_macs: macs,
+    }
+}
+
+fn report_pair(
+    name: &str,
+    baseline: &sparse24::util::bench::Stats,
+    fused: &sparse24::util::bench::Stats,
+    macs: usize,
+) {
+    let (b, f) = (baseline.median_s(), fused.median_s());
+    println!(
+        "  {name:<26} staged {:>9.3} ms ({:>7.1} GFLOP/s)  fused {:>9.3} ms ({:>7.1} GFLOP/s)  {:>5.2}x",
+        b * 1e3,
+        2.0 * macs as f64 / b / 1e9,
+        f * 1e3,
+        2.0 * macs as f64 / f / 1e9,
+        b / f,
+    );
+}

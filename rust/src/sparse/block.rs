@@ -313,38 +313,67 @@ impl Attention {
                          v_cache: &mut [f32], pos: usize,
                          scores: &mut [f32], ctx_row: &mut [f32]) {
         let (d, _) = self.w_o.dims2();
+        // Load-bearing release asserts: the body writes through raw
+        // MutPtr ranges (debug-only bounds checks), so a too-small
+        // cache must be rejected here — in release builds too — where
+        // the pre-refactor slice indexing used to panic.
+        assert!((pos + 1) * d <= k_cache.len(), "attend_cached: K cache overflow");
+        assert!((pos + 1) * d <= v_cache.len(), "attend_cached: V cache overflow");
+        let kp = MutPtr::new(k_cache);
+        let vp = MutPtr::new(v_cache);
+        // SAFETY: kp/vp wrap borrows this call holds exclusively and
+        // only this thread touches; every resolved row t*d..t*d+d for
+        // t <= pos is in bounds (asserted above).
+        unsafe {
+            self.attend_token(qkv_row, &kp, &vp, &|t| t * d, pos, scores, ctx_row)
+        }
+    }
+
+    /// [`Attention::attend_cached`] over page-table-resolved K/V rows:
+    /// token row `t` lives at flat offset `row_base(t)` of the pool
+    /// storage behind `kp`/`vp` instead of at `t * d` of one flat
+    /// slice. Both entry points run the SAME body (`attend_token`)
+    /// with different row-base closures, so a paged sequence's logits
+    /// match the contiguous pool bitwise by construction — the serve
+    /// paged-vs-contiguous differential tests pin it.
+    ///
+    /// # Safety
+    /// Every row `row_base(t)..row_base(t) + d` for `t <= pos` must be
+    /// in bounds of both storages and disjoint from every range any
+    /// other live thread mutates (the pool guarantees this: distinct
+    /// slots own distinct pages).
+    pub(crate) unsafe fn attend_cached_paged<F: Fn(usize) -> usize>(
+        &self, qkv_row: &[f32], kp: &MutPtr, vp: &MutPtr,
+        row_base: &F, pos: usize,
+        scores: &mut [f32], ctx_row: &mut [f32],
+    ) {
+        unsafe { self.attend_token(qkv_row, kp, vp, row_base, pos, scores, ctx_row) }
+    }
+
+    /// THE decode body: write one token's K/V row at `row_base(pos)`,
+    /// then score/softmax/context per head over rows `0..=pos`. Shared
+    /// verbatim by the contiguous (`row_base = t * d`) and paged entry
+    /// points; `row_base` is a monomorphized closure, so the contiguous
+    /// fast path inlines to the original flat-slice addressing.
+    ///
+    /// # Safety
+    /// Every resolved row range must be in bounds of both storages and
+    /// untouched by any other live thread.
+    #[inline]
+    unsafe fn attend_token<F: Fn(usize) -> usize>(
+        &self, qkv_row: &[f32], kp: &MutPtr, vp: &MutPtr,
+        row_base: &F, pos: usize,
+        scores: &mut [f32], ctx_row: &mut [f32],
+    ) {
+        let (d, _) = self.w_o.dims2();
         let h = self.n_heads;
         let hd = d / h;
         debug_assert_eq!(qkv_row.len(), 3 * d);
-        debug_assert!((pos + 1) * d <= k_cache.len(), "KV cache overflow");
         debug_assert_eq!(ctx_row.len(), d);
-        k_cache[pos * d..(pos + 1) * d].copy_from_slice(&qkv_row[d..2 * d]);
-        v_cache[pos * d..(pos + 1) * d].copy_from_slice(&qkv_row[2 * d..3 * d]);
-        let scale = 1.0 / (hd as f32).sqrt();
-        for head in 0..h {
-            let q = &qkv_row[head * hd..head * hd + hd];
-            let s = &mut scores[..pos + 1];
-            for (t, st) in s.iter_mut().enumerate() {
-                let kt = &k_cache[t * d + head * hd..t * d + head * hd + hd];
-                *st = super::gemm::dot(q, kt) * scale;
-            }
-            let m = s.iter().cloned().fold(f32::MIN, f32::max);
-            let mut z = 0f32;
-            for st in s.iter_mut() {
-                *st = (*st - m).exp();
-                z += *st;
-            }
-            for st in s.iter_mut() {
-                *st /= z;
-            }
-            let out = &mut ctx_row[head * hd..head * hd + hd];
-            out.fill(0.0);
-            for (t, &pt) in s.iter().enumerate() {
-                let vt = &v_cache[t * d + head * hd..t * d + head * hd + hd];
-                for k in 0..hd {
-                    out[k] += pt * vt[k];
-                }
-            }
+        unsafe {
+            write_kv_row(qkv_row, d, kp, vp, row_base(pos));
+            attend_row(h, hd, scale_of(hd), qkv_row, kp, vp, row_base, pos,
+                       scores, ctx_row);
         }
     }
 
@@ -359,147 +388,62 @@ impl Attention {
     ///
     /// The K/V writes complete before any row attends, so rows run on
     /// the kernel pool in parallel (each owns its scores/ctx row, the
-    /// caches are read-only by then). Per-row arithmetic matches
-    /// [`Attention::attend_cached`] operation for operation, which is
-    /// what lets chunked prefill reproduce the one-token reference path
-    /// (`InferEngine::prefill_reference`) to float precision.
+    /// caches are read-only by then). Per-row arithmetic IS
+    /// [`Attention::attend_cached`]'s body (both call the shared
+    /// `attend_row` core), which is what lets chunked prefill reproduce
+    /// the one-token reference path (`InferEngine::prefill_reference`)
+    /// to float precision.
     pub fn attend_prefill(&self, qkv: &Tensor, k_cache: &mut [f32],
                           v_cache: &mut [f32], pos0: usize, cap: usize,
                           scores: &mut Tensor, ctx: &mut Tensor) {
         let (c, three_d) = qkv.dims2();
         let d = three_d / 3;
-        let h = self.n_heads;
-        let hd = d / h;
-        debug_assert!(c >= 1);
-        debug_assert!(pos0 + c <= cap, "prefill chunk overflows KV cap");
-        debug_assert!(cap * d <= k_cache.len() && cap * d <= v_cache.len());
-        // contiguous chunk write: rows pos0..pos0+c of both caches
-        for i in 0..c {
-            let row = &qkv.data[i * 3 * d..(i + 1) * 3 * d];
-            k_cache[(pos0 + i) * d..(pos0 + i + 1) * d]
-                .copy_from_slice(&row[d..2 * d]);
-            v_cache[(pos0 + i) * d..(pos0 + i + 1) * d]
-                .copy_from_slice(&row[2 * d..3 * d]);
-        }
-        ctx.resize_to(&[c, d]);
-        scores.resize_to(&[c, cap]);
-        let scale = 1.0 / (hd as f32).sqrt();
-        // caches are read-only from here; one chunk row per work unit,
-        // each owning its scores row and ctx row
-        let kc: &[f32] = k_cache;
-        let vc: &[f32] = v_cache;
-        let ctx_ptr = MutPtr::new(&mut ctx.data);
-        let scores_ptr = MutPtr::new(&mut scores.data);
-        let qkv_ref = &qkv.data;
-        parallel_rows(c, 1, &|u0, u1| {
-            for i in u0..u1 {
-                let pos = pos0 + i;
-                let srow = unsafe { scores_ptr.range(i * cap, (i + 1) * cap) };
-                let crow = unsafe { ctx_ptr.range(i * d, (i + 1) * d) };
-                let qrow = &qkv_ref[i * 3 * d..(i + 1) * 3 * d];
-                for head in 0..h {
-                    let q = &qrow[head * hd..head * hd + hd];
-                    let s = &mut srow[..pos + 1];
-                    for (t, st) in s.iter_mut().enumerate() {
-                        let kt = &kc[t * d + head * hd..t * d + head * hd + hd];
-                        *st = super::gemm::dot(q, kt) * scale;
-                    }
-                    let m = s.iter().cloned().fold(f32::MIN, f32::max);
-                    let mut z = 0f32;
-                    for st in s.iter_mut() {
-                        *st = (*st - m).exp();
-                        z += *st;
-                    }
-                    for st in s.iter_mut() {
-                        *st /= z;
-                    }
-                    let out = &mut crow[head * hd..head * hd + hd];
-                    out.fill(0.0);
-                    for (t, &pt) in s.iter().enumerate() {
-                        let vt = &vc[t * d + head * hd..t * d + head * hd + hd];
-                        for k in 0..hd {
-                            out[k] += pt * vt[k];
-                        }
-                    }
-                }
-            }
-        });
-    }
-
-    /// [`Attention::attend_cached`] over page-table-resolved K/V rows:
-    /// token row `t` lives at flat offset `row_base(t)` of the pool
-    /// storage behind `kp`/`vp` instead of at `t * d` of one flat
-    /// slice. Float operations are identical in identical order, so a
-    /// paged sequence's logits match the contiguous pool bitwise — the
-    /// serve paged-vs-contiguous differential tests pin this.
-    ///
-    /// # Safety
-    /// Every row `row_base(t)..row_base(t) + d` for `t <= pos` must be
-    /// in bounds of both storages and disjoint from every range any
-    /// other live thread mutates (the pool guarantees this: distinct
-    /// slots own distinct pages).
-    pub(crate) unsafe fn attend_cached_paged(
-        &self, qkv_row: &[f32], kp: &MutPtr, vp: &MutPtr,
-        row_base: &dyn Fn(usize) -> usize, pos: usize,
-        scores: &mut [f32], ctx_row: &mut [f32],
-    ) {
-        let (d, _) = self.w_o.dims2();
-        let h = self.n_heads;
-        let hd = d / h;
-        debug_assert_eq!(qkv_row.len(), 3 * d);
-        debug_assert_eq!(ctx_row.len(), d);
-        {
-            let base = row_base(pos);
-            let krow = unsafe { kp.range(base, base + d) };
-            krow.copy_from_slice(&qkv_row[d..2 * d]);
-            let vrow = unsafe { vp.range(base, base + d) };
-            vrow.copy_from_slice(&qkv_row[2 * d..3 * d]);
-        }
-        let scale = 1.0 / (hd as f32).sqrt();
-        for head in 0..h {
-            let q = &qkv_row[head * hd..head * hd + hd];
-            let s = &mut scores[..pos + 1];
-            for (t, st) in s.iter_mut().enumerate() {
-                let base = row_base(t) + head * hd;
-                let kt: &[f32] = unsafe { kp.range(base, base + hd) };
-                *st = super::gemm::dot(q, kt) * scale;
-            }
-            let m = s.iter().cloned().fold(f32::MIN, f32::max);
-            let mut z = 0f32;
-            for st in s.iter_mut() {
-                *st = (*st - m).exp();
-                z += *st;
-            }
-            for st in s.iter_mut() {
-                *st /= z;
-            }
-            let out = &mut ctx_row[head * hd..head * hd + hd];
-            out.fill(0.0);
-            for (t, &pt) in s.iter().enumerate() {
-                let base = row_base(t) + head * hd;
-                let vt: &[f32] = unsafe { vp.range(base, base + hd) };
-                for k in 0..hd {
-                    out[k] += pt * vt[k];
-                }
-            }
-        }
+        // Load-bearing release asserts (see attend_cached): the chunk
+        // body writes K/V through raw MutPtr ranges.
+        assert!(pos0 + c <= cap, "attend_prefill: chunk overflows KV cap");
+        assert!(cap * d <= k_cache.len() && cap * d <= v_cache.len(),
+                "attend_prefill: KV cache shorter than cap");
+        let kp = MutPtr::new(k_cache);
+        let vp = MutPtr::new(v_cache);
+        // SAFETY: kp/vp wrap borrows this call holds exclusively; rows
+        // t*d..t*d+d are in bounds for t < cap (asserted above), and the
+        // chunk body only reads them once the parallel region starts.
+        unsafe { self.attend_chunk(qkv, &kp, &vp, &|t| t * d, pos0, cap, scores, ctx) }
     }
 
     /// [`Attention::attend_prefill`] over page-table-resolved K/V rows
     /// (see [`Attention::attend_cached_paged`] for the addressing
-    /// contract). The chunk's K/V rows are written serially through the
-    /// page table before any row attends, then chunk rows fan out on
-    /// the kernel pool exactly like the contiguous path.
-    /// `score_stride` is the scores-row width (>= pos0 + chunk; the
-    /// engine passes the same stride the contiguous path uses so the
-    /// scratch buffers are shared).
+    /// contract). `score_stride` is the scores-row width (>= pos0 +
+    /// chunk; the engine passes the same stride the contiguous path
+    /// uses so the scratch buffers are shared). Same body as the
+    /// contiguous entry point (the shared `attend_chunk` driver),
+    /// different row-base closure — bitwise parity by construction.
     ///
     /// # Safety
     /// As [`Attention::attend_cached_paged`]: all resolved rows in
     /// bounds, and this sequence's pages touched by no other thread.
-    pub(crate) unsafe fn attend_prefill_paged(
+    pub(crate) unsafe fn attend_prefill_paged<F: Fn(usize) -> usize + Sync>(
         &self, qkv: &Tensor, kp: &MutPtr, vp: &MutPtr,
-        row_base: &(dyn Fn(usize) -> usize + Sync), pos0: usize,
+        row_base: &F, pos0: usize,
+        score_stride: usize, scores: &mut Tensor, ctx: &mut Tensor,
+    ) {
+        unsafe {
+            self.attend_chunk(qkv, kp, vp, row_base, pos0, score_stride, scores, ctx)
+        }
+    }
+
+    /// THE prefill body: serial chunk K/V writes through `row_base`,
+    /// then one [`attend_row`] per chunk row on the kernel pool (each
+    /// work unit owns its scores row and ctx row; the caches are
+    /// read-only by then).
+    ///
+    /// # Safety
+    /// Every resolved row range must be in bounds of both storages and
+    /// untouched by any other live thread for the duration of the call.
+    #[inline]
+    unsafe fn attend_chunk<F: Fn(usize) -> usize + Sync>(
+        &self, qkv: &Tensor, kp: &MutPtr, vp: &MutPtr,
+        row_base: &F, pos0: usize,
         score_stride: usize, scores: &mut Tensor, ctx: &mut Tensor,
     ) {
         let (c, three_d) = qkv.dims2();
@@ -510,16 +454,11 @@ impl Attention {
         debug_assert!(pos0 + c <= score_stride, "scores row too narrow");
         for i in 0..c {
             let row = &qkv.data[i * 3 * d..(i + 1) * 3 * d];
-            let base = row_base(pos0 + i);
-            let krow = unsafe { kp.range(base, base + d) };
-            krow.copy_from_slice(&row[d..2 * d]);
-            let vrow = unsafe { vp.range(base, base + d) };
-            vrow.copy_from_slice(&row[2 * d..3 * d]);
+            unsafe { write_kv_row(row, d, kp, vp, row_base(pos0 + i)) };
         }
         ctx.resize_to(&[c, d]);
         scores.resize_to(&[c, score_stride]);
-        let scale = 1.0 / (hd as f32).sqrt();
-        // caches are read-only from here; one chunk row per work unit
+        let scale = scale_of(hd);
         let ctx_ptr = MutPtr::new(&mut ctx.data);
         let scores_ptr = MutPtr::new(&mut scores.data);
         let qkv_ref = &qkv.data;
@@ -530,33 +469,9 @@ impl Attention {
                     unsafe { scores_ptr.range(i * score_stride, (i + 1) * score_stride) };
                 let crow = unsafe { ctx_ptr.range(i * d, (i + 1) * d) };
                 let qrow = &qkv_ref[i * 3 * d..(i + 1) * 3 * d];
-                for head in 0..h {
-                    let q = &qrow[head * hd..head * hd + hd];
-                    let s = &mut srow[..pos + 1];
-                    for (t, st) in s.iter_mut().enumerate() {
-                        let base = row_base(t) + head * hd;
-                        let kt: &[f32] = unsafe { kp.range(base, base + hd) };
-                        *st = super::gemm::dot(q, kt) * scale;
-                    }
-                    let m = s.iter().cloned().fold(f32::MIN, f32::max);
-                    let mut z = 0f32;
-                    for st in s.iter_mut() {
-                        *st = (*st - m).exp();
-                        z += *st;
-                    }
-                    for st in s.iter_mut() {
-                        *st /= z;
-                    }
-                    let out = &mut crow[head * hd..head * hd + hd];
-                    out.fill(0.0);
-                    for (t, &pt) in s.iter().enumerate() {
-                        let base = row_base(t) + head * hd;
-                        let vt: &[f32] = unsafe { vp.range(base, base + hd) };
-                        for k in 0..hd {
-                            out[k] += pt * vt[k];
-                        }
-                    }
-                }
+                unsafe {
+                    attend_row(h, hd, scale, qrow, kp, vp, row_base, pos, srow, crow)
+                };
             }
         });
     }
@@ -569,6 +484,75 @@ impl Attention {
         y.resize_to(&[m, d]);
         gemm_nt_into(ctx, &self.w_o, y);
         add_bias(y, &self.b_o);
+    }
+}
+
+#[inline]
+fn scale_of(hd: usize) -> f32 {
+    1.0 / (hd as f32).sqrt()
+}
+
+/// Append one token's K/V row at flat offset `base`: the write half of
+/// every cached-attention entry point, contiguous and paged alike.
+///
+/// # Safety
+/// `base..base + d` must be in bounds of both storages and untouched by
+/// any other live thread.
+#[inline(always)]
+unsafe fn write_kv_row(qkv_row: &[f32], d: usize, kp: &MutPtr, vp: &MutPtr,
+                       base: usize) {
+    let krow = unsafe { kp.range(base, base + d) };
+    krow.copy_from_slice(&qkv_row[d..2 * d]);
+    let vrow = unsafe { vp.range(base, base + d) };
+    vrow.copy_from_slice(&qkv_row[2 * d..3 * d]);
+}
+
+/// One query row's cached attention: per head, score against K rows
+/// `0..=pos`, softmax, then accumulate the context from the V rows.
+/// This is the SINGLE body behind `attend_cached`, `attend_prefill`,
+/// and their `_paged` twins — `row_base` (an inlinable monomorphized
+/// closure) is the only thing that differs, so the paged-vs-contiguous
+/// bitwise guarantee holds by construction instead of by keeping four
+/// hand-synchronized loops aligned. Softmax arithmetic matches
+/// [`Attention::forward`] operation for operation.
+///
+/// # Safety
+/// Every `row_base(t)..row_base(t) + d` for `t <= pos` must be in
+/// bounds of both storages and, for the duration of the call, mutated
+/// by no other thread (this call only reads them).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+unsafe fn attend_row<F: Fn(usize) -> usize>(
+    h: usize, hd: usize, scale: f32, qkv_row: &[f32],
+    kp: &MutPtr, vp: &MutPtr, row_base: &F, pos: usize,
+    scores: &mut [f32], ctx_row: &mut [f32],
+) {
+    for head in 0..h {
+        let q = &qkv_row[head * hd..head * hd + hd];
+        let s = &mut scores[..pos + 1];
+        for (t, st) in s.iter_mut().enumerate() {
+            let base = row_base(t) + head * hd;
+            let kt: &[f32] = unsafe { kp.range(base, base + hd) };
+            *st = super::gemm::dot(q, kt) * scale;
+        }
+        let m = s.iter().cloned().fold(f32::MIN, f32::max);
+        let mut z = 0f32;
+        for st in s.iter_mut() {
+            *st = (*st - m).exp();
+            z += *st;
+        }
+        for st in s.iter_mut() {
+            *st /= z;
+        }
+        let out = &mut ctx_row[head * hd..head * hd + hd];
+        out.fill(0.0);
+        for (t, &pt) in s.iter().enumerate() {
+            let base = row_base(t) + head * hd;
+            let vt: &[f32] = unsafe { vp.range(base, base + hd) };
+            for k in 0..hd {
+                out[k] += pt * vt[k];
+            }
+        }
     }
 }
 

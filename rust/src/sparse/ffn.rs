@@ -4,7 +4,7 @@
 //!
 //!   forward:   Z = X (W1 ⊙ M1)^T + b1;  A = GEGLU(Z);  Y = A (W2 ⊙ M2)^T + b2
 //!   backward:  ∇W2 = MVUE(∇Y^T) A        (spmm_tn, Eq. 4+6)
-//!              ∇A  = ∇Y (W2 ⊙ M2)        (spmm_nn via compressed W^T, Eq. 3)
+//!              ∇A  = ∇Y (W2 ⊙ M2)        (spmm_nt via compressed W^T, Eq. 3)
 //!              ∇Z  = GEGLU'(Z) ∘ ∇A
 //!              ∇W1 = MVUE(∇Z^T) X
 //!              ∇X  = ∇Z (W1 ⊙ M1)
@@ -13,6 +13,18 @@
 //! transposable-mask search. The dense twin runs the same shapes through
 //! dense GEMMs.
 //!
+//! **Layout (paper Appendix A.2, Table 12):** on the sparse paths every
+//! interior activation is COLUMN-major. The first spMM's fused epilogue
+//! leaves Z as Z^T ([`crate::sparse::kernels::spmm_nt_cm_into`]), the
+//! column-order GEGLU consumes it in place, and the second spMM takes
+//! A^T as its pre-transposed streaming operand directly — no tensor is
+//! ever materialized in a layout the next op has to undo. Conversion to
+//! row-major happens exactly once, folded into the epilogue of the spMM
+//! that crosses the block boundary (Y, ∇X), where attention needs rows.
+//! The backward gets the same treatment: ∇Z^T is *born* transposed, so
+//! the MVUE weight-grad estimator reads it with zero staging. The dense
+//! twin stays row-major throughout (its GEMMs are row-major native).
+//!
 //! The `_scratch` variants are the hot path: every output/temporary is a
 //! caller-owned buffer recycled through a [`Scratch`] arena, so the
 //! steady state performs zero heap allocations — the Fig. 7 benches
@@ -20,11 +32,14 @@
 //! `forward`/`backward` wrappers allocate and delegate.
 
 use super::gemm::{gemm_nn_into, gemm_nt_into, gemm_tn_into};
-use super::geglu::{geglu_row_major_grad_into, geglu_row_major_into};
+use super::geglu::{
+    geglu_cm_grad_into, geglu_cm_into, geglu_row_major_grad_into,
+    geglu_row_major_into,
+};
 use super::kernels::{self, with_thread_scratch, Scratch};
 use super::mask::Mask;
 use super::mvue::mvue24_into;
-use super::spmm::{spmm_nt_into, spmm_tn_into, Compressed24};
+use super::spmm::{spmm_tn_into, Compressed24};
 use super::transposable::transposable_mask;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -63,6 +78,11 @@ pub struct DenseFfn {
 
 /// Forward cache reused by the backward pass (recycled across steps by
 /// the `_scratch` paths).
+///
+/// Layout depends on the owner: [`DenseFfn`] stores `z` (p, 2r) and `a`
+/// (p, r) row-major; [`SparseFfn`] stores them COLUMN-major as Z^T
+/// (2r, p) and A^T (r, p) — the Table-12 layout its spMM epilogues
+/// produce and its backward consumes in place.
 pub struct FfnCache {
     pub z: Tensor,
     pub a: Tensor,
@@ -218,15 +238,20 @@ impl SparseFfn {
         (y, cache)
     }
 
-    /// Zero-allocation forward through the compressed operands.
+    /// Zero-allocation forward through the compressed operands, in the
+    /// paper's Table-12 layout: Z and A live column-major in the cache
+    /// (`cache.z` = Z^T, `cache.a` = A^T), the GEGLU streams columns,
+    /// and only the last spMM's epilogue converts back to row-major for
+    /// the block boundary. The one staging transpose left is X^T inside
+    /// the first spMM — `x` arrives row-major from attention/LN.
     pub fn forward_scratch(&self, x: &Tensor, cache: &mut FfnCache, y: &mut Tensor) {
         let (p, _) = x.dims2();
-        cache.z.resize_to(&[p, self.w1c.rows]);
-        spmm_nt_into(x, &self.w1c, &mut cache.z);
-        add_bias(&mut cache.z, &self.dense.b1);
-        geglu_row_major_into(&cache.z, &mut cache.a);
+        cache.z.resize_to(&[self.w1c.rows, p]);
+        kernels::spmm_nt_cm_into(x, &self.w1c, &mut cache.z);
+        add_bias_cm(&mut cache.z, &self.dense.b1);
+        geglu_cm_into(&cache.z, &mut cache.a);
         y.resize_to(&[p, self.w2c.rows]);
-        spmm_nt_into(&cache.a, &self.w2c, y);
+        kernels::spmm_nt_t_into(&cache.a, &self.w2c, y);
         add_bias(y, &self.dense.b2);
     }
 
@@ -242,6 +267,15 @@ impl SparseFfn {
 
     /// Zero-allocation FST backward. Draws the same MVUE uniform stream
     /// as [`SparseFfn::backward`] for a given rng state.
+    ///
+    /// Column-major pipeline: `dy` is transposed ONCE (it arrives
+    /// row-major from the block boundary) and that ∇Y^T feeds both the
+    /// MVUE weight-grad estimator and — as the pre-transposed streaming
+    /// operand — the ∇A spMM, whose fused epilogue leaves ∇A^T for the
+    /// column-order GEGLU backward. ∇Z^T is therefore born transposed:
+    /// the second MVUE runs with zero staging, and the old explicit
+    /// ∇Z-transpose plus both spMM-internal ∇Y^T/∇Z^T stagings are gone.
+    /// Only ∇X converts back to row-major, inside its spMM epilogue.
     pub fn backward_scratch(
         &self,
         x: &Tensor,
@@ -256,39 +290,38 @@ impl SparseFfn {
         let (two_r, _) = self.dense.w1.dims2();
         let mut uni = scratch.take_vec(0);
         let mut gcomp = scratch.take_comp();
-        // Distinct transpose/MVUE buffers per shape so their lengths
-        // never change across steps (resize_to's zero-fill only triggers
-        // on a length change — reusing one buffer for both shapes would
-        // memset 2*(2r*p) dead floats per step).
-        // ∇W2 = MVUE(∇Y^T) A
+        // Distinct MVUE buffers per shape so their lengths never change
+        // across steps (resize_to's zero-fill only triggers on a length
+        // change — reusing one buffer for both shapes would memset
+        // 2*(2r*p) dead floats per step).
+        // ∇W2 = MVUE(∇Y^T) A — A^T is consumed in place (gather-dot)
         let mut gt_dy = scratch.take(&[d, p]);
         let mut mv_dy = scratch.take(&[d, p]);
         kernels::transpose(dy, &mut gt_dy);
         mvue24_into(&gt_dy, rng, &mut uni, &mut mv_dy);
         compress_sparse24_into(&mv_dy, &mut gcomp);
         g.dw2.resize_to(&self.dense.w2.shape);
-        spmm_tn_into(&gcomp, &cache.a, &mut g.dw2);
+        kernels::spmm_tn_cm_into(&gcomp, &cache.a, &mut g.dw2);
         col_sum_into(dy, &mut g.db2);
-        // ∇A = ∇Y (W2 ⊙ M2) — via the compressed transpose (Eq. 5)
-        let mut da = scratch.take(&[p, r]);
-        spmm_nt_into(dy, &self.w2ct, &mut da);
-        let mut dz = scratch.take(&[p, two_r]);
-        geglu_row_major_grad_into(&cache.z, &da, &mut dz);
-        // ∇W1 = MVUE(∇Z^T) X
-        let mut gt_dz = scratch.take(&[two_r, p]);
+        // ∇A^T = (∇Y (W2 ⊙ M2))^T — via the compressed transpose
+        // (Eq. 5), streaming the ∇Y^T we already have
+        let mut da = scratch.take(&[r, p]);
+        kernels::spmm_nt_tcm_into(&gt_dy, &self.w2ct, &mut da);
+        let mut dz = scratch.take(&[two_r, p]);
+        geglu_cm_grad_into(&cache.z, &da, &mut dz);
+        // ∇W1 = MVUE(∇Z^T) X — dz IS ∇Z^T already; x is row-major
         let mut mv_dz = scratch.take(&[two_r, p]);
-        kernels::transpose(&dz, &mut gt_dz);
-        mvue24_into(&gt_dz, rng, &mut uni, &mut mv_dz);
+        mvue24_into(&dz, rng, &mut uni, &mut mv_dz);
         compress_sparse24_into(&mv_dz, &mut gcomp);
         g.dw1.resize_to(&self.dense.w1.shape);
         spmm_tn_into(&gcomp, x, &mut g.dw1);
-        col_sum_into(&dz, &mut g.db1);
-        // ∇X = ∇Z (W1 ⊙ M1) — via the compressed transpose
+        row_sum_into(&dz, &mut g.db1);
+        // ∇X = ∇Z (W1 ⊙ M1) — ∇Z^T streams, the epilogue scatters back
+        // to row-major at the block boundary
         g.dx.resize_to(&x.shape);
-        spmm_nt_into(&dz, &self.w1ct, &mut g.dx);
+        kernels::spmm_nt_t_into(&dz, &self.w1ct, &mut g.dx);
         scratch.give(gt_dy);
         scratch.give(mv_dy);
-        scratch.give(gt_dz);
         scratch.give(mv_dz);
         scratch.give(da);
         scratch.give(dz);
@@ -341,18 +374,20 @@ impl FrozenFfn {
     }
 
     /// Inference forward through the compressed operands. Identical
-    /// arithmetic to [`SparseFfn::forward_scratch`], but every temporary
-    /// comes from `scratch` and nothing is cached — decode steps in the
+    /// arithmetic to [`SparseFfn::forward_scratch`] — including its
+    /// column-major Table-12 interior (Z^T and A^T temporaries, fused
+    /// layout conversion in the spMM epilogues) — but every temporary
+    /// comes from `scratch` and nothing is cached; decode steps in the
     /// steady state allocate nothing.
     pub fn forward_into(&self, x: &Tensor, y: &mut Tensor, scratch: &mut Scratch) {
         let (p, _) = x.dims2();
-        let mut z = scratch.take(&[p, self.w1c.rows]);
-        spmm_nt_into(x, &self.w1c, &mut z);
-        add_bias(&mut z, &self.b1);
-        let mut a = scratch.take(&[p, self.w1c.rows / 2]);
-        geglu_row_major_into(&z, &mut a);
+        let mut z = scratch.take(&[self.w1c.rows, p]);
+        kernels::spmm_nt_cm_into(x, &self.w1c, &mut z);
+        add_bias_cm(&mut z, &self.b1);
+        let mut a = scratch.take(&[self.w1c.rows / 2, p]);
+        geglu_cm_into(&z, &mut a);
         y.resize_to(&[p, self.w2c.rows]);
-        spmm_nt_into(&a, &self.w2c, y);
+        kernels::spmm_nt_t_into(&a, &self.w2c, y);
         add_bias(y, &self.b2);
         scratch.give(z);
         scratch.give(a);
@@ -416,6 +451,20 @@ pub fn add_bias(x: &mut Tensor, b: &Tensor) {
     }
 }
 
+/// [`add_bias`] for a COLUMN-major activation: `x` is X^T (c, p), so
+/// feature j's bias sweeps one contiguous row — the Table-12 layout
+/// makes the bias add a streaming pass instead of a strided one.
+pub fn add_bias_cm(x: &mut Tensor, b: &Tensor) {
+    let (c, p) = x.dims2();
+    assert_eq!(b.len(), c);
+    for j in 0..c {
+        let bj = b.data[j];
+        for v in &mut x.data[j * p..(j + 1) * p] {
+            *v += bj;
+        }
+    }
+}
+
 pub fn col_sum(x: &Tensor) -> Tensor {
     let mut out = Tensor::zeros(&[0]);
     col_sum_into(x, &mut out);
@@ -430,6 +479,22 @@ pub fn col_sum_into(x: &Tensor, out: &mut Tensor) {
         for j in 0..c {
             out.data[j] += x.data[i * c + j];
         }
+    }
+}
+
+/// Per-feature sum of a COLUMN-major activation: `x` is X^T (c, p), so
+/// [`col_sum_into`]'s strided token loop becomes one contiguous pass per
+/// feature. Accumulation order per feature (token-ascending) is
+/// identical, so the bias gradients match the row-major path bitwise.
+pub fn row_sum_into(x: &Tensor, out: &mut Tensor) {
+    let (c, p) = x.dims2();
+    out.resize_to(&[c]);
+    for j in 0..c {
+        let mut s = 0f32;
+        for &v in &x.data[j * p..(j + 1) * p] {
+            s += v;
+        }
+        out.data[j] = s;
     }
 }
 
@@ -572,6 +637,26 @@ mod tests {
         let mut y2 = Tensor::zeros(&[0]);
         ff2.forward_into(&x, &mut y2, &mut s);
         assert_eq!(y2, y_ref);
+    }
+
+    #[test]
+    fn cm_helpers_match_row_major_bitwise() {
+        // add_bias_cm / row_sum_into are the column-major twins of
+        // add_bias / col_sum_into: same per-element arithmetic and the
+        // same token-ascending accumulation order, so transposed inputs
+        // must produce bitwise-equal results
+        let x = rand(&[7, 10], 30);
+        let b = rand(&[10], 31);
+        let mut rm = x.clone();
+        add_bias(&mut rm, &b);
+        let mut cm = x.t();
+        add_bias_cm(&mut cm, &b);
+        assert_eq!(cm, rm.t());
+        let mut s_rm = Tensor::zeros(&[0]);
+        col_sum_into(&x, &mut s_rm);
+        let mut s_cm = Tensor::zeros(&[0]);
+        row_sum_into(&x.t(), &mut s_cm);
+        assert_eq!(s_cm, s_rm);
     }
 
     #[test]

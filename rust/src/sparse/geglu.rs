@@ -1,12 +1,23 @@
 //! Gated activations on column-major buffers (paper §5.2, Table 4).
 //!
-//! After a 2:4-spMM the fused output Z ∈ R^{p×2r} is COLUMN-major
-//! (Appendix A.2, Table 12). Computing GELU(Z1) ⊙ Z2 by traversing rows
-//! ("intuitive") therefore strides by p between consecutive accesses and
-//! thrashes the cache; traversing columns ("ours") is contiguous. Both
-//! variants are implemented faithfully so the Table-4 bench measures the
-//! real cache effect on this substrate, and the column-order kernel is the
-//! one the FFN substrate uses.
+//! After a 2:4-spMM with the fused Table-12 epilogue
+//! ([`crate::sparse::kernels::spmm_nt_cm_into`]) the output Z ∈ R^{p×2r}
+//! is COLUMN-major (Appendix A.2). Computing GELU(Z1) ⊙ Z2 by traversing
+//! rows ("intuitive") therefore strides by p between consecutive
+//! accesses and thrashes the cache; traversing columns ("ours") is
+//! contiguous. Both traversal orders are implemented faithfully so the
+//! Table-4 bench measures the real cache effect on this substrate.
+//!
+//! What the FFN substrates actually run:
+//! * the sparse paths ([`crate::sparse::ffn::SparseFfn`] /
+//!   [`crate::sparse::ffn::FrozenFfn`]) keep Z column-major end to end —
+//!   [`geglu_cm_into`] (forward) and [`geglu_cm_grad_into`] (backward)
+//!   consume it in place, column order, sharing the same inner loop as
+//!   the Table-4 [`geglu_col_order`] kernel. Layout conversion happens
+//!   only inside the surrounding spMM epilogues at the block boundary.
+//! * the dense baseline ([`crate::sparse::ffn::DenseFfn`]) keeps
+//!   row-major activations (its GEMMs are row-major native) and runs
+//!   [`geglu_row_major_into`] / [`geglu_row_major_grad_into`].
 
 use crate::tensor::Tensor;
 
@@ -80,21 +91,66 @@ impl ColMajor {
     }
 }
 
+/// Shared column-order GEGLU core: `z` is a (p, 2r) column-major flat
+/// buffer (column j at `z[j*p..]`), `out` a (p, r) column-major one.
+/// Every slice touched is contiguous — this is the paper's §5.2 kernel.
+fn geglu_cols(z: &[f32], p: usize, r: usize, out: &mut [f32]) {
+    for j in 0..r {
+        let z1 = &z[j * p..(j + 1) * p];
+        let z2 = &z[(r + j) * p..(r + j + 1) * p];
+        let o = &mut out[j * p..(j + 1) * p];
+        for i in 0..p {
+            o[i] = gelu(z1[i]) * z2[i];
+        }
+    }
+}
+
 /// "Ours" (paper §5.2): traverse along COLUMNS — contiguous in the
 /// column-major layout, cache-friendly. Z: (p, 2r) -> out: (p, r).
 pub fn geglu_col_order(z: &ColMajor) -> ColMajor {
     let p = z.rows;
     let r = z.cols / 2;
     let mut out = ColMajor::zeros(p, r);
+    geglu_cols(&z.data, p, r, &mut out.data);
+    out
+}
+
+/// Column-major fused GEGLU for the sparse FFN substrate: `zt` is Z^T
+/// (2r, p) row-major — i.e. Z (p, 2r) column-major, exactly what the
+/// `_cm` spMM epilogues produce — and `out` becomes A^T (r, p).
+/// Allocation-free; per-element arithmetic identical to
+/// [`geglu_row_major_into`], so switching layouts never moves a float.
+pub fn geglu_cm_into(zt: &Tensor, out: &mut Tensor) {
+    let (c2, p) = zt.dims2();
+    let r = c2 / 2;
+    out.resize_to(&[r, p]);
+    geglu_cols(&zt.data, p, r, &mut out.data);
+}
+
+/// Backward of the column-major GEGLU: `zt` = Z^T (2r, p), `g` = ∇A^T
+/// (r, p), `out` = ∇Z^T (2r, p). Column-order traversal: the gradient
+/// streams contiguously exactly like the forward (Table 4's locality
+/// argument applies to the backward too). Per-element arithmetic is
+/// identical to [`geglu_row_major_grad_into`].
+pub fn geglu_cm_grad_into(zt: &Tensor, g: &Tensor, out: &mut Tensor) {
+    let (c2, p) = zt.dims2();
+    let r = c2 / 2;
+    assert_eq!(g.dims2(), (r, p));
+    out.resize_to(&[c2, p]);
+    // ∇Z1 fills rows 0..r, ∇Z2 rows r..2r — split once, then every
+    // column access below is a contiguous p-slice
+    let (o1s, o2s) = out.data.split_at_mut(r * p);
     for j in 0..r {
-        let z1 = &z.data[j * p..(j + 1) * p];
-        let z2 = &z.data[(r + j) * p..(r + j + 1) * p];
-        let o = &mut out.data[j * p..(j + 1) * p];
+        let z1 = &zt.data[j * p..(j + 1) * p];
+        let z2 = &zt.data[(r + j) * p..(r + j + 1) * p];
+        let grow = &g.data[j * p..(j + 1) * p];
+        let o1 = &mut o1s[j * p..(j + 1) * p];
+        let o2 = &mut o2s[j * p..(j + 1) * p];
         for i in 0..p {
-            o[i] = gelu(z1[i]) * z2[i];
+            o1[i] = gelu_grad(z1[i]) * z2[i] * grow[i];
+            o2[i] = gelu(z1[i]) * grow[i];
         }
     }
-    out
 }
 
 /// "Intuitive" baseline: traverse along ROWS — strided by p in the
@@ -114,7 +170,9 @@ pub fn geglu_row_order(z: &ColMajor) -> ColMajor {
     out
 }
 
-/// SwiGLU, column-order (used by the FFN substrate when configured).
+/// SwiGLU, column-order — the paper benches both gated activations in
+/// Table 4; the FFN substrates are GEGLU-only, so this kernel exists
+/// for the bench/ablation surface, not the training path.
 pub fn swiglu_col_order(z: &ColMajor) -> ColMajor {
     let p = z.rows;
     let r = z.cols / 2;
@@ -240,6 +298,38 @@ mod tests {
         let via_cm = geglu_col_order(&ColMajor::from_row_major(&z_rm)).to_row_major();
         let direct = geglu_row_major(&z_rm);
         assert!(via_cm.max_abs_diff(&direct) < 1e-6);
+    }
+
+    #[test]
+    fn cm_kernels_match_row_major_bitwise() {
+        // geglu_cm_into / geglu_cm_grad_into run the same per-element
+        // arithmetic as the row-major kernels — the transposed results
+        // must agree BITWISE, not just to tolerance
+        let mut rng = Rng::new(7);
+        let z_rm = Tensor::normal(&[9, 14], 1.0, &mut rng);
+        let g_rm = Tensor::normal(&[9, 7], 1.0, &mut rng);
+        let zt = z_rm.t();
+        let gt = g_rm.t();
+        let mut a_cm = Tensor::zeros(&[0]);
+        geglu_cm_into(&zt, &mut a_cm);
+        assert_eq!(a_cm.dims2(), (7, 9));
+        assert_eq!(a_cm.t(), geglu_row_major(&z_rm));
+        let mut dz_cm = Tensor::zeros(&[0]);
+        geglu_cm_grad_into(&zt, &gt, &mut dz_cm);
+        assert_eq!(dz_cm.dims2(), (14, 9));
+        assert_eq!(dz_cm.t(), geglu_row_major_grad(&z_rm, &g_rm));
+    }
+
+    #[test]
+    fn cm_forward_matches_col_order_kernel() {
+        // the FFN-substrate entry point and the Table-4 bench kernel
+        // share one inner loop; pin that they stay identical
+        let mut rng = Rng::new(8);
+        let z_rm = Tensor::normal(&[6, 10], 1.0, &mut rng);
+        let via_bench = geglu_col_order(&ColMajor::from_row_major(&z_rm));
+        let mut via_ffn = Tensor::zeros(&[0]);
+        geglu_cm_into(&z_rm.t(), &mut via_ffn);
+        assert_eq!(via_ffn.data, via_bench.data);
     }
 
     #[test]

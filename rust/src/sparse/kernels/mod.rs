@@ -25,6 +25,11 @@
 //!   metadata) without ever materializing the dense matrix. The sparse
 //!   kernels execute half the FMA work of their dense twins at equal
 //!   tiling and thread count, which is the paper's Eq. 2-4 arithmetic.
+//!   The `_cm` variants additionally keep the output column-major
+//!   (paper Table 12) and/or accept a column-major activation in place,
+//!   deleting the epilogue scatter and the staging transposes the
+//!   row-major forms pay — the sparse FFN pipeline runs entirely on
+//!   them between its row-major block boundaries.
 //! * [`naive`] — the seed's single-threaded reference kernels, kept as
 //!   the differential-test oracle ([`KernelBackend::Naive`]) and used
 //!   for problems too small to amortize threading/tiling overhead.
@@ -176,6 +181,76 @@ pub fn spmm_tn_into(gc: &Compressed24, x: &Tensor, c: &mut Tensor) {
         tiled::spmm_tn_into(gc, x, c)
     } else {
         naive::spmm_tn_into(gc, x, c)
+    }
+}
+
+// --- column-major (Table 12) epilogue variants -----------------------------
+//
+// Same dispatch rule and the same load-bearing output-length asserts as
+// the row-major entry points; `ct`/`xt` arguments are transposed-shape
+// tensors ((cols, tokens) row-major — i.e. the matrix column-major).
+
+/// C = X Wc^T, C left column-major: `ct` is C^T (wc.rows, p).
+pub fn spmm_nt_cm_into(x: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let (p, q) = x.dims2();
+    assert_eq!(q, wc.cols, "spmm_nt_cm_into: inner dim");
+    assert_eq!(ct.data.len(), p * wc.rows, "spmm_nt_cm_into: output len");
+    if tiled_pays_off(p * q * wc.rows) {
+        tiled::spmm_nt_cm_into(x, wc, ct)
+    } else {
+        naive::spmm_nt_cm_into(x, wc, ct)
+    }
+}
+
+/// C = X Wc^T from a pre-transposed `xt` = X^T (q, p); C (p, wc.rows)
+/// row-major (the column-major -> row-major boundary form).
+pub fn spmm_nt_t_into(xt: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let (q, p) = xt.dims2();
+    assert_eq!(q, wc.cols, "spmm_nt_t_into: inner dim");
+    assert_eq!(c.data.len(), p * wc.rows, "spmm_nt_t_into: output len");
+    if tiled_pays_off(p * q * wc.rows) {
+        tiled::spmm_nt_t_into(xt, wc, c)
+    } else {
+        naive::spmm_nt_t_into(xt, wc, c)
+    }
+}
+
+/// C = X Wc^T, pre-transposed input AND column-major output: the fully
+/// fused interior form (`xt` = X^T (q, p), `ct` = C^T (wc.rows, p)).
+pub fn spmm_nt_tcm_into(xt: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let (q, p) = xt.dims2();
+    assert_eq!(q, wc.cols, "spmm_nt_tcm_into: inner dim");
+    assert_eq!(ct.data.len(), p * wc.rows, "spmm_nt_tcm_into: output len");
+    if tiled_pays_off(p * q * wc.rows) {
+        tiled::spmm_nt_tcm_into(xt, wc, ct)
+    } else {
+        naive::spmm_nt_tcm_into(xt, wc, ct)
+    }
+}
+
+/// C = G Wc, everything column-major: `gt` = G^T (wc.rows, p), `ct` =
+/// C^T (wc.cols, p). Zero scratch staging (see [`tiled::spmm_nn_cm_into`]).
+pub fn spmm_nn_cm_into(gt: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let (r, p) = gt.dims2();
+    assert_eq!(r, wc.rows, "spmm_nn_cm_into: inner dim");
+    assert_eq!(ct.data.len(), p * wc.cols, "spmm_nn_cm_into: output len");
+    if tiled_pays_off(p * r * wc.cols) {
+        tiled::spmm_nn_cm_into(gt, wc, ct)
+    } else {
+        naive::spmm_nn_cm_into(gt, wc, ct)
+    }
+}
+
+/// C = Gc^T X with X given column-major (`xt` = X^T (q, p)); C
+/// (gc.rows, q) row-major.
+pub fn spmm_tn_cm_into(gc: &Compressed24, xt: &Tensor, c: &mut Tensor) {
+    let (q, p) = xt.dims2();
+    assert_eq!(p, gc.cols, "spmm_tn_cm_into: reduction dim");
+    assert_eq!(c.data.len(), gc.rows * q, "spmm_tn_cm_into: output len");
+    if tiled_pays_off(gc.rows * p * q) {
+        tiled::spmm_tn_cm_into(gc, xt, c)
+    } else {
+        naive::spmm_tn_cm_into(gc, xt, c)
     }
 }
 

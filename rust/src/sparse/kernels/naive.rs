@@ -73,27 +73,11 @@ pub fn spmm_nt_into(x: &Tensor, wc: &Compressed24, c: &mut Tensor) {
     let (p, q) = x.dims2();
     let r = wc.rows;
     let half = q / 2;
-    let blocks = half / LANES;
     for i in 0..p {
         let xrow = &x.data[i * q..(i + 1) * q];
         let crow = &mut c.data[i * r..(i + 1) * r];
         for j in 0..r {
-            let vals = &wc.values[j * half..(j + 1) * half];
-            let aidx = &wc.abs_indices[j * half..(j + 1) * half];
-            let mut acc = Simd::<f32, LANES>::splat(0.0);
-            for b in 0..blocks {
-                let o = b * LANES;
-                let idx: Simd<usize, LANES> =
-                    Simd::<u32, LANES>::from_slice(&aidx[o..o + LANES]).cast();
-                let xs = Simd::<f32, LANES>::gather_or_default(xrow, idx);
-                let vs = Simd::<f32, LANES>::from_slice(&vals[o..o + LANES]);
-                acc += xs * vs;
-            }
-            let mut s = acc.reduce_sum();
-            for o in blocks * LANES..half {
-                s += vals[o] * xrow[aidx[o] as usize];
-            }
-            crow[j] = s;
+            crow[j] = spmm_row_dot(wc, j, half, xrow);
         }
     }
 }
@@ -120,6 +104,130 @@ pub fn spmm_nn_into(g: &Tensor, wc: &Compressed24, c: &mut Tensor) {
                 dst[idxs[g4 * 2] as usize] += gik * vals[g4 * 2];
                 dst[idxs[g4 * 2 + 1] as usize] += gik * vals[g4 * 2 + 1];
             }
+        }
+    }
+}
+
+/// C = X Wc^T with C left COLUMN-major (`ct` = C^T, (r, p) row-major).
+/// Same gather arithmetic as [`spmm_nt_into`], transposed store —
+/// the differential oracle for the tiled `_cm` epilogue.
+pub fn spmm_nt_cm_into(x: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let (p, q) = x.dims2();
+    let r = wc.rows;
+    let half = q / 2;
+    for i in 0..p {
+        let xrow = &x.data[i * q..(i + 1) * q];
+        for j in 0..r {
+            ct.data[j * p + i] = spmm_row_dot(wc, j, half, xrow);
+        }
+    }
+}
+
+/// C = X Wc^T with X given pre-transposed (`xt` = X^T, (q, p)), C
+/// row-major. Oracle for the boundary form of the tiled kernel.
+pub fn spmm_nt_t_into(xt: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let (q, p) = xt.dims2();
+    debug_assert_eq!(q, wc.cols);
+    let r = wc.rows;
+    let half = q / 2;
+    for i in 0..p {
+        for j in 0..r {
+            c.data[i * r + j] = spmm_col_dot(wc, j, half, &xt.data, p, i);
+        }
+    }
+}
+
+/// Pre-transposed input AND column-major output: `xt` = X^T (q, p),
+/// `ct` = C^T (r, p). Oracle for the fully fused tiled kernel.
+pub fn spmm_nt_tcm_into(xt: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let (q, p) = xt.dims2();
+    debug_assert_eq!(q, wc.cols);
+    let r = wc.rows;
+    let half = q / 2;
+    for i in 0..p {
+        for j in 0..r {
+            ct.data[j * p + i] = spmm_col_dot(wc, j, half, &xt.data, p, i);
+        }
+    }
+}
+
+/// q/2 gathered MACs of compressed row `j` against a contiguous
+/// activation row (the [`spmm_nt_into`] inner loop, shared).
+fn spmm_row_dot(wc: &Compressed24, j: usize, half: usize, xrow: &[f32]) -> f32 {
+    let vals = &wc.values[j * half..(j + 1) * half];
+    let aidx = &wc.abs_indices[j * half..(j + 1) * half];
+    let blocks = half / LANES;
+    let mut acc = Simd::<f32, LANES>::splat(0.0);
+    for b in 0..blocks {
+        let o = b * LANES;
+        let idx: Simd<usize, LANES> =
+            Simd::<u32, LANES>::from_slice(&aidx[o..o + LANES]).cast();
+        let xs = Simd::<f32, LANES>::gather_or_default(xrow, idx);
+        let vs = Simd::<f32, LANES>::from_slice(&vals[o..o + LANES]);
+        acc += xs * vs;
+    }
+    let mut s = acc.reduce_sum();
+    for o in blocks * LANES..half {
+        s += vals[o] * xrow[aidx[o] as usize];
+    }
+    s
+}
+
+/// Scalar variant over a TRANSPOSED activation: element (i, col) of X
+/// lives at `xt[col * p + i]`.
+fn spmm_col_dot(wc: &Compressed24, j: usize, half: usize, xt: &[f32], p: usize,
+                i: usize) -> f32 {
+    let vals = &wc.values[j * half..(j + 1) * half];
+    let aidx = &wc.abs_indices[j * half..(j + 1) * half];
+    let mut s = 0f32;
+    for h in 0..half {
+        s += vals[h] * xt[aidx[h] as usize * p + i];
+    }
+    s
+}
+
+/// C = G Wc, everything COLUMN-major: `gt` = G^T (r, p), `ct` = C^T
+/// (q, p). The compressed index selects a row of C^T; each kept value
+/// contributes one contiguous AXPY along the token dimension.
+pub fn spmm_nn_cm_into(gt: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let (r, p) = gt.dims2();
+    debug_assert_eq!(r, wc.rows);
+    let q = wc.cols;
+    let half = q / 2;
+    ct.data.fill(0.0);
+    for k in 0..r {
+        let grow = &gt.data[k * p..(k + 1) * p];
+        let vals = &wc.values[k * half..(k + 1) * half];
+        let aidx = &wc.abs_indices[k * half..(k + 1) * half];
+        for h in 0..half {
+            let v = vals[h];
+            if v == 0.0 {
+                continue;
+            }
+            let cq = aidx[h] as usize;
+            axpy(v, grow, &mut ct.data[cq * p..(cq + 1) * p]);
+        }
+    }
+}
+
+/// C = Gc^T X with X given COLUMN-major (`xt` = X^T, (q, p)); C (r, q)
+/// row-major. Gather-dot form: each output element reads its p/2 kept
+/// X values from one X^T row.
+pub fn spmm_tn_cm_into(gc: &Compressed24, xt: &Tensor, c: &mut Tensor) {
+    let (q, p) = xt.dims2();
+    debug_assert_eq!(p, gc.cols);
+    let r = gc.rows;
+    let half = p / 2;
+    for j in 0..r {
+        let vals = &gc.values[j * half..(j + 1) * half];
+        let aidx = &gc.abs_indices[j * half..(j + 1) * half];
+        for k in 0..q {
+            let xrow = &xt.data[k * p..(k + 1) * p];
+            let mut s = 0f32;
+            for h in 0..half {
+                s += vals[h] * xrow[aidx[h] as usize];
+            }
+            c.data[j * q + k] = s;
         }
     }
 }

@@ -19,6 +19,22 @@
 //! FMAs with zero shuffles and wins against the tiled dense kernel
 //! (see BENCH_kernels.json).
 //!
+//! Column-major epilogues (paper Appendix A.2, Table 12): the `_cm`
+//! spMM variants keep the output in column-major — the layout the next
+//! op in the sparse FFN wants — instead of undoing it. Because the
+//! token dimension is the SIMD dimension, a column-major store is a
+//! contiguous 8-lane store where the row-major epilogue scatters; and a
+//! column-major *input* (an activation the previous `_cm` op produced)
+//! is exactly the transposed operand the streaming form needs, so the
+//! per-call staging transpose disappears too. `spmm_nn_cm_into` is the
+//! extreme case: both of `spmm_nn_into`'s O(pq) scratch transposes
+//! (G^T in, C^T out) vanish and the kernel takes nothing from the
+//! arena. The `nt`/`nn` `_cm` kernels run the exact per-element
+//! accumulation sequence of their row-major twins (only the stores
+//! differ), so swapping the layout never changes a float there;
+//! `spmm_tn_cm_into` is a genuinely different (gather-dot) reduction
+//! and matches its twin to rounding, not bitwise.
+//!
 //! Determinism: work is partitioned over *output rows* in microkernel-
 //! aligned blocks ([`threading::parallel_chunks`]), and every output
 //! element's accumulation sequence is independent of both the thread
@@ -494,6 +510,256 @@ pub fn spmm_tn_into(gc: &Compressed24, x: &Tensor, c: &mut Tensor) {
                 }
             }
             hb += HB;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2:4 spMM, column-major (Table 12) epilogues
+// ---------------------------------------------------------------------------
+
+/// C = X Wc^T with C left COLUMN-major: `ct` is C^T, (r, p) row-major.
+///
+/// Same accumulation as [`spmm_nt_into`] — the token dimension is the
+/// SIMD dimension — but the epilogue writes each 8-lane accumulator as
+/// one contiguous store into a row of C^T instead of scattering it down
+/// a column of C. This is the forward FFN GEMM of the paper's Table-12
+/// layout: Z comes out column-major, ready for the column-order GEGLU.
+pub fn spmm_nt_cm_into(x: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let (p, q) = x.dims2();
+    debug_assert_eq!(q, wc.cols);
+    let r = wc.rows;
+    let half = q / 2;
+    debug_assert_eq!(ct.data.len(), p * r);
+    let mut xt = with_thread_scratch(|s| s.take_vec(q * p));
+    transpose_into_buf(&x.data, p, q, &mut xt);
+    {
+        let xt_ref = &xt[..];
+        let vals = &wc.values[..];
+        let aidx = &wc.abs_indices[..];
+        let out = MutPtr::new(&mut ct.data);
+        parallel_chunks(p, IB, 4, &|i0, i1| {
+            spmm_nt_cm_range(xt_ref, vals, aidx, &out, i0, i1, p, r, half);
+        });
+    }
+    with_thread_scratch(|s| s.give_vec(xt));
+}
+
+/// [`spmm_nt_cm_into`] with the dense operand ALREADY transposed:
+/// `xt` is X^T, (q, p) row-major — e.g. a column-major activation a
+/// previous `_cm` op produced. No staging transpose, no scratch.
+pub fn spmm_nt_tcm_into(xt: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let (q, p) = xt.dims2();
+    debug_assert_eq!(q, wc.cols);
+    let r = wc.rows;
+    let half = q / 2;
+    debug_assert_eq!(ct.data.len(), p * r);
+    let xt_ref = &xt.data[..];
+    let vals = &wc.values[..];
+    let aidx = &wc.abs_indices[..];
+    let out = MutPtr::new(&mut ct.data);
+    parallel_chunks(p, IB, 4, &|i0, i1| {
+        spmm_nt_cm_range(xt_ref, vals, aidx, &out, i0, i1, p, r, half);
+    });
+}
+
+/// C = X Wc^T with X given pre-transposed (`xt` = X^T, (q, p)) and C
+/// row-major — the boundary form: consumes a column-major activation
+/// and hands the next (row-major) op its native layout, folding the
+/// transpose back into the epilogue scatter instead of a separate pass.
+pub fn spmm_nt_t_into(xt: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let (q, p) = xt.dims2();
+    debug_assert_eq!(q, wc.cols);
+    let r = wc.rows;
+    let half = q / 2;
+    debug_assert_eq!(c.data.len(), p * r);
+    let xt_ref = &xt.data[..];
+    let vals = &wc.values[..];
+    let aidx = &wc.abs_indices[..];
+    let out = MutPtr::new(&mut c.data);
+    parallel_chunks(p, IB, 4, &|i0, i1| {
+        let cs = unsafe { out.range(i0 * r, i1 * r) };
+        spmm_nt_range(xt_ref, vals, aidx, cs, i0, i1, p, r, half);
+    });
+}
+
+/// Inner loop of the column-major `spmm_nt` epilogue: identical
+/// accumulation chains to [`spmm_nt_range`], but each 8-lane result is
+/// stored contiguously into this thread's `i0..i1` slice of C^T row
+/// `j` (disjoint across threads — the partition owns token columns).
+fn spmm_nt_cm_range(
+    xt: &[f32],
+    vals: &[f32],
+    aidx: &[u32],
+    out: &MutPtr,
+    i0: usize,
+    i1: usize,
+    p: usize,
+    r: usize,
+    half: usize,
+) {
+    let n = i1 - i0;
+    let full16 = n - n % (2 * L);
+    let full8 = n - n % L;
+    for j in 0..r {
+        let v = &vals[j * half..(j + 1) * half];
+        let ix = &aidx[j * half..(j + 1) * half];
+        let crow = unsafe { out.range(j * p + i0, j * p + i1) };
+        let mut ib = 0;
+        while ib < full16 {
+            let base = i0 + ib;
+            let (mut e0, mut o0) = (F::splat(0.0), F::splat(0.0));
+            let (mut e1, mut o1) = (F::splat(0.0), F::splat(0.0));
+            let mut h = 0;
+            while h + 2 <= half {
+                let ce = ix[h] as usize * p + base;
+                let co = ix[h + 1] as usize * p + base;
+                let ve = F::splat(v[h]);
+                let vo = F::splat(v[h + 1]);
+                e0 = ve.mul_add(F::from_slice(&xt[ce..ce + L]), e0);
+                e1 = ve.mul_add(F::from_slice(&xt[ce + L..ce + 2 * L]), e1);
+                o0 = vo.mul_add(F::from_slice(&xt[co..co + L]), o0);
+                o1 = vo.mul_add(F::from_slice(&xt[co + L..co + 2 * L]), o1);
+                h += 2;
+            }
+            if h < half {
+                let ce = ix[h] as usize * p + base;
+                let ve = F::splat(v[h]);
+                e0 = ve.mul_add(F::from_slice(&xt[ce..ce + L]), e0);
+                e1 = ve.mul_add(F::from_slice(&xt[ce + L..ce + 2 * L]), e1);
+            }
+            (e0 + o0).copy_to_slice(&mut crow[ib..ib + L]);
+            (e1 + o1).copy_to_slice(&mut crow[ib + L..ib + 2 * L]);
+            ib += 2 * L;
+        }
+        while ib < full8 {
+            let base = i0 + ib;
+            let (mut e0, mut o0) = (F::splat(0.0), F::splat(0.0));
+            let mut h = 0;
+            while h + 2 <= half {
+                let ce = ix[h] as usize * p + base;
+                let co = ix[h + 1] as usize * p + base;
+                e0 = F::splat(v[h]).mul_add(F::from_slice(&xt[ce..ce + L]), e0);
+                o0 = F::splat(v[h + 1]).mul_add(F::from_slice(&xt[co..co + L]), o0);
+                h += 2;
+            }
+            if h < half {
+                let ce = ix[h] as usize * p + base;
+                e0 = F::splat(v[h]).mul_add(F::from_slice(&xt[ce..ce + L]), e0);
+            }
+            (e0 + o0).copy_to_slice(&mut crow[ib..ib + L]);
+            ib += L;
+        }
+        for it in full8..n {
+            let i = i0 + it;
+            let (mut se, mut so) = (0f32, 0f32);
+            let mut h = 0;
+            while h + 2 <= half {
+                se = v[h].mul_add(xt[ix[h] as usize * p + i], se);
+                so = v[h + 1].mul_add(xt[ix[h + 1] as usize * p + i], so);
+                h += 2;
+            }
+            if h < half {
+                se = v[h].mul_add(xt[ix[h] as usize * p + i], se);
+            }
+            crow[it] = se + so;
+        }
+    }
+}
+
+/// C = G Wc, everything COLUMN-major: `gt` is G^T (r, p) row-major,
+/// `ct` is C^T (q, p) row-major.
+///
+/// The fused form of [`spmm_nn_into`]: the compressed index addresses a
+/// row of C^T, and C^T *is* the output, so both of the row-major
+/// kernel's O(pq) scratch transposes (G^T in, C^T out) disappear — the
+/// kernel touches no arena buffer at all. Same per-element accumulation
+/// order as the staged kernel (k outer, kept-value h inner).
+pub fn spmm_nn_cm_into(gt: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let (r, p) = gt.dims2();
+    debug_assert_eq!(r, wc.rows);
+    let q = wc.cols;
+    let half = q / 2;
+    debug_assert_eq!(ct.data.len(), p * q);
+    let gt_ref = &gt.data[..];
+    let vals = &wc.values[..];
+    let aidx = &wc.abs_indices[..];
+    let ctp = MutPtr::new(&mut ct.data);
+    parallel_chunks(p, IB, 4, &|i0, i1| {
+        let n = i1 - i0;
+        // zero this thread's C^T columns
+        for cq in 0..q {
+            unsafe { ctp.range(cq * p + i0, cq * p + i1) }.fill(0.0);
+        }
+        let full8 = n - n % L;
+        for k in 0..r {
+            let v = &vals[k * half..(k + 1) * half];
+            let ix = &aidx[k * half..(k + 1) * half];
+            let mut ib = 0;
+            while ib < full8 {
+                let base = i0 + ib;
+                let gv = F::from_slice(&gt_ref[k * p + base..k * p + base + L]);
+                for h in 0..half {
+                    let cq = ix[h] as usize;
+                    let crow = unsafe { ctp.range(cq * p + base, cq * p + base + L) };
+                    let cv = F::from_slice(crow);
+                    F::splat(v[h]).mul_add(gv, cv).copy_to_slice(crow);
+                }
+                ib += L;
+            }
+            for it in full8..n {
+                let i = i0 + it;
+                let gi = gt_ref[k * p + i];
+                for h in 0..half {
+                    let cq = ix[h] as usize;
+                    let cell = unsafe { ctp.range(cq * p + i, cq * p + i + 1) };
+                    cell[0] = v[h].mul_add(gi, cell[0]);
+                }
+            }
+        }
+    });
+}
+
+/// C = Gc^T X with X given COLUMN-major: Gc: (r, p) 2:4-compressed
+/// along p, `xt` = X^T (q, p) row-major -> C: (r, q) row-major.
+///
+/// The weight-grad sibling for a column-major activation: each output
+/// element gathers its p/2 kept X values from ONE contiguous X^T row
+/// (8-lane gather + FMA, like the naive `spmm_nt`), so the col-major
+/// operand is consumed in place instead of being transposed back.
+/// Loop order keeps an X^T row hot across a 4-row block of C.
+pub fn spmm_tn_cm_into(gc: &Compressed24, xt: &Tensor, c: &mut Tensor) {
+    let (q, p) = xt.dims2();
+    debug_assert_eq!(p, gc.cols);
+    let r = gc.rows;
+    let half = p / 2;
+    debug_assert_eq!(c.data.len(), r * q);
+    let xd = &xt.data[..];
+    let vals = &gc.values[..];
+    let aidx = &gc.abs_indices[..];
+    let out = MutPtr::new(&mut c.data);
+    parallel_chunks(r, MR, 2, &|j0, j1| {
+        let cs = unsafe { out.range(j0 * q, j1 * q) };
+        let blocks = half / L;
+        for k in 0..q {
+            let xrow = &xd[k * p..(k + 1) * p];
+            for j in j0..j1 {
+                let v = &vals[j * half..(j + 1) * half];
+                let ix = &aidx[j * half..(j + 1) * half];
+                let mut acc = F::splat(0.0);
+                for b in 0..blocks {
+                    let o = b * L;
+                    let idx: Simd<usize, L> =
+                        Simd::<u32, L>::from_slice(&ix[o..o + L]).cast();
+                    let xs = F::gather_or_default(xrow, idx);
+                    acc = F::from_slice(&v[o..o + L]).mul_add(xs, acc);
+                }
+                let mut s = acc.reduce_sum();
+                for o in blocks * L..half {
+                    s += v[o] * xrow[ix[o] as usize];
+                }
+                cs[(j - j0) * q + k] = s;
+            }
         }
     });
 }

@@ -12,7 +12,10 @@
 //!
 //! The actual inner loops live in [`crate::sparse::kernels`] (tiled +
 //! threaded backend with a naive reference); this module owns the
-//! compressed format and the public entry points.
+//! compressed format and the row-major public entry points. The
+//! column-major (Table 12) epilogue family — fused layouts the sparse
+//! FFN pipeline runs on — is exposed directly from the kernel backend
+//! ([`crate::sparse::kernels::spmm_nt_cm_into`] and siblings).
 
 use super::kernels;
 use super::mask::{prune24_mask, Mask};

@@ -1,7 +1,11 @@
 //! Differential tests for the kernel backend: the tiled + threaded
-//! kernels must match the naive reference on every GEMM/spMM variant,
-//! including shapes that are not multiples of any tile size, and must be
-//! bitwise thread-count-invariant (row-owned partitioning).
+//! kernels must match the naive reference on every GEMM/spMM variant —
+//! including the column-major (Table 12) epilogue family — on shapes
+//! that are not multiples of any tile size, and must be bitwise
+//! thread-count-invariant (row-owned partitioning). The `_cm` kernels
+//! additionally pin the zero-staging contract (no arena checkouts) and
+//! the full sparse-FFN column-major pipeline is differenced against a
+//! row-major oracle composed from the naive kernels.
 
 use sparse24::sparse::kernels::{naive, set_num_threads, tiled};
 use sparse24::sparse::spmm::Compressed24;
@@ -115,6 +119,175 @@ fn spmm_nn_tiled_matches_naive() {
     }
 }
 
+// --- column-major (Table 12) epilogue variants ------------------------------
+
+#[test]
+fn spmm_nt_cm_tiled_matches_naive() {
+    for (i, &(p, q, r)) in SPMM_SHAPES.iter().enumerate() {
+        let x = rand(&[p, q], 700 + i as u64);
+        let w = rand(&[r, q], 800 + i as u64);
+        let wc = Compressed24::from_masked(&w, &transposable_mask(&w));
+        let mut cn = Tensor::zeros(&[r, p]);
+        let mut ct = Tensor::zeros(&[r, p]);
+        naive::spmm_nt_cm_into(&x, &wc, &mut cn);
+        tiled::spmm_nt_cm_into(&x, &wc, &mut ct);
+        let d = cn.max_abs_diff(&ct);
+        assert!(d < 1e-4, "spmm_nt_cm ({p},{q},{r}): diff {d}");
+        // and the cm oracle is the row-major oracle, transposed
+        let mut rm = Tensor::zeros(&[p, r]);
+        naive::spmm_nt_into(&x, &wc, &mut rm);
+        assert_eq!(cn, rm.t(), "spmm_nt_cm oracle ({p},{q},{r})");
+    }
+}
+
+#[test]
+fn spmm_nt_t_and_tcm_tiled_match_naive() {
+    for (i, &(p, q, r)) in SPMM_SHAPES.iter().enumerate() {
+        let x = rand(&[p, q], 700 + i as u64);
+        let xt = x.t();
+        let w = rand(&[r, q], 800 + i as u64);
+        let wc = Compressed24::from_masked(&w, &transposable_mask(&w));
+        // pre-transposed input, row-major output
+        let mut cn = Tensor::zeros(&[p, r]);
+        let mut ct = Tensor::zeros(&[p, r]);
+        naive::spmm_nt_t_into(&xt, &wc, &mut cn);
+        tiled::spmm_nt_t_into(&xt, &wc, &mut ct);
+        let d = cn.max_abs_diff(&ct);
+        assert!(d < 1e-4, "spmm_nt_t ({p},{q},{r}): diff {d}");
+        let mut rm = Tensor::zeros(&[p, r]);
+        naive::spmm_nt_into(&x, &wc, &mut rm);
+        assert!(cn.max_abs_diff(&rm) < 1e-4, "spmm_nt_t oracle ({p},{q},{r})");
+        // pre-transposed input, column-major output
+        let mut cn_cm = Tensor::zeros(&[r, p]);
+        let mut ct_cm = Tensor::zeros(&[r, p]);
+        naive::spmm_nt_tcm_into(&xt, &wc, &mut cn_cm);
+        tiled::spmm_nt_tcm_into(&xt, &wc, &mut ct_cm);
+        let d = cn_cm.max_abs_diff(&ct_cm);
+        assert!(d < 1e-4, "spmm_nt_tcm ({p},{q},{r}): diff {d}");
+        assert_eq!(cn_cm, cn.t(), "spmm_nt_tcm oracle ({p},{q},{r})");
+    }
+}
+
+#[test]
+fn spmm_nn_cm_tiled_matches_naive() {
+    for (i, &(p, q, r)) in SPMM_SHAPES.iter().enumerate() {
+        let g = rand(&[p, r], 900 + i as u64);
+        let gt = g.t();
+        let w = rand(&[r, q], 1000 + i as u64);
+        let wc = Compressed24::from_masked(&w, &transposable_mask(&w));
+        let mut cn = Tensor::zeros(&[q, p]);
+        let mut ct = Tensor::zeros(&[q, p]);
+        naive::spmm_nn_cm_into(&gt, &wc, &mut cn);
+        tiled::spmm_nn_cm_into(&gt, &wc, &mut ct);
+        let d = cn.max_abs_diff(&ct);
+        assert!(d < 1e-4, "spmm_nn_cm ({p},{q},{r}): diff {d}");
+        // cm oracle == transpose-staged row-major kernel, transposed
+        let mut rm = Tensor::zeros(&[p, q]);
+        naive::spmm_nn_into(&g, &wc, &mut rm);
+        assert!(cn.max_abs_diff(&rm.t()) < 1e-4, "spmm_nn_cm oracle ({p},{q},{r})");
+    }
+}
+
+#[test]
+fn spmm_tn_cm_tiled_matches_naive() {
+    for (i, &(pp, _, r)) in SPMM_SHAPES.iter().enumerate() {
+        // gc is (r, p4) compressed along the batch dim (multiple of 4)
+        let p4 = (pp + 3) / 4 * 4;
+        let q = 24;
+        let gt = rand(&[r, p4], 1100 + i as u64);
+        let gc = Compressed24::prune_from(&gt);
+        let x = rand(&[p4, q], 1200 + i as u64);
+        let xt = x.t();
+        let mut cn = Tensor::zeros(&[r, q]);
+        let mut ct = Tensor::zeros(&[r, q]);
+        naive::spmm_tn_cm_into(&gc, &xt, &mut cn);
+        tiled::spmm_tn_cm_into(&gc, &xt, &mut ct);
+        let d = cn.max_abs_diff(&ct);
+        assert!(d < 1e-4, "spmm_tn_cm ({p4},{r},{q}): diff {d}");
+        // consumes X^T in place == the row-major kernel on X
+        let mut rm = Tensor::zeros(&[r, q]);
+        naive::spmm_tn_into(&gc, &x, &mut rm);
+        assert!(cn.max_abs_diff(&rm) < 1e-4, "spmm_tn_cm oracle ({p4},{r},{q})");
+    }
+}
+
+/// The fused epilogues must take NOTHING from the per-thread scratch
+/// arena — that is the point of the Table-12 layout (ISSUE acceptance:
+/// no gt/ct staging on the spmm_nn hot path). The transpose-staged
+/// row-major kernels keep their checkouts, which pins that the counter
+/// method actually observes staging.
+#[test]
+fn cm_kernels_take_no_thread_scratch() {
+    use sparse24::sparse::kernels::with_thread_scratch;
+    let (p, q, r) = (40, 48, 96);
+    let x = rand(&[p, q], 1);
+    let xt = x.t();
+    let w = rand(&[r, q], 2);
+    let wc = Compressed24::from_masked(&w, &transposable_mask(&w));
+    let g = rand(&[p, r], 3);
+    let gt = g.t();
+    let gq = rand(&[r, p], 4);
+    let gc = Compressed24::prune_from(&gq);
+
+    let checkouts = || with_thread_scratch(|s| s.checkouts());
+    let c0 = checkouts();
+    let mut ct = Tensor::zeros(&[r, p]);
+    tiled::spmm_nt_tcm_into(&xt, &wc, &mut ct);
+    let mut c = Tensor::zeros(&[p, r]);
+    tiled::spmm_nt_t_into(&xt, &wc, &mut c);
+    let mut cnn = Tensor::zeros(&[q, p]);
+    tiled::spmm_nn_cm_into(&gt, &wc, &mut cnn);
+    let mut ctn = Tensor::zeros(&[r, q]);
+    tiled::spmm_tn_cm_into(&gc, &xt, &mut ctn);
+    assert_eq!(checkouts(), c0, "a fused _cm kernel staged through scratch");
+
+    // sanity of the method: the transpose-staged kernels DO check out
+    // scratch buffers (spmm_nt one, spmm_nn two)
+    let mut rm = Tensor::zeros(&[p, r]);
+    tiled::spmm_nt_into(&x, &wc, &mut rm);
+    assert_eq!(checkouts(), c0 + 1, "spmm_nt stages X^T");
+    let mut rnn = Tensor::zeros(&[p, q]);
+    tiled::spmm_nn_into(&g, &wc, &mut rnn);
+    assert_eq!(checkouts(), c0 + 3, "spmm_nn stages G^T and C^T");
+    // spmm_nt_cm keeps the (unavoidable, input-boundary) X^T staging
+    let mut ccm = Tensor::zeros(&[r, p]);
+    tiled::spmm_nt_cm_into(&x, &wc, &mut ccm);
+    assert_eq!(checkouts(), c0 + 4, "spmm_nt_cm stages X^T only");
+}
+
+/// The whole sparse FFN hot path through the column-major pipeline:
+/// exactly ONE thread-scratch checkout per forward (the X^T staging at
+/// the row-major input boundary) and ZERO per backward — every other
+/// transpose the old pipeline staged is gone, and the explicit-arena
+/// buffer set stops growing after warmup.
+#[test]
+fn sparse_ffn_cm_pipeline_scratch_discipline() {
+    use sparse24::sparse::ffn::{FfnCache, FfnGrads, SparseFfn};
+    use sparse24::sparse::kernels::{with_thread_scratch, Scratch};
+    use sparse24::util::rng::Rng;
+    // big enough that every spMM dispatches to the tiled backend
+    let (p, d, r) = (64, 64, 256);
+    let mut rng = Rng::new(50);
+    let sf = SparseFfn::new(d, r, &mut rng);
+    let x = rand(&[p, d], 51);
+    let dy = rand(&[p, d], 52);
+    let mut cache = FfnCache::empty();
+    let mut y = Tensor::zeros(&[0]);
+    let mut g = FfnGrads::empty();
+    let mut s = Scratch::new();
+    // warmup populates both arenas
+    sf.forward_scratch(&x, &mut cache, &mut y);
+    sf.backward_scratch(&x, &cache, &dy, &mut Rng::new(53), &mut g, &mut s);
+    let checkouts = || with_thread_scratch(|ts| ts.checkouts());
+    let fresh = || with_thread_scratch(|ts| ts.fresh_allocs());
+    let (c0, f0) = (checkouts(), fresh());
+    sf.forward_scratch(&x, &mut cache, &mut y);
+    assert_eq!(checkouts(), c0 + 1, "sparse forward: only the X^T staging");
+    sf.backward_scratch(&x, &cache, &dy, &mut Rng::new(53), &mut g, &mut s);
+    assert_eq!(checkouts(), c0 + 1, "sparse backward: zero transpose staging");
+    assert_eq!(fresh(), f0, "steady-state staging must reuse pooled buffers");
+}
+
 #[test]
 fn spmm_tn_tiled_matches_naive() {
     for (i, &(pp, _, r)) in SPMM_SHAPES.iter().enumerate() {
@@ -131,6 +304,74 @@ fn spmm_tn_tiled_matches_naive() {
         let d = cn.max_abs_diff(&ct);
         assert!(d < 1e-4, "spmm_tn ({p4},{r},{q}): diff {d}");
     }
+}
+
+/// The sparse FFN forward/backward through the column-major pipeline
+/// vs a row-major oracle composed from the naive kernels (the pre-PR-5
+/// pipeline: row-major spMMs + row-order GEGLU + explicit transposes).
+/// Shapes are chosen with q/2 < 8 on every nt-family GEMM so both
+/// sides' inner dots run the identical scalar sequence — Z and ∇Z then
+/// match BITWISE, which keeps the two MVUE draws selecting identical
+/// sparsity patterns and makes the 1e-5 weight-grad comparison exact
+/// rather than probabilistic.
+#[test]
+fn sparse_ffn_cm_pipeline_matches_row_major_oracle() {
+    use sparse24::sparse::ffn::{add_bias, compress_sparse24, SparseFfn};
+    use sparse24::sparse::geglu::{geglu_row_major_grad, geglu_row_major_into};
+    use sparse24::sparse::mvue::mvue24_with_uniforms;
+
+    // p != 2r so a row/col mixup in the cache layout cannot hide in a
+    // square transpose; p % 4 == 0 for the MVUE group structure
+    let (p, d, r) = (12usize, 8usize, 8usize);
+    let mut rng = Rng::new(60);
+    let sf = SparseFfn::new(d, r, &mut rng);
+    let x = rand(&[p, d], 61);
+    let dy = rand(&[p, d], 62);
+    let (y, cache) = sf.forward(&x);
+    let g = sf.backward(&x, &cache, &dy, &mut Rng::new(63));
+
+    // --- row-major oracle forward ---
+    let mut z = Tensor::zeros(&[p, 2 * r]);
+    naive::spmm_nt_into(&x, &sf.w1c, &mut z);
+    add_bias(&mut z, &sf.dense.b1);
+    let mut a_rm = Tensor::zeros(&[0]);
+    geglu_row_major_into(&z, &mut a_rm);
+    let mut y_ref = Tensor::zeros(&[p, d]);
+    naive::spmm_nt_into(&a_rm, &sf.w2c, &mut y_ref);
+    add_bias(&mut y_ref, &sf.dense.b2);
+    assert!(y.max_abs_diff(&y_ref) < 1e-5, "forward vs row-major oracle");
+    // the cache holds Z^T / A^T — bitwise, not just close
+    assert_eq!(cache.z, z.t(), "cache.z must be Z^T");
+    assert_eq!(cache.a, a_rm.t(), "cache.a must be A^T");
+
+    // --- row-major oracle backward (same MVUE uniform stream) ---
+    let mut orng = Rng::new(63);
+    let gt_dy = dy.t();
+    let mut u1 = vec![0f32; d * p / 4];
+    orng.fill_uniform(&mut u1);
+    let mv_dy = mvue24_with_uniforms(&gt_dy, &u1);
+    let gc_dy = compress_sparse24(&mv_dy);
+    let mut dw2_ref = Tensor::zeros(&[d, r]);
+    naive::spmm_tn_into(&gc_dy, &a_rm, &mut dw2_ref);
+    let mut da_rm = Tensor::zeros(&[p, r]);
+    naive::spmm_nt_into(&dy, &sf.w2ct, &mut da_rm);
+    let dz_rm = geglu_row_major_grad(&z, &da_rm);
+    let gt_dz = dz_rm.t();
+    let mut u2 = vec![0f32; 2 * r * p / 4];
+    orng.fill_uniform(&mut u2);
+    let mv_dz = mvue24_with_uniforms(&gt_dz, &u2);
+    let gc_dz = compress_sparse24(&mv_dz);
+    let mut dw1_ref = Tensor::zeros(&[2 * r, d]);
+    naive::spmm_tn_into(&gc_dz, &x, &mut dw1_ref);
+    let mut dx_ref = Tensor::zeros(&[p, d]);
+    naive::spmm_nt_into(&dz_rm, &sf.w1ct, &mut dx_ref);
+
+    assert!(g.dw2.max_abs_diff(&dw2_ref) < 1e-5, "dw2 vs row-major oracle");
+    assert!(g.dw1.max_abs_diff(&dw1_ref) < 1e-5, "dw1 vs row-major oracle");
+    assert!(g.dx.max_abs_diff(&dx_ref) < 1e-5, "dx vs row-major oracle");
+    let mut db_ref = Tensor::zeros(&[0]);
+    sparse24::sparse::ffn::col_sum_into(&dz_rm, &mut db_ref);
+    assert_eq!(g.db1, db_ref, "db1 must match the row-major col-sum bitwise");
 }
 
 /// Thread-count invariance: the row-owned, block-aligned partitioning
@@ -151,6 +392,11 @@ fn tiled_kernels_bitwise_thread_invariant() {
     let gc = Compressed24::prune_from(&gt);
     let xg = rand(&[68, q], 8);
 
+    // transposed twins for the column-major kernel family
+    let at = a.t();
+    let g_cm = g.t();
+    let xgt = xg.t();
+
     let run_all = || {
         let mut nt = Tensor::zeros(&[p, r]);
         tiled::gemm_nt_into(&a, &b, &mut nt);
@@ -164,7 +410,18 @@ fn tiled_kernels_bitwise_thread_invariant() {
         tiled::spmm_nn_into(&g, &wc, &mut snn);
         let mut stn = Tensor::zeros(&[r, q]);
         tiled::spmm_tn_into(&gc, &xg, &mut stn);
-        [nt, nn, tn, snt, snn, stn]
+        // column-major epilogue family
+        let mut snt_cm = Tensor::zeros(&[r, p]);
+        tiled::spmm_nt_cm_into(&a, &wc, &mut snt_cm);
+        let mut snt_t = Tensor::zeros(&[p, r]);
+        tiled::spmm_nt_t_into(&at, &wc, &mut snt_t);
+        let mut snt_tcm = Tensor::zeros(&[r, p]);
+        tiled::spmm_nt_tcm_into(&at, &wc, &mut snt_tcm);
+        let mut snn_cm = Tensor::zeros(&[q, p]);
+        tiled::spmm_nn_cm_into(&g_cm, &wc, &mut snn_cm);
+        let mut stn_cm = Tensor::zeros(&[r, q]);
+        tiled::spmm_tn_cm_into(&gc, &xgt, &mut stn_cm);
+        [nt, nn, tn, snt, snn, stn, snt_cm, snt_t, snt_tcm, snn_cm, stn_cm]
     };
 
     let prev = sparse24::sparse::kernels::num_threads();

@@ -2,15 +2,19 @@
 # Tier-1 verification entry point: build + full test suite + rustdoc
 # gate (broken intra-doc links / doc warnings fail fast) + a quick bench
 # smoke on 2 kernel threads (exercises the thread pool, the tiled
-# backend, and the BENCH_kernels.json emitters end to end), the chunked-
-# prefill differential suite against the one-token oracle, the paged-KV
-# differential suite against the contiguous oracle (bitwise logits,
-# fragmentation liveness, zero-alloc), a serving smoke on a tiny
-# synthetic checkpoint (compressed-weight decode, paged KV cache,
-# chunked prefill, continuous batching, zero-allocation assertion, TTFT
-# + prefill_tokens_per_s + kv_paging occupancy reporting), and a perf
-# diff against the previous bench run (warn-only, >15% regression;
-# covers GFLOP/s, prefill tok/s, and paged-KV occupancy).
+# backend, and the BENCH_kernels.json emitters end to end — including
+# the fused column-major Table-12 epilogue bench), the kernel
+# differential suite (row-major AND _cm kernels vs the naive oracle,
+# zero-staging arena counters, col-major FFN pipeline vs row-major
+# oracle), the chunked-prefill differential suite against the one-token
+# oracle, the paged-KV differential suite against the contiguous oracle
+# (bitwise logits, fragmentation liveness, zero-alloc), a serving smoke
+# on a tiny synthetic checkpoint (compressed-weight decode, paged KV
+# cache, chunked prefill, continuous batching, zero-allocation
+# assertion, TTFT + prefill_tokens_per_s + kv_paging occupancy
+# reporting), and a perf diff against the previous bench run (warn-only,
+# >15% regression; covers GFLOP/s — table12_epilogue included — prefill
+# tok/s, and paged-KV occupancy).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -29,9 +33,13 @@ PALLAS_NUM_THREADS=2 cargo test -q --test serve_prefill
 echo "== paged-KV differential tests (vs contiguous oracle, bitwise)"
 PALLAS_NUM_THREADS=2 cargo test -q --test serve_paged
 
+echo "== kernel differential tests (incl. _cm epilogues vs naive oracle)"
+PALLAS_NUM_THREADS=2 cargo test -q --test kernels_differential
+
 echo "== bench smoke (PALLAS_NUM_THREADS=2, --quick)"
 PALLAS_NUM_THREADS=2 cargo bench --bench ablation_spmm -- --quick
 PALLAS_NUM_THREADS=2 cargo bench --bench fig7_ffn_block -- --quick
+PALLAS_NUM_THREADS=2 cargo bench --bench table12_epilogue -- --quick
 
 echo "== serve smoke (synthetic checkpoint, 64 steps, paged KV, 2 threads)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --synthetic --quick \
