@@ -459,6 +459,18 @@ pub const DEFAULT_KV_PAGE: usize = 16;
 /// * `bench_steps` — scheduler steps the open-loop bench runs;
 /// * `arrival_per_step` — mean requests arriving per step (Poisson);
 /// * `prompt_len` — synthetic prompt length for the bench load.
+///
+/// Front-end keys (the `serve` subcommand; see `docs/SERVING.md`):
+/// * `listen` — socket to serve on: `"host:port"` (TCP) or
+///   `"unix:/path/to.sock"`;
+/// * `max_pending` — pending-queue bound: requests beyond it are
+///   rejected with an `overloaded` reply instead of queued (0 = accept
+///   only what can start immediately);
+/// * `request_deadline_ms` — default per-request wall-clock deadline;
+///   a request not finished in time is evicted and its KV released
+///   (0 = no deadline);
+/// * `drain_timeout_ms` — on shutdown, how long in-flight requests may
+///   run before being evicted as `incomplete`.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub max_seqs: usize,
@@ -474,6 +486,10 @@ pub struct ServeConfig {
     pub bench_steps: usize,
     pub arrival_per_step: f64,
     pub prompt_len: usize,
+    pub listen: String,
+    pub max_pending: usize,
+    pub request_deadline_ms: u64,
+    pub drain_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -492,6 +508,10 @@ impl Default for ServeConfig {
             bench_steps: 256,
             arrival_per_step: 0.5,
             prompt_len: 12,
+            listen: "127.0.0.1:8477".into(),
+            max_pending: 32,
+            request_deadline_ms: 0,
+            drain_timeout_ms: 2000,
         }
     }
 }
@@ -542,6 +562,18 @@ impl ServeConfig {
         if let Some(v) = get(t, "serve", "prompt_len") {
             c.prompt_len = v.as_usize()?;
         }
+        if let Some(v) = get(t, "serve", "listen") {
+            c.listen = v.as_str()?.to_string();
+        }
+        if let Some(v) = get(t, "serve", "max_pending") {
+            c.max_pending = v.as_usize()?;
+        }
+        if let Some(v) = get(t, "serve", "request_deadline_ms") {
+            c.request_deadline_ms = v.as_usize()? as u64;
+        }
+        if let Some(v) = get(t, "serve", "drain_timeout_ms") {
+            c.drain_timeout_ms = v.as_usize()? as u64;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -570,6 +602,9 @@ impl ServeConfig {
         }
         if self.arrival_per_step < 0.0 {
             bail!("serve.arrival_per_step must be >= 0");
+        }
+        if self.listen.is_empty() {
+            bail!("serve.listen must be \"host:port\" or \"unix:/path\"");
         }
         Ok(())
     }
@@ -716,6 +751,26 @@ kind = "synthetic"
         assert!(ServeConfig::from_toml("[serve]\nmax_seqs = 0\n").is_err());
         assert!(ServeConfig::from_toml("[serve]\nprefill_chunk = 0\n").is_err());
         assert!(ServeConfig::from_toml("[serve]\ntemperature = -0.5\n").is_err());
+    }
+
+    #[test]
+    fn serve_front_end_keys_parse_and_validate() {
+        let c = ServeConfig::from_toml(
+            "[serve]\nlisten = \"unix:/tmp/s24.sock\"\nmax_pending = 3\n\
+             request_deadline_ms = 250\ndrain_timeout_ms = 500\n",
+        )
+        .unwrap();
+        assert_eq!(c.listen, "unix:/tmp/s24.sock");
+        assert_eq!(c.max_pending, 3);
+        assert_eq!(c.request_deadline_ms, 250);
+        assert_eq!(c.drain_timeout_ms, 500);
+        // defaults: TCP loopback, bounded queue, no deadline
+        let d = ServeConfig::default();
+        assert_eq!(d.listen, "127.0.0.1:8477");
+        assert_eq!(d.max_pending, 32);
+        assert_eq!(d.request_deadline_ms, 0);
+        assert_eq!(d.drain_timeout_ms, 2000);
+        assert!(ServeConfig::from_toml("[serve]\nlisten = \"\"\n").is_err());
     }
 
     #[test]

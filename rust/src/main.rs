@@ -7,6 +7,7 @@
 //!   speedup          Fig. 7 / Table 11 / Table 13 substrate measurements
 //!   inspect          print an artifact manifest + compile sanity check
 //!   generate         decode one prompt on the sparse inference engine
+//!   serve            hardened socket front-end over the scheduler
 //!   serve-bench      open-loop serving load -> BENCH_serve.json
 //!   bench-diff       warn on GFLOP/s regressions vs the previous run
 //!
@@ -17,11 +18,15 @@
 //!   sparse24 speedup --ffn --out results/fig7a.csv
 //!   sparse24 inspect --model nano
 //!   sparse24 generate --checkpoint run.ckpt --prompt 3,17,5 --max-new 32
+//!   sparse24 serve --synthetic --listen 127.0.0.1:8477
 //!   sparse24 serve-bench --synthetic --steps 256 --batch-sizes 2,4,8
+//!   sparse24 serve-bench --faults --synthetic --quick
 //!   sparse24 bench-diff
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
@@ -31,8 +36,9 @@ use sparse24::coordinator::{Checkpoint, Trainer, Tuner};
 use sparse24::model::ModelDims;
 use sparse24::runtime::Manifest;
 use sparse24::serve::{
-    run_mixed_kv_bench, run_open_loop, synthetic_checkpoint, InferEngine,
-    InferModel, Request, Sampling, Scheduler,
+    run_fault_bench, run_mixed_kv_bench, run_open_loop, run_server, run_smoke,
+    synthetic_checkpoint, FaultConfig, InferEngine, InferModel, Request,
+    Sampling, Scheduler,
 };
 use sparse24::sparse::{kernels, workloads};
 use sparse24::util::bench::{
@@ -49,28 +55,78 @@ fn main() {
     }
 }
 
-/// --key value / --flag style parser; returns (flags, options, positional).
-fn parse_args(args: &[String]) -> (Vec<String>, BTreeMap<String, Vec<String>>, Vec<String>) {
+/// `--key value` / `--key=value` / `--flag` parser with per-command
+/// option declarations; returns (flags, options, positional).
+///
+/// Every command declares which `--names` take a value and which are
+/// bare flags, so value-vs-flag is never guessed from the NEXT
+/// argument's shape. (The old sniffing parser silently turned
+/// `--prompt --3,4` into a flag named `prompt` and a flag named `3,4`,
+/// and swallowed a trailing `--out` with no value.) A declared value
+/// option consumes the next argument verbatim — even one starting with
+/// `--` — and a missing value, an unknown option, or a `=value` on a
+/// bare flag are hard errors. A lone `--` ends option parsing; the rest
+/// is positional.
+fn parse_args(
+    args: &[String],
+    value_opts: &[&str],
+    flag_opts: &[&str],
+) -> Result<(Vec<String>, BTreeMap<String, Vec<String>>, Vec<String>)> {
     let mut flags = Vec::new();
     let mut opts: BTreeMap<String, Vec<String>> = BTreeMap::new();
     let mut pos = Vec::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
-        if let Some(name) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                opts.entry(name.to_string()).or_default().push(args[i + 1].clone());
-                i += 2;
-            } else {
-                flags.push(name.to_string());
-                i += 1;
-            }
-        } else {
+        if a == "--" {
+            pos.extend(args[i + 1..].iter().cloned());
+            break;
+        }
+        let Some(body) = a.strip_prefix("--") else {
             pos.push(a.clone());
             i += 1;
+            continue;
+        };
+        let (name, inline) = match body.split_once('=') {
+            Some((n, v)) => (n, Some(v.to_string())),
+            None => (body, None),
+        };
+        if value_opts.contains(&name) {
+            let value = match inline {
+                Some(v) => v,
+                None => {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .with_context(|| format!("missing value for --{name}"))?
+                }
+            };
+            opts.entry(name.to_string()).or_default().push(value);
+        } else if flag_opts.contains(&name) {
+            if inline.is_some() {
+                bail!("--{name} does not take a value");
+            }
+            flags.push(name.to_string());
+        } else {
+            bail!("unknown option --{name} (try `sparse24 help`)");
         }
+        i += 1;
     }
-    (flags, opts, pos)
+    Ok((flags, opts, pos))
+}
+
+/// Options shared by every command that loads an inference model
+/// ([`load_infer_model`] + the `[serve]` config file).
+const MODEL_OPTS: &[&str] = &[
+    "config", "checkpoint", "vocab", "d-model", "layers", "heads", "d-ff",
+    "n-ctx", "seed",
+];
+
+/// [`MODEL_OPTS`] plus a command's own value options.
+fn with_model_opts(extra: &[&'static str]) -> Vec<&'static str> {
+    let mut v = MODEL_OPTS.to_vec();
+    v.extend_from_slice(extra);
+    v
 }
 
 fn opt1<'a>(opts: &'a BTreeMap<String, Vec<String>>, key: &str) -> Option<&'a str> {
@@ -90,6 +146,7 @@ fn run() -> Result<()> {
         "speedup" => cmd_speedup(rest),
         "inspect" => cmd_inspect(rest),
         "generate" => cmd_generate(rest),
+        "serve" => cmd_serve(rest),
         "serve-bench" => cmd_serve_bench(rest),
         "bench-diff" => cmd_bench_diff(rest),
         "help" | "--help" | "-h" => {
@@ -113,10 +170,13 @@ fn print_usage() {
            generate     [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--prompt t0,t1,...] [--max-new N] [--temperature T]\n\
                         [--top-k K] [--seed S]\n\
+           serve        [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
+                        [--listen host:port|unix:/path] [--max-pending N]\n\
+                        [--deadline-ms MS] [--drain-timeout-ms MS] [--smoke]\n\
            serve-bench  [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--steps N] [--batch-sizes a,b,...] [--prefill-chunk N]\n\
                         [--kv-layout paged|contiguous] [--kv-page N]\n\
-                        [--kv-pages N] [--quick]\n\
+                        [--kv-pages N] [--faults] [--quick]\n\
            bench-diff   [--file <json>] [--serve-file <json>] [--threshold PCT]\n"
     );
 }
@@ -195,7 +255,9 @@ fn load_infer_model(
 }
 
 fn cmd_generate(args: &[String]) -> Result<()> {
-    let (flags, opts, _) = parse_args(args);
+    let value_opts =
+        with_model_opts(&["prompt", "max-new", "temperature", "top-k"]);
+    let (flags, opts, _) = parse_args(args, &value_opts, &["synthetic"])?;
     let cfg = load_serve_config(&opts)?;
     let model = load_infer_model(&flags, &opts, false)?;
     let vocab = model.dims.vocab;
@@ -231,7 +293,7 @@ fn cmd_generate(args: &[String]) -> Result<()> {
     let mut sch = Scheduler::with_kv(InferEngine::new(model), 1,
                                      usize::MAX / 2, cfg.prefill_chunk,
                                      cfg.kv(), cfg.kv_pages, sampling, seed);
-    sch.submit(Request { id: 0, prompt: prompt.clone(), max_new });
+    sch.submit(Request::new(0, prompt.clone(), max_new));
     let t0 = std::time::Instant::now();
     // chunked prefill spans ceil(prompt/chunk) extra steps
     let step_cap = 2 * max_new + prompt.len() + 16;
@@ -248,8 +310,97 @@ fn cmd_generate(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `serve`: the hardened socket front-end (docs/SERVING.md). `--smoke`
+/// runs the in-process fault smoke (mid-stream disconnect, overload
+/// reject, doomed deadline, graceful drain) instead of serving.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let value_opts = with_model_opts(&[
+        "listen", "max-pending", "deadline-ms", "drain-timeout-ms",
+    ]);
+    let (flags, opts, _) =
+        parse_args(args, &value_opts, &["synthetic", "smoke", "quick"])?;
+    if flags.iter().any(|f| f == "smoke") {
+        println!("{}", run_smoke(opt1(&opts, "listen"))?);
+        return Ok(());
+    }
+    let mut cfg = load_serve_config(&opts)?;
+    if let Some(s) = opt1(&opts, "listen") {
+        cfg.listen = s.to_string();
+    }
+    if let Some(s) = opt1(&opts, "max-pending") {
+        cfg.max_pending = s.parse::<usize>().context("--max-pending")?;
+    }
+    if let Some(s) = opt1(&opts, "deadline-ms") {
+        cfg.request_deadline_ms = s.parse::<u64>().context("--deadline-ms")?;
+    }
+    if let Some(s) = opt1(&opts, "drain-timeout-ms") {
+        cfg.drain_timeout_ms = s.parse::<u64>().context("--drain-timeout-ms")?;
+    }
+    cfg.validate()?;
+    let quick = flags.iter().any(|f| f == "quick");
+    let model = load_infer_model(&flags, &opts, quick)?;
+    sparse24::serve::server::install_signal_handlers();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    println!(
+        "serving on {} (SIGTERM/SIGINT or a shutdown frame drains)",
+        cfg.listen
+    );
+    let report = run_server(InferEngine::new(model), &cfg, shutdown)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+/// `serve-bench --faults`: the deterministic fault storm
+/// ([`run_fault_bench`]), once at the configured pending bound and once
+/// at 4x — the load-shedding lever made visible — into the
+/// `serve_faults` section of BENCH_serve.json.
+fn cmd_serve_bench_faults(
+    flags: &[String],
+    opts: &BTreeMap<String, Vec<String>>,
+    cfg: &ServeConfig,
+    quick: bool,
+) -> Result<()> {
+    let model = load_infer_model(flags, opts, quick)?;
+    let dims = model.dims;
+    let threads = kernels::num_threads();
+    let fc = FaultConfig {
+        max_seqs: cfg.max_seqs,
+        max_pending: cfg.max_pending.max(1),
+        max_batch_tokens: cfg.max_batch_tokens,
+        max_steps: cfg.bench_steps.max(32),
+        prompt_len: cfg.prompt_len.min(dims.n_ctx / 2).max(1),
+        max_new: cfg.max_new_tokens.max(1),
+        kv_page: cfg.kv_page,
+        seed: cfg.seed,
+        ..FaultConfig::default()
+    };
+    println!(
+        "serve-bench --faults: {} layers, d={}, n_ctx={} | {} requests, \
+         bursts of {} every {} steps, seqs {}, pending {} | seed {:#x} | \
+         {} threads",
+        dims.n_layers, dims.d_model, dims.n_ctx, fc.n_requests, fc.burst,
+        fc.arrival_every, fc.max_seqs, fc.max_pending, fc.seed, threads
+    );
+    let (tight, engine) = run_fault_bench(InferEngine::new(model), &fc)?;
+    println!("  {}", tight.render());
+    let relaxed_fc = FaultConfig { max_pending: fc.max_pending * 4, ..fc.clone() };
+    let (relaxed, _engine) = run_fault_bench(engine, &relaxed_fc)?;
+    println!("  {}", relaxed.render());
+    let section =
+        Json::Arr(vec![tight.to_json(threads), relaxed.to_json(threads)]);
+    let path = repo_root_file("BENCH_serve.json");
+    write_json_section_at(&path, "serve_faults", section)?;
+    println!("-> {} (section serve_faults)", path.display());
+    Ok(())
+}
+
 fn cmd_serve_bench(args: &[String]) -> Result<()> {
-    let (flags, opts, _) = parse_args(args);
+    let value_opts = with_model_opts(&[
+        "steps", "batch-sizes", "prefill-chunk", "kv-layout", "kv-page",
+        "kv-pages",
+    ]);
+    let (flags, opts, _) =
+        parse_args(args, &value_opts, &["synthetic", "quick", "faults"])?;
     let quick = flags.iter().any(|f| f == "quick");
     let mut cfg = load_serve_config(&opts)?;
     if let Some(s) = opt1(&opts, "steps") {
@@ -270,6 +421,9 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
         cfg.kv_pages = s.parse::<usize>().context("--kv-pages")?;
     }
     cfg.validate()?;
+    if flags.iter().any(|f| f == "faults") {
+        return cmd_serve_bench_faults(&flags, &opts, &cfg, quick);
+    }
     let batch_sizes: Vec<usize> = match opt1(&opts, "batch-sizes") {
         Some(s) => s
             .split(',')
@@ -345,7 +499,8 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
 }
 
 fn cmd_bench_diff(args: &[String]) -> Result<()> {
-    let (_, opts, _) = parse_args(args);
+    let (_, opts, _) =
+        parse_args(args, &["file", "serve-file", "threshold"], &[])?;
     let threshold = opt1(&opts, "threshold")
         .map(|s| s.parse::<f64>())
         .transpose()?
@@ -417,7 +572,11 @@ fn load_config(opts: &BTreeMap<String, Vec<String>>) -> Result<TrainConfig> {
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
-    let (_flags, opts, _) = parse_args(args);
+    let (_flags, opts, _) = parse_args(
+        args,
+        &["config", "set", "out", "checkpoint", "checkpoint-every", "resume"],
+        &[],
+    )?;
     let cfg = load_config(&opts)?;
     println!(
         "training {} | method {:?} | {} steps x {} microbatches | lambda {:.1e} | workers {}",
@@ -474,7 +633,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
 }
 
 fn cmd_tune(args: &[String]) -> Result<()> {
-    let (_, opts, _) = parse_args(args);
+    let (_, opts, _) =
+        parse_args(args, &["config", "set", "probe-steps", "out"], &[])?;
     let base = load_config(&opts)?;
     let probe_steps = opt1(&opts, "probe-steps")
         .map(|s| s.parse::<usize>())
@@ -496,7 +656,11 @@ fn cmd_tune(args: &[String]) -> Result<()> {
 }
 
 fn cmd_speedup(args: &[String]) -> Result<()> {
-    let (flags, opts, _) = parse_args(args);
+    let (flags, opts, _) = parse_args(
+        args,
+        &["out"],
+        &["ffn", "block", "e2e", "profile", "quick"],
+    )?;
     let quick = flags.iter().any(|f| f == "quick");
     let budget = if quick { Duration::from_millis(100) } else { Duration::from_millis(800) };
     let all = !flags.iter().any(|f| matches!(f.as_str(), "ffn" | "block" | "e2e" | "profile"));
@@ -560,7 +724,7 @@ fn cmd_speedup(args: &[String]) -> Result<()> {
 }
 
 fn cmd_inspect(args: &[String]) -> Result<()> {
-    let (_, opts, _) = parse_args(args);
+    let (_, opts, _) = parse_args(args, &["model", "artifacts-dir"], &[])?;
     let model = opt1(&opts, "model").context("--model <name> required")?;
     let dir = opt1(&opts, "artifacts-dir").unwrap_or("artifacts");
     let m = Manifest::load_config(Path::new(dir), model)?;
@@ -585,4 +749,79 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
     rt.load_hlo(&key, &m.artifact_path(&key)?)?;
     println!("compiled {key} OK in {:.2}s", rt.compile_secs[&key]);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_args;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn value_options_take_the_next_arg_verbatim() {
+        // the old sniffing parser turned "--prompt --3,4" into two flags
+        let (flags, opts, pos) = parse_args(
+            &argv(&["--prompt", "--3,4", "run"]),
+            &["prompt"],
+            &[],
+        )
+        .unwrap();
+        assert!(flags.is_empty());
+        assert_eq!(opts["prompt"], vec!["--3,4"]);
+        assert_eq!(pos, vec!["run"]);
+    }
+
+    #[test]
+    fn equals_form_and_repeats_accumulate() {
+        let (_, opts, _) = parse_args(
+            &argv(&["--set", "a.b=1", "--set=c.d=2"]),
+            &["set"],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(opts["set"], vec!["a.b=1", "c.d=2"]);
+    }
+
+    #[test]
+    fn flags_are_never_mistaken_for_values() {
+        let (flags, opts, _) = parse_args(
+            &argv(&["--quick", "--out", "x.csv"]),
+            &["out"],
+            &["quick"],
+        )
+        .unwrap();
+        assert_eq!(flags, vec!["quick"]);
+        assert_eq!(opts["out"], vec!["x.csv"]);
+    }
+
+    #[test]
+    fn trailing_value_option_without_value_errors() {
+        // the old parser silently dropped the trailing "--out"
+        let err = parse_args(&argv(&["--out"]), &["out"], &[]).unwrap_err();
+        assert!(err.to_string().contains("missing value for --out"), "{err}");
+    }
+
+    #[test]
+    fn unknown_options_and_valued_flags_error() {
+        let err = parse_args(&argv(&["--bogus"]), &["out"], &["quick"]).unwrap_err();
+        assert!(err.to_string().contains("unknown option --bogus"), "{err}");
+        let err =
+            parse_args(&argv(&["--quick=1"]), &[], &["quick"]).unwrap_err();
+        assert!(err.to_string().contains("does not take a value"), "{err}");
+    }
+
+    #[test]
+    fn double_dash_ends_option_parsing() {
+        let (flags, opts, pos) = parse_args(
+            &argv(&["--quick", "--", "--out", "x"]),
+            &["out"],
+            &["quick"],
+        )
+        .unwrap();
+        assert_eq!(flags, vec!["quick"]);
+        assert!(opts.is_empty());
+        assert_eq!(pos, vec!["--out", "x"]);
+    }
 }

@@ -226,11 +226,7 @@ pub fn run_open_loop(engine: InferEngine, cfg: &ServeConfig, max_seqs: usize,
             for _ in 0..poisson(&mut arrivals, cfg.arrival_per_step) {
                 let prompt: Vec<u32> =
                     (0..prompt_len).map(|_| arrivals.below(vocab) as u32).collect();
-                sch.submit(Request {
-                    id: next_id,
-                    prompt,
-                    max_new: cfg.max_new_tokens,
-                });
+                sch.submit(Request::new(next_id, prompt, cfg.max_new_tokens));
                 submit_at.insert(next_id, Instant::now());
                 next_id += 1;
             }
@@ -445,7 +441,7 @@ pub fn run_mixed_kv_bench(engine: InferEngine, cfg: &ServeConfig,
         let submit = |sch: &mut Scheduler, rng: &mut Rng, plen: usize,
                       max_new: usize, id: &mut u64| {
             let prompt: Vec<u32> = (0..plen).map(|_| rng.below(vocab) as u32).collect();
-            sch.submit(Request { id: *id, prompt, max_new });
+            sch.submit(Request::new(*id, prompt, max_new));
             *id += 1;
         };
         let mut occ_sum = 0f64;

@@ -1,0 +1,519 @@
+//! Deterministic fault-injection harness for the serving stack
+//! (`serve-bench --faults`).
+//!
+//! Drives the [`Scheduler`] directly — no sockets — through a seeded
+//! storm of the faults the front-end must survive:
+//!
+//! * **mid-stream disconnects** — a request's "client" vanishes after
+//!   reading a seeded number of tokens; the harness cancels at the next
+//!   step boundary and asserts the KV pages come back immediately;
+//! * **slow readers** — a request stalls out a seeded number of steps
+//!   after admission (the server's write-timeout path) and is cancelled;
+//! * **deadline-doomed requests** — a seeded step deadline the request
+//!   usually cannot meet; the scheduler must evict it and keep the
+//!   partial output;
+//! * **overload bursts** — arrivals come in bursts against a bounded
+//!   pending queue, forcing explicit load-shed rejections.
+//!
+//! Every fault is a pure function of [`FaultConfig::seed`], and faults
+//! fire at step boundaries on step-count/token-count triggers, so a run
+//! is exactly reproducible. That buys the harness its strongest check:
+//! requests that finish despite the storm must produce tokens **bitwise
+//! identical** to an undisturbed twin run of the same seeds (the
+//! scheduler's determinism contract), and after a post-storm drain the
+//! pool must report **zero leaked pages/lanes** — both are hard errors,
+//! not metrics. What IS a metric lands in the `serve_faults` section of
+//! `BENCH_serve.json` (shed rate, goodput under churn, drain time) and
+//! is diffed run-over-run by `bench-diff`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{num, obj, Json};
+use crate::util::rng::Rng;
+
+use super::engine::InferEngine;
+use super::generate::Sampling;
+use super::kv_cache::KvLayout;
+use super::scheduler::{
+    Completion, CompletionStatus, Request, Scheduler, StepReport,
+    DEFAULT_PREFILL_CHUNK,
+};
+
+/// Shape of the fault storm. Everything is derived from `seed`; two runs
+/// with the same config are identical.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// total requests offered (admitted + shed)
+    pub n_requests: usize,
+    pub max_seqs: usize,
+    /// pending-queue bound (the load-shedding lever)
+    pub max_pending: usize,
+    /// per-step token budget for the scheduler
+    pub max_batch_tokens: usize,
+    /// step cap on the offered phase (arrivals stop after this)
+    pub max_steps: usize,
+    /// requests per arrival burst
+    pub burst: usize,
+    /// steps between bursts
+    pub arrival_every: usize,
+    /// prompt lengths are 1..=prompt_len
+    pub prompt_len: usize,
+    /// generation budgets are 1..=max_new
+    pub max_new: usize,
+    pub kv_page: usize,
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            n_requests: 40,
+            max_seqs: 4,
+            max_pending: 4,
+            max_batch_tokens: 4096,
+            max_steps: 400,
+            burst: 3,
+            arrival_every: 2,
+            prompt_len: 10,
+            max_new: 12,
+            kv_page: 16,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// One seeded fault, attached to a request at plan time.
+#[derive(Clone, Copy, Debug)]
+enum Fault {
+    /// the request is left alone
+    None,
+    /// the client vanishes after reading this many output tokens
+    Disconnect { after_tokens: usize },
+    /// a step-count deadline the request usually cannot meet
+    Deadline { steps: u64 },
+    /// the client stalls this many steps after submission
+    /// (the server's slow-reader write-timeout path)
+    Stall { after_steps: u64 },
+}
+
+struct Planned {
+    id: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    fault: Fault,
+}
+
+/// What the storm did. The hard invariants (bitwise survivors, zero
+/// leaks, immediate cancel-free) are errors inside [`run_fault_bench`],
+/// not fields here — a result object means they held.
+#[derive(Clone, Debug)]
+pub struct FaultBenchResult {
+    pub max_seqs: usize,
+    pub max_pending: usize,
+    /// scheduler steps executed (offered phase + drain)
+    pub steps: u64,
+    pub offered: usize,
+    pub shed: usize,
+    pub shed_rate: f64,
+    pub finished: usize,
+    pub cancelled: usize,
+    pub deadline_evicted: usize,
+    pub incomplete: usize,
+    pub finished_tokens: usize,
+    /// finished tokens per wall-clock second, faults and all
+    pub goodput_tokens_per_s: f64,
+    /// every mid-stream cancel returned its KV pages before the call
+    /// returned (checked against pool stats around each cancel)
+    pub cancel_free_immediate: bool,
+    /// every finished request matched the undisturbed twin bitwise
+    pub survivors_bitwise: bool,
+    /// steps from "arrivals stopped" to an idle scheduler
+    pub drain_steps: u64,
+    pub drain_ms: f64,
+    /// pages unaccounted for after the drain (always 0 — a leak is an
+    /// error — kept as the explicit proof in the bench record)
+    pub leaked_pages: usize,
+}
+
+impl FaultBenchResult {
+    pub fn render(&self) -> String {
+        format!(
+            "faults seqs={} pending={}: offered {} shed {} ({:.0}%) | \
+             finished {} ({} tok, {:.0} tok/s) | cancelled {} deadline {} \
+             incomplete {} | cancel-free {} bitwise {} | drain {} steps \
+             {:.1} ms | leaked {}",
+            self.max_seqs, self.max_pending, self.offered, self.shed,
+            self.shed_rate * 100.0, self.finished, self.finished_tokens,
+            self.goodput_tokens_per_s, self.cancelled, self.deadline_evicted,
+            self.incomplete, self.cancel_free_immediate, self.survivors_bitwise,
+            self.drain_steps, self.drain_ms, self.leaked_pages
+        )
+    }
+
+    /// `serve_faults` row for BENCH_serve.json (`docs/BENCH.md`).
+    pub fn to_json(&self, threads: usize) -> Json {
+        obj(vec![
+            ("max_seqs", num(self.max_seqs as f64)),
+            ("max_pending", num(self.max_pending as f64)),
+            ("threads", num(threads as f64)),
+            ("steps", num(self.steps as f64)),
+            ("offered", num(self.offered as f64)),
+            ("admitted", num((self.offered - self.shed) as f64)),
+            ("shed", num(self.shed as f64)),
+            ("shed_rate", num(self.shed_rate)),
+            ("finished", num(self.finished as f64)),
+            ("cancelled", num(self.cancelled as f64)),
+            ("deadline_evicted", num(self.deadline_evicted as f64)),
+            ("incomplete", num(self.incomplete as f64)),
+            ("finished_tokens", num(self.finished_tokens as f64)),
+            ("goodput_tokens_per_s", num(self.goodput_tokens_per_s)),
+            ("cancel_free_immediate", Json::Bool(self.cancel_free_immediate)),
+            ("survivors_bitwise", Json::Bool(self.survivors_bitwise)),
+            ("drain_steps", num(self.drain_steps as f64)),
+            ("drain_ms", num(self.drain_ms)),
+            ("leaked_pages", num(self.leaked_pages as f64)),
+        ])
+    }
+}
+
+/// Seeded request plan: ids, prompts, budgets, and one fault each.
+/// Roughly 40% of requests are undisturbed, the rest split across
+/// disconnect / deadline / stall.
+fn build_plan(fc: &FaultConfig, vocab: usize) -> Vec<Planned> {
+    let mut rng = Rng::new(fc.seed ^ 0xFA017);
+    (0..fc.n_requests as u64)
+        .map(|id| {
+            let plen = 1 + rng.below(fc.prompt_len.max(1));
+            let prompt = (0..plen).map(|_| rng.below(vocab) as u32).collect();
+            let max_new = 1 + rng.below(fc.max_new.max(1));
+            let fault = match rng.below(5) {
+                0 | 1 => Fault::None,
+                2 => Fault::Disconnect {
+                    after_tokens: 1 + rng.below(fc.max_new.max(1)),
+                },
+                3 => Fault::Deadline { steps: 1 + rng.below(6) as u64 },
+                _ => Fault::Stall { after_steps: 2 + rng.below(8) as u64 },
+            };
+            Planned { id, prompt, max_new, fault }
+        })
+        .collect()
+}
+
+fn scheduler_for(engine: InferEngine, fc: &FaultConfig) -> Scheduler {
+    Scheduler::with_kv(
+        engine, fc.max_seqs, fc.max_batch_tokens, DEFAULT_PREFILL_CHUNK,
+        KvLayout::Paged { page: fc.kv_page.max(1) }, 0, Sampling::Greedy, fc.seed,
+    )
+}
+
+/// Mutable storm state: emitted-token counts, armed faults, and the
+/// completion log (a struct so the arrival loop and the per-step fault
+/// pass can both borrow it without fighting).
+#[derive(Default)]
+struct Storm {
+    emitted: BTreeMap<u64, usize>,
+    done: BTreeSet<u64>,
+    /// (id, fire once this many tokens were emitted)
+    disconnects: Vec<(u64, usize)>,
+    /// (id, fire at this absolute scheduler step)
+    stalls: Vec<(u64, u64)>,
+    completions: Vec<Completion>,
+    cancel_free_immediate: bool,
+}
+
+impl Storm {
+    /// Fold one step's report in, then fire any fault whose trigger has
+    /// been reached (disconnects on emitted-token counts, stalls on
+    /// absolute steps). Fired cancels are checked for the immediate
+    /// KV-free guarantee.
+    fn absorb(&mut self, sch: &mut Scheduler, rep: StepReport) {
+        for (id, _) in rep.emitted {
+            *self.emitted.entry(id).or_default() += 1;
+        }
+        for c in rep.finished {
+            self.done.insert(c.id);
+            self.completions.push(c);
+        }
+        let disconnects = std::mem::take(&mut self.disconnects);
+        for (id, after) in disconnects {
+            if self.done.contains(&id) {
+                continue;
+            }
+            if self.emitted.get(&id).copied().unwrap_or(0) < after {
+                self.disconnects.push((id, after));
+                continue;
+            }
+            self.cancel(sch, id);
+        }
+        let step_now = sch.steps;
+        let stalls = std::mem::take(&mut self.stalls);
+        for (id, due) in stalls {
+            if self.done.contains(&id) {
+                continue;
+            }
+            if step_now < due {
+                self.stalls.push((id, due));
+                continue;
+            }
+            self.cancel(sch, id);
+        }
+    }
+
+    fn cancel(&mut self, sch: &mut Scheduler, id: u64) {
+        let before = sch.kv_stats();
+        let Some(c) = sch.cancel(id) else { return };
+        let after = sch.kv_stats();
+        // an active sequence held pages; cancel must hand them back
+        // before returning (queued requests hold none — skip those)
+        if !c.tokens.is_empty() && after.free_pages <= before.free_pages {
+            self.cancel_free_immediate = false;
+        }
+        self.done.insert(id);
+        self.completions.push(c);
+    }
+}
+
+/// Run the seeded fault storm. Errors on any violated hard invariant:
+/// a mid-stream cancel that did not free KV immediately, a surviving
+/// request whose output diverged from the undisturbed twin run, or a
+/// leaked page/lane after the drain.
+pub fn run_fault_bench(
+    engine: InferEngine,
+    fc: &FaultConfig,
+) -> Result<(FaultBenchResult, InferEngine)> {
+    let vocab = engine.model.dims.vocab;
+    let plan = build_plan(fc, vocab);
+
+    // --- undisturbed twin: same ids, prompts, budgets, scheduler seed —
+    // no faults, no pending bound. Its outputs are the bitwise oracle.
+    let mut twin = scheduler_for(engine, fc);
+    for p in &plan {
+        twin.submit(Request::new(p.id, p.prompt.clone(), p.max_new));
+    }
+    let twin_cap = plan.iter().map(|p| p.prompt.len() + p.max_new).sum::<usize>()
+        + fc.max_steps
+        + 64;
+    let mut oracle: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+    for c in twin.run_until_idle(twin_cap) {
+        if c.status != CompletionStatus::Finished {
+            bail!("twin run did not finish request {} ({:?})", c.id, c.status);
+        }
+        oracle.insert(c.id, c.tokens);
+    }
+    let engine = twin.shutdown();
+
+    // --- faulted run -----------------------------------------------------
+    let mut sch = scheduler_for(engine, fc);
+    sch.set_max_pending(fc.max_pending);
+    let mut storm = Storm { cancel_free_immediate: true, ..Storm::default() };
+    let mut offered = 0usize;
+    let mut shed = 0usize;
+    let mut next = 0usize;
+    let t0 = Instant::now();
+
+    // offered phase: seeded bursts against the bounded queue
+    let mut step = 0usize;
+    while next < plan.len() && step < fc.max_steps {
+        if step % fc.arrival_every.max(1) == 0 {
+            for _ in 0..fc.burst {
+                if next >= plan.len() {
+                    break;
+                }
+                let p = &plan[next];
+                next += 1;
+                offered += 1;
+                let mut req = Request::new(p.id, p.prompt.clone(), p.max_new);
+                if let Fault::Deadline { steps } = p.fault {
+                    req.deadline_steps = Some(steps);
+                }
+                match sch.try_submit(req) {
+                    Ok(()) => match p.fault {
+                        Fault::Disconnect { after_tokens } => {
+                            storm.disconnects.push((p.id, after_tokens));
+                        }
+                        Fault::Stall { after_steps } => {
+                            storm.stalls.push((p.id, sch.steps + after_steps));
+                        }
+                        _ => {}
+                    },
+                    Err(_) => shed += 1,
+                }
+            }
+        }
+        let rep = sch.step();
+        storm.absorb(&mut sch, rep);
+        step += 1;
+    }
+
+    // drain phase: arrivals stopped (the SIGTERM analogue); in-flight
+    // work — and still-armed faults — run down to an idle scheduler
+    let drain_t0 = Instant::now();
+    let drain_from = sch.steps;
+    let drain_cap = drain_from + fc.max_steps as u64 + 256;
+    while !sch.is_idle() && sch.steps < drain_cap {
+        let rep = sch.step();
+        storm.absorb(&mut sch, rep);
+    }
+    if !sch.is_idle() {
+        storm.completions.extend(sch.abort_all(CompletionStatus::Incomplete));
+    }
+    let drain_steps = sch.steps - drain_from;
+    let drain_ms = drain_t0.elapsed().as_secs_f64() * 1e3;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    // --- hard invariants -------------------------------------------------
+    if !storm.cancel_free_immediate {
+        bail!("a mid-stream cancel did not free its KV pages immediately");
+    }
+    if let Some(leak) = sch.leak_report() {
+        bail!("KV/lane leak after fault-storm drain: {leak}");
+    }
+    let mut finished_tokens = 0usize;
+    for c in storm
+        .completions
+        .iter()
+        .filter(|c| c.status == CompletionStatus::Finished)
+    {
+        finished_tokens += c.tokens.len();
+        match oracle.get(&c.id) {
+            Some(tokens) if *tokens == c.tokens => {}
+            _ => bail!(
+                "request {} survived the storm but diverged from the \
+                 undisturbed twin run",
+                c.id
+            ),
+        }
+    }
+
+    let counters = sch.counters();
+    let steps = sch.steps;
+    let engine = sch.shutdown();
+    let result = FaultBenchResult {
+        max_seqs: fc.max_seqs,
+        max_pending: fc.max_pending,
+        steps,
+        offered,
+        shed,
+        shed_rate: if offered > 0 { shed as f64 / offered as f64 } else { 0.0 },
+        finished: counters.finished as usize,
+        cancelled: counters.cancelled as usize,
+        deadline_evicted: counters.deadline_evicted as usize,
+        incomplete: counters.incomplete as usize,
+        finished_tokens,
+        goodput_tokens_per_s: finished_tokens as f64 / elapsed.max(1e-9),
+        cancel_free_immediate: true,
+        survivors_bitwise: true,
+        drain_steps,
+        drain_ms,
+        leaked_pages: 0,
+    };
+    Ok((result, engine))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDims;
+    use crate::serve::engine::{synthetic_checkpoint, InferModel};
+
+    fn engine() -> InferEngine {
+        let dims = ModelDims {
+            vocab: 48, d_model: 24, n_layers: 2, n_heads: 2, d_ff: 16, n_ctx: 32,
+        };
+        InferEngine::new(
+            InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 5)).unwrap(),
+        )
+    }
+
+    #[test]
+    fn fault_storm_exercises_every_path_and_holds_invariants() {
+        // the full default storm: 40 requests, ~8 armed per fault kind,
+        // 3-deep bursts against a tight queue — every path must fire
+        let fc = FaultConfig {
+            max_seqs: 2,
+            max_pending: 2,
+            prompt_len: 6,
+            max_new: 8,
+            ..FaultConfig::default()
+        };
+        let (r, _engine) = run_fault_bench(engine(), &fc).unwrap();
+        // returning at all proves bitwise survivors + zero leaks +
+        // immediate cancel-free; the storm must also actually bite
+        assert!(r.survivors_bitwise && r.cancel_free_immediate);
+        assert_eq!(r.leaked_pages, 0);
+        assert_eq!(r.offered, fc.n_requests);
+        assert!(r.finished > 0, "some requests must survive: {}", r.render());
+        assert!(r.shed > 0, "bursts against a 2-deep queue must shed: {}", r.render());
+        assert!(
+            r.cancelled > 0,
+            "disconnect/stall faults must cancel: {}",
+            r.render()
+        );
+        assert!(
+            r.deadline_evicted > 0,
+            "doomed deadlines must evict: {}",
+            r.render()
+        );
+        // every offered request is accounted for in exactly one bucket
+        assert_eq!(
+            r.finished + r.cancelled + r.deadline_evicted + r.incomplete + r.shed,
+            r.offered,
+            "{}",
+            r.render()
+        );
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_across_runs() {
+        let fc = FaultConfig {
+            n_requests: 18,
+            max_seqs: 2,
+            max_pending: 2,
+            max_steps: 200,
+            prompt_len: 6,
+            max_new: 8,
+            ..FaultConfig::default()
+        };
+        let (a, engine) = run_fault_bench(engine(), &fc).unwrap();
+        let (b, _) = run_fault_bench(engine, &fc).unwrap();
+        assert_eq!(a.offered, b.offered);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.finished, b.finished);
+        assert_eq!(a.cancelled, b.cancelled);
+        assert_eq!(a.deadline_evicted, b.deadline_evicted);
+        assert_eq!(a.incomplete, b.incomplete);
+        assert_eq!(a.finished_tokens, b.finished_tokens);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.drain_steps, b.drain_steps);
+    }
+
+    #[test]
+    fn different_seeds_change_the_storm() {
+        let base = FaultConfig {
+            n_requests: 18,
+            max_seqs: 2,
+            max_pending: 2,
+            max_steps: 200,
+            prompt_len: 6,
+            max_new: 8,
+            ..FaultConfig::default()
+        };
+        let other = FaultConfig { seed: base.seed ^ 0xBEEF, ..base.clone() };
+        let (a, engine) = run_fault_bench(engine(), &base).unwrap();
+        let (b, _) = run_fault_bench(engine, &other).unwrap();
+        // the plans differ; at least one observable differs with
+        // overwhelming probability
+        assert!(
+            a.finished_tokens != b.finished_tokens
+                || a.cancelled != b.cancelled
+                || a.shed != b.shed
+                || a.deadline_evicted != b.deadline_evicted,
+            "seeds {:#x}/{:#x} produced identical storms",
+            base.seed,
+            other.seed
+        );
+    }
+}

@@ -376,6 +376,48 @@ impl KvPool {
         self.free_slots.push(slot);
     }
 
+    /// None when the pool is fully quiescent — every slot and page back
+    /// on the free lists, no reservation outstanding, lifetime counters
+    /// balanced — otherwise a description of what leaked. The serving
+    /// front-end and the churn property tests assert this after drain.
+    pub fn leak_report(&self) -> Option<String> {
+        let mut leaks = Vec::new();
+        if self.slots_in_use() != 0 {
+            leaks.push(format!("{} KV slots in use", self.slots_in_use()));
+        }
+        let mapped: usize = self.tables.iter().map(|t| t.len()).sum();
+        if mapped != 0 {
+            leaks.push(format!("{mapped} mapped KV pages"));
+        }
+        if self.reserved_unmapped != 0 {
+            leaks.push(format!("{} reserved-unmapped KV pages", self.reserved_unmapped));
+        }
+        if matches!(self.layout, KvLayout::Paged { .. })
+            && self.free_count != self.n_pages
+        {
+            leaks.push(format!(
+                "free list holds {}/{} pages", self.free_count, self.n_pages
+            ));
+        }
+        if self.acquires != self.releases {
+            leaks.push(format!(
+                "slot counters unbalanced ({} acquires / {} releases)",
+                self.acquires, self.releases
+            ));
+        }
+        if self.page_maps != self.page_unmaps {
+            leaks.push(format!(
+                "page counters unbalanced ({} maps / {} unmaps)",
+                self.page_maps, self.page_unmaps
+            ));
+        }
+        if leaks.is_empty() {
+            None
+        } else {
+            Some(leaks.join("; "))
+        }
+    }
+
     /// Occupancy/fragmentation snapshot for the bench.
     pub fn stats(&self) -> KvStats {
         let mapped: usize = self.tables.iter().map(|t| t.len()).sum();
@@ -602,6 +644,29 @@ mod tests {
             assert_eq!(map.row_base(f, 1, 2), bank + 5 * page * d);
         }
         assert_eq!(kv.stats().noncontig_seqs, 1);
+        kv.release_storage(&mut s);
+    }
+
+    #[test]
+    fn leak_report_flags_held_slots_and_clears_on_release() {
+        let mut s = Scratch::new();
+        let mut kv = KvPool::with_layout(&mut s, 1, 8, 2, 2,
+                                         KvLayout::Paged { page: 2 }, 8);
+        assert!(kv.leak_report().is_none(), "fresh pool is quiescent");
+        let a = kv.acquire(4).unwrap();
+        kv.ensure(a, 3);
+        let rep = kv.leak_report().expect("held slot must be reported");
+        assert!(rep.contains("KV slots in use"), "{rep}");
+        assert!(rep.contains("mapped KV pages"), "{rep}");
+        kv.release(a);
+        assert!(kv.leak_report().is_none(), "release restores quiescence");
+        kv.release_storage(&mut s);
+        // contiguous layout too
+        let mut kv = KvPool::new(&mut s, 1, 8, 2, 2);
+        let b = kv.acquire(8).unwrap();
+        assert!(kv.leak_report().is_some());
+        kv.release(b);
+        assert!(kv.leak_report().is_none());
         kv.release_storage(&mut s);
     }
 

@@ -51,24 +51,58 @@
 //! [`InferEngine::prefill_reference`] is the differential oracle the
 //! `serve_prefill` test suite pins chunked prefill against (1e-5).
 //!
+//! ## The hardened front-end
+//!
+//! [`server`] puts a dependency-free socket front-end (std::net TCP or
+//! unix socket, newline-delimited JSON frames — [`protocol`]) over the
+//! scheduler, built around four robustness pillars:
+//!
+//! 1. **deadlines** — per-request wall-clock/step deadlines; expiry is
+//!    checked before admission each step so an evicted sequence's KV
+//!    pages back that same step's admissions;
+//! 2. **cancellation** — [`Scheduler::cancel`] frees a request's lane
+//!    and KV pages the moment its client disconnects mid-stream;
+//! 3. **load-shedding** — [`Scheduler::try_submit`] bounds the pending
+//!    queue and rejects with an explicit `overloaded` + retry-after
+//!    frame instead of queueing without bound;
+//! 4. **graceful drain** — SIGTERM or a `shutdown` frame stops
+//!    admissions, lets in-flight requests finish up to
+//!    `drain_timeout_ms`, then asserts zero leaked pages/lanes
+//!    ([`Scheduler::leak_report`]).
+//!
+//! [`faultgen`] is the deterministic fault-injection harness that
+//! proves all four paths (`serve-bench --faults`): seeded mid-stream
+//! disconnects, deadline-doomed requests, stalled readers, and overload
+//! bursts, with the invariant that surviving requests' outputs are
+//! bitwise identical to an undisturbed run of the same seeds.
+//!
 //! Module map: [`engine`] (frozen model + batched decode + chunked
 //! prefill), [`kv_cache`] (paged/contiguous KV pool), [`scheduler`]
-//! (continuous batching + page-aware admission), [`generate`] (greedy /
-//! temperature / top-k sampling), [`bench`] (open-loop load harness
-//! behind `serve-bench`: decode p50/p99 charged per lane, TTFT,
-//! `prefill_tokens_per_s`, and the mixed long/short `kv_paging`
-//! occupancy comparison).
+//! (continuous batching + page-aware admission + cancel/deadline/drain
+//! lifecycle), [`generate`] (greedy / temperature / top-k sampling),
+//! [`protocol`] (JSON-lines wire format), [`server`] (socket front-end
+//! + in-process smoke harness), [`faultgen`] (fault-injection bench),
+//! [`bench`] (open-loop load harness behind `serve-bench`: decode
+//! p50/p99 charged per lane, TTFT, `prefill_tokens_per_s`, and the
+//! mixed long/short `kv_paging` occupancy comparison).
 
 pub mod bench;
 pub mod engine;
+pub mod faultgen;
 pub mod generate;
 pub mod kv_cache;
+pub mod protocol;
 pub mod scheduler;
+pub mod server;
 
 pub use bench::{run_mixed_kv_bench, run_open_loop, BenchResult, MixedKvResult};
 pub use engine::{synthetic_checkpoint, DecodeLane, InferEngine, InferModel};
+pub use faultgen::{run_fault_bench, FaultBenchResult, FaultConfig};
 pub use generate::{argmax, sample, Sampling};
 pub use kv_cache::{KvLayout, KvPool, KvStats};
+pub use protocol::{ClientFrame, GenRequest, ServerFrame};
 pub use scheduler::{
-    Completion, Request, Scheduler, StepReport, DEFAULT_PREFILL_CHUNK,
+    Completion, CompletionStatus, Rejected, Request, SchedCounters, Scheduler,
+    StepReport, DEFAULT_PREFILL_CHUNK,
 };
+pub use server::{run_server, run_smoke, ServerHandle, ServerReport};

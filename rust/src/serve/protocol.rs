@@ -1,0 +1,341 @@
+//! Wire protocol of the socket front-end: newline-delimited JSON.
+//!
+//! One JSON object per line in both directions (no framing bytes, no
+//! HTTP — `nc`-debuggable and dependency-free on both ends). A client
+//! sends one [`ClientFrame`]; the server answers with a stream of
+//! [`ServerFrame`]s. For `generate` the reply stream is
+//! `queued → token* → done` (tokens stream as the scheduler emits
+//! them), or a single `overloaded` / `error` frame and a close. See
+//! `docs/SERVING.md` for the full exchange semantics.
+//!
+//! The `done` frame's `status` string is
+//! [`CompletionStatus::as_str`]: `finished`, `cancelled`,
+//! `deadline_exceeded`, or `incomplete` — evictions still deliver the
+//! partial `tokens` so a client keeps what streamed before the fault.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+use super::scheduler::{CompletionStatus, SchedCounters};
+
+/// A `generate` request as it arrives off the wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    /// tokens to generate; None = the server's configured default
+    pub max_new: Option<usize>,
+    /// per-request wall-clock deadline; None = the server's configured
+    /// default (`request_deadline_ms`)
+    pub deadline_ms: Option<u64>,
+}
+
+/// Client → server frames.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClientFrame {
+    /// `{"op":"generate","prompt":[..],"max_new":N,"deadline_ms":N}`
+    /// (`op` may be omitted when `prompt` is present)
+    Generate(GenRequest),
+    /// `{"op":"stats"}` — counters + gauges snapshot
+    Stats,
+    /// `{"op":"health"}` — `ok` or `draining`
+    Health,
+    /// `{"op":"shutdown"}` — ask the server to drain and exit
+    Shutdown,
+}
+
+impl ClientFrame {
+    /// Parse one request line. Errors name the offending field — the
+    /// server echoes them back in an `error` frame.
+    pub fn parse(line: &str) -> Result<ClientFrame> {
+        let j = Json::parse(line.trim()).context("malformed JSON frame")?;
+        let op = match j.opt("op") {
+            Some(v) => v.as_str().context("op must be a string")?,
+            None if j.opt("prompt").is_some() => "generate",
+            None => bail!("missing op"),
+        };
+        Ok(match op {
+            "generate" => {
+                let prompt_json = j
+                    .opt("prompt")
+                    .context("generate frame missing prompt")?;
+                let prompt_usize =
+                    prompt_json.as_usize_vec().context("prompt must be an array of token ids")?;
+                if prompt_usize.is_empty() {
+                    bail!("prompt must not be empty");
+                }
+                let mut prompt = Vec::with_capacity(prompt_usize.len());
+                for t in prompt_usize {
+                    if t > u32::MAX as usize {
+                        bail!("token id {t} out of range");
+                    }
+                    prompt.push(t as u32);
+                }
+                let max_new = match j.opt("max_new") {
+                    Some(v) => Some(v.as_usize().context("max_new must be a non-negative integer")?),
+                    None => None,
+                };
+                let deadline_ms = match j.opt("deadline_ms") {
+                    Some(v) => {
+                        Some(v.as_usize().context("deadline_ms must be a non-negative integer")? as u64)
+                    }
+                    None => None,
+                };
+                ClientFrame::Generate(GenRequest { prompt, max_new, deadline_ms })
+            }
+            "stats" => ClientFrame::Stats,
+            "health" => ClientFrame::Health,
+            "shutdown" => ClientFrame::Shutdown,
+            other => bail!("unknown op {other:?}"),
+        })
+    }
+
+    pub fn to_line(&self) -> String {
+        let j = match self {
+            ClientFrame::Generate(g) => {
+                let mut pairs = vec![
+                    ("op", s("generate")),
+                    ("prompt",
+                     Json::Arr(g.prompt.iter().map(|&t| num(t as f64)).collect())),
+                ];
+                if let Some(n) = g.max_new {
+                    pairs.push(("max_new", num(n as f64)));
+                }
+                if let Some(d) = g.deadline_ms {
+                    pairs.push(("deadline_ms", num(d as f64)));
+                }
+                obj(pairs)
+            }
+            ClientFrame::Stats => obj(vec![("op", s("stats"))]),
+            ClientFrame::Health => obj(vec![("op", s("health"))]),
+            ClientFrame::Shutdown => obj(vec![("op", s("shutdown"))]),
+        };
+        let mut line = j.to_string();
+        line.push('\n');
+        line
+    }
+}
+
+/// Server → client frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerFrame {
+    /// the request was admitted to the scheduler queue under `id`
+    Queued { id: u64 },
+    /// `index`-th output token of request `id`
+    Token { id: u64, index: usize, token: u32 },
+    /// terminal frame of a generate exchange; `tokens` is the full
+    /// output (partial on eviction — `status` says why)
+    Done { id: u64, status: CompletionStatus, prompt_len: usize, tokens: Vec<u32> },
+    /// load-shed reject: retry after the hinted delay
+    Overloaded { retry_after_ms: u64 },
+    /// protocol or validation failure; the connection closes after
+    Error { message: String },
+    /// reply to `stats`
+    Stats {
+        active: usize,
+        pending: usize,
+        draining: bool,
+        steps: u64,
+        counters: SchedCounters,
+    },
+    /// reply to `health`
+    Health { draining: bool },
+}
+
+impl ServerFrame {
+    pub fn to_line(&self) -> String {
+        let j = match self {
+            ServerFrame::Queued { id } => {
+                obj(vec![("event", s("queued")), ("id", num(*id as f64))])
+            }
+            ServerFrame::Token { id, index, token } => obj(vec![
+                ("event", s("token")),
+                ("id", num(*id as f64)),
+                ("index", num(*index as f64)),
+                ("token", num(*token as f64)),
+            ]),
+            ServerFrame::Done { id, status, prompt_len, tokens } => obj(vec![
+                ("event", s("done")),
+                ("id", num(*id as f64)),
+                ("status", s(status.as_str())),
+                ("prompt_len", num(*prompt_len as f64)),
+                ("tokens",
+                 Json::Arr(tokens.iter().map(|&t| num(t as f64)).collect())),
+            ]),
+            ServerFrame::Overloaded { retry_after_ms } => obj(vec![
+                ("event", s("overloaded")),
+                ("retry_after_ms", num(*retry_after_ms as f64)),
+            ]),
+            ServerFrame::Error { message } => {
+                obj(vec![("event", s("error")), ("message", s(message))])
+            }
+            ServerFrame::Stats { active, pending, draining, steps, counters } => {
+                obj(vec![
+                    ("event", s("stats")),
+                    ("active", num(*active as f64)),
+                    ("pending", num(*pending as f64)),
+                    ("draining", Json::Bool(*draining)),
+                    ("steps", num(*steps as f64)),
+                    ("finished", num(counters.finished as f64)),
+                    ("cancelled", num(counters.cancelled as f64)),
+                    ("deadline_evicted", num(counters.deadline_evicted as f64)),
+                    ("incomplete", num(counters.incomplete as f64)),
+                    ("shed", num(counters.shed as f64)),
+                ])
+            }
+            ServerFrame::Health { draining } => obj(vec![
+                ("event", s("health")),
+                ("status", s(if *draining { "draining" } else { "ok" })),
+            ]),
+        };
+        let mut line = j.to_string();
+        line.push('\n');
+        line
+    }
+
+    /// Parse one reply line (the client half; tests and the smoke
+    /// harness round-trip through this).
+    pub fn parse(line: &str) -> Result<ServerFrame> {
+        let j = Json::parse(line.trim()).context("malformed server frame")?;
+        let event = j.get("event")?.as_str()?;
+        Ok(match event {
+            "queued" => ServerFrame::Queued { id: j.get("id")?.as_usize()? as u64 },
+            "token" => ServerFrame::Token {
+                id: j.get("id")?.as_usize()? as u64,
+                index: j.get("index")?.as_usize()?,
+                token: j.get("token")?.as_usize()? as u32,
+            },
+            "done" => {
+                let status_str = j.get("status")?.as_str()?;
+                let status = CompletionStatus::parse(status_str)
+                    .with_context(|| format!("unknown status {status_str:?}"))?;
+                let tokens_usize = j.get("tokens")?.as_usize_vec()?;
+                ServerFrame::Done {
+                    id: j.get("id")?.as_usize()? as u64,
+                    status,
+                    prompt_len: j.get("prompt_len")?.as_usize()?,
+                    tokens: tokens_usize.into_iter().map(|t| t as u32).collect(),
+                }
+            }
+            "overloaded" => ServerFrame::Overloaded {
+                retry_after_ms: j.get("retry_after_ms")?.as_usize()? as u64,
+            },
+            "error" => ServerFrame::Error {
+                message: j.get("message")?.as_str()?.to_string(),
+            },
+            "stats" => ServerFrame::Stats {
+                active: j.get("active")?.as_usize()?,
+                pending: j.get("pending")?.as_usize()?,
+                draining: j.get("draining")?.as_bool()?,
+                steps: j.get("steps")?.as_usize()? as u64,
+                counters: SchedCounters {
+                    finished: j.get("finished")?.as_usize()? as u64,
+                    cancelled: j.get("cancelled")?.as_usize()? as u64,
+                    deadline_evicted: j.get("deadline_evicted")?.as_usize()? as u64,
+                    incomplete: j.get("incomplete")?.as_usize()? as u64,
+                    shed: j.get("shed")?.as_usize()? as u64,
+                },
+            },
+            "health" => ServerFrame::Health {
+                draining: j.get("status")?.as_str()? == "draining",
+            },
+            other => bail!("unknown event {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_roundtrip_with_options() {
+        let f = ClientFrame::Generate(GenRequest {
+            prompt: vec![3, 17, 5],
+            max_new: Some(8),
+            deadline_ms: Some(250),
+        });
+        let line = f.to_line();
+        assert!(line.ends_with('\n'));
+        assert_eq!(ClientFrame::parse(&line).unwrap(), f);
+    }
+
+    #[test]
+    fn generate_op_may_be_omitted_and_options_default() {
+        let f = ClientFrame::parse(r#"{"prompt":[1,2]}"#).unwrap();
+        assert_eq!(
+            f,
+            ClientFrame::Generate(GenRequest {
+                prompt: vec![1, 2],
+                max_new: None,
+                deadline_ms: None,
+            })
+        );
+    }
+
+    #[test]
+    fn control_ops_roundtrip() {
+        for f in [ClientFrame::Stats, ClientFrame::Health, ClientFrame::Shutdown] {
+            assert_eq!(ClientFrame::parse(&f.to_line()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_client_frames() {
+        assert!(ClientFrame::parse("not json").is_err());
+        assert!(ClientFrame::parse(r#"{"op":"fly"}"#).is_err());
+        assert!(ClientFrame::parse(r#"{"op":"generate"}"#).is_err());
+        assert!(ClientFrame::parse(r#"{"op":"generate","prompt":[]}"#).is_err());
+        assert!(ClientFrame::parse(r#"{"prompt":[1],"max_new":-2}"#).is_err());
+        assert!(ClientFrame::parse(r#"{"x":1}"#).is_err(), "missing op");
+    }
+
+    #[test]
+    fn server_frames_roundtrip() {
+        let frames = vec![
+            ServerFrame::Queued { id: 7 },
+            ServerFrame::Token { id: 7, index: 0, token: 13 },
+            ServerFrame::Done {
+                id: 7,
+                status: CompletionStatus::DeadlineExceeded,
+                prompt_len: 3,
+                tokens: vec![13, 2],
+            },
+            ServerFrame::Overloaded { retry_after_ms: 120 },
+            ServerFrame::Error { message: "bad \"token\"".into() },
+            ServerFrame::Stats {
+                active: 2,
+                pending: 1,
+                draining: false,
+                steps: 40,
+                counters: SchedCounters {
+                    finished: 5,
+                    cancelled: 2,
+                    deadline_evicted: 1,
+                    incomplete: 0,
+                    shed: 3,
+                },
+            },
+            ServerFrame::Health { draining: true },
+        ];
+        for f in frames {
+            let line = f.to_line();
+            assert!(line.ends_with('\n'));
+            assert_eq!(ServerFrame::parse(&line).unwrap(), f, "line {line:?}");
+        }
+    }
+
+    #[test]
+    fn status_strings_are_stable() {
+        for (st, name) in [
+            (CompletionStatus::Finished, "finished"),
+            (CompletionStatus::Cancelled, "cancelled"),
+            (CompletionStatus::DeadlineExceeded, "deadline_exceeded"),
+            (CompletionStatus::Incomplete, "incomplete"),
+        ] {
+            assert_eq!(st.as_str(), name);
+            assert_eq!(CompletionStatus::parse(name), Some(st));
+        }
+        assert_eq!(CompletionStatus::parse("exploded"), None);
+    }
+}

@@ -32,7 +32,26 @@
 //! arithmetic is independent of batch composition, chunked prefill
 //! reproduces the one-token reference path, and each sequence's sampling
 //! RNG is derived from (scheduler seed, request id) alone. The scheduler
-//! property tests pin this.
+//! property tests pin this — and it is what makes fault injection
+//! checkable: requests that survive a cancel/evict/shed storm must
+//! produce tokens bitwise identical to an undisturbed run.
+//!
+//! Lifecycle beyond the happy path (the serving front-end's contract):
+//!
+//! * **deadlines** — a request may carry a step-count and/or wall-clock
+//!   deadline; expiry is checked at the top of every step, *before*
+//!   admission, so an evicted sequence's KV pages are reusable in the
+//!   same step ([`CompletionStatus::DeadlineExceeded`]).
+//! * **cancellation** — [`Scheduler::cancel`] removes a queued or
+//!   in-flight request and releases its lane + KV pages immediately
+//!   (the pool documents release as safe mid-prefill/mid-decode).
+//! * **bounded admission** — [`Scheduler::try_submit`] rejects with a
+//!   retry-after hint once the pending queue is full and the request
+//!   cannot start right now, instead of growing the queue without bound.
+//! * **drain/teardown** — [`Scheduler::abort_all`] evicts everything and
+//!   returns the partial completions; [`Scheduler::shutdown`] asserts
+//!   zero leaked lanes/pages ([`Scheduler::leak_report`]) before handing
+//!   the KV storage back to the arena.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -57,14 +76,101 @@ pub struct Request {
     pub prompt: Vec<u32>,
     /// tokens to generate (clamped so prompt + output fits n_ctx)
     pub max_new: usize,
+    /// step-count deadline relative to submission: if the request has
+    /// not finished within this many scheduler steps it is evicted with
+    /// [`CompletionStatus::DeadlineExceeded`]. Step-based, so the fault
+    /// harness gets deterministic evictions. None = no step deadline.
+    pub deadline_steps: Option<u64>,
+    /// wall-clock deadline (the server derives it from
+    /// `request_deadline_ms`); checked at step granularity
+    pub deadline_at: Option<Instant>,
 }
 
-/// A finished request.
+impl Request {
+    /// A request with no deadline (the common test/bench shape).
+    pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request { id, prompt, max_new, ..Request::default() }
+    }
+}
+
+impl Default for Request {
+    fn default() -> Request {
+        Request {
+            id: 0,
+            prompt: Vec::new(),
+            max_new: 0,
+            deadline_steps: None,
+            deadline_at: None,
+        }
+    }
+}
+
+/// Why a request left the scheduler ([`Completion::status`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompletionStatus {
+    /// ran to its token budget (or the context cap)
+    Finished,
+    /// evicted by [`Scheduler::cancel`] (client disconnect, explicit
+    /// abort); `tokens` holds whatever streamed before the cancel
+    Cancelled,
+    /// evicted at its step/wall-clock deadline
+    DeadlineExceeded,
+    /// the scheduler stopped before the sequence could finish
+    /// ([`Scheduler::run_until_idle`] step cap, drain timeout)
+    Incomplete,
+}
+
+impl CompletionStatus {
+    /// Stable wire-protocol name (`docs/SERVING.md`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CompletionStatus::Finished => "finished",
+            CompletionStatus::Cancelled => "cancelled",
+            CompletionStatus::DeadlineExceeded => "deadline_exceeded",
+            CompletionStatus::Incomplete => "incomplete",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CompletionStatus> {
+        Some(match s {
+            "finished" => CompletionStatus::Finished,
+            "cancelled" => CompletionStatus::Cancelled,
+            "deadline_exceeded" => CompletionStatus::DeadlineExceeded,
+            "incomplete" => CompletionStatus::Incomplete,
+            _ => return None,
+        })
+    }
+}
+
+/// A request that left the scheduler — naturally finished or evicted
+/// (`status` says which; evictions carry the partial output).
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: u64,
     pub prompt_len: usize,
     pub tokens: Vec<u32>,
+    pub status: CompletionStatus,
+}
+
+/// Admission refusal from [`Scheduler::try_submit`]: the pending queue
+/// is full and the request cannot start this step.
+#[derive(Clone, Copy, Debug)]
+pub struct Rejected {
+    /// heuristic steps until capacity likely frees (earliest in-flight
+    /// retirement + queue depth) — the server's retry-after hint
+    pub retry_after_steps: u64,
+}
+
+/// Lifetime exit counters ([`Scheduler::counters`]): every submitted
+/// request ends in exactly one bucket, every [`Scheduler::try_submit`]
+/// refusal in `shed`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedCounters {
+    pub finished: u64,
+    pub cancelled: u64,
+    pub deadline_evicted: u64,
+    pub incomplete: u64,
+    pub shed: u64,
 }
 
 /// What one scheduler step did (bench bookkeeping).
@@ -89,7 +195,18 @@ pub struct StepReport {
     /// decode-lane token `prefill_ms + decode_ms` — the lane's real
     /// inter-token gap — instead of a whole-step per-token average)
     pub decode_ms: f64,
+    /// every `(request id, token)` emitted this step, in emission order
+    /// (prefill first-tokens then decode lanes) — the server's streaming
+    /// hook
+    pub emitted: Vec<(u64, u32)>,
     pub finished: Vec<Completion>,
+}
+
+/// A queued request plus its deadline resolved to an absolute step
+/// number (computed once at submit so expiry checks are O(1)).
+struct QueuedReq {
+    req: Request,
+    deadline_step: Option<u64>,
 }
 
 struct ActiveSeq {
@@ -109,6 +226,10 @@ struct ActiveSeq {
     max_new: usize,
     max_total: usize,
     rng: Rng,
+    /// absolute step at which the sequence expires (carried over from
+    /// the queued request)
+    deadline_step: Option<u64>,
+    deadline_at: Option<Instant>,
 }
 
 impl ActiveSeq {
@@ -125,13 +246,17 @@ impl ActiveSeq {
 pub struct Scheduler {
     pub engine: InferEngine,
     kv: Option<KvPool>,
-    queue: VecDeque<Request>,
+    queue: VecDeque<QueuedReq>,
     active: Vec<ActiveSeq>,
     sampling: Sampling,
     max_seqs: usize,
     max_batch_tokens: usize,
     prefill_chunk: usize,
     seed: u64,
+    /// pending-queue bound for [`Scheduler::try_submit`] (plain
+    /// [`Scheduler::submit`] ignores it; default: unbounded)
+    max_pending: usize,
+    counters: SchedCounters,
     /// reused per-step buffers
     lanes: Vec<DecodeLane>,
     lane_seq: Vec<usize>,
@@ -189,6 +314,8 @@ impl Scheduler {
             max_batch_tokens: max_batch_tokens.max(1),
             prefill_chunk,
             seed,
+            max_pending: usize::MAX,
+            counters: SchedCounters::default(),
             lanes: Vec::with_capacity(max_seqs),
             lane_seq: Vec::with_capacity(max_seqs),
             logits: Tensor::zeros(&[0]),
@@ -197,14 +324,165 @@ impl Scheduler {
         }
     }
 
-    /// Queue a request (FIFO admission). Empty prompts are rejected;
-    /// over-long prompts are truncated to n_ctx (a full-context prompt
-    /// still yields one output token, sampled off the prefill logits).
+    /// Queue a request (FIFO admission), bypassing the pending bound.
+    /// Empty prompts are rejected; over-long prompts are truncated to
+    /// n_ctx (a full-context prompt still yields one output token,
+    /// sampled off the prefill logits).
     pub fn submit(&mut self, mut req: Request) {
         assert!(!req.prompt.is_empty(), "empty prompt for request {}", req.id);
         let n_ctx = self.engine.model.dims.n_ctx;
         req.prompt.truncate(n_ctx);
-        self.queue.push_back(req);
+        let deadline_step = req.deadline_steps.map(|n| self.steps + n);
+        self.queue.push_back(QueuedReq { req, deadline_step });
+    }
+
+    /// Bound for [`Scheduler::try_submit`]'s pending queue. `0` means
+    /// "no waiting room": a request is accepted only when it can start
+    /// on the next step.
+    pub fn set_max_pending(&mut self, n: usize) {
+        self.max_pending = n;
+    }
+
+    /// [`Scheduler::submit`] with load-shedding: refuses (with a
+    /// retry-after hint) instead of queueing once the pending queue is
+    /// at `max_pending` and the request cannot be admitted immediately.
+    /// Accepted requests are queued exactly like `submit`.
+    pub fn try_submit(&mut self, req: Request) -> Result<(), Rejected> {
+        if self.queue.len() >= self.max_pending && !self.can_admit_now(&req) {
+            self.counters.shed += 1;
+            return Err(Rejected { retry_after_steps: self.retry_after_hint() });
+        }
+        self.submit(req);
+        Ok(())
+    }
+
+    /// Would `req` clear every admission gate on the next step, with no
+    /// queued request ahead of it? (The FIFO queue keeps this honest:
+    /// anything already waiting goes first.)
+    fn can_admit_now(&self, req: &Request) -> bool {
+        if !self.queue.is_empty() || self.active.len() >= self.max_seqs {
+            return false;
+        }
+        let n_ctx = self.engine.model.dims.n_ctx;
+        let max_total = (req.prompt.len().min(n_ctx) + req.max_new.max(1)).min(n_ctx);
+        if !self.active.is_empty()
+            && self.committed_tokens() + max_total > self.max_batch_tokens
+        {
+            return false;
+        }
+        self.kv.as_ref().is_some_and(|kv| kv.can_admit(max_total))
+    }
+
+    /// Steps until capacity plausibly frees: the earliest in-flight
+    /// retirement (remaining prefill chunks + remaining decode tokens)
+    /// plus one step per queued request ahead. A hint, not a promise.
+    fn retry_after_hint(&self) -> u64 {
+        let min_left = self
+            .active
+            .iter()
+            .map(|s| {
+                let prefill_left =
+                    (s.prompt.len() - s.filled).div_ceil(self.prefill_chunk);
+                let decode_left = s.max_new.saturating_sub(s.out.len());
+                (prefill_left + decode_left) as u64
+            })
+            .min()
+            .unwrap_or(0);
+        min_left.max(1) + self.queue.len() as u64
+    }
+
+    /// Evict a queued or in-flight request, releasing its lane and KV
+    /// pages *immediately* (not at the next step — the pool documents
+    /// release as safe mid-prefill/mid-decode). Returns the partial
+    /// completion, or None when the id is unknown or already finished.
+    pub fn cancel(&mut self, id: u64) -> Option<Completion> {
+        if let Some(qi) = self.queue.iter().position(|q| q.req.id == id) {
+            let q = self.queue.remove(qi).unwrap();
+            self.counters.cancelled += 1;
+            return Some(Completion {
+                id,
+                prompt_len: q.req.prompt.len(),
+                tokens: Vec::new(),
+                status: CompletionStatus::Cancelled,
+            });
+        }
+        let ai = self.active.iter().position(|s| s.id == id)?;
+        let seq = self.active.remove(ai);
+        self.kv
+            .as_mut()
+            .expect("scheduler already shut down")
+            .release(seq.slot);
+        self.counters.cancelled += 1;
+        Some(Completion {
+            id,
+            prompt_len: seq.prompt.len(),
+            tokens: seq.out,
+            status: CompletionStatus::Cancelled,
+        })
+    }
+
+    /// Evict every queued and in-flight request with `status`, releasing
+    /// all lanes and KV pages. The drain path: after this the scheduler
+    /// is idle and [`Scheduler::leak_report`] must return None.
+    pub fn abort_all(&mut self, status: CompletionStatus) -> Vec<Completion> {
+        let mut out = Vec::with_capacity(self.queue.len() + self.active.len());
+        for q in self.queue.drain(..) {
+            out.push(Completion {
+                id: q.req.id,
+                prompt_len: q.req.prompt.len(),
+                tokens: Vec::new(),
+                status,
+            });
+        }
+        let kv = self.kv.as_mut().expect("scheduler already shut down");
+        for seq in self.active.drain(..) {
+            kv.release(seq.slot);
+            out.push(Completion {
+                id: seq.id,
+                prompt_len: seq.prompt.len(),
+                tokens: seq.out,
+                status,
+            });
+        }
+        match status {
+            CompletionStatus::Cancelled => {
+                self.counters.cancelled += out.len() as u64
+            }
+            CompletionStatus::DeadlineExceeded => {
+                self.counters.deadline_evicted += out.len() as u64
+            }
+            _ => self.counters.incomplete += out.len() as u64,
+        }
+        out
+    }
+
+    /// Lifetime exit/shed counters.
+    pub fn counters(&self) -> SchedCounters {
+        self.counters
+    }
+
+    /// None when every lane and KV page is back in the free pool and the
+    /// pool's lifetime counters balance; otherwise what leaked. The
+    /// zero-leak gate behind [`Scheduler::shutdown`], the drain path,
+    /// and the churn property tests.
+    pub fn leak_report(&self) -> Option<String> {
+        let mut leaks = Vec::new();
+        if !self.queue.is_empty() {
+            leaks.push(format!("{} queued requests", self.queue.len()));
+        }
+        if !self.active.is_empty() {
+            leaks.push(format!("{} active sequences", self.active.len()));
+        }
+        if let Some(kv) = self.kv.as_ref() {
+            if let Some(l) = kv.leak_report() {
+                leaks.push(l);
+            }
+        }
+        if leaks.is_empty() {
+            None
+        } else {
+            Some(leaks.join("; "))
+        }
     }
 
     pub fn pending(&self) -> usize {
@@ -240,6 +518,10 @@ impl Scheduler {
         let n_ctx = self.engine.model.dims.n_ctx;
         let mut kv = self.kv.take().expect("scheduler already shut down");
 
+        // --- deadline expiry FIRST, so an evicted sequence's KV pages ---
+        // back this very step's admissions ("released that same step")
+        self.expire_deadlines(&mut kv, &mut report);
+
         // --- admission (KV capacity + committed-KV budget; no prompt ----
         // work). The KV gate is layout-dependent: a contiguous pool needs
         // a whole free max-length slot, a paged pool needs free pages
@@ -248,14 +530,15 @@ impl Scheduler {
         // admitted sequences never deadlock on each other.
         while self.active.len() < self.max_seqs {
             let Some(front) = self.queue.front() else { break };
-            let max_total = (front.prompt.len() + front.max_new.max(1)).min(n_ctx);
+            let max_total =
+                (front.req.prompt.len() + front.req.max_new.max(1)).min(n_ctx);
             if !self.active.is_empty()
                 && self.committed_tokens() + max_total > self.max_batch_tokens
             {
                 break;
             }
             let Some(slot) = kv.acquire(max_total) else { break };
-            let req = self.queue.pop_front().unwrap();
+            let QueuedReq { req, deadline_step } = self.queue.pop_front().unwrap();
             let rng = Rng::new(self.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
             self.active.push(ActiveSeq {
                 id: req.id,
@@ -268,6 +551,8 @@ impl Scheduler {
                 max_new: req.max_new.max(1),
                 max_total,
                 rng,
+                deadline_step,
+                deadline_at: req.deadline_at,
             });
             report.admitted += 1;
         }
@@ -316,6 +601,7 @@ impl Scheduler {
                     seq.last = first;
                     seq.out.push(first);
                     report.decoded += 1;
+                    report.emitted.push((seq.id, first));
                     report.first_token_ids.push(seq.id);
                 }
             }
@@ -336,6 +622,7 @@ impl Scheduler {
                 seq.last = tok;
                 seq.out.push(tok);
                 report.decoded += 1;
+                report.emitted.push((seq.id, tok));
             }
             report.decode_ms = t_decode.elapsed().as_secs_f64() * 1e3;
         }
@@ -346,10 +633,12 @@ impl Scheduler {
             if self.active[i].done() {
                 let seq = self.active.remove(i);
                 kv.release(seq.slot);
+                self.counters.finished += 1;
                 report.finished.push(Completion {
                     id: seq.id,
                     prompt_len: seq.prompt.len(),
                     tokens: seq.out,
+                    status: CompletionStatus::Finished,
                 });
             } else {
                 i += 1;
@@ -361,8 +650,57 @@ impl Scheduler {
         report
     }
 
-    /// Drive until every queued/active request finished (or `max_steps`
-    /// elapsed). Returns all completions in finish order.
+    /// Evict expired queued requests and active sequences (step-count
+    /// and wall-clock deadlines), surfacing them in `report.finished`
+    /// with [`CompletionStatus::DeadlineExceeded`]. Wall time is read at
+    /// most once per step, and only when some request carries a
+    /// wall-clock deadline — step-deadline-only runs stay deterministic.
+    fn expire_deadlines(&mut self, kv: &mut KvPool, report: &mut StepReport) {
+        let any_wall = self.queue.iter().any(|q| q.req.deadline_at.is_some())
+            || self.active.iter().any(|s| s.deadline_at.is_some());
+        let now = if any_wall { Some(Instant::now()) } else { None };
+        let step = self.steps;
+        let expired = |dstep: Option<u64>, dat: Option<Instant>| {
+            dstep.is_some_and(|d| step >= d)
+                || matches!((dat, now), (Some(at), Some(n)) if n >= at)
+        };
+        let mut i = 0;
+        while i < self.queue.len() {
+            if expired(self.queue[i].deadline_step, self.queue[i].req.deadline_at) {
+                let q = self.queue.remove(i).unwrap();
+                self.counters.deadline_evicted += 1;
+                report.finished.push(Completion {
+                    id: q.req.id,
+                    prompt_len: q.req.prompt.len(),
+                    tokens: Vec::new(),
+                    status: CompletionStatus::DeadlineExceeded,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            if expired(self.active[i].deadline_step, self.active[i].deadline_at) {
+                let seq = self.active.remove(i);
+                kv.release(seq.slot);
+                self.counters.deadline_evicted += 1;
+                report.finished.push(Completion {
+                    id: seq.id,
+                    prompt_len: seq.prompt.len(),
+                    tokens: seq.out,
+                    status: CompletionStatus::DeadlineExceeded,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Drive until every queued/active request finished or `max_steps`
+    /// elapsed. Returns all completions in finish order; anything still
+    /// unfinished at the step cap is evicted (KV released) and surfaced
+    /// with [`CompletionStatus::Incomplete`] — no silent slot leak.
     pub fn run_until_idle(&mut self, max_steps: usize) -> Vec<Completion> {
         let mut out = Vec::new();
         let mut steps = 0;
@@ -370,12 +708,22 @@ impl Scheduler {
             out.extend(self.step().finished);
             steps += 1;
         }
+        if !self.is_idle() {
+            out.extend(self.abort_all(CompletionStatus::Incomplete));
+        }
         out
     }
 
     /// Release the KV pool back to the engine arena and return the
-    /// engine. Active/queued requests are dropped.
+    /// engine. Still-queued/active requests are evicted (their
+    /// completions dropped — call [`Scheduler::abort_all`] first to keep
+    /// them), then the zero-leak invariant is asserted: every lane and
+    /// page back in the free pool, pool counters balanced.
     pub fn shutdown(mut self) -> InferEngine {
+        let _ = self.abort_all(CompletionStatus::Incomplete);
+        if let Some(leak) = self.leak_report() {
+            panic!("KV/lane leak at scheduler shutdown: {leak}");
+        }
         if let Some(kv) = self.kv.take() {
             self.engine.release_kv(kv);
         }
@@ -399,7 +747,7 @@ mod tests {
     }
 
     fn req(id: u64, prompt: &[u32], max_new: usize) -> Request {
-        Request { id, prompt: prompt.to_vec(), max_new }
+        Request::new(id, prompt.to_vec(), max_new)
     }
 
     #[test]
@@ -552,6 +900,162 @@ mod tests {
         let done = sch.run_until_idle(50);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].tokens.len(), 2);
+    }
+
+    #[test]
+    fn cancel_frees_kv_immediately_and_returns_partial_output() {
+        let mut sch = Scheduler::new(engine(6), 2, 64, Sampling::Greedy, 0);
+        sch.submit(req(1, &[3, 5, 7], 8));
+        sch.step(); // admit + prefill
+        sch.step(); // at least one decoded token
+        assert_eq!(sch.n_active(), 1);
+        let before = sch.kv_stats();
+        assert!(before.free_pages < before.total_pages);
+        let c = sch.cancel(1).expect("in-flight request is cancellable");
+        assert_eq!(c.status, CompletionStatus::Cancelled);
+        assert!(!c.tokens.is_empty(), "partial output must be returned");
+        // KV back in the pool the moment cancel returns, not next step
+        let after = sch.kv_stats();
+        assert_eq!(after.free_pages, after.total_pages);
+        assert!(sch.is_idle());
+        assert!(sch.leak_report().is_none());
+        assert!(sch.cancel(1).is_none(), "double cancel is a no-op");
+        assert_eq!(sch.counters().cancelled, 1);
+    }
+
+    #[test]
+    fn cancel_of_queued_request_never_admits_it() {
+        let mut sch = Scheduler::new(engine(6), 1, 64, Sampling::Greedy, 0);
+        sch.submit(req(1, &[2, 4], 6));
+        sch.submit(req(2, &[1, 1], 2));
+        sch.step(); // only request 1 admitted (max_seqs = 1)
+        let c = sch.cancel(2).unwrap();
+        assert_eq!(c.status, CompletionStatus::Cancelled);
+        assert!(c.tokens.is_empty());
+        let done = sch.run_until_idle(100);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+    }
+
+    #[test]
+    fn step_deadline_evicts_mid_decode_and_frees_kv_same_step() {
+        let mut sch = Scheduler::new(engine(8), 2, 64, Sampling::Greedy, 0);
+        // needs 1 prefill + 8 decode steps but only 3 steps of budget
+        let mut r = req(7, &[1, 2, 3], 8);
+        r.deadline_steps = Some(3);
+        sch.submit(r);
+        let mut evicted = None;
+        for _ in 0..10 {
+            let rep = sch.step();
+            for c in rep.finished {
+                assert_eq!(c.status, CompletionStatus::DeadlineExceeded);
+                evicted = Some(c);
+            }
+            if evicted.is_some() {
+                break;
+            }
+        }
+        let c = evicted.expect("deadline must fire");
+        assert_eq!(c.id, 7);
+        assert!(!c.tokens.is_empty(), "was mid-decode, partial output kept");
+        assert!(c.tokens.len() < 8);
+        // the eviction step released KV before admission: pool is empty
+        let st = sch.kv_stats();
+        assert_eq!(st.free_pages, st.total_pages);
+        assert!(sch.is_idle());
+        assert_eq!(sch.counters().deadline_evicted, 1);
+    }
+
+    #[test]
+    fn expired_queued_request_is_shed_without_admission() {
+        let mut sch = Scheduler::new(engine(8), 1, 64, Sampling::Greedy, 0);
+        sch.submit(req(1, &[2, 4], 10));
+        let mut r = req(2, &[5, 6], 2);
+        r.deadline_steps = Some(1); // expires while stuck behind request 1
+        sch.submit(r);
+        let done = sch.run_until_idle(200);
+        let c2 = done.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(c2.status, CompletionStatus::DeadlineExceeded);
+        assert!(c2.tokens.is_empty(), "never admitted, no output");
+        let c1 = done.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(c1.status, CompletionStatus::Finished);
+        assert_eq!(c1.tokens.len(), 10);
+    }
+
+    #[test]
+    fn try_submit_sheds_when_queue_full_and_no_capacity() {
+        let mut sch = Scheduler::new(engine(9), 1, 64, Sampling::Greedy, 0);
+        sch.set_max_pending(1);
+        sch.try_submit(req(1, &[1, 2], 12)).unwrap();
+        sch.step(); // request 1 occupies the single lane
+        sch.try_submit(req(2, &[3, 4], 2)).unwrap(); // queue 0 -> 1
+        let err = sch.try_submit(req(3, &[5, 6], 2)).unwrap_err();
+        assert!(err.retry_after_steps >= 1);
+        assert_eq!(sch.pending(), 1, "rejected request must not queue");
+        assert_eq!(sch.counters().shed, 1);
+        let done = sch.run_until_idle(300);
+        assert_eq!(done.len(), 2, "accepted requests unaffected");
+        // idle again: queue empty, lane free -> accepted immediately
+        sch.try_submit(req(4, &[7, 8], 1)).unwrap();
+        assert_eq!(sch.run_until_idle(100).len(), 1);
+    }
+
+    #[test]
+    fn run_until_idle_step_cap_surfaces_incomplete_and_releases_kv() {
+        let mut sch = Scheduler::new(engine(10), 2, 64, Sampling::Greedy, 0);
+        sch.submit(req(1, &[1, 2, 3], 12));
+        sch.submit(req(2, &[4, 5], 12));
+        let done = sch.run_until_idle(3); // nowhere near enough steps
+        assert_eq!(done.len(), 2, "capped run must surface every request");
+        assert!(done.iter().all(|c| c.status == CompletionStatus::Incomplete));
+        assert!(sch.is_idle());
+        assert!(sch.leak_report().is_none(), "evicted KV must be back");
+        let st = sch.kv_stats();
+        assert_eq!(st.free_pages, st.total_pages);
+        sch.shutdown(); // zero-leak assertion inside must hold
+    }
+
+    #[test]
+    fn abort_all_drains_queue_and_active_with_status() {
+        let mut sch = Scheduler::new(engine(12), 1, 64, Sampling::Greedy, 0);
+        sch.submit(req(1, &[1, 2], 8));
+        sch.submit(req(2, &[3], 4));
+        sch.step();
+        let mut aborted = sch.abort_all(CompletionStatus::Incomplete);
+        aborted.sort_by_key(|c| c.id);
+        assert_eq!(aborted.len(), 2);
+        assert!(aborted.iter().all(|c| c.status == CompletionStatus::Incomplete));
+        assert!(sch.is_idle());
+        assert!(sch.leak_report().is_none());
+        assert_eq!(sch.counters().incomplete, 2);
+    }
+
+    #[test]
+    fn survivors_bitwise_identical_under_cancel_and_deadline_churn() {
+        // undisturbed run
+        let mut a = Scheduler::new(engine(13), 2, 1000, Sampling::Greedy, 9);
+        for id in 0..4u64 {
+            a.submit(req(id, &[(id as u32) + 1, 2, 3], 5));
+        }
+        let clean = a.run_until_idle(300);
+        // churned run: same seeds, requests 1 and 2 disturbed
+        let mut b = Scheduler::new(engine(13), 2, 1000, Sampling::Greedy, 9);
+        for id in 0..4u64 {
+            let mut r = req(id, &[(id as u32) + 1, 2, 3], 5);
+            if id == 2 {
+                r.deadline_steps = Some(2);
+            }
+            b.submit(r);
+        }
+        b.step();
+        b.cancel(1);
+        let churned = b.run_until_idle(300);
+        for c in churned.iter().filter(|c| c.status == CompletionStatus::Finished) {
+            let clean_c = clean.iter().find(|x| x.id == c.id).unwrap();
+            assert_eq!(c.tokens, clean_c.tokens,
+                       "survivor {} diverged under churn", c.id);
+        }
+        assert!(churned.iter().any(|c| c.status == CompletionStatus::Finished));
     }
 
     #[test]

@@ -1,0 +1,951 @@
+//! Hardened socket front-end over the continuous-batching scheduler.
+//!
+//! A dependency-free server (std::net TCP, or a unix-domain socket for
+//! `listen = "unix:/path"`) speaking the newline-delimited JSON frames
+//! of [`protocol`](super::protocol). The design is one engine loop that
+//! OWNS the scheduler and every connection's writer:
+//!
+//! ```text
+//!   acceptor thread ──► reader thread per connection
+//!          │                    │  parsed ClientFrames / disconnects
+//!          └────────── mpsc ────┴──► engine loop (this thread)
+//!                                      ├─ admission: try_submit → queued | overloaded
+//!                                      ├─ Scheduler::step → stream token frames
+//!                                      └─ done / cancel / drain bookkeeping
+//! ```
+//!
+//! Because the engine loop alone touches the scheduler and the writers,
+//! every robustness decision is serialized and deterministic with
+//! respect to frame arrival order:
+//!
+//! * **deadlines** — each request carries a wall-clock deadline
+//!   (`deadline_ms` in the frame, else the server's
+//!   `request_deadline_ms` default); the scheduler evicts at step
+//!   granularity and the pages back the same step's admissions. The
+//!   client still gets its partial tokens in the `done` frame.
+//! * **cancellation** — a reader hitting EOF (client gone) or a writer
+//!   hitting a write error/timeout (client stalled — the slow-reader
+//!   guard: writers carry a write timeout so one stuck client cannot
+//!   wedge the engine loop) triggers [`Scheduler::cancel`], releasing
+//!   the lane and KV pages immediately.
+//! * **load-shedding** — [`Scheduler::try_submit`] bounds the pending
+//!   queue at `max_pending`; refusals become an `overloaded` frame
+//!   whose `retry_after_ms` converts the scheduler's step hint through
+//!   an EWMA of observed step time.
+//! * **graceful drain** — SIGTERM/SIGINT (see
+//!   [`install_signal_handlers`]), a `shutdown` frame, or
+//!   [`ServerHandle::stop`] flips drain mode: no new admissions,
+//!   in-flight requests finish up to `drain_timeout_ms`, stragglers are
+//!   evicted as `incomplete` (partial tokens delivered), and the server
+//!   refuses to exit cleanly unless [`Scheduler::leak_report`] comes
+//!   back empty.
+//!
+//! [`run_smoke`] is the self-contained proof `scripts/verify.sh` runs:
+//! an in-process server on a unix socket driven through mid-stream
+//! disconnect, overload, deadline eviction, and drain, asserting every
+//! counter and the zero-leak exit.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ServeConfig;
+use crate::model::ModelDims;
+
+use super::engine::{synthetic_checkpoint, InferEngine, InferModel};
+use super::generate::Sampling;
+use super::protocol::{ClientFrame, GenRequest, ServerFrame};
+use super::scheduler::{
+    Completion, CompletionStatus, Request, SchedCounters, Scheduler, StepReport,
+};
+
+/// Write timeout on every per-connection writer: a reader this far
+/// behind is treated as gone (its request is cancelled) rather than
+/// allowed to block the engine loop.
+const WRITE_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// How long the idle engine loop sleeps in `recv_timeout` between
+/// shutdown-flag polls.
+const IDLE_POLL: Duration = Duration::from_millis(20);
+
+// ---------------------------------------------------------------------------
+// transport: TCP or unix-domain socket behind one enum
+// ---------------------------------------------------------------------------
+
+/// One accepted connection (or a client's view of one).
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn try_clone(&self) -> std::io::Result<Conn> {
+        Ok(match self {
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Conn::Unix(s) => Conn::Unix(s.try_clone()?),
+        })
+    }
+
+    fn set_write_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_write_timeout(d),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    /// Close both directions (unblocks the connection's reader thread).
+    fn close(&self) {
+        let _ = match self {
+            Conn::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    /// Bind `spec` — `"host:port"` for TCP (port 0 picks a free port) or
+    /// `"unix:/path"` for a unix-domain socket (a stale socket file is
+    /// removed first). Returns the listener and the RESOLVED spec (the
+    /// actual TCP port; the unix spec verbatim).
+    fn bind(spec: &str) -> Result<(Listener, String)> {
+        if let Some(path) = spec.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding unix socket {path}"))?;
+                return Ok((Listener::Unix(l), spec.to_string()));
+            }
+            #[cfg(not(unix))]
+            {
+                bail!("unix sockets are not supported on this platform: {path}");
+            }
+        }
+        let l = TcpListener::bind(spec).with_context(|| format!("binding {spec}"))?;
+        let actual = l.local_addr()?.to_string();
+        Ok((Listener::Tcp(l), actual))
+    }
+
+    fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+        }
+    }
+}
+
+/// Connect-and-drop against `spec` to unblock a listener waiting in
+/// `accept` (the teardown path's wakeup).
+fn wake(spec: &str) {
+    if let Some(path) = spec.strip_prefix("unix:") {
+        #[cfg(unix)]
+        let _ = UnixStream::connect(path);
+        #[cfg(not(unix))]
+        let _ = path;
+    } else {
+        let _ = TcpStream::connect(spec);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// signal handling (CLI path; no-op off unix)
+// ---------------------------------------------------------------------------
+
+static SIGNAL_SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Route SIGTERM/SIGINT into the server's drain path. Installed by the
+/// `serve` subcommand; in-process servers use [`ServerHandle::stop`] /
+/// the shared shutdown flag instead.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNAL_SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal);
+        signal(SIGINT, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+// ---------------------------------------------------------------------------
+// acceptor + per-connection readers
+// ---------------------------------------------------------------------------
+
+enum Event {
+    /// a connection was accepted; the engine loop owns its writer half
+    Opened { conn: u64, writer: Conn },
+    /// one parsed frame off a connection
+    Frame { conn: u64, frame: ClientFrame },
+    /// a line that failed to parse (echoed back as an `error` frame)
+    BadFrame { conn: u64, error: String },
+    /// reader hit EOF or a read error — the client is gone
+    Closed { conn: u64 },
+}
+
+fn acceptor_loop(listener: Listener, tx: Sender<Event>, stop: Arc<AtomicBool>) {
+    let mut next_conn = 1u64;
+    while !stop.load(Ordering::SeqCst) {
+        let conn = match listener.accept() {
+            Ok(c) => c,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            break; // the teardown wakeup connection
+        }
+        let id = next_conn;
+        next_conn += 1;
+        let Ok(writer) = conn.try_clone() else { continue };
+        let _ = writer.set_write_timeout(Some(WRITE_TIMEOUT));
+        if tx.send(Event::Opened { conn: id, writer }).is_err() {
+            break;
+        }
+        let tx_reader = tx.clone();
+        std::thread::spawn(move || reader_loop(conn, id, tx_reader));
+    }
+}
+
+fn reader_loop(conn: Conn, id: u64, tx: Sender<Event>) {
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let ev = match ClientFrame::parse(&line) {
+                    Ok(frame) => Event::Frame { conn: id, frame },
+                    Err(e) => Event::BadFrame { conn: id, error: format!("{e:#}") },
+                };
+                if tx.send(ev).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+    let _ = tx.send(Event::Closed { conn: id });
+}
+
+// ---------------------------------------------------------------------------
+// the engine loop
+// ---------------------------------------------------------------------------
+
+struct ConnState {
+    writer: Conn,
+    /// in-flight request ids owned by this connection
+    reqs: Vec<u64>,
+}
+
+struct Route {
+    conn: u64,
+    /// tokens already streamed (the next `token` frame's index)
+    emitted: usize,
+}
+
+/// What a server run did (returned when the drain completes).
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    /// resolved listen spec (actual TCP port / unix path)
+    pub listen: String,
+    pub connections: u64,
+    pub steps: u64,
+    pub counters: SchedCounters,
+    /// wall time from drain start to the zero-leak exit
+    pub drain_ms: f64,
+}
+
+impl ServerReport {
+    pub fn render(&self) -> String {
+        format!(
+            "serve {} | {} conns, {} steps | finished {} cancelled {} \
+             deadline {} incomplete {} shed {} | drain {:.0} ms",
+            self.listen, self.connections, self.steps, self.counters.finished,
+            self.counters.cancelled, self.counters.deadline_evicted,
+            self.counters.incomplete, self.counters.shed, self.drain_ms
+        )
+    }
+}
+
+struct FrontEnd {
+    sch: Scheduler,
+    conns: BTreeMap<u64, ConnState>,
+    routes: BTreeMap<u64, Route>,
+    next_req: u64,
+    default_max_new: usize,
+    default_deadline_ms: u64,
+    drain_timeout_ms: u64,
+    draining: bool,
+    drain_started: Option<Instant>,
+    drain_deadline: Option<Instant>,
+    /// EWMA of observed step wall time — converts the scheduler's
+    /// retry-after step hint into milliseconds
+    step_ms: f64,
+    connections: u64,
+}
+
+impl FrontEnd {
+    fn handle_event(&mut self, ev: Event) {
+        match ev {
+            Event::Opened { conn, writer } => {
+                self.connections += 1;
+                self.conns.insert(conn, ConnState { writer, reqs: Vec::new() });
+            }
+            Event::Closed { conn } => self.drop_conn(conn),
+            Event::BadFrame { conn, error } => {
+                self.send(conn, &ServerFrame::Error { message: error });
+                self.drop_conn(conn);
+            }
+            Event::Frame { conn, frame } => self.handle_frame(conn, frame),
+        }
+    }
+
+    fn handle_frame(&mut self, conn: u64, frame: ClientFrame) {
+        match frame {
+            ClientFrame::Generate(g) => self.handle_generate(conn, g),
+            ClientFrame::Stats => {
+                let f = ServerFrame::Stats {
+                    active: self.sch.n_active(),
+                    pending: self.sch.pending(),
+                    draining: self.draining,
+                    steps: self.sch.steps,
+                    counters: self.sch.counters(),
+                };
+                self.send(conn, &f);
+            }
+            ClientFrame::Health => {
+                self.send(conn, &ServerFrame::Health { draining: self.draining });
+            }
+            ClientFrame::Shutdown => {
+                self.begin_drain();
+                self.send(conn, &ServerFrame::Health { draining: true });
+            }
+        }
+    }
+
+    fn handle_generate(&mut self, conn: u64, g: GenRequest) {
+        if self.draining {
+            self.send(
+                conn,
+                &ServerFrame::Error { message: "server is draining".to_string() },
+            );
+            self.drop_conn(conn);
+            return;
+        }
+        let vocab = self.sch.engine.model.dims.vocab;
+        if let Some(&t) = g.prompt.iter().find(|&&t| t as usize >= vocab) {
+            self.send(
+                conn,
+                &ServerFrame::Error {
+                    message: format!("prompt token {t} out of vocab {vocab}"),
+                },
+            );
+            self.drop_conn(conn);
+            return;
+        }
+        let id = self.next_req;
+        self.next_req += 1;
+        let deadline_ms = g.deadline_ms.or(if self.default_deadline_ms > 0 {
+            Some(self.default_deadline_ms)
+        } else {
+            None
+        });
+        let req = Request {
+            id,
+            prompt: g.prompt,
+            max_new: g.max_new.unwrap_or(self.default_max_new),
+            deadline_steps: None,
+            deadline_at: deadline_ms
+                .map(|ms| Instant::now() + Duration::from_millis(ms)),
+        };
+        match self.sch.try_submit(req) {
+            Ok(()) => {
+                self.routes.insert(id, Route { conn, emitted: 0 });
+                if let Some(state) = self.conns.get_mut(&conn) {
+                    state.reqs.push(id);
+                }
+                self.send(conn, &ServerFrame::Queued { id });
+            }
+            Err(rej) => {
+                let ms = (rej.retry_after_steps as f64 * self.step_ms).ceil();
+                self.send(
+                    conn,
+                    &ServerFrame::Overloaded { retry_after_ms: (ms as u64).max(1) },
+                );
+            }
+        }
+    }
+
+    /// Write one frame; a failed or timed-out write (slow/vanished
+    /// reader) drops the connection and cancels its requests.
+    fn send(&mut self, conn: u64, frame: &ServerFrame) {
+        let ok = match self.conns.get_mut(&conn) {
+            Some(state) => state.writer.write_all(frame.to_line().as_bytes()).is_ok(),
+            None => return,
+        };
+        if !ok {
+            self.drop_conn(conn);
+        }
+    }
+
+    /// Forget a connection and cancel every request it still owns —
+    /// lanes and KV pages come back immediately.
+    fn drop_conn(&mut self, conn: u64) {
+        let Some(state) = self.conns.remove(&conn) else { return };
+        state.writer.close();
+        for id in state.reqs {
+            if self.routes.remove(&id).is_some() {
+                // partial output has no reader left; drop it
+                let _ = self.sch.cancel(id);
+            }
+        }
+    }
+
+    /// Stream one step's tokens and terminal frames to their clients.
+    fn dispatch(&mut self, rep: StepReport) {
+        for (id, tok) in rep.emitted {
+            let Some(route) = self.routes.get_mut(&id) else { continue };
+            let index = route.emitted;
+            route.emitted += 1;
+            let conn = route.conn;
+            self.send(conn, &ServerFrame::Token { id, index, token: tok });
+        }
+        for c in rep.finished {
+            self.finish(c);
+        }
+    }
+
+    fn finish(&mut self, c: Completion) {
+        let Some(route) = self.routes.remove(&c.id) else { return };
+        if let Some(state) = self.conns.get_mut(&route.conn) {
+            state.reqs.retain(|&id| id != c.id);
+        }
+        let f = ServerFrame::Done {
+            id: c.id,
+            status: c.status,
+            prompt_len: c.prompt_len,
+            tokens: c.tokens,
+        };
+        self.send(route.conn, &f);
+    }
+
+    fn begin_drain(&mut self) {
+        if self.draining {
+            return;
+        }
+        self.draining = true;
+        let now = Instant::now();
+        self.drain_started = Some(now);
+        self.drain_deadline =
+            Some(now + Duration::from_millis(self.drain_timeout_ms));
+    }
+}
+
+/// Run the server until a drain completes (SIGTERM/SIGINT after
+/// [`install_signal_handlers`], a `shutdown` frame, or `shutdown` flag
+/// set externally — [`ServerHandle`] wraps the latter). Errors if the
+/// post-drain leak check finds a lane or KV page unaccounted for.
+pub fn run_server(
+    engine: InferEngine,
+    cfg: &ServeConfig,
+    shutdown: Arc<AtomicBool>,
+) -> Result<ServerReport> {
+    run_server_inner(engine, cfg, shutdown, None)
+}
+
+fn run_server_inner(
+    engine: InferEngine,
+    cfg: &ServeConfig,
+    shutdown: Arc<AtomicBool>,
+    ready: Option<Sender<String>>,
+) -> Result<ServerReport> {
+    cfg.validate()?;
+    let (listener, resolved) = Listener::bind(&cfg.listen)?;
+    if let Some(tx) = ready {
+        let _ = tx.send(resolved.clone());
+    }
+
+    let mut sch = Scheduler::with_kv(
+        engine, cfg.max_seqs, cfg.max_batch_tokens, cfg.prefill_chunk, cfg.kv(),
+        cfg.kv_pages, Sampling::from_params(cfg.temperature, cfg.top_k), cfg.seed,
+    );
+    sch.set_max_pending(cfg.max_pending);
+
+    let (tx, rx): (Sender<Event>, Receiver<Event>) = mpsc::channel();
+    let stop = Arc::new(AtomicBool::new(false));
+    let acceptor = {
+        let stop = stop.clone();
+        std::thread::spawn(move || acceptor_loop(listener, tx, stop))
+    };
+
+    let mut fe = FrontEnd {
+        sch,
+        conns: BTreeMap::new(),
+        routes: BTreeMap::new(),
+        next_req: 1,
+        default_max_new: cfg.max_new_tokens,
+        default_deadline_ms: cfg.request_deadline_ms,
+        drain_timeout_ms: cfg.drain_timeout_ms,
+        draining: false,
+        drain_started: None,
+        drain_deadline: None,
+        step_ms: 5.0,
+        connections: 0,
+    };
+
+    loop {
+        // (1) apply every queued front-end event
+        loop {
+            match rx.try_recv() {
+                Ok(ev) => fe.handle_event(ev),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    fe.begin_drain();
+                    break;
+                }
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) || SIGNAL_SHUTDOWN.load(Ordering::SeqCst)
+        {
+            fe.begin_drain();
+        }
+        // (2) drain exit: in-flight work done, or the timeout expired
+        if fe.draining
+            && (fe.sch.is_idle()
+                || fe.drain_deadline.is_some_and(|d| Instant::now() >= d))
+        {
+            break;
+        }
+        // (3) idle: block briefly for the next event
+        if fe.sch.is_idle() {
+            match rx.recv_timeout(IDLE_POLL) {
+                Ok(ev) => fe.handle_event(ev),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => fe.begin_drain(),
+            }
+            continue;
+        }
+        // (4) one scheduler step; stream what it produced
+        let t = Instant::now();
+        let rep = fe.sch.step();
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        fe.step_ms = 0.8 * fe.step_ms + 0.2 * ms;
+        fe.dispatch(rep);
+    }
+
+    // teardown: stop accepting, evict stragglers (delivering their
+    // partial output), assert zero leaks, close every connection
+    stop.store(true, Ordering::SeqCst);
+    wake(&resolved);
+    let _ = acceptor.join();
+    let drain_started = fe.drain_started.unwrap_or_else(Instant::now);
+    let leftovers = fe.sch.abort_all(CompletionStatus::Incomplete);
+    for c in leftovers {
+        fe.finish(c);
+    }
+    let drain_ms = drain_started.elapsed().as_secs_f64() * 1e3;
+    if let Some(leak) = fe.sch.leak_report() {
+        bail!("KV/lane leak after drain: {leak}");
+    }
+    let report = ServerReport {
+        listen: resolved.clone(),
+        connections: fe.connections,
+        steps: fe.sch.steps,
+        counters: fe.sch.counters(),
+        drain_ms,
+    };
+    for (_, state) in fe.conns.iter() {
+        state.writer.close();
+    }
+    fe.sch.shutdown();
+    if let Some(path) = cfg.listen.strip_prefix("unix:") {
+        let _ = std::fs::remove_file(path);
+    }
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// in-process handle + minimal client (tests, smoke, CLI)
+// ---------------------------------------------------------------------------
+
+/// A server running on its own thread. `addr` is the RESOLVED listen
+/// spec (actual port for `host:0`); [`ServerHandle::stop`] triggers the
+/// drain and returns the run's [`ServerReport`].
+pub struct ServerHandle {
+    pub addr: String,
+    shutdown: Arc<AtomicBool>,
+    thread: JoinHandle<Result<ServerReport>>,
+}
+
+impl ServerHandle {
+    /// Bind and serve on a background thread; returns once the listener
+    /// is accepting.
+    pub fn spawn(engine: InferEngine, cfg: ServeConfig) -> Result<ServerHandle> {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let thread = {
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || {
+                run_server_inner(engine, &cfg, shutdown, Some(ready_tx))
+            })
+        };
+        match ready_rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(addr) => Ok(ServerHandle { addr, shutdown, thread }),
+            Err(_) => match thread.join() {
+                Ok(Ok(_)) => bail!("server exited before signalling readiness"),
+                Ok(Err(e)) => Err(e.context("server failed to start")),
+                Err(_) => bail!("server thread panicked during startup"),
+            },
+        }
+    }
+
+    /// Begin a graceful drain and wait for the zero-leak exit.
+    pub fn stop(self) -> Result<ServerReport> {
+        self.shutdown.store(true, Ordering::SeqCst);
+        wake(&self.addr);
+        match self.thread.join() {
+            Ok(r) => r,
+            Err(_) => bail!("server thread panicked"),
+        }
+    }
+}
+
+/// Minimal blocking client over the wire protocol (smoke harness,
+/// integration tests, ad-hoc debugging). Reads time out after 10 s so a
+/// wedged server fails loudly instead of hanging the harness.
+pub struct Client {
+    writer: Conn,
+    reader: BufReader<Conn>,
+}
+
+impl Client {
+    pub fn connect(spec: &str) -> Result<Client> {
+        let conn = Self::open(spec)?;
+        conn.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let writer = conn.try_clone()?;
+        Ok(Client { writer, reader: BufReader::new(conn) })
+    }
+
+    fn open(spec: &str) -> Result<Conn> {
+        if let Some(path) = spec.strip_prefix("unix:") {
+            #[cfg(unix)]
+            return Ok(Conn::Unix(
+                UnixStream::connect(path)
+                    .with_context(|| format!("connecting to {spec}"))?,
+            ));
+            #[cfg(not(unix))]
+            bail!("unix sockets are not supported on this platform: {path}");
+        }
+        Ok(Conn::Tcp(
+            TcpStream::connect(spec).with_context(|| format!("connecting to {spec}"))?,
+        ))
+    }
+
+    pub fn send(&mut self, frame: &ClientFrame) -> Result<()> {
+        self.writer
+            .write_all(frame.to_line().as_bytes())
+            .context("writing frame")
+    }
+
+    /// Next server frame; errors on EOF (use [`Client::recv_opt`] when
+    /// a close is expected).
+    pub fn recv(&mut self) -> Result<ServerFrame> {
+        self.recv_opt()?.context("server closed the connection")
+    }
+
+    /// Next server frame, or None on a clean EOF.
+    pub fn recv_opt(&mut self) -> Result<Option<ServerFrame>> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match self.reader.read_line(&mut line) {
+                Ok(0) => return Ok(None),
+                Ok(_) if line.trim().is_empty() => continue,
+                Ok(_) => return ServerFrame::parse(&line).map(Some),
+                Err(e) => return Err(e).context("reading frame"),
+            }
+        }
+    }
+
+    /// Stream frames until this request's `done`, returning
+    /// (status, tokens). Intermediate `token` frames are checked for
+    /// contiguous indices.
+    pub fn recv_done(&mut self, id: u64) -> Result<(CompletionStatus, Vec<u32>)> {
+        let mut streamed = Vec::new();
+        loop {
+            match self.recv()? {
+                ServerFrame::Token { id: tid, index, token } if tid == id => {
+                    if index != streamed.len() {
+                        bail!("token index {index} != expected {}", streamed.len());
+                    }
+                    streamed.push(token);
+                }
+                ServerFrame::Done { id: did, status, tokens, .. } if did == id => {
+                    if !tokens.starts_with(&streamed) {
+                        bail!("done frame tokens diverge from the streamed prefix");
+                    }
+                    return Ok((status, tokens));
+                }
+                f => bail!("unexpected frame while waiting on request {id}: {f:?}"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the verify.sh smoke: one server, every fault path, zero leaks
+// ---------------------------------------------------------------------------
+
+/// Default smoke listen spec: a unix socket in the temp dir (TCP
+/// loopback where unix sockets don't exist).
+fn default_smoke_listen() -> String {
+    if cfg!(unix) {
+        format!(
+            "unix:{}",
+            std::env::temp_dir()
+                .join(format!("sparse24_smoke_{}.sock", std::process::id()))
+                .display()
+        )
+    } else {
+        "127.0.0.1:0".to_string()
+    }
+}
+
+/// In-process end-to-end exercise of every front-end pillar against a
+/// small synthetic model: mid-stream client disconnect → immediate
+/// cancel, bounded queue → explicit overload reject, wall-clock deadline
+/// → eviction with partial output, `shutdown` frame → graceful drain
+/// with the zero-leak assertion. Returns a summary line; any violated
+/// invariant is an error. `listen` overrides the default unix-socket
+/// spec (`verify.sh` runs this via `sparse24 serve --smoke`).
+pub fn run_smoke(listen: Option<&str>) -> Result<String> {
+    // n_ctx is deliberately large: request A below decodes up to ~300
+    // tokens, so the few client round-trips between its first token and
+    // its mid-stream disconnect are orders of magnitude shorter than its
+    // natural completion — the cancel provably lands mid-decode.
+    let dims = ModelDims {
+        vocab: 128, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 64, n_ctx: 320,
+    };
+    let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 7))?;
+    let cfg = ServeConfig {
+        listen: listen.map(str::to_string).unwrap_or_else(default_smoke_listen),
+        max_seqs: 1,
+        max_pending: 1,
+        max_batch_tokens: 4096,
+        max_new_tokens: 4,
+        temperature: 0.0,
+        request_deadline_ms: 0,
+        drain_timeout_ms: 5_000,
+        ..ServeConfig::default()
+    };
+    let handle = ServerHandle::spawn(InferEngine::new(model), cfg)?;
+    let addr = handle.addr.clone();
+
+    // (a) long-running request A; wait for its first streamed token so
+    // it provably occupies the single lane
+    let mut a = Client::connect(&addr)?;
+    a.send(&ClientFrame::Generate(GenRequest {
+        prompt: vec![1, 2, 3],
+        max_new: Some(300),
+        deadline_ms: None,
+    }))?;
+    let ServerFrame::Queued { id: _a_id } = a.recv()? else {
+        bail!("A: expected queued frame");
+    };
+    match a.recv()? {
+        ServerFrame::Token { index: 0, .. } => {}
+        f => bail!("A: expected first token, got {f:?}"),
+    }
+
+    // (b) B takes the single waiting-room slot
+    let mut b = Client::connect(&addr)?;
+    b.send(&ClientFrame::Generate(GenRequest {
+        prompt: vec![4, 5],
+        max_new: Some(4),
+        deadline_ms: None,
+    }))?;
+    let ServerFrame::Queued { id: b_id } = b.recv()? else {
+        bail!("B: expected queued frame");
+    };
+
+    // (c) C must be load-shed with a retry hint
+    let mut c = Client::connect(&addr)?;
+    c.send(&ClientFrame::Generate(GenRequest {
+        prompt: vec![6],
+        max_new: Some(2),
+        deadline_ms: None,
+    }))?;
+    match c.recv()? {
+        ServerFrame::Overloaded { retry_after_ms } => {
+            if retry_after_ms == 0 {
+                bail!("overloaded frame without a retry hint");
+            }
+        }
+        f => bail!("C: expected overloaded, got {f:?}"),
+    }
+    drop(c);
+
+    // (d) disconnect A mid-stream: its lane frees, B gets admitted and
+    // runs to completion
+    drop(a);
+    let (b_status, b_tokens) = b.recv_done(b_id)?;
+    if b_status != CompletionStatus::Finished {
+        bail!("B: expected finished, got {b_status:?}");
+    }
+    if b_tokens.len() != 4 {
+        bail!("B: expected 4 tokens, got {}", b_tokens.len());
+    }
+
+    // (e) deadline-doomed request: evicted mid-decode (or in queue) with
+    // status deadline_exceeded
+    let mut d = Client::connect(&addr)?;
+    d.send(&ClientFrame::Generate(GenRequest {
+        prompt: vec![7, 8],
+        max_new: Some(400),
+        deadline_ms: Some(1),
+    }))?;
+    let ServerFrame::Queued { id: d_id } = d.recv()? else {
+        bail!("D: expected queued frame");
+    };
+    let (d_status, _) = d.recv_done(d_id)?;
+    if d_status != CompletionStatus::DeadlineExceeded {
+        bail!("D: expected deadline_exceeded, got {d_status:?}");
+    }
+
+    // (f) counters reflect every pillar, then a graceful drain
+    let mut e = Client::connect(&addr)?;
+    e.send(&ClientFrame::Stats)?;
+    let ServerFrame::Stats { counters, .. } = e.recv()? else {
+        bail!("expected stats frame");
+    };
+    if counters.finished < 1
+        || counters.cancelled < 1
+        || counters.shed < 1
+        || counters.deadline_evicted < 1
+    {
+        bail!("smoke counters incomplete: {counters:?}");
+    }
+    e.send(&ClientFrame::Shutdown)?;
+    match e.recv()? {
+        ServerFrame::Health { draining: true } => {}
+        f => bail!("expected draining ack, got {f:?}"),
+    }
+
+    // stop() surfaces the post-drain leak check; a leak is an Err here
+    let report = handle.stop()?;
+    if report.counters.cancelled < 1
+        || report.counters.shed < 1
+        || report.counters.deadline_evicted < 1
+        || report.counters.finished < 1
+    {
+        bail!("final counters incomplete: {:?}", report.counters);
+    }
+    Ok(format!("serve smoke OK: {}", report.render()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full smoke over TCP loopback (the unix-socket flavor runs in
+    /// `verify.sh` via `sparse24 serve --smoke`).
+    #[test]
+    fn smoke_over_tcp_loopback() {
+        let summary = run_smoke(Some("127.0.0.1:0")).unwrap();
+        assert!(summary.contains("serve smoke OK"), "{summary}");
+    }
+
+    #[test]
+    fn listener_resolves_auto_port() {
+        let (l, addr) = Listener::bind("127.0.0.1:0").unwrap();
+        assert!(!addr.ends_with(":0"), "auto port must be resolved: {addr}");
+        drop(l);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_listener_binds_and_cleans_stale_socket() {
+        let path = std::env::temp_dir().join(format!(
+            "sparse24_unix_bind_{}.sock",
+            std::process::id()
+        ));
+        let spec = format!("unix:{}", path.display());
+        let (l1, addr) = Listener::bind(&spec).unwrap();
+        assert_eq!(addr, spec);
+        drop(l1);
+        // stale socket file from the first bind must not block a rebind
+        let (_l2, _) = Listener::bind(&spec).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -229,7 +229,11 @@ pub fn kernel_bench_regressions(
 ///   on max_seqs / max_batch_tokens / prefill_chunk / threads;
 /// * `kv_paging` — mean batch occupancy of the mixed long/short KV
 ///   scenario, matched on layout / max_seqs / kv_page (a drop means
-///   page-level admission stopped filling the batch).
+///   page-level admission stopped filling the batch);
+/// * `serve_faults` — goodput (finished tokens per second) of the
+///   deterministic fault storm, matched on max_seqs / max_pending /
+///   threads (a drop means the robustness machinery — cancel, deadline
+///   eviction, load-shedding, drain — started costing throughput).
 ///
 /// Warn-only analogue of [`kernel_bench_regressions`] for the serving
 /// trajectory; a missing file or missing `.prev` yields no warnings.
@@ -270,6 +274,23 @@ pub fn serve_bench_regressions(
         };
         warnings.extend(metric_regressions(
             cur, old, &rec_key, "mean_occupancy", threshold, section, "occ",
+        ));
+    }
+    let section = "serve_faults";
+    if let (Some(Json::Arr(cur)), Some(Json::Arr(old))) =
+        (j.opt(section), j.opt(&format!("{section}.prev")))
+    {
+        let rec_key = |r: &Json| -> Result<String> {
+            Ok(format!(
+                "max_seqs={} pending={} t{}",
+                r.get("max_seqs")?.as_usize()?,
+                r.get("max_pending")?.as_usize()?,
+                r.get("threads")?.as_usize()?,
+            ))
+        };
+        warnings.extend(metric_regressions(
+            cur, old, &rec_key, "goodput_tokens_per_s", threshold, section,
+            "tok/s",
         ));
     }
     Ok(warnings)
@@ -480,6 +501,25 @@ mod tests {
         let w = serve_bench_regressions(&path, 0.15).unwrap();
         assert_eq!(w.len(), 1, "{w:?}");
         assert!(w[0].contains("paged"), "{}", w[0]);
+        // settle kv_paging (prev == cur) so it stops warning
+        write_json_section_at(&path, "kv_paging", kv_entry(4.0)).unwrap();
+        assert!(serve_bench_regressions(&path, 0.15).unwrap().is_empty());
+        // serve_faults goodput is tracked too, keyed by the queue bound
+        let fault_entry = |goodput: f64| {
+            Json::Arr(vec![obj(vec![
+                ("max_seqs", num(4.0)),
+                ("max_pending", num(4.0)),
+                ("threads", num(2.0)),
+                ("shed_rate", num(0.3)),
+                ("goodput_tokens_per_s", num(goodput)),
+            ])])
+        };
+        write_json_section_at(&path, "serve_faults", fault_entry(200.0)).unwrap();
+        assert!(serve_bench_regressions(&path, 0.15).unwrap().is_empty());
+        write_json_section_at(&path, "serve_faults", fault_entry(100.0)).unwrap();
+        let w = serve_bench_regressions(&path, 0.15).unwrap();
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("pending=4"), "{}", w[0]);
         // missing file: no warnings
         assert!(serve_bench_regressions(&dir.join("nope.json"), 0.15)
             .unwrap()

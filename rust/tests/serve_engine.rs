@@ -112,11 +112,11 @@ fn scheduler_all_finish_and_greedy_outputs_are_interleaving_invariant() {
     let requests: Vec<Request> = (0..n_req)
         .map(|id| {
             let len = 1 + rng.below(6);
-            Request {
+            Request::new(
                 id,
-                prompt: (0..len).map(|_| rng.below(dims.vocab) as u32).collect(),
-                max_new: 1 + rng.below(5),
-            }
+                (0..len).map(|_| rng.below(dims.vocab) as u32).collect(),
+                1 + rng.below(5),
+            )
         })
         .collect();
 
@@ -184,11 +184,11 @@ fn prop_scheduler_step_budget_and_conservation_under_random_load() {
         for id in 0..n_req as u64 {
             let len = 1 + rng.below(10);
             prompt_total += len;
-            sch.submit(Request {
+            sch.submit(Request::new(
                 id,
-                prompt: (0..len).map(|_| rng.below(dims.vocab) as u32).collect(),
-                max_new: 1 + rng.below(4),
-            });
+                (0..len).map(|_| rng.below(dims.vocab) as u32).collect(),
+                1 + rng.below(4),
+            ));
         }
         let mut prefilled_total = 0usize;
         let mut finished = 0usize;
@@ -222,7 +222,7 @@ fn sampled_outputs_reproducible_across_batch_sizes() {
         let mut sch = Scheduler::new(InferEngine::new(model.clone()), max_seqs,
                                      10_000, sampling, 1234);
         for id in 0..3u64 {
-            sch.submit(Request { id, prompt: vec![2 + id as u32, 5], max_new: 4 });
+            sch.submit(Request::new(id, vec![2 + id as u32, 5], 4));
         }
         let mut done = sch.run_until_idle(500);
         assert_eq!(done.len(), 3);

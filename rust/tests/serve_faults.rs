@@ -1,0 +1,194 @@
+//! Robustness property tests for the serving scheduler: KV-leak
+//! freedom under submit / cancel / deadline-evict / drain churn, plus
+//! integration-level runs of the deterministic fault-injection harness
+//! (`serve-bench --faults`). The wire-level (socket) counterparts live
+//! in `serve_server.rs`.
+
+use sparse24::model::ModelDims;
+use sparse24::serve::{
+    run_fault_bench, synthetic_checkpoint, CompletionStatus, FaultConfig,
+    InferEngine, InferModel, KvLayout, Request, Sampling, Scheduler,
+    DEFAULT_PREFILL_CHUNK,
+};
+use sparse24::util::rng::Rng;
+
+const VOCAB: usize = 48;
+
+fn engine() -> InferEngine {
+    let dims = ModelDims {
+        vocab: VOCAB, d_model: 24, n_layers: 2, n_heads: 2, d_ff: 16, n_ctx: 32,
+    };
+    InferEngine::new(
+        InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 11)).unwrap(),
+    )
+}
+
+/// One seeded churn run: random bursts of submissions (some with
+/// near-hopeless step deadlines), random mid-flight cancels, steps in
+/// between, then a full drain. Every page the pool started with must be
+/// back on the free list, and every offered request must sit in exactly
+/// one exit bucket.
+fn churn(seed: u64) {
+    let mut sch = Scheduler::with_kv(
+        engine(), 3, 64, DEFAULT_PREFILL_CHUNK, KvLayout::Paged { page: 4 }, 0,
+        Sampling::Greedy, seed,
+    );
+    sch.set_max_pending(2);
+    let baseline = sch.kv_stats();
+    assert!(baseline.total_pages > 0);
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let mut next_id = 0u64;
+    let mut live: Vec<u64> = Vec::new();
+    let mut offered = 0usize;
+
+    for _ in 0..300 {
+        for _ in 0..rng.below(3) {
+            let plen = 1 + rng.below(8);
+            let prompt = (0..plen).map(|_| rng.below(VOCAB) as u32).collect();
+            let mut req = Request::new(next_id, prompt, 1 + rng.below(8));
+            if rng.below(4) == 0 {
+                req.deadline_steps = Some(1 + rng.below(4) as u64);
+            }
+            offered += 1;
+            match sch.try_submit(req) {
+                Ok(()) => live.push(next_id),
+                Err(rej) => assert!(rej.retry_after_steps >= 1),
+            }
+            next_id += 1;
+        }
+        if !live.is_empty() && rng.below(3) == 0 {
+            let id = live[rng.below(live.len())];
+            if let Some(c) = sch.cancel(id) {
+                assert_eq!(c.status, CompletionStatus::Cancelled);
+                live.retain(|&x| x != id);
+            }
+        }
+        let rep = sch.step();
+        for c in rep.finished {
+            live.retain(|&x| x != c.id);
+        }
+        // the pool never invents or loses pages mid-churn
+        assert_eq!(sch.kv_stats().total_pages, baseline.total_pages);
+    }
+
+    // drain: no further arrivals; everything in flight runs down
+    let done = sch.run_until_idle(10_000);
+    for c in &done {
+        live.retain(|&x| x != c.id);
+    }
+    assert!(sch.is_idle(), "churn seed {seed} did not drain");
+    assert!(live.is_empty(), "seed {seed}: untracked exits for {live:?}");
+    assert_eq!(
+        sch.leak_report(),
+        None,
+        "seed {seed} leaked after drain"
+    );
+    let st = sch.kv_stats();
+    assert_eq!(st.free_pages, st.total_pages, "seed {seed}: pages missing");
+    assert_eq!(st.mapped_pages, 0, "seed {seed}");
+    assert_eq!(st.reserved_unmapped, 0, "seed {seed}");
+    assert_eq!(st.active_seqs, 0, "seed {seed}");
+    let c = sch.counters();
+    assert_eq!(
+        (c.finished + c.cancelled + c.deadline_evicted + c.incomplete + c.shed)
+            as usize,
+        offered,
+        "seed {seed}: exit buckets do not partition offered load: {c:?}"
+    );
+    sch.shutdown(); // panics internally on any residual lane/page
+}
+
+#[test]
+fn kv_leak_free_under_churn_across_seeds() {
+    for seed in [1, 2, 3, 0xDEAD] {
+        churn(seed);
+    }
+}
+
+/// Cancelling a sequence mid-prefill (long prompt, small chunk — the
+/// page table is still growing) must return every page it had mapped
+/// AND the unmapped remainder of its peak reservation.
+#[test]
+fn cancel_mid_prefill_returns_full_reservation() {
+    let mut sch = Scheduler::with_kv(
+        engine(), 2, 4, 4, KvLayout::Paged { page: 4 }, 0, Sampling::Greedy, 3,
+    );
+    let before = sch.kv_stats();
+    // 24-token prompt at chunk 4 spans 6 steps; cancel after 2
+    let prompt: Vec<u32> = (0..24).map(|t| (t % VOCAB as u32).max(1)).collect();
+    sch.submit(Request::new(0, prompt, 4));
+    sch.step();
+    sch.step();
+    let mid = sch.kv_stats();
+    assert!(
+        mid.free_pages < before.free_pages,
+        "prefill should be holding pages"
+    );
+    let c = sch.cancel(0).expect("request is active");
+    assert_eq!(c.status, CompletionStatus::Cancelled);
+    let after = sch.kv_stats();
+    assert_eq!(after.free_pages, before.free_pages, "reservation not returned");
+    assert_eq!(sch.leak_report(), None);
+    sch.shutdown();
+}
+
+/// An abrupt drain (`abort_all`, the drain-timeout path) with work still
+/// queued AND active leaks nothing and reports every request Incomplete.
+#[test]
+fn abort_all_mid_flight_leaks_nothing() {
+    let mut sch = Scheduler::with_kv(
+        engine(), 2, 64, DEFAULT_PREFILL_CHUNK, KvLayout::Paged { page: 4 }, 0,
+        Sampling::Greedy, 9,
+    );
+    let before = sch.kv_stats();
+    for id in 0..5u64 {
+        sch.submit(Request::new(id, vec![1, 2, 3], 8));
+    }
+    for _ in 0..3 {
+        sch.step();
+    }
+    let aborted = sch.abort_all(CompletionStatus::Incomplete);
+    assert!(!aborted.is_empty());
+    assert!(aborted.iter().all(|c| c.status == CompletionStatus::Incomplete));
+    assert!(sch.is_idle());
+    assert_eq!(sch.leak_report(), None);
+    assert_eq!(sch.kv_stats().free_pages, before.free_pages);
+    sch.shutdown();
+}
+
+/// The full fault harness at integration scale: a storm with every
+/// fault kind armed holds its hard invariants (bitwise survivors,
+/// immediate cancel-free, zero post-drain leaks) and its exit buckets
+/// partition the offered load.
+#[test]
+fn fault_harness_invariants_hold_at_integration_scale() {
+    let fc = FaultConfig {
+        n_requests: 30,
+        max_seqs: 3,
+        max_pending: 3,
+        max_steps: 300,
+        prompt_len: 8,
+        max_new: 10,
+        kv_page: 4,
+        seed: 0xF00D,
+        ..FaultConfig::default()
+    };
+    let (r, engine) = run_fault_bench(engine(), &fc).unwrap();
+    assert_eq!(r.offered, fc.n_requests);
+    assert!(r.cancel_free_immediate && r.survivors_bitwise);
+    assert_eq!(r.leaked_pages, 0);
+    assert_eq!(
+        r.finished + r.cancelled + r.deadline_evicted + r.incomplete + r.shed,
+        r.offered
+    );
+    // the engine comes back reusable
+    let mut sch = Scheduler::with_kv(
+        engine, 1, 64, DEFAULT_PREFILL_CHUNK, KvLayout::Paged { page: 4 }, 0,
+        Sampling::Greedy, 1,
+    );
+    sch.submit(Request::new(0, vec![1, 2], 2));
+    let done = sch.run_until_idle(64);
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].status, CompletionStatus::Finished);
+    sch.shutdown();
+}

@@ -121,11 +121,11 @@ fn scheduler_outputs_identical_paged_vs_contiguous() {
     let requests: Vec<Request> = (0..6)
         .map(|id| {
             let len = 1 + rng.below(12);
-            Request {
+            Request::new(
                 id,
-                prompt: (0..len).map(|_| rng.below(d.vocab) as u32).collect(),
-                max_new: 1 + rng.below(5),
-            }
+                (0..len).map(|_| rng.below(d.vocab) as u32).collect(),
+                1 + rng.below(5),
+            )
         })
         .collect();
     let run = |layout: KvLayout| -> Vec<(u64, Vec<u32>)> {
@@ -177,11 +177,11 @@ fn interleaved_long_short_admissions_never_deadlock() {
             } else {
                 (1 + rng.below(4), 1 + rng.below(3)) // short
             };
-            sch.submit(Request {
+            sch.submit(Request::new(
                 id,
-                prompt: (0..len).map(|_| rng.below(d.vocab) as u32).collect(),
+                (0..len).map(|_| rng.below(d.vocab) as u32).collect(),
                 max_new,
-            });
+            ));
         }
         let done = sch.run_until_idle(5000);
         assert_eq!(

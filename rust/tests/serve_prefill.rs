@@ -148,11 +148,11 @@ fn scheduler_chunked_admission_invariant_and_budgeted() {
     let requests: Vec<Request> = (0..n_req)
         .map(|id| {
             let len = 1 + rng.below(9); // up to 9 tokens: spans chunks
-            Request {
+            Request::new(
                 id,
-                prompt: (0..len).map(|_| rng.below(dims.vocab) as u32).collect(),
-                max_new: 1 + rng.below(4),
-            }
+                (0..len).map(|_| rng.below(dims.vocab) as u32).collect(),
+                1 + rng.below(4),
+            )
         })
         .collect();
 

@@ -12,9 +12,14 @@
 # on a tiny synthetic checkpoint (compressed-weight decode, paged KV
 # cache, chunked prefill, continuous batching, zero-allocation
 # assertion, TTFT + prefill_tokens_per_s + kv_paging occupancy
-# reporting), and a perf diff against the previous bench run (warn-only,
-# >15% regression; covers GFLOP/s — table12_epilogue included — prefill
-# tok/s, and paged-KV occupancy).
+# reporting), the hardened-front-end suites (wire-level socket tests +
+# KV-leak-freedom churn properties), the `serve --smoke` socket smoke
+# (mid-stream disconnect -> cancel, overload reject, doomed deadline,
+# graceful drain, zero-leak exit on a unix socket), the deterministic
+# fault-injection bench (`serve-bench --faults`, serve_faults section),
+# and a perf diff against the previous bench run (warn-only, >15%
+# regression; covers GFLOP/s — table12_epilogue included — prefill
+# tok/s, paged-KV occupancy, and fault-storm goodput).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -45,7 +50,18 @@ echo "== serve smoke (synthetic checkpoint, 64 steps, paged KV, 2 threads)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --synthetic --quick \
   --steps 64 --batch-sizes 2,4 --prefill-chunk 4 --kv-page 8
 
-echo "== bench-diff (GFLOP/s + prefill tok/s + kv occupancy, warn-only)"
+echo "== front-end suites (socket server + KV-leak churn properties)"
+PALLAS_NUM_THREADS=2 cargo test -q --test serve_server
+PALLAS_NUM_THREADS=2 cargo test -q --test serve_faults
+
+echo "== server smoke (unix socket: disconnect-cancel, overload, deadline, drain)"
+PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve --smoke
+
+echo "== fault-injection bench (seeded storm, bitwise survivors, zero leaks)"
+PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --faults --synthetic \
+  --quick --steps 64
+
+echo "== bench-diff (GFLOP/s + prefill tok/s + kv occupancy + fault goodput, warn-only)"
 ./target/release/sparse24 bench-diff || true
 
 echo "== verify OK"
