@@ -1,0 +1,156 @@
+//! Telemetry overhead: the same workloads at telemetry off /
+//! counters-only / full span tracing.
+//!
+//! Two legs, both measured as tokens per second so one gate covers
+//! them (docs/OBSERVABILITY.md):
+//!
+//!  * `serve` — the open-loop serving harness (`run_open_loop`) on a
+//!    small synthetic model, the full request lifecycle instrumented
+//!    (queue-wait/TTFT/gap histograms, per-request trace rows);
+//!  * `train` — the Fig. 7a sparse FFN iteration (`ffn_speedup`'s
+//!    sparse half), which runs the instrumented kernel dispatch layer
+//!    without needing AOT artifacts.
+//!
+//! Results land in BENCH_kernels.json section `obs_overhead` (rotated
+//! to `.prev` per run; `sparse24 bench-diff` warns on >15% tokens/s
+//! drops). The acceptance gate — full tracing costs < 3% tokens/s —
+//! is printed per leg and enforced when `--strict` is passed (CI runs
+//! advisory: the gate compares two live timing runs on a shared
+//! machine, so strict mode is for dedicated hardware).
+//!
+//! Run: cargo bench --bench obs_overhead [-- --quick] [-- --strict]
+
+use std::time::Duration;
+
+use sparse24::config::ServeConfig;
+use sparse24::model::ModelDims;
+use sparse24::obs;
+use sparse24::serve::{run_open_loop, synthetic_checkpoint, InferEngine, InferModel};
+use sparse24::sparse::{kernels, workloads};
+use sparse24::util::bench::{repo_root_file, write_json_section_at};
+use sparse24::util::json::{num, obj, Json};
+
+const MODES: &[(&str, obs::Level)] = &[
+    ("off", obs::Level::Off),
+    ("metrics", obs::Level::Metrics),
+    ("trace", obs::Level::Trace),
+];
+
+/// The acceptance gate: full tracing must cost < 3% tokens/s.
+const GATE_PCT: f64 = 3.0;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let strict = std::env::args().any(|a| a == "--strict");
+    let threads = kernels::num_threads();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut gate_ok = true;
+
+    println!("obs_overhead: telemetry off vs counters vs tracing ({threads} threads)");
+
+    // --- serve leg: open-loop scheduler harness per telemetry mode ---
+    let dims = ModelDims {
+        vocab: 128,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 128,
+        n_ctx: 64,
+    };
+    let cfg = ServeConfig {
+        max_new_tokens: 8,
+        prompt_len: 6,
+        prefill_chunk: 4,
+        arrival_per_step: 1.0,
+        ..ServeConfig::default()
+    };
+    let steps = if quick { 48 } else { 192 };
+    let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 0xB5)).unwrap();
+    let mut engine = InferEngine::new(model);
+    // warmup run (scratch arena allocation, page tables) — discarded
+    let (_, back) = run_open_loop(engine, &cfg, cfg.max_seqs, steps).unwrap();
+    engine = back;
+    let mut serve_base = 0.0;
+    for &(mode, level) in MODES {
+        obs::set_level(level);
+        obs::trace::clear_trace();
+        let (res, back) = run_open_loop(engine, &cfg, cfg.max_seqs, steps).unwrap();
+        engine = back;
+        let tps = res.tokens_per_s;
+        if mode == "off" {
+            serve_base = tps;
+        }
+        let overhead = overhead_pct(serve_base, tps);
+        println!(
+            "  serve  {mode:<8} {tps:>10.1} tok/s  overhead {overhead:>+6.2}%"
+        );
+        rows.push(row("serve", mode, threads, tps, overhead));
+        if mode == "trace" {
+            gate_ok &= check_gate("serve", overhead);
+        }
+    }
+    obs::set_level(obs::Level::Off);
+    drop(engine);
+
+    // --- train leg: sparse FFN iteration through the kernel dispatch
+    // layer (artifact-free stand-in for the trainer step loop) ---
+    let (p, d) = if quick { (128, 256) } else { (512, 512) };
+    let budget = Duration::from_millis(if quick { 60 } else { 250 });
+    let mut train_base = 0.0;
+    for &(mode, level) in MODES {
+        obs::set_level(level);
+        obs::trace::clear_trace();
+        let (_, sparse_s, _) = workloads::ffn_speedup(p, d, budget);
+        let tps = p as f64 / sparse_s;
+        if mode == "off" {
+            train_base = tps;
+        }
+        let overhead = overhead_pct(train_base, tps);
+        println!(
+            "  train  {mode:<8} {tps:>10.1} tok/s  overhead {overhead:>+6.2}%"
+        );
+        rows.push(row("train", mode, threads, tps, overhead));
+        if mode == "trace" {
+            gate_ok &= check_gate("train", overhead);
+        }
+    }
+    obs::set_level(obs::Level::Off);
+    obs::trace::clear_trace();
+
+    let path = repo_root_file("BENCH_kernels.json");
+    write_json_section_at(&path, "obs_overhead", Json::Arr(rows)).unwrap();
+    println!("-> {} (section obs_overhead)", path.display());
+    if !gate_ok && strict {
+        panic!("obs_overhead: full tracing exceeded the {GATE_PCT}% gate");
+    }
+}
+
+/// Slowdown of `tps` vs `base` in percent (positive = telemetry cost).
+fn overhead_pct(base: f64, tps: f64) -> f64 {
+    if base > 0.0 {
+        (base / tps.max(1e-12) - 1.0) * 100.0
+    } else {
+        0.0
+    }
+}
+
+fn check_gate(leg: &str, overhead: f64) -> bool {
+    let ok = overhead < GATE_PCT;
+    println!(
+        "  {} gate: tracing overhead {overhead:+.2}% {} {GATE_PCT}% -> {}",
+        leg,
+        if ok { "<" } else { ">=" },
+        if ok { "OK" } else { "EXCEEDED" }
+    );
+    ok
+}
+
+fn row(leg: &str, mode: &str, threads: usize, tps: f64, overhead: f64) -> Json {
+    obj(vec![
+        ("leg", Json::Str(leg.into())),
+        ("mode", Json::Str(mode.into())),
+        ("threads", num(threads as f64)),
+        ("tokens_per_s", num(tps)),
+        ("overhead_pct", num(overhead)),
+    ])
+}

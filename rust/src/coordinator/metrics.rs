@@ -3,7 +3,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -98,9 +98,19 @@ impl MetricsLog {
 /// Cumulative component timer — reproduces the Appendix-D profile rows
 /// (FWD GEMM, BWD GEMM, MVUE+PRUNE, masked decay, prune weights,
 /// transposable mask search, ...).
+///
+/// Since the telemetry rework this is a *baseline-delta view over the
+/// global span table* (`obs::span_total`), not a private accumulator:
+/// `time`/`add` delegate to [`crate::obs::span`] / [`crate::obs::span_add`]
+/// and remember the global (total, count) at a name's first touch, so
+/// every read reports global-minus-baseline. The Table-13 report and a
+/// `--trace` Chrome trace therefore come from the *same* clock reads
+/// and can never disagree.
 #[derive(Clone, Debug, Default)]
 pub struct Profile {
-    acc: BTreeMap<String, (Duration, u64)>,
+    /// global (total ns, count) per name when this profile first
+    /// touched it — the subtraction baseline
+    base: BTreeMap<&'static str, (u64, u64)>,
 }
 
 impl Profile {
@@ -108,25 +118,40 @@ impl Profile {
         Self::default()
     }
 
-    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
-        let t0 = Instant::now();
-        let out = f();
-        self.add(name, t0.elapsed());
-        out
+    /// Remember the global totals at first touch of `name`.
+    fn touch(&mut self, name: &'static str) {
+        self.base.entry(name).or_insert_with(|| crate::obs::span_total(name));
     }
 
-    pub fn add(&mut self, name: &str, d: Duration) {
-        let e = self.acc.entry(name.to_string()).or_insert((Duration::ZERO, 0));
-        e.0 += d;
-        e.1 += 1;
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        self.touch(name);
+        let _s = crate::obs::span(name);
+        f()
+    }
+
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        self.touch(name);
+        crate::obs::span_add(name, d);
+    }
+
+    /// (ns, count) accumulated under `name` since this profile first
+    /// touched it; (0, 0) for untouched names.
+    fn delta(&self, name: &str) -> (u64, u64) {
+        match self.base.get(name) {
+            Some(&(t0, c0)) => {
+                let (t1, c1) = crate::obs::span_total(name);
+                (t1.saturating_sub(t0), c1.saturating_sub(c0))
+            }
+            None => (0, 0),
+        }
     }
 
     pub fn total_ms(&self, name: &str) -> f64 {
-        self.acc.get(name).map(|(d, _)| d.as_secs_f64() * 1e3).unwrap_or(0.0)
+        self.delta(name).0 as f64 / 1e6
     }
 
     pub fn count(&self, name: &str) -> u64 {
-        self.acc.get(name).map(|&(_, c)| c).unwrap_or(0)
+        self.delta(name).1
     }
 
     pub fn mean_ms(&self, name: &str) -> f64 {
@@ -140,27 +165,34 @@ impl Profile {
 
     /// Pretty table (name, total ms, execs, ms/exec), sorted by total.
     pub fn report(&self) -> String {
-        let mut rows: Vec<_> = self.acc.iter().collect();
-        rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+        let mut rows: Vec<(&str, u64, u64)> = self
+            .base
+            .keys()
+            .map(|&name| {
+                let (t, c) = self.delta(name);
+                (name, t, c)
+            })
+            .collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1));
         let mut out = format!(
             "{:<32} {:>12} {:>8} {:>12}\n",
             "component", "total ms", "execs", "ms/exec"
         );
-        for (name, (d, c)) in rows {
-            let ms = d.as_secs_f64() * 1e3;
+        for (name, t, c) in rows {
+            let ms = t as f64 / 1e6;
             out += &format!(
                 "{:<32} {:>12.2} {:>8} {:>12.4}\n",
                 name,
                 ms,
                 c,
-                ms / (*c).max(1) as f64
+                ms / c.max(1) as f64
             );
         }
         out
     }
 
     pub fn names(&self) -> Vec<String> {
-        self.acc.keys().cloned().collect()
+        self.base.keys().map(|s| s.to_string()).collect()
     }
 }
 

@@ -271,6 +271,9 @@ impl Trainer {
 
     /// One optimizer step; returns the mean microbatch loss.
     pub fn step(&mut self) -> Result<f64> {
+        // whole-step span: parent row for the per-phase spans below in
+        // a `--trace` capture, and the denominator of the live profile
+        let _step_span = crate::obs::span("train.step");
         let t = self.step_idx;
         let phase = self.phase_of(t);
         self.maintain_masks(phase);
@@ -324,6 +327,22 @@ impl Trainer {
             self.fst.mean_flip_over(1)
         };
 
+        // live telemetry: overall + per-layer flip-rate gauges and the
+        // masked-decay lambda actually applied this step. Gauge handles
+        // intern once per name; the whole block is skipped below
+        // Level::Metrics so the off path stays a single relaxed load.
+        if crate::obs::metrics_on() {
+            crate::obs::gauge("train.flip_rate").set(flip);
+            crate::obs::gauge("train.masked_decay_lambda")
+                .set(if decay_active { self.cfg.lambda_w as f64 } else { 0.0 });
+            for (mon, &pi) in self.fst.monitors.iter().zip(&self.fst.sparse_idx) {
+                if let Some(&f) = mon.history.last() {
+                    let name = format!("train.flip_rate.{}", self.params.names[pi]);
+                    crate::obs::gauge(&name).set(f);
+                }
+            }
+        }
+
         let val_loss = if self.cfg.eval_interval > 0
             && t % self.cfg.eval_interval == self.cfg.eval_interval - 1
         {
@@ -342,6 +361,9 @@ impl Trainer {
             val_loss,
         });
         self.step_idx += 1;
+        // one metrics-JSONL line per METRICS_INTERVAL when `--metrics`
+        // installed a sink; a single mutex try otherwise
+        crate::obs::maybe_emit_metrics();
         Ok(loss)
     }
 

@@ -46,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod serve;

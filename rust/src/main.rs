@@ -10,6 +10,12 @@
 //!   serve            hardened socket front-end over the scheduler
 //!   serve-bench      open-loop serving load -> BENCH_serve.json
 //!   bench-diff       warn on GFLOP/s regressions vs the previous run
+//!   check-trace      validate emitted trace / metrics telemetry files
+//!
+//! `train`, `serve`, and `serve-bench` additionally accept
+//! `--trace <file>` (Chrome trace-event JSON, loadable in Perfetto /
+//! chrome://tracing) and `--metrics <file>` (periodic registry
+//! snapshots as JSONL) — see docs/OBSERVABILITY.md.
 //!
 //! Examples:
 //!   sparse24 train --config configs/e2e_ours.toml
@@ -21,6 +27,8 @@
 //!   sparse24 serve --synthetic --listen 127.0.0.1:8477
 //!   sparse24 serve-bench --synthetic --steps 256 --batch-sizes 2,4,8
 //!   sparse24 serve-bench --faults --synthetic --quick
+//!   sparse24 serve-bench --synthetic --quick --trace out.trace.json
+//!   sparse24 check-trace --trace out.trace.json
 //!   sparse24 bench-diff
 
 use std::collections::BTreeMap;
@@ -34,6 +42,7 @@ use anyhow::{bail, Context, Result};
 use sparse24::config::{ServeConfig, TrainConfig};
 use sparse24::coordinator::{Checkpoint, Trainer, Tuner};
 use sparse24::model::ModelDims;
+use sparse24::obs;
 use sparse24::runtime::Manifest;
 use sparse24::serve::{
     run_fault_bench, run_mixed_kv_bench, run_open_loop, run_server, run_smoke,
@@ -42,8 +51,8 @@ use sparse24::serve::{
 };
 use sparse24::sparse::{kernels, workloads};
 use sparse24::util::bench::{
-    kernel_bench_regressions, repo_root_file, serve_bench_regressions,
-    write_json_section_at,
+    kernel_bench_regressions, obs_bench_regressions, repo_root_file,
+    serve_bench_regressions, write_json_section_at,
 };
 use sparse24::util::json::{num, obj, Json};
 use sparse24::util::write_csv;
@@ -133,6 +142,53 @@ fn opt1<'a>(opts: &'a BTreeMap<String, Vec<String>>, key: &str) -> Option<&'a st
     opts.get(key).and_then(|v| v.last()).map(|s| s.as_str())
 }
 
+/// `--trace <file>` / `--metrics <file>` handling shared by `train`,
+/// `serve`, and `serve-bench` (docs/OBSERVABILITY.md): `--trace`
+/// enables full span tracing (implies the metrics level), `--metrics`
+/// alone enables the registry plus the periodic JSONL stream. Call
+/// [`Telemetry::finish`] on command exit to write the span ring out as
+/// a Chrome trace and close the metrics stream.
+struct Telemetry {
+    trace: Option<PathBuf>,
+    metrics: bool,
+}
+
+fn init_telemetry(opts: &BTreeMap<String, Vec<String>>) -> Result<Telemetry> {
+    let trace = opt1(opts, "trace").map(PathBuf::from);
+    let metrics = opt1(opts, "metrics").map(PathBuf::from);
+    if trace.is_some() {
+        obs::set_level(obs::Level::Trace);
+    } else if metrics.is_some() {
+        obs::set_level(obs::Level::Metrics);
+    }
+    if let Some(p) = &metrics {
+        obs::init_metrics(p)?;
+    }
+    Ok(Telemetry { trace, metrics: metrics.is_some() })
+}
+
+impl Telemetry {
+    fn finish(&self) -> Result<()> {
+        if let Some(p) = &self.trace {
+            let (spans, dropped) = obs::write_trace(p)?;
+            if dropped > 0 {
+                println!(
+                    "trace -> {} ({spans} spans; {dropped} early spans \
+                     overwritten by the ring)",
+                    p.display()
+                );
+            } else {
+                println!("trace -> {} ({spans} spans)", p.display());
+            }
+        }
+        if self.metrics {
+            let bytes = obs::flush_metrics();
+            println!("metrics stream closed (final line {bytes} bytes)");
+        }
+        Ok(())
+    }
+}
+
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -149,6 +205,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(rest),
         "serve-bench" => cmd_serve_bench(rest),
         "bench-diff" => cmd_bench_diff(rest),
+        "check-trace" => cmd_check_trace(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -164,6 +221,7 @@ fn print_usage() {
          COMMANDS:\n\
            train        --config <toml> [--set sec.key=value ...] [--out <csv>]\n\
                         [--checkpoint <file> [--checkpoint-every N]] [--resume <file>]\n\
+                        [--trace <json>] [--metrics <jsonl>]\n\
            tune-decay   --config <toml> [--probe-steps N] [--out <csv>]\n\
            speedup      [--ffn] [--block] [--e2e] [--profile] [--quick] [--out <csv>]\n\
            inspect      --model <name> [--artifacts-dir <dir>]\n\
@@ -173,11 +231,14 @@ fn print_usage() {
            serve        [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--listen host:port|unix:/path] [--max-pending N]\n\
                         [--deadline-ms MS] [--drain-timeout-ms MS] [--smoke]\n\
+                        [--trace <json>] [--metrics <jsonl>]\n\
            serve-bench  [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--steps N] [--batch-sizes a,b,...] [--prefill-chunk N]\n\
                         [--kv-layout paged|contiguous] [--kv-page N]\n\
                         [--kv-pages N] [--faults] [--quick]\n\
-           bench-diff   [--file <json>] [--serve-file <json>] [--threshold PCT]\n"
+                        [--trace <json>] [--metrics <jsonl>]\n\
+           bench-diff   [--file <json>] [--serve-file <json>] [--threshold PCT]\n\
+           check-trace  [--trace <json>] [--metrics <jsonl>]\n"
     );
 }
 
@@ -315,12 +376,15 @@ fn cmd_generate(args: &[String]) -> Result<()> {
 /// reject, doomed deadline, graceful drain) instead of serving.
 fn cmd_serve(args: &[String]) -> Result<()> {
     let value_opts = with_model_opts(&[
-        "listen", "max-pending", "deadline-ms", "drain-timeout-ms",
+        "listen", "max-pending", "deadline-ms", "drain-timeout-ms", "trace",
+        "metrics",
     ]);
     let (flags, opts, _) =
         parse_args(args, &value_opts, &["synthetic", "smoke", "quick"])?;
+    let telemetry = init_telemetry(&opts)?;
     if flags.iter().any(|f| f == "smoke") {
         println!("{}", run_smoke(opt1(&opts, "listen"))?);
+        telemetry.finish()?;
         return Ok(());
     }
     let mut cfg = load_serve_config(&opts)?;
@@ -347,6 +411,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     );
     let report = run_server(InferEngine::new(model), &cfg, shutdown)?;
     println!("{}", report.render());
+    telemetry.finish()?;
     Ok(())
 }
 
@@ -397,10 +462,11 @@ fn cmd_serve_bench_faults(
 fn cmd_serve_bench(args: &[String]) -> Result<()> {
     let value_opts = with_model_opts(&[
         "steps", "batch-sizes", "prefill-chunk", "kv-layout", "kv-page",
-        "kv-pages",
+        "kv-pages", "trace", "metrics",
     ]);
     let (flags, opts, _) =
         parse_args(args, &value_opts, &["synthetic", "quick", "faults"])?;
+    let telemetry = init_telemetry(&opts)?;
     let quick = flags.iter().any(|f| f == "quick");
     let mut cfg = load_serve_config(&opts)?;
     if let Some(s) = opt1(&opts, "steps") {
@@ -422,7 +488,9 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     }
     cfg.validate()?;
     if flags.iter().any(|f| f == "faults") {
-        return cmd_serve_bench_faults(&flags, &opts, &cfg, quick);
+        cmd_serve_bench_faults(&flags, &opts, &cfg, quick)?;
+        telemetry.finish()?;
+        return Ok(());
     }
     let batch_sizes: Vec<usize> = match opt1(&opts, "batch-sizes") {
         Some(s) => s
@@ -495,6 +563,7 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
         "-> {} (sections serve_bench, prefill_tokens_per_s, kv_paging)",
         path.display()
     );
+    telemetry.finish()?;
     Ok(())
 }
 
@@ -546,6 +615,48 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
             threshold * 100.0
         );
     }
+    // telemetry-cost gate: the obs_overhead section lives beside the
+    // kernel sections in BENCH_kernels.json
+    let obs_warnings = obs_bench_regressions(&path, threshold)?;
+    if obs_warnings.is_empty() {
+        println!(
+            "bench-diff: no telemetry tok/s regressions > {:.0}% in {}",
+            threshold * 100.0,
+            path.display()
+        );
+    } else {
+        for w in &obs_warnings {
+            println!("WARNING: perf regression: {w}");
+        }
+        println!(
+            "bench-diff: {} telemetry config(s) regressed > {:.0}% vs the previous run",
+            obs_warnings.len(),
+            threshold * 100.0
+        );
+    }
+    Ok(())
+}
+
+/// `check-trace`: validate telemetry files emitted by `--trace` /
+/// `--metrics` runs — every line parses, B/E span events balance per
+/// row, timestamps are monotone. `scripts/verify.sh` runs this after
+/// the trace smokes; a malformed file is a nonzero exit.
+fn cmd_check_trace(args: &[String]) -> Result<()> {
+    let (_, opts, _) = parse_args(args, &["trace", "metrics"], &[])?;
+    if !opts.contains_key("trace") && !opts.contains_key("metrics") {
+        bail!("check-trace wants --trace <file> and/or --metrics <file>");
+    }
+    for p in opts.get("trace").map(|v| v.as_slice()).unwrap_or(&[]) {
+        let c = obs::check_trace_file(Path::new(p))?;
+        println!(
+            "{p}: trace OK ({} events, {} spans, {} rows)",
+            c.events, c.spans, c.tids
+        );
+    }
+    for p in opts.get("metrics").map(|v| v.as_slice()).unwrap_or(&[]) {
+        let c = obs::check_metrics_file(Path::new(p))?;
+        println!("{p}: metrics OK ({} lines)", c.lines);
+    }
     Ok(())
 }
 
@@ -574,9 +685,13 @@ fn load_config(opts: &BTreeMap<String, Vec<String>>) -> Result<TrainConfig> {
 fn cmd_train(args: &[String]) -> Result<()> {
     let (_flags, opts, _) = parse_args(
         args,
-        &["config", "set", "out", "checkpoint", "checkpoint-every", "resume"],
+        &[
+            "config", "set", "out", "checkpoint", "checkpoint-every", "resume",
+            "trace", "metrics",
+        ],
         &[],
     )?;
+    let telemetry = init_telemetry(&opts)?;
     let cfg = load_config(&opts)?;
     println!(
         "training {} | method {:?} | {} steps x {} microbatches | lambda {:.1e} | workers {}",
@@ -629,6 +744,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         trainer.metrics.to_csv(Path::new(out))?;
         println!("metrics -> {out}");
     }
+    telemetry.finish()?;
     Ok(())
 }
 

@@ -1,0 +1,172 @@
+//! `obs` — dependency-free telemetry: metrics registry, span timing,
+//! Chrome-trace export.
+//!
+//! One instrumentation discipline for the whole crate (trainer, kernel
+//! backend, scheduler, socket server, benches). Three pieces:
+//!
+//! * **Registry** ([`registry`]) — named atomic [`Counter`]s,
+//!   [`Gauge`]s, and mergeable log2-bucket [`Histogram`]s. Handles are
+//!   interned once (`counter("serve.shed")` leaks a `&'static` cell);
+//!   the record path is lock-free, allocation-free, and sharded per
+//!   thread for histograms. Snapshots merge shards on demand and can be
+//!   streamed as metrics JSONL ([`init_metrics`] / [`maybe_emit_metrics`]).
+//! * **Spans** ([`span`]) — scoped RAII timing (`let _s =
+//!   obs::span("train.step");`) accumulated into a global per-name
+//!   total/count table (the live Table-13 component profile —
+//!   `coordinator::metrics::Profile` is a baseline-delta view over it),
+//!   plus fixed-cost per-kernel-family accounting
+//!   ([`kernel_scope`]) at the dispatch layer of `sparse::kernels`.
+//! * **Trace** ([`trace`]) — a preallocated ring of span records that
+//!   exports Chrome trace-event JSON (`--trace out.trace.json`,
+//!   loadable in Perfetto / `chrome://tracing`), with validators
+//!   ([`check_trace_file`], [`check_metrics_file`]) behind the
+//!   `sparse24 check-trace` subcommand.
+//!
+//! **Cost discipline.** A single relaxed [`AtomicU8`] level gates
+//! everything: at [`Level::Off`] counter/gauge/histogram records and
+//! kernel scopes are one relaxed load (no clock read, no stores); at
+//! [`Level::Metrics`] records are 1–2 relaxed RMWs; only
+//! [`Level::Trace`] touches the ring mutex. Coarse spans (a handful per
+//! training/serve step) always accumulate so component profiles exist
+//! without opting in. Nothing here feeds back into the numerics: the
+//! instrumented code paths execute identical float ops at every level,
+//! so outputs are bitwise identical tracing on or off (pinned by
+//! `rust/tests/obs_telemetry.rs`).
+//!
+//! Metric catalogue, span naming scheme, and the trace-file workflow
+//! are documented in `docs/OBSERVABILITY.md`.
+
+pub mod registry;
+pub mod span;
+pub mod trace;
+
+pub use registry::{
+    counter, flush_metrics, gauge, histogram, init_metrics, maybe_emit_metrics,
+    metrics_line, snapshot_json, Counter, Gauge, HistSnapshot, Histogram,
+};
+pub use span::{
+    kernel_scope, kernel_totals, span, span_add, span_total, span_totals,
+    KernelFamily, KernelScope, SpanGuard,
+};
+pub use trace::{
+    check_metrics_file, check_trace_file, clear_trace, push_span_at,
+    trace_dropped, trace_len, write_trace, MetricsCheck, TraceCheck,
+    REQ_TID_BASE,
+};
+
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// How much telemetry is live. Ordered: each level includes the ones
+/// below it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Registry records and kernel scopes are a single relaxed load;
+    /// coarse spans still accumulate totals (they are per-step rare).
+    Off = 0,
+    /// Counters/gauges/histograms record; kernel families accumulate
+    /// time. No event ring traffic.
+    Metrics = 1,
+    /// Everything above, plus span events pushed into the trace ring
+    /// for Chrome-trace export.
+    Trace = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+/// Current telemetry level (relaxed load — the only cost when off).
+#[inline]
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Off,
+        1 => Level::Metrics,
+        _ => Level::Trace,
+    }
+}
+
+/// Set the global telemetry level (process-wide, takes effect
+/// immediately on every thread).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// True when counters/gauges/histograms should record.
+#[inline]
+pub fn metrics_on() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= Level::Metrics as u8
+}
+
+/// True when span events should be pushed to the trace ring.
+#[inline]
+pub fn trace_on() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= Level::Trace as u8
+}
+
+/// Process-wide monotonic epoch; every trace/metrics timestamp is
+/// micro-/milliseconds since the first call.
+pub fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since [`epoch`] for an instant (saturating: instants
+/// taken before the epoch was pinned map to 0).
+#[inline]
+pub fn us_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// Microseconds since [`epoch`], now.
+#[inline]
+pub fn now_us() -> u64 {
+    us_since_epoch(Instant::now())
+}
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static TID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Small dense id for the calling thread (stable for the thread's
+/// lifetime; also indexes histogram shards). Real threads get ids far
+/// below [`REQ_TID_BASE`], so virtual per-request trace rows never
+/// collide with them.
+#[inline]
+pub fn thread_tid() -> u32 {
+    TID.with(|t| *t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered_and_sticky() {
+        // Never lower the level here: lib tests share the process and
+        // other suites assume monotone raising only.
+        assert!(Level::Off < Level::Metrics && Level::Metrics < Level::Trace);
+        set_level(Level::Metrics);
+        assert!(metrics_on());
+        let l = level();
+        assert!(l >= Level::Metrics);
+    }
+
+    #[test]
+    fn thread_ids_are_stable_and_distinct() {
+        let a = thread_tid();
+        assert_eq!(a, thread_tid());
+        let b = std::thread::spawn(thread_tid).join().unwrap();
+        assert_ne!(a, b);
+        assert!(a < REQ_TID_BASE && b < REQ_TID_BASE);
+    }
+
+    #[test]
+    fn epoch_time_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,395 @@
+//! Global metrics registry: interned counters, gauges, and sharded
+//! log2-bucket histograms, plus the metrics-JSONL emitter.
+//!
+//! Handles are interned by name on first use and leaked, so the record
+//! path is a `&'static` atomic cell — no locks, no allocation, and a
+//! single relaxed load when telemetry is [`Level::Off`](crate::obs::Level).
+//! Histograms shard their buckets by thread (thread id modulo
+//! [`HIST_SHARDS`]) so concurrent recorders never contend on one cache
+//! line; [`Histogram::snapshot`] merges the shards. Cache the handle
+//! (struct field, `OnceLock`) on hot paths — the intern lookup itself
+//! takes a mutex.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::{metrics_on, now_us};
+
+/// Monotonically increasing event count. Reads back the total recorded
+/// while telemetry was at least [`Level::Metrics`](crate::obs::Level).
+#[derive(Default)]
+pub struct Counter {
+    val: AtomicU64,
+}
+
+impl Counter {
+    /// Add `n` (no-op when telemetry is off).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if metrics_on() {
+            self.val.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Add 1 (no-op when telemetry is off).
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.val.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as `f64` bits).
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    /// Set the gauge (no-op when telemetry is off).
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if metrics_on() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Bucket count: values 0..=u64::MAX map to buckets 0..=64 by bit
+/// width (`bucket(v) = 64 - v.leading_zeros()`; 0 → 0, 1 → 1,
+/// [2^(b-1), 2^b) → b).
+pub const HIST_BUCKETS: usize = 65;
+/// Per-histogram shard count (thread id modulo this picks the shard).
+pub const HIST_SHARDS: usize = 8;
+
+/// Bucket index for a recorded value.
+#[inline]
+pub fn hist_bucket(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+struct HistShard {
+    counts: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl HistShard {
+    fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        HistShard { counts: [ZERO; HIST_BUCKETS], sum: AtomicU64::new(0) }
+    }
+}
+
+/// Mergeable log2-bucket histogram. Record in whatever unit the name
+/// advertises (`*_us` → microseconds); quantiles come back in the same
+/// unit, resolved to the geometric midpoint of the hit bucket.
+pub struct Histogram {
+    shards: Vec<HistShard>,
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram { shards: (0..HIST_SHARDS).map(|_| HistShard::new()).collect() }
+    }
+
+    /// Record one value (no-op when telemetry is off).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !metrics_on() {
+            return;
+        }
+        let shard = &self.shards[super::thread_tid() as usize % HIST_SHARDS];
+        shard.counts[hist_bucket(v)].fetch_add(1, Ordering::Relaxed);
+        shard.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Merge all shards into one point-in-time view.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = [0u64; HIST_BUCKETS];
+        let mut sum = 0u64;
+        for s in &self.shards {
+            for (acc, c) in counts.iter_mut().zip(&s.counts) {
+                *acc += c.load(Ordering::Relaxed);
+            }
+            sum = sum.wrapping_add(s.sum.load(Ordering::Relaxed));
+        }
+        HistSnapshot { counts, sum }
+    }
+}
+
+/// Merged view of a [`Histogram`] (plain integers; safe to ship
+/// across threads or diff against an oracle).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: [u64; HIST_BUCKETS],
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { 0.0 } else { self.sum as f64 / n as f64 }
+    }
+
+    /// Value at quantile `q` in [0, 1]: the geometric midpoint of the
+    /// first bucket whose cumulative count reaches `q`·total (bucket 0
+    /// is exactly 0). Log2 buckets bound the relative error at ~2x —
+    /// plenty for latency dashboards, free to merge.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_mid(b);
+            }
+        }
+        bucket_mid(HIST_BUCKETS - 1)
+    }
+}
+
+/// Geometric midpoint of bucket `b` (bucket 0 holds only the value 0).
+fn bucket_mid(b: usize) -> f64 {
+    if b == 0 {
+        0.0
+    } else {
+        let lo = (1u128 << (b - 1)) as f64;
+        lo * 1.5
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, &'static Counter>,
+    gauges: BTreeMap<String, &'static Gauge>,
+    hists: BTreeMap<String, &'static Histogram>,
+}
+
+static REG: Mutex<Option<Inner>> = Mutex::new(None);
+
+fn with_reg<T>(f: impl FnOnce(&mut Inner) -> T) -> T {
+    let mut g = REG.lock().unwrap_or_else(|p| p.into_inner());
+    f(g.get_or_insert_with(Inner::default))
+}
+
+/// Intern (or fetch) the counter named `name`. Allocates only on the
+/// first use of a name; cache the handle on hot paths.
+pub fn counter(name: &str) -> &'static Counter {
+    with_reg(|r| {
+        if let Some(c) = r.counters.get(name) {
+            return *c;
+        }
+        let c: &'static Counter = Box::leak(Box::new(Counter::default()));
+        r.counters.insert(name.to_string(), c);
+        c
+    })
+}
+
+/// Intern (or fetch) the gauge named `name`.
+pub fn gauge(name: &str) -> &'static Gauge {
+    with_reg(|r| {
+        if let Some(g) = r.gauges.get(name) {
+            return *g;
+        }
+        let g: &'static Gauge = Box::leak(Box::new(Gauge::default()));
+        r.gauges.insert(name.to_string(), g);
+        g
+    })
+}
+
+/// Intern (or fetch) the histogram named `name`.
+pub fn histogram(name: &str) -> &'static Histogram {
+    with_reg(|r| {
+        if let Some(h) = r.hists.get(name) {
+            return *h;
+        }
+        let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
+        r.hists.insert(name.to_string(), h);
+        h
+    })
+}
+
+/// One JSON object with every registered metric: counters and gauges
+/// verbatim, histograms as count/mean/p50/p99 summaries, span totals
+/// (incl. kernel families) as total_ms/count pairs.
+pub fn snapshot_json() -> Json {
+    let mut counters = BTreeMap::new();
+    let mut gauges = BTreeMap::new();
+    let mut hists = BTreeMap::new();
+    with_reg(|r| {
+        for (name, c) in &r.counters {
+            counters.insert(name.clone(), Json::Num(c.get() as f64));
+        }
+        for (name, g) in &r.gauges {
+            gauges.insert(name.clone(), Json::Num(g.get()));
+        }
+        for (name, h) in &r.hists {
+            let s = h.snapshot();
+            let mut m = BTreeMap::new();
+            m.insert("count".to_string(), Json::Num(s.count() as f64));
+            m.insert("mean".to_string(), Json::Num(s.mean()));
+            m.insert("p50".to_string(), Json::Num(s.quantile(0.5)));
+            m.insert("p99".to_string(), Json::Num(s.quantile(0.99)));
+            hists.insert(name.clone(), Json::Obj(m));
+        }
+    });
+    let mut spans = BTreeMap::new();
+    for (name, total_ns, count) in super::span_totals() {
+        let mut m = BTreeMap::new();
+        m.insert("total_ms".to_string(), Json::Num(total_ns as f64 / 1e6));
+        m.insert("count".to_string(), Json::Num(count as f64));
+        spans.insert(name, Json::Obj(m));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("ts_ms".to_string(), Json::Num(now_us() as f64 / 1e3));
+    top.insert("counters".to_string(), Json::Obj(counters));
+    top.insert("gauges".to_string(), Json::Obj(gauges));
+    top.insert("hists".to_string(), Json::Obj(hists));
+    top.insert("spans".to_string(), Json::Obj(spans));
+    Json::Obj(top)
+}
+
+/// [`snapshot_json`] rendered as one metrics-JSONL line.
+pub fn metrics_line() -> String {
+    snapshot_json().to_string()
+}
+
+struct MetricsSink {
+    w: std::io::BufWriter<std::fs::File>,
+    last: Option<Instant>,
+    every: Duration,
+}
+
+static METRICS: Mutex<Option<MetricsSink>> = Mutex::new(None);
+
+/// Default minimum spacing between periodic metrics lines.
+pub const METRICS_INTERVAL: Duration = Duration::from_millis(250);
+
+/// Open `path` as the process-wide metrics JSONL stream (truncates).
+/// Loops call [`maybe_emit_metrics`] each iteration; lines are
+/// rate-limited to one per [`METRICS_INTERVAL`].
+pub fn init_metrics(path: &std::path::Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating metrics stream {}", path.display()))?;
+    let mut g = METRICS.lock().unwrap_or_else(|p| p.into_inner());
+    *g = Some(MetricsSink {
+        w: std::io::BufWriter::new(f),
+        last: None,
+        every: METRICS_INTERVAL,
+    });
+    Ok(())
+}
+
+/// Emit one metrics line if a sink is installed and the interval has
+/// elapsed. Call from step loops; a no-op (one mutex try) otherwise.
+pub fn maybe_emit_metrics() {
+    let mut g = METRICS.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(sink) = g.as_mut() else { return };
+    let now = Instant::now();
+    if let Some(last) = sink.last {
+        if now.duration_since(last) < sink.every {
+            return;
+        }
+    }
+    sink.last = Some(now);
+    let line = metrics_line();
+    let _ = writeln!(sink.w, "{line}");
+}
+
+/// Write one final metrics line unconditionally, flush, and close the
+/// sink. Returns how many bytes the final line took (0 if no sink).
+pub fn flush_metrics() -> usize {
+    let mut g = METRICS.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(mut sink) = g.take() else { return 0 };
+    let line = metrics_line();
+    let _ = writeln!(sink.w, "{line}");
+    let _ = sink.w.flush();
+    line.len() + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{set_level, Level};
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(hist_bucket(0), 0);
+        assert_eq!(hist_bucket(1), 1);
+        assert_eq!(hist_bucket(2), 2);
+        assert_eq!(hist_bucket(3), 2);
+        assert_eq!(hist_bucket(4), 3);
+        assert_eq!(hist_bucket(u64::MAX), 64);
+    }
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        set_level(Level::Metrics);
+        let c = counter("test.reg.counter");
+        let before = c.get();
+        c.inc();
+        c.add(2);
+        assert_eq!(c.get(), before + 3);
+        // same name -> same cell
+        assert!(std::ptr::eq(c, counter("test.reg.counter")));
+        let g = gauge("test.reg.gauge");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_snapshot_matches_scalar_oracle() {
+        set_level(Level::Metrics);
+        let h = histogram("test.reg.hist.oracle");
+        let values = [0u64, 1, 2, 3, 7, 8, 100, 1000, 1 << 20];
+        let mut oracle = [0u64; HIST_BUCKETS];
+        let mut sum = 0u64;
+        for &v in &values {
+            h.record(v);
+            oracle[hist_bucket(v)] += 1;
+            sum += v;
+        }
+        let s = h.snapshot();
+        assert_eq!(s.counts, oracle);
+        assert_eq!(s.sum, sum);
+        assert_eq!(s.count(), values.len() as u64);
+        // p50 of 9 values lands in the bucket of the 5th smallest (7)
+        assert_eq!(s.quantile(0.5), bucket_mid(hist_bucket(7)));
+        assert_eq!(s.quantile(0.0), 0.0);
+    }
+
+    #[test]
+    fn snapshot_json_has_sections() {
+        set_level(Level::Metrics);
+        counter("test.reg.snapshot").inc();
+        let j = snapshot_json();
+        let line = j.to_string();
+        let back = Json::parse(&line).unwrap();
+        assert!(back.get("ts_ms").is_ok());
+        assert!(back.get("counters").unwrap().get("test.reg.snapshot").is_ok());
+        assert!(back.get("gauges").is_ok() && back.get("hists").is_ok());
+    }
+}

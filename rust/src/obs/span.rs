@@ -1,0 +1,314 @@
+//! Scoped span timing: a global per-name total/count table (the live
+//! component profile) plus fixed-cost per-kernel-family accounting.
+//!
+//! Two tiers, chosen by call frequency:
+//!
+//! * **Coarse spans** ([`span`]) — a handful per training/serve step
+//!   ("train.step_execute", "serve.prefill", …). They accumulate into
+//!   the global table *unconditionally* (one interning-mutex lookup +
+//!   two relaxed RMWs per span is nothing at step granularity), so the
+//!   Table-13 component profile exists even with telemetry off; trace
+//!   events are pushed only at [`Level::Trace`](crate::obs::Level).
+//! * **Kernel scopes** ([`kernel_scope`]) — one per kernel *dispatch*
+//!   (many per layer per step). Below
+//!   [`Level::Metrics`](crate::obs::Level) they skip even the clock
+//!   read; the stats cells live in a fixed array indexed by
+//!   [`KernelFamily`], no interning on the hot path. They wrap only
+//!   the dispatch layer (`sparse::kernels::*_into`), never the thread
+//!   pool's partitioning, so the bitwise thread-count-invariance of the
+//!   numerics is untouched.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use super::{metrics_on, trace_on};
+
+/// Accumulated wall time + call count for one span name.
+#[derive(Default)]
+pub struct SpanStat {
+    total_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl SpanStat {
+    #[inline]
+    fn add(&self, d: Duration) {
+        self.total_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn get(&self) -> (u64, u64) {
+        (self.total_ns.load(Ordering::Relaxed), self.count.load(Ordering::Relaxed))
+    }
+}
+
+static SPANS: Mutex<Option<BTreeMap<String, &'static SpanStat>>> = Mutex::new(None);
+
+fn span_stat(name: &str) -> &'static SpanStat {
+    let mut g = SPANS.lock().unwrap_or_else(|p| p.into_inner());
+    let map = g.get_or_insert_with(BTreeMap::new);
+    if let Some(s) = map.get(name) {
+        return *s;
+    }
+    let s: &'static SpanStat = Box::leak(Box::new(SpanStat::default()));
+    map.insert(name.to_string(), s);
+    s
+}
+
+/// (total nanoseconds, count) accumulated so far under `name` (0, 0)
+/// for a name never spanned. `Profile` diffs two reads of this to get
+/// per-instance component timings.
+pub fn span_total(name: &str) -> (u64, u64) {
+    let g = SPANS.lock().unwrap_or_else(|p| p.into_inner());
+    match g.as_ref().and_then(|m| m.get(name)) {
+        Some(s) => s.get(),
+        None => (0, 0),
+    }
+}
+
+/// Every span name with its (total nanoseconds, count), kernel
+/// families included, sorted by name.
+pub fn span_totals() -> Vec<(String, u64, u64)> {
+    let mut out = Vec::new();
+    {
+        let g = SPANS.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(m) = g.as_ref() {
+            for (name, s) in m {
+                let (t, c) = s.get();
+                out.push((name.clone(), t, c));
+            }
+        }
+    }
+    for (fam, t, c) in kernel_totals() {
+        if c > 0 {
+            out.push((fam.name().to_string(), t, c));
+        }
+    }
+    out.sort();
+    out
+}
+
+/// RAII span: times from construction to drop, accumulates into the
+/// global table, and (at trace level) pushes one ring event on the
+/// calling thread's trace row. `name` must be `'static` so trace
+/// records stay allocation-free.
+pub struct SpanGuard {
+    name: &'static str,
+    stat: &'static SpanStat,
+    start: Instant,
+    id: u64,
+}
+
+/// Open a coarse span. Usage: `let _s = obs::span("serve.decode");`.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    SpanGuard { name, stat: span_stat(name), start: Instant::now(), id: u64::MAX }
+}
+
+impl SpanGuard {
+    /// Attach a numeric id (request id) rendered as `args.id` in the
+    /// trace event.
+    pub fn with_id(mut self, id: u64) -> Self {
+        self.id = id;
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let dur = self.start.elapsed();
+        self.stat.add(dur);
+        if trace_on() {
+            super::trace::push_span_at(
+                self.name,
+                super::thread_tid(),
+                super::us_since_epoch(self.start),
+                dur.as_micros() as u64,
+                self.id,
+            );
+        }
+    }
+}
+
+/// Credit a pre-measured duration to `name` (for call sites that must
+/// keep their own `Instant` because a closure would double-borrow).
+/// Trace-level: the event is back-dated to `now - d`.
+pub fn span_add(name: &'static str, d: Duration) {
+    span_stat(name).add(d);
+    if trace_on() {
+        let now = Instant::now();
+        let start = now.checked_sub(d).unwrap_or(now);
+        super::trace::push_span_at(
+            name,
+            super::thread_tid(),
+            super::us_since_epoch(start),
+            d.as_micros() as u64,
+            u64::MAX,
+        );
+    }
+}
+
+/// The kernel dispatch families of `sparse::kernels` (one scope per
+/// `*_into` entry point).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum KernelFamily {
+    GemmNt = 0,
+    GemmNn,
+    GemmTn,
+    SpmmNt,
+    SpmmNn,
+    SpmmTn,
+    SpmmNtCm,
+    SpmmNtT,
+    SpmmNtTcm,
+    SpmmNnCm,
+    SpmmTnCm,
+    Transpose,
+}
+
+/// Number of kernel families (size of the fixed stats array).
+pub const KERNEL_FAMILIES: usize = 12;
+
+const FAMILY_NAMES: [&str; KERNEL_FAMILIES] = [
+    "kernel.gemm_nt",
+    "kernel.gemm_nn",
+    "kernel.gemm_tn",
+    "kernel.spmm_nt",
+    "kernel.spmm_nn",
+    "kernel.spmm_tn",
+    "kernel.spmm_nt_cm",
+    "kernel.spmm_nt_t",
+    "kernel.spmm_nt_tcm",
+    "kernel.spmm_nn_cm",
+    "kernel.spmm_tn_cm",
+    "kernel.transpose",
+];
+
+impl KernelFamily {
+    /// Span/trace name for the family ("kernel.spmm_nt" etc.).
+    pub fn name(self) -> &'static str {
+        FAMILY_NAMES[self as usize]
+    }
+}
+
+fn kernel_stats() -> &'static [SpanStat; KERNEL_FAMILIES] {
+    static STATS: OnceLock<[SpanStat; KERNEL_FAMILIES]> = OnceLock::new();
+    STATS.get_or_init(Default::default)
+}
+
+/// (family, total nanoseconds, count) for every kernel family.
+pub fn kernel_totals() -> Vec<(KernelFamily, u64, u64)> {
+    const FAMS: [KernelFamily; KERNEL_FAMILIES] = [
+        KernelFamily::GemmNt,
+        KernelFamily::GemmNn,
+        KernelFamily::GemmTn,
+        KernelFamily::SpmmNt,
+        KernelFamily::SpmmNn,
+        KernelFamily::SpmmTn,
+        KernelFamily::SpmmNtCm,
+        KernelFamily::SpmmNtT,
+        KernelFamily::SpmmNtTcm,
+        KernelFamily::SpmmNnCm,
+        KernelFamily::SpmmTnCm,
+        KernelFamily::Transpose,
+    ];
+    let stats = kernel_stats();
+    FAMS.iter()
+        .map(|&f| {
+            let (t, c) = stats[f as usize].get();
+            (f, t, c)
+        })
+        .collect()
+}
+
+/// Kernel trace events shorter than this are dropped (sub-20µs
+/// dispatches would swamp the ring without being readable).
+pub const KERNEL_TRACE_MIN_US: u64 = 20;
+
+/// RAII kernel-family scope: inert (`start == None`, no clock read)
+/// below metrics level.
+pub struct KernelScope {
+    fam: KernelFamily,
+    start: Option<Instant>,
+}
+
+/// Open a kernel-family scope at a dispatch entry point.
+#[inline]
+pub fn kernel_scope(fam: KernelFamily) -> KernelScope {
+    let start = if metrics_on() { Some(Instant::now()) } else { None };
+    KernelScope { fam, start }
+}
+
+impl Drop for KernelScope {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur = start.elapsed();
+        kernel_stats()[self.fam as usize].add(dur);
+        let dur_us = dur.as_micros() as u64;
+        if dur_us >= KERNEL_TRACE_MIN_US && trace_on() {
+            super::trace::push_span_at(
+                self.fam.name(),
+                super::thread_tid(),
+                super::us_since_epoch(start),
+                dur_us,
+                u64::MAX,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_accumulate_even_when_off() {
+        // Regardless of the global level (other tests may raise it),
+        // coarse spans always land in the table.
+        let (t0, c0) = span_total("test.span.acc");
+        {
+            let _s = span("test.span.acc");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let (t1, c1) = span_total("test.span.acc");
+        assert_eq!(c1, c0 + 1);
+        assert!(t1 >= t0 + 1_500_000, "{t1} vs {t0}");
+        span_add("test.span.acc", Duration::from_millis(1));
+        let (t2, c2) = span_total("test.span.acc");
+        assert_eq!(c2, c0 + 2);
+        assert!(t2 >= t1 + 1_000_000);
+    }
+
+    #[test]
+    fn unknown_span_is_zero() {
+        assert_eq!(span_total("test.span.never"), (0, 0));
+    }
+
+    #[test]
+    fn kernel_family_names_are_distinct() {
+        let mut names: Vec<_> = FAMILY_NAMES.to_vec();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), KERNEL_FAMILIES);
+        assert_eq!(KernelFamily::Transpose.name(), "kernel.transpose");
+    }
+
+    #[test]
+    fn kernel_scope_accounts_when_metrics_on() {
+        crate::obs::set_level(crate::obs::Level::Metrics);
+        let (t0, c0) = {
+            let (_, t, c) = kernel_totals()[KernelFamily::GemmTn as usize];
+            (t, c)
+        };
+        {
+            let _k = kernel_scope(KernelFamily::GemmTn);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let (_, t1, c1) = kernel_totals()[KernelFamily::GemmTn as usize];
+        assert_eq!(c1, c0 + 1);
+        assert!(t1 > t0);
+    }
+}

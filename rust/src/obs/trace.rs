@@ -1,0 +1,407 @@
+//! Ring-buffered span event sink and Chrome trace-event export, plus
+//! the validators behind `sparse24 check-trace`.
+//!
+//! Span drops push one fixed-size record (name pointer, tid, start µs,
+//! duration µs, optional id) into a ring preallocated to
+//! [`TRACE_CAPACITY`] records — steady state allocates nothing; when
+//! full, the oldest records are overwritten and counted as dropped.
+//!
+//! [`write_trace`] renders the surviving records as a Chrome
+//! trace-event JSON array (one event per line — equally valid as
+//! line-oriented JSONL after stripping the array punctuation), loadable
+//! in Perfetto or `chrome://tracing`. Records are grouped per trace
+//! row (tid), sorted by start time, and unrolled into `B`/`E` begin/end
+//! pairs with a sweep that closes any span whose end precedes the next
+//! start — so every emitted `B` has a matching `E` and per-row
+//! timestamps are monotone *by construction*, which is exactly what
+//! [`check_trace_file`] then verifies from the file alone.
+//!
+//! Real threads trace on their own rows (`obs::thread_tid`). Request
+//! lifecycles (queued → prefill → decode) are sequential per request
+//! but overlap *across* requests, so they get virtual rows at
+//! [`REQ_TID_BASE`]` + (id % 4096)` — B/E nesting stays well-formed
+//! without async-event machinery.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Ring capacity in span records (each record becomes a B/E pair on
+/// export). 64Ki records ≈ a few seconds of fully-traced serving.
+pub const TRACE_CAPACITY: usize = 65536;
+
+/// Virtual trace-row base for per-request lifecycle spans
+/// (`tid = REQ_TID_BASE + request_id % 4096`).
+pub const REQ_TID_BASE: u32 = 1_000_000;
+
+#[derive(Clone, Copy)]
+struct Rec {
+    name: &'static str,
+    tid: u32,
+    ts_us: u64,
+    dur_us: u64,
+    /// `u64::MAX` = no id attached.
+    id: u64,
+}
+
+struct Sink {
+    ring: Vec<Rec>,
+    /// Overwrite cursor once the ring is full.
+    next: usize,
+    dropped: u64,
+}
+
+static SINK: Mutex<Sink> =
+    Mutex::new(Sink { ring: Vec::new(), next: 0, dropped: 0 });
+
+/// Push one span record (called from span/kernel-scope drops at trace
+/// level, or directly for back-dated spans like request lifecycles).
+/// `id == u64::MAX` means "no id".
+pub fn push_span_at(name: &'static str, tid: u32, ts_us: u64, dur_us: u64, id: u64) {
+    let mut g = SINK.lock().unwrap_or_else(|p| p.into_inner());
+    if g.ring.capacity() == 0 {
+        g.ring.reserve_exact(TRACE_CAPACITY);
+    }
+    let rec = Rec { name, tid, ts_us, dur_us, id };
+    if g.ring.len() < TRACE_CAPACITY {
+        g.ring.push(rec);
+    } else {
+        let at = g.next % TRACE_CAPACITY;
+        g.ring[at] = rec;
+        g.next = at + 1;
+        g.dropped += 1;
+    }
+}
+
+/// Number of records currently buffered.
+pub fn trace_len() -> usize {
+    SINK.lock().unwrap_or_else(|p| p.into_inner()).ring.len()
+}
+
+/// Number of records lost to ring overwrite so far.
+pub fn trace_dropped() -> u64 {
+    SINK.lock().unwrap_or_else(|p| p.into_inner()).dropped
+}
+
+/// Drop all buffered records (tests).
+pub fn clear_trace() {
+    let mut g = SINK.lock().unwrap_or_else(|p| p.into_inner());
+    g.ring.clear();
+    g.next = 0;
+    g.dropped = 0;
+}
+
+/// Export the buffered records as a Chrome trace-event JSON file.
+/// Returns (spans written, records dropped by the ring). The buffer is
+/// left intact — export is a snapshot, not a drain.
+pub fn write_trace(path: &std::path::Path) -> Result<(usize, u64)> {
+    let (recs, dropped) = {
+        let g = SINK.lock().unwrap_or_else(|p| p.into_inner());
+        (g.ring.clone(), g.dropped)
+    };
+    let mut rows: BTreeMap<u32, Vec<Rec>> = BTreeMap::new();
+    for r in recs {
+        rows.entry(r.tid).or_default().push(r);
+    }
+    let mut out = String::new();
+    out.push_str("[\n");
+    out.push_str(
+        "{\"ph\":\"M\",\"pid\":1,\"tid\":0,\"ts\":0,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"sparse24\"}}",
+    );
+    let mut spans = 0usize;
+    for (tid, mut row) in rows {
+        // Parents first on ties so the sweep nests correctly.
+        row.sort_by(|a, b| {
+            a.ts_us.cmp(&b.ts_us).then(b.dur_us.cmp(&a.dur_us))
+        });
+        // Sweep: open each span, closing everything that ended before
+        // it starts. Spans on one row are nested or disjoint by
+        // construction (RAII per thread, sequential per request row),
+        // so this emits balanced, monotone B/E pairs even when µs
+        // truncation makes intervals touch.
+        let mut stack: Vec<Rec> = Vec::new();
+        for r in row {
+            while let Some(top) = stack.last() {
+                if top.ts_us + top.dur_us <= r.ts_us {
+                    emit_e(&mut out, stack.pop().unwrap());
+                } else {
+                    break;
+                }
+            }
+            emit_b(&mut out, tid, &r);
+            stack.push(r);
+            spans += 1;
+        }
+        while let Some(top) = stack.pop() {
+            emit_e(&mut out, top);
+        }
+    }
+    out.push_str("\n]\n");
+    std::fs::write(path, out)
+        .with_context(|| format!("writing trace {}", path.display()))?;
+    Ok((spans, dropped))
+}
+
+fn emit_b(out: &mut String, tid: u32, r: &Rec) {
+    let _ = write!(
+        out,
+        ",\n{{\"ph\":\"B\",\"pid\":1,\"tid\":{tid},\"ts\":{},\"name\":{}",
+        r.ts_us,
+        Json::Str(r.name.to_string()).to_string(),
+    );
+    if r.id != u64::MAX {
+        let _ = write!(out, ",\"args\":{{\"id\":{}}}", r.id);
+    }
+    out.push('}');
+}
+
+fn emit_e(out: &mut String, r: Rec) {
+    let _ = write!(
+        out,
+        ",\n{{\"ph\":\"E\",\"pid\":1,\"tid\":{},\"ts\":{},\"name\":{}}}",
+        r.tid,
+        r.ts_us + r.dur_us,
+        Json::Str(r.name.to_string()).to_string(),
+    );
+}
+
+/// What [`check_trace_file`] verified.
+#[derive(Clone, Debug)]
+pub struct TraceCheck {
+    /// Total events in the file (B + E + metadata).
+    pub events: usize,
+    /// Matched B/E pairs.
+    pub spans: usize,
+    /// Distinct trace rows seen.
+    pub tids: usize,
+}
+
+/// Validate a Chrome trace file: every line parses, events carry
+/// ph/pid/tid/ts, exactly one pid, per-row timestamps are monotone,
+/// and every `B` is closed by a name-matched `E` (LIFO). Errors name
+/// the first offending line.
+pub fn check_trace_file(path: &std::path::Path) -> Result<TraceCheck> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut events = 0usize;
+    let mut spans = 0usize;
+    let mut pid_seen: Option<i64> = None;
+    // per-tid open-span stack + last timestamp
+    let mut stacks: BTreeMap<i64, Vec<String>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<i64, f64> = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw
+            .trim()
+            .trim_start_matches('[')
+            .trim_end_matches(']')
+            .trim()
+            .trim_start_matches(',')
+            .trim_end_matches(',')
+            .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ev = Json::parse(line)
+            .with_context(|| format!("trace line {} is not JSON", lineno + 1))?;
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str().map(str::to_string))
+            .with_context(|| format!("trace line {}: missing ph", lineno + 1))?;
+        let pid = ev
+            .get("pid")
+            .and_then(|p| p.as_f64())
+            .with_context(|| format!("trace line {}: missing pid", lineno + 1))?
+            as i64;
+        let tid = ev
+            .get("tid")
+            .and_then(|t| t.as_f64())
+            .with_context(|| format!("trace line {}: missing tid", lineno + 1))?
+            as i64;
+        let ts = ev
+            .get("ts")
+            .and_then(|t| t.as_f64())
+            .with_context(|| format!("trace line {}: missing ts", lineno + 1))?;
+        events += 1;
+        match pid_seen {
+            None => pid_seen = Some(pid),
+            Some(p) if p != pid => {
+                bail!("trace line {}: pid {} after pid {}", lineno + 1, pid, p)
+            }
+            _ => {}
+        }
+        if ph == "M" {
+            continue;
+        }
+        if let Some(&prev) = last_ts.get(&tid) {
+            if ts < prev {
+                bail!(
+                    "trace line {}: tid {} ts went backwards ({} < {})",
+                    lineno + 1,
+                    tid,
+                    ts,
+                    prev
+                );
+            }
+        }
+        last_ts.insert(tid, ts);
+        match ph.as_str() {
+            "B" => {
+                let name = ev
+                    .get("name")
+                    .and_then(|n| n.as_str().map(str::to_string))
+                    .with_context(|| {
+                        format!("trace line {}: B without name", lineno + 1)
+                    })?;
+                stacks.entry(tid).or_default().push(name);
+            }
+            "E" => {
+                let open = stacks.entry(tid).or_default().pop().with_context(
+                    || format!("trace line {}: E with no open B on tid {tid}",
+                               lineno + 1),
+                )?;
+                if let Ok(name) = ev.get("name").and_then(|n| n.as_str()) {
+                    if name != open {
+                        bail!(
+                            "trace line {}: E \"{}\" closes B \"{}\"",
+                            lineno + 1,
+                            name,
+                            open
+                        );
+                    }
+                }
+                spans += 1;
+            }
+            other => bail!("trace line {}: unsupported ph \"{other}\"", lineno + 1),
+        }
+    }
+    for (tid, stack) in &stacks {
+        if let Some(open) = stack.last() {
+            bail!("unclosed B \"{open}\" on tid {tid} at end of trace");
+        }
+    }
+    if events == 0 {
+        bail!("trace {} contains no events", path.display());
+    }
+    Ok(TraceCheck { events, spans, tids: stacks.len() })
+}
+
+/// What [`check_metrics_file`] verified.
+#[derive(Clone, Debug)]
+pub struct MetricsCheck {
+    /// JSONL lines in the file.
+    pub lines: usize,
+}
+
+/// Validate a metrics JSONL stream: every line is a JSON object with
+/// `ts_ms` (monotone) and the counters/gauges/hists sections.
+pub fn check_metrics_file(path: &std::path::Path) -> Result<MetricsCheck> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading metrics {}", path.display()))?;
+    let mut lines = 0usize;
+    let mut prev_ts = f64::NEG_INFINITY;
+    for (lineno, raw) in text.lines().enumerate() {
+        if raw.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(raw)
+            .with_context(|| format!("metrics line {} is not JSON", lineno + 1))?;
+        let ts = j
+            .get("ts_ms")
+            .and_then(|t| t.as_f64())
+            .with_context(|| format!("metrics line {}: missing ts_ms", lineno + 1))?;
+        if ts < prev_ts {
+            bail!(
+                "metrics line {}: ts_ms went backwards ({ts} < {prev_ts})",
+                lineno + 1
+            );
+        }
+        prev_ts = ts;
+        for section in ["counters", "gauges", "hists"] {
+            j.get(section).with_context(|| {
+                format!("metrics line {}: missing {section}", lineno + 1)
+            })?;
+        }
+        lines += 1;
+    }
+    if lines == 0 {
+        bail!("metrics {} contains no lines", path.display());
+    }
+    Ok(MetricsCheck { lines })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sparse24_obs_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn export_pairs_and_validates() {
+        // Use distinct virtual rows so concurrent tests can't interleave
+        // records into this test's tids.
+        let base = REQ_TID_BASE + 3000;
+        push_span_at("test.outer", base, 100, 50, u64::MAX);
+        push_span_at("test.inner", base, 110, 10, 7);
+        push_span_at("test.later", base, 200, 5, u64::MAX);
+        push_span_at("test.other_row", base + 1, 10, 1000, u64::MAX);
+        let path = tmp("pairs.trace.json");
+        let (spans, _) = write_trace(&path).unwrap();
+        assert!(spans >= 4);
+        let chk = check_trace_file(&path).unwrap();
+        assert!(chk.spans >= 4, "{chk:?}");
+        assert!(chk.tids >= 2);
+        // the whole file is also one valid JSON document
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(doc.as_arr().unwrap().len() >= chk.events);
+    }
+
+    #[test]
+    fn checker_rejects_unbalanced_and_backwards() {
+        let path = tmp("bad.trace.json");
+        std::fs::write(
+            &path,
+            "{\"ph\":\"B\",\"pid\":1,\"tid\":5,\"ts\":10,\"name\":\"x\"}\n",
+        )
+        .unwrap();
+        let err = check_trace_file(&path).unwrap_err().to_string();
+        assert!(err.contains("unclosed"), "{err}");
+        std::fs::write(
+            &path,
+            "{\"ph\":\"B\",\"pid\":1,\"tid\":5,\"ts\":10,\"name\":\"x\"}\n\
+             {\"ph\":\"E\",\"pid\":1,\"tid\":5,\"ts\":9,\"name\":\"x\"}\n",
+        )
+        .unwrap();
+        let err = check_trace_file(&path).unwrap_err().to_string();
+        assert!(err.contains("backwards"), "{err}");
+        std::fs::write(
+            &path,
+            "{\"ph\":\"E\",\"pid\":1,\"tid\":5,\"ts\":10,\"name\":\"x\"}\n",
+        )
+        .unwrap();
+        let err = check_trace_file(&path).unwrap_err().to_string();
+        assert!(err.contains("no open B"), "{err}");
+    }
+
+    #[test]
+    fn metrics_checker_accepts_registry_lines() {
+        crate::obs::set_level(crate::obs::Level::Metrics);
+        crate::obs::counter("test.trace.metrics").inc();
+        let path = tmp("metrics.jsonl");
+        let l1 = crate::obs::metrics_line();
+        let l2 = crate::obs::metrics_line();
+        std::fs::write(&path, format!("{l1}\n{l2}\n")).unwrap();
+        let chk = check_metrics_file(&path).unwrap();
+        assert_eq!(chk.lines, 2);
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(check_metrics_file(&path).is_err());
+    }
+}

@@ -100,7 +100,7 @@ pub use engine::{synthetic_checkpoint, DecodeLane, InferEngine, InferModel};
 pub use faultgen::{run_fault_bench, FaultBenchResult, FaultConfig};
 pub use generate::{argmax, sample, Sampling};
 pub use kv_cache::{KvLayout, KvPool, KvStats};
-pub use protocol::{ClientFrame, GenRequest, ServerFrame};
+pub use protocol::{ClientFrame, GenRequest, ServerFrame, StatsGauges};
 pub use scheduler::{
     Completion, CompletionStatus, Rejected, Request, SchedCounters, Scheduler,
     StepReport, DEFAULT_PREFILL_CHUNK,

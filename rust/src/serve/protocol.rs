@@ -116,6 +116,24 @@ impl ClientFrame {
     }
 }
 
+/// Telemetry summary carried by the expanded `stats` frame: KV pool
+/// occupancy/fragmentation plus latency summaries read from the metrics
+/// registry (log2-bucket histogram quantiles, microseconds — ~2x
+/// relative resolution, see `docs/OBSERVABILITY.md`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsGauges {
+    pub kv_total_pages: usize,
+    pub kv_free_pages: usize,
+    /// active sequences currently on the page-walk (non-contiguous)
+    /// attention path
+    pub kv_frag_seqs: usize,
+    pub ttft_p50_us: u64,
+    pub ttft_p99_us: u64,
+    /// inter-token gap (per decode lane)
+    pub gap_p50_us: u64,
+    pub gap_p99_us: u64,
+}
+
 /// Server → client frames.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ServerFrame {
@@ -137,6 +155,7 @@ pub enum ServerFrame {
         draining: bool,
         steps: u64,
         counters: SchedCounters,
+        gauges: StatsGauges,
     },
     /// reply to `health`
     Health { draining: bool },
@@ -169,7 +188,7 @@ impl ServerFrame {
             ServerFrame::Error { message } => {
                 obj(vec![("event", s("error")), ("message", s(message))])
             }
-            ServerFrame::Stats { active, pending, draining, steps, counters } => {
+            ServerFrame::Stats { active, pending, draining, steps, counters, gauges } => {
                 obj(vec![
                     ("event", s("stats")),
                     ("active", num(*active as f64)),
@@ -181,6 +200,13 @@ impl ServerFrame {
                     ("deadline_evicted", num(counters.deadline_evicted as f64)),
                     ("incomplete", num(counters.incomplete as f64)),
                     ("shed", num(counters.shed as f64)),
+                    ("kv_total_pages", num(gauges.kv_total_pages as f64)),
+                    ("kv_free_pages", num(gauges.kv_free_pages as f64)),
+                    ("kv_frag_seqs", num(gauges.kv_frag_seqs as f64)),
+                    ("ttft_p50_us", num(gauges.ttft_p50_us as f64)),
+                    ("ttft_p99_us", num(gauges.ttft_p99_us as f64)),
+                    ("gap_p50_us", num(gauges.gap_p50_us as f64)),
+                    ("gap_p99_us", num(gauges.gap_p99_us as f64)),
                 ])
             }
             ServerFrame::Health { draining } => obj(vec![
@@ -223,19 +249,35 @@ impl ServerFrame {
             "error" => ServerFrame::Error {
                 message: j.get("message")?.as_str()?.to_string(),
             },
-            "stats" => ServerFrame::Stats {
-                active: j.get("active")?.as_usize()?,
-                pending: j.get("pending")?.as_usize()?,
-                draining: j.get("draining")?.as_bool()?,
-                steps: j.get("steps")?.as_usize()? as u64,
-                counters: SchedCounters {
-                    finished: j.get("finished")?.as_usize()? as u64,
-                    cancelled: j.get("cancelled")?.as_usize()? as u64,
-                    deadline_evicted: j.get("deadline_evicted")?.as_usize()? as u64,
-                    incomplete: j.get("incomplete")?.as_usize()? as u64,
-                    shed: j.get("shed")?.as_usize()? as u64,
-                },
-            },
+            "stats" => {
+                // gauge fields default to 0 when absent so a new client
+                // can still read an old server's stats line
+                let u = |key: &str| -> u64 {
+                    j.opt(key).and_then(|v| v.as_usize().ok()).unwrap_or(0) as u64
+                };
+                ServerFrame::Stats {
+                    active: j.get("active")?.as_usize()?,
+                    pending: j.get("pending")?.as_usize()?,
+                    draining: j.get("draining")?.as_bool()?,
+                    steps: j.get("steps")?.as_usize()? as u64,
+                    counters: SchedCounters {
+                        finished: j.get("finished")?.as_usize()? as u64,
+                        cancelled: j.get("cancelled")?.as_usize()? as u64,
+                        deadline_evicted: j.get("deadline_evicted")?.as_usize()? as u64,
+                        incomplete: j.get("incomplete")?.as_usize()? as u64,
+                        shed: j.get("shed")?.as_usize()? as u64,
+                    },
+                    gauges: StatsGauges {
+                        kv_total_pages: u("kv_total_pages") as usize,
+                        kv_free_pages: u("kv_free_pages") as usize,
+                        kv_frag_seqs: u("kv_frag_seqs") as usize,
+                        ttft_p50_us: u("ttft_p50_us"),
+                        ttft_p99_us: u("ttft_p99_us"),
+                        gap_p50_us: u("gap_p50_us"),
+                        gap_p99_us: u("gap_p99_us"),
+                    },
+                }
+            }
             "health" => ServerFrame::Health {
                 draining: j.get("status")?.as_str()? == "draining",
             },
@@ -315,6 +357,15 @@ mod tests {
                     incomplete: 0,
                     shed: 3,
                 },
+                gauges: StatsGauges {
+                    kv_total_pages: 64,
+                    kv_free_pages: 40,
+                    kv_frag_seqs: 1,
+                    ttft_p50_us: 1536,
+                    ttft_p99_us: 6144,
+                    gap_p50_us: 768,
+                    gap_p99_us: 3072,
+                },
             },
             ServerFrame::Health { draining: true },
         ];
@@ -322,6 +373,18 @@ mod tests {
             let line = f.to_line();
             assert!(line.ends_with('\n'));
             assert_eq!(ServerFrame::parse(&line).unwrap(), f, "line {line:?}");
+        }
+    }
+
+    #[test]
+    fn stats_without_gauge_keys_parses_with_defaults() {
+        // a pre-telemetry server's stats line (no gauge fields)
+        let line = r#"{"event":"stats","active":0,"pending":0,"draining":false,"steps":1,"finished":0,"cancelled":0,"deadline_evicted":0,"incomplete":0,"shed":0}"#;
+        match ServerFrame::parse(line).unwrap() {
+            ServerFrame::Stats { gauges, .. } => {
+                assert_eq!(gauges, StatsGauges::default())
+            }
+            other => panic!("parsed as {other:?}"),
         }
     }
 

@@ -56,6 +56,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::obs::{self, Counter, Gauge, Histogram};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -207,6 +208,9 @@ pub struct StepReport {
 struct QueuedReq {
     req: Request,
     deadline_step: Option<u64>,
+    /// submit instant, telemetry only. `None` below `Level::Metrics`,
+    /// so the telemetry-off path performs no extra clock reads.
+    born: Option<Instant>,
 }
 
 struct ActiveSeq {
@@ -230,6 +234,15 @@ struct ActiveSeq {
     /// the queued request)
     deadline_step: Option<u64>,
     deadline_at: Option<Instant>,
+    /// lifecycle instants, telemetry only (`None` below
+    /// `Level::Metrics`): submit, admission, first output token, and
+    /// the most recent emission — the TTFT / inter-token-gap /
+    /// queue-wait histogram sources and the per-request trace row's
+    /// phase boundaries. Never read by the scheduling logic.
+    born: Option<Instant>,
+    admitted_at: Option<Instant>,
+    first_tok_at: Option<Instant>,
+    last_emit: Option<Instant>,
 }
 
 impl ActiveSeq {
@@ -240,6 +253,68 @@ impl ActiveSeq {
     fn done(&self) -> bool {
         !self.prefilling()
             && (self.out.len() >= self.max_new || self.pos >= self.max_total)
+    }
+}
+
+/// Interned `&'static` registry handles, resolved once per scheduler so
+/// the per-step record path never touches the intern mutex. All record
+/// calls gate internally on the global telemetry level.
+#[derive(Clone, Copy)]
+struct ServeMetrics {
+    queue_wait_us: &'static Histogram,
+    ttft_us: &'static Histogram,
+    gap_us: &'static Histogram,
+    prefill_us: &'static Histogram,
+    decode_us: &'static Histogram,
+    step_us: &'static Histogram,
+    kv_occupancy: &'static Gauge,
+    kv_frag: &'static Gauge,
+    pending: &'static Gauge,
+    active: &'static Gauge,
+    admitted: &'static Counter,
+    finished: &'static Counter,
+    cancelled: &'static Counter,
+    deadline_evicted: &'static Counter,
+    incomplete: &'static Counter,
+    shed: &'static Counter,
+}
+
+impl ServeMetrics {
+    fn new() -> ServeMetrics {
+        ServeMetrics {
+            queue_wait_us: obs::histogram("serve.queue_wait_us"),
+            ttft_us: obs::histogram("serve.ttft_us"),
+            gap_us: obs::histogram("serve.gap_us"),
+            prefill_us: obs::histogram("serve.prefill_us"),
+            decode_us: obs::histogram("serve.decode_us"),
+            step_us: obs::histogram("serve.step_us"),
+            kv_occupancy: obs::gauge("serve.kv_occupancy"),
+            kv_frag: obs::gauge("serve.kv_frag_share"),
+            pending: obs::gauge("serve.pending"),
+            active: obs::gauge("serve.active"),
+            admitted: obs::counter("serve.admitted"),
+            finished: obs::counter("serve.finished"),
+            cancelled: obs::counter("serve.cancelled"),
+            deadline_evicted: obs::counter("serve.deadline_evicted"),
+            incomplete: obs::counter("serve.incomplete"),
+            shed: obs::counter("serve.shed"),
+        }
+    }
+}
+
+/// Close one phase of a request's lifecycle on its virtual trace row
+/// (`REQ_TID_BASE + id % 4096` — per-request rows without async-event
+/// machinery; B/E nesting on each row stays well-formed because the
+/// phases of one request never overlap).
+fn push_req_span(name: &'static str, id: u64, start: Instant, end: Instant) {
+    if obs::trace_on() {
+        obs::push_span_at(
+            name,
+            obs::REQ_TID_BASE + (id % 4096) as u32,
+            obs::us_since_epoch(start),
+            end.duration_since(start).as_micros() as u64,
+            id,
+        );
     }
 }
 
@@ -262,6 +337,7 @@ pub struct Scheduler {
     lane_seq: Vec<usize>,
     logits: Tensor,
     sample_work: Vec<(f32, u32)>,
+    m: ServeMetrics,
     pub steps: u64,
 }
 
@@ -320,6 +396,7 @@ impl Scheduler {
             lane_seq: Vec::with_capacity(max_seqs),
             logits: Tensor::zeros(&[0]),
             sample_work: Vec::new(),
+            m: ServeMetrics::new(),
             steps: 0,
         }
     }
@@ -333,7 +410,8 @@ impl Scheduler {
         let n_ctx = self.engine.model.dims.n_ctx;
         req.prompt.truncate(n_ctx);
         let deadline_step = req.deadline_steps.map(|n| self.steps + n);
-        self.queue.push_back(QueuedReq { req, deadline_step });
+        let born = if obs::metrics_on() { Some(Instant::now()) } else { None };
+        self.queue.push_back(QueuedReq { req, deadline_step, born });
     }
 
     /// Bound for [`Scheduler::try_submit`]'s pending queue. `0` means
@@ -350,6 +428,7 @@ impl Scheduler {
     pub fn try_submit(&mut self, req: Request) -> Result<(), Rejected> {
         if self.queue.len() >= self.max_pending && !self.can_admit_now(&req) {
             self.counters.shed += 1;
+            self.m.shed.inc();
             return Err(Rejected { retry_after_steps: self.retry_after_hint() });
         }
         self.submit(req);
@@ -399,6 +478,7 @@ impl Scheduler {
         if let Some(qi) = self.queue.iter().position(|q| q.req.id == id) {
             let q = self.queue.remove(qi).unwrap();
             self.counters.cancelled += 1;
+            self.m.cancelled.inc();
             return Some(Completion {
                 id,
                 prompt_len: q.req.prompt.len(),
@@ -413,6 +493,7 @@ impl Scheduler {
             .expect("scheduler already shut down")
             .release(seq.slot);
         self.counters.cancelled += 1;
+        self.m.cancelled.inc();
         Some(Completion {
             id,
             prompt_len: seq.prompt.len(),
@@ -446,12 +527,17 @@ impl Scheduler {
         }
         match status {
             CompletionStatus::Cancelled => {
-                self.counters.cancelled += out.len() as u64
+                self.counters.cancelled += out.len() as u64;
+                self.m.cancelled.add(out.len() as u64);
             }
             CompletionStatus::DeadlineExceeded => {
-                self.counters.deadline_evicted += out.len() as u64
+                self.counters.deadline_evicted += out.len() as u64;
+                self.m.deadline_evicted.add(out.len() as u64);
             }
-            _ => self.counters.incomplete += out.len() as u64,
+            _ => {
+                self.counters.incomplete += out.len() as u64;
+                self.m.incomplete.add(out.len() as u64);
+            }
         }
         out
     }
@@ -514,6 +600,8 @@ impl Scheduler {
     /// at most `max_batch_tokens` tokens (decode lanes + prefill
     /// chunks).
     pub fn step(&mut self) -> StepReport {
+        let _step_span = obs::span("serve.step");
+        let t_step = if obs::metrics_on() { Some(Instant::now()) } else { None };
         let mut report = StepReport::default();
         let n_ctx = self.engine.model.dims.n_ctx;
         let mut kv = self.kv.take().expect("scheduler already shut down");
@@ -538,7 +626,19 @@ impl Scheduler {
                 break;
             }
             let Some(slot) = kv.acquire(max_total) else { break };
-            let QueuedReq { req, deadline_step } = self.queue.pop_front().unwrap();
+            let QueuedReq { req, deadline_step, born } = self.queue.pop_front().unwrap();
+            let admitted_at = if obs::metrics_on() {
+                let now = Instant::now();
+                if let Some(b) = born {
+                    self.m
+                        .queue_wait_us
+                        .record(now.duration_since(b).as_micros() as u64);
+                    push_req_span("req.queued", req.id, b, now);
+                }
+                Some(now)
+            } else {
+                None
+            };
             let rng = Rng::new(self.seed ^ req.id.wrapping_mul(0x9E3779B97F4A7C15));
             self.active.push(ActiveSeq {
                 id: req.id,
@@ -553,8 +653,13 @@ impl Scheduler {
                 rng,
                 deadline_step,
                 deadline_at: req.deadline_at,
+                born,
+                admitted_at,
+                first_tok_at: None,
+                last_emit: None,
             });
             report.admitted += 1;
+            self.m.admitted.inc();
         }
 
         // --- lane reservation: decode before prefill in the step budget --
@@ -574,6 +679,7 @@ impl Scheduler {
         // --- chunked prefill with the remaining budget -------------------
         let t_prefill = Instant::now();
         {
+            let m = self.m;
             let engine = &mut self.engine;
             let logits = &mut self.logits;
             let sampling = &self.sampling;
@@ -603,15 +709,33 @@ impl Scheduler {
                     report.decoded += 1;
                     report.emitted.push((seq.id, first));
                     report.first_token_ids.push(seq.id);
+                    if obs::metrics_on() {
+                        let now = Instant::now();
+                        if let Some(b) = seq.born {
+                            m.ttft_us
+                                .record(now.duration_since(b).as_micros() as u64);
+                        }
+                        if let Some(a) = seq.admitted_at {
+                            push_req_span("req.prefill", seq.id, a, now);
+                        }
+                        seq.first_tok_at = Some(now);
+                        seq.last_emit = Some(now);
+                    }
                 }
             }
         }
-        report.prefill_ms = t_prefill.elapsed().as_secs_f64() * 1e3;
+        let prefill_dur = t_prefill.elapsed();
+        report.prefill_ms = prefill_dur.as_secs_f64() * 1e3;
+        if report.prefilled > 0 {
+            obs::span_add("serve.prefill", prefill_dur);
+            self.m.prefill_us.record(prefill_dur.as_micros() as u64);
+        }
 
         // --- batched decode over the reserved lanes ----------------------
         let t_decode = Instant::now();
         if !self.lanes.is_empty() {
             self.engine.decode_step(&self.lanes, &mut kv, &mut self.logits);
+            let tnow = if obs::metrics_on() { Some(Instant::now()) } else { None };
             let vocab = self.engine.model.dims.vocab;
             for (row, &idx) in self.lane_seq.iter().enumerate() {
                 let seq = &mut self.active[idx];
@@ -623,8 +747,19 @@ impl Scheduler {
                 seq.out.push(tok);
                 report.decoded += 1;
                 report.emitted.push((seq.id, tok));
+                if let Some(now) = tnow {
+                    if let Some(last) = seq.last_emit {
+                        self.m
+                            .gap_us
+                            .record(now.duration_since(last).as_micros() as u64);
+                    }
+                    seq.last_emit = Some(now);
+                }
             }
-            report.decode_ms = t_decode.elapsed().as_secs_f64() * 1e3;
+            let decode_dur = t_decode.elapsed();
+            report.decode_ms = decode_dur.as_secs_f64() * 1e3;
+            obs::span_add("serve.decode", decode_dur);
+            self.m.decode_us.record(decode_dur.as_micros() as u64);
         }
 
         // --- retirement ---------------------------------------------------
@@ -634,6 +769,12 @@ impl Scheduler {
                 let seq = self.active.remove(i);
                 kv.release(seq.slot);
                 self.counters.finished += 1;
+                self.m.finished.inc();
+                if obs::trace_on() {
+                    if let Some(ft) = seq.first_tok_at {
+                        push_req_span("req.decode", seq.id, ft, Instant::now());
+                    }
+                }
                 report.finished.push(Completion {
                     id: seq.id,
                     prompt_len: seq.prompt.len(),
@@ -647,6 +788,25 @@ impl Scheduler {
 
         self.kv = Some(kv);
         self.steps += 1;
+        if obs::metrics_on() {
+            if let Some(t) = t_step {
+                self.m.step_us.record(t.elapsed().as_micros() as u64);
+            }
+            let ks = self.kv_stats();
+            self.m.kv_occupancy.set(if ks.total_pages > 0 {
+                ks.mapped_pages as f64 / ks.total_pages as f64
+            } else {
+                0.0
+            });
+            self.m.kv_frag.set(if ks.active_seqs > 0 {
+                ks.noncontig_seqs as f64 / ks.active_seqs as f64
+            } else {
+                0.0
+            });
+            self.m.pending.set(self.queue.len() as f64);
+            self.m.active.set(self.active.len() as f64);
+        }
+        obs::maybe_emit_metrics();
         report
     }
 
@@ -669,6 +829,7 @@ impl Scheduler {
             if expired(self.queue[i].deadline_step, self.queue[i].req.deadline_at) {
                 let q = self.queue.remove(i).unwrap();
                 self.counters.deadline_evicted += 1;
+                self.m.deadline_evicted.inc();
                 report.finished.push(Completion {
                     id: q.req.id,
                     prompt_len: q.req.prompt.len(),
@@ -685,6 +846,7 @@ impl Scheduler {
                 let seq = self.active.remove(i);
                 kv.release(seq.slot);
                 self.counters.deadline_evicted += 1;
+                self.m.deadline_evicted.inc();
                 report.finished.push(Completion {
                     id: seq.id,
                     prompt_len: seq.prompt.len(),

@@ -63,7 +63,7 @@ use crate::model::ModelDims;
 
 use super::engine::{synthetic_checkpoint, InferEngine, InferModel};
 use super::generate::Sampling;
-use super::protocol::{ClientFrame, GenRequest, ServerFrame};
+use super::protocol::{ClientFrame, GenRequest, ServerFrame, StatsGauges};
 use super::scheduler::{
     Completion, CompletionStatus, Request, SchedCounters, Scheduler, StepReport,
 };
@@ -375,12 +375,28 @@ impl FrontEnd {
         match frame {
             ClientFrame::Generate(g) => self.handle_generate(conn, g),
             ClientFrame::Stats => {
+                // gauges come straight from the KV pool and the global
+                // telemetry registry — the same histograms `--metrics`
+                // emits, so the wire view can never diverge from it
+                let ks = self.sch.kv_stats();
+                let ttft = crate::obs::histogram("serve.ttft_us").snapshot();
+                let gap = crate::obs::histogram("serve.gap_us").snapshot();
+                let gauges = StatsGauges {
+                    kv_total_pages: ks.total_pages,
+                    kv_free_pages: ks.free_pages,
+                    kv_frag_seqs: ks.noncontig_seqs,
+                    ttft_p50_us: ttft.quantile(0.5) as u64,
+                    ttft_p99_us: ttft.quantile(0.99) as u64,
+                    gap_p50_us: gap.quantile(0.5) as u64,
+                    gap_p99_us: gap.quantile(0.99) as u64,
+                };
                 let f = ServerFrame::Stats {
                     active: self.sch.n_active(),
                     pending: self.sch.pending(),
                     draining: self.draining,
                     steps: self.sch.steps,
                     counters: self.sch.counters(),
+                    gauges,
                 };
                 self.send(conn, &f);
             }

@@ -49,6 +49,7 @@ use std::sync::atomic::{AtomicU8, Ordering};
 pub use scratch::{with_thread_scratch, Scratch};
 pub use threading::{num_threads, parallel_chunks, parallel_rows, set_num_threads};
 
+use crate::obs::{kernel_scope, KernelFamily};
 use crate::sparse::spmm::Compressed24;
 use crate::tensor::Tensor;
 
@@ -120,8 +121,16 @@ fn tiled_pays_off(flops: usize) -> bool {
 // The output-length asserts are load-bearing: the tiled backend writes
 // through raw pointers with only debug-level bounds checks, so an
 // undersized output must be rejected here, in release builds too.
+//
+// Each entry point opens an `obs::kernel_scope` — per-family time
+// accounting lives HERE, at the dispatch layer, never inside
+// `threading`/`tiled`: the pool's row partitioning and per-row
+// instruction sequences are untouched, so the bitwise thread-count
+// invariance of the numerics is preserved. Below Level::Metrics the
+// scope is a single relaxed load (no clock read).
 
 pub fn gemm_nt_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::GemmNt);
     let (p, q) = a.dims2();
     let (r, _) = b.dims2();
     assert_eq!(c.data.len(), p * r, "gemm_nt_into: output len");
@@ -133,6 +142,7 @@ pub fn gemm_nt_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
 }
 
 pub fn gemm_nn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::GemmNn);
     let (p, r) = a.dims2();
     let (_, q) = b.dims2();
     assert_eq!(c.data.len(), p * q, "gemm_nn_into: output len");
@@ -144,6 +154,7 @@ pub fn gemm_nn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
 }
 
 pub fn gemm_tn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::GemmTn);
     let (p, r) = a.dims2();
     let (_, q) = b.dims2();
     assert_eq!(c.data.len(), r * q, "gemm_tn_into: output len");
@@ -155,6 +166,7 @@ pub fn gemm_tn_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
 }
 
 pub fn spmm_nt_into(x: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::SpmmNt);
     let (p, q) = x.dims2();
     assert_eq!(c.data.len(), p * wc.rows, "spmm_nt_into: output len");
     if tiled_pays_off(p * q * wc.rows) {
@@ -165,6 +177,7 @@ pub fn spmm_nt_into(x: &Tensor, wc: &Compressed24, c: &mut Tensor) {
 }
 
 pub fn spmm_nn_into(g: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::SpmmNn);
     let (p, r) = g.dims2();
     assert_eq!(c.data.len(), p * wc.cols, "spmm_nn_into: output len");
     if tiled_pays_off(p * r * wc.cols) {
@@ -175,6 +188,7 @@ pub fn spmm_nn_into(g: &Tensor, wc: &Compressed24, c: &mut Tensor) {
 }
 
 pub fn spmm_tn_into(gc: &Compressed24, x: &Tensor, c: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::SpmmTn);
     let (p, q) = x.dims2();
     assert_eq!(c.data.len(), gc.rows * q, "spmm_tn_into: output len");
     if tiled_pays_off(gc.rows * p * q) {
@@ -192,6 +206,7 @@ pub fn spmm_tn_into(gc: &Compressed24, x: &Tensor, c: &mut Tensor) {
 
 /// C = X Wc^T, C left column-major: `ct` is C^T (wc.rows, p).
 pub fn spmm_nt_cm_into(x: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::SpmmNtCm);
     let (p, q) = x.dims2();
     assert_eq!(q, wc.cols, "spmm_nt_cm_into: inner dim");
     assert_eq!(ct.data.len(), p * wc.rows, "spmm_nt_cm_into: output len");
@@ -205,6 +220,7 @@ pub fn spmm_nt_cm_into(x: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
 /// C = X Wc^T from a pre-transposed `xt` = X^T (q, p); C (p, wc.rows)
 /// row-major (the column-major -> row-major boundary form).
 pub fn spmm_nt_t_into(xt: &Tensor, wc: &Compressed24, c: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::SpmmNtT);
     let (q, p) = xt.dims2();
     assert_eq!(q, wc.cols, "spmm_nt_t_into: inner dim");
     assert_eq!(c.data.len(), p * wc.rows, "spmm_nt_t_into: output len");
@@ -218,6 +234,7 @@ pub fn spmm_nt_t_into(xt: &Tensor, wc: &Compressed24, c: &mut Tensor) {
 /// C = X Wc^T, pre-transposed input AND column-major output: the fully
 /// fused interior form (`xt` = X^T (q, p), `ct` = C^T (wc.rows, p)).
 pub fn spmm_nt_tcm_into(xt: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::SpmmNtTcm);
     let (q, p) = xt.dims2();
     assert_eq!(q, wc.cols, "spmm_nt_tcm_into: inner dim");
     assert_eq!(ct.data.len(), p * wc.rows, "spmm_nt_tcm_into: output len");
@@ -231,6 +248,7 @@ pub fn spmm_nt_tcm_into(xt: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
 /// C = G Wc, everything column-major: `gt` = G^T (wc.rows, p), `ct` =
 /// C^T (wc.cols, p). Zero scratch staging (see [`tiled::spmm_nn_cm_into`]).
 pub fn spmm_nn_cm_into(gt: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::SpmmNnCm);
     let (r, p) = gt.dims2();
     assert_eq!(r, wc.rows, "spmm_nn_cm_into: inner dim");
     assert_eq!(ct.data.len(), p * wc.cols, "spmm_nn_cm_into: output len");
@@ -244,6 +262,7 @@ pub fn spmm_nn_cm_into(gt: &Tensor, wc: &Compressed24, ct: &mut Tensor) {
 /// C = Gc^T X with X given column-major (`xt` = X^T (q, p)); C
 /// (gc.rows, q) row-major.
 pub fn spmm_tn_cm_into(gc: &Compressed24, xt: &Tensor, c: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::SpmmTnCm);
     let (q, p) = xt.dims2();
     assert_eq!(p, gc.cols, "spmm_tn_cm_into: reduction dim");
     assert_eq!(c.data.len(), gc.rows * q, "spmm_tn_cm_into: output len");
@@ -257,6 +276,7 @@ pub fn spmm_tn_cm_into(gc: &Compressed24, xt: &Tensor, c: &mut Tensor) {
 /// Parallel transpose through the kernel pool — the hot-path variant of
 /// [`Tensor::transpose_into`] (which stays sequential for cold paths).
 pub fn transpose(src: &Tensor, out: &mut Tensor) {
+    let _k = kernel_scope(KernelFamily::Transpose);
     let (r, c) = src.dims2();
     out.resize_to(&[c, r]);
     tiled::transpose_into_buf(&src.data, r, c, &mut out.data);

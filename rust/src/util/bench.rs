@@ -296,6 +296,39 @@ pub fn serve_bench_regressions(
     Ok(warnings)
 }
 
+/// Compare the `obs_overhead` section of BENCH_kernels.json against its
+/// `.prev` twin and return a warning per (leg, mode, threads)
+/// configuration whose `tokens_per_s` dropped by more than `threshold`
+/// (a fraction). This is the telemetry-cost gate: the section's rows
+/// measure the same workload at telemetry off / counters-only / full
+/// tracing, so a regression here means observability started costing
+/// throughput. Warn-only analogue of [`kernel_bench_regressions`]; a
+/// missing file or missing `.prev` yields no warnings.
+pub fn obs_bench_regressions(
+    path: &std::path::Path,
+    threshold: f64,
+) -> Result<Vec<String>> {
+    let Some(j) = read_bench_record(path)? else { return Ok(Vec::new()) };
+    let section = "obs_overhead";
+    let mut warnings = Vec::new();
+    if let (Some(Json::Arr(cur)), Some(Json::Arr(old))) =
+        (j.opt(section), j.opt(&format!("{section}.prev")))
+    {
+        let rec_key = |r: &Json| -> Result<String> {
+            Ok(format!(
+                "{} mode={} t{}",
+                r.get("leg")?.as_str()?,
+                r.get("mode")?.as_str()?,
+                r.get("threads")?.as_usize()?,
+            ))
+        };
+        warnings.extend(metric_regressions(
+            cur, old, &rec_key, "tokens_per_s", threshold, section, "tok/s",
+        ));
+    }
+    Ok(warnings)
+}
+
 /// Parse a bench record; a missing file is `None` (first run — no
 /// baseline), anything unreadable or unparseable is an error.
 fn read_bench_record(path: &std::path::Path) -> Result<Option<Json>> {
@@ -522,6 +555,42 @@ mod tests {
         assert!(w[0].contains("pending=4"), "{}", w[0]);
         // missing file: no warnings
         assert!(serve_bench_regressions(&dir.join("nope.json"), 0.15)
+            .unwrap()
+            .is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn obs_bench_regression_gate() {
+        use crate::util::json::{num, obj};
+        let dir = std::env::temp_dir().join("sparse24_obs_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_kernels.json");
+        std::fs::remove_file(&path).ok();
+        let entry = |rate: f64| {
+            Json::Arr(vec![obj(vec![
+                ("leg", Json::Str("serve".into())),
+                ("mode", Json::Str("trace".into())),
+                ("threads", num(2.0)),
+                ("tokens_per_s", num(rate)),
+                ("overhead_pct", num(1.0)),
+            ])])
+        };
+        // first run: no baseline, no warnings
+        write_json_section_at(&path, "obs_overhead", entry(1000.0)).unwrap();
+        assert!(obs_bench_regressions(&path, 0.15).unwrap().is_empty());
+        // 50% drop trips the gate
+        write_json_section_at(&path, "obs_overhead", entry(500.0)).unwrap();
+        let w = obs_bench_regressions(&path, 0.15).unwrap();
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("mode=trace"), "{}", w[0]);
+        // the kernel gate must tolerate the non-kernel section silently
+        assert!(kernel_bench_regressions(&path, 0.15).unwrap().is_empty());
+        // an improvement produces no warning
+        write_json_section_at(&path, "obs_overhead", entry(600.0)).unwrap();
+        assert!(obs_bench_regressions(&path, 0.15).unwrap().is_empty());
+        // missing file: no warnings
+        assert!(obs_bench_regressions(&dir.join("nope.json"), 0.15)
             .unwrap()
             .is_empty());
         std::fs::remove_dir_all(&dir).ok();

@@ -1,0 +1,245 @@
+//! Telemetry integration: sharded-histogram merging vs a scalar oracle,
+//! Chrome-trace well-formedness, the zero-allocation steady state with
+//! tracing on, and the bitwise telemetry-invariance proof (same outputs
+//! at every telemetry level and across kernel thread counts).
+//!
+//! Every test here flips the PROCESS-GLOBAL telemetry level, so a
+//! file-local mutex serializes them (cargo runs an integration binary's
+//! tests on concurrent threads); each test restores `Level::Off` before
+//! releasing the lock. The in-crate obs tests only ever raise the
+//! level, so they stay lock-free — level-flipping tests live here.
+
+use std::sync::Mutex;
+
+use sparse24::config::ServeConfig;
+use sparse24::model::ModelDims;
+use sparse24::obs::{self, Level};
+use sparse24::serve::{
+    run_open_loop, synthetic_checkpoint, InferEngine, InferModel, KvLayout,
+    Request, Sampling, Scheduler,
+};
+use sparse24::sparse::kernels;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tiny_model(seed: u64) -> InferModel {
+    let dims = ModelDims {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        n_ctx: 64,
+    };
+    InferModel::from_checkpoint(&synthetic_checkpoint(&dims, seed)).unwrap()
+}
+
+/// Greedy-decode four fixed requests at `level`; returns each
+/// completion's token stream in request-id order. Deterministic given
+/// the seed, so any two calls must agree bitwise token-for-token.
+fn decode_tokens(level: Level) -> Vec<Vec<u32>> {
+    obs::set_level(level);
+    obs::clear_trace();
+    let mut sch = Scheduler::with_kv(
+        InferEngine::new(tiny_model(42)),
+        2,
+        4096,
+        3,
+        KvLayout::Paged { page: 8 },
+        0,
+        Sampling::from_params(0.0, 0),
+        7,
+    );
+    for id in 0..4u64 {
+        sch.submit(Request::new(id, vec![1 + id as u32, 2, 3], 6));
+    }
+    let mut done = sch.run_until_idle(500);
+    assert_eq!(done.len(), 4, "all requests must finish");
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.tokens).collect()
+}
+
+#[test]
+fn histogram_shard_merge_matches_scalar_oracle() {
+    use sparse24::obs::registry::{hist_bucket, HIST_BUCKETS};
+    let _g = lock();
+    obs::set_level(Level::Metrics);
+    let h = obs::histogram("test.obs.shard_merge");
+    let n_threads = 8u64;
+    let per_thread = 1000u64;
+    let workers: Vec<_> = (0..n_threads)
+        .map(|t| {
+            std::thread::spawn(move || {
+                // re-intern per thread: same name -> same cell
+                let h = obs::histogram("test.obs.shard_merge");
+                for i in 0..per_thread {
+                    h.record(t * 7919 + i);
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    // scalar oracle over the identical value stream
+    let mut counts = [0u64; HIST_BUCKETS];
+    let mut sum = 0u64;
+    for t in 0..n_threads {
+        for i in 0..per_thread {
+            let v = t * 7919 + i;
+            counts[hist_bucket(v)] += 1;
+            sum += v;
+        }
+    }
+    let s = h.snapshot();
+    assert_eq!(s.counts, counts, "shard merge diverged from the oracle");
+    assert_eq!(s.sum, sum);
+    assert_eq!(s.count(), n_threads * per_thread);
+    obs::set_level(Level::Off);
+}
+
+#[test]
+fn trace_and_metrics_files_are_well_formed() {
+    let _g = lock();
+    obs::set_level(Level::Trace);
+    obs::clear_trace();
+    // a real serving workload so engine spans AND per-request virtual
+    // rows land in the ring
+    let cfg = ServeConfig {
+        max_new_tokens: 4,
+        prompt_len: 4,
+        prefill_chunk: 2,
+        arrival_per_step: 1.0,
+        ..ServeConfig::default()
+    };
+    let engine = InferEngine::new(tiny_model(3));
+    let (res, _engine) = run_open_loop(engine, &cfg, 2, 40).unwrap();
+    assert!(res.tokens > 0);
+    assert!(obs::trace_len() > 0, "tracing produced no events");
+
+    let dir = std::env::temp_dir().join("sparse24_obs_telemetry_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let tpath = dir.join("out.trace.json");
+    let (spans, _dropped) = obs::write_trace(&tpath).unwrap();
+    assert!(spans > 0);
+    // the checker enforces: every line parses, every B has its E per
+    // row, per-row timestamps are monotone, exactly one pid
+    let c = obs::check_trace_file(&tpath).unwrap();
+    assert_eq!(c.spans, spans, "every written span must close");
+    // every span is one B + one E, plus the process_name metadata event
+    assert_eq!(c.events, 2 * spans + 1);
+    assert!(
+        c.tids >= 2,
+        "expected the engine row plus at least one request row, got {}",
+        c.tids
+    );
+
+    let mpath = dir.join("out.metrics.jsonl");
+    obs::init_metrics(&mpath).unwrap();
+    obs::maybe_emit_metrics();
+    assert!(obs::flush_metrics() > 0);
+    let mc = obs::check_metrics_file(&mpath).unwrap();
+    assert!(mc.lines >= 1);
+
+    std::fs::remove_dir_all(&dir).ok();
+    obs::set_level(Level::Off);
+}
+
+/// The zero-allocation steady-state contract must survive full tracing:
+/// `run_open_loop` fails if a single scratch buffer is heap-allocated
+/// after warmup, and the telemetry paths (atomic cells, the
+/// pre-allocated span ring) must not introduce one.
+#[test]
+fn steady_state_allocates_nothing_with_tracing_on() {
+    let _g = lock();
+    obs::set_level(Level::Trace);
+    obs::clear_trace();
+    let cfg = ServeConfig {
+        max_new_tokens: 6,
+        prompt_len: 5,
+        prefill_chunk: 3,
+        arrival_per_step: 0.8,
+        ..ServeConfig::default()
+    };
+    let engine = InferEngine::new(tiny_model(11));
+    // the ensure! inside run_open_loop IS the assertion
+    let (res, _engine) = run_open_loop(engine, &cfg, 2, 48).unwrap();
+    assert!(res.tokens > 0);
+    obs::set_level(Level::Off);
+}
+
+/// Telemetry must be an observer: the same seeded workload decodes the
+/// exact same tokens at off / counters-only / full tracing, and across
+/// kernel thread counts (kernel accounting sits at the dispatch layer,
+/// never inside the threaded partitioning).
+#[test]
+fn decode_is_bitwise_invariant_to_telemetry_and_threads() {
+    let _g = lock();
+    let orig = kernels::num_threads();
+
+    let t1 = kernels::set_num_threads(1);
+    assert_eq!(t1, 1);
+    let base = decode_tokens(Level::Off);
+    for level in [Level::Metrics, Level::Trace] {
+        let got = decode_tokens(level);
+        assert_eq!(got, base, "telemetry {level:?} changed decoded tokens");
+    }
+
+    // across thread counts (clamped to the pool width on small hosts)
+    let t2 = kernels::set_num_threads(2);
+    let threaded = decode_tokens(Level::Trace);
+    assert_eq!(
+        threaded, base,
+        "decode diverged between 1 and {t2} threads with tracing on"
+    );
+
+    kernels::set_num_threads(orig);
+    obs::set_level(Level::Off);
+}
+
+/// Training-side bitwise invariance: identical seeded short runs with
+/// telemetry off vs full tracing produce bit-identical loss curves.
+/// Skips (like the trainer integration suite) until `make artifacts`
+/// has produced the AOT test model.
+#[test]
+fn training_losses_bitwise_invariant_to_telemetry() {
+    use sparse24::config::TrainConfig;
+    use sparse24::coordinator::Trainer;
+    use std::path::{Path, PathBuf};
+
+    let artifacts_dir = std::env::var("SPARSE24_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if !artifacts_dir.join("test_tiny_manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let _g = lock();
+
+    let run = |level: Level| -> Vec<u64> {
+        obs::set_level(level);
+        obs::clear_trace();
+        let mut cfg = TrainConfig::default();
+        cfg.model = "test_tiny".into();
+        cfg.artifacts_dir = artifacts_dir.to_str().unwrap().to_string();
+        cfg.steps = 6;
+        cfg.grad_accum = 1;
+        cfg.lr = 3e-3;
+        cfg.warmup = 2;
+        cfg.lambda_w = 1e-4;
+        cfg.mask_update_interval = 2;
+        cfg.seed = 0;
+        let mut t = Trainer::new(cfg).unwrap();
+        t.train().unwrap();
+        t.metrics.rows.iter().map(|r| r.loss.to_bits()).collect()
+    };
+
+    let off = run(Level::Off);
+    let traced = run(Level::Trace);
+    assert_eq!(off, traced, "tracing changed the training loss bits");
+    obs::set_level(Level::Off);
+}

@@ -17,9 +17,16 @@
 # (mid-stream disconnect -> cancel, overload reject, doomed deadline,
 # graceful drain, zero-leak exit on a unix socket), the deterministic
 # fault-injection bench (`serve-bench --faults`, serve_faults section),
+# the telemetry suite (sharded-histogram oracle, Chrome-trace
+# well-formedness, zero-alloc with tracing on, bitwise invariance
+# across telemetry levels and thread counts), a traced serving smoke
+# whose emitted trace + metrics files are validated by `sparse24
+# check-trace`, a traced short training run (skipped until `make
+# artifacts` exists), the telemetry-overhead bench (advisory <3% gate),
 # and a perf diff against the previous bench run (warn-only, >15%
 # regression; covers GFLOP/s — table12_epilogue included — prefill
-# tok/s, paged-KV occupancy, and fault-storm goodput).
+# tok/s, paged-KV occupancy, fault-storm goodput, and telemetry-mode
+# tokens/s).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -61,7 +68,37 @@ echo "== fault-injection bench (seeded storm, bitwise survivors, zero leaks)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --faults --synthetic \
   --quick --steps 64
 
-echo "== bench-diff (GFLOP/s + prefill tok/s + kv occupancy + fault goodput, warn-only)"
+echo "== telemetry suite (shard-merge oracle, trace well-formedness, bitwise invariance)"
+PALLAS_NUM_THREADS=2 cargo test -q --test obs_telemetry
+
+echo "== traced serving smoke (+ trace/metrics file validation)"
+OBS_TMP="$(mktemp -d)"
+trap 'rm -rf "$OBS_TMP"' EXIT
+PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --synthetic --quick \
+  --steps 48 --batch-sizes 2 --prefill-chunk 4 --kv-page 8 \
+  --trace "$OBS_TMP/serve.trace.json" --metrics "$OBS_TMP/serve.metrics.jsonl"
+./target/release/sparse24 check-trace \
+  --trace "$OBS_TMP/serve.trace.json" --metrics "$OBS_TMP/serve.metrics.jsonl"
+PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve --smoke \
+  --trace "$OBS_TMP/smoke.trace.json"
+./target/release/sparse24 check-trace --trace "$OBS_TMP/smoke.trace.json"
+
+if [ -f rust/artifacts/test_tiny_manifest.json ]; then
+  echo "== traced training smoke (test_tiny, 4 steps)"
+  PALLAS_NUM_THREADS=2 ./target/release/sparse24 train \
+    --set model.config=test_tiny --set model.artifacts_dir=rust/artifacts \
+    --set train.steps=4 --set train.warmup=2 \
+    --trace "$OBS_TMP/train.trace.json" --metrics "$OBS_TMP/train.metrics.jsonl"
+  ./target/release/sparse24 check-trace \
+    --trace "$OBS_TMP/train.trace.json" --metrics "$OBS_TMP/train.metrics.jsonl"
+else
+  echo "== traced training smoke SKIPPED (no rust/artifacts/test_tiny_manifest.json)"
+fi
+
+echo "== telemetry overhead bench (off vs counters vs tracing, advisory <3% gate)"
+PALLAS_NUM_THREADS=2 cargo bench --bench obs_overhead -- --quick
+
+echo "== bench-diff (GFLOP/s + prefill tok/s + kv occupancy + fault goodput + telemetry tok/s, warn-only)"
 ./target/release/sparse24 bench-diff || true
 
 echo "== verify OK"
