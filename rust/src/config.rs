@@ -471,6 +471,16 @@ pub const DEFAULT_KV_PAGE: usize = 16;
 ///   (0 = no deadline);
 /// * `drain_timeout_ms` — on shutdown, how long in-flight requests may
 ///   run before being evicted as `incomplete`.
+///
+/// Speculative-decode keys (draft-then-verify; `docs/SERVING.md`):
+/// * `spec_k` — draft tokens proposed per decode lane per step; each
+///   lane then verifies `spec_k + 1` positions in one matrix-form
+///   block. 0 (default) disables speculation. Greedy sampling only —
+///   with `temperature > 0` the lanes silently use plain decode;
+/// * `spec_drafter` — draft proposer: `"ngram"` (default; seeded
+///   per-lane bigram-successor table, trained online on the sequence's
+///   own tokens) or `"repeat"` (repeats the last token — the trivial
+///   baseline).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub max_seqs: usize,
@@ -490,6 +500,8 @@ pub struct ServeConfig {
     pub max_pending: usize,
     pub request_deadline_ms: u64,
     pub drain_timeout_ms: u64,
+    pub spec_k: usize,
+    pub spec_drafter: String,
 }
 
 impl Default for ServeConfig {
@@ -512,6 +524,8 @@ impl Default for ServeConfig {
             max_pending: 32,
             request_deadline_ms: 0,
             drain_timeout_ms: 2000,
+            spec_k: 0,
+            spec_drafter: "ngram".into(),
         }
     }
 }
@@ -574,6 +588,12 @@ impl ServeConfig {
         if let Some(v) = get(t, "serve", "drain_timeout_ms") {
             c.drain_timeout_ms = v.as_usize()? as u64;
         }
+        if let Some(v) = get(t, "serve", "spec_k") {
+            c.spec_k = v.as_usize()?;
+        }
+        if let Some(v) = get(t, "serve", "spec_drafter") {
+            c.spec_drafter = v.as_str()?.to_string();
+        }
         c.validate()?;
         Ok(c)
     }
@@ -605,6 +625,10 @@ impl ServeConfig {
         }
         if self.listen.is_empty() {
             bail!("serve.listen must be \"host:port\" or \"unix:/path\"");
+        }
+        if !matches!(self.spec_drafter.as_str(), "ngram" | "repeat") {
+            bail!("unknown serve.spec_drafter {:?} (ngram | repeat)",
+                  self.spec_drafter);
         }
         Ok(())
     }
@@ -791,6 +815,24 @@ kind = "synthetic"
         assert_eq!(p.kv(), KvLayout::Paged { page: 4 });
         assert!(ServeConfig::from_toml("[serve]\nkv_layout = \"slab\"\n").is_err());
         assert!(ServeConfig::from_toml("[serve]\nkv_page = 0\n").is_err());
+    }
+
+    #[test]
+    fn spec_keys_parse_and_validate() {
+        let c = ServeConfig::from_toml(
+            "[serve]\nspec_k = 4\nspec_drafter = \"repeat\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.spec_k, 4);
+        assert_eq!(c.spec_drafter, "repeat");
+        // defaults: speculation off, n-gram drafter
+        let d = ServeConfig::default();
+        assert_eq!(d.spec_k, 0);
+        assert_eq!(d.spec_drafter, "ngram");
+        // spec_k = 0 with any valid drafter is fine (speculation off)
+        assert!(ServeConfig::from_toml("[serve]\nspec_k = 0\n").is_ok());
+        assert!(ServeConfig::from_toml("[serve]\nspec_drafter = \"oracle\"\n")
+            .is_err());
     }
 
     #[test]

@@ -45,9 +45,9 @@ use sparse24::model::ModelDims;
 use sparse24::obs;
 use sparse24::runtime::Manifest;
 use sparse24::serve::{
-    run_fault_bench, run_mixed_kv_bench, run_open_loop, run_server, run_smoke,
-    synthetic_checkpoint, FaultConfig, InferEngine, InferModel, Request,
-    Sampling, Scheduler,
+    make_drafter, run_fault_bench, run_mixed_kv_bench, run_open_loop,
+    run_server, run_smoke, run_spec_bench, synthetic_checkpoint, FaultConfig,
+    InferEngine, InferModel, Request, Sampling, Scheduler,
 };
 use sparse24::sparse::{kernels, workloads};
 use sparse24::util::bench::{
@@ -227,15 +227,18 @@ fn print_usage() {
            inspect      --model <name> [--artifacts-dir <dir>]\n\
            generate     [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--prompt t0,t1,...] [--max-new N] [--temperature T]\n\
-                        [--top-k K] [--seed S]\n\
+                        [--top-k K] [--seed S] [--spec-k N]\n\
+                        [--spec-drafter ngram|repeat]\n\
            serve        [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--listen host:port|unix:/path] [--max-pending N]\n\
                         [--deadline-ms MS] [--drain-timeout-ms MS] [--smoke]\n\
+                        [--spec-k N] [--spec-drafter ngram|repeat]\n\
                         [--trace <json>] [--metrics <jsonl>]\n\
            serve-bench  [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--steps N] [--batch-sizes a,b,...] [--prefill-chunk N]\n\
                         [--kv-layout paged|contiguous] [--kv-page N]\n\
-                        [--kv-pages N] [--faults] [--quick]\n\
+                        [--kv-pages N] [--spec-k N] [--spec-drafter ngram|repeat]\n\
+                        [--faults] [--quick]\n\
                         [--trace <json>] [--metrics <jsonl>]\n\
            bench-diff   [--file <json>] [--serve-file <json>] [--threshold PCT]\n\
            check-trace  [--trace <json>] [--metrics <jsonl>]\n"
@@ -316,8 +319,9 @@ fn load_infer_model(
 }
 
 fn cmd_generate(args: &[String]) -> Result<()> {
-    let value_opts =
-        with_model_opts(&["prompt", "max-new", "temperature", "top-k"]);
+    let value_opts = with_model_opts(&[
+        "prompt", "max-new", "temperature", "top-k", "spec-k", "spec-drafter",
+    ]);
     let (flags, opts, _) = parse_args(args, &value_opts, &["synthetic"])?;
     let cfg = load_serve_config(&opts)?;
     let model = load_infer_model(&flags, &opts, false)?;
@@ -338,6 +342,14 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         .map(|s| s.parse::<u64>())
         .transpose()?
         .unwrap_or(cfg.seed);
+    let spec_k = opt1(&opts, "spec-k")
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .context("--spec-k")?
+        .unwrap_or(cfg.spec_k);
+    let spec_drafter = opt1(&opts, "spec-drafter")
+        .unwrap_or(&cfg.spec_drafter)
+        .to_string();
     let prompt: Vec<u32> = match opt1(&opts, "prompt") {
         Some(s) => s
             .split(',')
@@ -354,6 +366,15 @@ fn cmd_generate(args: &[String]) -> Result<()> {
     let mut sch = Scheduler::with_kv(InferEngine::new(model), 1,
                                      usize::MAX / 2, cfg.prefill_chunk,
                                      cfg.kv(), cfg.kv_pages, sampling, seed);
+    if spec_k > 0 {
+        if sampling != Sampling::Greedy {
+            println!(
+                "note: speculative decode needs greedy sampling; \
+                 {sampling:?} runs vanilla decode"
+            );
+        }
+        sch.set_spec(spec_k, make_drafter(&spec_drafter, 1, vocab)?);
+    }
     sch.submit(Request::new(0, prompt.clone(), max_new));
     let t0 = std::time::Instant::now();
     // chunked prefill spans ceil(prompt/chunk) extra steps
@@ -368,6 +389,15 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         "{} tokens in {:.3}s ({:.1} tok/s, {:?} sampling)",
         c.tokens.len(), dt, c.tokens.len() as f64 / dt.max(1e-9), sampling
     );
+    let ss = sch.spec_stats();
+    if ss.drafted > 0 {
+        println!(
+            "speculative: k={spec_k} {spec_drafter} | drafted {} accepted {} \
+             ({:.0}% accept) rolled back {} over {} verify calls",
+            ss.drafted, ss.accepted, ss.accept_rate() * 100.0, ss.rolled_back,
+            ss.verify_calls
+        );
+    }
     Ok(())
 }
 
@@ -376,14 +406,19 @@ fn cmd_generate(args: &[String]) -> Result<()> {
 /// reject, doomed deadline, graceful drain) instead of serving.
 fn cmd_serve(args: &[String]) -> Result<()> {
     let value_opts = with_model_opts(&[
-        "listen", "max-pending", "deadline-ms", "drain-timeout-ms", "trace",
-        "metrics",
+        "listen", "max-pending", "deadline-ms", "drain-timeout-ms", "spec-k",
+        "spec-drafter", "trace", "metrics",
     ]);
     let (flags, opts, _) =
         parse_args(args, &value_opts, &["synthetic", "smoke", "quick"])?;
     let telemetry = init_telemetry(&opts)?;
     if flags.iter().any(|f| f == "smoke") {
-        println!("{}", run_smoke(opt1(&opts, "listen"))?);
+        let spec_k = opt1(&opts, "spec-k")
+            .map(|s| s.parse::<usize>())
+            .transpose()
+            .context("--spec-k")?
+            .unwrap_or(0);
+        println!("{}", run_smoke(opt1(&opts, "listen"), spec_k)?);
         telemetry.finish()?;
         return Ok(());
     }
@@ -399,6 +434,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     if let Some(s) = opt1(&opts, "drain-timeout-ms") {
         cfg.drain_timeout_ms = s.parse::<u64>().context("--drain-timeout-ms")?;
+    }
+    if let Some(s) = opt1(&opts, "spec-k") {
+        cfg.spec_k = s.parse::<usize>().context("--spec-k")?;
+    }
+    if let Some(s) = opt1(&opts, "spec-drafter") {
+        cfg.spec_drafter = s.to_string();
     }
     cfg.validate()?;
     let quick = flags.iter().any(|f| f == "quick");
@@ -436,6 +477,7 @@ fn cmd_serve_bench_faults(
         prompt_len: cfg.prompt_len.min(dims.n_ctx / 2).max(1),
         max_new: cfg.max_new_tokens.max(1),
         kv_page: cfg.kv_page,
+        spec_k: cfg.spec_k,
         seed: cfg.seed,
         ..FaultConfig::default()
     };
@@ -462,7 +504,7 @@ fn cmd_serve_bench_faults(
 fn cmd_serve_bench(args: &[String]) -> Result<()> {
     let value_opts = with_model_opts(&[
         "steps", "batch-sizes", "prefill-chunk", "kv-layout", "kv-page",
-        "kv-pages", "trace", "metrics",
+        "kv-pages", "spec-k", "spec-drafter", "trace", "metrics",
     ]);
     let (flags, opts, _) =
         parse_args(args, &value_opts, &["synthetic", "quick", "faults"])?;
@@ -485,6 +527,12 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     }
     if let Some(s) = opt1(&opts, "kv-pages") {
         cfg.kv_pages = s.parse::<usize>().context("--kv-pages")?;
+    }
+    if let Some(s) = opt1(&opts, "spec-k") {
+        cfg.spec_k = s.parse::<usize>().context("--spec-k")?;
+    }
+    if let Some(s) = opt1(&opts, "spec-drafter") {
+        cfg.spec_drafter = s.to_string();
     }
     cfg.validate()?;
     if flags.iter().any(|f| f == "faults") {
@@ -535,12 +583,21 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     }
     // mixed long/short scenario: contiguous vs paged in the same memory
     println!("  -- mixed long/short KV scenario (equal memory) --");
-    let (mixed, _engine) = run_mixed_kv_bench(engine, &cfg, cfg.bench_steps)?;
+    let (mixed, engine) = run_mixed_kv_bench(engine, &cfg, cfg.bench_steps)?;
     for m in &mixed {
         println!("  {}", m.render());
     }
     let kv_paging =
         Json::Arr(mixed.iter().map(|m| m.to_json(threads)).collect());
+    // speculative decode sweep: k=0 baseline + two draft windows, same
+    // deterministic load, outputs asserted bitwise-equal across k
+    println!("  -- speculative decode sweep (greedy, vs k=0 baseline) --");
+    let (spec_runs, _engine) = run_spec_bench(engine, &cfg, cfg.bench_steps)?;
+    for r in &spec_runs {
+        println!("  {}", r.render());
+    }
+    let serve_spec =
+        Json::Arr(spec_runs.iter().map(|r| r.to_json(threads)).collect());
     let section = obj(vec![
         (
             "model",
@@ -559,8 +616,10 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     write_json_section_at(&path, "serve_bench", section)?;
     write_json_section_at(&path, "prefill_tokens_per_s", Json::Arr(prefill_runs))?;
     write_json_section_at(&path, "kv_paging", kv_paging)?;
+    write_json_section_at(&path, "serve_spec", serve_spec)?;
     println!(
-        "-> {} (sections serve_bench, prefill_tokens_per_s, kv_paging)",
+        "-> {} (sections serve_bench, prefill_tokens_per_s, kv_paging, \
+         serve_spec)",
         path.display()
     );
     telemetry.finish()?;

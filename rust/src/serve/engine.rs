@@ -515,6 +515,60 @@ impl InferEngine {
     /// [`InferEngine::warm_prefill`].
     pub fn prefill_chunk(&mut self, chunk: &[u32], slot: usize, pos0: usize,
                          kv: &mut KvPool, logits: &mut Tensor) {
+        self.chunk_forward(chunk, slot, pos0, kv, logits, false);
+    }
+
+    /// Pre-size the arena for speculative verification of up to `k`
+    /// drafted tokens: the exact buffer set
+    /// [`InferEngine::verify_chunk`] checks out for a `[k+1, d]` block
+    /// (the prefill set minus the last-row head staging — verification
+    /// heads every row), so steady-state speculative decode performs
+    /// zero heap allocation.
+    pub fn warm_spec(&mut self, k: usize) {
+        let dims = self.model.dims;
+        let (c, d) = ((k + 1).clamp(1, dims.n_ctx), dims.d_model);
+        let two_r = 2 * dims.d_ff;
+        let s = &mut self.scratch;
+        let bufs = [
+            s.take(&[c, d]),          // x
+            s.take(&[c, d]),          // h
+            s.take(&[c, 3 * d]),      // qkv
+            s.take(&[c, d]),          // ctx
+            s.take(&[c, d]),          // attn_y
+            s.take(&[c, d]),          // ffn_y
+            s.take(&[c, dims.n_ctx]), // scores
+            s.take(&[c, two_r]),      // ffn z
+            s.take(&[c, two_r / 2]),  // ffn a
+        ];
+        for b in bufs {
+            s.give(b);
+        }
+    }
+
+    /// Score all positions of a draft-verification block: feed
+    /// `chunk` = `[last_accepted, draft_1, ..., draft_k]` at positions
+    /// `pos0..pos0+k+1` of the sequence in `slot` as ONE `[k+1, d]`
+    /// activation block and leave `logits` as `(k+1, vocab)` — row i is
+    /// the next-token distribution after `chunk[i]`. This is
+    /// [`InferEngine::prefill_chunk`]'s body with the LM head applied to
+    /// EVERY row instead of just the last: speculative decode needs each
+    /// position's greedy choice to judge the drafted suffix, and that
+    /// full-head cost is exactly what buys the matrix-matrix `spmm_nt`
+    /// shapes decode otherwise never reaches. The chunk's K/V rows are
+    /// written at `pos0..pos0+k+1`; the caller rolls back rejected rows
+    /// with [`KvPool::truncate`]. Zero steady-state allocation after
+    /// [`InferEngine::warm_spec`].
+    pub fn verify_chunk(&mut self, chunk: &[u32], slot: usize, pos0: usize,
+                        kv: &mut KvPool, logits: &mut Tensor) {
+        self.chunk_forward(chunk, slot, pos0, kv, logits, true);
+    }
+
+    /// Shared matrix-form chunk body behind [`InferEngine::prefill_chunk`]
+    /// (head over the last row only) and [`InferEngine::verify_chunk`]
+    /// (head over every row). One body, one arithmetic order: a chunk
+    /// row's activations are identical on both paths by construction.
+    fn chunk_forward(&mut self, chunk: &[u32], slot: usize, pos0: usize,
+                     kv: &mut KvPool, logits: &mut Tensor, head_all_rows: bool) {
         assert!(!chunk.is_empty(), "empty prefill chunk");
         let model = &self.model;
         let scratch = &mut self.scratch;
@@ -585,13 +639,23 @@ impl InferEngine {
             }
         }
 
-        // next-token logits from the chunk's LAST row only (the lm-head
-        // gemm over the whole chunk would be p*vocab wasted work)
-        let mut last = scratch.take(&[1, d]);
-        last.data.copy_from_slice(&x.data[(c - 1) * d..c * d]);
-        layer_norm_into(&last, &model.lnf_s, &model.lnf_b, &mut h);
-        logits.resize_to(&[1, dims.vocab]);
-        gemm_nt_into(&h, &model.tok_emb, logits);
+        if head_all_rows {
+            // verification heads EVERY position: row i of the logits is
+            // the next-token distribution after chunk[i]
+            layer_norm_into(&x, &model.lnf_s, &model.lnf_b, &mut h);
+            logits.resize_to(&[c, dims.vocab]);
+            gemm_nt_into(&h, &model.tok_emb, logits);
+        } else {
+            // next-token logits from the chunk's LAST row only (the
+            // lm-head gemm over the whole chunk would be p*vocab wasted
+            // work when only the last row is sampled)
+            let mut last = scratch.take(&[1, d]);
+            last.data.copy_from_slice(&x.data[(c - 1) * d..c * d]);
+            layer_norm_into(&last, &model.lnf_s, &model.lnf_b, &mut h);
+            logits.resize_to(&[1, dims.vocab]);
+            gemm_nt_into(&h, &model.tok_emb, logits);
+            scratch.give(last);
+        }
 
         scratch.give(x);
         scratch.give(h);
@@ -600,7 +664,6 @@ impl InferEngine {
         scratch.give(attn_y);
         scratch.give(ffn_y);
         scratch.give(scores);
-        scratch.give(last);
     }
 
     /// Convenience: prefill a whole prompt in chunks of at most
@@ -757,6 +820,114 @@ mod tests {
         }
         let (_, fresh_after) = engine.scratch_counters();
         assert_eq!(fresh, fresh_after, "steady-state chunked prefill allocated");
+    }
+
+    #[test]
+    fn verify_chunk_rows_match_decode_path_logits() {
+        // every row of a verification block matches the one-token decode
+        // path's logits for the same token at the same position (1e-5,
+        // like the chunked-prefill oracle), and the greedy argmax of
+        // each row is identical — the property speculative acceptance
+        // rides on
+        let dims = tiny_dims();
+        let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 21)).unwrap();
+        let prompt = [2u32, 7, 11, 4];
+        let draft = [5u32, 19, 3];
+        // oracle: one token per step through the decode path
+        let mut er = InferEngine::new(model.clone());
+        let mut kvr = er.alloc_kv(1);
+        let sr = kvr.acquire(dims.n_ctx).unwrap();
+        let mut ref_logits = Tensor::zeros(&[0]);
+        er.prefill_reference(&prompt, sr, &mut kvr, &mut ref_logits);
+        let mut oracle_rows = vec![ref_logits.data.clone()];
+        for (t, &tok) in draft.iter().enumerate() {
+            let lane = [DecodeLane { slot: sr, token: tok, pos: prompt.len() + t }];
+            er.decode_step(&lane, &mut kvr, &mut ref_logits);
+            oracle_rows.push(ref_logits.data.clone());
+        }
+        // spec path: chunk-prefill all but the last prompt token, then
+        // verify [last_prompt_token, draft...] as one block
+        let mut ev = InferEngine::new(model);
+        let mut kvv = ev.alloc_kv(1);
+        let sv = kvv.acquire(dims.n_ctx).unwrap();
+        let mut logits = Tensor::zeros(&[0]);
+        ev.prefill_chunked(&prompt[..prompt.len() - 1], sv, 2, &mut kvv, &mut logits);
+        let mut chunk = vec![prompt[prompt.len() - 1]];
+        chunk.extend_from_slice(&draft);
+        ev.verify_chunk(&chunk, sv, prompt.len() - 1, &mut kvv, &mut logits);
+        assert_eq!(logits.shape, vec![chunk.len(), dims.vocab]);
+        let argmax = |row: &[f32]| {
+            row.iter().enumerate()
+                .fold((0usize, f32::NEG_INFINITY),
+                      |best, (j, &v)| if v > best.1 { (j, v) } else { best }).0
+        };
+        for (i, oracle) in oracle_rows.iter().enumerate() {
+            let row = &logits.data[i * dims.vocab..(i + 1) * dims.vocab];
+            for (j, (&a, &b)) in row.iter().zip(oracle).enumerate() {
+                assert!((a - b).abs() < 1e-5, "row {i} logit {j}: {a} vs {b}");
+            }
+            assert_eq!(argmax(row), argmax(oracle), "greedy choice differs at row {i}");
+        }
+    }
+
+    #[test]
+    fn verify_after_rollback_matches_fresh_run() {
+        // write k+1 KV rows via verify_chunk, truncate the rejected
+        // suffix, verify a different continuation — logits must match a
+        // run that never took the rejected branch (1e-5)
+        let dims = tiny_dims();
+        let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 23)).unwrap();
+        let prompt = [1u32, 9, 14];
+        let rejected = [6u32, 21, 8];
+        let retry = [17u32, 2];
+        let kind = KvLayout::Paged { page: 2 };
+        let mut ea = InferEngine::new(model.clone());
+        let mut kva = ea.alloc_kv_with(1, kind, 0);
+        let sa = kva.acquire(dims.n_ctx).unwrap();
+        let mut la = Tensor::zeros(&[0]);
+        ea.prefill_chunked(&prompt, sa, 2, &mut kva, &mut la);
+        // speculative round that gets fully rejected: roll back to the
+        // prompt rows, keeping only the already-verified prefix
+        ea.verify_chunk(&rejected, sa, prompt.len(), &mut kva, &mut la);
+        kva.truncate(sa, prompt.len());
+        ea.verify_chunk(&retry, sa, prompt.len(), &mut kva, &mut la);
+
+        let mut eb = InferEngine::new(model);
+        let mut kvb = eb.alloc_kv_with(1, kind, 0);
+        let sb = kvb.acquire(dims.n_ctx).unwrap();
+        let mut lb = Tensor::zeros(&[0]);
+        eb.prefill_chunked(&prompt, sb, 2, &mut kvb, &mut lb);
+        eb.verify_chunk(&retry, sb, prompt.len(), &mut kvb, &mut lb);
+        assert_eq!(la.shape, lb.shape);
+        for (j, (&a, &b)) in la.data.iter().zip(&lb.data).enumerate() {
+            assert!((a - b).abs() < 1e-5, "logit {j} after rollback: {a} vs {b}");
+        }
+        kva.release(sa);
+        assert!(kva.leak_report().is_none(), "{:?}", kva.leak_report());
+    }
+
+    #[test]
+    fn warmed_verify_chunk_is_allocation_free() {
+        let dims = tiny_dims();
+        let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 25)).unwrap();
+        let mut engine = InferEngine::new(model);
+        let mut kv = engine.alloc_kv(1);
+        engine.warm_spec(3);
+        let slot = kv.acquire(dims.n_ctx).unwrap();
+        let mut logits = Tensor::zeros(&[0]);
+        // one shakedown block (the caller-owned logits buffer grows once)
+        engine.verify_chunk(&[1u32, 2, 3, 4], slot, 0, &mut kv, &mut logits);
+        let (_, fresh) = engine.scratch_counters();
+        for round in 0..4u32 {
+            kv.truncate(slot, 1);
+            engine.verify_chunk(&[(round % 31) as u32, 5, 6], slot, 1,
+                                &mut kv, &mut logits);
+            kv.truncate(slot, 2);
+            engine.verify_chunk(&[7u32, 8, 9, 10], slot, 2, &mut kv, &mut logits);
+            kv.truncate(slot, 1);
+        }
+        let (_, fresh_after) = engine.scratch_counters();
+        assert_eq!(fresh, fresh_after, "steady-state verification allocated");
     }
 
     #[test]

@@ -34,6 +34,7 @@ use anyhow::{bail, Result};
 use crate::util::json::{num, obj, Json};
 use crate::util::rng::Rng;
 
+use super::drafter::NGramDrafter;
 use super::engine::InferEngine;
 use super::generate::Sampling;
 use super::kv_cache::KvLayout;
@@ -64,6 +65,10 @@ pub struct FaultConfig {
     /// generation budgets are 1..=max_new
     pub max_new: usize,
     pub kv_page: usize,
+    /// speculative draft window (0 = vanilla decode). Applies to the
+    /// faulted run AND its undisturbed twin, so the bitwise-survivor
+    /// oracle exercises verify/rollback under every fault path.
+    pub spec_k: usize,
     pub seed: u64,
 }
 
@@ -80,6 +85,7 @@ impl Default for FaultConfig {
             prompt_len: 10,
             max_new: 12,
             kv_page: 16,
+            spec_k: 0,
             seed: 0x5EED,
         }
     }
@@ -113,6 +119,8 @@ struct Planned {
 pub struct FaultBenchResult {
     pub max_seqs: usize,
     pub max_pending: usize,
+    /// speculative draft window the storm (and its twin) ran with
+    pub spec_k: usize,
     /// scheduler steps executed (offered phase + drain)
     pub steps: u64,
     pub offered: usize,
@@ -158,6 +166,7 @@ impl FaultBenchResult {
         obj(vec![
             ("max_seqs", num(self.max_seqs as f64)),
             ("max_pending", num(self.max_pending as f64)),
+            ("spec_k", num(self.spec_k as f64)),
             ("threads", num(threads as f64)),
             ("steps", num(self.steps as f64)),
             ("offered", num(self.offered as f64)),
@@ -203,10 +212,15 @@ fn build_plan(fc: &FaultConfig, vocab: usize) -> Vec<Planned> {
 }
 
 fn scheduler_for(engine: InferEngine, fc: &FaultConfig) -> Scheduler {
-    Scheduler::with_kv(
+    let vocab = engine.model.dims.vocab;
+    let mut sch = Scheduler::with_kv(
         engine, fc.max_seqs, fc.max_batch_tokens, DEFAULT_PREFILL_CHUNK,
         KvLayout::Paged { page: fc.kv_page.max(1) }, 0, Sampling::Greedy, fc.seed,
-    )
+    );
+    if fc.spec_k > 0 {
+        sch.set_spec(fc.spec_k, Box::new(NGramDrafter::new(fc.max_seqs, vocab)));
+    }
+    sch
 }
 
 /// Mutable storm state: emitted-token counts, armed faults, and the
@@ -394,6 +408,7 @@ pub fn run_fault_bench(
     let result = FaultBenchResult {
         max_seqs: fc.max_seqs,
         max_pending: fc.max_pending,
+        spec_k: fc.spec_k,
         steps,
         offered,
         shed,
@@ -464,6 +479,35 @@ mod tests {
             "{}",
             r.render()
         );
+    }
+
+    #[test]
+    fn fault_storm_with_speculation_holds_invariants() {
+        // same storm with a draft window: cancels, evictions, and the
+        // drain now land between (and inside) speculative verify steps,
+        // and survivors must STILL match the spec-enabled twin bitwise
+        let fc = FaultConfig {
+            max_seqs: 2,
+            max_pending: 2,
+            prompt_len: 6,
+            max_new: 8,
+            spec_k: 3,
+            ..FaultConfig::default()
+        };
+        let (r, _engine) = run_fault_bench(engine(), &fc).unwrap();
+        assert!(r.survivors_bitwise && r.cancel_free_immediate);
+        assert_eq!(r.leaked_pages, 0);
+        assert!(r.finished > 0, "{}", r.render());
+        assert!(r.cancelled > 0, "{}", r.render());
+        assert!(r.deadline_evicted > 0, "{}", r.render());
+        assert_eq!(
+            r.finished + r.cancelled + r.deadline_evicted + r.incomplete + r.shed,
+            r.offered,
+            "{}",
+            r.render()
+        );
+        let j = r.to_json(2);
+        assert_eq!(j.get("spec_k").unwrap().as_f64().unwrap(), 3.0);
     }
 
     #[test]

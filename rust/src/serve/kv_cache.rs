@@ -318,6 +318,34 @@ impl KvPool {
         }
     }
 
+    /// Shrink `slot`'s mapping to the pages covering `keep_rows` token
+    /// rows, returning the tail pages to the free list. The admission
+    /// reservation is NOT shrunk: the freed pages go back to
+    /// reserved-but-unmapped, so a later [`KvPool::ensure`] back up to
+    /// the admitted peak stays infallible and admission accounting is
+    /// untouched. This is speculative decode's rollback: rejected draft
+    /// rows live page-granular, so only whole pages past the kept
+    /// prefix unmap (rows sharing a page with kept rows are simply
+    /// rewritten by the next verify). Contiguous layout: no-op — the
+    /// slot's single region is the admission unit and stale rows are
+    /// rewritten before they are read.
+    pub fn truncate(&mut self, slot: usize, keep_rows: usize) {
+        debug_assert!(slot < self.slots);
+        if matches!(self.layout, KvLayout::Contiguous) {
+            return;
+        }
+        let keep = self.pages_for(keep_rows);
+        while self.tables[slot].len() > keep {
+            let p = self.tables[slot].pop().unwrap() as usize;
+            debug_assert!(!self.page_free[p], "truncate of a free page");
+            self.page_free[p] = true;
+            self.free_count += 1;
+            self.low_hint = self.low_hint.min(p);
+            self.page_unmaps += 1;
+            self.reserved_unmapped += 1;
+        }
+    }
+
     /// Next page to map: the one adjacent to `last` when free (keeps
     /// tables contiguous, so the flat-slice attention fast path keeps
     /// applying), else the lowest-indexed free page (keeps the pool
@@ -667,6 +695,80 @@ mod tests {
         assert!(kv.leak_report().is_some());
         kv.release(b);
         assert!(kv.leak_report().is_none());
+        kv.release_storage(&mut s);
+    }
+
+    #[test]
+    fn truncate_returns_tail_pages_and_keeps_reservation() {
+        let mut s = Scratch::new();
+        // 8 pages of 2 rows, cap 16, 2 slots
+        let mut kv = KvPool::with_layout(&mut s, 1, 16, 2, 2,
+                                         KvLayout::Paged { page: 2 }, 8);
+        let a = kv.acquire(12).unwrap(); // reserves 6 pages
+        kv.ensure(a, 12);
+        assert_eq!(kv.mapped_rows(a), 12);
+        assert_eq!(kv.stats().free_pages, 2);
+        // roll back to 7 rows: pages covering rows 0..7 = 4 stay mapped
+        kv.truncate(a, 7);
+        assert_eq!(kv.mapped_rows(a), 8);
+        assert_eq!(kv.stats().free_pages, 4);
+        // the reservation is untouched: the freed pages are still
+        // spoken for, so admission capacity did not grow...
+        assert_eq!(kv.stats().reserved_unmapped, 2);
+        assert!(kv.can_admit(4));
+        assert!(!kv.can_admit(5), "truncated pages must stay reserved");
+        // ...and growing back to the admitted peak is infallible
+        kv.ensure(a, 12);
+        assert_eq!(kv.mapped_rows(a), 12);
+        // truncate to a row count inside the mapped pages: no-op
+        kv.truncate(a, 11);
+        assert_eq!(kv.mapped_rows(a), 12);
+        kv.release(a);
+        assert!(kv.leak_report().is_none(), "{:?}", kv.leak_report());
+        kv.release_storage(&mut s);
+    }
+
+    #[test]
+    fn truncate_is_a_noop_on_the_contiguous_layout() {
+        let mut s = Scratch::new();
+        let mut kv = KvPool::new(&mut s, 1, 8, 2, 2);
+        let a = kv.acquire(8).unwrap();
+        assert_eq!(kv.mapped_rows(a), 8);
+        kv.truncate(a, 3);
+        assert_eq!(kv.mapped_rows(a), 8, "contiguous slot stays whole");
+        kv.release(a);
+        assert!(kv.leak_report().is_none());
+        kv.release_storage(&mut s);
+    }
+
+    #[test]
+    fn truncated_pages_are_reusable_and_rows_readdress() {
+        let mut s = Scratch::new();
+        let mut kv = KvPool::with_layout(&mut s, 2, 8, 2, 3,
+                                         KvLayout::Paged { page: 2 }, 12);
+        let a = kv.acquire(8).unwrap();
+        kv.ensure(a, 8);
+        kv.truncate(a, 4); // pages 2, 3 freed
+        // another sequence can map the freed pages right away
+        let b = kv.acquire(4).unwrap();
+        kv.ensure(b, 4);
+        {
+            let (_, _, map) = kv.storage_and_map();
+            // b took the pages a just released (lowest free = 2, 3)
+            assert!(map.span(b, 0, 4).is_some());
+            assert_eq!(map.row_base(b, 0, 0), 2 * 2 * 2);
+        }
+        // a regrows into different pages; row 4 readdresses to page 4
+        kv.ensure(a, 6);
+        {
+            let (_, _, map) = kv.storage_and_map();
+            assert_eq!(map.row_base(a, 0, 4), 4 * 2 * 2);
+            assert!(map.span(a, 0, 6).is_none(),
+                    "regrowth after interleaved admission fragments");
+        }
+        kv.release(a);
+        kv.release(b);
+        assert!(kv.leak_report().is_none(), "{:?}", kv.leak_report());
         kv.release_storage(&mut s);
     }
 

@@ -51,6 +51,19 @@
 //! [`InferEngine::prefill_reference`] is the differential oracle the
 //! `serve_prefill` test suite pins chunked prefill against (1e-5).
 //!
+//! ## Speculative decode
+//!
+//! With `[serve] spec_k > 0` under greedy sampling, decode lanes run
+//! draft-then-verify: a [`Drafter`] proposes up to `k` tokens and
+//! [`InferEngine::verify_chunk`] scores all `k+1` positions in one
+//! `[k+1, d]` block through the same chunk path prefill uses — the
+//! matrix-form shapes the 2:4 kernels want — with rejected KV rows
+//! rolled back via [`KvPool::truncate`]. Greedy acceptance keeps every
+//! output bitwise identical to vanilla decode (the `serve_spec` test
+//! suite's differential pin); non-greedy sampling falls back to plain
+//! per-token decode. `serve-bench`'s `serve_spec` section sweeps k
+//! against the k=0 baseline (see `docs/SERVING.md`, `docs/BENCH.md`).
+//!
 //! ## The hardened front-end
 //!
 //! [`server`] puts a dependency-free socket front-end (std::net TCP or
@@ -87,6 +100,7 @@
 //! mixed long/short `kv_paging` occupancy comparison).
 
 pub mod bench;
+pub mod drafter;
 pub mod engine;
 pub mod faultgen;
 pub mod generate;
@@ -95,7 +109,11 @@ pub mod protocol;
 pub mod scheduler;
 pub mod server;
 
-pub use bench::{run_mixed_kv_bench, run_open_loop, BenchResult, MixedKvResult};
+pub use bench::{
+    run_mixed_kv_bench, run_open_loop, run_spec_bench, BenchResult,
+    MixedKvResult, SpecBenchResult,
+};
+pub use drafter::{make_drafter, Drafter, NGramDrafter, RepeatDrafter};
 pub use engine::{synthetic_checkpoint, DecodeLane, InferEngine, InferModel};
 pub use faultgen::{run_fault_bench, FaultBenchResult, FaultConfig};
 pub use generate::{argmax, sample, Sampling};
@@ -103,6 +121,6 @@ pub use kv_cache::{KvLayout, KvPool, KvStats};
 pub use protocol::{ClientFrame, GenRequest, ServerFrame, StatsGauges};
 pub use scheduler::{
     Completion, CompletionStatus, Rejected, Request, SchedCounters, Scheduler,
-    StepReport, DEFAULT_PREFILL_CHUNK,
+    SpecStats, StepReport, DEFAULT_PREFILL_CHUNK,
 };
 pub use server::{run_server, run_smoke, ServerHandle, ServerReport};

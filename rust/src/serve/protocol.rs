@@ -132,6 +132,12 @@ pub struct StatsGauges {
     /// inter-token gap (per decode lane)
     pub gap_p50_us: u64,
     pub gap_p99_us: u64,
+    /// speculative decode: draft tokens proposed / accepted / rolled
+    /// back since startup (all 0 with `spec_k = 0` or non-greedy
+    /// sampling — speculation never runs then)
+    pub spec_drafted: u64,
+    pub spec_accepted: u64,
+    pub spec_rolled_back: u64,
 }
 
 /// Server → client frames.
@@ -207,6 +213,9 @@ impl ServerFrame {
                     ("ttft_p99_us", num(gauges.ttft_p99_us as f64)),
                     ("gap_p50_us", num(gauges.gap_p50_us as f64)),
                     ("gap_p99_us", num(gauges.gap_p99_us as f64)),
+                    ("spec_drafted", num(gauges.spec_drafted as f64)),
+                    ("spec_accepted", num(gauges.spec_accepted as f64)),
+                    ("spec_rolled_back", num(gauges.spec_rolled_back as f64)),
                 ])
             }
             ServerFrame::Health { draining } => obj(vec![
@@ -275,6 +284,9 @@ impl ServerFrame {
                         ttft_p99_us: u("ttft_p99_us"),
                         gap_p50_us: u("gap_p50_us"),
                         gap_p99_us: u("gap_p99_us"),
+                        spec_drafted: u("spec_drafted"),
+                        spec_accepted: u("spec_accepted"),
+                        spec_rolled_back: u("spec_rolled_back"),
                     },
                 }
             }
@@ -365,6 +377,9 @@ mod tests {
                     ttft_p99_us: 6144,
                     gap_p50_us: 768,
                     gap_p99_us: 3072,
+                    spec_drafted: 24,
+                    spec_accepted: 18,
+                    spec_rolled_back: 6,
                 },
             },
             ServerFrame::Health { draining: true },

@@ -61,6 +61,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::ServeConfig;
 use crate::model::ModelDims;
 
+use super::drafter::make_drafter;
 use super::engine::{synthetic_checkpoint, InferEngine, InferModel};
 use super::generate::Sampling;
 use super::protocol::{ClientFrame, GenRequest, ServerFrame, StatsGauges};
@@ -379,6 +380,7 @@ impl FrontEnd {
                 // telemetry registry — the same histograms `--metrics`
                 // emits, so the wire view can never diverge from it
                 let ks = self.sch.kv_stats();
+                let ss = self.sch.spec_stats();
                 let ttft = crate::obs::histogram("serve.ttft_us").snapshot();
                 let gap = crate::obs::histogram("serve.gap_us").snapshot();
                 let gauges = StatsGauges {
@@ -389,6 +391,9 @@ impl FrontEnd {
                     ttft_p99_us: ttft.quantile(0.99) as u64,
                     gap_p50_us: gap.quantile(0.5) as u64,
                     gap_p99_us: gap.quantile(0.99) as u64,
+                    spec_drafted: ss.drafted,
+                    spec_accepted: ss.accepted,
+                    spec_rolled_back: ss.rolled_back,
                 };
                 let f = ServerFrame::Stats {
                     active: self.sch.n_active(),
@@ -557,6 +562,13 @@ fn run_server_inner(
         cfg.kv_pages, Sampling::from_params(cfg.temperature, cfg.top_k), cfg.seed,
     );
     sch.set_max_pending(cfg.max_pending);
+    if cfg.spec_k > 0 {
+        let vocab = sch.engine.model.dims.vocab;
+        sch.set_spec(
+            cfg.spec_k,
+            make_drafter(&cfg.spec_drafter, cfg.max_seqs, vocab)?,
+        );
+    }
 
     let (tx, rx): (Sender<Event>, Receiver<Event>) = mpsc::channel();
     let stop = Arc::new(AtomicBool::new(false));
@@ -804,8 +816,12 @@ fn default_smoke_listen() -> String {
 /// → eviction with partial output, `shutdown` frame → graceful drain
 /// with the zero-leak assertion. Returns a summary line; any violated
 /// invariant is an error. `listen` overrides the default unix-socket
-/// spec (`verify.sh` runs this via `sparse24 serve --smoke`).
-pub fn run_smoke(listen: Option<&str>) -> Result<String> {
+/// spec (`verify.sh` runs this via `sparse24 serve --smoke`, once plain
+/// and once with `--spec-k` — `spec_k > 0` turns on speculative decode
+/// and additionally asserts the stats frame reports drafted tokens, so
+/// every fault path above is re-proven with verify/rollback in the
+/// loop).
+pub fn run_smoke(listen: Option<&str>, spec_k: usize) -> Result<String> {
     // n_ctx is deliberately large: request A below decodes up to ~300
     // tokens, so the few client round-trips between its first token and
     // its mid-stream disconnect are orders of magnitude shorter than its
@@ -823,6 +839,7 @@ pub fn run_smoke(listen: Option<&str>) -> Result<String> {
         temperature: 0.0,
         request_deadline_ms: 0,
         drain_timeout_ms: 5_000,
+        spec_k,
         ..ServeConfig::default()
     };
     let handle = ServerHandle::spawn(InferEngine::new(model), cfg)?;
@@ -902,7 +919,7 @@ pub fn run_smoke(listen: Option<&str>) -> Result<String> {
     // (f) counters reflect every pillar, then a graceful drain
     let mut e = Client::connect(&addr)?;
     e.send(&ClientFrame::Stats)?;
-    let ServerFrame::Stats { counters, .. } = e.recv()? else {
+    let ServerFrame::Stats { counters, gauges, .. } = e.recv()? else {
         bail!("expected stats frame");
     };
     if counters.finished < 1
@@ -911,6 +928,18 @@ pub fn run_smoke(listen: Option<&str>) -> Result<String> {
         || counters.deadline_evicted < 1
     {
         bail!("smoke counters incomplete: {counters:?}");
+    }
+    if spec_k > 0 {
+        // A decoded hundreds of greedy tokens before its disconnect —
+        // speculation must have engaged and the wire stats must show it
+        if gauges.spec_drafted == 0 {
+            bail!("spec_k={spec_k} but the stats frame reports 0 drafted tokens");
+        }
+        if gauges.spec_accepted + gauges.spec_rolled_back != gauges.spec_drafted {
+            bail!("spec gauges don't balance: {gauges:?}");
+        }
+    } else if gauges.spec_drafted != 0 {
+        bail!("spec_k=0 but the stats frame reports drafted tokens: {gauges:?}");
     }
     e.send(&ClientFrame::Shutdown)?;
     match e.recv()? {
@@ -927,7 +956,15 @@ pub fn run_smoke(listen: Option<&str>) -> Result<String> {
     {
         bail!("final counters incomplete: {:?}", report.counters);
     }
-    Ok(format!("serve smoke OK: {}", report.render()))
+    let spec_note = if spec_k > 0 {
+        format!(
+            " | spec k={spec_k}: drafted {} accepted {} rolled back {}",
+            gauges.spec_drafted, gauges.spec_accepted, gauges.spec_rolled_back
+        )
+    } else {
+        String::new()
+    };
+    Ok(format!("serve smoke OK: {}{spec_note}", report.render()))
 }
 
 #[cfg(test)]
@@ -938,8 +975,18 @@ mod tests {
     /// `verify.sh` via `sparse24 serve --smoke`).
     #[test]
     fn smoke_over_tcp_loopback() {
-        let summary = run_smoke(Some("127.0.0.1:0")).unwrap();
+        let summary = run_smoke(Some("127.0.0.1:0"), 0).unwrap();
         assert!(summary.contains("serve smoke OK"), "{summary}");
+    }
+
+    /// Same storm with speculative decode on: every fault path fires
+    /// with verify/rollback in the loop, the wire stats prove drafting
+    /// engaged, and the drain still exits zero-leak.
+    #[test]
+    fn smoke_with_speculation_enabled() {
+        let summary = run_smoke(Some("127.0.0.1:0"), 3).unwrap();
+        assert!(summary.contains("serve smoke OK"), "{summary}");
+        assert!(summary.contains("spec k=3"), "{summary}");
     }
 
     #[test]

@@ -233,7 +233,13 @@ pub fn kernel_bench_regressions(
 /// * `serve_faults` — goodput (finished tokens per second) of the
 ///   deterministic fault storm, matched on max_seqs / max_pending /
 ///   threads (a drop means the robustness machinery — cancel, deadline
-///   eviction, load-shedding, drain — started costing throughput).
+///   eviction, load-shedding, drain — started costing throughput);
+/// * `serve_spec` — the speculative-decode sweep, matched on spec_k /
+///   drafter / max_seqs / threads, on BOTH `accept_rate` (a drop means
+///   the drafter got worse at guessing, wasting verify rows) and
+///   `tokens_per_s_per_lane` (a drop means speculation stopped paying —
+///   including on the k=0 baseline row, where it means plain decode
+///   itself regressed).
 ///
 /// Warn-only analogue of [`kernel_bench_regressions`] for the serving
 /// trajectory; a missing file or missing `.prev` yields no warnings.
@@ -291,6 +297,30 @@ pub fn serve_bench_regressions(
         warnings.extend(metric_regressions(
             cur, old, &rec_key, "goodput_tokens_per_s", threshold, section,
             "tok/s",
+        ));
+    }
+    let section = "serve_spec";
+    if let (Some(Json::Arr(cur)), Some(Json::Arr(old))) =
+        (j.opt(section), j.opt(&format!("{section}.prev")))
+    {
+        let rec_key = |r: &Json| -> Result<String> {
+            Ok(format!(
+                "k={} drafter={} max_seqs={} t{}",
+                r.get("spec_k")?.as_usize()?,
+                r.get("drafter")?.as_str()?,
+                r.get("max_seqs")?.as_usize()?,
+                r.get("threads")?.as_usize()?,
+            ))
+        };
+        // the k=0 baseline row has accept_rate 0 and is skipped by the
+        // positive-baseline guard; its per-lane throughput IS tracked
+        warnings.extend(metric_regressions(
+            cur, old, &rec_key, "accept_rate", threshold,
+            "serve_spec accept_rate", "rate",
+        ));
+        warnings.extend(metric_regressions(
+            cur, old, &rec_key, "tokens_per_s_per_lane", threshold,
+            "serve_spec tok/s/lane", "tok/s/lane",
         ));
     }
     Ok(warnings)
@@ -553,6 +583,40 @@ mod tests {
         let w = serve_bench_regressions(&path, 0.15).unwrap();
         assert_eq!(w.len(), 1, "{w:?}");
         assert!(w[0].contains("pending=4"), "{}", w[0]);
+        // settle serve_faults (prev == cur) so it stops warning
+        write_json_section_at(&path, "serve_faults", fault_entry(100.0)).unwrap();
+        assert!(serve_bench_regressions(&path, 0.15).unwrap().is_empty());
+        // serve_spec tracks BOTH accept_rate and per-lane throughput,
+        // keyed by the draft window; the k=0 baseline (accept_rate 0)
+        // only ever warns on throughput
+        let spec_entry = |rate: f64, lane: f64| {
+            let row = |k: f64, r: f64| {
+                obj(vec![
+                    ("spec_k", num(k)),
+                    ("drafter", Json::Str(if k > 0.0 { "ngram" } else { "none" }.into())),
+                    ("max_seqs", num(4.0)),
+                    ("threads", num(2.0)),
+                    ("accept_rate", num(r)),
+                    ("tokens_per_s_per_lane", num(lane)),
+                ])
+            };
+            Json::Arr(vec![row(0.0, 0.0), row(4.0, rate)])
+        };
+        write_json_section_at(&path, "serve_spec", spec_entry(0.8, 900.0)).unwrap();
+        assert!(serve_bench_regressions(&path, 0.15).unwrap().is_empty());
+        // accept rate halves: one warning (k=0's rate is 0 -> skipped)
+        write_json_section_at(&path, "serve_spec", spec_entry(0.4, 900.0)).unwrap();
+        let w = serve_bench_regressions(&path, 0.15).unwrap();
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("accept_rate") && w[0].contains("k=4"), "{}", w[0]);
+        // per-lane throughput halves: both rows warn on it
+        write_json_section_at(&path, "serve_spec", spec_entry(0.4, 450.0)).unwrap();
+        let w = serve_bench_regressions(&path, 0.15).unwrap();
+        assert_eq!(w.len(), 2, "{w:?}");
+        assert!(w.iter().all(|m| m.contains("tok/s/lane")), "{w:?}");
+        // improvements never warn
+        write_json_section_at(&path, "serve_spec", spec_entry(0.9, 1200.0)).unwrap();
+        assert!(serve_bench_regressions(&path, 0.15).unwrap().is_empty());
         // missing file: no warnings
         assert!(serve_bench_regressions(&dir.join("nope.json"), 0.15)
             .unwrap()

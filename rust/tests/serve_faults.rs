@@ -7,8 +7,8 @@
 use sparse24::model::ModelDims;
 use sparse24::serve::{
     run_fault_bench, synthetic_checkpoint, CompletionStatus, FaultConfig,
-    InferEngine, InferModel, KvLayout, Request, Sampling, Scheduler,
-    DEFAULT_PREFILL_CHUNK,
+    InferEngine, InferModel, KvLayout, NGramDrafter, Request, Sampling,
+    Scheduler, DEFAULT_PREFILL_CHUNK,
 };
 use sparse24::util::rng::Rng;
 
@@ -190,5 +190,61 @@ fn fault_harness_invariants_hold_at_integration_scale() {
     let done = sch.run_until_idle(64);
     assert_eq!(done.len(), 1);
     assert_eq!(done[0].status, CompletionStatus::Finished);
+    sch.shutdown();
+}
+
+/// The same storm with speculation enabled on BOTH the faulted run and
+/// its undisturbed twin: mid-verify cancels and deadline evictions must
+/// leak no pages, and survivors stay bitwise equal to the twin.
+#[test]
+fn fault_harness_invariants_hold_with_speculation_enabled() {
+    let fc = FaultConfig {
+        n_requests: 30,
+        max_seqs: 3,
+        max_pending: 3,
+        max_steps: 300,
+        prompt_len: 8,
+        max_new: 10,
+        kv_page: 4,
+        spec_k: 3,
+        seed: 0xBEEF,
+        ..FaultConfig::default()
+    };
+    let (r, _engine) = run_fault_bench(engine(), &fc).unwrap();
+    assert_eq!(r.offered, fc.n_requests);
+    assert_eq!(r.spec_k, 3);
+    assert!(r.survivors_bitwise,
+            "speculative survivors diverged from the undisturbed twin");
+    assert!(r.cancel_free_immediate);
+    assert_eq!(r.leaked_pages, 0);
+    assert_eq!(
+        r.finished + r.cancelled + r.deadline_evicted + r.incomplete + r.shed,
+        r.offered
+    );
+    assert!(r.finished > 0, "nothing survived the speculative storm");
+}
+
+/// Cancelling a sequence that is actively speculating (its KV has been
+/// grown by verify blocks and truncated by rollbacks) must return every
+/// mapped page AND the unmapped remainder of its peak reservation.
+#[test]
+fn cancel_mid_speculation_returns_full_reservation() {
+    let mut sch = Scheduler::with_kv(
+        engine(), 2, 64, 4, KvLayout::Paged { page: 4 }, 0, Sampling::Greedy, 3,
+    );
+    sch.set_spec(4, Box::new(NGramDrafter::new(2, VOCAB)));
+    let before = sch.kv_stats();
+    let prompt: Vec<u32> = (0..8).map(|t| (t % VOCAB as u32).max(1)).collect();
+    sch.submit(Request::new(0, prompt, 12));
+    // 2 prefill steps at chunk 4, then speculative decode steps
+    for _ in 0..4 {
+        sch.step();
+    }
+    assert!(sch.spec_stats().drafted > 0, "speculation should have engaged");
+    let c = sch.cancel(0).expect("request is active");
+    assert_eq!(c.status, CompletionStatus::Cancelled);
+    assert_eq!(sch.kv_stats().free_pages, before.free_pages,
+               "reservation not fully returned after mid-verify cancel");
+    assert_eq!(sch.leak_report(), None);
     sch.shutdown();
 }

@@ -1,0 +1,400 @@
+//! Differential tests for speculative (draft-then-verify) decode: greedy
+//! outputs under speculation are pinned BITWISE against vanilla decode
+//! across draft windows, scheduler seeds, and model shapes — including
+//! runs where chunked prefill of one sequence interleaves with verify
+//! blocks of another. Scripted oracle/anti-oracle drafters pin the
+//! all-accept and all-reject paths deterministically (step savings and
+//! KV rollback respectively), the step-budget property covers mixed
+//! spec/prefill/decode steps, non-greedy sampling is asserted to fall
+//! back to plain decode, and the speculative steady state is held to
+//! the zero-allocation contract even under `Level::Trace`.
+
+use sparse24::model::ModelDims;
+use sparse24::obs::{self, Level};
+use sparse24::serve::{
+    make_drafter, synthetic_checkpoint, Drafter, InferEngine, InferModel,
+    KvLayout, NGramDrafter, Request, Sampling, Scheduler, SpecStats,
+};
+use sparse24::util::rng::Rng;
+
+fn shapes() -> Vec<ModelDims> {
+    vec![
+        ModelDims { vocab: 40, d_model: 24, n_layers: 2, n_heads: 3, d_ff: 12, n_ctx: 24 },
+        ModelDims { vocab: 64, d_model: 16, n_layers: 3, n_heads: 2, d_ff: 8, n_ctx: 32 },
+    ]
+}
+
+fn engine(dims: &ModelDims, seed: u64) -> InferEngine {
+    InferEngine::new(
+        InferModel::from_checkpoint(&synthetic_checkpoint(dims, seed)).unwrap(),
+    )
+}
+
+struct RunOut {
+    outputs: Vec<(u64, Vec<u32>)>,
+    steps: usize,
+    stats: SpecStats,
+    /// some step ran a prefill chunk AND a speculative verify block
+    saw_overlap: bool,
+}
+
+/// Staggered run: the first request goes in alone and is still
+/// prefilling when the rest arrive, so its speculative decode phase
+/// overlaps the others' chunked prefill. Asserts the step-budget and
+/// verify-accounting invariants on every step.
+fn run_staggered(dims: &ModelDims, model_seed: u64, sched_seed: u64,
+                 budget: usize, requests: &[Request], spec_k: usize,
+                 drafter: &str) -> RunOut {
+    let mut sch = Scheduler::with_kv(
+        engine(dims, model_seed), 2, budget, 4, KvLayout::Paged { page: 4 },
+        0, Sampling::Greedy, sched_seed,
+    );
+    if spec_k > 0 {
+        sch.set_spec(spec_k, make_drafter(drafter, 2, dims.vocab).unwrap());
+    }
+    let mut outputs = Vec::new();
+    let mut steps = 0usize;
+    let mut saw_overlap = false;
+    sch.submit(requests[0].clone());
+    // prompts are >= 9 tokens at chunk 4: two steps leave the first
+    // request mid-prefill when the rest of the load lands
+    for _ in 0..2 {
+        let r = sch.step();
+        steps += 1;
+        assert!(r.occupancy + r.prefilled + r.spec_tokens <= budget);
+        for c in r.finished {
+            outputs.push((c.id, c.tokens));
+        }
+    }
+    for req in requests[1..].iter() {
+        sch.submit(req.clone());
+    }
+    let mut guard = 0;
+    while !sch.is_idle() && guard < 2000 {
+        let r = sch.step();
+        steps += 1;
+        guard += 1;
+        assert!(
+            r.occupancy + r.prefilled + r.spec_tokens <= budget,
+            "k={spec_k}: step spent {} decode + {} prefill + {} spec tokens \
+             over budget {budget}",
+            r.occupancy, r.prefilled, r.spec_tokens
+        );
+        assert_eq!(r.spec_tokens, r.drafted + r.spec_lanes,
+                   "verify-block token accounting out of balance");
+        if r.prefilled > 0 && r.spec_tokens > 0 {
+            saw_overlap = true;
+        }
+        for c in r.finished {
+            outputs.push((c.id, c.tokens));
+        }
+    }
+    assert!(sch.is_idle(), "k={spec_k} drafter={drafter}: run did not drain");
+    let stats = sch.spec_stats();
+    sch.shutdown();
+    outputs.sort_by_key(|&(id, _)| id);
+    RunOut { outputs, steps, stats, saw_overlap }
+}
+
+/// The tentpole pin: speculative greedy decode emits token streams
+/// BITWISE identical to vanilla decode — across draft windows k, both
+/// drafters, multiple scheduler seeds, and both model shapes, with
+/// chunked prefill interleaving the verify blocks.
+#[test]
+fn spec_outputs_bitwise_match_vanilla_across_k_seeds_and_shapes() {
+    for (si, dims) in shapes().iter().enumerate() {
+        let model_seed = 100 + si as u64;
+        for sched_seed in [5u64, 77] {
+            let mut rng = Rng::new(sched_seed.wrapping_mul(31) ^ si as u64);
+            let requests: Vec<Request> = (0..4u64)
+                .map(|id| {
+                    let plen = 9 + rng.below(4); // 9..=12: spans chunk-4 steps
+                    Request::new(
+                        id,
+                        (0..plen).map(|_| rng.below(dims.vocab) as u32).collect(),
+                        4 + rng.below(4),
+                    )
+                })
+                .collect();
+            let vanilla =
+                run_staggered(dims, model_seed, sched_seed, 64, &requests, 0, "ngram");
+            assert_eq!(vanilla.outputs.len(), requests.len());
+            assert_eq!(vanilla.stats, SpecStats::default(),
+                       "vanilla run must never speculate");
+            for (k, drafter) in
+                [(1usize, "ngram"), (2, "ngram"), (4, "ngram"), (8, "ngram"),
+                 (4, "repeat")]
+            {
+                let spec = run_staggered(dims, model_seed, sched_seed, 64,
+                                         &requests, k, drafter);
+                assert_eq!(
+                    spec.outputs, vanilla.outputs,
+                    "shape {si} seed {sched_seed} k={k} drafter={drafter}: \
+                     speculative outputs diverged from vanilla"
+                );
+                assert!(spec.stats.drafted > 0,
+                        "k={k} drafter={drafter}: speculation never engaged");
+                assert_eq!(spec.stats.drafted,
+                           spec.stats.accepted + spec.stats.rolled_back);
+                assert!(spec.stats.verify_calls > 0);
+                assert!(
+                    spec.saw_overlap,
+                    "shape {si} seed {sched_seed} k={k}: no step mixed chunked \
+                     prefill with a speculative verify block"
+                );
+            }
+        }
+    }
+}
+
+/// Test-only drafter scripted with the vanilla token stream: proposes
+/// the exact true continuation (`wrong: false` — every draft accepted)
+/// or its off-by-one corruption (`wrong: true` — every draft rejected).
+/// `observe` doubles as a bitwise differential check: each committed
+/// token must match the script position.
+struct ScriptDrafter {
+    /// prompt ++ vanilla outputs, the full committed stream
+    script: Vec<u32>,
+    seen: usize,
+    wrong: bool,
+    vocab: u32,
+}
+
+impl Drafter for ScriptDrafter {
+    fn name(&self) -> &'static str {
+        if self.wrong { "anti-oracle" } else { "oracle" }
+    }
+
+    fn begin(&mut self, _slot: usize, _seed: u64) {
+        self.seen = 0;
+    }
+
+    fn observe(&mut self, _slot: usize, token: u32) {
+        assert!(self.seen < self.script.len(), "more tokens than scripted");
+        assert_eq!(token, self.script[self.seen],
+                   "committed stream diverged from the vanilla script at \
+                    position {}", self.seen);
+        self.seen += 1;
+    }
+
+    fn draft(&mut self, _slot: usize, _last: u32, out: &mut [u32]) -> usize {
+        for (j, o) in out.iter_mut().enumerate() {
+            let truth = self.script.get(self.seen + j).copied().unwrap_or(0);
+            *o = if self.wrong { (truth + 1) % self.vocab } else { truth };
+        }
+        out.len()
+    }
+}
+
+/// One request through a single-lane scheduler; asserts the paged pool
+/// balances to zero after retirement (free == total, nothing mapped or
+/// reserved) and never invents/loses pages mid-run.
+fn run_single(dims: &ModelDims, model_seed: u64, prompt: &[u32], max_new: usize,
+              spec: Option<Box<dyn Drafter>>, spec_k: usize)
+              -> (Vec<u32>, usize, SpecStats) {
+    let mut sch = Scheduler::with_kv(
+        engine(dims, model_seed), 1, 64, 4, KvLayout::Paged { page: 4 }, 0,
+        Sampling::Greedy, 9,
+    );
+    if let Some(d) = spec {
+        sch.set_spec(spec_k, d);
+    }
+    let total_pages = sch.kv_stats().total_pages;
+    sch.submit(Request::new(0, prompt.to_vec(), max_new));
+    let mut steps = 0usize;
+    let mut out = Vec::new();
+    while !sch.is_idle() && steps < 500 {
+        let r = sch.step();
+        steps += 1;
+        assert_eq!(sch.kv_stats().total_pages, total_pages);
+        for c in r.finished {
+            out = c.tokens;
+        }
+    }
+    assert!(sch.is_idle());
+    let st = sch.kv_stats();
+    assert_eq!(st.free_pages, st.total_pages, "pages missing after retirement");
+    assert_eq!(st.mapped_pages, 0);
+    assert_eq!(st.reserved_unmapped, 0, "reservations did not balance to zero");
+    assert_eq!(st.active_seqs, 0);
+    assert_eq!(sch.leak_report(), None);
+    let stats = sch.spec_stats();
+    sch.shutdown();
+    (out, steps, stats)
+}
+
+/// Deterministic pins for both extremes of the accept/rollback path: a
+/// perfect drafter is fully accepted and strictly saves steps; an
+/// always-wrong drafter is fully rolled back (truncate frees exactly
+/// the rejected rows — the pool balances to zero) and degenerates to
+/// vanilla pace. Both stay bitwise equal to vanilla.
+#[test]
+fn oracle_and_anti_oracle_drafters_pin_accept_and_rollback_paths() {
+    let dims = shapes()[1];
+    let prompt = [3u32, 9, 27, 14, 60, 2];
+    let max_new = 8;
+    let (vanilla, steps_v, s0) =
+        run_single(&dims, 200, &prompt, max_new, None, 0);
+    assert_eq!(vanilla.len(), max_new);
+    assert_eq!(s0, SpecStats::default());
+    let mut script = prompt.to_vec();
+    script.extend_from_slice(&vanilla);
+
+    let oracle = ScriptDrafter {
+        script: script.clone(), seen: 0, wrong: false, vocab: dims.vocab as u32,
+    };
+    let (out_o, steps_o, so) =
+        run_single(&dims, 200, &prompt, max_new, Some(Box::new(oracle)), 4);
+    assert_eq!(out_o, vanilla, "oracle run diverged from vanilla");
+    assert!(so.drafted > 0);
+    assert_eq!(so.rolled_back, 0, "oracle drafts must all be accepted");
+    assert_eq!(so.accepted, so.drafted);
+    assert!(
+        steps_o < steps_v,
+        "all-accepted speculation must save steps ({steps_o} vs {steps_v})"
+    );
+
+    let anti = ScriptDrafter {
+        script, seen: 0, wrong: true, vocab: dims.vocab as u32,
+    };
+    let (out_a, steps_a, sa) =
+        run_single(&dims, 200, &prompt, max_new, Some(Box::new(anti)), 4);
+    assert_eq!(out_a, vanilla, "anti-oracle run diverged from vanilla");
+    assert!(sa.drafted > 0);
+    assert_eq!(sa.accepted, 0, "anti-oracle drafts must all be rejected");
+    assert_eq!(sa.rolled_back, sa.drafted);
+    assert_eq!(
+        steps_a, steps_v,
+        "all-rejected speculation emits one token per step, like vanilla"
+    );
+}
+
+/// Property: under tight budgets with speculation on, every step keeps
+/// `occupancy + prefilled + spec_tokens <= max_batch_tokens`, the
+/// verify accounting balances, no request is lost, and the paged pool
+/// drains clean.
+#[test]
+fn spec_prefill_decode_share_budget_and_report_consistently() {
+    let dims = shapes()[0];
+    for budget in [4usize, 6, 9] {
+        let mut sch = Scheduler::with_kv(
+            engine(&dims, 400), 3, budget, 3, KvLayout::Paged { page: 4 }, 0,
+            Sampling::Greedy, budget as u64,
+        );
+        sch.set_spec(8, Box::new(NGramDrafter::new(3, dims.vocab)));
+        let total_pages = sch.kv_stats().total_pages;
+        let mut rng = Rng::new(budget as u64 ^ 0xFEED);
+        let mut offered = 0usize;
+        let mut finished = 0usize;
+        let mut spec_total = 0usize;
+        for _ in 0..120 {
+            for _ in 0..rng.below(2) {
+                let plen = 1 + rng.below(10);
+                let prompt =
+                    (0..plen).map(|_| rng.below(dims.vocab) as u32).collect();
+                sch.submit(Request::new(offered as u64, prompt,
+                                        2 + rng.below(7)));
+                offered += 1;
+            }
+            let r = sch.step();
+            assert!(
+                r.occupancy + r.prefilled + r.spec_tokens <= budget,
+                "budget {budget}: step spent {} decode + {} prefill + {} spec",
+                r.occupancy, r.prefilled, r.spec_tokens
+            );
+            assert_eq!(r.spec_tokens, r.drafted + r.spec_lanes,
+                       "budget {budget}: verify accounting out of balance");
+            spec_total += r.spec_tokens;
+            finished += r.finished.len();
+            assert_eq!(sch.kv_stats().total_pages, total_pages);
+        }
+        let done = sch.run_until_idle(5000);
+        finished += done.len();
+        assert_eq!(finished, offered, "budget {budget}: lost requests");
+        assert!(spec_total > 0, "budget {budget}: speculation never engaged");
+        assert_eq!(sch.leak_report(), None);
+        let st = sch.kv_stats();
+        assert_eq!(st.free_pages, st.total_pages);
+        assert_eq!(st.reserved_unmapped, 0);
+        sch.shutdown();
+    }
+}
+
+/// Temperature/top-k sampling disables speculation: no verify blocks
+/// run, the spec counters stay zero, and a configured drafter leaves
+/// sampled outputs untouched (same RNG consumption as a drafterless
+/// run).
+#[test]
+fn non_greedy_sampling_falls_back_to_plain_decode() {
+    let dims = shapes()[1];
+    let mut outs: Vec<Vec<(u64, Vec<u32>)>> = Vec::new();
+    for with_spec in [false, true] {
+        let mut sch = Scheduler::with_kv(
+            engine(&dims, 500), 2, 64, 4, KvLayout::Paged { page: 4 }, 0,
+            Sampling::TopK { k: 3, temperature: 0.9 }, 21,
+        );
+        if with_spec {
+            sch.set_spec(4, Box::new(NGramDrafter::new(2, dims.vocab)));
+        }
+        for id in 0..3u64 {
+            sch.submit(Request::new(id, vec![2 + id as u32, 7, 11, 5, 9], 6));
+        }
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while !sch.is_idle() && guard < 1000 {
+            let r = sch.step();
+            assert_eq!(r.spec_tokens, 0, "non-greedy sampling must not speculate");
+            assert_eq!(r.spec_lanes, 0);
+            assert_eq!(r.drafted, 0);
+            done.extend(r.finished);
+            guard += 1;
+        }
+        assert_eq!(sch.spec_stats(), SpecStats::default(),
+                   "spec counters moved under non-greedy sampling");
+        done.sort_by_key(|c| c.id);
+        outs.push(done.into_iter().map(|c| (c.id, c.tokens)).collect());
+        sch.shutdown();
+    }
+    assert_eq!(outs[0], outs[1],
+               "configured drafter changed non-greedy sampled outputs");
+}
+
+/// Zero-allocation contract with speculation enabled: after one
+/// shakedown batch has sized every buffer class (decode lanes, verify
+/// blocks at full k, prefill chunks), a second batch of the same shapes
+/// performs no fresh engine-arena allocations — even with telemetry at
+/// `Level::Trace`.
+#[test]
+fn speculative_steady_state_allocates_nothing_even_under_trace() {
+    let dims = shapes()[0];
+    let mut sch = Scheduler::with_kv(
+        engine(&dims, 300), 2, 64, 4, KvLayout::Paged { page: 4 }, 0,
+        Sampling::Greedy, 13,
+    );
+    sch.set_spec(4, Box::new(NGramDrafter::new(2, dims.vocab)));
+    let mut rng = Rng::new(41);
+    let mut submit_batch = |sch: &mut Scheduler, base: u64, rng: &mut Rng| {
+        for i in 0..4u64 {
+            let plen = 9 + (i as usize % 3);
+            let prompt: Vec<u32> =
+                (0..plen).map(|_| rng.below(dims.vocab) as u32).collect();
+            sch.submit(Request::new(base + i, prompt, 6));
+        }
+    };
+    submit_batch(&mut sch, 0, &mut rng);
+    let done = sch.run_until_idle(2000);
+    assert_eq!(done.len(), 4);
+    assert!(sch.spec_stats().drafted > 0, "shakedown never speculated");
+    let (_, fresh) = sch.engine.scratch_counters();
+
+    let prev = obs::level();
+    obs::set_level(Level::Trace);
+    submit_batch(&mut sch, 100, &mut rng);
+    let done = sch.run_until_idle(2000);
+    obs::set_level(prev);
+    assert_eq!(done.len(), 4);
+    let (_, fresh_after) = sch.engine.scratch_counters();
+    assert_eq!(fresh, fresh_after,
+               "speculative steady state allocated engine scratch");
+    sch.shutdown();
+}

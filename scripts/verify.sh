@@ -17,6 +17,10 @@
 # (mid-stream disconnect -> cancel, overload reject, doomed deadline,
 # graceful drain, zero-leak exit on a unix socket), the deterministic
 # fault-injection bench (`serve-bench --faults`, serve_faults section),
+# the speculative-decode differential suite (spec-vs-vanilla bitwise
+# across draft windows, budget property, rollback accounting,
+# zero-alloc under tracing) plus a spec-enabled server smoke and a
+# spec-enabled serve-bench sweep (serve_spec section),
 # the telemetry suite (sharded-histogram oracle, Chrome-trace
 # well-formedness, zero-alloc with tracing on, bitwise invariance
 # across telemetry levels and thread counts), a traced serving smoke
@@ -26,7 +30,7 @@
 # and a perf diff against the previous bench run (warn-only, >15%
 # regression; covers GFLOP/s — table12_epilogue included — prefill
 # tok/s, paged-KV occupancy, fault-storm goodput, and telemetry-mode
-# tokens/s).
+# tokens/s, spec accept rate + per-lane throughput).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -53,16 +57,22 @@ PALLAS_NUM_THREADS=2 cargo bench --bench ablation_spmm -- --quick
 PALLAS_NUM_THREADS=2 cargo bench --bench fig7_ffn_block -- --quick
 PALLAS_NUM_THREADS=2 cargo bench --bench table12_epilogue -- --quick
 
-echo "== serve smoke (synthetic checkpoint, 64 steps, paged KV, 2 threads)"
+echo "== serve smoke (synthetic checkpoint, 64 steps, paged KV, spec sweep, 2 threads)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --synthetic --quick \
-  --steps 64 --batch-sizes 2,4 --prefill-chunk 4 --kv-page 8
+  --steps 64 --batch-sizes 2,4 --prefill-chunk 4 --kv-page 8 --spec-k 4
 
 echo "== front-end suites (socket server + KV-leak churn properties)"
 PALLAS_NUM_THREADS=2 cargo test -q --test serve_server
 PALLAS_NUM_THREADS=2 cargo test -q --test serve_faults
 
+echo "== speculative-decode differential suite (spec vs vanilla, bitwise)"
+PALLAS_NUM_THREADS=2 cargo test -q --test serve_spec
+
 echo "== server smoke (unix socket: disconnect-cancel, overload, deadline, drain)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve --smoke
+
+echo "== server smoke with speculation (spec_k=3, wire-visible spec gauges)"
+PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve --smoke --spec-k 3
 
 echo "== fault-injection bench (seeded storm, bitwise survivors, zero leaks)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --faults --synthetic \
@@ -98,7 +108,7 @@ fi
 echo "== telemetry overhead bench (off vs counters vs tracing, advisory <3% gate)"
 PALLAS_NUM_THREADS=2 cargo bench --bench obs_overhead -- --quick
 
-echo "== bench-diff (GFLOP/s + prefill tok/s + kv occupancy + fault goodput + telemetry tok/s, warn-only)"
+echo "== bench-diff (GFLOP/s + prefill tok/s + kv occupancy + fault goodput + spec accept/lane tok/s + telemetry tok/s, warn-only)"
 ./target/release/sparse24 bench-diff || true
 
 echo "== verify OK"
