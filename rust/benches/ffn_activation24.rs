@@ -1,0 +1,79 @@
+//! The activation-2:4 ablation matrix: one FFN training iteration
+//! (fwd+bwd+overheads) timed dense vs weight-2:4 vs activation-2:4 vs
+//! both, at the paper's Fig. 7a shape family (r = 4d, headline d=1024 /
+//! r=4096). Weight mode halves every GEMM's MACs; activation mode
+//! halves only the second forward matmul (its backward is the dense
+//! straight-through path) but pays zero mask-maintenance overhead; both
+//! stacks the two. Rows land in the `ffn_activation24` section of
+//! BENCH_kernels.json, where `bench-diff` tracks them run-over-run.
+//!
+//! Run: cargo bench --bench ffn_activation24 [-- --quick]
+
+use std::time::Duration;
+
+use sparse24::sparse::kernels;
+use sparse24::sparse::workloads::{time_dense_ffn, time_sparse_ffn};
+use sparse24::sparse::SparseMode;
+use sparse24::util::bench::{write_kernel_bench, KernelBench};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = Duration::from_millis(if quick { 60 } else { 500 });
+    let threads = kernels::num_threads();
+    let ds: &[usize] = if quick { &[256] } else { &[512, 1024] };
+    let p = if quick { 256 } else { 1024 };
+    let mut recs = Vec::new();
+
+    println!(
+        "activation-2:4 FFN ablation (tokens n={p}, r=4d, fwd+bwd+overheads, \
+         {threads} threads)"
+    );
+    for &d in ds {
+        let r = 4 * d;
+        let pdr = p * d * r;
+        let dense = time_dense_ffn(p, d, r, budget);
+        let dense_t = dense.total();
+        // (label, timing, effective MACs under that mode's sparsity)
+        let rows = [
+            ("ffn_iter_dense", dense, 9 * pdr),
+            (
+                "ffn_iter_weight24",
+                time_sparse_ffn(p, d, r, 40, SparseMode::Weight, budget),
+                9 * pdr / 2,
+            ),
+            (
+                "ffn_iter_activation24",
+                time_sparse_ffn(p, d, r, 40, SparseMode::Activation, budget),
+                17 * pdr / 2,
+            ),
+            (
+                "ffn_iter_both24",
+                time_sparse_ffn(p, d, r, 40, SparseMode::Both, budget),
+                9 * pdr / 2,
+            ),
+        ];
+        for (kernel, t, macs) in rows {
+            let total = t.total();
+            println!(
+                "  d={d:<5} {kernel:<22} {:>9.2} ms ({:>6.1} eff GFLOP/s)  \
+                 S={:.3}",
+                total * 1e3,
+                2.0 * macs as f64 / total / 1e9,
+                dense_t / total,
+            );
+            recs.push(KernelBench {
+                kernel: kernel.into(),
+                backend: kernels::backend_name().into(),
+                p,
+                q: d,
+                r,
+                threads,
+                median_ms: total * 1e3,
+                gflops: 2.0 * macs as f64 / total / 1e9,
+                effective_macs: macs,
+            });
+        }
+    }
+    write_kernel_bench("ffn_activation24", &recs).unwrap();
+    println!("-> BENCH_kernels.json (section ffn_activation24)");
+}

@@ -11,6 +11,7 @@ use std::time::Duration;
 
 use sparse24::sparse::kernels;
 use sparse24::sparse::workloads::{block_speedup, ffn_speedup};
+use sparse24::sparse::SparseMode;
 use sparse24::util::bench::{write_kernel_bench, KernelBench};
 use sparse24::util::write_csv;
 
@@ -27,7 +28,7 @@ fn main() {
     let n_ffn = if quick { 256 } else { 1024 };
     println!("Fig. 7a: FFN layer speedup (tokens n={n_ffn}, r=4d, fwd+bwd+overheads, {threads} threads)");
     for &d in ds {
-        let (dt, st, s) = ffn_speedup(n_ffn, d, budget);
+        let (dt, st, s) = ffn_speedup(n_ffn, d, SparseMode::Weight, budget);
         // one FFN training iteration: fwd (3*p*d*r MACs) + bwd (6*p*d*r)
         // dense; the FST iteration executes half of every GEMM
         let r = 4 * d;

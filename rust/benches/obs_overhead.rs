@@ -100,7 +100,8 @@ fn main() {
     for &(mode, level) in MODES {
         obs::set_level(level);
         obs::trace::clear_trace();
-        let (_, sparse_s, _) = workloads::ffn_speedup(p, d, budget);
+        let (_, sparse_s, _) =
+            workloads::ffn_speedup(p, d, sparse24::sparse::SparseMode::Weight, budget);
         let tps = p as f64 / sparse_s;
         if mode == "off" {
             train_base = tps;

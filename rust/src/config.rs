@@ -177,6 +177,10 @@ pub struct TrainConfig {
     pub weight_decay: f32,
     pub seed: u64,
     pub method: Method,
+    /// which FFN operand the 2:4 machinery prunes: "weight" (the
+    /// paper's FST pipeline, default), "activation" (2:4-pruned
+    /// post-GEGLU activations over dense weights), or "both"
+    pub sparse_mode: String,
     /// masked-decay factor λ_W (§4.2/4.3)
     pub lambda_w: f32,
     /// decay placement (ours: gradients; SR-STE: weights)
@@ -239,6 +243,7 @@ impl Default for TrainConfig {
             weight_decay: 0.0,
             seed: 0,
             method: Method::Ours,
+            sparse_mode: "weight".into(),
             lambda_w: 6e-5,
             decay_placement: DecayPlacementCfg::Gradients,
             mask_update_interval: 40,
@@ -302,6 +307,9 @@ impl TrainConfig {
         }
         if let Some(v) = get(&t, "sparse", "method") {
             c.method = Method::parse(v.as_str()?)?;
+        }
+        if let Some(v) = get(&t, "sparse", "mode") {
+            c.sparse_mode = v.as_str()?.to_string();
         }
         if let Some(v) = get(&t, "sparse", "lambda") {
             c.lambda_w = v.as_f64()? as f32;
@@ -399,7 +407,20 @@ impl TrainConfig {
         if !matches!(self.kernel_backend.as_str(), "auto" | "tiled" | "naive") {
             bail!("unknown kernel backend {:?}", self.kernel_backend);
         }
+        if crate::sparse::SparseMode::parse(&self.sparse_mode).is_none() {
+            bail!(
+                "unknown sparse mode {:?} (weight | activation | both)",
+                self.sparse_mode
+            );
+        }
         Ok(())
+    }
+
+    /// The validated `[sparse] mode` as the sparse subsystem's enum.
+    /// Panics on a string [`TrainConfig::validate`] would reject.
+    pub fn sparse_mode(&self) -> crate::sparse::SparseMode {
+        crate::sparse::SparseMode::parse(&self.sparse_mode)
+            .unwrap_or_else(|| panic!("unvalidated sparse mode {:?}", self.sparse_mode))
     }
 
     /// Apply the kernel-backend settings (thread count, backend choice)
@@ -735,6 +756,24 @@ kind = "synthetic"
         let mut c = TrainConfig::default();
         c.data = "c4".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sparse_mode_parses_and_validates() {
+        use crate::sparse::SparseMode;
+        let d = TrainConfig::default();
+        assert_eq!(d.sparse_mode, "weight");
+        assert_eq!(d.sparse_mode(), SparseMode::Weight);
+        let c = TrainConfig::from_toml("[sparse]\nmode = \"activation\"\n").unwrap();
+        assert_eq!(c.sparse_mode(), SparseMode::Activation);
+        let c = TrainConfig::from_toml("[sparse]\nmode = \"both\"\n").unwrap();
+        assert_eq!(c.sparse_mode(), SparseMode::Both);
+        assert!(TrainConfig::from_toml("[sparse]\nmode = \"channel\"\n").is_err());
+        assert_eq!(SparseMode::parse("weight"), Some(SparseMode::Weight));
+        assert!(SparseMode::Activation.sparse_activations());
+        assert!(!SparseMode::Activation.sparse_weights());
+        assert!(SparseMode::Both.sparse_weights() && SparseMode::Both.sparse_activations());
+        assert_eq!(SparseMode::Both.to_string(), "both");
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::fst::{FstState, MaskMode};
@@ -75,6 +75,15 @@ impl Trainer {
     pub fn new(mut cfg: TrainConfig) -> Result<Self> {
         cfg.normalize();
         cfg.validate()?;
+        if cfg.sparse_mode != "weight" {
+            bail!(
+                "the trainer runs through pre-built XLA artifacts, which only \
+                 cover weight 2:4 sparsity; sparse mode {:?} is exercised by \
+                 the in-process kernels instead — try `sparse24 speedup --ffn \
+                 --sparse-mode {}` or `sparse24 serve --smoke --sparse-mode {}`",
+                cfg.sparse_mode, cfg.sparse_mode, cfg.sparse_mode
+            );
+        }
         cfg.apply_kernel_settings();
         let dir = std::path::Path::new(&cfg.artifacts_dir);
         let name = Self::manifest_name(&cfg);
@@ -333,6 +342,9 @@ impl Trainer {
         // Level::Metrics so the off path stays a single relaxed load.
         if crate::obs::metrics_on() {
             crate::obs::gauge("train.flip_rate").set(flip);
+            // the weight-operand twin of `sparse.flip.activation` (see
+            // sparse/flip.rs) so cross-mode churn dashboards line up
+            crate::obs::gauge("sparse.flip.weight").set(flip);
             crate::obs::gauge("train.masked_decay_lambda")
                 .set(if decay_active { self.cfg.lambda_w as f64 } else { 0.0 });
             for (mon, &pi) in self.fst.monitors.iter().zip(&self.fst.sparse_idx) {

@@ -49,7 +49,7 @@ use sparse24::serve::{
     run_server, run_smoke, run_spec_bench, synthetic_checkpoint, FaultConfig,
     InferEngine, InferModel, Request, Sampling, Scheduler,
 };
-use sparse24::sparse::{kernels, workloads};
+use sparse24::sparse::{kernels, workloads, SparseMode};
 use sparse24::util::bench::{
     kernel_bench_regressions, obs_bench_regressions, repo_root_file,
     serve_bench_regressions, write_json_section_at,
@@ -128,7 +128,7 @@ fn parse_args(
 /// ([`load_infer_model`] + the `[serve]` config file).
 const MODEL_OPTS: &[&str] = &[
     "config", "checkpoint", "vocab", "d-model", "layers", "heads", "d-ff",
-    "n-ctx", "seed",
+    "n-ctx", "seed", "sparse-mode",
 ];
 
 /// [`MODEL_OPTS`] plus a command's own value options.
@@ -140,6 +140,17 @@ fn with_model_opts(extra: &[&'static str]) -> Vec<&'static str> {
 
 fn opt1<'a>(opts: &'a BTreeMap<String, Vec<String>>, key: &str) -> Option<&'a str> {
     opts.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+}
+
+/// `--sparse-mode weight|activation|both`, defaulting to the
+/// weight-sparse family every command served before the mode existed.
+fn sparse_mode_arg(opts: &BTreeMap<String, Vec<String>>) -> Result<SparseMode> {
+    match opt1(opts, "sparse-mode") {
+        Some(s) => SparseMode::parse(s).with_context(|| {
+            format!("--sparse-mode {s:?} (weight | activation | both)")
+        }),
+        None => Ok(SparseMode::Weight),
+    }
 }
 
 /// `--trace <file>` / `--metrics <file>` handling shared by `train`,
@@ -221,24 +232,29 @@ fn print_usage() {
          COMMANDS:\n\
            train        --config <toml> [--set sec.key=value ...] [--out <csv>]\n\
                         [--checkpoint <file> [--checkpoint-every N]] [--resume <file>]\n\
+                        [--sparse-mode weight|activation|both]\n\
                         [--trace <json>] [--metrics <jsonl>]\n\
            tune-decay   --config <toml> [--probe-steps N] [--out <csv>]\n\
            speedup      [--ffn] [--block] [--e2e] [--profile] [--quick] [--out <csv>]\n\
+                        [--sparse-mode weight|activation|both]\n\
            inspect      --model <name> [--artifacts-dir <dir>]\n\
            generate     [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--prompt t0,t1,...] [--max-new N] [--temperature T]\n\
                         [--top-k K] [--seed S] [--spec-k N]\n\
                         [--spec-drafter ngram|repeat]\n\
+                        [--sparse-mode weight|activation|both]\n\
            serve        [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--listen host:port|unix:/path] [--max-pending N]\n\
                         [--deadline-ms MS] [--drain-timeout-ms MS] [--smoke]\n\
                         [--spec-k N] [--spec-drafter ngram|repeat]\n\
+                        [--sparse-mode weight|activation|both]\n\
                         [--trace <json>] [--metrics <jsonl>]\n\
            serve-bench  [--checkpoint <ckpt> | --synthetic] [--config <toml>]\n\
                         [--steps N] [--batch-sizes a,b,...] [--prefill-chunk N]\n\
                         [--kv-layout paged|contiguous] [--kv-page N]\n\
                         [--kv-pages N] [--spec-k N] [--spec-drafter ngram|repeat]\n\
                         [--faults] [--quick]\n\
+                        [--sparse-mode weight|activation|both]\n\
                         [--trace <json>] [--metrics <jsonl>]\n\
            bench-diff   [--file <json>] [--serve-file <json>] [--threshold PCT]\n\
            check-trace  [--trace <json>] [--metrics <jsonl>]\n"
@@ -274,14 +290,16 @@ fn load_infer_model(
     opts: &BTreeMap<String, Vec<String>>,
     quick: bool,
 ) -> Result<InferModel> {
+    let mode = sparse_mode_arg(opts)?;
     if let Some(path) = opt1(opts, "checkpoint") {
         let ck = Checkpoint::load(Path::new(path))?;
-        let model = InferModel::from_checkpoint(&ck)
+        let model = InferModel::from_checkpoint_mode(&ck, mode)
             .with_context(|| format!("freezing checkpoint {path}"))?;
         println!(
-            "loaded {} (step {}): {} layers, d={}, {:.2}M dense-equivalent params",
+            "loaded {} (step {}): {} layers, d={}, {:.2}M dense-equivalent \
+             params, sparse mode {}",
             path, ck.step, model.dims.n_layers, model.dims.d_model,
-            model.dense_param_elements() as f64 / 1e6
+            model.dense_param_elements() as f64 / 1e6, model.mode
         );
         return Ok(model);
     }
@@ -315,7 +333,7 @@ fn load_infer_model(
     };
     let seed = opt1(opts, "seed").map(|s| s.parse::<u64>()).transpose()?.unwrap_or(0);
     let ck = synthetic_checkpoint(&dims, seed ^ 0x5EED);
-    InferModel::from_checkpoint(&ck)
+    InferModel::from_checkpoint_mode(&ck, mode)
 }
 
 fn cmd_generate(args: &[String]) -> Result<()> {
@@ -418,7 +436,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .transpose()
             .context("--spec-k")?
             .unwrap_or(0);
-        println!("{}", run_smoke(opt1(&opts, "listen"), spec_k)?);
+        let mode = sparse_mode_arg(&opts)?;
+        println!("{}", run_smoke(opt1(&opts, "listen"), spec_k, mode)?);
         telemetry.finish()?;
         return Ok(());
     }
@@ -742,14 +761,20 @@ fn load_config(opts: &BTreeMap<String, Vec<String>>) -> Result<TrainConfig> {
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
-    let (_flags, opts, _) = parse_args(
+    let (_flags, mut opts, _) = parse_args(
         args,
         &[
             "config", "set", "out", "checkpoint", "checkpoint-every", "resume",
-            "trace", "metrics",
+            "trace", "metrics", "sparse-mode",
         ],
         &[],
     )?;
+    // `--sparse-mode X` is sugar for `--set sparse.mode=X`
+    if let Some(m) = opts.get("sparse-mode").and_then(|v| v.last()).cloned() {
+        opts.entry("set".to_string())
+            .or_default()
+            .push(format!("sparse.mode={m}"));
+    }
     let telemetry = init_telemetry(&opts)?;
     let cfg = load_config(&opts)?;
     println!(
@@ -833,20 +858,23 @@ fn cmd_tune(args: &[String]) -> Result<()> {
 fn cmd_speedup(args: &[String]) -> Result<()> {
     let (flags, opts, _) = parse_args(
         args,
-        &["out"],
+        &["out", "sparse-mode"],
         &["ffn", "block", "e2e", "profile", "quick"],
     )?;
     let quick = flags.iter().any(|f| f == "quick");
+    let mode = sparse_mode_arg(&opts)?;
     let budget = if quick { Duration::from_millis(100) } else { Duration::from_millis(800) };
     let all = !flags.iter().any(|f| matches!(f.as_str(), "ffn" | "block" | "e2e" | "profile"));
     let mut csv_rows: Vec<Vec<f64>> = Vec::new();
 
     if all || flags.iter().any(|f| f == "ffn") {
-        println!("== Fig. 7a: FFN layer speedup (n=2048 tokens, r=4d) ==");
+        println!(
+            "== Fig. 7a: FFN layer speedup (n=2048 tokens, r=4d, mode {mode}) =="
+        );
         let ds: &[usize] = if quick { &[256, 512] } else { &[256, 512, 768, 1024, 1280] };
         for &d in ds {
             let p = if quick { 512 } else { 2048 };
-            let (dt, st, s) = workloads::ffn_speedup(p, d, budget);
+            let (dt, st, s) = workloads::ffn_speedup(p, d, mode, budget);
             println!("d={d:<6} dense {:>9.2} ms  sparse {:>9.2} ms  S = {s:.3}",
                      dt * 1e3, st * 1e3);
             csv_rows.push(vec![0.0, d as f64, dt * 1e3, st * 1e3, s]);

@@ -33,6 +33,7 @@ use crate::sparse::kernels::threading::MutPtr;
 use crate::sparse::kernels::{parallel_rows, Scratch};
 use crate::sparse::mask::Mask;
 use crate::sparse::transposable::transposable_mask;
+use crate::sparse::SparseMode;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -53,6 +54,10 @@ pub struct InferBlock {
 #[derive(Clone, Debug)]
 pub struct InferModel {
     pub dims: ModelDims,
+    /// Which FFN operand is 2:4 at serve time (every block agrees):
+    /// `Weight` — compressed weights; `Activation` — dense weights,
+    /// per-batch pruned activations; `Both` — stacked.
+    pub mode: SparseMode,
     pub tok_emb: Tensor,
     pub pos_emb: Tensor,
     pub blocks: Vec<InferBlock>,
@@ -67,6 +72,15 @@ impl InferModel {
     /// (e.g. the run was checkpointed in a dense phase), a transposable
     /// 2:4 mask is re-derived from the weights by magnitude.
     pub fn from_checkpoint(ck: &Checkpoint) -> Result<InferModel> {
+        Self::from_checkpoint_mode(ck, SparseMode::Weight)
+    }
+
+    /// [`InferModel::from_checkpoint`] with an explicit sparse mode. In
+    /// `Activation` mode the checkpoint masks are ignored entirely: the
+    /// FFN weights stay dense and the 2:4 operand is built per batch
+    /// from the live activations.
+    pub fn from_checkpoint_mode(ck: &Checkpoint, mode: SparseMode)
+                                -> Result<InferModel> {
         let dims = ck.dims.context(
             "checkpoint predates serve support (no model dims in header); \
              re-save it with this version",
@@ -74,20 +88,21 @@ impl InferModel {
         if ck.param_names.is_empty() {
             bail!("checkpoint has no parameter names; cannot map roles");
         }
-        Self::from_named_params(dims, &ck.param_names, &ck.params, &ck.masks)
+        Self::from_named_params(dims, &ck.param_names, &ck.params, &ck.masks, mode)
     }
 
     /// Build from a named parameter store + the sparse-parameter masks
     /// (ordered like the sparse entries of [`param_specs`]).
     pub fn from_store(dims: ModelDims, store: &ParamStore, masks: &[Mask])
                       -> Result<InferModel> {
-        Self::from_named_params(dims, &store.names, &store.tensors, masks)
+        Self::from_named_params(dims, &store.names, &store.tensors, masks,
+                                SparseMode::Weight)
     }
 
     /// Core builder over borrowed (names, params) — clones each tensor
     /// exactly once, into its place in the model.
     fn from_named_params(dims: ModelDims, names: &[String], params: &[Tensor],
-                         masks: &[Mask]) -> Result<InferModel> {
+                         masks: &[Mask], mode: SparseMode) -> Result<InferModel> {
         dims.validate()?;
         if names.len() != params.len() {
             bail!("{} names vs {} params", names.len(), params.len());
@@ -149,9 +164,27 @@ impl InferModel {
                 Ok(lookup(&format!("{p}{s}"))?.clone())
             };
             let w1 = lookup(&format!("{p}ffn_w1"))?;
-            let m1 = mask_for(sparse_idx, &format!("{p}ffn_w1"), w1);
             let w2 = lookup(&format!("{p}ffn_w2"))?;
-            let m2 = mask_for(sparse_idx + 1, &format!("{p}ffn_w2"), w2);
+            let ffn = match mode {
+                SparseMode::Activation => {
+                    // weights stay dense; the 2:4 operand is built per
+                    // batch from the activations, so the masks are
+                    // deliberately unused
+                    FrozenFfn::from_dense(w1.clone(), get("ffn_b1")?,
+                                          w2.clone(), get("ffn_b2")?)
+                }
+                _ => {
+                    let m1 = mask_for(sparse_idx, &format!("{p}ffn_w1"), w1);
+                    let m2 = mask_for(sparse_idx + 1, &format!("{p}ffn_w2"), w2);
+                    if mode == SparseMode::Both {
+                        FrozenFfn::from_masked_both(w1, &m1, get("ffn_b1")?,
+                                                    w2, &m2, get("ffn_b2")?)
+                    } else {
+                        FrozenFfn::from_masked(w1, &m1, get("ffn_b1")?,
+                                               w2, &m2, get("ffn_b2")?)
+                    }
+                }
+            };
             sparse_idx += 2;
             blocks.push(InferBlock {
                 ln1_s: get("ln1_s")?,
@@ -165,12 +198,12 @@ impl InferModel {
                 },
                 ln2_s: get("ln2_s")?,
                 ln2_b: get("ln2_b")?,
-                ffn: FrozenFfn::from_masked(w1, &m1, get("ffn_b1")?,
-                                            w2, &m2, get("ffn_b2")?),
+                ffn,
             });
         }
         Ok(InferModel {
             dims,
+            mode,
             tok_emb: lookup("tok_emb")?.clone(),
             pos_emb: lookup("pos_emb")?.clone(),
             blocks,
@@ -346,6 +379,11 @@ impl InferEngine {
         for b in bufs {
             s.give(b);
         }
+        if self.model.mode == SparseMode::Activation {
+            let mut c = s.take_comp();
+            c.reset(m, dims.d_ff);
+            s.give_comp(c);
+        }
     }
 
     /// One decode step: feed each lane's token at its KV offset and
@@ -498,6 +536,11 @@ impl InferEngine {
         for b in bufs {
             s.give(b);
         }
+        if self.model.mode == SparseMode::Activation {
+            let mut comp = s.take_comp();
+            comp.reset(c, dims.d_ff);
+            s.give_comp(comp);
+        }
     }
 
     /// Matrix-form prefill of one prompt chunk: run `chunk` tokens of
@@ -542,6 +585,11 @@ impl InferEngine {
         ];
         for b in bufs {
             s.give(b);
+        }
+        if self.model.mode == SparseMode::Activation {
+            let mut comp = s.take_comp();
+            comp.reset(c, dims.d_ff);
+            s.give_comp(comp);
         }
     }
 

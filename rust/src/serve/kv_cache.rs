@@ -773,6 +773,84 @@ mod tests {
     }
 
     #[test]
+    fn truncate_to_zero_unmaps_everything_but_keeps_the_slot_admitted() {
+        let mut s = Scratch::new();
+        let mut kv = KvPool::with_layout(&mut s, 1, 8, 2, 2,
+                                         KvLayout::Paged { page: 2 }, 8);
+        let a = kv.acquire(8).unwrap(); // reserves 4 pages
+        kv.ensure(a, 8);
+        kv.truncate(a, 0); // full rollback: every page back to the free list
+        assert_eq!(kv.mapped_rows(a), 0);
+        assert_eq!(kv.stats().free_pages, 8);
+        // ...but the slot is still admitted: its reservation is intact,
+        // so the pages are spoken for and the slot is not reacquirable
+        assert_eq!(kv.stats().reserved_unmapped, 4);
+        assert_eq!(kv.slots_in_use(), 1);
+        assert!(kv.can_admit(8));
+        assert!(!kv.can_admit(9), "rolled-back pages must stay reserved");
+        // a second truncate-to-zero is a no-op, not a double-free
+        kv.truncate(a, 0);
+        assert_eq!(kv.stats().free_pages, 8);
+        kv.release(a);
+        assert!(kv.leak_report().is_none(), "{:?}", kv.leak_report());
+        kv.release_storage(&mut s);
+    }
+
+    #[test]
+    fn truncate_on_an_exact_page_boundary_frees_only_whole_tail_pages() {
+        let mut s = Scratch::new();
+        let mut kv = KvPool::with_layout(&mut s, 1, 12, 2, 2,
+                                         KvLayout::Paged { page: 3 }, 8);
+        let a = kv.acquire(12).unwrap(); // 4 pages of 3 rows
+        kv.ensure(a, 12);
+        // keep_rows = 6 is exactly two full pages: the boundary page
+        // holding rows 3..6 must SURVIVE (it is entirely kept rows) and
+        // exactly the two tail pages unmap — an off-by-one here either
+        // frees a page still holding live rows or leaks one
+        kv.truncate(a, 6);
+        assert_eq!(kv.mapped_rows(a), 6);
+        assert_eq!(kv.stats().free_pages, 6);
+        // one row past the boundary keeps three pages
+        kv.ensure(a, 12);
+        kv.truncate(a, 7);
+        assert_eq!(kv.mapped_rows(a), 9);
+        kv.release(a);
+        assert!(kv.leak_report().is_none(), "{:?}", kv.leak_report());
+        kv.release_storage(&mut s);
+    }
+
+    #[test]
+    fn truncate_then_regrow_cycles_stay_within_the_reservation() {
+        let mut s = Scratch::new();
+        let mut kv = KvPool::with_layout(&mut s, 1, 16, 2, 2,
+                                         KvLayout::Paged { page: 2 }, 8);
+        let a = kv.acquire(10).unwrap(); // reserves 5 pages
+        // speculative decode's steady state: verify maps draft rows,
+        // rollback truncates them, the next round regrows — every cycle
+        // must re-spend the SAME reservation (no drift in the
+        // reserved-unmapped ledger, or admission slowly wedges)
+        for round in 0..4 {
+            kv.ensure(a, 10);
+            assert_eq!(kv.mapped_rows(a), 10, "round {round}");
+            kv.truncate(a, 2 + round); // rollback point varies per round
+            assert_eq!(kv.stats().reserved_unmapped,
+                       5 - (2 + round).div_ceil(2), "round {round}");
+            assert!(kv.can_admit(6));
+            assert!(!kv.can_admit(7),
+                    "round {round}: reservation drifted under truncate/regrow");
+        }
+        // a second sequence admitted mid-cycle is unaffected by a's churn
+        let b = kv.acquire(6).unwrap();
+        kv.ensure(b, 6);
+        kv.ensure(a, 10);
+        assert_eq!(kv.acquire(1), None, "every page is reserved");
+        kv.release(a);
+        kv.release(b);
+        assert!(kv.leak_report().is_none(), "{:?}", kv.leak_report());
+        kv.release_storage(&mut s);
+    }
+
+    #[test]
     #[should_panic(expected = "reserved")]
     fn ensure_beyond_reservation_panics() {
         let mut s = Scratch::new();

@@ -60,6 +60,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::ServeConfig;
 use crate::model::ModelDims;
+use crate::sparse::SparseMode;
 
 use super::drafter::make_drafter;
 use super::engine::{synthetic_checkpoint, InferEngine, InferModel};
@@ -820,8 +821,10 @@ fn default_smoke_listen() -> String {
 /// and once with `--spec-k` — `spec_k > 0` turns on speculative decode
 /// and additionally asserts the stats frame reports drafted tokens, so
 /// every fault path above is re-proven with verify/rollback in the
-/// loop).
-pub fn run_smoke(listen: Option<&str>, spec_k: usize) -> Result<String> {
+/// loop). `mode` selects the FFN sparse family the engine serves under
+/// (`--sparse-mode`), proving each fault path against that pipeline.
+pub fn run_smoke(listen: Option<&str>, spec_k: usize, mode: SparseMode)
+                 -> Result<String> {
     // n_ctx is deliberately large: request A below decodes up to ~300
     // tokens, so the few client round-trips between its first token and
     // its mid-stream disconnect are orders of magnitude shorter than its
@@ -829,7 +832,8 @@ pub fn run_smoke(listen: Option<&str>, spec_k: usize) -> Result<String> {
     let dims = ModelDims {
         vocab: 128, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 64, n_ctx: 320,
     };
-    let model = InferModel::from_checkpoint(&synthetic_checkpoint(&dims, 7))?;
+    let model =
+        InferModel::from_checkpoint_mode(&synthetic_checkpoint(&dims, 7), mode)?;
     let cfg = ServeConfig {
         listen: listen.map(str::to_string).unwrap_or_else(default_smoke_listen),
         max_seqs: 1,
@@ -964,7 +968,10 @@ pub fn run_smoke(listen: Option<&str>, spec_k: usize) -> Result<String> {
     } else {
         String::new()
     };
-    Ok(format!("serve smoke OK: {}{spec_note}", report.render()))
+    Ok(format!(
+        "serve smoke OK (sparse mode {mode}): {}{spec_note}",
+        report.render()
+    ))
 }
 
 #[cfg(test)]
@@ -975,7 +982,8 @@ mod tests {
     /// `verify.sh` via `sparse24 serve --smoke`).
     #[test]
     fn smoke_over_tcp_loopback() {
-        let summary = run_smoke(Some("127.0.0.1:0"), 0).unwrap();
+        let summary =
+            run_smoke(Some("127.0.0.1:0"), 0, SparseMode::Weight).unwrap();
         assert!(summary.contains("serve smoke OK"), "{summary}");
     }
 
@@ -984,7 +992,8 @@ mod tests {
     /// engaged, and the drain still exits zero-leak.
     #[test]
     fn smoke_with_speculation_enabled() {
-        let summary = run_smoke(Some("127.0.0.1:0"), 3).unwrap();
+        let summary =
+            run_smoke(Some("127.0.0.1:0"), 3, SparseMode::Weight).unwrap();
         assert!(summary.contains("serve smoke OK"), "{summary}");
         assert!(summary.contains("spec k=3"), "{summary}");
     }

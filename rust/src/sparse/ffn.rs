@@ -13,6 +13,21 @@
 //! transposable-mask search. The dense twin runs the same shapes through
 //! dense GEMMs.
 //!
+//! **Sparse modes.** The 2:4 machinery serves two operand families,
+//! selected by [`SparseMode`]. `Weight` is the paper's FST pipeline
+//! above, byte for byte. `Activation` keeps the weights dense and
+//! instead 2:4-prunes the post-GEGLU activation per token
+//! ([`prune_act24_cm`]): each group of four consecutive hidden lanes
+//! keeps its top-2 magnitude pair, the survivors are packed through the
+//! same [`Compressed24`] representation, and the second FFN matmul runs
+//! with the *activation* operand compressed-stationary
+//! ([`crate::sparse::kernels::spmm_tn_cm_into`]). Its backward is
+//! straight-through: ∇A is masked to the surviving lanes and everything
+//! downstream is a dense GEMM. `Both` stacks activation pruning on the
+//! weight pipeline — the weight operand keeps the compressed slot (the
+//! spMM, like sparse tensor cores, structures one operand), so the
+//! pruned activation streams through dense with its lanes zeroed.
+//!
 //! **Layout (paper Appendix A.2, Table 12):** on the sparse paths every
 //! interior activation is COLUMN-major. The first spMM's fused epilogue
 //! leaves Z as Z^T ([`crate::sparse::kernels::spmm_nt_cm_into`]), the
@@ -37,10 +52,11 @@ use super::geglu::{
     geglu_row_major_into,
 };
 use super::kernels::{self, with_thread_scratch, Scratch};
-use super::mask::Mask;
+use super::mask::{top2_of4, Mask};
 use super::mvue::mvue24_into;
 use super::spmm::{spmm_tn_into, Compressed24};
 use super::transposable::transposable_mask;
+use super::SparseMode;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -86,11 +102,25 @@ pub struct DenseFfn {
 pub struct FfnCache {
     pub z: Tensor,
     pub a: Tensor,
+    /// Activation keep-mask in A^T layout (r, p), one byte per element,
+    /// 1 = lane survived 2:4 pruning. Written by the activation-sparse
+    /// forward ([`prune_act24_cm`]); the straight-through backward
+    /// applies it to ∇A^T. Empty in `Weight` mode.
+    pub act_mask: Vec<u8>,
+    /// Compressed activation A (p tokens × r lanes, row-major groups),
+    /// the stationary operand of the second matmul in `Activation`
+    /// mode. Capacity is recycled across steps. Empty in other modes.
+    pub acomp: Compressed24,
 }
 
 impl FfnCache {
     pub fn empty() -> FfnCache {
-        FfnCache { z: Tensor::zeros(&[0]), a: Tensor::zeros(&[0]) }
+        FfnCache {
+            z: Tensor::zeros(&[0]),
+            a: Tensor::zeros(&[0]),
+            act_mask: Vec::new(),
+            acomp: Compressed24::default(),
+        }
     }
 }
 
@@ -180,11 +210,37 @@ pub struct SparseFfn {
     /// the property the paper's transposable-mask machinery buys.
     pub w1ct: Compressed24,
     pub w2ct: Compressed24,
+    /// Which operand family is pruned; see [`SparseMode`]. `Weight`
+    /// preserves the pre-mode pipeline byte for byte.
+    pub mode: SparseMode,
 }
 
 impl SparseFfn {
     pub fn new(d: usize, r: usize, rng: &mut Rng) -> Self {
+        Self::new_with_mode(d, r, SparseMode::Weight, rng)
+    }
+
+    /// Build for an explicit [`SparseMode`]. `Activation` keeps the
+    /// weights dense — the transposable-mask search and the four
+    /// compressed weight operands (the dominant setup cost at real
+    /// shapes) are skipped entirely — while `Weight`/`Both` run the
+    /// full FST construction.
+    pub fn new_with_mode(d: usize, r: usize, mode: SparseMode, rng: &mut Rng) -> Self {
         let dense = DenseFfn::new(d, r, rng);
+        if !mode.sparse_weights() {
+            return SparseFfn {
+                dense,
+                m1: Mask::zeros(0, 0),
+                m2: Mask::zeros(0, 0),
+                m1t: Mask::zeros(0, 0),
+                m2t: Mask::zeros(0, 0),
+                w1c: Compressed24::default(),
+                w2c: Compressed24::default(),
+                w1ct: Compressed24::default(),
+                w2ct: Compressed24::default(),
+                mode,
+            };
+        }
         let m1 = transposable_mask(&dense.w1);
         let m2 = transposable_mask(&dense.w2);
         let m1t = m1.transpose();
@@ -193,13 +249,17 @@ impl SparseFfn {
         let w2c = Compressed24::from_masked(&dense.w2, &m2);
         let w1ct = Compressed24::from_masked(&dense.w1.t(), &m1t);
         let w2ct = Compressed24::from_masked(&dense.w2.t(), &m2t);
-        SparseFfn { dense, m1, m2, m1t, m2t, w1c, w2c, w1ct, w2ct }
+        SparseFfn { dense, m1, m2, m1t, m2t, w1c, w2c, w1ct, w2ct, mode }
     }
 
     /// Per-step "prune weights": recompress values under the CURRENT masks
     /// (cheap; Table 13's `Prune weights` row). Zero-allocation: the
     /// compressed buffers and the transpose temporary are reused.
+    /// No-op in `Activation` mode (there are no weight masks).
     pub fn recompress(&mut self) {
+        if !self.mode.sparse_weights() {
+            return;
+        }
         self.w1c.from_masked_into(&self.dense.w1, &self.m1);
         self.w2c.from_masked_into(&self.dense.w2, &self.m2);
         let (r1, c1) = self.dense.w1.dims2();
@@ -223,7 +283,11 @@ impl SparseFfn {
     }
 
     /// Every-l-steps transposable mask search (Table 13's bottom row).
+    /// No-op in `Activation` mode (there are no weight masks).
     pub fn refresh_masks(&mut self) {
+        if !self.mode.sparse_weights() {
+            return;
+        }
         self.m1 = transposable_mask(&self.dense.w1);
         self.m2 = transposable_mask(&self.dense.w2);
         self.m1t = self.m1.transpose();
@@ -244,15 +308,55 @@ impl SparseFfn {
     /// and only the last spMM's epilogue converts back to row-major for
     /// the block boundary. The one staging transpose left is X^T inside
     /// the first spMM — `x` arrives row-major from attention/LN.
+    ///
+    /// In `Activation` mode the first matmul is a dense GEMM whose
+    /// output is born as Z^T (`gemm_nt_into(W1, X)` = W1 X^T), the
+    /// GEGLU output is 2:4-pruned per token and packed
+    /// ([`prune_act24_cm`]), and the second matmul streams the dense W2
+    /// against the compressed-stationary activation. `Both` runs the
+    /// weight pipeline with the activation pruned in place between the
+    /// GEGLU and the second spMM.
     pub fn forward_scratch(&self, x: &Tensor, cache: &mut FfnCache, y: &mut Tensor) {
         let (p, _) = x.dims2();
-        cache.z.resize_to(&[self.w1c.rows, p]);
-        kernels::spmm_nt_cm_into(x, &self.w1c, &mut cache.z);
-        add_bias_cm(&mut cache.z, &self.dense.b1);
-        geglu_cm_into(&cache.z, &mut cache.a);
-        y.resize_to(&[p, self.w2c.rows]);
-        kernels::spmm_nt_t_into(&cache.a, &self.w2c, y);
-        add_bias(y, &self.dense.b2);
+        match self.mode {
+            SparseMode::Weight => {
+                cache.z.resize_to(&[self.w1c.rows, p]);
+                kernels::spmm_nt_cm_into(x, &self.w1c, &mut cache.z);
+                add_bias_cm(&mut cache.z, &self.dense.b1);
+                geglu_cm_into(&cache.z, &mut cache.a);
+                y.resize_to(&[p, self.w2c.rows]);
+                kernels::spmm_nt_t_into(&cache.a, &self.w2c, y);
+                add_bias(y, &self.dense.b2);
+            }
+            SparseMode::Activation => {
+                let (two_r, _) = self.dense.w1.dims2();
+                let (d, _) = self.dense.w2.dims2();
+                cache.z.resize_to(&[two_r, p]);
+                kernels::gemm_nt_into(&self.dense.w1, x, &mut cache.z);
+                add_bias_cm(&mut cache.z, &self.dense.b1);
+                geglu_cm_into(&cache.z, &mut cache.a);
+                prune_act24_cm(
+                    &mut cache.a,
+                    Some(&mut cache.act_mask),
+                    Some(&mut cache.acomp),
+                );
+                y.resize_to(&[p, d]);
+                kernels::spmm_tn_cm_into(&cache.acomp, &self.dense.w2, y);
+                add_bias(y, &self.dense.b2);
+            }
+            SparseMode::Both => {
+                cache.z.resize_to(&[self.w1c.rows, p]);
+                kernels::spmm_nt_cm_into(x, &self.w1c, &mut cache.z);
+                add_bias_cm(&mut cache.z, &self.dense.b1);
+                geglu_cm_into(&cache.z, &mut cache.a);
+                // weight operand owns the compressed slot; the pruned
+                // activation streams dense with its lanes zeroed
+                prune_act24_cm(&mut cache.a, Some(&mut cache.act_mask), None);
+                y.resize_to(&[p, self.w2c.rows]);
+                kernels::spmm_nt_t_into(&cache.a, &self.w2c, y);
+                add_bias(y, &self.dense.b2);
+            }
+        }
     }
 
     /// FST backward: MVUE-compressed gradient spMMs (Eq. 4+6) and
@@ -285,6 +389,34 @@ impl SparseFfn {
         g: &mut FfnGrads,
         scratch: &mut Scratch,
     ) {
+        match self.mode {
+            SparseMode::Weight => {
+                self.backward_weight(x, cache, dy, rng, g, scratch, false)
+            }
+            SparseMode::Both => {
+                self.backward_weight(x, cache, dy, rng, g, scratch, true)
+            }
+            SparseMode::Activation => {
+                self.backward_activation(x, cache, dy, g, scratch)
+            }
+        }
+    }
+
+    /// The FST backward (`Weight`, and with `ste_mask` the `Both`
+    /// variant, which additionally zeroes ∇A^T on the pruned activation
+    /// lanes before the GEGLU backward — straight-through through the
+    /// activation pruning; the MVUE weight-grad spMM already consumes
+    /// the PRUNED A^T from the cache, which is exactly the STE ∇W2).
+    fn backward_weight(
+        &self,
+        x: &Tensor,
+        cache: &FfnCache,
+        dy: &Tensor,
+        rng: &mut Rng,
+        g: &mut FfnGrads,
+        scratch: &mut Scratch,
+        ste_mask: bool,
+    ) {
         let (p, d) = dy.dims2();
         let (_, r) = self.dense.w2.dims2();
         let (two_r, _) = self.dense.w1.dims2();
@@ -307,6 +439,9 @@ impl SparseFfn {
         // (Eq. 5), streaming the ∇Y^T we already have
         let mut da = scratch.take(&[r, p]);
         kernels::spmm_nt_tcm_into(&gt_dy, &self.w2ct, &mut da);
+        if ste_mask {
+            apply_act_mask(&mut da, &cache.act_mask);
+        }
         let mut dz = scratch.take(&[two_r, p]);
         geglu_cm_grad_into(&cache.z, &da, &mut dz);
         // ∇W1 = MVUE(∇Z^T) X — dz IS ∇Z^T already; x is row-major
@@ -328,21 +463,160 @@ impl SparseFfn {
         scratch.give_vec(uni);
         scratch.give_comp(gcomp);
     }
+
+    /// Straight-through backward for `Activation` mode. The weights are
+    /// dense, so there is no MVUE estimator and no compressed-transpose
+    /// machinery — the only sparsity effect is the keep-mask recorded by
+    /// the forward: ∇W2 reads the PRUNED A^T from the cache, and ∇A^T
+    /// is masked to the surviving lanes before the GEGLU backward. Same
+    /// column-major interior as the FST path: ∇Y is transposed ONCE and
+    /// that ∇Y^T feeds both the ∇W2 GEMM and the ∇A^T GEMM.
+    fn backward_activation(
+        &self,
+        x: &Tensor,
+        cache: &FfnCache,
+        dy: &Tensor,
+        g: &mut FfnGrads,
+        scratch: &mut Scratch,
+    ) {
+        let (p, d) = dy.dims2();
+        let (_, r) = self.dense.w2.dims2();
+        let (two_r, _) = self.dense.w1.dims2();
+        let mut gt_dy = scratch.take(&[d, p]);
+        kernels::transpose(dy, &mut gt_dy);
+        // ∇W2 = ∇Y^T Â — cache.a holds the pruned Â^T
+        g.dw2.resize_to(&self.dense.w2.shape);
+        kernels::gemm_nt_into(&gt_dy, &cache.a, &mut g.dw2);
+        col_sum_into(dy, &mut g.db2);
+        // ∇Â^T = W2^T ∇Y^T, then straight-through: only survivors flow
+        let mut da = scratch.take(&[r, p]);
+        kernels::gemm_tn_into(&self.dense.w2, &gt_dy, &mut da);
+        apply_act_mask(&mut da, &cache.act_mask);
+        let mut dz = scratch.take(&[two_r, p]);
+        geglu_cm_grad_into(&cache.z, &da, &mut dz);
+        // ∇W1 = ∇Z^T X; ∇X = ∇Z W1 (dz IS ∇Z^T)
+        g.dw1.resize_to(&self.dense.w1.shape);
+        kernels::gemm_nn_into(&dz, x, &mut g.dw1);
+        row_sum_into(&dz, &mut g.db1);
+        g.dx.resize_to(&x.shape);
+        kernels::gemm_tn_into(&dz, &self.dense.w1, &mut g.dx);
+        scratch.give(gt_dy);
+        scratch.give(da);
+        scratch.give(dz);
+    }
 }
 
-/// Inference-only FFN: weights live EXCLUSIVELY in compressed 2:4 form.
+/// Zero ∇A^T on the lanes the forward pruned away (straight-through
+/// estimator). `mask` is the keep-byte vector [`prune_act24_cm`] wrote,
+/// in the same A^T (r, p) layout as `da`.
+fn apply_act_mask(da: &mut Tensor, mask: &[u8]) {
+    assert_eq!(
+        da.len(),
+        mask.len(),
+        "activation mask is stale: backward shape != forward shape"
+    );
+    for (v, &keep) in da.data.iter_mut().zip(mask) {
+        if keep == 0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// 2:4-prune a column-major activation block in place and (optionally)
+/// record the keep-mask and pack the survivors for the
+/// compressed-stationary second matmul.
 ///
-/// This is the serving counterpart of [`SparseFfn`]: no dense master
-/// weights, no masks, no transposed copies for the backward pass — just
-/// the two compressed operands the forward spMMs consume, at half the
-/// dense footprint (plus 2-bit metadata). Built once from a trained
-/// checkpoint (or a live [`SparseFfn`]) and then immutable.
+/// `at` is A^T (r, p): token i lives in column i, and each group of
+/// four consecutive hidden lanes (rows 4g..4g+4) keeps its top-2
+/// magnitude pair with [`top2_of4`]'s deterministic tie-breaking —
+/// groups run along the hidden dimension, so they are the SAME logical
+/// groups `prune24_mask` would form on the row-major A (p, r). Pruned
+/// lanes are zeroed in place (the `Both` pipeline streams the zeroed
+/// A^T through the weight-compressed spMM). `mask`, when given, gets
+/// one keep-byte per A^T element (same (r, p) layout — the
+/// straight-through backward applies it to ∇A^T directly). `comp`,
+/// when given, is reset to the ROW-major compressed activation A
+/// (rows = p tokens, cols = r lanes) that
+/// [`crate::sparse::kernels::spmm_tn_cm_into`] consumes stationary;
+/// the in-group packing order (ascending lane index) matches
+/// [`Compressed24::from_masked_into`] exactly.
+///
+/// Sequential and deterministic: the output bytes depend only on `at`,
+/// never on thread count or call history.
+pub fn prune_act24_cm(
+    at: &mut Tensor,
+    mask: Option<&mut Vec<u8>>,
+    comp: Option<&mut Compressed24>,
+) {
+    let (r, p) = at.dims2();
+    assert_eq!(r % 4, 0, "activation rows {r} not a multiple of 4");
+    let half = r / 2;
+    let mut mask = match mask {
+        Some(m) => {
+            m.clear();
+            m.resize(r * p, 0);
+            Some(m)
+        }
+        None => None,
+    };
+    let mut comp = match comp {
+        Some(c) => {
+            c.reset(p, r);
+            Some(c)
+        }
+        None => None,
+    };
+    let mut g4 = [0f32; 4];
+    for g in 0..r / 4 {
+        let base = 4 * g * p;
+        for i in 0..p {
+            for (k, v) in g4.iter_mut().enumerate() {
+                *v = at.data[base + k * p + i];
+            }
+            let (k0, k1) = top2_of4(&g4);
+            for k in 0..4 {
+                if k != k0 && k != k1 {
+                    at.data[base + k * p + i] = 0.0;
+                }
+            }
+            if let Some(m) = mask.as_mut() {
+                m[(4 * g + k0) * p + i] = 1;
+                m[(4 * g + k1) * p + i] = 1;
+            }
+            if let Some(c) = comp.as_mut() {
+                let o = i * half + g * 2;
+                c.values[o] = g4[k0];
+                c.values[o + 1] = g4[k1];
+                c.indices[o] = k0 as u8;
+                c.indices[o + 1] = k1 as u8;
+                c.abs_indices[o] = (4 * g + k0) as u32;
+                c.abs_indices[o + 1] = (4 * g + k1) as u32;
+            }
+        }
+    }
+}
+
+/// Inference-only FFN.
+///
+/// This is the serving counterpart of [`SparseFfn`]. In `Weight` mode
+/// (the default) weights live EXCLUSIVELY in compressed 2:4 form: no
+/// dense master weights, no masks, no transposed copies for the
+/// backward pass — just the two compressed operands the forward spMMs
+/// consume, at half the dense footprint (plus 2-bit metadata). In
+/// `Activation` mode the weights stay dense and the 2:4 operand is
+/// built per batch from the live activations. Built once from a
+/// trained checkpoint (or a live [`SparseFfn`]) and then immutable.
 #[derive(Clone, Debug)]
 pub struct FrozenFfn {
+    pub mode: SparseMode,
     pub w1c: Compressed24,
     pub b1: Tensor,
     pub w2c: Compressed24,
     pub b2: Tensor,
+    /// Dense weights, held ONLY when `mode` prunes no weights
+    /// (`Activation`): W1 (2r, d) and W2 (d, r).
+    pub w1d: Option<Tensor>,
+    pub w2d: Option<Tensor>,
 }
 
 impl FrozenFfn {
@@ -350,47 +624,131 @@ impl FrozenFfn {
     pub fn from_masked(w1: &Tensor, m1: &Mask, b1: Tensor,
                        w2: &Tensor, m2: &Mask, b2: Tensor) -> FrozenFfn {
         FrozenFfn {
+            mode: SparseMode::Weight,
             w1c: Compressed24::from_masked(w1, m1),
             b1,
             w2c: Compressed24::from_masked(w2, m2),
             b2,
+            w1d: None,
+            w2d: None,
+        }
+    }
+
+    /// Weight-compressed operands PLUS per-batch activation pruning
+    /// (`Both` serving mode).
+    pub fn from_masked_both(w1: &Tensor, m1: &Mask, b1: Tensor,
+                            w2: &Tensor, m2: &Mask, b2: Tensor) -> FrozenFfn {
+        let mut f = Self::from_masked(w1, m1, b1, w2, m2, b2);
+        f.mode = SparseMode::Both;
+        f
+    }
+
+    /// Dense weights, 2:4-pruned activations (`Activation` serving
+    /// mode): no masks, no compression — the sparse operand is built
+    /// per batch inside [`FrozenFfn::forward_into`].
+    pub fn from_dense(w1: Tensor, b1: Tensor, w2: Tensor, b2: Tensor) -> FrozenFfn {
+        FrozenFfn {
+            mode: SparseMode::Activation,
+            w1c: Compressed24::default(),
+            b1,
+            w2c: Compressed24::default(),
+            b2,
+            w1d: Some(w1),
+            w2d: Some(w2),
         }
     }
 
     /// Freeze a training-time [`SparseFfn`] (drops everything backward
-    /// needs, keeps the forward operands).
+    /// needs, keeps the forward operands). Honors `sf.mode`.
     pub fn from_sparse(sf: &SparseFfn) -> FrozenFfn {
-        FrozenFfn {
-            w1c: sf.w1c.clone(),
-            b1: sf.dense.b1.clone(),
-            w2c: sf.w2c.clone(),
-            b2: sf.dense.b2.clone(),
+        if !sf.mode.sparse_weights() {
+            let mut f = FrozenFfn::from_dense(
+                sf.dense.w1.clone(),
+                sf.dense.b1.clone(),
+                sf.dense.w2.clone(),
+                sf.dense.b2.clone(),
+            );
+            f.mode = sf.mode;
+            f
+        } else {
+            FrozenFfn {
+                mode: sf.mode,
+                w1c: sf.w1c.clone(),
+                b1: sf.dense.b1.clone(),
+                w2c: sf.w2c.clone(),
+                b2: sf.dense.b2.clone(),
+                w1d: None,
+                w2d: None,
+            }
         }
     }
 
     /// (d_model, d_ff) this FFN was built for.
     pub fn dims(&self) -> (usize, usize) {
-        (self.w1c.cols, self.w2c.cols)
+        if self.mode.sparse_weights() {
+            (self.w1c.cols, self.w2c.cols)
+        } else {
+            let w1 = self.w1d.as_ref().expect("activation-mode FFN lost its dense W1");
+            let w2 = self.w2d.as_ref().expect("activation-mode FFN lost its dense W2");
+            (w1.dims2().1, w2.dims2().1)
+        }
     }
 
-    /// Inference forward through the compressed operands. Identical
-    /// arithmetic to [`SparseFfn::forward_scratch`] — including its
+    /// Inference forward. Identical arithmetic to
+    /// [`SparseFfn::forward_scratch`] in the same mode — including its
     /// column-major Table-12 interior (Z^T and A^T temporaries, fused
-    /// layout conversion in the spMM epilogues) — but every temporary
-    /// comes from `scratch` and nothing is cached; decode steps in the
-    /// steady state allocate nothing.
+    /// layout conversion in the matmul epilogues; `Activation` packs
+    /// the pruned activation into a scratch-pooled [`Compressed24`]) —
+    /// but every temporary comes from `scratch` and nothing is cached;
+    /// decode steps in the steady state allocate nothing.
     pub fn forward_into(&self, x: &Tensor, y: &mut Tensor, scratch: &mut Scratch) {
         let (p, _) = x.dims2();
-        let mut z = scratch.take(&[self.w1c.rows, p]);
-        kernels::spmm_nt_cm_into(x, &self.w1c, &mut z);
-        add_bias_cm(&mut z, &self.b1);
-        let mut a = scratch.take(&[self.w1c.rows / 2, p]);
-        geglu_cm_into(&z, &mut a);
-        y.resize_to(&[p, self.w2c.rows]);
-        kernels::spmm_nt_t_into(&a, &self.w2c, y);
-        add_bias(y, &self.b2);
-        scratch.give(z);
-        scratch.give(a);
+        match self.mode {
+            SparseMode::Weight => {
+                let mut z = scratch.take(&[self.w1c.rows, p]);
+                kernels::spmm_nt_cm_into(x, &self.w1c, &mut z);
+                add_bias_cm(&mut z, &self.b1);
+                let mut a = scratch.take(&[self.w1c.rows / 2, p]);
+                geglu_cm_into(&z, &mut a);
+                y.resize_to(&[p, self.w2c.rows]);
+                kernels::spmm_nt_t_into(&a, &self.w2c, y);
+                add_bias(y, &self.b2);
+                scratch.give(z);
+                scratch.give(a);
+            }
+            SparseMode::Activation => {
+                let w1 = self.w1d.as_ref().expect("activation-mode FFN lost its dense W1");
+                let w2 = self.w2d.as_ref().expect("activation-mode FFN lost its dense W2");
+                let (two_r, _) = w1.dims2();
+                let (d, _) = w2.dims2();
+                let mut z = scratch.take(&[two_r, p]);
+                kernels::gemm_nt_into(w1, x, &mut z);
+                add_bias_cm(&mut z, &self.b1);
+                let mut a = scratch.take(&[two_r / 2, p]);
+                geglu_cm_into(&z, &mut a);
+                let mut acomp = scratch.take_comp();
+                prune_act24_cm(&mut a, None, Some(&mut acomp));
+                y.resize_to(&[p, d]);
+                kernels::spmm_tn_cm_into(&acomp, w2, y);
+                add_bias(y, &self.b2);
+                scratch.give_comp(acomp);
+                scratch.give(z);
+                scratch.give(a);
+            }
+            SparseMode::Both => {
+                let mut z = scratch.take(&[self.w1c.rows, p]);
+                kernels::spmm_nt_cm_into(x, &self.w1c, &mut z);
+                add_bias_cm(&mut z, &self.b1);
+                let mut a = scratch.take(&[self.w1c.rows / 2, p]);
+                geglu_cm_into(&z, &mut a);
+                prune_act24_cm(&mut a, None, None);
+                y.resize_to(&[p, self.w2c.rows]);
+                kernels::spmm_nt_t_into(&a, &self.w2c, y);
+                add_bias(y, &self.b2);
+                scratch.give(z);
+                scratch.give(a);
+            }
+        }
     }
 }
 
@@ -657,6 +1015,52 @@ mod tests {
         let mut s_cm = Tensor::zeros(&[0]);
         row_sum_into(&x.t(), &mut s_cm);
         assert_eq!(s_cm, s_rm);
+    }
+
+    #[test]
+    fn prune_act24_cm_packs_like_row_major_compression() {
+        // column-wise pruning of A^T picks the same lanes as the
+        // row-major weight-path pruner on A (same logical groups of 4
+        // along the hidden dim), and the packed operand round-trips
+        let a = rand(&[6, 8], 40); // A (p=6, r=8)
+        let mut at = a.t();
+        let mut mask = Vec::new();
+        let mut comp = Compressed24::default();
+        prune_act24_cm(&mut at, Some(&mut mask), Some(&mut comp));
+        let m = crate::sparse::mask::prune24_mask(&a);
+        let pruned = m.apply(&a);
+        assert_eq!(at, pruned.t());
+        assert_eq!(comp.to_dense(), pruned);
+        // keep-mask bytes are the transposed weight-path mask
+        for lane in 0..8 {
+            for tok in 0..6 {
+                assert_eq!(mask[lane * 6 + tok], m.at(tok, lane));
+            }
+        }
+    }
+
+    #[test]
+    fn activation_mode_forward_matches_masked_dense_oracle() {
+        let mut rng = Rng::new(50);
+        let sf = SparseFfn::new_with_mode(16, 8, SparseMode::Activation, &mut rng);
+        let x = rand(&[6, 16], 51);
+        let (y, cache) = sf.forward(&x);
+        // replay the pipeline prefix with public kernels to get the
+        // unpruned A^T, then prune row-major and finish with a dense GEMM
+        let mut z = Tensor::zeros(&[16, 6]);
+        kernels::gemm_nt_into(&sf.dense.w1, &x, &mut z);
+        add_bias_cm(&mut z, &sf.dense.b1);
+        let mut at = Tensor::zeros(&[0]);
+        geglu_cm_into(&z, &mut at);
+        let a = at.t();
+        let ap = crate::sparse::mask::prune24_mask(&a).apply(&a);
+        let mut y_ref = Tensor::zeros(&[6, 16]);
+        gemm_nt_into(&ap, &sf.dense.w2, &mut y_ref);
+        add_bias(&mut y_ref, &sf.dense.b2);
+        assert!(y.max_abs_diff(&y_ref) < 1e-5, "{}", y.max_abs_diff(&y_ref));
+        // the cached pruned A^T and packed operand agree with the oracle
+        assert_eq!(cache.a, ap.t());
+        assert_eq!(cache.acomp.to_dense(), ap);
     }
 
     #[test]

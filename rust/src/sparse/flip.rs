@@ -7,6 +7,16 @@
 //! an accuracy loss (Table 1). `FlipMonitor` tracks the global rate;
 //! `BlockFlipStats` reproduces the per-4x4-block scatter of Fig. 2
 //! (cumulative flips vs. L1-norm gap between the two best masks).
+//!
+//! The activation-sparse workload family gets the same treatment:
+//! [`ActFlipMonitor`] tracks per-step churn of the ACTIVATION 2:4
+//! keep-masks (raw byte vectors in A^T layout, recorded by the forward
+//! pass) and publishes it as the `sparse.flip.activation` gauge —
+//! alongside the weight-mask churn the trainer publishes as
+//! `sparse.flip.weight`. Activation masks are input-dependent, so their
+//! churn is a property of the data distribution rather than of the
+//! optimizer trajectory; tracking the two families separately is what
+//! makes the cross-mode ablation legible.
 
 use super::mask::{prune24_mask, Mask};
 use super::transposable::{best_pattern, PATTERNS};
@@ -92,6 +102,60 @@ impl FlipMonitor {
 impl Default for FlipMonitor {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Running churn monitor for the activation 2:4 keep-masks.
+///
+/// Activation masks live as raw keep-byte vectors in A^T (r, p) layout
+/// ([`crate::sparse::ffn::FfnCache::act_mask`]), not as weight
+/// [`Mask`]es: they are rebuilt from live activations every step, so
+/// their churn measures input/representation drift, not optimizer
+/// motion. Each observation publishes the `sparse.flip.activation`
+/// gauge when metrics are on.
+#[derive(Clone, Debug, Default)]
+pub struct ActFlipMonitor {
+    prev: Vec<u8>,
+    pub history: Vec<f64>,
+}
+
+impl ActFlipMonitor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Observe the current activation keep-mask; returns r_t (0.0 on
+    /// the first call, and whenever the batch shape changed — masks of
+    /// different lengths are not comparable).
+    pub fn observe(&mut self, mask: &[u8]) -> f64 {
+        let r = if !mask.is_empty() && self.prev.len() == mask.len() {
+            let flips = self.prev.iter().zip(mask).filter(|(a, b)| a != b).count();
+            flips as f64 / mask.len() as f64
+        } else {
+            0.0
+        };
+        self.prev.clear();
+        self.prev.extend_from_slice(mask);
+        self.history.push(r);
+        if crate::obs::metrics_on() {
+            crate::obs::gauge("sparse.flip.activation").set(r);
+        }
+        r
+    }
+
+    pub fn last(&self) -> f64 {
+        *self.history.last().unwrap_or(&0.0)
+    }
+
+    /// Mean flip rate over a window (same statistic as
+    /// [`FlipMonitor::mean_over`], on the activation family).
+    pub fn mean_over(&self, last_n: usize) -> f64 {
+        if self.history.is_empty() {
+            return 0.0;
+        }
+        let n = last_n.min(self.history.len());
+        let s: f64 = self.history[self.history.len() - n..].iter().sum();
+        s / n as f64
     }
 }
 
@@ -240,6 +304,27 @@ mod tests {
         mon.history = vec![0.1, 0.2, 0.3, 0.35, 0.4, 0.42, 0.45, 0.5];
         let (_, _, healthy) = mon.health(0.25);
         assert!(!healthy);
+    }
+
+    #[test]
+    fn act_monitor_first_observation_and_shape_changes_are_zero() {
+        let mut mon = ActFlipMonitor::new();
+        assert_eq!(mon.observe(&[1, 1, 0, 0]), 0.0);
+        // identical mask -> no flips
+        assert_eq!(mon.observe(&[1, 1, 0, 0]), 0.0);
+        // shape change -> not comparable, resets to 0
+        assert_eq!(mon.observe(&[1, 0, 0, 1, 1, 0, 0, 1]), 0.0);
+        assert_eq!(mon.history.len(), 3);
+    }
+
+    #[test]
+    fn act_monitor_counts_byte_flips() {
+        let mut mon = ActFlipMonitor::new();
+        mon.observe(&[1, 1, 0, 0]);
+        // two of four bytes changed
+        assert_eq!(mon.observe(&[1, 0, 1, 0]), 0.5);
+        assert_eq!(mon.last(), 0.5);
+        assert_eq!(mon.mean_over(2), 0.25);
     }
 
     #[test]

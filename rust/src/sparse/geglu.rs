@@ -18,17 +18,148 @@
 //! * the dense baseline ([`crate::sparse::ffn::DenseFfn`]) keeps
 //!   row-major activations (its GEMMs are row-major native) and runs
 //!   [`geglu_row_major_into`] / [`geglu_row_major_grad_into`].
+//!
+//! **SIMD forward.** The fused-forward inner loop is vectorized 8-wide
+//! ([`geglu_lane`]): GELU's tanh is evaluated by a branch-free
+//! range-reduced exp ([`gelu_fast`]) whose scalar and SIMD twins
+//! execute the SAME plain-op sequence (no FMA contraction, no libm), so
+//! the SIMD body and the scalar tail are bitwise identical per element.
+//! That invariant is load-bearing: the column-major and row-major entry
+//! points slice the same logical element into lanes of different
+//! lengths (p vs r), so it may hit the SIMD body in one layout and the
+//! tail in the other — the existing bitwise cross-layout tests only
+//! keep passing because the two bodies agree to the last bit.
+//! `gelu_fast` stays within 1e-6 (relative for |x| > 1) of the libm
+//! [`gelu`], which remains the scalar oracle and the backward's
+//! evaluator (the backward pairs `gelu`/`gelu_grad`, both libm, so its
+//! own cross-layout bitwise identity is untouched).
 
 use crate::tensor::Tensor;
+use std::simd::prelude::*;
+use std::simd::StdFloat;
 
 const SQRT_2_OVER_PI: f32 = 0.797_884_56;
 const GELU_C: f32 = 0.044_715;
 
-/// tanh-approximated GELU — matches `kernels/ref.gelu_tanh` bit-for-bit
-/// at f32 (same constants, same operation order).
+/// tanh-approximated GELU via libm `tanh` — the scalar oracle the fast
+/// path ([`gelu_fast`]) is differentially pinned against, and the
+/// evaluator the backward kernels use (same constants, same operation
+/// order as the forward, so fwd/bwd share one approximation family).
 #[inline]
 pub fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + GELU_C * x * x * x)).tanh())
+}
+
+const LANES: usize = 8;
+type F8 = Simd<f32, LANES>;
+
+/// tanh saturation cutoff: for t = 2|v| >= 20, 2/(e^t + 1) < 4.2e-9 is
+/// under half an ulp of 1.0, so m rounds to exactly 1.0 — matching libm
+/// tanh's saturation — while keeping the 2^n exponent trick in range
+/// (n <= 29).
+const TANH_CLAMP: f32 = 20.0;
+const LOG2_E: f32 = std::f32::consts::LOG2_E;
+const LN_2: f32 = std::f32::consts::LN_2;
+// Taylor coefficients 1/k! for e^w on |w| <= ln(2)/2; degree 7 leaves
+// a ~5e-9 relative truncation error, far under the 1e-6 gate
+const EXP_C2: f32 = 1.0 / 2.0;
+const EXP_C3: f32 = 1.0 / 6.0;
+const EXP_C4: f32 = 1.0 / 24.0;
+const EXP_C5: f32 = 1.0 / 120.0;
+const EXP_C6: f32 = 1.0 / 720.0;
+const EXP_C7: f32 = 1.0 / 5040.0;
+
+/// Branch-free tanh: t = min(2|v|, clamp), e^t by range reduction
+/// (e^t = 2^n e^w, |w| <= ln(2)/2, degree-7 Horner), then
+/// tanh(|v|) = 1 - 2/(e^t + 1), sign restored at the end.
+///
+/// Every operation is a plain IEEE add/sub/mul/div/min/floor — no
+/// libm, no mul_add — so [`tanh_fast_simd`] can replay the identical
+/// sequence and produce bitwise-equal results lane for lane.
+#[inline]
+fn tanh_fast(v: f32) -> f32 {
+    let a = v.abs();
+    let t = (2.0 * a).min(TANH_CLAMP);
+    let u = t * LOG2_E;
+    let n = (u + 0.5).floor();
+    let w = (u - n) * LN_2;
+    let mut e = EXP_C7;
+    e = e * w + EXP_C6;
+    e = e * w + EXP_C5;
+    e = e * w + EXP_C4;
+    e = e * w + EXP_C3;
+    e = e * w + EXP_C2;
+    e = e * w + 1.0;
+    e = e * w + 1.0;
+    let scale = f32::from_bits((((n as i32) + 127) as u32) << 23);
+    let m = 1.0 - 2.0 / (e * scale + 1.0);
+    if v < 0.0 {
+        -m
+    } else {
+        m
+    }
+}
+
+/// 8-wide twin of [`tanh_fast`]: the same plain-op sequence, verbatim.
+#[inline]
+fn tanh_fast_simd(v: F8) -> F8 {
+    let a = v.abs();
+    let t = (F8::splat(2.0) * a).simd_min(F8::splat(TANH_CLAMP));
+    let u = t * F8::splat(LOG2_E);
+    let n = (u + F8::splat(0.5)).floor();
+    let w = (u - n) * F8::splat(LN_2);
+    let mut e = F8::splat(EXP_C7);
+    e = e * w + F8::splat(EXP_C6);
+    e = e * w + F8::splat(EXP_C5);
+    e = e * w + F8::splat(EXP_C4);
+    e = e * w + F8::splat(EXP_C3);
+    e = e * w + F8::splat(EXP_C2);
+    e = e * w + F8::splat(1.0);
+    e = e * w + F8::splat(1.0);
+    let scale =
+        F8::from_bits((n.cast::<i32>() + Simd::splat(127i32)).cast::<u32>() << Simd::splat(23u32));
+    let m = F8::splat(1.0) - F8::splat(2.0) / (e * scale + F8::splat(1.0));
+    v.simd_lt(F8::splat(0.0)).select(-m, m)
+}
+
+/// Fast tanh-approximated GELU — the forward hot path. Same constants
+/// and outer expression as [`gelu`], with [`tanh_fast`] replacing libm
+/// tanh; within 1e-6 (relative for |x| > 1) of the oracle everywhere,
+/// exact at 0 and in the saturated tails.
+#[inline]
+pub fn gelu_fast(x: f32) -> f32 {
+    0.5 * x * (1.0 + tanh_fast(SQRT_2_OVER_PI * (x + GELU_C * x * x * x)))
+}
+
+/// 8-wide twin of [`gelu_fast`] — identical expression order.
+#[inline]
+fn gelu_fast_simd(x: F8) -> F8 {
+    F8::splat(0.5)
+        * x
+        * (F8::splat(1.0)
+            + tanh_fast_simd(
+                F8::splat(SQRT_2_OVER_PI) * (x + F8::splat(GELU_C) * x * x * x),
+            ))
+}
+
+/// The one fused-forward inner loop every GEGLU entry point shares:
+/// `o[i] = gelu(z1[i]) * z2[i]` over contiguous slices, 8-wide SIMD
+/// main body plus a scalar tail that computes bitwise-identical values
+/// (see the module doc for why that equivalence is load-bearing).
+#[inline]
+fn geglu_lane(z1: &[f32], z2: &[f32], o: &mut [f32]) {
+    let n = o.len();
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        let a = F8::from_slice(&z1[i..i + LANES]);
+        let b = F8::from_slice(&z2[i..i + LANES]);
+        (gelu_fast_simd(a) * b).copy_to_slice(&mut o[i..i + LANES]);
+        i += LANES;
+    }
+    for i in main..n {
+        o[i] = gelu_fast(z1[i]) * z2[i];
+    }
 }
 
 /// Derivative of the tanh-approximated GELU.
@@ -99,9 +230,7 @@ fn geglu_cols(z: &[f32], p: usize, r: usize, out: &mut [f32]) {
         let z1 = &z[j * p..(j + 1) * p];
         let z2 = &z[(r + j) * p..(r + j + 1) * p];
         let o = &mut out[j * p..(j + 1) * p];
-        for i in 0..p {
-            o[i] = gelu(z1[i]) * z2[i];
-        }
+        geglu_lane(z1, z2, o);
     }
 }
 
@@ -155,7 +284,10 @@ pub fn geglu_cm_grad_into(zt: &Tensor, g: &Tensor, out: &mut Tensor) {
 
 /// "Intuitive" baseline: traverse along ROWS — strided by p in the
 /// column-major layout; every access is a potential cache miss. Kept
-/// deliberately row-ordered (this is the baseline under test in Table 4).
+/// deliberately row-ordered (this is the baseline under test in Table
+/// 4), and on scalar [`gelu_fast`] so both traversal orders evaluate
+/// the identical per-element arithmetic — Table 4 keeps measuring the
+/// cache effect, not an activation-function difference.
 pub fn geglu_row_order(z: &ColMajor) -> ColMajor {
     let p = z.rows;
     let r = z.cols / 2;
@@ -164,7 +296,7 @@ pub fn geglu_row_order(z: &ColMajor) -> ColMajor {
         for j in 0..r {
             let a = z.data[j * p + i];
             let b = z.data[(r + j) * p + i];
-            out.data[j * p + i] = gelu(a) * b;
+            out.data[j * p + i] = gelu_fast(a) * b;
         }
     }
     out
@@ -204,9 +336,8 @@ pub fn geglu_row_major_into(z: &Tensor, out: &mut Tensor) {
     for i in 0..p {
         let zrow = &z.data[i * c2..(i + 1) * c2];
         let orow = &mut out.data[i * r..(i + 1) * r];
-        for j in 0..r {
-            orow[j] = gelu(zrow[j]) * zrow[r + j];
-        }
+        let (z1, z2) = zrow.split_at(r);
+        geglu_lane(z1, z2, orow);
     }
 }
 
@@ -250,6 +381,56 @@ mod tests {
         // for the tanh approximation too)
         for &x in &[0.5f32, 1.0, 2.0, 3.0] {
             assert!((gelu(x) - gelu(-x) - x).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gelu_fast_matches_libm_oracle_within_1e6() {
+        // dense sweep over the live range plus far-tail points; 1e-6
+        // absolute below |x| = 1, relative above
+        let mut xs: Vec<f32> = (-8000..=8000).map(|i| i as f32 * 1e-3).collect();
+        xs.extend_from_slice(&[-100.0, -20.0, -12.5, 12.5, 20.0, 100.0]);
+        for x in xs {
+            let (fast, oracle) = (gelu_fast(x), gelu(x));
+            let tol = 1e-6f32.max(1e-6 * x.abs());
+            assert!(
+                (fast - oracle).abs() <= tol,
+                "x={x}: fast={fast} oracle={oracle}"
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_fast_saturates_exactly() {
+        // past the tanh clamp the identity branch must be EXACT, like
+        // libm tanh's saturation: gelu(x) = x, gelu(-x) = 0
+        for &x in &[15.0f32, 50.0, 100.0, 1e4] {
+            assert_eq!(gelu_fast(x), x);
+            assert_eq!(gelu_fast(-x), 0.0);
+        }
+        assert_eq!(gelu_fast(0.0), 0.0);
+    }
+
+    #[test]
+    fn geglu_lane_simd_body_matches_scalar_tail_bitwise() {
+        // odd lengths force every element through the SIMD body in one
+        // run and the scalar tail in another; results must be bitwise
+        // equal or the cm/row-major cross-layout identities break
+        let mut rng = Rng::new(99);
+        for n in [1usize, 7, 8, 9, 23, 64, 65] {
+            let z1 = Tensor::normal(&[1, n], 2.0, &mut rng);
+            let z2 = Tensor::normal(&[1, n], 2.0, &mut rng);
+            let mut out = vec![0.0f32; n];
+            geglu_lane(&z1.data, &z2.data, &mut out);
+            for i in 0..n {
+                let want = gelu_fast(z1.data[i]) * z2.data[i];
+                assert_eq!(
+                    out[i].to_bits(),
+                    want.to_bits(),
+                    "n={n} i={i}: {} vs {want}",
+                    out[i]
+                );
+            }
         }
     }
 

@@ -10,6 +10,14 @@
 //! points ([`gemm`]) and the compressed 2:4 spMM ([`spmm`]), gated activations
 //! ([`geglu`]), and full FFN / transformer-block workloads ([`ffn`],
 //! [`block`]) for the Fig. 7 / Table 11/13 reproductions.
+//!
+//! Two operand families consume the 2:4 machinery, selected by
+//! [`SparseMode`]: the paper's *weight* sparsity (transposable masks,
+//! compressed-stationary weights, MVUE gradient spMMs) and *activation*
+//! sparsity in the style of the Haziza et al. follow-on, where the
+//! post-GEGLU activation is magnitude-pruned 2:4 per token and streamed
+//! compressed-stationary through the second FFN matmul. `Both` stacks
+//! the two. See [`ffn`] for the per-mode kernel pipelines.
 
 pub mod block;
 pub mod ffn;
@@ -27,3 +35,62 @@ pub mod workloads;
 pub use kernels::{KernelBackend, Scratch};
 pub use mask::{prune24, prune24_mask, Mask};
 pub use transposable::transposable_mask;
+
+/// Which FFN operand the 2:4 machinery prunes — the `[sparse] mode`
+/// config key / `--sparse-mode` CLI flag.
+///
+/// * `Weight` — the source paper's FST regime: transposable weight
+///   masks, compressed-stationary weights, MVUE gradient spMMs. The
+///   default, and byte-identical to the pre-mode pipeline.
+/// * `Activation` — weights stay dense; the post-GEGLU activation is
+///   2:4-pruned per token (each group of four consecutive hidden
+///   lanes keeps its top-2 magnitude pair), packed via
+///   [`spmm::Compressed24`], and driven compressed-stationary through
+///   the second FFN matmul. The backward is straight-through:
+///   gradients flow only to the surviving lanes.
+/// * `Both` — compressed weights AND pruned activations. The weight
+///   operand keeps the compressed-stationary slot (the CPU spMM, like
+///   sparse tensor cores, structures only one operand), so the pruned
+///   activation streams through dense with its lanes zeroed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparseMode {
+    Weight,
+    Activation,
+    Both,
+}
+
+impl SparseMode {
+    /// Parse the config/CLI spelling (`weight` / `activation` / `both`).
+    pub fn parse(s: &str) -> Option<SparseMode> {
+        match s {
+            "weight" => Some(SparseMode::Weight),
+            "activation" => Some(SparseMode::Activation),
+            "both" => Some(SparseMode::Both),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SparseMode::Weight => "weight",
+            SparseMode::Activation => "activation",
+            SparseMode::Both => "both",
+        }
+    }
+
+    /// Does this mode compress/mask the FFN weights?
+    pub fn sparse_weights(self) -> bool {
+        !matches!(self, SparseMode::Activation)
+    }
+
+    /// Does this mode 2:4-prune the post-GEGLU activations?
+    pub fn sparse_activations(self) -> bool {
+        !matches!(self, SparseMode::Weight)
+    }
+}
+
+impl std::fmt::Display for SparseMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}

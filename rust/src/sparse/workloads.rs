@@ -11,7 +11,9 @@ use std::time::{Duration, Instant};
 
 use crate::sparse::block::TransformerBlock;
 use crate::sparse::ffn::{DenseFfn, FfnCache, FfnGrads, SparseFfn};
+use crate::sparse::flip::ActFlipMonitor;
 use crate::sparse::kernels::Scratch;
+use crate::sparse::SparseMode;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -85,17 +87,25 @@ pub fn time_dense_ffn(p: usize, d: usize, r: usize, budget: Duration) -> FfnTimi
 }
 
 /// FST 2:4 FFN iteration time with the full overhead model.
-/// `mask_interval` = l (mask search cost amortized by 1/l).
+/// `mask_interval` = l (mask search cost amortized by 1/l). `mode`
+/// selects the sparse operand family: in `Activation` (and `Both`) the
+/// forward includes the per-batch activation prune, and the
+/// activation-mask churn feeds an [`ActFlipMonitor`] (so the
+/// `sparse.flip.activation` gauge is live whenever metrics are on).
+/// Weight-side overheads (recompress + amortized mask search) only
+/// apply when the mode keeps the weights 2:4 — pure activation mode has
+/// no weight masks to maintain, so its `overhead_s` is zero.
 pub fn time_sparse_ffn(p: usize, d: usize, r: usize, mask_interval: usize,
-                       budget: Duration) -> FfnTiming {
+                       mode: SparseMode, budget: Duration) -> FfnTiming {
     let mut rng = Rng::new(0x5EED);
-    let mut ffn = SparseFfn::new(d, r, &mut rng);
+    let mut ffn = SparseFfn::new_with_mode(d, r, mode, &mut rng);
     let x = Tensor::normal(&[p, d], 0.5, &mut rng);
     let dy = Tensor::normal(&[p, d], 0.5, &mut rng);
     let mut cache = FfnCache::empty();
     let mut y = Tensor::zeros(&[0]);
     let mut grads = FfnGrads::empty();
     let mut scratch = Scratch::new();
+    let mut flips = ActFlipMonitor::new();
     let mut crng = Rng::new(1);
     let reps = calibrate(
         || {
@@ -108,6 +118,9 @@ pub fn time_sparse_ffn(p: usize, d: usize, r: usize, mask_interval: usize,
     let fwd_s = time_reps(
         || {
             ffn.forward_scratch(&x, &mut cache, &mut y);
+            if mode.sparse_activations() {
+                flips.observe(&cache.act_mask);
+            }
             std::hint::black_box(y.data[0]);
         },
         reps,
@@ -122,20 +135,23 @@ pub fn time_sparse_ffn(p: usize, d: usize, r: usize, mask_interval: usize,
         reps,
     );
     // per-step prune (recompress) + amortized transposable search
-    let recompress_s = time_reps(|| ffn.recompress(), reps.max(5));
-    let search_s = time_reps(|| ffn.refresh_masks(), (reps / 4).max(3));
-    FfnTiming {
-        fwd_s,
-        bwd_s,
-        overhead_s: recompress_s + search_s / mask_interval as f64,
-    }
+    let overhead_s = if mode.sparse_weights() {
+        let recompress_s = time_reps(|| ffn.recompress(), reps.max(5));
+        let search_s = time_reps(|| ffn.refresh_masks(), (reps / 4).max(3));
+        recompress_s + search_s / mask_interval as f64
+    } else {
+        0.0
+    };
+    FfnTiming { fwd_s, bwd_s, overhead_s }
 }
 
-/// Fig. 7a row: FFN speedup S = dense/sparse at (n tokens, d, r=4d).
-pub fn ffn_speedup(p: usize, d: usize, budget: Duration) -> (f64, f64, f64) {
+/// Fig. 7a row: FFN speedup S = dense/sparse at (n tokens, d, r=4d),
+/// with the sparse side running under `mode`.
+pub fn ffn_speedup(p: usize, d: usize, mode: SparseMode, budget: Duration)
+                   -> (f64, f64, f64) {
     let r = 4 * d;
     let dense = time_dense_ffn(p, d, r, budget);
-    let sparse = time_sparse_ffn(p, d, r, 40, budget);
+    let sparse = time_sparse_ffn(p, d, r, 40, mode, budget);
     (dense.total(), sparse.total(), dense.total() / sparse.total())
 }
 
@@ -198,7 +214,7 @@ pub fn profile_breakdown(batch: usize, n: usize, d: usize,
     let r = 4 * d;
     let mut rng = Rng::new(0x60D);
     let dense = time_dense_ffn(p, d, r, budget);
-    let sparse = time_sparse_ffn(p, d, r, 40, budget);
+    let sparse = time_sparse_ffn(p, d, r, 40, SparseMode::Weight, budget);
     let mut sf = SparseFfn::new(d, r, &mut rng);
     let recompress_s = time_reps(|| sf.recompress(), 10);
     let search_s = time_reps(|| sf.refresh_masks(), 5);
@@ -229,14 +245,25 @@ mod tests {
     fn ffn_timings_positive() {
         let t = time_dense_ffn(64, 16, 64, FAST);
         assert!(t.fwd_s > 0.0 && t.bwd_s > 0.0);
-        let s = time_sparse_ffn(64, 16, 64, 40, FAST);
+        let s = time_sparse_ffn(64, 16, 64, 40, SparseMode::Weight, FAST);
         assert!(s.fwd_s > 0.0 && s.overhead_s > 0.0);
     }
 
     #[test]
     fn speedup_is_finite_and_positive() {
-        let (d, s, ratio) = ffn_speedup(64, 16, FAST);
+        let (d, s, ratio) = ffn_speedup(64, 16, SparseMode::Weight, FAST);
         assert!(d > 0.0 && s > 0.0 && ratio > 0.1 && ratio < 10.0);
+    }
+
+    /// Activation mode: no weight masks to maintain (zero overhead) and
+    /// the activation-churn monitor sees the per-iteration masks.
+    #[test]
+    fn activation_mode_timing_has_no_weight_overhead() {
+        let s = time_sparse_ffn(64, 16, 64, 40, SparseMode::Activation, FAST);
+        assert!(s.fwd_s > 0.0 && s.bwd_s > 0.0);
+        assert_eq!(s.overhead_s, 0.0);
+        let b = time_sparse_ffn(64, 16, 64, 40, SparseMode::Both, FAST);
+        assert!(b.overhead_s > 0.0);
     }
 
     #[test]

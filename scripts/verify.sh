@@ -21,6 +21,12 @@
 # across draft windows, budget property, rollback accounting,
 # zero-alloc under tracing) plus a spec-enabled server smoke and a
 # spec-enabled serve-bench sweep (serve_spec section),
+# the activation-2:4 differential + ablation suite (activation-sparse
+# fwd/bwd vs masked-dense oracles, weight-mode bitwise dispatch purity,
+# 1-vs-N-thread bitwise invariance, zero-steady-state-alloc, serve
+# equivalence under --sparse-mode activation, pruning tie properties),
+# an activation-mode FFN speedup smoke, an activation-mode server
+# smoke, and the sparse-mode ablation bench (ffn_activation24 section),
 # the telemetry suite (sharded-histogram oracle, Chrome-trace
 # well-formedness, zero-alloc with tracing on, bitwise invariance
 # across telemetry levels and thread counts), a traced serving smoke
@@ -30,7 +36,8 @@
 # and a perf diff against the previous bench run (warn-only, >15%
 # regression; covers GFLOP/s — table12_epilogue included — prefill
 # tok/s, paged-KV occupancy, fault-storm goodput, and telemetry-mode
-# tokens/s, spec accept rate + per-lane throughput).
+# tokens/s, spec accept rate + per-lane throughput — the
+# ffn_activation24 rows are covered by the same generic GFLOP/s scan).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -52,10 +59,18 @@ PALLAS_NUM_THREADS=2 cargo test -q --test serve_paged
 echo "== kernel differential tests (incl. _cm epilogues vs naive oracle)"
 PALLAS_NUM_THREADS=2 cargo test -q --test kernels_differential
 
+echo "== activation-2:4 differential + ablation suite (vs masked-dense oracles)"
+PALLAS_NUM_THREADS=2 cargo test -q --test sparse_activation
+
 echo "== bench smoke (PALLAS_NUM_THREADS=2, --quick)"
 PALLAS_NUM_THREADS=2 cargo bench --bench ablation_spmm -- --quick
 PALLAS_NUM_THREADS=2 cargo bench --bench fig7_ffn_block -- --quick
 PALLAS_NUM_THREADS=2 cargo bench --bench table12_epilogue -- --quick
+PALLAS_NUM_THREADS=2 cargo bench --bench ffn_activation24 -- --quick
+
+echo "== activation-mode FFN speedup smoke (dense weights, pruned activations)"
+PALLAS_NUM_THREADS=2 ./target/release/sparse24 speedup --ffn --quick \
+  --sparse-mode activation
 
 echo "== serve smoke (synthetic checkpoint, 64 steps, paged KV, spec sweep, 2 threads)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --synthetic --quick \
@@ -73,6 +88,9 @@ PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve --smoke
 
 echo "== server smoke with speculation (spec_k=3, wire-visible spec gauges)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve --smoke --spec-k 3
+
+echo "== server smoke under activation-2:4 (dense weights, per-forward pruning)"
+PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve --smoke --sparse-mode activation
 
 echo "== fault-injection bench (seeded storm, bitwise survivors, zero leaks)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --faults --synthetic \
