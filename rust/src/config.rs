@@ -203,6 +203,13 @@ pub struct TrainConfig {
     pub eval_batches: usize,
     /// simulated data-parallel worker count
     pub workers: usize,
+    /// leader-side deadline for a worker's microbatch response, in ms;
+    /// past it the worker is declared hung, its microbatch re-dispatched
+    /// to a surviving worker, and the worker respawned
+    pub worker_timeout_ms: u64,
+    /// re-dispatches allowed per microbatch before the step hard-fails
+    /// (naming the microbatch and worker)
+    pub worker_retries: usize,
     /// LR schedule kind: "cosine" (warmup-cosine), "const", "inv_sqrt"
     pub lr_schedule: String,
     /// kernel-backend thread count; 0 = auto (PALLAS_NUM_THREADS env or
@@ -255,6 +262,8 @@ impl Default for TrainConfig {
             eval_interval: 0,
             eval_batches: 4,
             workers: 1,
+            worker_timeout_ms: 30_000,
+            worker_retries: 2,
             lr_schedule: "cosine".into(),
             kernel_threads: 0,
             kernel_backend: "auto".into(),
@@ -301,6 +310,12 @@ impl TrainConfig {
         }
         if let Some(v) = get(&t, "train", "workers") {
             c.workers = v.as_usize()?.max(1);
+        }
+        if let Some(v) = get(&t, "train", "worker_timeout_ms") {
+            c.worker_timeout_ms = v.as_usize()? as u64;
+        }
+        if let Some(v) = get(&t, "train", "worker_retries") {
+            c.worker_retries = v.as_usize()?;
         }
         if let Some(v) = get(&t, "train", "lr_schedule") {
             c.lr_schedule = v.as_str()?.to_string();
@@ -412,6 +427,9 @@ impl TrainConfig {
                 "unknown sparse mode {:?} (weight | activation | both)",
                 self.sparse_mode
             );
+        }
+        if self.worker_timeout_ms == 0 {
+            bail!("worker_timeout_ms must be positive (the hung-worker deadline)");
         }
         Ok(())
     }

@@ -1,27 +1,45 @@
-//! Checkpointing: full-fidelity save/resume of a training run.
+//! Checkpointing: full-fidelity, crash-safe save/resume of a training run.
 //!
-//! Format (versioned, single file):
-//!   magic  b"S24CKPT1"
+//! Format v2 (versioned, single file):
+//!   magic  b"S24CKPT2"
 //!   u64 LE header length, then a JSON header (step, manifest name, mask
 //!     mode, per-monitor flip histories, batcher RNG states, Adam t's,
-//!     tensor layout), then raw little-endian blobs in order:
+//!     tensor layout, per-section CRC32s), then raw little-endian blobs
+//!     in order:
 //!   params f32 | adam m f32 | adam v f32 | masks u8.
+//!
+//! Legacy v1 files (magic b"S24CKPT1", no CRC field) still load; they
+//! simply skip checksum verification.
+//!
+//! Crash safety: [`Checkpoint::save`] writes to `<path>.tmp`, fsyncs,
+//! then renames over the target, so a crash mid-save leaves the previous
+//! checkpoint intact (the stray `.tmp` is ignored by loaders).
+//! [`CheckpointStore`] layers step-stamped rotation and a
+//! newest-valid-file scan on top for `--keep-checkpoints` /
+//! `--resume-auto`.
 //!
 //! Resume is bit-exact: the data RNG states are captured, so an
 //! interrupted run continues on exactly the batch stream an uninterrupted
-//! run would have seen (tested in integration_trainer.rs).
+//! run would have seen (tested in integration_trainer.rs and
+//! tests/train_faults.rs).
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::model::ModelDims;
 use crate::sparse::mask::Mask;
 use crate::tensor::Tensor;
+use crate::util::crc32::Crc32;
 use crate::util::json::{num, obj, Json};
 
-const MAGIC: &[u8; 8] = b"S24CKPT1";
+const MAGIC: &[u8; 8] = b"S24CKPT2";
+const MAGIC_V1: &[u8; 8] = b"S24CKPT1";
+
+/// Upper bound on the JSON header; anything larger is treated as garbage
+/// rather than allocated blindly.
+const MAX_HEADER_BYTES: u64 = 64 * 1024 * 1024;
 
 /// Everything needed to resume a run (trainer state minus the compiled
 /// executables, which are rebuilt from the artifacts).
@@ -63,12 +81,18 @@ fn u64s_from_json(j: &Json) -> Result<Vec<u64>> {
         .collect()
 }
 
+/// Per-section CRC32s, in blob order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct SectionCrcs {
+    params: u32,
+    opt_m: u32,
+    opt_v: u32,
+    masks: u32,
+}
+
 impl Checkpoint {
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let header = obj(vec![
+    fn header_json(&self, crc: Option<SectionCrcs>) -> Json {
+        let mut fields = vec![
             ("manifest", Json::Str(self.manifest_name.clone())),
             ("step", num(self.step as f64)),
             ("since_refresh", num(self.sparse_steps_since_refresh as f64)),
@@ -125,23 +149,59 @@ impl Checkpoint {
                     None => Json::Null,
                 },
             ),
-        ]);
+        ];
+        if let Some(c) = crc {
+            fields.push((
+                "crc",
+                obj(vec![
+                    ("params", num(c.params as f64)),
+                    ("opt_m", num(c.opt_m as f64)),
+                    ("opt_v", num(c.opt_v as f64)),
+                    ("masks", num(c.masks as f64)),
+                ]),
+            ));
+        }
+        obj(fields)
+    }
+
+    fn section_crcs(&self) -> SectionCrcs {
+        let mut crc = SectionCrcs::default();
+        let mut c = Crc32::new();
+        for t in &self.params {
+            crc_f32s(&mut c, &t.data);
+        }
+        crc.params = c.finish();
+        let mut c = Crc32::new();
+        for m in &self.opt_m {
+            crc_f32s(&mut c, m);
+        }
+        crc.opt_m = c.finish();
+        let mut c = Crc32::new();
+        for v in &self.opt_v {
+            crc_f32s(&mut c, v);
+        }
+        crc.opt_v = c.finish();
+        let mut c = Crc32::new();
+        for m in &self.masks {
+            c.update(&m.data);
+        }
+        crc.masks = c.finish();
+        crc
+    }
+
+    fn write_body<W: Write>(&self, f: &mut W, magic: &[u8; 8], header: &Json) -> Result<()> {
         let header_bytes = header.to_string().into_bytes();
-        let mut f = std::io::BufWriter::new(
-            std::fs::File::create(path)
-                .with_context(|| format!("creating {}", path.display()))?,
-        );
-        f.write_all(MAGIC)?;
+        f.write_all(magic)?;
         f.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
         f.write_all(&header_bytes)?;
         for t in &self.params {
-            write_f32s(&mut f, &t.data)?;
+            write_f32s(f, &t.data)?;
         }
         for m in &self.opt_m {
-            write_f32s(&mut f, m)?;
+            write_f32s(f, m)?;
         }
         for v in &self.opt_v {
-            write_f32s(&mut f, v)?;
+            write_f32s(f, v)?;
         }
         for m in &self.masks {
             f.write_all(&m.data)?;
@@ -149,22 +209,94 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Atomic, checksummed save: writes `<path>.tmp`, fsyncs, renames.
+    ///
+    /// A crash at any point leaves either the previous file or the new
+    /// one fully in place — never a torn checkpoint at `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let start = std::time::Instant::now();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = self.header_json(Some(self.section_crcs()));
+        let tmp = tmp_path(path);
+        {
+            let file = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            let mut w = std::io::BufWriter::new(file);
+            self.write_body(&mut w, MAGIC, &header)?;
+            let file = w.into_inner().context("flushing checkpoint")?;
+            file.sync_all()
+                .with_context(|| format!("fsync {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+        // Durability of the rename itself (best-effort: not all platforms
+        // allow fsync on a directory handle).
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                if let Ok(d) = std::fs::File::open(dir) {
+                    let _ = d.sync_all();
+                }
+            }
+        }
+        crate::obs::histogram("train.checkpoint_save_ms")
+            .record(start.elapsed().as_millis() as u64);
+        Ok(())
+    }
+
+    /// Writes the legacy v1 format (old magic, no CRCs, non-atomic) —
+    /// only for backward-compatibility tests.
+    #[doc(hidden)]
+    pub fn save_v1(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = self.header_json(None);
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        self.write_body(&mut f, MAGIC_V1, &header)
+    }
+
     pub fn load(path: &Path) -> Result<Checkpoint> {
+        let file_len = std::fs::metadata(path)
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path)
                 .with_context(|| format!("opening {}", path.display()))?,
         );
         let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        f.read_exact(&mut magic)
+            .context("checkpoint truncated in magic")?;
+        let v2 = &magic == MAGIC;
+        if !v2 && &magic != MAGIC_V1 {
             bail!("not a sparse24 checkpoint (bad magic)");
         }
         let mut len8 = [0u8; 8];
-        f.read_exact(&mut len8)?;
-        let hlen = u64::from_le_bytes(len8) as usize;
-        let mut hbytes = vec![0u8; hlen];
-        f.read_exact(&mut hbytes)?;
-        let h = Json::parse(std::str::from_utf8(&hbytes)?)?;
+        f.read_exact(&mut len8)
+            .context("checkpoint truncated in header length")?;
+        let hlen = u64::from_le_bytes(len8);
+        if hlen > MAX_HEADER_BYTES {
+            bail!(
+                "checkpoint header claims {hlen} bytes (cap {MAX_HEADER_BYTES}); \
+                 refusing to allocate — file is corrupt or not a checkpoint"
+            );
+        }
+        if 16u64.saturating_add(hlen) > file_len {
+            bail!(
+                "checkpoint truncated at section header: header claims {hlen} bytes \
+                 but the file holds {} past the magic",
+                file_len.saturating_sub(16)
+            );
+        }
+        let mut hbytes = vec![0u8; hlen as usize];
+        f.read_exact(&mut hbytes)
+            .context("checkpoint truncated at section header")?;
+        let h = Json::parse(std::str::from_utf8(&hbytes)?)
+            .context("parsing checkpoint header")?;
 
         let param_shapes: Vec<Vec<usize>> = h
             .get("param_shapes")?
@@ -178,25 +310,87 @@ impl Checkpoint {
             .iter()
             .map(|s| s.as_usize_vec())
             .collect::<Result<_>>()?;
+        for (i, s) in mask_shapes.iter().enumerate() {
+            if s.len() != 2 {
+                bail!("checkpoint mask {i} has {} dims (expected 2)", s.len());
+            }
+        }
+        let expect_crc = if v2 {
+            let c = h
+                .get("crc")
+                .context("v2 checkpoint header missing crc section")?;
+            Some(SectionCrcs {
+                params: c.get("params")?.as_usize()? as u32,
+                opt_m: c.get("opt_m")?.as_usize()? as u32,
+                opt_v: c.get("opt_v")?.as_usize()? as u32,
+                masks: c.get("masks")?.as_usize()? as u32,
+            })
+        } else {
+            None
+        };
 
+        // Validate declared section sizes against the real file length
+        // BEFORE reading, so truncation is reported by section name
+        // instead of surfacing as a bare read_exact error mid-blob.
+        let f32_bytes = section_bytes(&param_shapes, 4)?;
+        let mask_bytes = section_bytes(&mask_shapes, 1)?;
+        let mut offset = 16u64
+            .checked_add(hlen)
+            .context("checkpoint sizes overflow")?;
+        for (name, sz) in [
+            ("params", f32_bytes),
+            ("opt_m", f32_bytes),
+            ("opt_v", f32_bytes),
+            ("masks", mask_bytes),
+        ] {
+            let end = offset
+                .checked_add(sz)
+                .context("checkpoint sizes overflow")?;
+            if end > file_len {
+                bail!(
+                    "checkpoint truncated at section {name}: needs bytes \
+                     [{offset}, {end}) but the file is {file_len} bytes"
+                );
+            }
+            offset = end;
+        }
+
+        let mut crc = Crc32::new();
         let mut params = Vec::with_capacity(param_shapes.len());
         for shape in &param_shapes {
-            params.push(Tensor::from_vec(shape, read_f32s(&mut f, shape.iter().product())?));
+            let data = read_f32s(&mut f, shape.iter().product(), &mut crc)
+                .context("checkpoint truncated at section params")?;
+            params.push(Tensor::from_vec(shape, data));
         }
+        check_crc("params", crc.finish(), expect_crc.map(|c| c.params))?;
+        let mut crc = Crc32::new();
         let mut opt_m = Vec::with_capacity(param_shapes.len());
         for shape in &param_shapes {
-            opt_m.push(read_f32s(&mut f, shape.iter().product())?);
+            opt_m.push(
+                read_f32s(&mut f, shape.iter().product(), &mut crc)
+                    .context("checkpoint truncated at section opt_m")?,
+            );
         }
+        check_crc("opt_m", crc.finish(), expect_crc.map(|c| c.opt_m))?;
+        let mut crc = Crc32::new();
         let mut opt_v = Vec::with_capacity(param_shapes.len());
         for shape in &param_shapes {
-            opt_v.push(read_f32s(&mut f, shape.iter().product())?);
+            opt_v.push(
+                read_f32s(&mut f, shape.iter().product(), &mut crc)
+                    .context("checkpoint truncated at section opt_v")?,
+            );
         }
+        check_crc("opt_v", crc.finish(), expect_crc.map(|c| c.opt_v))?;
+        let mut crc = Crc32::new();
         let mut masks = Vec::with_capacity(mask_shapes.len());
         for shape in &mask_shapes {
             let mut data = vec![0u8; shape[0] * shape[1]];
-            f.read_exact(&mut data)?;
+            f.read_exact(&mut data)
+                .context("checkpoint truncated at section masks")?;
+            crc.update(&data);
             masks.push(Mask { rows: shape[0], cols: shape[1], data });
         }
+        check_crc("masks", crc.finish(), expect_crc.map(|c| c.masks))?;
 
         let flip_histories = h
             .get("flip_histories")?
@@ -260,6 +454,39 @@ impl Checkpoint {
     }
 }
 
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+fn check_crc(section: &str, got: u32, expect: Option<u32>) -> Result<()> {
+    match expect {
+        Some(want) if want != got => bail!(
+            "checkpoint CRC mismatch in section {section} \
+             (stored {want:#010x}, computed {got:#010x})"
+        ),
+        _ => Ok(()),
+    }
+}
+
+/// Total byte size of a blob section, with overflow-checked arithmetic so
+/// hostile shapes in the header can't wrap the truncation check.
+fn section_bytes(shapes: &[Vec<usize>], elem: u64) -> Result<u64> {
+    let mut total = 0u64;
+    for s in shapes {
+        let n = s
+            .iter()
+            .try_fold(1u64, |acc, &d| acc.checked_mul(d as u64))
+            .context("checkpoint shape size overflows")?;
+        total = n
+            .checked_mul(elem)
+            .and_then(|b| total.checked_add(b))
+            .context("checkpoint section size overflows")?;
+    }
+    Ok(total)
+}
+
 fn write_f32s<W: Write>(w: &mut W, data: &[f32]) -> Result<()> {
     // chunked LE encoding (avoids a full second buffer for big tensors)
     let mut buf = Vec::with_capacity(64 * 1024);
@@ -273,13 +500,139 @@ fn write_f32s<W: Write>(w: &mut W, data: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+/// Fold the LE encoding of `data` into `crc` without writing it anywhere.
+fn crc_f32s(crc: &mut Crc32, data: &[f32]) {
+    let mut buf = Vec::with_capacity(64 * 1024);
+    for chunk in data.chunks(16 * 1024) {
+        buf.clear();
+        for &v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        crc.update(&buf);
+    }
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize, crc: &mut Crc32) -> Result<Vec<f32>> {
     let mut bytes = vec![0u8; n * 4];
     r.read_exact(&mut bytes)?;
+    crc.update(&bytes);
     Ok(bytes
         .chunks_exact(4)
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
         .collect())
+}
+
+/// Step-stamped checkpoint rotation + newest-valid scan, for
+/// `--keep-checkpoints K` and `--resume-auto`.
+///
+/// Periodic saves land at `<stem>.step<NNNNNNNN>.ckpt` next to the base
+/// path; only the newest `keep` stamped files are retained. The bare base
+/// path (where the final end-of-run save goes) also counts as a resume
+/// candidate. [`CheckpointStore::latest_valid`] fully loads candidates
+/// newest-step-first and skips corrupt or torn files with a warning, so a
+/// crash mid-save (or a partially written NFS file) degrades to "resume
+/// from the previous checkpoint" instead of a dead run.
+#[derive(Clone, Debug)]
+pub struct CheckpointStore {
+    base: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointStore {
+    /// `keep == 0` is clamped to 1 (rotation must leave something).
+    pub fn new(base: &Path, keep: usize) -> CheckpointStore {
+        CheckpointStore { base: base.to_path_buf(), keep: keep.max(1) }
+    }
+
+    pub fn base(&self) -> &Path {
+        &self.base
+    }
+
+    fn stem(&self) -> String {
+        self.base
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "checkpoint".to_string())
+    }
+
+    fn dir(&self) -> PathBuf {
+        match self.base.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => PathBuf::from("."),
+        }
+    }
+
+    /// Path of the stamped file for `step`.
+    pub fn stamped(&self, step: usize) -> PathBuf {
+        self.dir().join(format!("{}.step{step:08}.ckpt", self.stem()))
+    }
+
+    /// All stamped files on disk, sorted ascending by step.
+    pub fn list_stamped(&self) -> Vec<(usize, PathBuf)> {
+        let prefix = format!("{}.step", self.stem());
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(self.dir()) {
+            Ok(e) => e,
+            Err(_) => return out,
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let Some(rest) = name.strip_prefix(&prefix) else { continue };
+            let Some(digits) = rest.strip_suffix(".ckpt") else { continue };
+            if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+                continue;
+            }
+            if let Ok(step) = digits.parse::<usize>() {
+                out.push((step, entry.path()));
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Atomically save a stamped checkpoint for `ck.step`, then prune
+    /// stamped files beyond the newest `keep`.
+    pub fn save(&self, ck: &Checkpoint) -> Result<PathBuf> {
+        let path = self.stamped(ck.step);
+        ck.save(&path)?;
+        let stamped = self.list_stamped();
+        if stamped.len() > self.keep {
+            for (_, old) in &stamped[..stamped.len() - self.keep] {
+                std::fs::remove_file(old)
+                    .with_context(|| format!("pruning {}", old.display()))?;
+            }
+        }
+        Ok(path)
+    }
+
+    /// Scan stamped files (newest step first) plus the bare base path and
+    /// return the loadable checkpoint with the highest step, skipping
+    /// corrupt/torn candidates with a warning on stderr.
+    pub fn latest_valid(&self) -> Option<(PathBuf, Checkpoint)> {
+        let mut candidates: Vec<PathBuf> =
+            self.list_stamped().into_iter().rev().map(|(_, p)| p).collect();
+        if self.base.is_file() {
+            candidates.push(self.base.clone());
+        }
+        let mut best: Option<(PathBuf, Checkpoint)> = None;
+        for path in candidates {
+            match Checkpoint::load(&path) {
+                Ok(ck) => {
+                    let better = best.as_ref().map_or(true, |(_, b)| ck.step > b.step);
+                    if better {
+                        best = Some((path, ck));
+                    }
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warning: skipping unusable checkpoint {}: {e:#}",
+                        path.display()
+                    );
+                }
+            }
+        }
+        best
+    }
 }
 
 #[cfg(test)]
@@ -317,12 +670,21 @@ mod tests {
         }
     }
 
+    fn tdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sparse24_ckpt_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip_is_exact() {
         let ck = sample();
-        let dir = std::env::temp_dir().join("sparse24_ckpt_test");
+        let dir = tdir("roundtrip");
         let path = dir.join("a.ckpt");
         ck.save(&path).unwrap();
+        // atomic save leaves no temp file behind
+        assert!(!tmp_path(&path).exists());
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.manifest_name, ck.manifest_name);
         assert_eq!(back.step, ck.step);
@@ -341,11 +703,106 @@ mod tests {
 
     #[test]
     fn rejects_bad_magic() {
-        let dir = std::env::temp_dir().join("sparse24_ckpt_test2");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tdir("magic");
         let path = dir.join("junk.ckpt");
         std::fs::write(&path, b"NOTACKPT0000").unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_v1_still_loads() {
+        let ck = sample();
+        let dir = tdir("v1");
+        let path = dir.join("old.ckpt");
+        ck.save_v1(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.masks, ck.masks);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bounds_header_length() {
+        let dir = tdir("hlen");
+        let path = dir.join("huge.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("refusing to allocate"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncation_names_section() {
+        let ck = sample();
+        let dir = tdir("trunc");
+        let path = dir.join("t.ckpt");
+        ck.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // chop off the mask blob (last section)
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("truncated at section masks"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc_mismatch_names_section() {
+        let ck = sample();
+        let dir = tdir("crc");
+        let path = dir.join("c.ckpt");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one bit in the params blob (first byte after the header)
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        bytes[16 + hlen] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("CRC mismatch in section params"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_rotates_and_scans() {
+        let dir = tdir("store");
+        let store = CheckpointStore::new(&dir.join("run.ckpt"), 2);
+        let mut ck = sample();
+        for step in [5usize, 10, 15] {
+            ck.step = step;
+            store.save(&ck).unwrap();
+        }
+        let stamped = store.list_stamped();
+        assert_eq!(
+            stamped.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+            vec![10, 15],
+            "oldest stamped file pruned at keep=2"
+        );
+        // corrupt the newest: auto-resume must fall back to step 10
+        let newest = store.stamped(15);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (path, back) = store.latest_valid().expect("one valid checkpoint left");
+        assert_eq!(back.step, 10);
+        assert_eq!(path, store.stamped(10));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tmp_is_ignored_and_previous_survives() {
+        let dir = tdir("torn");
+        let path = dir.join("run.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        // simulate a crash mid-save: a torn .tmp next to the good file
+        std::fs::write(tmp_path(&path), b"S24CKPT2garbage").unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, ck.step);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

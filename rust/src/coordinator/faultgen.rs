@@ -1,0 +1,578 @@
+//! Deterministic trainer fault injection (`sparse24 train --faults`).
+//!
+//! The training-side twin of `serve/faultgen.rs`: a seeded storm of
+//! worker kills, injected panics, and stalled responses thrown at the
+//! supervised [`DataParallel`](crate::coordinator::DataParallel) engine
+//! mid-run, with BITWISE oracles instead of statistics:
+//!
+//! * a storm run's loss trajectory and final parameters must equal an
+//!   undisturbed twin run bit for bit (recovery is provably neutral,
+//!   because each microbatch is a pure function of `(params, masks,
+//!   batch, seed)` and reduction is microbatch-index-ordered);
+//! * `grad_step` must be bitwise invariant across 1/2/3 workers;
+//! * a run killed mid-flight must, via the checkpoint store's
+//!   newest-valid auto-resume scan (including skipping a corrupted
+//!   newest file), rejoin the uninterrupted trajectory bit-exactly.
+//!
+//! Faults are keyed on the *microbatch seed* (`base_seed + index`),
+//! which is globally unique across a run, so a schedule fires at the
+//! same logical work item no matter which worker draws it or how the
+//! race unfolds — the storm is reproducible from one u64.
+//!
+//! Everything runs on [`SimBackend`], a deterministic in-process
+//! backend, so the harness needs no compiled XLA artifacts and runs in
+//! CI. What IS a metric (restarts, re-dispatches, detection latency,
+//! checkpoint save ms, storm throughput) lands in the `train_faults`
+//! section of BENCH_kernels.json, tracked by `bench-diff`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::checkpoint::CheckpointStore;
+use crate::coordinator::parallel::{EngineOptions, WorkerBackend};
+use crate::coordinator::trainer::Trainer;
+use crate::data::Batch;
+use crate::runtime::{Init, Manifest, MaskSpec, ModelConfig, ParamSpec};
+use crate::tensor::Tensor;
+use crate::util::json::{num, obj, Json};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// fault plan
+// ---------------------------------------------------------------------------
+
+/// One injected fault, fired when a worker picks up the microbatch
+/// whose seed the plan mapped it to.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultAction {
+    /// worker thread vanishes without a response (detected by the
+    /// leader via `JoinHandle::is_finished` / the deadline)
+    Kill,
+    /// worker panics inside the step (caught, reported as `Failed`)
+    Panic,
+    /// worker sleeps this long before answering (past the deadline the
+    /// leader declares it hung and re-dispatches; the late answer is
+    /// discarded by the generation check)
+    Stall(Duration),
+}
+
+/// A seeded schedule of faults keyed on microbatch seeds. Each entry
+/// fires exactly once — the re-dispatched attempt of the same
+/// microbatch runs clean, which is what makes recovery terminate.
+pub struct FaultPlan {
+    planned: Mutex<BTreeMap<i32, FaultAction>>,
+    total: usize,
+    fired: AtomicUsize,
+}
+
+impl FaultPlan {
+    pub fn new(schedule: impl IntoIterator<Item = (i32, FaultAction)>) -> FaultPlan {
+        let planned: BTreeMap<i32, FaultAction> = schedule.into_iter().collect();
+        let total = planned.len();
+        FaultPlan { planned: Mutex::new(planned), total, fired: AtomicUsize::new(0) }
+    }
+
+    /// Scatter `kills + panics + stalls` faults over distinct microbatch
+    /// seeds in `[0, n_microbatches)`, deterministically in `seed`.
+    pub fn seeded(
+        seed: u64,
+        n_microbatches: usize,
+        kills: usize,
+        panics: usize,
+        stalls: usize,
+        stall: Duration,
+    ) -> FaultPlan {
+        assert!(
+            kills + panics + stalls <= n_microbatches,
+            "more faults than microbatches"
+        );
+        let mut rng = Rng::new(seed ^ 0xFA17);
+        let mut planned: BTreeMap<i32, FaultAction> = BTreeMap::new();
+        let mut actions = Vec::with_capacity(kills + panics + stalls);
+        actions.extend(std::iter::repeat(FaultAction::Kill).take(kills));
+        actions.extend(std::iter::repeat(FaultAction::Panic).take(panics));
+        actions.extend(std::iter::repeat(FaultAction::Stall(stall)).take(stalls));
+        for a in actions {
+            loop {
+                let s = rng.below(n_microbatches) as i32;
+                if let std::collections::btree_map::Entry::Vacant(e) = planned.entry(s) {
+                    e.insert(a);
+                    break;
+                }
+            }
+        }
+        let total = planned.len();
+        FaultPlan { planned: Mutex::new(planned), total, fired: AtomicUsize::new(0) }
+    }
+
+    /// Called by a worker about to execute the microbatch with `seed`:
+    /// removes and returns the fault scheduled there, if any.
+    pub fn take(&self, seed: i32) -> Option<FaultAction> {
+        let action = self.planned.lock().expect("fault plan lock").remove(&seed);
+        if action.is_some() {
+            self.fired.fetch_add(1, Ordering::SeqCst);
+        }
+        action
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn fired(&self) -> usize {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    /// Faults still waiting to fire (0 once the storm fully landed).
+    pub fn remaining(&self) -> usize {
+        self.planned.lock().expect("fault plan lock").len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// deterministic simulation backend
+// ---------------------------------------------------------------------------
+
+/// In-process [`WorkerBackend`] whose loss and gradients are a pure
+/// deterministic function of `(params, batch, seed)` — no XLA, no
+/// artifacts. Gradients pull parameters toward zero plus seeded noise,
+/// so the optimizer produces a non-trivial, strictly reproducible loss
+/// trajectory for the bitwise oracles to pin.
+pub struct SimBackend;
+
+impl WorkerBackend for SimBackend {
+    fn load(&mut self, _key: &str, _path: &Path) -> Result<()> {
+        Ok(())
+    }
+
+    fn exec(
+        &mut self,
+        _key: &str,
+        params: &[Tensor],
+        _masks: &[Tensor],
+        batch: &Batch,
+        seed: Option<i32>,
+        grad_shapes: &[Vec<usize>],
+        grads: &mut [Tensor],
+    ) -> Result<f32> {
+        // FNV-1a over the batch tokens and the microbatch seed gives an
+        // rng stream unique to this logical work item, identical no
+        // matter which worker (or which retry) executes it
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        for &t in &batch.tokens {
+            h = (h ^ t as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        if let Some(s) = seed {
+            h = (h ^ s as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        let mut rng = Rng::new(h);
+
+        let mut abs_sum = 0f64;
+        let mut count = 0usize;
+        for p in params {
+            for &v in &p.data {
+                abs_sum += (v as f64).abs();
+            }
+            count += p.len();
+        }
+        let loss = (abs_sum / count.max(1) as f64) as f32 + rng.uniform() * 0.01;
+
+        for ((g, shape), p) in grads.iter_mut().zip(grad_shapes).zip(params) {
+            let n: usize = shape.iter().product();
+            g.shape.clone_from(shape);
+            g.data.clear();
+            g.data.reserve(n);
+            for j in 0..n {
+                let w = p.data.get(j).copied().unwrap_or(0.0);
+                g.data.push(w.signum() * 0.1 + (rng.uniform() - 0.5) * 0.02);
+            }
+        }
+        Ok(loss)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simulated run plumbing
+// ---------------------------------------------------------------------------
+
+/// A tiny in-memory manifest for [`SimBackend`] runs: two sparse
+/// matrices (4-aligned dims for the transposable-mask search) plus a
+/// bias, with every artifact variant named so the trainer's load path
+/// runs unmodified.
+pub fn sim_manifest() -> Manifest {
+    let config = ModelConfig {
+        name: "sim".into(),
+        vocab: 64,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        n_ctx: 8,
+        activation: "gelu".into(),
+        param_count: 16 * 32 + 32 * 16 + 16,
+    };
+    let params = vec![
+        ParamSpec {
+            name: "w_in".into(),
+            shape: vec![16, 32],
+            init: Init::Normal(0.02),
+            sparse: true,
+        },
+        ParamSpec {
+            name: "w_out".into(),
+            shape: vec![32, 16],
+            init: Init::Normal(0.02),
+            sparse: true,
+        },
+        ParamSpec { name: "bias".into(), shape: vec![16], init: Init::Zeros, sparse: false },
+    ];
+    let masks = vec![
+        MaskSpec { name: "w_in.mask".into(), shape: vec![16, 32] },
+        MaskSpec { name: "w_out.mask".into(), shape: vec![32, 16] },
+    ];
+    let mut artifacts = std::collections::BTreeMap::new();
+    for v in ["step_sparse", "step_ste", "step_dense", "eval"] {
+        artifacts.insert(v.to_string(), format!("sim_{v}.hlo"));
+    }
+    Manifest { dir: PathBuf::from("."), config, batch: 2, params, masks, artifacts, n_grads: 3 }
+}
+
+/// Trainer config for simulated fault runs: short schedule, aggressive
+/// supervision deadlines so hang detection is test-speed.
+pub fn sim_config(workers: usize, steps: usize) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.model = "sim".into();
+    c.steps = steps;
+    c.grad_accum = 4;
+    c.workers = workers;
+    c.warmup = 2;
+    c.seed = 42;
+    c.mask_update_interval = 5;
+    c.worker_timeout_ms = 150;
+    c.worker_retries = 3;
+    c
+}
+
+/// Build a simulated trainer: [`SimBackend`] workers, deadlines from
+/// `cfg`, and an optional fault schedule.
+pub fn sim_trainer(
+    workers: usize,
+    steps: usize,
+    faults: Option<Arc<FaultPlan>>,
+) -> Result<Trainer> {
+    let cfg = sim_config(workers, steps);
+    let mut opts = EngineOptions::with_factory(Arc::new(|| {
+        Ok(Box::new(SimBackend) as Box<dyn WorkerBackend>)
+    }));
+    opts.worker_timeout = Duration::from_millis(cfg.worker_timeout_ms);
+    opts.max_attempts = cfg.worker_retries;
+    opts.faults = faults;
+    Trainer::with_manifest(cfg, sim_manifest(), opts)
+}
+
+/// Bitwise equality of two parameter sets (shape and every f32 bit).
+pub fn params_bitwise_equal(a: &[Tensor], b: &[Tensor]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.shape == y.shape
+                && x.data.len() == y.data.len()
+                && x.data.iter().zip(&y.data).all(|(u, v)| u.to_bits() == v.to_bits())
+        })
+}
+
+/// Bitwise equality of two loss trajectories.
+pub fn losses_bitwise_equal(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Step the trainer to `upto`, appending per-step losses, optionally
+/// saving into `store` every `every` steps. Returns checkpoint save
+/// wall-times in ms.
+pub fn drive(
+    tr: &mut Trainer,
+    upto: usize,
+    losses: &mut Vec<f64>,
+    store: Option<&CheckpointStore>,
+    every: usize,
+) -> Result<Vec<f64>> {
+    let mut save_ms = Vec::new();
+    while tr.step_idx < upto {
+        let loss = tr.step()?;
+        losses.push(loss);
+        if let (Some(st), true) = (store, every > 0 && tr.step_idx % every == 0) {
+            let t0 = Instant::now();
+            st.save(&tr.checkpoint())?;
+            save_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    Ok(save_ms)
+}
+
+fn corrupt_tail(path: &Path) -> Result<()> {
+    let mut bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if let Some(b) = bytes.last_mut() {
+        *b ^= 0x01;
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// the bench harness (train --faults)
+// ---------------------------------------------------------------------------
+
+/// Outcome of one full harness run: the human-readable log, the
+/// pass/fail oracles, and the `train_faults` row for
+/// BENCH_kernels.json (`docs/BENCH.md`).
+pub struct FaultBenchReport {
+    pub lines: Vec<String>,
+    pub storm_bitwise_equal: bool,
+    pub invariant_across_workers: bool,
+    pub resume_bitwise_equal: bool,
+    pub threads_clean: bool,
+    pub row: Json,
+}
+
+impl FaultBenchReport {
+    pub fn ok(&self) -> bool {
+        self.storm_bitwise_equal
+            && self.invariant_across_workers
+            && self.resume_bitwise_equal
+            && self.threads_clean
+    }
+}
+
+/// Run the full fault harness: undisturbed baseline, worker-count
+/// invariance, seeded fault storm, and kill-mid-run auto-resume (with a
+/// corrupted newest checkpoint the scan must skip). Deterministic in
+/// `fault_seed`.
+pub fn run_train_fault_bench(quick: bool, fault_seed: u64) -> Result<FaultBenchReport> {
+    let steps = if quick { 12 } else { 24 };
+    let (kills, panics, stalls) = if quick { (2, 1, 1) } else { (3, 3, 2) };
+    let stall = Duration::from_millis(350);
+    let every = if quick { 4 } else { 5 };
+    let mut lines = Vec::new();
+    let mut threads_clean = true;
+    let mut check_threads = |tag: &str,
+                             report: crate::coordinator::parallel::ShutdownReport,
+                             lines: &mut Vec<String>| {
+        if report.spawned != report.joined {
+            threads_clean = false;
+            lines.push(format!(
+                "FAIL {tag}: leaked worker threads (spawned {}, joined {})",
+                report.spawned, report.joined
+            ));
+        }
+    };
+
+    // -- leg 1: undisturbed twin (the oracle trajectory) ------------------
+    let mut tr = sim_trainer(2, steps, None)?;
+    let mut losses_ref = Vec::new();
+    drive(&mut tr, steps, &mut losses_ref, None, 0)?;
+    let params_ref = tr.params.tensors.clone();
+    check_threads("baseline", tr.shutdown_engine(), &mut lines);
+    drop(tr);
+    lines.push(format!(
+        "baseline: {steps} steps x 4 microbatches on 2 workers, final loss {:.6}",
+        losses_ref.last().copied().unwrap_or(f64::NAN)
+    ));
+
+    // -- leg 2: worker-count invariance (1 and 3 workers) -----------------
+    let mut invariant = true;
+    for workers in [1usize, 3] {
+        let mut tr = sim_trainer(workers, steps, None)?;
+        let mut losses = Vec::new();
+        drive(&mut tr, steps, &mut losses, None, 0)?;
+        let same = losses_bitwise_equal(&losses, &losses_ref)
+            && params_bitwise_equal(&tr.params.tensors, &params_ref);
+        check_threads("invariance", tr.shutdown_engine(), &mut lines);
+        if !same {
+            invariant = false;
+        }
+        lines.push(format!(
+            "workers={workers}: trajectory + final params bitwise {} the 2-worker run",
+            if same { "EQUAL to" } else { "DIFFER from" }
+        ));
+    }
+
+    // -- leg 3: seeded fault storm on 3 workers ---------------------------
+    let plan = Arc::new(FaultPlan::seeded(
+        fault_seed,
+        steps * 4,
+        kills,
+        panics,
+        stalls,
+        stall,
+    ));
+    let mut tr = sim_trainer(3, steps, Some(plan.clone()))?;
+    let mut losses_storm = Vec::new();
+    let t0 = Instant::now();
+    drive(&mut tr, steps, &mut losses_storm, None, 0)?;
+    let storm_wall = t0.elapsed().as_secs_f64();
+    let counters = tr.engine_counters();
+    let storm_equal = losses_bitwise_equal(&losses_storm, &losses_ref)
+        && params_bitwise_equal(&tr.params.tensors, &params_ref);
+    check_threads("storm", tr.shutdown_engine(), &mut lines);
+    drop(tr);
+    let detect_ms_mean = counters.detect_ms_total / counters.detect_events.max(1) as f64;
+    lines.push(format!(
+        "storm: {kills} kills + {panics} panics + {stalls} stalls (seed {fault_seed}), \
+         {}/{} fired; {} restarts, {} re-dispatches, {} reported errors, \
+         detection {:.1} ms mean over {} silent deaths",
+        plan.fired(),
+        plan.total(),
+        counters.restarts,
+        counters.redispatched,
+        counters.worker_errors,
+        detect_ms_mean,
+        counters.detect_events,
+    ));
+    lines.push(format!(
+        "storm: trajectory + final params bitwise {} the undisturbed twin",
+        if storm_equal { "EQUAL to" } else { "DIFFER from" }
+    ));
+
+    // -- leg 4: kill mid-run, corrupt newest checkpoint, auto-resume ------
+    let dir = std::env::temp_dir().join(format!(
+        "sparse24_train_faults_{}_{fault_seed}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir)?;
+    let store = CheckpointStore::new(&dir.join("run.ckpt"), 2);
+    let kill_at = steps * 2 / 3 + 1;
+    let mut tr = sim_trainer(2, steps, None)?;
+    let mut losses_pre = Vec::new();
+    let save_ms = drive(&mut tr, kill_at, &mut losses_pre, Some(&store), every)?;
+    check_threads("pre-kill", tr.shutdown_engine(), &mut lines);
+    drop(tr); // the "kill": no final checkpoint, trainer state discarded
+
+    // corrupt the newest stamped file: the auto-resume scan must warn,
+    // skip it, and fall back to the previous valid checkpoint
+    if let Some((_, newest)) = store.list_stamped().last() {
+        corrupt_tail(newest)?;
+    }
+    let (resume_path, ck) = store
+        .latest_valid()
+        .context("auto-resume found no valid checkpoint")?;
+    let resume_step = ck.step;
+    let mut tr = sim_trainer(2, steps, None)?;
+    tr.restore(ck)?;
+    let mut losses_resumed = Vec::new();
+    drive(&mut tr, steps, &mut losses_resumed, None, 0)?;
+    let resume_equal = losses_bitwise_equal(&losses_resumed, &losses_ref[resume_step..])
+        && params_bitwise_equal(&tr.params.tensors, &params_ref);
+    check_threads("resume", tr.shutdown_engine(), &mut lines);
+    drop(tr);
+    std::fs::remove_dir_all(&dir).ok();
+    let save_ms_mean = if save_ms.is_empty() {
+        0.0
+    } else {
+        save_ms.iter().sum::<f64>() / save_ms.len() as f64
+    };
+    lines.push(format!(
+        "resume: killed at step {kill_at}, newest checkpoint corrupted, auto-resumed \
+         from {} (step {resume_step}); rejoined trajectory bitwise {}; \
+         checkpoint save {:.1} ms mean",
+        resume_path.display(),
+        if resume_equal { "EXACTLY" } else { "INCORRECTLY" },
+        save_ms_mean,
+    ));
+
+    let row = obj(vec![
+        ("workers", num(3.0)),
+        ("grad_accum", num(4.0)),
+        ("steps", num(steps as f64)),
+        ("kills", num(kills as f64)),
+        ("panics", num(panics as f64)),
+        ("stalls", num(stalls as f64)),
+        ("steps_per_s", num(steps as f64 / storm_wall.max(1e-9))),
+        ("restarts", num(counters.restarts as f64)),
+        ("redispatched", num(counters.redispatched as f64)),
+        ("worker_errors", num(counters.worker_errors as f64)),
+        ("detect_ms_mean", num(detect_ms_mean)),
+        ("checkpoint_save_ms_mean", num(save_ms_mean)),
+        ("storm_bitwise_equal", Json::Bool(storm_equal)),
+        ("resume_bitwise_equal", Json::Bool(resume_equal)),
+    ]);
+    Ok(FaultBenchReport {
+        lines,
+        storm_bitwise_equal: storm_equal,
+        invariant_across_workers: invariant,
+        resume_bitwise_equal: resume_equal,
+        threads_clean,
+        row,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_distinct() {
+        let a = FaultPlan::seeded(7, 64, 3, 2, 2, Duration::from_millis(10));
+        let b = FaultPlan::seeded(7, 64, 3, 2, 2, Duration::from_millis(10));
+        assert_eq!(a.total(), 7);
+        assert_eq!(b.total(), 7);
+        let mut fired = 0;
+        for s in 0..64 {
+            let (x, y) = (a.take(s), b.take(s));
+            assert_eq!(x.is_some(), y.is_some(), "plans diverge at seed {s}");
+            if let (Some(x), Some(y)) = (x, y) {
+                assert_eq!(
+                    std::mem::discriminant(&x),
+                    std::mem::discriminant(&y),
+                    "actions diverge at seed {s}"
+                );
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 7);
+        assert_eq!(a.remaining(), 0);
+        assert_eq!(a.fired(), 7);
+    }
+
+    #[test]
+    fn plan_entries_fire_once() {
+        let p = FaultPlan::new([(3, FaultAction::Kill)]);
+        assert!(p.take(3).is_some());
+        assert!(p.take(3).is_none(), "retry of the same microbatch must run clean");
+        assert_eq!(p.fired(), 1);
+    }
+
+    #[test]
+    fn sim_backend_is_pure() {
+        let params = vec![Tensor::from_vec(&[4], vec![0.5, -0.25, 0.125, -1.0])];
+        let batch = Batch {
+            batch: 1,
+            n: 4,
+            tokens: vec![5, 9, 2, 7],
+            targets: vec![9, 2, 7, 1],
+        };
+        let shapes = vec![vec![4usize]];
+        let run = || {
+            let mut grads = vec![Tensor::zeros(&[0])];
+            let loss = SimBackend
+                .exec("step", &params, &[], &batch, Some(11), &shapes, &mut grads)
+                .unwrap();
+            (loss, grads)
+        };
+        let (l1, g1) = run();
+        let (l2, g2) = run();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert!(params_bitwise_equal(&g1, &g2));
+        // a different seed must give a different stream
+        let mut g3 = vec![Tensor::zeros(&[0])];
+        let l3 = SimBackend
+            .exec("step", &params, &[], &batch, Some(12), &shapes, &mut g3)
+            .unwrap();
+        assert_ne!(l1.to_bits(), l3.to_bits());
+    }
+}

@@ -2,22 +2,31 @@
 //! engine, the pre-training loop, the decay-factor tuner, and metrics.
 //!
 //! [`Trainer`] owns one run end to end (phases, masks, optimizer,
-//! metrics, checkpoints); [`DataParallel`] scatters microbatches to
-//! PJRT workers and reduces gradients through recycled shell buffers;
-//! [`Tuner`] reproduces the §4.3 fast λ_W determination;
-//! [`Checkpoint`] is the self-describing hand-off format the serve
-//! subsystem freezes from.
+//! metrics, checkpoints); [`DataParallel`] is the supervised
+//! leader/worker engine that scatters microbatches, reduces gradients
+//! through recycled shell buffers, and survives worker deaths, hangs,
+//! and panics by re-dispatching work bitwise-neutrally (see
+//! `parallel.rs`); [`faultgen`] is the seeded trainer fault-injection
+//! harness behind `sparse24 train --faults`; [`Tuner`] reproduces the
+//! §4.3 fast λ_W determination; [`Checkpoint`] is the self-describing,
+//! crash-safe (atomic rename + per-section CRC32) hand-off format the
+//! serve subsystem freezes from, with [`CheckpointStore`] adding
+//! rotation and newest-valid auto-resume scanning.
 
 pub mod checkpoint;
+pub mod faultgen;
 pub mod fst;
 pub mod metrics;
 pub mod parallel;
 pub mod trainer;
 pub mod tuner;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, CheckpointStore};
+pub use faultgen::{FaultAction, FaultPlan};
 pub use fst::{FstState, MaskMode};
 pub use metrics::{MetricsLog, Phase, Profile, StepMetrics};
-pub use parallel::DataParallel;
+pub use parallel::{
+    DataParallel, EngineCounters, EngineOptions, ShutdownReport, WorkerBackend,
+};
 pub use trainer::Trainer;
 pub use tuner::{Tuner, TunerReport};

@@ -1,70 +1,96 @@
-//! Leader/worker execution engine (simulated data parallelism).
+//! Supervised leader/worker execution engine (simulated data parallelism).
 //!
 //! The coordinator is structured as a leader plus N workers, each owning
-//! its own PJRT client + compiled executables (PJRT handles are not Send,
-//! so every worker constructs its runtime inside its own thread). The
-//! leader scatters microbatches round-robin, workers run the step
-//! executable on their shard, and the leader reduces (averages) the
-//! returned gradients — the all-reduce of a data-parallel trainer. With
-//! workers = 1 this degenerates to the plain single-process trainer, which
-//! is the honest configuration on this 1-core testbed; the tests run 2
-//! workers to exercise the scatter/reduce paths.
+//! its own backend (a PJRT client + compiled executables in production —
+//! PJRT handles are not Send, so every worker constructs its runtime
+//! inside its own thread — or any [`WorkerBackend`] a test injects). The
+//! leader scatters microbatches, workers run the step executable on
+//! their shard, and the leader reduces (averages) the returned gradients
+//! — the all-reduce of a data-parallel trainer.
+//!
+//! ## Fault tolerance
+//!
+//! Long pre-training runs make worker failure routine, so the leader is
+//! a supervisor, not a scatter/gather loop:
+//!
+//! * workers wrap execution in `catch_unwind` and report panics as
+//!   [`Out::Failed`] instead of dying silently;
+//! * the leader waits with `recv_timeout` slices and, per in-flight
+//!   microbatch, enforces a deadline (`[train] worker_timeout_ms`) — a
+//!   killed thread is noticed via `JoinHandle::is_finished`, a hung one
+//!   via the deadline;
+//! * a dead/hung/erroring worker's in-flight microbatch is re-dispatched
+//!   from a shadow copy the leader kept (bounded by `[train]
+//!   worker_retries`, then a hard error naming the microbatch and
+//!   worker), and the worker is respawned with its compiled artifacts
+//!   re-loaded — all invisible to the `Trainer` above;
+//! * every superseded worker generation is remembered and joined at
+//!   shutdown, so no thread leaks even through fault storms.
+//!
+//! ## Determinism
+//!
+//! Each microbatch result is a pure function of `(params, masks, batch,
+//! seed)` with `seed = base_seed + index`, independent of which worker
+//! runs it or when. Results are buffered and reduced in strict
+//! microbatch-index order, so `grad_step` is BITWISE invariant across
+//! worker counts, arrival orders, and recoveries — the pinned invariant
+//! the fault-injection harness (`train --faults`) checks end to end.
 
-use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::faultgen::{FaultAction, FaultPlan};
 use crate::data::Batch;
 use crate::runtime::{literal, Runtime};
 use crate::tensor::Tensor;
 
-enum Req {
-    Load { key: String, path: PathBuf },
-    /// run a step executable; returns loss + grads
-    Step {
-        key: String,
-        params: Arc<Vec<Tensor>>,
-        masks: Arc<Vec<Tensor>>,
-        batch: Batch,
-        seed: i32,
-        grad_shapes: Arc<Vec<Vec<usize>>>,
-        /// recycled gradient-output shells: the worker fills these in
-        /// place (`literal_to_tensor_into`) instead of allocating a
-        /// fresh tensor per parameter per step; they ride back in
-        /// `StepOut.grads`. May arrive short/empty (first steps): the
-        /// worker grows the set once and the leader recycles it after.
-        shells: Vec<Tensor>,
-    },
-    /// run the eval executable; returns loss only
-    Eval {
-        key: String,
-        params: Arc<Vec<Tensor>>,
-        masks: Arc<Vec<Tensor>>,
-        batch: Batch,
-    },
-    Shutdown,
+/// Poll granularity of the supervision loop: how often the leader checks
+/// deadlines and dead threads while waiting for results.
+const SLICE: Duration = Duration::from_millis(20);
+
+/// What a worker thread runs. One instance per worker, constructed
+/// inside the worker's own thread by a [`BackendFactory`] (PJRT handles
+/// are not Send). Tests inject deterministic in-process backends.
+pub trait WorkerBackend {
+    /// Compile/register an artifact under `key` (idempotent).
+    fn load(&mut self, key: &str, path: &Path) -> Result<()>;
+
+    /// Execute `key`. `seed = None` means eval (loss only,
+    /// `grad_shapes` empty); otherwise fill `grads` (pre-sized to
+    /// `grad_shapes.len()` shells) in place and return the loss.
+    #[allow(clippy::too_many_arguments)]
+    fn exec(
+        &mut self,
+        key: &str,
+        params: &[Tensor],
+        masks: &[Tensor],
+        batch: &Batch,
+        seed: Option<i32>,
+        grad_shapes: &[Vec<usize>],
+        grads: &mut [Tensor],
+    ) -> Result<f32>;
 }
 
-enum Resp {
-    Loaded,
-    /// `batch` rides back with the result so the leader can recycle its
-    /// buffers into the batcher pool (zero per-microbatch allocation).
-    StepOut { loss: f32, grads: Vec<Tensor>, batch: Batch },
-    EvalOut { loss: f32, batch: Batch },
-    Err(String),
+/// Constructor for per-worker backends; called inside each worker thread
+/// at spawn and respawn.
+pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn WorkerBackend>> + Send + Sync>;
+
+/// Production backend: one PJRT client + compiled-executable cache.
+pub struct XlaBackend {
+    runtime: Runtime,
 }
 
-struct Worker {
-    tx: Sender<Req>,
-    rx: Receiver<Resp>,
-    handle: Option<JoinHandle<()>>,
-}
-
-pub struct DataParallel {
-    workers: Vec<Worker>,
+impl XlaBackend {
+    pub fn new() -> Result<XlaBackend> {
+        Ok(XlaBackend { runtime: Runtime::cpu()? })
+    }
 }
 
 fn build_inputs(
@@ -88,108 +114,615 @@ fn build_inputs(
     Ok(inputs)
 }
 
-fn worker_main(rx: Receiver<Req>, tx: Sender<Resp>) {
-    let mut runtime = match Runtime::cpu() {
-        Ok(r) => r,
+impl WorkerBackend for XlaBackend {
+    fn load(&mut self, key: &str, path: &Path) -> Result<()> {
+        self.runtime.load_hlo(key, path)
+    }
+
+    fn exec(
+        &mut self,
+        key: &str,
+        params: &[Tensor],
+        masks: &[Tensor],
+        batch: &Batch,
+        seed: Option<i32>,
+        grad_shapes: &[Vec<usize>],
+        grads: &mut [Tensor],
+    ) -> Result<f32> {
+        let inputs = build_inputs(params, masks, batch, seed)?;
+        let outs = self.runtime.execute(key, &inputs)?;
+        if !grad_shapes.is_empty() {
+            anyhow::ensure!(
+                outs.len() == 1 + grad_shapes.len(),
+                "step returned {} outputs",
+                outs.len()
+            );
+            // fill the recycled shells in place (`literal_to_tensor_into`)
+            // instead of allocating a fresh tensor per parameter per step
+            for ((lit, shape), g) in
+                outs[1..].iter().zip(grad_shapes.iter()).zip(grads.iter_mut())
+            {
+                literal::literal_to_tensor_into(lit, shape, g)?;
+            }
+        }
+        literal::literal_to_f32(&outs[0])
+    }
+}
+
+/// Construction-time knobs of the engine.
+pub struct EngineOptions {
+    pub factory: BackendFactory,
+    /// injected fault schedule (tests/harness only; None in production)
+    pub faults: Option<Arc<FaultPlan>>,
+    /// per-microbatch response deadline (`[train] worker_timeout_ms`)
+    pub worker_timeout: Duration,
+    /// re-dispatches allowed per microbatch before a hard error
+    /// (`[train] worker_retries`)
+    pub max_attempts: usize,
+}
+
+impl EngineOptions {
+    /// The production configuration: PJRT workers, default supervision.
+    pub fn xla() -> EngineOptions {
+        Self::with_factory(Arc::new(|| {
+            Ok(Box::new(XlaBackend::new()?) as Box<dyn WorkerBackend>)
+        }))
+    }
+
+    pub fn with_factory(factory: BackendFactory) -> EngineOptions {
+        EngineOptions {
+            factory,
+            faults: None,
+            worker_timeout: Duration::from_millis(30_000),
+            max_attempts: 2,
+        }
+    }
+}
+
+/// Lifetime recovery statistics of one engine (mirrored into the obs
+/// registry as `train.worker_restarts` / `train.redispatched_microbatches`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineCounters {
+    /// worker threads spawned (initial + respawns)
+    pub spawned: u64,
+    /// respawns after a detected death/hang/error
+    pub restarts: u64,
+    /// microbatches re-dispatched to another worker
+    pub redispatched: u64,
+    /// errors/panics workers reported (as opposed to silent deaths)
+    pub worker_errors: u64,
+    /// silent-death/hang detections (the events `detect_ms_total` sums)
+    pub detect_events: u64,
+    /// total leader-side detection latency (dispatch -> declared dead), ms
+    pub detect_ms_total: f64,
+}
+
+/// Joined-vs-spawned accounting returned by [`DataParallel::shutdown`];
+/// equal counts prove zero leaked worker threads.
+#[derive(Clone, Copy, Debug)]
+pub struct ShutdownReport {
+    pub spawned: u64,
+    pub joined: u64,
+}
+
+enum Req {
+    Load { key: String, path: PathBuf },
+    Exec(ExecReq),
+    Shutdown,
+}
+
+struct ExecReq {
+    /// microbatch index within the current `grad_step`/`eval` call
+    idx: usize,
+    key: String,
+    params: Arc<Vec<Tensor>>,
+    masks: Arc<Vec<Tensor>>,
+    batch: Batch,
+    /// None = eval
+    seed: Option<i32>,
+    grad_shapes: Arc<Vec<Vec<usize>>>,
+    /// recycled gradient-output shells; the worker fills these in place
+    /// and they ride back in `Out::Done.grads`. May arrive short/empty
+    /// (first steps, post-fault): the worker grows the set once.
+    shells: Vec<Tensor>,
+}
+
+enum Out {
+    Loaded,
+    /// `batch` rides back with the result so the leader can recycle its
+    /// buffers into the batcher pool (zero per-microbatch allocation).
+    Done { idx: usize, loss: f32, grads: Vec<Tensor>, batch: Batch },
+    /// `idx: None` — backend construction or artifact load failed (the
+    /// worker is permanently out); `Some` — that microbatch's execution
+    /// failed or panicked (re-dispatch + respawn).
+    Failed { idx: Option<usize>, error: String },
+}
+
+/// Every worker message carries its slot and generation so the leader
+/// can drop late answers from superseded (hung, since-replaced) workers.
+struct FromWorker {
+    worker: usize,
+    gen: u64,
+    out: Out,
+}
+
+struct WorkerSlot {
+    tx: Sender<Req>,
+    gen: u64,
+    handle: Option<JoinHandle<()>>,
+    /// false = permanently out (backend init failed); never dispatched to
+    alive: bool,
+    /// (microbatch idx, dispatch time) currently running on this worker
+    inflight: Option<(usize, Instant)>,
+    /// leader-side copy of the in-flight batch, recycled across
+    /// dispatches, so a dead worker's microbatch can be re-dispatched
+    shadow: Batch,
+}
+
+pub struct DataParallel {
+    slots: Vec<WorkerSlot>,
+    resp_tx: Sender<FromWorker>,
+    resp_rx: Receiver<FromWorker>,
+    factory: BackendFactory,
+    faults: Option<Arc<FaultPlan>>,
+    timeout: Duration,
+    max_attempts: usize,
+    /// artifacts loaded so far, replayed into respawned workers
+    loaded: Vec<(String, PathBuf)>,
+    /// superseded worker threads, joined at shutdown (a hung worker may
+    /// still be sleeping; joining it inline would block the train loop)
+    zombies: Vec<JoinHandle<()>>,
+    counters: EngineCounters,
+    gen_counter: u64,
+    joined_total: u64,
+}
+
+fn copy_batch_into(dst: &mut Batch, src: &Batch) {
+    dst.batch = src.batch;
+    dst.n = src.n;
+    dst.tokens.clear();
+    dst.tokens.extend_from_slice(&src.tokens);
+    dst.targets.clear();
+    dst.targets.extend_from_slice(&src.targets);
+}
+
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn run_exec(backend: &mut dyn WorkerBackend, req: ExecReq) -> Result<(f32, Vec<Tensor>, Batch)> {
+    let ExecReq { idx: _, key, params, masks, batch, seed, grad_shapes, shells } = req;
+    let mut grads = shells;
+    grads.truncate(grad_shapes.len());
+    while grads.len() < grad_shapes.len() {
+        grads.push(Tensor::zeros(&[0]));
+    }
+    let loss = backend.exec(&key, &params, &masks, &batch, seed, &grad_shapes, &mut grads)?;
+    Ok((loss, grads, batch))
+}
+
+fn worker_main(
+    worker: usize,
+    gen: u64,
+    factory: BackendFactory,
+    faults: Option<Arc<FaultPlan>>,
+    rx: Receiver<Req>,
+    tx: Sender<FromWorker>,
+) {
+    let send = |out: Out| tx.send(FromWorker { worker, gen, out }).is_ok();
+    let mut backend = match factory() {
+        Ok(b) => b,
         Err(e) => {
-            let _ = tx.send(Resp::Err(format!("worker client init: {e:#}")));
+            let _ = send(Out::Failed {
+                idx: None,
+                error: format!("worker backend init: {e:#}"),
+            });
             return;
         }
     };
     while let Ok(req) = rx.recv() {
-        let resp = match req {
+        match req {
             Req::Shutdown => break,
-            Req::Load { key, path } => runtime
-                .load_hlo(&key, &path)
-                .map(|_| Resp::Loaded)
-                .unwrap_or_else(|e| Resp::Err(format!("{e:#}"))),
-            Req::Step { key, params, masks, batch, seed, grad_shapes, shells } => {
-                (|| -> Result<Resp> {
-                    let inputs = build_inputs(&params, &masks, &batch, Some(seed))?;
-                    let outs = runtime.execute(&key, &inputs)?;
-                    anyhow::ensure!(outs.len() == 1 + grad_shapes.len(),
-                                    "step returned {} outputs", outs.len());
-                    let loss = literal::literal_to_f32(&outs[0])?;
-                    // fill the recycled shells in place; grow the set
-                    // only on the first (short) round-trips
-                    let mut grads = shells;
-                    grads.truncate(grad_shapes.len());
-                    while grads.len() < grad_shapes.len() {
-                        grads.push(Tensor::zeros(&[0]));
-                    }
-                    for ((lit, shape), g) in
-                        outs[1..].iter().zip(grad_shapes.iter()).zip(grads.iter_mut())
-                    {
-                        literal::literal_to_tensor_into(lit, shape, g)?;
-                    }
-                    Ok(Resp::StepOut { loss, grads, batch })
-                })()
-                .unwrap_or_else(|e| Resp::Err(format!("{e:#}")))
+            Req::Load { key, path } => {
+                let result = catch_unwind(AssertUnwindSafe(|| backend.load(&key, &path)));
+                let out = match result {
+                    Ok(Ok(())) => Out::Loaded,
+                    Ok(Err(e)) => Out::Failed { idx: None, error: format!("{e:#}") },
+                    Err(p) => Out::Failed {
+                        idx: None,
+                        error: format!("panic loading {key:?}: {}", panic_msg(&*p)),
+                    },
+                };
+                if !send(out) {
+                    break;
+                }
             }
-            Req::Eval { key, params, masks, batch } => {
-                (|| -> Result<Resp> {
-                    let inputs = build_inputs(&params, &masks, &batch, None)?;
-                    let outs = runtime.execute(&key, &inputs)?;
-                    let loss = literal::literal_to_f32(&outs[0])?;
-                    Ok(Resp::EvalOut { loss, batch })
-                })()
-                .unwrap_or_else(|e| Resp::Err(format!("{e:#}")))
+            Req::Exec(req) => {
+                // injected faults key on the microbatch's globally unique
+                // seed, so a schedule fires deterministically regardless
+                // of which worker draws the microbatch
+                let action = match (&faults, req.seed) {
+                    (Some(plan), Some(seed)) => plan.take(seed),
+                    _ => None,
+                };
+                match action {
+                    // vanish without a response: the leader notices via
+                    // is_finished / the deadline
+                    Some(FaultAction::Kill) => return,
+                    Some(FaultAction::Stall(d)) => std::thread::sleep(d),
+                    _ => {}
+                }
+                let inject_panic = matches!(action, Some(FaultAction::Panic));
+                let idx = req.idx;
+                let seed = req.seed;
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    if inject_panic {
+                        // resume_unwind skips the global panic hook, so
+                        // injected storms don't spam stderr; the unwind
+                        // still exercises the catch_unwind recovery path
+                        std::panic::resume_unwind(Box::new(format!(
+                            "injected fault: panic (microbatch seed {seed:?})"
+                        )));
+                    }
+                    run_exec(backend.as_mut(), req)
+                }));
+                let out = match result {
+                    Ok(Ok((loss, grads, batch))) => Out::Done { idx, loss, grads, batch },
+                    Ok(Err(e)) => Out::Failed { idx: Some(idx), error: format!("{e:#}") },
+                    Err(p) => Out::Failed {
+                        idx: Some(idx),
+                        error: format!("worker panicked: {}", panic_msg(&*p)),
+                    },
+                };
+                if !send(out) {
+                    break;
+                }
             }
-        };
-        if tx.send(resp).is_err() {
-            break;
         }
     }
 }
 
 impl DataParallel {
-    pub fn new(n_workers: usize) -> Result<Self> {
+    pub fn new(n_workers: usize, opts: EngineOptions) -> Result<Self> {
         anyhow::ensure!(n_workers >= 1, "need at least one worker");
-        let mut workers = Vec::with_capacity(n_workers);
-        for _ in 0..n_workers {
-            let (req_tx, req_rx) = channel::<Req>();
-            let (resp_tx, resp_rx) = channel::<Resp>();
-            let handle = std::thread::spawn(move || worker_main(req_rx, resp_tx));
-            workers.push(Worker { tx: req_tx, rx: resp_rx, handle: Some(handle) });
+        anyhow::ensure!(!opts.worker_timeout.is_zero(), "worker timeout must be nonzero");
+        let (resp_tx, resp_rx) = channel::<FromWorker>();
+        let mut engine = DataParallel {
+            slots: Vec::with_capacity(n_workers),
+            resp_tx,
+            resp_rx,
+            factory: opts.factory,
+            faults: opts.faults,
+            timeout: opts.worker_timeout,
+            max_attempts: opts.max_attempts,
+            loaded: Vec::new(),
+            zombies: Vec::new(),
+            counters: EngineCounters::default(),
+            gen_counter: 0,
+            joined_total: 0,
+        };
+        for w in 0..n_workers {
+            let slot = engine.spawn_slot(w);
+            engine.slots.push(slot);
         }
-        Ok(DataParallel { workers })
+        Ok(engine)
     }
 
     pub fn n_workers(&self) -> usize {
-        self.workers.len()
+        self.slots.len()
     }
 
-    /// Compile an artifact on every worker.
-    pub fn load(&self, key: &str, path: &PathBuf) -> Result<()> {
-        for w in &self.workers {
-            w.tx
-                .send(Req::Load { key: key.to_string(), path: path.clone() })
-                .map_err(|_| anyhow!("worker channel closed"))?;
+    /// Lifetime recovery statistics (restarts, re-dispatches, latency).
+    pub fn counters(&self) -> EngineCounters {
+        self.counters
+    }
+
+    fn spawn_slot(&mut self, w: usize) -> WorkerSlot {
+        self.gen_counter += 1;
+        let gen = self.gen_counter;
+        let (tx, rx) = channel::<Req>();
+        let factory = self.factory.clone();
+        let faults = self.faults.clone();
+        let resp = self.resp_tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("s24-worker-{w}"))
+            .spawn(move || worker_main(w, gen, factory, faults, rx, resp))
+            .expect("spawning worker thread");
+        self.counters.spawned += 1;
+        WorkerSlot {
+            tx,
+            gen,
+            handle: Some(handle),
+            alive: true,
+            inflight: None,
+            shadow: Batch::empty(),
         }
-        for w in &self.workers {
-            match w.rx.recv().context("worker died during load")? {
-                Resp::Loaded => {}
-                Resp::Err(e) => bail!("worker load failed: {e}"),
-                _ => bail!("unexpected worker response"),
+    }
+
+    /// Replace worker `w` with a fresh generation and replay its
+    /// compiled artifacts. The superseded thread (possibly hung) keeps
+    /// its handle in `zombies`; it self-terminates once its request
+    /// channel drops and is joined at shutdown.
+    fn respawn(&mut self, w: usize) {
+        let fresh = self.spawn_slot(w);
+        let old = std::mem::replace(&mut self.slots[w], fresh);
+        if let Some(h) = old.handle {
+            self.zombies.push(h);
+        }
+        for (key, path) in &self.loaded {
+            let _ = self.slots[w]
+                .tx
+                .send(Req::Load { key: key.clone(), path: path.clone() });
+        }
+        self.counters.restarts += 1;
+        crate::obs::counter("train.worker_restarts").inc();
+    }
+
+    /// A worker failed (`reason`): take back its in-flight microbatch
+    /// from the shadow copy and requeue it (bounded), then respawn or
+    /// retire the worker.
+    #[allow(clippy::too_many_arguments)]
+    fn handle_worker_down(
+        &mut self,
+        w: usize,
+        reason: &str,
+        respawn: bool,
+        silent: bool,
+        queue: &mut VecDeque<(usize, Batch)>,
+        attempts: &mut [usize],
+    ) -> Result<()> {
+        if let Some((idx, since)) = self.slots[w].inflight.take() {
+            if silent {
+                self.counters.detect_events += 1;
+                self.counters.detect_ms_total += since.elapsed().as_secs_f64() * 1e3;
+            }
+            attempts[idx] += 1;
+            if attempts[idx] > self.max_attempts {
+                bail!(
+                    "microbatch {idx} failed after {} attempts, last on worker {w}: {reason}",
+                    attempts[idx]
+                );
+            }
+            let batch = std::mem::replace(&mut self.slots[w].shadow, Batch::empty());
+            queue.push_front((idx, batch));
+            self.counters.redispatched += 1;
+            crate::obs::counter("train.redispatched_microbatches").inc();
+        }
+        if respawn {
+            self.respawn(w);
+        } else {
+            self.slots[w].alive = false;
+        }
+        Ok(())
+    }
+
+    /// Compile an artifact on every worker (and remember it for respawn
+    /// replay).
+    pub fn load(&mut self, key: &str, path: &Path) -> Result<()> {
+        for slot in &self.slots {
+            if slot.alive {
+                slot.tx
+                    .send(Req::Load { key: key.to_string(), path: path.to_path_buf() })
+                    .map_err(|_| anyhow!("worker channel closed during load"))?;
+            }
+        }
+        // artifact compilation can be slow; be generous, but still
+        // detect a worker that died without answering
+        let load_deadline =
+            Instant::now() + (self.timeout * 10).max(Duration::from_secs(120));
+        let mut need: Vec<u64> =
+            self.slots.iter().filter(|s| s.alive).map(|s| s.gen).collect();
+        while !need.is_empty() {
+            match self.resp_rx.recv_timeout(SLICE) {
+                Ok(FromWorker { worker, gen, out }) => {
+                    if self.slots.get(worker).map(|s| s.gen) != Some(gen) {
+                        continue; // superseded generation
+                    }
+                    match out {
+                        Out::Loaded => need.retain(|&g| g != gen),
+                        Out::Failed { error, .. } => {
+                            bail!("worker {worker} failed to load {key:?}: {error}")
+                        }
+                        Out::Done { .. } => bail!("unexpected worker response during load"),
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if Instant::now() >= load_deadline {
+                        bail!("timed out loading {key:?} on workers");
+                    }
+                    for (w, s) in self.slots.iter().enumerate() {
+                        if s.alive
+                            && need.contains(&s.gen)
+                            && s.handle.as_ref().map_or(true, |h| h.is_finished())
+                        {
+                            bail!("worker {w} died while loading {key:?}");
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("worker response channel closed")
+                }
+            }
+        }
+        self.loaded.push((key.to_string(), path.to_path_buf()));
+        Ok(())
+    }
+
+    /// The supervision core shared by [`Self::grad_step`] and
+    /// [`Self::eval`]: dispatch microbatches to idle workers, detect
+    /// failures, re-dispatch, and deliver results to `on_result` in
+    /// strict microbatch-index order (the determinism invariant).
+    /// `on_result` may return a spent gradient-shell set to recycle.
+    #[allow(clippy::too_many_arguments)]
+    fn supervise<F>(
+        &mut self,
+        key: &str,
+        params: &Arc<Vec<Tensor>>,
+        masks: &Arc<Vec<Tensor>>,
+        batches: Vec<Batch>,
+        base_seed: Option<i32>,
+        grad_shapes: &Arc<Vec<Vec<usize>>>,
+        mut grad_pool: Option<&mut Vec<Vec<Tensor>>>,
+        mut on_result: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, f32, Vec<Tensor>, Batch) -> Option<Vec<Tensor>>,
+    {
+        let n = batches.len();
+        let mut queue: VecDeque<(usize, Batch)> =
+            batches.into_iter().enumerate().collect();
+        let mut attempts = vec![0usize; n];
+        let mut done = vec![false; n];
+        let mut n_done = 0usize;
+        // out-of-order arrivals wait here so `on_result` always folds in
+        // microbatch-index order
+        let mut pending: BTreeMap<usize, (f32, Vec<Tensor>, Batch)> = BTreeMap::new();
+        let mut next_emit = 0usize;
+
+        while n_done < n {
+            // dispatch queued microbatches to idle live workers
+            while !queue.is_empty() {
+                let Some(w) = self
+                    .slots
+                    .iter()
+                    .position(|s| s.alive && s.inflight.is_none())
+                else {
+                    break;
+                };
+                let (idx, batch) = queue.pop_front().expect("queue non-empty");
+                copy_batch_into(&mut self.slots[w].shadow, &batch);
+                let shells = match (&mut grad_pool, base_seed) {
+                    (Some(pool), Some(_)) => pool.pop().unwrap_or_default(),
+                    _ => Vec::new(),
+                };
+                let req = Req::Exec(ExecReq {
+                    idx,
+                    key: key.to_string(),
+                    params: params.clone(),
+                    masks: masks.clone(),
+                    batch,
+                    seed: base_seed.map(|b| b.wrapping_add(idx as i32)),
+                    grad_shapes: grad_shapes.clone(),
+                    shells,
+                });
+                match self.slots[w].tx.send(req) {
+                    Ok(()) => self.slots[w].inflight = Some((idx, Instant::now())),
+                    Err(send_err) => {
+                        // worker died between calls: recover the batch
+                        // from the bounced request and respawn
+                        if let Req::Exec(r) = send_err.0 {
+                            queue.push_front((r.idx, r.batch));
+                        }
+                        self.respawn(w);
+                    }
+                }
+            }
+            if !self.slots.iter().any(|s| s.alive) {
+                bail!("no live workers left ({} of {n} microbatches unfinished)", n - n_done);
+            }
+
+            match self.resp_rx.recv_timeout(SLICE) {
+                Ok(FromWorker { worker, gen, out }) => {
+                    if self.slots.get(worker).map(|s| s.gen) != Some(gen) {
+                        // late answer from a superseded (hung) worker
+                        // whose microbatch was already re-dispatched
+                        continue;
+                    }
+                    match out {
+                        Out::Loaded => {} // replayed-artifact ack from a respawn
+                        Out::Done { idx, loss, grads, batch } => {
+                            self.slots[worker].inflight = None;
+                            if done[idx] {
+                                continue;
+                            }
+                            done[idx] = true;
+                            n_done += 1;
+                            pending.insert(idx, (loss, grads, batch));
+                            while let Some((loss, grads, batch)) =
+                                pending.remove(&next_emit)
+                            {
+                                let spent = on_result(next_emit, loss, grads, batch);
+                                if let (Some(pool), Some(s)) = (&mut grad_pool, spent) {
+                                    pool.push(s);
+                                }
+                                next_emit += 1;
+                            }
+                        }
+                        Out::Failed { idx: Some(_), error } => {
+                            self.counters.worker_errors += 1;
+                            self.handle_worker_down(
+                                worker, &error, true, false, &mut queue, &mut attempts,
+                            )?;
+                        }
+                        Out::Failed { idx: None, error } => {
+                            // backend init / artifact reload failed —
+                            // respawning would loop, retire the worker
+                            eprintln!("warning: worker {worker} is out: {error}");
+                            self.handle_worker_down(
+                                worker, &error, false, false, &mut queue, &mut attempts,
+                            )?;
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // silent deaths (killed thread) and hangs (deadline)
+                    let now = Instant::now();
+                    for w in 0..self.slots.len() {
+                        let Some((_, since)) = self.slots[w].inflight else {
+                            continue;
+                        };
+                        let dead = self.slots[w]
+                            .handle
+                            .as_ref()
+                            .map_or(true, |h| h.is_finished());
+                        if dead {
+                            self.handle_worker_down(
+                                w,
+                                "worker thread died mid-step",
+                                true,
+                                true,
+                                &mut queue,
+                                &mut attempts,
+                            )?;
+                        } else if now.duration_since(since) >= self.timeout {
+                            let reason =
+                                format!("no response within {:?} (hung)", self.timeout);
+                            self.handle_worker_down(
+                                w, &reason, true, true, &mut queue, &mut attempts,
+                            )?;
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("worker response channel closed")
+                }
             }
         }
         Ok(())
     }
 
     /// Scatter microbatches across workers, reduce to (mean loss,
-    /// mean grads). `grad_shapes` describe the per-param outputs.
-    /// `recycle`, when given, receives the batches back from the workers
-    /// so the trainer can refill them next step without allocating.
-    /// `grad_pool`, when given, supplies recycled gradient shell sets
-    /// (one per microbatch) that the workers fill IN PLACE and the
-    /// reduction returns after summing — with it, a steady-state step
-    /// allocates no gradient storage at all (the returned reduced set is
-    /// the caller's to give back to the pool after the optimizer
-    /// update). Without it, shells start empty and the workers size them
-    /// (the old per-step allocation behavior, kept for one-shot probes).
+    /// mean grads) — summed in microbatch-index order, so the result is
+    /// bitwise invariant across worker counts and fault recoveries.
+    /// `grad_shapes` describe the per-param outputs. `recycle`, when
+    /// given, receives the batches back from the workers so the trainer
+    /// can refill them next step without allocating. `grad_pool`, when
+    /// given, supplies recycled gradient shell sets (one per microbatch)
+    /// that the workers fill IN PLACE and the reduction returns after
+    /// summing — with it, a steady-state step allocates no gradient
+    /// storage at all (the returned reduced set is the caller's to give
+    /// back to the pool after the optimizer update). Without it, shells
+    /// start empty and the workers size them (the old per-step
+    /// allocation behavior, kept for one-shot probes).
     #[allow(clippy::too_many_arguments)]
     pub fn grad_step(
-        &self,
+        &mut self,
         key: &str,
         params: Arc<Vec<Tensor>>,
         masks: Arc<Vec<Tensor>>,
@@ -197,65 +730,44 @@ impl DataParallel {
         base_seed: i32,
         grad_shapes: Arc<Vec<Vec<usize>>>,
         mut recycle: Option<&mut Vec<Batch>>,
-        mut grad_pool: Option<&mut Vec<Vec<Tensor>>>,
+        grad_pool: Option<&mut Vec<Vec<Tensor>>>,
     ) -> Result<(f64, Vec<Tensor>)> {
         anyhow::ensure!(!batches.is_empty(), "no microbatches");
         let n_batches = batches.len();
-        // scatter round-robin
-        let mut counts = vec![0usize; self.workers.len()];
-        for (i, batch) in batches.into_iter().enumerate() {
-            let w = i % self.workers.len();
-            counts[w] += 1;
-            let shells = grad_pool
-                .as_mut()
-                .and_then(|p| p.pop())
-                .unwrap_or_default();
-            self.workers[w]
-                .tx
-                .send(Req::Step {
-                    key: key.to_string(),
-                    params: params.clone(),
-                    masks: masks.clone(),
-                    batch,
-                    seed: base_seed.wrapping_add(i as i32),
-                    grad_shapes: grad_shapes.clone(),
-                    shells,
-                })
-                .map_err(|_| anyhow!("worker channel closed"))?;
-        }
-        // gather + reduce
         let mut loss_sum = 0f64;
         let mut grad_sum: Option<Vec<Tensor>> = None;
-        for (w, &c) in self.workers.iter().zip(&counts) {
-            for _ in 0..c {
-                match w.rx.recv().context("worker died during step")? {
-                    Resp::StepOut { loss, grads, batch } => {
-                        loss_sum += loss as f64;
-                        if let Some(pool) = recycle.as_mut() {
-                            pool.push(batch);
-                        }
-                        match &mut grad_sum {
-                            None => grad_sum = Some(grads),
-                            Some(acc) => {
-                                for (a, g) in acc.iter_mut().zip(&grads) {
-                                    for (x, y) in a.data.iter_mut().zip(&g.data) {
-                                        *x += *y;
-                                    }
-                                }
-                                // summed: the shell set goes back to
-                                // the pool for next step's scatter
-                                if let Some(pool) = grad_pool.as_mut() {
-                                    pool.push(grads);
-                                }
+        self.supervise(
+            key,
+            &params,
+            &masks,
+            batches,
+            Some(base_seed),
+            &grad_shapes,
+            grad_pool,
+            |_, loss, grads, batch| {
+                loss_sum += loss as f64;
+                if let Some(pool) = recycle.as_mut() {
+                    pool.push(batch);
+                }
+                match &mut grad_sum {
+                    None => {
+                        grad_sum = Some(grads);
+                        None
+                    }
+                    Some(acc) => {
+                        for (a, g) in acc.iter_mut().zip(&grads) {
+                            for (x, y) in a.data.iter_mut().zip(&g.data) {
+                                *x += *y;
                             }
                         }
+                        // summed: the shell set goes back to the pool
+                        // for next step's scatter
+                        Some(grads)
                     }
-                    Resp::Err(e) => bail!("worker step failed: {e}"),
-                    _ => bail!("unexpected worker response"),
                 }
-            }
-        }
-        let mut grads = grad_sum.expect("at least one batch");
+            },
+        )?;
+        let mut grads = grad_sum.expect("at least one microbatch");
         let scale = 1.0 / n_batches as f32;
         for g in grads.iter_mut() {
             for v in g.data.iter_mut() {
@@ -265,9 +777,10 @@ impl DataParallel {
         Ok((loss_sum / n_batches as f64, grads))
     }
 
-    /// Mean eval loss over the given batches (scattered like grad_step).
+    /// Mean eval loss over the given batches (supervised like grad_step,
+    /// reduced in batch-index order).
     pub fn eval(
-        &self,
+        &mut self,
         key: &str,
         params: Arc<Vec<Tensor>>,
         masks: Arc<Vec<Tensor>>,
@@ -276,48 +789,184 @@ impl DataParallel {
     ) -> Result<f64> {
         anyhow::ensure!(!batches.is_empty(), "no eval batches");
         let n = batches.len();
-        let mut counts = vec![0usize; self.workers.len()];
-        for (i, batch) in batches.into_iter().enumerate() {
-            let w = i % self.workers.len();
-            counts[w] += 1;
-            self.workers[w]
-                .tx
-                .send(Req::Eval {
-                    key: key.to_string(),
-                    params: params.clone(),
-                    masks: masks.clone(),
-                    batch,
-                })
-                .map_err(|_| anyhow!("worker channel closed"))?;
-        }
         let mut sum = 0f64;
-        for (w, &c) in self.workers.iter().zip(&counts) {
-            for _ in 0..c {
-                match w.rx.recv().context("worker died during eval")? {
-                    Resp::EvalOut { loss, batch } => {
-                        sum += loss as f64;
-                        if let Some(pool) = recycle.as_mut() {
-                            pool.push(batch);
-                        }
-                    }
-                    Resp::Err(e) => bail!("worker eval failed: {e}"),
-                    _ => bail!("unexpected worker response"),
+        let empty_shapes: Arc<Vec<Vec<usize>>> = Arc::new(Vec::new());
+        self.supervise(
+            key,
+            &params,
+            &masks,
+            batches,
+            None,
+            &empty_shapes,
+            None,
+            |_, loss, _grads, batch| {
+                sum += loss as f64;
+                if let Some(pool) = recycle.as_mut() {
+                    pool.push(batch);
                 }
+                None
+            },
+        )?;
+        Ok(sum / n as f64)
+    }
+
+    /// Stop all workers and join every thread this engine ever spawned
+    /// (current generations AND superseded zombies). Equal
+    /// spawned/joined counts in the report prove zero leaked threads.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) -> ShutdownReport {
+        for slot in &self.slots {
+            let _ = slot.tx.send(Req::Shutdown);
+        }
+        let mut joined = self.joined_total;
+        for slot in self.slots.iter_mut() {
+            if let Some(h) = slot.handle.take() {
+                let _ = h.join();
+                joined += 1;
             }
         }
-        Ok(sum / n as f64)
+        for h in self.zombies.drain(..) {
+            let _ = h.join();
+            joined += 1;
+        }
+        self.joined_total = joined;
+        self.slots.clear();
+        ShutdownReport { spawned: self.counters.spawned, joined }
     }
 }
 
 impl Drop for DataParallel {
     fn drop(&mut self) {
-        for w in &self.workers {
-            let _ = w.tx.send(Req::Shutdown);
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic in-process backend: loss and grads are a pure
+    /// function of (params, batch, seed); `fail_seed` errors every time
+    /// that microbatch seed is attempted (retry-exhaustion coverage).
+    struct MockBackend {
+        fail_seed: Option<i32>,
+    }
+
+    impl WorkerBackend for MockBackend {
+        fn load(&mut self, _key: &str, _path: &Path) -> Result<()> {
+            Ok(())
         }
-        for w in self.workers.iter_mut() {
-            if let Some(h) = w.handle.take() {
-                let _ = h.join();
+
+        fn exec(
+            &mut self,
+            _key: &str,
+            params: &[Tensor],
+            _masks: &[Tensor],
+            batch: &Batch,
+            seed: Option<i32>,
+            grad_shapes: &[Vec<usize>],
+            grads: &mut [Tensor],
+        ) -> Result<f32> {
+            let seed = seed.unwrap_or(-1);
+            if self.fail_seed == Some(seed) {
+                bail!("mock failure (seed {seed})");
+            }
+            let mut h = 2166136261u32; // FNV-1a over the inputs
+            for &t in &batch.tokens {
+                h = (h ^ t as u32).wrapping_mul(16777619);
+            }
+            h = (h ^ seed as u32).wrapping_mul(16777619);
+            let loss = (h % 1000) as f32 / 1000.0 + params[0].data[0];
+            for (g, shape) in grads.iter_mut().zip(grad_shapes) {
+                let count: usize = shape.iter().product();
+                g.shape.clone_from(shape);
+                g.data.clear();
+                g.data.resize(count, 0.0);
+                for (j, v) in g.data.iter_mut().enumerate() {
+                    *v = loss * 0.5 + j as f32 * 0.25 + seed as f32;
+                }
+            }
+            Ok(loss)
+        }
+    }
+
+    fn mock_options(fail_seed: Option<i32>) -> EngineOptions {
+        let mut opts = EngineOptions::with_factory(Arc::new(move || {
+            Ok(Box::new(MockBackend { fail_seed }) as Box<dyn WorkerBackend>)
+        }));
+        opts.worker_timeout = Duration::from_millis(500);
+        opts
+    }
+
+    fn mk_batch(tag: i32) -> Batch {
+        Batch {
+            batch: 1,
+            n: 4,
+            tokens: vec![tag, tag + 1, tag + 2, tag + 3],
+            targets: vec![tag + 1, tag + 2, tag + 3, tag + 4],
+        }
+    }
+
+    fn run_once(workers: usize) -> (f64, Vec<Tensor>) {
+        let mut engine = DataParallel::new(workers, mock_options(None)).unwrap();
+        let params = Arc::new(vec![Tensor::from_vec(&[2], vec![0.25, -0.5])]);
+        let masks = Arc::new(Vec::new());
+        let shapes = Arc::new(vec![vec![2usize, 2]]);
+        let batches: Vec<Batch> = (0..5).map(|i| mk_batch(i * 10)).collect();
+        let out = engine
+            .grad_step("step", params, masks, batches, 7, shapes, None, None)
+            .unwrap();
+        let report = engine.shutdown();
+        assert_eq!(report.spawned, report.joined, "leaked worker threads");
+        out
+    }
+
+    #[test]
+    fn grad_step_bitwise_invariant_across_worker_counts() {
+        let (l1, g1) = run_once(1);
+        for workers in [2usize, 3] {
+            let (l, g) = run_once(workers);
+            assert_eq!(l.to_bits(), l1.to_bits(), "loss differs at {workers} workers");
+            assert_eq!(g.len(), g1.len());
+            for (a, b) in g.iter().zip(&g1) {
+                assert_eq!(a.shape, b.shape);
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "grads differ at {workers} workers");
+                }
             }
         }
+    }
+
+    #[test]
+    fn deterministic_failure_exhausts_retries_with_named_error() {
+        let mut engine = DataParallel::new(2, mock_options(Some(9))).unwrap();
+        let params = Arc::new(vec![Tensor::from_vec(&[2], vec![0.1, 0.2])]);
+        let masks = Arc::new(Vec::new());
+        let shapes = Arc::new(vec![vec![2usize]]);
+        let batches: Vec<Batch> = (0..3).map(|i| mk_batch(i * 5)).collect();
+        // base_seed 7 => microbatch 2 runs at seed 9 and always fails
+        let err = engine
+            .grad_step("step", params, masks, batches, 7, shapes, None, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("microbatch 2"), "{err}");
+        assert!(err.contains("attempts"), "{err}");
+        let c = engine.counters();
+        assert!(c.redispatched >= 2, "bounded retries exercised: {c:?}");
+        assert!(c.restarts >= 2, "failed worker respawned: {c:?}");
+        let report = engine.shutdown();
+        assert_eq!(report.spawned, report.joined, "leaked worker threads");
+    }
+
+    #[test]
+    fn eval_reduces_in_index_order() {
+        let mut e1 = DataParallel::new(1, mock_options(None)).unwrap();
+        let mut e3 = DataParallel::new(3, mock_options(None)).unwrap();
+        let params = Arc::new(vec![Tensor::from_vec(&[1], vec![0.75])]);
+        let masks = Arc::new(Vec::new());
+        let batches = || (0..6).map(|i| mk_batch(i * 3)).collect::<Vec<_>>();
+        let a = e1.eval("eval", params.clone(), masks.clone(), batches(), None).unwrap();
+        let b = e3.eval("eval", params, masks, batches(), None).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 }

@@ -22,7 +22,9 @@ use anyhow::{bail, Context, Result};
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::fst::{FstState, MaskMode};
 use crate::coordinator::metrics::{MetricsLog, Phase, Profile, StepMetrics};
-use crate::coordinator::parallel::DataParallel;
+use crate::coordinator::parallel::{
+    DataParallel, EngineCounters, EngineOptions, ShutdownReport,
+};
 use crate::data::{Batch, Batcher, SyntheticLm};
 use crate::model::ParamStore;
 use crate::optim::{AdamW, AdamWConfig, DecayPlacement, Schedule};
@@ -84,13 +86,31 @@ impl Trainer {
                 cfg.sparse_mode, cfg.sparse_mode, cfg.sparse_mode
             );
         }
-        cfg.apply_kernel_settings();
         let dir = std::path::Path::new(&cfg.artifacts_dir);
         let name = Self::manifest_name(&cfg);
         let manifest = Manifest::load_config(dir, &name)
             .with_context(|| format!("loading manifest for {name:?} — run `make artifacts`"))?;
+        let mut opts = EngineOptions::xla();
+        opts.worker_timeout = std::time::Duration::from_millis(cfg.worker_timeout_ms);
+        opts.max_attempts = cfg.worker_retries;
+        Self::with_manifest(cfg, manifest, opts)
+    }
 
-        let engine = DataParallel::new(cfg.workers)?;
+    /// Build a trainer over an explicit manifest and engine options —
+    /// the injection point the fault harness (`coordinator/faultgen.rs`)
+    /// uses to swap the PJRT workers for a deterministic in-process
+    /// backend. [`Trainer::new`] is this plus manifest loading from
+    /// `cfg.artifacts_dir` and XLA engine options.
+    pub fn with_manifest(
+        mut cfg: TrainConfig,
+        manifest: Manifest,
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        cfg.normalize();
+        cfg.validate()?;
+        cfg.apply_kernel_settings();
+
+        let mut engine = DataParallel::new(cfg.workers, opts)?;
         for variant in Self::variants_needed(&cfg) {
             let path = manifest.artifact_path(variant)?;
             engine.load(variant, &path)?;
@@ -391,17 +411,23 @@ impl Trainer {
     }
 
     /// Run the full configured schedule. `on_step(trainer, loss)` fires
-    /// after every optimizer step (progress printing, early stopping).
-    pub fn train_with(&mut self, mut on_step: impl FnMut(&Trainer, f64)) -> Result<()> {
+    /// after every optimizer step; returning `false` stops the run early
+    /// (the SIGTERM drain path: finish the step, checkpoint, exit).
+    pub fn train_with(
+        &mut self,
+        mut on_step: impl FnMut(&Trainer, f64) -> bool,
+    ) -> Result<()> {
         while self.step_idx < self.cfg.steps {
             let loss = self.step()?;
-            on_step(self, loss);
+            if !on_step(self, loss) {
+                break;
+            }
         }
         Ok(())
     }
 
     pub fn train(&mut self) -> Result<()> {
-        self.train_with(|_, _| {})
+        self.train_with(|_, _| true)
     }
 
     /// Run at most `n` further optimizer steps (checkpoint-interval
@@ -454,15 +480,80 @@ impl Trainer {
     pub fn resume(cfg: TrainConfig, path: &std::path::Path) -> Result<Trainer> {
         let ck = crate::coordinator::Checkpoint::load(path)?;
         let mut tr = Trainer::new(cfg)?;
+        tr.restore(ck)?;
+        Ok(tr)
+    }
+
+    /// Restore a loaded checkpoint into this trainer. Every section is
+    /// validated against the manifest BEFORE any state is assigned —
+    /// param shapes, optimizer-state lengths, mask dimensions, flip
+    /// histories — so a mismatched checkpoint is a clear error naming
+    /// the offending entry instead of a silent misload or a later panic.
+    pub fn restore(&mut self, ck: crate::coordinator::Checkpoint) -> Result<()> {
         anyhow::ensure!(
-            ck.manifest_name == Self::manifest_name(&tr.cfg),
+            ck.manifest_name == Self::manifest_name(&self.cfg),
             "checkpoint is for {:?}, config wants {:?}",
             ck.manifest_name,
-            Self::manifest_name(&tr.cfg)
+            Self::manifest_name(&self.cfg)
         );
-        anyhow::ensure!(ck.params.len() == tr.params.tensors.len(), "param count mismatch");
-        tr.params.tensors = ck.params;
-        for ((opt, m), (v, t)) in tr
+        let n = self.params.tensors.len();
+        anyhow::ensure!(
+            ck.params.len() == n,
+            "checkpoint has {} params, manifest wants {n}",
+            ck.params.len()
+        );
+        for (i, (p, spec)) in ck.params.iter().zip(&self.manifest.params).enumerate() {
+            anyhow::ensure!(
+                p.shape == spec.shape,
+                "checkpoint param {i} ({}) has shape {:?}, manifest wants {:?}",
+                spec.name,
+                p.shape,
+                spec.shape
+            );
+        }
+        anyhow::ensure!(
+            ck.opt_m.len() == n && ck.opt_v.len() == n && ck.opt_t.len() == n,
+            "checkpoint optimizer state covers {}/{}/{} params, manifest wants {n}",
+            ck.opt_m.len(),
+            ck.opt_v.len(),
+            ck.opt_t.len()
+        );
+        for (i, spec) in self.manifest.params.iter().enumerate() {
+            let want: usize = spec.shape.iter().product();
+            anyhow::ensure!(
+                ck.opt_m[i].len() == want && ck.opt_v[i].len() == want,
+                "checkpoint optimizer state for param {i} ({}) has {}/{} elements, \
+                 the parameter has {want}",
+                spec.name,
+                ck.opt_m[i].len(),
+                ck.opt_v[i].len()
+            );
+        }
+        anyhow::ensure!(
+            ck.masks.len() == self.fst.masks.len(),
+            "checkpoint has {} masks, manifest wants {}",
+            ck.masks.len(),
+            self.fst.masks.len()
+        );
+        for (k, (m, spec)) in ck.masks.iter().zip(&self.manifest.masks).enumerate() {
+            anyhow::ensure!(
+                spec.shape == [m.rows, m.cols],
+                "checkpoint mask {k} ({}) is {}x{}, manifest wants {:?}",
+                spec.name,
+                m.rows,
+                m.cols,
+                spec.shape
+            );
+        }
+        anyhow::ensure!(
+            ck.flip_histories.len() == self.fst.monitors.len(),
+            "checkpoint has {} flip histories, trainer has {} monitors",
+            ck.flip_histories.len(),
+            self.fst.monitors.len()
+        );
+
+        self.params.tensors = ck.params;
+        for ((opt, m), (v, t)) in self
             .opts
             .iter_mut()
             .zip(&ck.opt_m)
@@ -470,11 +561,11 @@ impl Trainer {
         {
             opt.load_state(m, v, *t);
         }
-        tr.fst.masks = ck.masks;
-        tr.fst.mode = if ck.mask_mode_ones { MaskMode::Ones } else { MaskMode::Sparse };
-        tr.fst.refresh_count = ck.refresh_count;
-        let params = &tr.params;
-        let fst = &mut tr.fst;
+        self.fst.masks = ck.masks;
+        self.fst.mode = if ck.mask_mode_ones { MaskMode::Ones } else { MaskMode::Sparse };
+        self.fst.refresh_count = ck.refresh_count;
+        let params = &self.params;
+        let fst = &mut self.fst;
         let sparse_idx = fst.sparse_idx.clone();
         for ((mon, hist), &pi) in
             fst.monitors.iter_mut().zip(ck.flip_histories).zip(&sparse_idx)
@@ -482,11 +573,24 @@ impl Trainer {
             mon.history = hist;
             mon.seed_from(&params.tensors[pi]);
         }
-        tr.batcher.restore_rng(ck.train_rng, ck.val_rng);
-        tr.masks_cache = None;
-        tr.step_idx = ck.step;
-        tr.sparse_steps_since_refresh = ck.sparse_steps_since_refresh;
-        Ok(tr)
+        self.batcher.restore_rng(ck.train_rng, ck.val_rng);
+        self.masks_cache = None;
+        self.step_idx = ck.step;
+        self.sparse_steps_since_refresh = ck.sparse_steps_since_refresh;
+        Ok(())
+    }
+
+    /// The engine's lifetime recovery counters (restarts, re-dispatches,
+    /// detection latency) — the fault harness's metrics source.
+    pub fn engine_counters(&self) -> EngineCounters {
+        self.engine.counters()
+    }
+
+    /// Stop and join every worker thread the engine ever spawned; the
+    /// report's equal spawned/joined counts prove zero leaked threads.
+    /// The trainer cannot step after this.
+    pub fn shutdown_engine(&mut self) -> ShutdownReport {
+        self.engine.shutdown()
     }
 
     /// Gradient-only probe used by tests: one microbatch, no update.

@@ -20,6 +20,8 @@
 //! Examples:
 //!   sparse24 train --config configs/e2e_ours.toml
 //!   sparse24 train --set model.config=nano --set train.steps=50
+//!   sparse24 train --checkpoint run.ckpt --keep-checkpoints 3 --resume-auto
+//!   sparse24 train --faults --quick
 //!   sparse24 tune-decay --config configs/nano_ours.toml --probe-steps 30
 //!   sparse24 speedup --ffn --out results/fig7a.csv
 //!   sparse24 inspect --model nano
@@ -40,7 +42,8 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use sparse24::config::{ServeConfig, TrainConfig};
-use sparse24::coordinator::{Checkpoint, Trainer, Tuner};
+use sparse24::coordinator::faultgen::run_train_fault_bench;
+use sparse24::coordinator::{Checkpoint, CheckpointStore, Trainer, Tuner};
 use sparse24::model::ModelDims;
 use sparse24::obs;
 use sparse24::runtime::Manifest;
@@ -52,7 +55,7 @@ use sparse24::serve::{
 use sparse24::sparse::{kernels, workloads, SparseMode};
 use sparse24::util::bench::{
     kernel_bench_regressions, obs_bench_regressions, repo_root_file,
-    serve_bench_regressions, write_json_section_at,
+    serve_bench_regressions, train_bench_regressions, write_json_section_at,
 };
 use sparse24::util::json::{num, obj, Json};
 use sparse24::util::write_csv;
@@ -231,7 +234,9 @@ fn print_usage() {
          USAGE: sparse24 <command> [options]\n\n\
          COMMANDS:\n\
            train        --config <toml> [--set sec.key=value ...] [--out <csv>]\n\
-                        [--checkpoint <file> [--checkpoint-every N]] [--resume <file>]\n\
+                        [--checkpoint <file> [--checkpoint-every N]\n\
+                        [--keep-checkpoints K]] [--resume <file> | --resume-auto]\n\
+                        [--faults [--quick] [--fault-seed S]]\n\
                         [--sparse-mode weight|activation|both]\n\
                         [--trace <json>] [--metrics <jsonl>]\n\
            tune-decay   --config <toml> [--probe-steps N] [--out <csv>]\n\
@@ -712,6 +717,25 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
             threshold * 100.0
         );
     }
+    // fault-recovery throughput gate: the train_faults section tracks
+    // steps/s of the storm leg of `train --faults`
+    let train_warnings = train_bench_regressions(&path, threshold)?;
+    if train_warnings.is_empty() {
+        println!(
+            "bench-diff: no fault-recovery steps/s regressions > {:.0}% in {}",
+            threshold * 100.0,
+            path.display()
+        );
+    } else {
+        for w in &train_warnings {
+            println!("WARNING: perf regression: {w}");
+        }
+        println!(
+            "bench-diff: {} fault config(s) regressed > {:.0}% vs the previous run",
+            train_warnings.len(),
+            threshold * 100.0
+        );
+    }
     Ok(())
 }
 
@@ -760,20 +784,48 @@ fn load_config(opts: &BTreeMap<String, Vec<String>>) -> Result<TrainConfig> {
     TrainConfig::from_toml(&text)
 }
 
+/// Set by the SIGTERM/SIGINT handler installed for `train`: the step
+/// loop finishes the step in flight, writes a final checkpoint, and
+/// exits cleanly instead of dying mid-save.
+static TRAIN_SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_train_signal_handler() {
+    extern "C" fn on_signal(_sig: i32) {
+        TRAIN_SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal);
+        signal(SIGINT, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_train_signal_handler() {}
+
 fn cmd_train(args: &[String]) -> Result<()> {
-    let (_flags, mut opts, _) = parse_args(
+    let (flags, mut opts, _) = parse_args(
         args,
         &[
-            "config", "set", "out", "checkpoint", "checkpoint-every", "resume",
-            "trace", "metrics", "sparse-mode",
+            "config", "set", "out", "checkpoint", "checkpoint-every",
+            "keep-checkpoints", "resume", "fault-seed", "trace", "metrics",
+            "sparse-mode",
         ],
-        &[],
+        &["resume-auto", "faults", "quick"],
     )?;
     // `--sparse-mode X` is sugar for `--set sparse.mode=X`
     if let Some(m) = opts.get("sparse-mode").and_then(|v| v.last()).cloned() {
         opts.entry("set".to_string())
             .or_default()
             .push(format!("sparse.mode={m}"));
+    }
+    if flags.iter().any(|f| f == "faults") {
+        return cmd_train_faults(&flags, &opts);
     }
     let telemetry = init_telemetry(&opts)?;
     let cfg = load_config(&opts)?;
@@ -782,25 +834,57 @@ fn cmd_train(args: &[String]) -> Result<()> {
         Trainer::manifest_name(&cfg), cfg.method, cfg.steps, cfg.grad_accum,
         cfg.lambda_w, cfg.workers
     );
-    let mut trainer = match opt1(&opts, "resume") {
-        Some(ckpt) => {
-            let tr = Trainer::resume(cfg, Path::new(ckpt))?;
-            println!("resumed from {ckpt} at step {}", tr.step_idx);
-            tr
-        }
-        None => Trainer::new(cfg)?,
-    };
     let ckpt_out = opt1(&opts, "checkpoint").map(|s| s.to_string());
+    let keep = opt1(&opts, "keep-checkpoints")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(3);
+    let store = ckpt_out
+        .as_ref()
+        .map(|p| CheckpointStore::new(Path::new(p), keep));
+    let mut trainer = if let Some(ckpt) = opt1(&opts, "resume") {
+        let tr = Trainer::resume(cfg, Path::new(ckpt))?;
+        println!("resumed from {ckpt} at step {}", tr.step_idx);
+        tr
+    } else if flags.iter().any(|f| f == "resume-auto") {
+        let st = store.as_ref().context(
+            "--resume-auto wants --checkpoint <base> to know where to scan",
+        )?;
+        match st.latest_valid() {
+            Some((path, ck)) => {
+                let mut tr = Trainer::new(cfg)?;
+                tr.restore(ck)?;
+                println!(
+                    "auto-resumed from {} at step {}",
+                    path.display(),
+                    tr.step_idx
+                );
+                tr
+            }
+            None => {
+                println!(
+                    "auto-resume: no usable checkpoint under {}, starting fresh",
+                    st.base().display()
+                );
+                Trainer::new(cfg)?
+            }
+        }
+    } else {
+        Trainer::new(cfg)?
+    };
     let ckpt_every = opt1(&opts, "checkpoint-every")
         .map(|s| s.parse::<usize>())
         .transpose()?
         .unwrap_or(0);
+    install_train_signal_handler();
+    let mut interrupted = false;
     let t0 = std::time::Instant::now();
     trainer.train_with(|tr, loss| {
         if ckpt_every > 0 && tr.step_idx % ckpt_every == 0 {
-            if let Some(path) = &ckpt_out {
-                if let Err(e) = tr.save_checkpoint(Path::new(path)) {
-                    eprintln!("checkpoint failed: {e:#}");
+            if let Some(st) = &store {
+                match st.save(&tr.checkpoint()) {
+                    Ok(path) => println!("checkpoint -> {}", path.display()),
+                    Err(e) => eprintln!("checkpoint failed: {e:#}"),
                 }
             }
         }
@@ -812,23 +896,90 @@ fn cmd_train(args: &[String]) -> Result<()> {
                 m.lr, m.flip_rate, m.phase, m.step_ms
             );
         }
+        if TRAIN_SHUTDOWN.load(std::sync::atomic::Ordering::SeqCst) {
+            interrupted = true;
+            return false;
+        }
+        true
     })?;
-    let val = trainer.eval()?;
-    println!(
-        "done in {:.1}s | final train loss {:.4} | val loss {val:.4}",
-        t0.elapsed().as_secs_f64(),
-        trainer.metrics.tail_loss(0.05),
-    );
+    if interrupted {
+        println!(
+            "signal received: drained step {} cleanly, checkpointing",
+            trainer.step_idx
+        );
+    } else {
+        let val = trainer.eval()?;
+        println!(
+            "done in {:.1}s | final train loss {:.4} | val loss {val:.4}",
+            t0.elapsed().as_secs_f64(),
+            trainer.metrics.tail_loss(0.05),
+        );
+    }
     if let Some(path) = &ckpt_out {
+        // final (or drain) checkpoint goes to the bare base path so
+        // downstream commands (`generate --checkpoint`) find it; the
+        // store's stamped copies cover mid-run crash recovery
         trainer.save_checkpoint(Path::new(path))?;
         println!("checkpoint -> {path}");
     }
-    println!("\n{}", trainer.profile.report());
+    let eng = trainer.engine_counters();
+    if eng.restarts > 0 || eng.redispatched > 0 {
+        println!(
+            "fault recovery: {} worker restart(s), {} re-dispatched microbatch(es)",
+            eng.restarts, eng.redispatched
+        );
+    }
+    if !interrupted {
+        println!("\n{}", trainer.profile.report());
+    }
     if let Some(out) = opt1(&opts, "out") {
         trainer.metrics.to_csv(Path::new(out))?;
         println!("metrics -> {out}");
     }
     telemetry.finish()?;
+    Ok(())
+}
+
+/// `train --faults`: the seeded fault-injection harness — runs the
+/// deterministic in-process sim trainer under a storm of worker kills,
+/// panics, and stalls and proves loss trajectory + final params are
+/// BITWISE identical to an undisturbed twin, then kills a checkpointed
+/// run mid-flight, corrupts the newest checkpoint, and proves
+/// `--resume-auto` rejoins bit-exactly from the previous one. Recovery
+/// metrics land in the `train_faults` section of BENCH_kernels.json
+/// for `bench-diff` to track.
+fn cmd_train_faults(
+    flags: &[String],
+    opts: &BTreeMap<String, Vec<String>>,
+) -> Result<()> {
+    let quick = flags.iter().any(|f| f == "quick");
+    let fault_seed = opt1(opts, "fault-seed")
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .unwrap_or(0xF4017);
+    println!(
+        "== train fault harness (seed {fault_seed}{}) ==",
+        if quick { ", quick" } else { "" }
+    );
+    let report = run_train_fault_bench(quick, fault_seed)?;
+    for line in &report.lines {
+        println!("{line}");
+    }
+    let path = repo_root_file("BENCH_kernels.json");
+    write_json_section_at(&path, "train_faults", Json::Arr(vec![report.row.clone()]))?;
+    println!("-> {} (section train_faults)", path.display());
+    if !report.ok() {
+        bail!(
+            "train fault harness FAILED (storm_bitwise_equal={}, \
+             invariant_across_workers={}, resume_bitwise_equal={}, \
+             threads_clean={})",
+            report.storm_bitwise_equal,
+            report.invariant_across_workers,
+            report.resume_bitwise_equal,
+            report.threads_clean
+        );
+    }
+    println!("train fault harness: all bitwise oracles PASSED");
     Ok(())
 }
 

@@ -359,6 +359,42 @@ pub fn obs_bench_regressions(
     Ok(warnings)
 }
 
+/// Compare the `train_faults` section of BENCH_kernels.json against its
+/// `.prev` twin and return a warning per (workers, grad_accum, fault
+/// mix) configuration whose `steps_per_s` dropped by more than
+/// `threshold` (a fraction). The section's rows come from the storm leg
+/// of `sparse24 train --faults` — the same step count run under a
+/// seeded barrage of worker kills, panics, and stalls — so a regression
+/// here means fault detection/re-dispatch started costing training
+/// throughput. Warn-only analogue of [`kernel_bench_regressions`]; a
+/// missing file or missing `.prev` yields no warnings.
+pub fn train_bench_regressions(
+    path: &std::path::Path,
+    threshold: f64,
+) -> Result<Vec<String>> {
+    let Some(j) = read_bench_record(path)? else { return Ok(Vec::new()) };
+    let section = "train_faults";
+    let mut warnings = Vec::new();
+    if let (Some(Json::Arr(cur)), Some(Json::Arr(old))) =
+        (j.opt(section), j.opt(&format!("{section}.prev")))
+    {
+        let rec_key = |r: &Json| -> Result<String> {
+            Ok(format!(
+                "w{} ga={} faults={}k/{}p/{}s",
+                r.get("workers")?.as_usize()?,
+                r.get("grad_accum")?.as_usize()?,
+                r.get("kills")?.as_usize()?,
+                r.get("panics")?.as_usize()?,
+                r.get("stalls")?.as_usize()?,
+            ))
+        };
+        warnings.extend(metric_regressions(
+            cur, old, &rec_key, "steps_per_s", threshold, section, "steps/s",
+        ));
+    }
+    Ok(warnings)
+}
+
 /// Parse a bench record; a missing file is `None` (first run — no
 /// baseline), anything unreadable or unparseable is an error.
 fn read_bench_record(path: &std::path::Path) -> Result<Option<Json>> {

@@ -1,0 +1,92 @@
+//! CRC32 (IEEE 802.3, the zlib/`cksum -o 3` polynomial) — dependency-free
+//! integrity check for checkpoint sections.
+//!
+//! Streaming [`Crc32`] hasher plus a one-shot [`crc32`] helper. The table
+//! is built at compile time; the update loop is the classic byte-at-a-time
+//! reflected form, which is plenty for checkpoint-sized blobs (the save
+//! path is dominated by disk writes, not the checksum).
+
+/// Reflected CRC32 lookup table for polynomial 0xEDB88320.
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// Streaming CRC32 state. `Default` starts a fresh checksum.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Crc32 {
+    /// ones-complemented running remainder (0 == fresh state)
+    state: u32,
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32::default()
+    }
+
+    /// Fold `bytes` into the checksum.
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = !self.state;
+        for &b in bytes {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = !c;
+    }
+
+    /// The checksum of everything folded in so far.
+    pub fn finish(&self) -> u32 {
+        self.state
+    }
+}
+
+/// One-shot CRC32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let mut c = Crc32::new();
+        c.update(&data[..10]);
+        c.update(&data[10..]);
+        assert_eq!(c.finish(), crc32(data));
+    }
+
+    #[test]
+    fn detects_single_bit_flip() {
+        let mut data = vec![0u8; 1024];
+        data[17] = 3;
+        let base = crc32(&data);
+        data[512] ^= 0x40;
+        assert_ne!(crc32(&data), base);
+    }
+}

@@ -1,4 +1,5 @@
-//! Dependency-free utilities: PRNG, JSON, bench harness, CSV writing.
+//! Dependency-free utilities: PRNG, JSON, bench harness, CSV writing,
+//! CRC32 ([`crc32`], used by the crash-safe checkpoint format).
 //!
 //! [`rng`] is the repo-wide splitmix/xoshiro-style PRNG with
 //! checkpointable state; [`json`] a minimal parser/printer for the
@@ -8,6 +9,7 @@
 //! `docs/BENCH.md`.
 
 pub mod bench;
+pub mod crc32;
 pub mod json;
 pub mod rng;
 

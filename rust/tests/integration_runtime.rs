@@ -186,7 +186,11 @@ fn parallel_engine_matches_direct_execution() {
     require_artifacts!();
     let fx = load_fixture();
     let (loss_direct, grads_direct) = run_step(&fx, "step_dense");
-    let engine = sparse24::coordinator::DataParallel::new(2).unwrap();
+    let mut engine = sparse24::coordinator::DataParallel::new(
+        2,
+        sparse24::coordinator::EngineOptions::xla(),
+    )
+    .unwrap();
     engine
         .load("step_dense", &fx.manifest.artifact_path("step_dense").unwrap())
         .unwrap();

@@ -1,0 +1,187 @@
+//! Fault-tolerant-training integration tests: the supervised
+//! [`DataParallel`] engine + crash-safe checkpoint store, driven
+//! through the deterministic in-process sim trainer from
+//! `coordinator/faultgen.rs` (no XLA artifacts needed — these run
+//! everywhere). The pinned invariants:
+//!
+//! * `grad_step` is bitwise invariant across worker counts;
+//! * a seeded storm of kills/panics/stalls leaves the loss trajectory
+//!   and final parameters bitwise identical to an undisturbed twin;
+//! * a run killed mid-flight auto-resumes from the newest VALID
+//!   checkpoint (skipping a corrupted one) and rejoins bit-exactly;
+//! * no worker thread ever leaks (spawned == joined);
+//! * `Trainer::restore` rejects mismatched state by name instead of
+//!   silently misloading.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparse24::coordinator::checkpoint::CheckpointStore;
+use sparse24::coordinator::faultgen::{
+    drive, losses_bitwise_equal, params_bitwise_equal, run_train_fault_bench,
+    sim_trainer, FaultPlan,
+};
+use sparse24::coordinator::FaultAction;
+
+const STEPS: usize = 6; // x grad_accum 4 = 24 microbatches per run
+
+/// Undisturbed trajectory on `workers` workers: (per-step losses,
+/// final params).
+fn baseline(workers: usize) -> (Vec<f64>, Vec<sparse24::tensor::Tensor>) {
+    let mut tr = sim_trainer(workers, STEPS, None).unwrap();
+    let mut losses = Vec::new();
+    drive(&mut tr, STEPS, &mut losses, None, 0).unwrap();
+    let params = tr.params.tensors.clone();
+    let report = tr.shutdown_engine();
+    assert_eq!(report.spawned, report.joined, "leaked worker threads");
+    (losses, params)
+}
+
+#[test]
+fn grad_step_bitwise_invariant_across_worker_counts() {
+    let (l1, p1) = baseline(1);
+    let (l2, p2) = baseline(2);
+    let (l3, p3) = baseline(3);
+    assert!(losses_bitwise_equal(&l1, &l2), "1 vs 2 workers: losses differ");
+    assert!(losses_bitwise_equal(&l2, &l3), "2 vs 3 workers: losses differ");
+    assert!(params_bitwise_equal(&p1, &p2), "1 vs 2 workers: params differ");
+    assert!(params_bitwise_equal(&p2, &p3), "2 vs 3 workers: params differ");
+}
+
+#[test]
+fn mid_step_kill_is_bitwise_neutral() {
+    let (losses_ref, params_ref) = baseline(2);
+    // kill the worker that draws microbatch seed 9 (step 2, index 1)
+    let plan = Arc::new(FaultPlan::new([(9, FaultAction::Kill)]));
+    let mut tr = sim_trainer(2, STEPS, Some(plan.clone())).unwrap();
+    let mut losses = Vec::new();
+    drive(&mut tr, STEPS, &mut losses, None, 0).unwrap();
+    assert_eq!(plan.fired(), 1, "the kill never triggered");
+    let counters = tr.engine_counters();
+    assert!(counters.restarts >= 1, "dead worker was not respawned");
+    assert!(counters.redispatched >= 1, "lost microbatch was not re-dispatched");
+    assert!(
+        losses_bitwise_equal(&losses, &losses_ref),
+        "kill recovery perturbed the loss trajectory"
+    );
+    assert!(
+        params_bitwise_equal(&tr.params.tensors, &params_ref),
+        "kill recovery perturbed the final params"
+    );
+    let report = tr.shutdown_engine();
+    assert_eq!(report.spawned, report.joined, "leaked worker threads");
+}
+
+#[test]
+fn seeded_storm_is_bitwise_neutral() {
+    let (losses_ref, params_ref) = baseline(3);
+    let plan = Arc::new(FaultPlan::seeded(
+        0xBEEF,
+        STEPS * 4,
+        1, // kill
+        1, // panic
+        1, // stall
+        Duration::from_millis(300),
+    ));
+    let mut tr = sim_trainer(3, STEPS, Some(plan.clone())).unwrap();
+    let mut losses = Vec::new();
+    drive(&mut tr, STEPS, &mut losses, None, 0).unwrap();
+    assert_eq!(plan.fired(), plan.total(), "storm did not fully land");
+    assert!(losses_bitwise_equal(&losses, &losses_ref));
+    assert!(params_bitwise_equal(&tr.params.tensors, &params_ref));
+    let report = tr.shutdown_engine();
+    assert_eq!(report.spawned, report.joined, "leaked worker threads");
+}
+
+#[test]
+fn kill_corrupt_auto_resume_rejoins_bit_exactly() {
+    let (losses_ref, params_ref) = baseline(2);
+    let dir = std::env::temp_dir()
+        .join(format!("s24_test_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = CheckpointStore::new(&dir.join("run.ckpt"), 2);
+
+    // run to step 5 saving every 2 steps, then "crash" (drop, no final save)
+    let mut tr = sim_trainer(2, STEPS, None).unwrap();
+    let mut pre = Vec::new();
+    drive(&mut tr, 5, &mut pre, Some(&store), 2).unwrap();
+    drop(tr);
+    let stamped = store.list_stamped();
+    assert!(stamped.len() >= 2, "expected >= 2 rotated checkpoints");
+
+    // corrupt the newest stamped file; the scan must skip it
+    let (newest_step, newest) = stamped.last().unwrap();
+    let mut bytes = std::fs::read(newest).unwrap();
+    *bytes.last_mut().unwrap() ^= 0x01;
+    std::fs::write(newest, bytes).unwrap();
+
+    let (path, ck) = store.latest_valid().expect("no valid checkpoint found");
+    assert!(
+        ck.step < *newest_step,
+        "auto-resume picked the corrupted newest checkpoint"
+    );
+    assert_ne!(&path, newest);
+
+    let resume_step = ck.step;
+    let mut tr = sim_trainer(2, STEPS, None).unwrap();
+    tr.restore(ck).unwrap();
+    assert_eq!(tr.step_idx, resume_step);
+    let mut post = Vec::new();
+    drive(&mut tr, STEPS, &mut post, None, 0).unwrap();
+    assert!(
+        losses_bitwise_equal(&post, &losses_ref[resume_step..]),
+        "resumed trajectory diverged from the uninterrupted run"
+    );
+    assert!(
+        params_bitwise_equal(&tr.params.tensors, &params_ref),
+        "resumed final params diverged from the uninterrupted run"
+    );
+    let report = tr.shutdown_engine();
+    assert_eq!(report.spawned, report.joined, "leaked worker threads");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn restore_rejects_mismatched_state_by_name() {
+    let mut tr = sim_trainer(1, STEPS, None).unwrap();
+    drive(&mut tr, 1, &mut Vec::new(), None, 0).unwrap();
+    let good = tr.checkpoint();
+
+    // truncated optimizer moment must be rejected naming the param
+    let mut ck = good.clone();
+    ck.opt_m[0].pop();
+    let err = format!("{:#}", tr.restore(ck).unwrap_err());
+    assert!(err.contains("w_in"), "error does not name the param: {err}");
+
+    // wrong param shape must be rejected naming the param
+    let mut ck = good.clone();
+    ck.params[1] = sparse24::tensor::Tensor::zeros(&[8, 8]);
+    let err = format!("{:#}", tr.restore(ck).unwrap_err());
+    assert!(err.contains("w_out"), "error does not name the param: {err}");
+
+    // wrong manifest must be rejected
+    let mut ck = good.clone();
+    ck.manifest_name = "other_model".into();
+    assert!(tr.restore(ck).is_err());
+
+    // and the good checkpoint still restores fine afterwards
+    tr.restore(good).unwrap();
+    let report = tr.shutdown_engine();
+    assert_eq!(report.spawned, report.joined, "leaked worker threads");
+}
+
+/// The full harness (what `sparse24 train --faults --quick` runs) must
+/// pass every bitwise oracle end to end.
+#[test]
+fn quick_fault_harness_passes_all_oracles() {
+    let report = run_train_fault_bench(true, 0xF4017).unwrap();
+    assert!(
+        report.ok(),
+        "harness failed: storm={} invariance={} resume={} threads={}\n{}",
+        report.storm_bitwise_equal,
+        report.invariant_across_workers,
+        report.resume_bitwise_equal,
+        report.threads_clean,
+        report.lines.join("\n")
+    );
+}

@@ -33,11 +33,18 @@
 # whose emitted trace + metrics files are validated by `sparse24
 # check-trace`, a traced short training run (skipped until `make
 # artifacts` exists), the telemetry-overhead bench (advisory <3% gate),
+# the training fault-tolerance suite (supervised-worker bitwise
+# invariance across 1/2/3 workers, kill/panic/stall storms bitwise
+# equal to an undisturbed twin, kill -> corrupt-newest -> auto-resume
+# bit-exact rejoin, restore-validation naming offenders, zero leaked
+# worker threads) plus the `train --faults --quick` harness smoke
+# (train_faults section, nonzero exit if any bitwise oracle fails),
 # and a perf diff against the previous bench run (warn-only, >15%
 # regression; covers GFLOP/s — table12_epilogue included — prefill
-# tok/s, paged-KV occupancy, fault-storm goodput, and telemetry-mode
-# tokens/s, spec accept rate + per-lane throughput — the
-# ffn_activation24 rows are covered by the same generic GFLOP/s scan).
+# tok/s, paged-KV occupancy, fault-storm goodput, telemetry-mode
+# tokens/s, spec accept rate + per-lane throughput, and fault-recovery
+# steps/s — the ffn_activation24 rows are covered by the same generic
+# GFLOP/s scan).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -96,6 +103,12 @@ echo "== fault-injection bench (seeded storm, bitwise survivors, zero leaks)"
 PALLAS_NUM_THREADS=2 ./target/release/sparse24 serve-bench --faults --synthetic \
   --quick --steps 64
 
+echo "== training fault-tolerance suite (supervised workers, crash-safe checkpoints)"
+PALLAS_NUM_THREADS=2 cargo test -q --test train_faults
+
+echo "== trainer fault-injection harness (seeded storm, bitwise vs twin, auto-resume)"
+PALLAS_NUM_THREADS=2 ./target/release/sparse24 train --faults --quick
+
 echo "== telemetry suite (shard-merge oracle, trace well-formedness, bitwise invariance)"
 PALLAS_NUM_THREADS=2 cargo test -q --test obs_telemetry
 
@@ -126,7 +139,7 @@ fi
 echo "== telemetry overhead bench (off vs counters vs tracing, advisory <3% gate)"
 PALLAS_NUM_THREADS=2 cargo bench --bench obs_overhead -- --quick
 
-echo "== bench-diff (GFLOP/s + prefill tok/s + kv occupancy + fault goodput + spec accept/lane tok/s + telemetry tok/s, warn-only)"
+echo "== bench-diff (GFLOP/s + prefill tok/s + kv occupancy + fault goodput + spec accept/lane tok/s + telemetry tok/s + fault-recovery steps/s, warn-only)"
 ./target/release/sparse24 bench-diff || true
 
 echo "== verify OK"
